@@ -1,0 +1,59 @@
+//! Inverse problem (paper SS4.7.1 / Fig. 14, CI scale): recover the
+//! unknown constant diffusion coefficient eps = 0.3 from 50 sensor
+//! observations, starting from eps = 2.0. The trainable eps rides inside
+//! the AOT train-step artifact as an extra parameter slot.
+//!
+//!     make artifacts && cargo run --release --example inverse_diffusion
+//!
+//! Env: INV_ITERS (default 4000).
+
+use fastvpinns::coordinator::schedule::LrSchedule;
+use fastvpinns::coordinator::trainer::{DataSource, TrainConfig, Trainer};
+use fastvpinns::fem::assembly;
+use fastvpinns::fem::quadrature::QuadKind;
+use fastvpinns::mesh::generators;
+use fastvpinns::problems::InverseConstPoisson;
+use fastvpinns::runtime::engine::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let iters: usize = std::env::var("INV_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4000);
+    let problem = InverseConstPoisson::new();
+
+    // (-1,1)^2, 2x2 elements, 40x40 quadrature per element (paper shape)
+    let mesh = generators::rect_grid(2, 2, -1.0, -1.0, 1.0, 1.0);
+    let domain = assembly::assemble(&mesh, 5, 40, QuadKind::GaussLegendre);
+
+    let engine = Engine::new("artifacts")?;
+    let src = DataSource { mesh: &mesh, domain: Some(&domain),
+                           problem: &problem, sensor_values: None };
+    let cfg = TrainConfig {
+        iters,
+        lr: LrSchedule::Constant(2e-3),
+        eps_init: 2.0,
+        eps_converge: Some((problem.eps_actual, 1e-3)),
+        log_every: 100,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(
+        &engine, "fv_inverse_const_ne4_nt5_nq40", &src, &cfg)?;
+
+    println!("recovering eps (actual {}, init {})...",
+             problem.eps_actual, cfg.eps_init);
+    let report = trainer.run()?;
+    let eps = report.eps_final.unwrap();
+    println!(
+        "eps = {eps:.5} after {} epochs ({:.2} ms/epoch median, \
+         total {:.1}s){}",
+        report.steps, report.median_step_ms, report.total_seconds,
+        if report.converged_early { " [converged early]" } else { "" }
+    );
+    assert!(
+        (eps - problem.eps_actual).abs() < 0.5,
+        "eps did not move toward the target: {eps}"
+    );
+    println!("inverse_diffusion OK");
+    Ok(())
+}

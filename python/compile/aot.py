@@ -1,0 +1,210 @@
+"""AOT compiler: lower every spec'd train-step/predict fn to HLO text.
+
+Interchange format is HLO *text* (never `.serialize()`): jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact gets a JSON manifest (`<name>.json`) describing the exact
+ordered input/output signature; the Rust runtime trusts only the
+manifest, never positional conventions baked into code.
+
+Usage:
+    python -m compile.aot --all [--paper-scale] [--force] [--out-dir D]
+    python -m compile.aot --name fv_poisson_ne4_nt5_nq20 [...]
+    python -m compile.aot --list
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, specs
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side can `to_tuple()` uniformly)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def n_param_arrays(spec: specs.Spec) -> int:
+    n = 2 * (len(spec.layers) - 1)
+    if spec.loss == "inverse_const":
+        n += 1  # trainable eps scalar rides last
+    return n
+
+
+def train_data_inputs(spec: specs.Spec):
+    """Ordered (name, shape) for the data segment of a train step."""
+    ne, nt, nq, nb, ns = spec.ne, spec.nt, spec.nq, spec.nb, spec.ns
+    quad = [("quad_xy", (ne * nq, 2)), ("gx", (ne, nt, nq)),
+            ("gy", (ne, nt, nq))]
+    vten = [("v", (ne, nt, nq))]
+    force = [("f", (ne, nt))]
+    bd = [("bd_xy", (nb, 2)), ("bd_u", (nb,))]
+    sens = [("sensor_xy", (ns, 2)), ("sensor_u", (ns,))]
+    tau = [("tau", ())]
+    gamma = [("gamma", ())]
+    if spec.loss in ("poisson", "hp_loop"):
+        return quad + force + bd + tau
+    if spec.loss == "cd":
+        return quad + vten + force + bd + tau
+    if spec.loss == "inverse_const":
+        return quad + force + bd + sens + tau + gamma
+    if spec.loss == "inverse_space":
+        return quad + vten + force + bd + sens + tau + gamma
+    if spec.loss == "pinn":
+        return [("coll_xy", (spec.n_coll, 2)), ("f_vals", (spec.n_coll,)),
+                ("bd_xy", (nb, 2)), ("bd_u", (nb,)), ("tau", ())]
+    raise ValueError(f"unknown loss {spec.loss}")
+
+
+def signature(spec: specs.Spec):
+    """Full ordered (name, shape) input list + output names."""
+    if spec.kind == "predict":
+        ins = [(f"p{i}", s)
+               for i, s in enumerate(model.param_shapes(spec.layers))]
+        ins.append(("xy", (spec.n_eval, 2)))
+        outs = ["u"] + (["eps"] if spec.heads == 2 else [])
+        return ins, outs
+
+    pshapes = list(model.param_shapes(spec.layers))
+    if spec.loss == "inverse_const":
+        pshapes.append(())  # eps
+    ins = []
+    for prefix in ("p", "m", "v"):
+        ins += [(f"{prefix}{i}", s) for i, s in enumerate(pshapes)]
+    ins += [("step", ()), ("lr", ())]
+    ins += train_data_inputs(spec)
+
+    outs = [f"p{i}" for i in range(len(pshapes))]
+    outs += [f"m{i}" for i in range(len(pshapes))]
+    outs += [f"v{i}" for i in range(len(pshapes))]
+    outs += ["loss"]
+    if spec.loss in ("inverse_const", "inverse_space"):
+        outs += ["var_loss", "bd_loss", "sensor_loss"]
+    else:
+        outs += ["var_loss", "bd_loss"]
+    return ins, outs
+
+
+def build_fn(spec: specs.Spec):
+    if spec.kind == "predict":
+        return model.make_predict(2 * (len(spec.layers) - 1), spec.heads)
+    return model.make_train_step(
+        spec.loss, n_param_arrays(spec), kernel=spec.kernel,
+        const_kwargs=spec.const)
+
+
+def lower_spec(spec: specs.Spec) -> str:
+    ins, _ = signature(spec)
+    args = [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in ins]
+    fn = build_fn(spec)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def manifest(spec: specs.Spec) -> dict:
+    ins, outs = signature(spec)
+    return {
+        "name": spec.name,
+        "kind": spec.kind,
+        "loss": spec.loss,
+        "inputs": [
+            {"name": n, "shape": list(s), "dtype": "f32"} for n, s in ins
+        ],
+        "outputs": outs,
+        "config": {
+            "layers": list(spec.layers),
+            "ne": spec.ne, "nt1d": spec.nt1d, "nq1d": spec.nq1d,
+            "nt": spec.nt, "nq": spec.nq,
+            "nb": spec.nb, "ns": spec.ns, "n_coll": spec.n_coll,
+            "n_eval": spec.n_eval, "kernel": spec.kernel,
+            "heads": spec.heads, "const": spec.const,
+            "paper_scale": spec.paper_scale, "note": spec.note,
+            "param_order": model.PARAM_ORDER_DOC,
+        },
+    }
+
+
+def emit(spec: specs.Spec, out_dir: str, force: bool = False) -> bool:
+    hlo_path = os.path.join(out_dir, f"{spec.name}.hlo.txt")
+    man_path = os.path.join(out_dir, f"{spec.name}.json")
+    if not force and os.path.exists(hlo_path) and os.path.exists(man_path):
+        return False
+    t0 = time.time()
+    text = lower_spec(spec)
+    with open(hlo_path + ".tmp", "w") as f:
+        f.write(text)
+    os.replace(hlo_path + ".tmp", hlo_path)
+    with open(man_path, "w") as f:
+        json.dump(manifest(spec), f, indent=1)
+    print(f"  {spec.name}: {len(text)//1024} KiB in {time.time()-t0:.1f}s",
+          flush=True)
+    return True
+
+
+def write_index(all_specs, out_dir):
+    idx = {
+        "artifacts": [s.name for s in all_specs],
+        "format": "hlo-text",
+        "generator": "python -m compile.aot",
+    }
+    with open(os.path.join(out_dir, "index.json"), "w") as f:
+        json.dump(idx, f, indent=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--name", action="append", default=[])
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    args = ap.parse_args(argv)
+
+    all_specs = specs.build_specs(paper_scale=args.paper_scale)
+    if args.list:
+        for s in all_specs:
+            print(f"{s.name:42s} {s.kind:8s} {s.loss:14s} ne={s.ne:<6d} "
+                  f"nt={s.nt:<4d} nq={s.nq:<5d} kernel={s.kernel}")
+        return 0
+
+    chosen = all_specs
+    if args.name:
+        byname = {s.name: s for s in all_specs}
+        missing = [n for n in args.name if n not in byname]
+        if missing:
+            print(f"unknown spec(s): {missing}", file=sys.stderr)
+            return 1
+        chosen = [byname[n] for n in args.name]
+    elif not args.all:
+        ap.error("pass --all, --name or --list")
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    t0 = time.time()
+    n_new = 0
+    for s in chosen:
+        n_new += emit(s, out_dir, force=args.force)
+    write_index(all_specs, out_dir)
+    print(f"artifacts: {n_new} lowered, {len(chosen)-n_new} cached "
+          f"({time.time()-t0:.0f}s) -> {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

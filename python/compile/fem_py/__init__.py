@@ -1,0 +1,13 @@
+"""Build-time FEM substrate (numpy) — the oracle used to validate both the
+Pallas kernel inputs and the Rust runtime assembly (`repro dump-tensors`).
+
+Mirrors `rust/src/fem/` module-for-module:
+  jacobi      <-> fem/jacobi.rs
+  quadrature  <-> fem/quadrature.rs
+  transforms  <-> fem/bilinear.rs
+  basis       <-> fem/jacobi.rs (test basis)
+  assembly    <-> fem/assembly.rs
+  mesh        <-> mesh/generators.rs (unit-square subset)
+"""
+
+from . import jacobi, quadrature, transforms, basis, assembly, mesh  # noqa: F401

@@ -1,0 +1,108 @@
+"""Premultiplier tensor assembly — the FastVPINNs data layout (paper SS4.4).
+
+For every element e, test function j and quadrature point q:
+
+    G_x[e,j,q] = w_q * |J_e(q)| * dv_j/dx (x_{e,q})     (actual-domain grad)
+    G_y[e,j,q] = w_q * |J_e(q)| * dv_j/dy (x_{e,q})
+    V  [e,j,q] = w_q * |J_e(q)| *  v_j    (xi_q, eta_q)
+    F  [e,j]   = sum_q w_q * |J_e(q)| * f(x_{e,q}) * v_j
+
+so that, with NN gradients reshaped to (NE, NQ),
+
+    residual[e,j] = sum_q G_x[e,j,q] u_x[e,q] + G_y[e,j,q] u_y[e,q] - F[e,j]
+                  ~ int_{K_e} (grad u . grad v_j - f v_j) dK
+
+The Jacobian is evaluated *pointwise* (bilinear map), which is what makes
+skewed quads work. Quadrature-point stacking order is element-major:
+row e*NQ+q of `quad_xy`. All shapes/orderings are the cross-layer contract
+with rust/src/fem/assembly.rs — change both or neither.
+"""
+
+import numpy as np
+
+from . import basis, quadrature
+from .transforms import BilinearMap
+
+
+class AssembledDomain:
+    """Everything the training step needs, in float64 (cast later)."""
+
+    def __init__(self, quad_xy, gx, gy, v, jdet, quad_ref):
+        self.quad_xy = quad_xy  # (NE*NQ, 2)
+        self.gx = gx            # (NE, NT, NQ)
+        self.gy = gy            # (NE, NT, NQ)
+        self.v = v              # (NE, NT, NQ)
+        self.jdet = jdet        # (NE, NQ)
+        self.quad_ref = quad_ref  # (xi, eta, w) on the reference element
+
+    @property
+    def n_elem(self):
+        return self.gx.shape[0]
+
+    @property
+    def n_test(self):
+        return self.gx.shape[1]
+
+    @property
+    def n_quad(self):
+        return self.gx.shape[2]
+
+    def force_matrix(self, f):
+        """F[e,j] = sum_q w|J| f(x_q) v_j(q). `f(x, y)` vectorised."""
+        ne, nt, nq = self.gx.shape
+        x = self.quad_xy[:, 0].reshape(ne, nq)
+        y = self.quad_xy[:, 1].reshape(ne, nq)
+        fv = f(x, y)  # (NE, NQ)
+        # V already contains w|J|, so F = sum_q V[e,j,q] * f[e,q]
+        return np.einsum("ejq,eq->ej", self.v, fv)
+
+
+def assemble(points, cells, n_test_1d: int, n_quad_1d: int,
+             quad_kind: str = "gauss-legendre") -> AssembledDomain:
+    """Assemble the FastVPINNs premultiplier tensors for a quad mesh."""
+    points = np.asarray(points, dtype=np.float64)
+    cells = np.asarray(cells, dtype=np.int64)
+    ne = cells.shape[0]
+    nt = n_test_1d * n_test_1d
+    nq = n_quad_1d * n_quad_1d
+
+    xi, eta, w = quadrature.tensor_rule_2d(n_quad_1d, quad_kind)
+    v_ref, dxi_ref, deta_ref = basis.test_fn_2d(n_test_1d, xi, eta)
+
+    quad_xy = np.empty((ne * nq, 2))
+    gx = np.empty((ne, nt, nq))
+    gy = np.empty((ne, nt, nq))
+    vt = np.empty((ne, nt, nq))
+    jdet = np.empty((ne, nq))
+
+    for e in range(ne):
+        bmap = BilinearMap(points[cells[e]])
+        x, y = bmap.map(xi, eta)
+        quad_xy[e * nq:(e + 1) * nq, 0] = x
+        quad_xy[e * nq:(e + 1) * nq, 1] = y
+        j11, j12, j21, j22, det = bmap.jacobian(xi, eta)
+        adet = np.abs(det)
+        jdet[e] = adet
+        wj = w * adet  # (NQ,)
+        # actual-domain gradients of every test function at every point
+        #   dv/dx = ( j22 * dv/dxi - j21 * dv/deta) / det
+        #   dv/dy = (-j12 * dv/dxi + j11 * dv/deta) / det
+        dvx = (j22 * dxi_ref - j21 * deta_ref) / det   # (NT, NQ)
+        dvy = (-j12 * dxi_ref + j11 * deta_ref) / det
+        gx[e] = wj * dvx
+        gy[e] = wj * dvy
+        vt[e] = wj * v_ref
+
+    return AssembledDomain(quad_xy, gx, gy, vt, jdet, (xi, eta, w))
+
+
+def boundary_points_unit_square(n_per_side: int):
+    """Uniformly spaced boundary samples on the unit square, matching
+    rust mesh::QuadMesh::sample_boundary for the generated square meshes
+    (corner handling: each side samples n points, corners not repeated)."""
+    t = np.linspace(0.0, 1.0, n_per_side, endpoint=False)
+    bottom = np.stack([t, np.zeros_like(t)], axis=1)
+    right = np.stack([np.ones_like(t), t], axis=1)
+    top = np.stack([1.0 - t, np.ones_like(t)], axis=1)
+    left = np.stack([np.zeros_like(t), 1.0 - t], axis=1)
+    return np.concatenate([bottom, right, top, left], axis=0)

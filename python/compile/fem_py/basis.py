@@ -1,0 +1,61 @@
+"""The hp-VPINNs test-function basis on the reference element.
+
+1D test function j (j = 1..n_test_1d):
+
+    t_j(x) = P_{j+1}(x) - P_{j-1}(x)
+
+(Legendre; vanishes at x = +-1). 2D test functions are tensor products
+
+    v_{(a,b)}(xi, eta) = t_{a+1}(xi) * t_{b+1}(eta),  a, b = 0..n1d-1
+
+flattened row-major: J = a * n1d + b. This flattening is the contract
+shared with rust/src/fem/jacobi.rs.
+"""
+
+import numpy as np
+
+from . import jacobi as jac
+
+
+def test_fn_1d(n1d: int, x: np.ndarray) -> np.ndarray:
+    """Values t_1..t_n1d at points x -> shape (n1d, len(x))."""
+    x = np.asarray(x, dtype=np.float64)
+    p = jac.legendre_all(n1d + 1, x)
+    out = np.empty((n1d, x.shape[0]))
+    for j in range(1, n1d + 1):
+        out[j - 1] = p[j + 1] - p[j - 1]
+    return out
+
+
+def test_grad_1d(n1d: int, x: np.ndarray) -> np.ndarray:
+    """Derivatives t'_1..t'_n1d at points x -> shape (n1d, len(x))."""
+    x = np.asarray(x, dtype=np.float64)
+    d = jac.legendre_deriv_all(n1d + 1, x)
+    out = np.empty((n1d, x.shape[0]))
+    for j in range(1, n1d + 1):
+        out[j - 1] = d[j + 1] - d[j - 1]
+    return out
+
+
+def test_fn_2d(n1d: int, xi: np.ndarray, eta: np.ndarray):
+    """Values, d/dxi and d/deta of all n1d^2 test functions at the given
+    reference points.
+
+    xi, eta: shape (NQ,). Returns (v, dxi, deta), each (n1d*n1d, NQ).
+    """
+    txi = test_fn_1d(n1d, xi)       # (n1d, NQ)
+    teta = test_fn_1d(n1d, eta)
+    dtxi = test_grad_1d(n1d, xi)
+    dteta = test_grad_1d(n1d, eta)
+    nq = xi.shape[0]
+    nt = n1d * n1d
+    v = np.empty((nt, nq))
+    dxi = np.empty((nt, nq))
+    deta = np.empty((nt, nq))
+    for a in range(n1d):
+        for b in range(n1d):
+            j = a * n1d + b
+            v[j] = txi[a] * teta[b]
+            dxi[j] = dtxi[a] * teta[b]
+            deta[j] = txi[a] * dteta[b]
+    return v, dxi, deta

@@ -1,0 +1,98 @@
+"""Jacobi / Legendre polynomial evaluation (numpy, float64).
+
+The hp-VPINNs test basis (Kharazmi et al. 2021, and the FastVPINNs paper
+SS4.5) is built from Legendre polynomials: the n-th test function is
+``P_{n+1}(x) - P_{n-1}(x)``, which vanishes at x = +-1 so Dirichlet-zero
+test spaces come for free on the reference element.
+
+All evaluations use stable three-term recurrences; derivatives use the
+derivative recurrence (never the (x^2-1) division form, which is singular
+at the Lobatto endpoints).
+"""
+
+import numpy as np
+
+
+def legendre(n: int, x: np.ndarray) -> np.ndarray:
+    """P_n(x) by the Bonnet recurrence. x: any shape, returns same shape."""
+    x = np.asarray(x, dtype=np.float64)
+    if n == 0:
+        return np.ones_like(x)
+    if n == 1:
+        return x.copy()
+    p0 = np.ones_like(x)
+    p1 = x.copy()
+    for k in range(1, n):
+        p0, p1 = p1, ((2 * k + 1) * x * p1 - k * p0) / (k + 1)
+    return p1
+
+
+def legendre_deriv(n: int, x: np.ndarray) -> np.ndarray:
+    """P'_n(x) via P'_{k+1} = (2k+1) P_k + P'_{k-1} (stable at x = +-1)."""
+    x = np.asarray(x, dtype=np.float64)
+    if n == 0:
+        return np.zeros_like(x)
+    if n == 1:
+        return np.ones_like(x)
+    # iterate values and derivatives together
+    p0 = np.ones_like(x)
+    p1 = x.copy()
+    d0 = np.zeros_like(x)
+    d1 = np.ones_like(x)
+    for k in range(1, n):
+        p2 = ((2 * k + 1) * x * p1 - k * p0) / (k + 1)
+        d2 = (2 * k + 1) * p1 + d0
+        p0, p1 = p1, p2
+        d0, d1 = d1, d2
+    return d1
+
+
+def legendre_all(n_max: int, x: np.ndarray) -> np.ndarray:
+    """Stack [P_0..P_{n_max}] -> shape (n_max+1, *x.shape)."""
+    x = np.asarray(x, dtype=np.float64)
+    out = np.empty((n_max + 1,) + x.shape, dtype=np.float64)
+    out[0] = 1.0
+    if n_max >= 1:
+        out[1] = x
+    for k in range(1, n_max):
+        out[k + 1] = ((2 * k + 1) * x * out[k] - k * out[k - 1]) / (k + 1)
+    return out
+
+
+def legendre_deriv_all(n_max: int, x: np.ndarray) -> np.ndarray:
+    """Stack [P'_0..P'_{n_max}]."""
+    x = np.asarray(x, dtype=np.float64)
+    p = legendre_all(n_max, x)
+    d = np.zeros_like(p)
+    if n_max >= 1:
+        d[1] = 1.0
+    for k in range(1, n_max):
+        d[k + 1] = (2 * k + 1) * p[k] + d[k - 1]
+    return d
+
+
+def jacobi(n: int, a: float, b: float, x: np.ndarray) -> np.ndarray:
+    """General Jacobi polynomial P_n^{(a,b)}(x) by recurrence."""
+    x = np.asarray(x, dtype=np.float64)
+    if n == 0:
+        return np.ones_like(x)
+    p0 = np.ones_like(x)
+    p1 = 0.5 * (a - b + (a + b + 2) * x)
+    if n == 1:
+        return p1
+    for k in range(1, n):
+        c = 2 * k + a + b
+        a1 = 2 * (k + 1) * (k + a + b + 1) * c
+        a2 = (c + 1) * (a * a - b * b)
+        a3 = c * (c + 1) * (c + 2)
+        a4 = 2 * (k + a) * (k + b) * (c + 2)
+        p0, p1 = p1, ((a2 + a3 * x) * p1 - a4 * p0) / a1
+    return p1
+
+
+def jacobi_deriv(n: int, a: float, b: float, x: np.ndarray) -> np.ndarray:
+    """d/dx P_n^{(a,b)} = (n+a+b+1)/2 * P_{n-1}^{(a+1,b+1)}."""
+    x = np.asarray(x, dtype=np.float64)
+    if n == 0:
+        return np.zeros_like(x)
+    return 0.5 * (n + a + b + 1) * jacobi(n - 1, a + 1, b + 1, x)

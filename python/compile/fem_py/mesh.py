@@ -1,0 +1,51 @@
+"""Minimal quad meshes for build-time tests & cross-validation.
+
+Node/cell numbering matches rust/src/mesh/generators.rs exactly:
+- nodes row-major: id = iy * (nx+1) + ix, coordinates ascending;
+- cells row-major: id = cy * nx + cx, corner order
+  [bottom-left, bottom-right, top-right, top-left] (CCW).
+"""
+
+import numpy as np
+
+
+def rect_grid(nx: int, ny: int, x0=0.0, y0=0.0, x1=1.0, y1=1.0):
+    """Structured rectangle grid. Returns (points (NP,2), cells (NE,4))."""
+    xs = np.linspace(x0, x1, nx + 1)
+    ys = np.linspace(y0, y1, ny + 1)
+    pts = np.empty(((nx + 1) * (ny + 1), 2))
+    for iy in range(ny + 1):
+        for ix in range(nx + 1):
+            pts[iy * (nx + 1) + ix] = (xs[ix], ys[iy])
+    cells = np.empty((nx * ny, 4), dtype=np.int64)
+    for cy in range(ny):
+        for cx in range(nx):
+            bl = cy * (nx + 1) + cx
+            br = bl + 1
+            tl = bl + (nx + 1)
+            tr = tl + 1
+            cells[cy * nx + cx] = (bl, br, tr, tl)
+    return pts, cells
+
+
+def unit_square(n: int):
+    """n x n grid on (0,1)^2."""
+    return rect_grid(n, n)
+
+
+def skewed_square(n: int, amp: float = 0.15):
+    """Unit-square grid with interior nodes perturbed by an analytic
+    (RNG-free, hence Rust-reproducible) displacement field — produces
+    genuinely non-constant per-element Jacobians for tests.
+
+    Must stay bit-for-bit identical to mesh::generators::skewed_square in
+    Rust (same sin/cos arguments, same ordering)."""
+    pts, cells = unit_square(n)
+    h = 1.0 / n
+    for i in range(pts.shape[0]):
+        x, y = pts[i]
+        interior = 1e-12 < x < 1 - 1e-12 and 1e-12 < y < 1 - 1e-12
+        if interior:
+            pts[i, 0] = x + amp * h * np.sin(9.0 * x + 5.0 * y)
+            pts[i, 1] = y + amp * h * np.cos(7.0 * x - 4.0 * y)
+    return pts, cells

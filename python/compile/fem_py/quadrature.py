@@ -1,0 +1,84 @@
+"""Gauss quadrature rules on [-1, 1] (numpy, float64).
+
+- ``gauss_legendre(n)``: n-point Gauss-Legendre (exact to degree 2n-1),
+  Newton iteration from the Chebyshev initial guess.
+- ``gauss_lobatto(n)``: n-point Gauss-Lobatto-Legendre (endpoints included,
+  exact to degree 2n-3) — the "Gauss-Jacobi-Lobatto" rule the paper uses.
+- ``tensor_rule_2d``: tensor product on the reference square [-1,1]^2.
+"""
+
+import numpy as np
+
+from . import jacobi as jac
+
+
+def gauss_legendre(n: int):
+    """Return (points, weights), each shape (n,), ascending points."""
+    if n < 1:
+        raise ValueError("need n >= 1 quadrature points")
+    if n == 1:
+        return np.zeros(1), np.full(1, 2.0)
+    # Chebyshev initial guess, then Newton on P_n.
+    k = np.arange(1, n + 1, dtype=np.float64)
+    x = -np.cos(np.pi * (k - 0.25) / (n + 0.5))
+    for _ in range(100):
+        p = jac.legendre(n, x)
+        dp = jac.legendre_deriv(n, x)
+        dx = p / dp
+        x -= dx
+        if np.max(np.abs(dx)) < 1e-15:
+            break
+    dp = jac.legendre_deriv(n, x)
+    w = 2.0 / ((1.0 - x * x) * dp * dp)
+    return x, w
+
+
+def gauss_lobatto(n: int):
+    """Return (points, weights) of the n-point Gauss-Lobatto-Legendre rule.
+
+    Interior nodes are the roots of P'_{n-1}; weights 2 / (n(n-1) P_{n-1}^2).
+    """
+    if n < 2:
+        raise ValueError("Lobatto rules need n >= 2 points")
+    if n == 2:
+        return np.array([-1.0, 1.0]), np.array([1.0, 1.0])
+    m = n - 1
+    # initial guess: Chebyshev-Lobatto interior nodes
+    x = -np.cos(np.pi * np.arange(1, m, dtype=np.float64) / m)
+    for _ in range(100):
+        # Newton on g(x) = P'_m(x); g' via the Legendre ODE:
+        # (1-x^2) P''_m = 2x P'_m - m(m+1) P_m  =>
+        # P''_m = (2x P'_m - m(m+1) P_m) / (1-x^2)
+        p = jac.legendre(m, x)
+        dp = jac.legendre_deriv(m, x)
+        d2p = (2.0 * x * dp - m * (m + 1) * p) / (1.0 - x * x)
+        dx = dp / d2p
+        x -= dx
+        if np.max(np.abs(dx)) < 1e-15:
+            break
+    nodes = np.concatenate(([-1.0], x, [1.0]))
+    pm = jac.legendre(m, nodes)
+    w = 2.0 / (m * (m + 1) * pm * pm)
+    return nodes, w
+
+
+def rule_1d(n: int, kind: str = "gauss-legendre"):
+    if kind in ("gauss-legendre", "gl"):
+        return gauss_legendre(n)
+    if kind in ("gauss-lobatto", "lobatto", "gll"):
+        return gauss_lobatto(n)
+    raise ValueError(f"unknown quadrature kind: {kind}")
+
+
+def tensor_rule_2d(n1d: int, kind: str = "gauss-legendre"):
+    """Tensor-product rule on [-1,1]^2.
+
+    Returns (xi, eta, w), each shape (n1d*n1d,). Ordering is row-major in
+    (i, j) with xi varying slowest: q = i*n1d + j, xi_q = x[i], eta_q = x[j].
+    This ordering is the contract shared with rust/src/fem/quadrature.rs.
+    """
+    x, w = rule_1d(n1d, kind)
+    xi = np.repeat(x, n1d)
+    eta = np.tile(x, n1d)
+    ww = np.repeat(w, n1d) * np.tile(w, n1d)
+    return xi, eta, ww

@@ -1,0 +1,94 @@
+"""Bilinear reference->actual element transformation (paper Appendix A.1).
+
+Vertices are given counter-clockwise, matching reference corners
+(-1,-1), (1,-1), (1,1), (-1,1):
+
+    x(xi, eta) = xc0 + xc1*xi + xc2*eta + xc3*xi*eta
+    y(xi, eta) = yc0 + yc1*xi + yc2*eta + yc3*xi*eta
+
+The Jacobian is *pointwise* (non-constant for skewed quads) — exactly the
+property that breaks the original hp-VPINNs implementation and that the
+FastVPINNs tensor assembly handles by baking |J(xi_q, eta_q)| into the
+premultiplier tensors.
+"""
+
+import numpy as np
+
+
+class BilinearMap:
+    """Bilinear map for one quadrilateral. verts: (4,2) array, CCW."""
+
+    def __init__(self, verts):
+        v = np.asarray(verts, dtype=np.float64)
+        if v.shape != (4, 2):
+            raise ValueError("verts must be (4,2)")
+        x0, x1, x2, x3 = v[:, 0]
+        y0, y1, y2, y3 = v[:, 1]
+        self.xc = np.array(
+            [
+                (x0 + x1 + x2 + x3) / 4.0,
+                (-x0 + x1 + x2 - x3) / 4.0,
+                (-x0 - x1 + x2 + x3) / 4.0,
+                (x0 - x1 + x2 - x3) / 4.0,
+            ]
+        )
+        self.yc = np.array(
+            [
+                (y0 + y1 + y2 + y3) / 4.0,
+                (-y0 + y1 + y2 - y3) / 4.0,
+                (-y0 - y1 + y2 + y3) / 4.0,
+                (y0 - y1 + y2 - y3) / 4.0,
+            ]
+        )
+
+    def map(self, xi, eta):
+        """Reference (xi, eta) -> actual (x, y). Arrays broadcast."""
+        xi = np.asarray(xi, dtype=np.float64)
+        eta = np.asarray(eta, dtype=np.float64)
+        xc, yc = self.xc, self.yc
+        x = xc[0] + xc[1] * xi + xc[2] * eta + xc[3] * xi * eta
+        y = yc[0] + yc[1] * xi + yc[2] * eta + yc[3] * xi * eta
+        return x, y
+
+    def jacobian(self, xi, eta):
+        """Return (j11, j12, j21, j22, det) at (xi, eta).
+
+        j11 = dx/dxi, j12 = dx/deta, j21 = dy/dxi, j22 = dy/deta.
+        """
+        xi = np.asarray(xi, dtype=np.float64)
+        eta = np.asarray(eta, dtype=np.float64)
+        xc, yc = self.xc, self.yc
+        j11 = xc[1] + xc[3] * eta
+        j12 = xc[2] + xc[3] * xi
+        j21 = yc[1] + yc[3] * eta
+        j22 = yc[2] + yc[3] * xi
+        det = j11 * j22 - j12 * j21
+        return j11, j12, j21, j22, det
+
+    def grad_to_actual(self, dxi, deta, xi, eta):
+        """Transform reference gradients (d/dxi, d/deta) to (d/dx, d/dy).
+
+        [du/dx]   1  [ j22  -j21] [du/dxi ]
+        [du/dy] = -  [-j12   j11] [du/deta]
+                  D
+        """
+        j11, j12, j21, j22, det = self.jacobian(xi, eta)
+        dx = (j22 * dxi - j21 * deta) / det
+        dy = (-j12 * dxi + j11 * deta) / det
+        return dx, dy
+
+    def inverse_map(self, x, y, tol=1e-12, max_iter=50):
+        """Actual (x, y) -> reference (xi, eta) by Newton iteration."""
+        xi = np.zeros_like(np.asarray(x, dtype=np.float64))
+        eta = np.zeros_like(xi)
+        for _ in range(max_iter):
+            fx, fy = self.map(xi, eta)
+            rx, ry = fx - x, fy - y
+            j11, j12, j21, j22, det = self.jacobian(xi, eta)
+            dxi = (j22 * rx - j12 * ry) / det
+            deta = (-j21 * rx + j11 * ry) / det
+            xi -= dxi
+            eta -= deta
+            if np.max(np.abs(dxi)) < tol and np.max(np.abs(deta)) < tol:
+                break
+        return xi, eta

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the FastVPINNs residual contraction (L1 kernel).
+
+This is the paper's Algorithm 3 written as one einsum per direction:
+
+    residual[e, j] = sum_q Gx[e,j,q] * ux[e,q]
+                   + sum_q Gy[e,j,q] * uy[e,q]  -  F[e,j]
+
+and its convection / variable-diffusion generalisation. The Pallas kernel
+in vpinn_residual.py must match these (tests use fp32 allclose; the
+contraction order within a block may differ).
+"""
+
+import jax.numpy as jnp
+
+
+def vpinn_residual_ref(gx, gy, ux, uy, f):
+    """Poisson residual. gx,gy: (NE,NT,NQ); ux,uy: (NE,NQ); f: (NE,NT)."""
+    rx = jnp.einsum("ejq,eq->ej", gx, ux)
+    ry = jnp.einsum("ejq,eq->ej", gy, uy)
+    return rx + ry - f
+
+
+def vpinn_residual_cd_ref(gx, gy, v, ux, uy, f, eps, bx, by):
+    """Constant-coefficient convection-diffusion residual:
+
+        res[e,j] = eps * (Gx.ux + Gy.uy)[e,j]
+                 + (V . (bx*ux + by*uy))[e,j] - F[e,j]
+    """
+    rx = jnp.einsum("ejq,eq->ej", gx, ux)
+    ry = jnp.einsum("ejq,eq->ej", gy, uy)
+    conv = jnp.einsum("ejq,eq->ej", v, bx * ux + by * uy)
+    return eps * (rx + ry) + conv - f
+
+
+def vpinn_residual_space_eps_ref(gx, gy, v, ux, uy, eps_q, f, bx, by):
+    """Space-dependent diffusion residual (paper SS4.7.2):
+
+        res[e,j] = Gx.(eps_q*ux) + Gy.(eps_q*uy) + V.(b . grad u) - F
+
+    eps_q: (NE, NQ) — diffusion parameter at the quadrature points
+    (second NN output head in the inverse problem).
+    """
+    rx = jnp.einsum("ejq,eq->ej", gx, eps_q * ux)
+    ry = jnp.einsum("ejq,eq->ej", gy, eps_q * uy)
+    conv = jnp.einsum("ejq,eq->ej", v, bx * ux + by * uy)
+    return rx + ry + conv - f

@@ -1,0 +1,277 @@
+"""L1 Pallas kernels: the FastVPINNs batched residual contraction.
+
+Forward kernel (paper Algorithm 3), for a block of BE elements at a time:
+
+    res[e, j] = sum_q Gx[e,j,q]*ux[e,q] + sum_q Gy[e,j,q]*uy[e,q] - F[e,j]
+
+i.e. two batched GEMVs (batch dim = element, contracting dim = quadrature
+point) fused with the force-matrix subtraction. Convection and
+space-dependent-diffusion variants add the V-tensor term and the eps_q
+scaling *inside* the same block, so G/V tiles are read from HBM exactly
+once per step.
+
+Backward kernel: `pallas_call` has no built-in reverse-mode rule, so each
+variant carries a `jax.custom_vjp` whose cotangent needs the *transposed*
+contraction
+
+    dux[e, q] = sum_j G[e,j,q] * dres[e,j]
+
+which is the second Pallas kernel here (`_contract_t`). G/V are
+step-invariant premultiplier tensors — their cotangents are returned as
+symbolic zeros and DCE'd by XLA.
+
+TPU mapping (see DESIGN.md SSHardware-Adaptation): the element dimension is
+gridded; per-block VMEM working set is
+
+    BE * NQ * 4B * (n_tensors*NT + n_vecs) + BE*NT*4B
+
+and BE is chosen as the largest divisor of NE that keeps this under
+~4 MiB. The contraction (dot_general over q) is the MXU-shaped op; the
+paper's own Fig. 16 shows N_quad dominates step cost, which is exactly the
+contracting dimension here.
+
+CPU PJRT cannot run Mosaic custom-calls, so `interpret=True` is mandatory
+in this environment; correctness versus kernels/ref.py is enforced by
+python/tests/test_kernel.py (hypothesis shape sweeps, fwd + grad).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# ~4 MiB of f32s
+_VMEM_BUDGET_WORDS = 1 << 20
+
+# forward contraction: batch e, contract q of (BE,NT,NQ) x (BE,NQ)
+_DN_FWD = (((2,), (1,)), ((0,), (0,)))
+# transposed contraction: batch e, contract j of (BE,NT,NQ) x (BE,NT)
+_DN_BWD = (((1,), (1,)), ((0,), (0,)))
+
+
+def pick_block_elems(ne: int, nt: int, nq: int, n_tensors: int = 2,
+                     n_vecs: int = 2) -> int:
+    """Largest divisor of NE whose per-block working set fits the VMEM
+    budget. Always >= 1."""
+    per_elem = nq * (n_tensors * nt + n_vecs) + nt
+    cap = max(1, _VMEM_BUDGET_WORDS // max(per_elem, 1))
+    best = 1
+    d = 1
+    while d * d <= ne:
+        if ne % d == 0:
+            for cand in (d, ne // d):
+                if cand <= cap and cand > best:
+                    best = cand
+        d += 1
+    return best
+
+
+def _t3_spec(be, nt, nq):
+    return pl.BlockSpec((be, nt, nq), lambda i: (i, 0, 0))
+
+
+def _m2_spec(be, n):
+    return pl.BlockSpec((be, n), lambda i: (i, 0))
+
+
+# --------------------------------------------------------------------------
+# Transposed contraction kernel (shared backward primitive)
+# --------------------------------------------------------------------------
+
+def _contract_t_kernel(g_ref, r_ref, o_ref):
+    g = g_ref[...]            # (BE, NT, NQ)
+    r = r_ref[...]            # (BE, NT)
+    o_ref[...] = jax.lax.dot_general(
+        g, r, _DN_BWD, preferred_element_type=jnp.float32)  # (BE, NQ)
+
+
+def contract_t(g, r, *, interpret=True, block_elems=None):
+    """dux[e,q] = sum_j g[e,j,q] * r[e,j]. g: (NE,NT,NQ), r: (NE,NT)."""
+    ne, nt, nq = g.shape
+    be = block_elems or pick_block_elems(ne, nt, nq, n_tensors=1, n_vecs=1)
+    return pl.pallas_call(
+        _contract_t_kernel,
+        grid=(ne // be,),
+        in_specs=[_t3_spec(be, nt, nq), _m2_spec(be, nt)],
+        out_specs=_m2_spec(be, nq),
+        out_shape=jax.ShapeDtypeStruct((ne, nq), jnp.float32),
+        interpret=interpret,
+    )(g, r)
+
+
+# --------------------------------------------------------------------------
+# Forward kernels
+# --------------------------------------------------------------------------
+
+def _poisson_kernel(gx_ref, gy_ref, ux_ref, uy_ref, f_ref, o_ref):
+    rx = jax.lax.dot_general(gx_ref[...], ux_ref[...], _DN_FWD,
+                             preferred_element_type=jnp.float32)
+    ry = jax.lax.dot_general(gy_ref[...], uy_ref[...], _DN_FWD,
+                             preferred_element_type=jnp.float32)
+    o_ref[...] = rx + ry - f_ref[...]
+
+
+def _poisson_fwd_raw(gx, gy, ux, uy, f, interpret=True, block_elems=None):
+    ne, nt, nq = gx.shape
+    be = block_elems or pick_block_elems(ne, nt, nq)
+    return pl.pallas_call(
+        _poisson_kernel,
+        grid=(ne // be,),
+        in_specs=[_t3_spec(be, nt, nq), _t3_spec(be, nt, nq),
+                  _m2_spec(be, nq), _m2_spec(be, nq), _m2_spec(be, nt)],
+        out_specs=_m2_spec(be, nt),
+        out_shape=jax.ShapeDtypeStruct((ne, nt), jnp.float32),
+        interpret=interpret,
+    )(gx, gy, ux, uy, f)
+
+
+@jax.custom_vjp
+def vpinn_residual(gx, gy, ux, uy, f):
+    """Poisson residual, Pallas. Shapes as in ref.vpinn_residual_ref."""
+    return _poisson_fwd_raw(gx, gy, ux, uy, f)
+
+
+def _poisson_vjp_fwd(gx, gy, ux, uy, f):
+    return _poisson_fwd_raw(gx, gy, ux, uy, f), (gx, gy)
+
+
+def _poisson_vjp_bwd(saved, dres):
+    gx, gy = saved
+    dux = contract_t(gx, dres)
+    duy = contract_t(gy, dres)
+    zeros = jnp.zeros_like(gx)
+    return zeros, jnp.zeros_like(gy), dux, duy, -dres
+
+
+vpinn_residual.defvjp(_poisson_vjp_fwd, _poisson_vjp_bwd)
+
+
+def _make_cd_kernel(eps, bx, by):
+    def kern(gx_ref, gy_ref, v_ref, ux_ref, uy_ref, f_ref, o_ref):
+        ux = ux_ref[...]
+        uy = uy_ref[...]
+        rx = jax.lax.dot_general(gx_ref[...], ux, _DN_FWD,
+                                 preferred_element_type=jnp.float32)
+        ry = jax.lax.dot_general(gy_ref[...], uy, _DN_FWD,
+                                 preferred_element_type=jnp.float32)
+        conv = jax.lax.dot_general(v_ref[...], bx * ux + by * uy, _DN_FWD,
+                                   preferred_element_type=jnp.float32)
+        o_ref[...] = eps * (rx + ry) + conv - f_ref[...]
+    return kern
+
+
+def _cd_fwd_raw(gx, gy, v, ux, uy, f, eps, bx, by, interpret=True,
+                block_elems=None):
+    ne, nt, nq = gx.shape
+    be = block_elems or pick_block_elems(ne, nt, nq, n_tensors=3)
+    return pl.pallas_call(
+        _make_cd_kernel(eps, bx, by),
+        grid=(ne // be,),
+        in_specs=[_t3_spec(be, nt, nq)] * 3 +
+                 [_m2_spec(be, nq), _m2_spec(be, nq), _m2_spec(be, nt)],
+        out_specs=_m2_spec(be, nt),
+        out_shape=jax.ShapeDtypeStruct((ne, nt), jnp.float32),
+        interpret=interpret,
+    )(gx, gy, v, ux, uy, f)
+
+
+def make_vpinn_residual_cd(eps, bx, by):
+    """Constant-coefficient CD residual with (eps, bx, by) baked static."""
+
+    @jax.custom_vjp
+    def residual(gx, gy, v, ux, uy, f):
+        return _cd_fwd_raw(gx, gy, v, ux, uy, f, eps, bx, by)
+
+    def fwd(gx, gy, v, ux, uy, f):
+        return residual(gx, gy, v, ux, uy, f), (gx, gy, v)
+
+    def bwd(saved, dres):
+        gx, gy, v = saved
+        gxr = contract_t(gx, dres)
+        gyr = contract_t(gy, dres)
+        vr = contract_t(v, dres)
+        dux = eps * gxr + bx * vr
+        duy = eps * gyr + by * vr
+        z = jnp.zeros_like(gx)
+        return z, jnp.zeros_like(gy), jnp.zeros_like(v), dux, duy, -dres
+
+    residual.defvjp(fwd, bwd)
+    return residual
+
+
+def vpinn_residual_cd(gx, gy, v, ux, uy, f, eps, bx, by):
+    """Convenience wrapper: eps/bx/by must be static python floats."""
+    return make_vpinn_residual_cd(float(eps), float(bx), float(by))(
+        gx, gy, v, ux, uy, f)
+
+
+def _make_space_eps_kernel(bx, by):
+    def kern(gx_ref, gy_ref, v_ref, ux_ref, uy_ref, eps_ref, f_ref, o_ref):
+        eps_q = eps_ref[...]
+        ux = ux_ref[...]
+        uy = uy_ref[...]
+        rx = jax.lax.dot_general(gx_ref[...], eps_q * ux, _DN_FWD,
+                                 preferred_element_type=jnp.float32)
+        ry = jax.lax.dot_general(gy_ref[...], eps_q * uy, _DN_FWD,
+                                 preferred_element_type=jnp.float32)
+        conv = jax.lax.dot_general(v_ref[...], bx * ux + by * uy, _DN_FWD,
+                                   preferred_element_type=jnp.float32)
+        o_ref[...] = rx + ry + conv - f_ref[...]
+    return kern
+
+
+def _space_fwd_raw(gx, gy, v, ux, uy, eps_q, f, bx, by, interpret=True,
+                   block_elems=None):
+    ne, nt, nq = gx.shape
+    be = block_elems or pick_block_elems(ne, nt, nq, n_tensors=3, n_vecs=3)
+    return pl.pallas_call(
+        _make_space_eps_kernel(bx, by),
+        grid=(ne // be,),
+        in_specs=[_t3_spec(be, nt, nq)] * 3 +
+                 [_m2_spec(be, nq)] * 3 + [_m2_spec(be, nt)],
+        out_specs=_m2_spec(be, nt),
+        out_shape=jax.ShapeDtypeStruct((ne, nt), jnp.float32),
+        interpret=interpret,
+    )(gx, gy, v, ux, uy, eps_q, f)
+
+
+def make_vpinn_residual_space_eps(bx, by):
+    """Space-dependent-diffusion residual with (bx, by) baked static.
+
+    Differentiable in ux, uy AND eps_q (the second network head)."""
+
+    @jax.custom_vjp
+    def residual(gx, gy, v, ux, uy, eps_q, f):
+        return _space_fwd_raw(gx, gy, v, ux, uy, eps_q, f, bx, by)
+
+    def fwd(gx, gy, v, ux, uy, eps_q, f):
+        return residual(gx, gy, v, ux, uy, eps_q, f), \
+            (gx, gy, v, ux, uy, eps_q)
+
+    def bwd(saved, dres):
+        gx, gy, v, ux, uy, eps_q = saved
+        gxr = contract_t(gx, dres)
+        gyr = contract_t(gy, dres)
+        vr = contract_t(v, dres)
+        dux = eps_q * gxr + bx * vr
+        duy = eps_q * gyr + by * vr
+        deps = ux * gxr + uy * gyr
+        z = jnp.zeros_like(gx)
+        return z, jnp.zeros_like(gy), jnp.zeros_like(v), dux, duy, deps, \
+            -dres
+
+    residual.defvjp(fwd, bwd)
+    return residual
+
+
+def vpinn_residual_space_eps(gx, gy, v, ux, uy, eps_q, f, bx, by):
+    """Convenience wrapper: bx/by must be static python floats."""
+    return make_vpinn_residual_space_eps(float(bx), float(by))(
+        gx, gy, v, ux, uy, eps_q, f)
+
+
+def vmem_footprint_bytes(ne, nt, nq, n_tensors=2, n_vecs=2,
+                         block_elems=None):
+    """Analytic VMEM model used by DESIGN.md SSPerf (bytes per block)."""
+    be = block_elems or pick_block_elems(ne, nt, nq, n_tensors, n_vecs)
+    words = be * nq * (n_tensors * nt + n_vecs) + be * nt
+    return 4 * words, be

@@ -1,0 +1,357 @@
+"""L2: the FastVPINNs compute graph in JAX (build-time only).
+
+Everything here exists to be `jax.jit(...).lower(...)`-ed by aot.py into
+HLO text that the Rust coordinator executes via PJRT. Nothing in this
+module runs on the request path.
+
+Contents
+--------
+- MLP (tanh hidden layers, linear head) + flat-parameter conventions
+  shared with the Rust side (see PARAM_ORDER_DOC),
+- batched value+gradient evaluation at quadrature points,
+- the FastVPINNs variational losses (Poisson / convection-diffusion /
+  inverse-constant-eps / inverse-space-eps) built on the L1 kernel
+  (Pallas) or its einsum oracle,
+- the PINN collocation baseline (forward-over-reverse Laplacian),
+- the loop-based hp-VPINNs baseline (lax.scan over elements — reproduces
+  Algorithm 1's O(N_elem) step cost),
+- a hand-rolled Adam (optax-free) whose state rides along the step
+  signature so the whole optimizer lives inside the artifact.
+
+Loss conventions follow the paper exactly:
+  variational_loss = sum_e mean_j residual[e,j]^2          (Alg. 2/3)
+  dirichlet_loss   = mean_d (u(x_d) - g(x_d))^2
+  total            = variational + tau * dirichlet [+ gamma * sensor]
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref as kref
+from .kernels import vpinn_residual as kpallas
+
+PARAM_ORDER_DOC = (
+    "params are a flat list [W1, b1, W2, b2, ..., Wh, bh, Wout, bout]; "
+    "W: (n_in, n_out) f32, b: (n_out,) f32. Adam m/v mirror this order."
+)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def param_shapes(layers):
+    """layers e.g. [2, 30, 30, 30, 1] -> list of array shapes (flat)."""
+    shapes = []
+    for n_in, n_out in zip(layers[:-1], layers[1:]):
+        shapes.append((n_in, n_out))
+        shapes.append((n_out,))
+    return shapes
+
+
+def mlp_apply(params, x):
+    """x: (..., n_in) -> (..., n_out). tanh hidden layers, linear head."""
+    n_layers = len(params) // 2
+    h = x
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        h = h @ w + b
+        if i < n_layers - 1:
+            h = jnp.tanh(h)
+    return h
+
+
+def scalar_u(params, xy, head=0):
+    """u at a single point xy: (2,) -> scalar (selects output head)."""
+    return mlp_apply(params, xy[None, :])[0, head]
+
+
+def u_and_grad(params, xy, head=0):
+    """Batched value and gradient. xy: (N,2) -> u (N,), du (N,2)."""
+    def one(p):
+        return jax.value_and_grad(lambda q: scalar_u(params, q, head))(p)
+    u, du = jax.vmap(one)(xy)
+    return u, du
+
+
+def u_grad_laplacian(params, xy):
+    """Batched (u, grad u, laplacian u) for the PINN baseline.
+
+    Laplacian via forward-over-reverse: jvp of grad along each axis.
+    """
+    def gradf(q):
+        return jax.grad(lambda z: scalar_u(params, z))(q)
+
+    def one(q):
+        u = scalar_u(params, q)
+        g = gradf(q)
+        _, hxx = jax.jvp(gradf, (q,), (jnp.array([1.0, 0.0], q.dtype),))
+        _, hyy = jax.jvp(gradf, (q,), (jnp.array([0.0, 1.0], q.dtype),))
+        return u, g, hxx[0] + hyy[1]
+
+    return jax.vmap(one)(xy)
+
+
+# --------------------------------------------------------------------------
+# Adam (hand-rolled; state is part of the artifact signature)
+# --------------------------------------------------------------------------
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def adam_update(params, grads, m, v, step, lr):
+    """One Adam step. step is the 1-based iteration count as f32."""
+    new_p, new_m, new_v = [], [], []
+    b1t = ADAM_B1 ** step
+    b2t = ADAM_B2 ** step
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        mhat = mi / (1.0 - b1t)
+        vhat = vi / (1.0 - b2t)
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+# --------------------------------------------------------------------------
+# Residual dispatch: Pallas kernel vs einsum oracle
+# --------------------------------------------------------------------------
+
+def residual_poisson(gx, gy, ux, uy, f, kernel="pallas"):
+    if kernel == "pallas":
+        return kpallas.vpinn_residual(gx, gy, ux, uy, f)
+    return kref.vpinn_residual_ref(gx, gy, ux, uy, f)
+
+
+def residual_cd(gx, gy, v, ux, uy, f, eps, bx, by, kernel="pallas"):
+    if kernel == "pallas":
+        return kpallas.vpinn_residual_cd(gx, gy, v, ux, uy, f, eps, bx, by)
+    return kref.vpinn_residual_cd_ref(gx, gy, v, ux, uy, f, eps, bx, by)
+
+
+def residual_space_eps(gx, gy, v, ux, uy, eps_q, f, bx, by, kernel="pallas"):
+    if kernel == "pallas":
+        return kpallas.vpinn_residual_space_eps(
+            gx, gy, v, ux, uy, eps_q, f, bx, by)
+    return kref.vpinn_residual_space_eps_ref(
+        gx, gy, v, ux, uy, eps_q, f, bx, by)
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+def _variational(res):
+    """sum over elements of mean over test functions of res^2."""
+    return jnp.sum(jnp.mean(res * res, axis=1))
+
+
+def _dirichlet(params, bd_xy, bd_u, head=0):
+    pred = mlp_apply(params, bd_xy)[:, head]
+    d = pred - bd_u
+    return jnp.mean(d * d)
+
+
+def loss_fastvpinn_poisson(params, quad_xy, gx, gy, f, bd_xy, bd_u, tau,
+                           kernel="pallas"):
+    ne, nt, nq = gx.shape
+    _, du = u_and_grad(params, quad_xy)
+    ux = du[:, 0].reshape(ne, nq)
+    uy = du[:, 1].reshape(ne, nq)
+    res = residual_poisson(gx, gy, ux, uy, f, kernel)
+    lv = _variational(res)
+    lb = _dirichlet(params, bd_xy, bd_u)
+    return lv + tau * lb, (lv, lb)
+
+
+def loss_fastvpinn_cd(params, quad_xy, gx, gy, v, f, bd_xy, bd_u, tau,
+                      eps, bx, by, kernel="pallas"):
+    """Forward convection-diffusion (constant eps, b) — the gear problem."""
+    ne, nt, nq = gx.shape
+    _, du = u_and_grad(params, quad_xy)
+    ux = du[:, 0].reshape(ne, nq)
+    uy = du[:, 1].reshape(ne, nq)
+    res = residual_cd(gx, gy, v, ux, uy, f, eps, bx, by, kernel)
+    lv = _variational(res)
+    lb = _dirichlet(params, bd_xy, bd_u)
+    return lv + tau * lb, (lv, lb)
+
+
+def loss_inverse_const(params, eps, quad_xy, gx, gy, f, bd_xy, bd_u,
+                       sensor_xy, sensor_u, tau, gamma, kernel="pallas"):
+    """Inverse problem with a single trainable diffusion scalar eps.
+
+    res[e,j] = eps * (Gx.ux + Gy.uy) - F, plus a sensor-data loss.
+    """
+    ne, nt, nq = gx.shape
+    _, du = u_and_grad(params, quad_xy)
+    ux = du[:, 0].reshape(ne, nq)
+    uy = du[:, 1].reshape(ne, nq)
+    rx = residual_poisson(gx, gy, ux, uy, jnp.zeros_like(f), kernel)
+    res = eps * rx - f
+    lv = _variational(res)
+    lb = _dirichlet(params, bd_xy, bd_u)
+    sens = mlp_apply(params, sensor_xy)[:, 0] - sensor_u
+    ls = jnp.mean(sens * sens)
+    return lv + tau * lb + gamma * ls, (lv, lb, ls)
+
+
+def loss_inverse_space(params, quad_xy, gx, gy, v, f, bd_xy, bd_u,
+                       sensor_xy, sensor_u, tau, gamma, bx, by,
+                       kernel="pallas"):
+    """Space-dependent eps(x, y): the network has two output heads,
+    head 0 = u, head 1 = eps. Sensor data supervises u (paper SS4.7.2)."""
+    ne, nt, nq = gx.shape
+    _, du = u_and_grad(params, quad_xy, head=0)
+    ux = du[:, 0].reshape(ne, nq)
+    uy = du[:, 1].reshape(ne, nq)
+    eps_q = mlp_apply(params, quad_xy)[:, 1].reshape(ne, nq)
+    res = residual_space_eps(gx, gy, v, ux, uy, eps_q, f, bx, by, kernel)
+    lv = _variational(res)
+    lb = _dirichlet(params, bd_xy, bd_u, head=0)
+    sens = mlp_apply(params, sensor_xy)[:, 0] - sensor_u
+    ls = jnp.mean(sens * sens)
+    return lv + tau * lb + gamma * ls, (lv, lb, ls)
+
+
+def loss_pinn(params, coll_xy, f_vals, bd_xy, bd_u, tau, eps, bx, by):
+    """PINN collocation baseline: -eps*lap(u) + b.grad(u) - f at points."""
+    _, g, lap = u_grad_laplacian(params, coll_xy)
+    res = -eps * lap + bx * g[:, 0] + by * g[:, 1] - f_vals
+    lp = jnp.mean(res * res)
+    lb = _dirichlet(params, bd_xy, bd_u)
+    return lp + tau * lb, (lp, lb)
+
+
+def loss_hp_loop(params, quad_xy, gx, gy, f, bd_xy, bd_u, tau):
+    """Loop-based hp-VPINNs baseline (paper Algorithm 1 cost model).
+
+    lax.scan over elements: each scan step does its own NN forward +
+    gradient over one element's NQ quadrature points and a (NT,NQ)@(NQ,)
+    matvec — the per-element sequential structure whose O(N_elem) step
+    cost Figs. 2/10b document. Differentiable (scan), unlike fori_loop.
+    """
+    ne, nt, nq = gx.shape
+    pts = quad_xy.reshape(ne, nq, 2)
+
+    def body(carry, xs):
+        pt_e, gx_e, gy_e, f_e = xs
+        _, du = u_and_grad(params, pt_e)
+        rx = gx_e @ du[:, 0]
+        ry = gy_e @ du[:, 1]
+        res = rx + ry - f_e
+        return carry + jnp.mean(res * res), None
+
+    lv, _ = jax.lax.scan(body, jnp.float32(0.0), (pts, gx, gy, f))
+    lb = _dirichlet(params, bd_xy, bd_u)
+    return lv + tau * lb, (lv, lb)
+
+
+# --------------------------------------------------------------------------
+# Train-step / predict builders (lowered by aot.py)
+# --------------------------------------------------------------------------
+
+def _split_state(state, n_arr):
+    params = list(state[:n_arr])
+    m = list(state[n_arr:2 * n_arr])
+    v = list(state[2 * n_arr:3 * n_arr])
+    return params, m, v
+
+
+def make_train_step(loss_kind, n_param_arrays, kernel="pallas",
+                    const_kwargs=None):
+    """Return step(params.., m.., v.., step, lr, *data) -> flat outputs.
+
+    loss_kind in {poisson, cd, inverse_const, inverse_space, pinn, hp_loop}.
+    const_kwargs are baked (static) values like eps/bx/by for forward CD.
+    For inverse_const the trainable eps scalar is the LAST params entry
+    (n_param_arrays includes it).
+    """
+    ck = dict(const_kwargs or {})
+
+    def step_fn(*args):
+        n = n_param_arrays
+        state, rest = list(args[:3 * n]), list(args[3 * n:])
+        params, m, v = _split_state(state, n)
+        step, lr = rest[0], rest[1]
+        data = rest[2:]
+
+        if loss_kind == "poisson":
+            quad_xy, gx, gy, f, bd_xy, bd_u, tau = data
+
+            def lf(p):
+                return loss_fastvpinn_poisson(
+                    p, quad_xy, gx, gy, f, bd_xy, bd_u, tau, kernel)
+        elif loss_kind == "cd":
+            quad_xy, gx, gy, vt, f, bd_xy, bd_u, tau = data
+
+            def lf(p):
+                return loss_fastvpinn_cd(
+                    p, quad_xy, gx, gy, vt, f, bd_xy, bd_u, tau,
+                    ck["eps"], ck["bx"], ck["by"], kernel)
+        elif loss_kind == "inverse_const":
+            quad_xy, gx, gy, f, bd_xy, bd_u, sensor_xy, sensor_u, tau, \
+                gamma = data
+
+            def lf(p):
+                net, eps = p[:-1], p[-1]
+                return loss_inverse_const(
+                    net, eps, quad_xy, gx, gy, f, bd_xy, bd_u,
+                    sensor_xy, sensor_u, tau, gamma, kernel)
+        elif loss_kind == "inverse_space":
+            quad_xy, gx, gy, vt, f, bd_xy, bd_u, sensor_xy, sensor_u, \
+                tau, gamma = data
+
+            def lf(p):
+                return loss_inverse_space(
+                    p, quad_xy, gx, gy, vt, f, bd_xy, bd_u, sensor_xy,
+                    sensor_u, tau, gamma, ck["bx"], ck["by"], kernel)
+        elif loss_kind == "pinn":
+            coll_xy, f_vals, bd_xy, bd_u, tau = data
+
+            def lf(p):
+                return loss_pinn(p, coll_xy, f_vals, bd_xy, bd_u, tau,
+                                 ck.get("eps", 1.0), ck.get("bx", 0.0),
+                                 ck.get("by", 0.0))
+        elif loss_kind == "hp_loop":
+            quad_xy, gx, gy, f, bd_xy, bd_u, tau = data
+
+            def lf(p):
+                return loss_hp_loop(p, quad_xy, gx, gy, f, bd_xy, bd_u, tau)
+        else:
+            raise ValueError(f"unknown loss kind {loss_kind}")
+
+        (total, aux), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        new_p, new_m, new_v = adam_update(params, grads, m, v, step, lr)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (total,) + \
+            tuple(aux)
+
+    return step_fn
+
+
+def make_predict(n_param_arrays, n_heads=1):
+    """predict(params.., xy) -> (u,) or (u, eps)."""
+
+    def predict_fn(*args):
+        params = list(args[:n_param_arrays])
+        xy = args[n_param_arrays]
+        out = mlp_apply(params, xy)
+        return tuple(out[:, h] for h in range(n_heads))
+
+    return predict_fn
+
+
+def make_predict_with_grad(n_param_arrays):
+    """predict(params.., xy) -> (u, ux, uy) — for flux/VTK output."""
+
+    def predict_fn(*args):
+        params = list(args[:n_param_arrays])
+        xy = args[n_param_arrays]
+        u, du = u_and_grad(params, xy)
+        return u, du[:, 0], du[:, 1]
+
+    return predict_fn

@@ -1,0 +1,186 @@
+"""Artifact specs: every HLO executable the experiment suite needs.
+
+One spec = one statically-shaped train-step or predict executable. The
+Rust side discovers artifacts through their JSON manifests; names here
+are the cross-layer contract (rust/src/runtime/manifest.rs).
+
+CI scale vs paper scale: shapes that would make a CPU run impractical
+(the 14k-element gear, 80x80-per-element quadrature) have CI-scale
+defaults; `aot.py --paper-scale` emits the paper-faithful set on top.
+Where a shape differs from the paper it is recorded in the manifest
+(`config.paper_scale` / `config.note`) and in EXPERIMENTS.md.
+"""
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+ARCH_STD = (2, 30, 30, 30, 1)    # paper: 3 hidden layers x 30 neurons
+ARCH_GEAR = (2, 50, 50, 50, 1)   # paper SS4.6.4: 3 x 50
+ARCH_INV2 = (2, 30, 30, 30, 2)   # two heads: u and eps(x,y)
+
+# Fixed boundary-sample counts (static shapes; Rust samples exactly these)
+NB_SQUARE = 1000   # paper SS4.6.3: 1000 Dirichlet points
+NB_GEAR_CI = 1536
+NB_GEAR_PAPER = 6096
+NB_DISK = 512
+
+# gear mesh: outline_points x layers (see rust mesh::generators::gear)
+GEAR_CI = dict(ne=1760, nb=NB_GEAR_CI)        # 220 x 8
+GEAR_PAPER = dict(ne=14080, nb=NB_GEAR_PAPER)  # 880 x 16 (~ paper's 14192)
+
+
+@dataclass(frozen=True)
+class Spec:
+    name: str
+    kind: str                  # "train" | "predict"
+    loss: str = ""             # train: poisson|cd|inverse_const|...
+    layers: tuple = ARCH_STD
+    ne: int = 0                # elements
+    nt1d: int = 0              # test fns per direction
+    nq1d: int = 0              # quad points per direction
+    nb: int = 0                # boundary samples
+    ns: int = 0                # sensor points (inverse)
+    n_coll: int = 0            # collocation points (pinn)
+    n_eval: int = 0            # predict points (padded)
+    kernel: str = "pallas"     # pallas | einsum
+    heads: int = 1
+    const: dict = field(default_factory=dict)  # baked eps/bx/by
+    paper_scale: bool = False
+    note: str = ""
+
+    @property
+    def nt(self):
+        return self.nt1d * self.nt1d
+
+    @property
+    def nq(self):
+        return self.nq1d * self.nq1d
+
+
+# Above this G-tensor size the Pallas interpret path's grid loop (an XLA
+# while + dynamic-slice over the full tensor) dominates CPU step time;
+# those artifacts use the mathematically identical einsum lowering
+# (equality is pytest-enforced). On a real TPU the Pallas kernel is the
+# right choice at every size — see EXPERIMENTS.md SSPerf L1.
+PALLAS_CPU_MAX_WORDS = 2_000_000
+
+
+def _fv(name, ne, nt1d, nq1d, nb=NB_SQUARE, kernel=None, loss="poisson",
+        layers=ARCH_STD, ns=0, heads=1, const=None, paper_scale=False,
+        note=""):
+    if kernel is None:
+        words = ne * nt1d * nt1d * nq1d * nq1d
+        kernel = "pallas" if words <= PALLAS_CPU_MAX_WORDS else "einsum"
+    return Spec(name=name, kind="train", loss=loss, layers=layers, ne=ne,
+                nt1d=nt1d, nq1d=nq1d, nb=nb, ns=ns, heads=heads,
+                kernel=kernel, const=const or {}, paper_scale=paper_scale,
+                note=note)
+
+
+def build_specs(paper_scale: bool = False):
+    """Return the deduplicated spec list (CI set; += paper set if asked)."""
+    specs = {}
+
+    def add(s: Spec):
+        specs.setdefault(s.name, s)
+
+    # ---- quickstart + fig08 (accuracy, omega=2pi) --------------------
+    # paper: 2x2 elements, 40x40 quad, 15 test fns per direction
+    add(_fv("fv_poisson_ne4_nt15_nq40", 4, 15, 40,
+            note="fig08 accuracy, omega=2pi"))
+    # CI-friendly quickstart shape
+    add(_fv("fv_poisson_ne4_nt5_nq20", 4, 5, 20, note="quickstart"))
+
+    # ---- fig09 / fig17: h-refinement (omega=4pi) ---------------------
+    # paper uses 80x80 quad per element; CI uses 20x20 (recorded).
+    for ne in (1, 16, 64):
+        add(_fv(f"fv_poisson_ne{ne}_nt5_nq20", ne, 5, 20,
+                note="fig09 h-refinement (CI quad 20x20; paper 80x80)"))
+        if paper_scale:
+            add(_fv(f"fv_poisson_ne{ne}_nt5_nq80", ne, 5, 80,
+                    paper_scale=True, note="fig09 h-refinement"))
+
+    # ---- fig09 / fig18: p-refinement on one element ------------------
+    for nt in (5, 10, 15, 20):
+        add(_fv(f"fv_poisson_ne1_nt{nt}_nq30", 1, nt, 30,
+                note="fig09 p-refinement (CI quad 30x30; paper 80x80)"))
+
+    # ---- fig11: frequency sweep, total quad fixed at 6400 ------------
+    add(_fv("fv_poisson_ne4_nt5_nq40", 4, 5, 40, note="fig11 omega=2pi"))
+    add(_fv("fv_poisson_ne16_nt5_nq20", 16, 5, 20, note="fig11 omega=4pi"))
+    add(_fv("fv_poisson_ne64_nt5_nq10", 64, 5, 10, note="fig11 omega=8pi"))
+
+    # ---- fig10a/10b + fig02: efficiency sweeps -----------------------
+    # (a) 25 quad/elem, 25 test fns, residual points = 25 * ne
+    for ne in (16, 64, 256, 400, 1024):
+        add(_fv(f"fv_poisson_ne{ne}_nt5_nq5", ne, 5, 5, note="fig10a"))
+        add(_fv(f"hp_poisson_ne{ne}_nt5_nq5", ne, 5, 5, loss="hp_loop",
+                note="fig10a / fig02a baseline"))
+    # (b) total quad fixed at 6400, vary element count
+    for ne, nq in ((1, 80), (4, 40), (16, 20), (64, 10), (256, 5), (400, 4)):
+        add(_fv(f"fv_poisson_ne{ne}_nt5_nq{nq}", ne, 5, nq, note="fig10b"))
+        add(_fv(f"hp_poisson_ne{ne}_nt5_nq{nq}", ne, 5, nq, loss="hp_loop",
+                note="fig10b / fig02b baseline"))
+
+    # PINN baselines across residual-point counts (artifact reusable for
+    # any omega: forcing values are runtime inputs)
+    for nc in (400, 1600, 6400, 10000, 25600):
+        add(Spec(name=f"pinn_poisson_nc{nc}", kind="train", loss="pinn",
+                 layers=ARCH_STD, n_coll=nc, nb=NB_SQUARE,
+                 const={"eps": 1.0, "bx": 0.0, "by": 0.0},
+                 note="fig08/10/11 PINN baseline"))
+
+    # ---- fig12: gear convection-diffusion ----------------------------
+    g = GEAR_PAPER if paper_scale else GEAR_CI
+    add(_fv("fv_cd_gear", g["ne"], 4, 5, nb=g["nb"], loss="cd",
+            layers=ARCH_GEAR, kernel="einsum",
+            const={"eps": 1.0, "bx": 0.1, "by": 0.0},
+            paper_scale=paper_scale,
+            note="fig12 gear (einsum kernel: 14k-elem pallas-interpret "
+                 "grid loop is impractical on CPU; equality tested)"))
+
+    # ---- fig14: inverse, constant eps --------------------------------
+    add(_fv("fv_inverse_const_ne4_nt5_nq40", 4, 5, 40, nb=400, ns=50,
+            loss="inverse_const", note="fig14; eps appended to params"))
+
+    # ---- fig15: inverse, space-dependent eps on 1024-cell disk -------
+    add(_fv("fv_inverse_space_disk1024", 1024, 4, 5, nb=NB_DISK, ns=500,
+            loss="inverse_space", layers=ARCH_INV2, heads=2,
+            kernel="einsum", const={"bx": 1.0, "by": 0.0},
+            note="fig15 disk inverse"))
+
+    # ---- fig16: hyperparameter timing sweeps -------------------------
+    for nt in (5, 10, 20):
+        for nq in (10, 20, 40):
+            add(_fv(f"fv_poisson_ne1_nt{nt}_nq{nq}", 1, nt, nq,
+                    note="fig16a"))
+    for nt in (5, 10, 20):
+        for ne in (4, 64, 400):
+            add(_fv(f"fv_poisson_ne{ne}_nt{nt}_nq10", ne, nt, 10,
+                    note="fig16b"))
+    for nq in (5, 10, 20):
+        for ne in (4, 64, 400):
+            add(_fv(f"fv_poisson_ne{ne}_nt10_nq{nq}", ne, 10, nq,
+                    note="fig16c"))
+
+    # ---- predict executables ------------------------------------------
+    for name, layers, heads, n_eval in (
+        ("predict_std_16k", ARCH_STD, 1, 16384),
+        ("predict_gear_16k", ARCH_GEAR, 1, 16384),
+        ("predict_inv2_16k", ARCH_INV2, 2, 16384),
+        # table1 prediction-time ladder
+        ("predict_std_65k", ARCH_STD, 1, 65536),
+        ("predict_std_262k", ARCH_STD, 1, 262144),
+        ("predict_std_1m", ARCH_STD, 1, 1048576),
+    ):
+        add(Spec(name=name, kind="predict", layers=layers, heads=heads,
+                 n_eval=n_eval, note="table1/eval" ))
+
+    return list(specs.values())
+
+
+def spec_by_name(name: str, paper_scale: bool = True) -> Optional[Spec]:
+    for s in build_specs(paper_scale=paper_scale):
+        if s.name == name:
+            return s
+    return None

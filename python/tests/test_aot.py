@@ -1,0 +1,147 @@
+"""AOT pipeline tests: specs, signatures, manifests, HLO emission."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model, specs
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestSpecs:
+    def test_names_unique(self):
+        names = [s.name for s in specs.build_specs(paper_scale=True)]
+        assert len(names) == len(set(names))
+
+    def test_ci_subset_of_paper(self):
+        ci = {s.name for s in specs.build_specs(paper_scale=False)}
+        paper = {s.name for s in specs.build_specs(paper_scale=True)}
+        # paper-scale adds artifacts; must not *remove* shared CI ones
+        # except those whose config legitimately changes (gear)
+        assert len(ci - paper) <= 1  # fv_cd_gear changes shape
+
+    def test_fig11_total_quad_constant(self):
+        for name in ("fv_poisson_ne4_nt5_nq40", "fv_poisson_ne16_nt5_nq20",
+                     "fv_poisson_ne64_nt5_nq10"):
+            s = specs.spec_by_name(name)
+            assert s is not None
+            assert s.ne * s.nq == 6400
+
+    def test_spec_by_name_missing(self):
+        assert specs.spec_by_name("nope") is None
+
+
+class TestSignature:
+    def test_poisson_signature_order(self):
+        s = specs.spec_by_name("fv_poisson_ne4_nt5_nq20")
+        ins, outs = aot.signature(s)
+        names = [n for n, _ in ins]
+        # 8 params + 8 m + 8 v + step + lr + 7 data
+        assert names[:8] == [f"p{i}" for i in range(8)]
+        assert names[8:16] == [f"m{i}" for i in range(8)]
+        assert names[16:24] == [f"v{i}" for i in range(8)]
+        assert names[24:26] == ["step", "lr"]
+        assert names[26:] == ["quad_xy", "gx", "gy", "f", "bd_xy", "bd_u",
+                              "tau"]
+        assert outs[-3:] == ["loss", "var_loss", "bd_loss"]
+
+    def test_inverse_const_has_eps_param(self):
+        s = specs.spec_by_name("fv_inverse_const_ne4_nt5_nq40")
+        ins, outs = aot.signature(s)
+        names = [n for n, _ in ins]
+        # 9 param slots (8 arrays + eps scalar)
+        assert "p8" in names and "m8" in names and "v8" in names
+        shp = dict(ins)
+        assert shp["p8"] == ()
+        assert "sensor_xy" in names and "gamma" in names
+        assert outs[-1] == "sensor_loss"
+
+    def test_shapes_match_spec(self):
+        s = specs.spec_by_name("fv_poisson_ne16_nt5_nq20")
+        shp = dict(aot.signature(s)[0])
+        assert tuple(shp["gx"]) == (16, 25, 400)
+        assert tuple(shp["quad_xy"]) == (16 * 400, 2)
+        assert tuple(shp["bd_xy"]) == (s.nb, 2)
+
+    def test_predict_signature(self):
+        s = specs.spec_by_name("predict_inv2_16k")
+        ins, outs = aot.signature(s)
+        assert ins[-1][0] == "xy"
+        assert outs == ["u", "eps"]
+
+
+class TestManifest:
+    def test_manifest_roundtrip(self):
+        s = specs.spec_by_name("fv_poisson_ne4_nt5_nq20")
+        man = aot.manifest(s)
+        text = json.dumps(man)
+        back = json.loads(text)
+        assert back["name"] == s.name
+        assert back["config"]["ne"] == 4
+        assert back["config"]["kernel"] == "pallas"
+        assert len(back["inputs"]) == len(aot.signature(s)[0])
+
+
+class TestLowering:
+    def test_tiny_spec_lowers_to_hlo_text(self):
+        s = specs.Spec(name="tmp_test", kind="train", loss="poisson",
+                       layers=(2, 4, 1), ne=1, nt1d=2, nq1d=3, nb=8)
+        text = aot.lower_spec(s)
+        assert text.startswith("HloModule")
+        assert "custom-call" not in text
+        # parameter count must match signature
+        n_in = len(aot.signature(s)[0])
+        assert f"parameter({n_in - 1})" in text
+
+    def test_lowered_step_executes_like_python(self):
+        """The lowered fn and the python fn must agree numerically."""
+        s = specs.Spec(name="tmp_exec", kind="train", loss="poisson",
+                       layers=(2, 4, 1), ne=1, nt1d=2, nq1d=3, nb=8)
+        ins, _ = aot.signature(s)
+        rng = np.random.default_rng(0)
+        args = [jnp.asarray(rng.normal(0, 0.3, shape), jnp.float32)
+                for _, shape in ins]
+        fn = aot.build_fn(s)
+        out_py = fn(*args)
+        out_jit = jax.jit(fn)(*args)
+        for a, b in zip(out_py, out_jit):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_predict_lowering(self):
+        s = specs.Spec(name="tmp_pred", kind="predict", layers=(2, 4, 1),
+                       n_eval=16)
+        text = aot.lower_spec(s)
+        assert text.startswith("HloModule")
+
+
+class TestParamArrayCount:
+    def test_counts(self):
+        s = specs.spec_by_name("fv_poisson_ne4_nt5_nq20")
+        assert aot.n_param_arrays(s) == 8
+        s = specs.spec_by_name("fv_inverse_const_ne4_nt5_nq40")
+        assert aot.n_param_arrays(s) == 9
+        s = specs.spec_by_name("fv_cd_gear")
+        assert aot.n_param_arrays(s) == 8
+
+
+class TestKernelAutoSelect:
+    def test_small_tensors_use_pallas(self):
+        s = specs.spec_by_name("fv_poisson_ne4_nt5_nq20")
+        assert s.kernel == "pallas"
+
+    def test_large_tensors_fall_back_to_einsum(self):
+        # 400 * 400 * 100 = 16M words > PALLAS_CPU_MAX_WORDS
+        s = specs.spec_by_name("fv_poisson_ne400_nt20_nq10")
+        assert s.kernel == "einsum"
+
+    def test_threshold_boundary(self):
+        assert specs.PALLAS_CPU_MAX_WORDS == 2_000_000
+        # fig08 artifact sits just under the threshold: stays pallas
+        s = specs.spec_by_name("fv_poisson_ne4_nt15_nq40")
+        assert s.ne * s.nt * s.nq <= specs.PALLAS_CPU_MAX_WORDS
+        assert s.kernel == "pallas"

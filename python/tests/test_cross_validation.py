@@ -1,0 +1,59 @@
+"""Rust <-> Python assembly cross-validation.
+
+The Rust CLI `repro dump-tensors --mesh <kind> --n <n> --nt <nt> --nq <nq>
+--out artifacts/crosscheck/<tag>` writes the premultiplier tensors it
+assembled (gx, gy, v, f, quad_xy, jdet) as .npy files. This test
+re-assembles the same domain with fem_py and compares element-wise.
+
+Run `make crosscheck` to produce the dumps; tests skip when absent.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile.fem_py import assembly, mesh
+
+CROSS_DIR = os.path.join(os.path.dirname(__file__), "..", "..",
+                         "artifacts", "crosscheck")
+
+CASES = [
+    # tag, mesh builder, nt1d, nq1d
+    ("square4_nt3_nq5", lambda: mesh.unit_square(4), 3, 5),
+    ("skewed4_nt3_nq5", lambda: mesh.skewed_square(4), 3, 5),
+    ("square2_nt5_nq10", lambda: mesh.unit_square(2), 5, 10),
+]
+
+
+def load_dump(tag):
+    d = os.path.join(CROSS_DIR, tag)
+    if not os.path.isdir(d):
+        pytest.skip(f"no rust dump at {d} (run `make crosscheck`)")
+    out = {}
+    for name in ("quad_xy", "gx", "gy", "v", "f", "jdet"):
+        path = os.path.join(d, f"{name}.npy")
+        assert os.path.exists(path), f"missing {path}"
+        out[name] = np.load(path)
+    return out
+
+
+@pytest.mark.parametrize("tag,builder,nt,nq", CASES)
+def test_assembly_matches_rust(tag, builder, nt, nq):
+    dump = load_dump(tag)
+    pts, cells = builder()
+    dom = assembly.assemble(pts, cells, nt, nq)
+    f = dom.force_matrix(lambda x, y: np.sin(x) * np.cos(y) + 2.0 * x * y)
+
+    np.testing.assert_allclose(dump["quad_xy"], dom.quad_xy, rtol=1e-6,
+                               atol=1e-9, err_msg=f"{tag}: quad_xy")
+    np.testing.assert_allclose(dump["jdet"], dom.jdet, rtol=1e-6,
+                               atol=1e-12, err_msg=f"{tag}: jdet")
+    np.testing.assert_allclose(dump["gx"], dom.gx, rtol=1e-5, atol=1e-7,
+                               err_msg=f"{tag}: gx")
+    np.testing.assert_allclose(dump["gy"], dom.gy, rtol=1e-5, atol=1e-7,
+                               err_msg=f"{tag}: gy")
+    np.testing.assert_allclose(dump["v"], dom.v, rtol=1e-5, atol=1e-7,
+                               err_msg=f"{tag}: v")
+    np.testing.assert_allclose(dump["f"], f, rtol=1e-5, atol=1e-7,
+                               err_msg=f"{tag}: force matrix")

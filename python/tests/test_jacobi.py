@@ -1,0 +1,117 @@
+"""Legendre/Jacobi polynomial substrate tests (fem_py.jacobi, fem_py.basis)."""
+
+import numpy as np
+import pytest
+
+from compile.fem_py import basis, jacobi
+
+
+XS = np.linspace(-1.0, 1.0, 41)
+
+
+class TestLegendre:
+    def test_p0_p1(self):
+        np.testing.assert_allclose(jacobi.legendre(0, XS), 1.0)
+        np.testing.assert_allclose(jacobi.legendre(1, XS), XS)
+
+    def test_closed_forms(self):
+        np.testing.assert_allclose(
+            jacobi.legendre(2, XS), 0.5 * (3 * XS**2 - 1), atol=1e-14)
+        np.testing.assert_allclose(
+            jacobi.legendre(3, XS), 0.5 * (5 * XS**3 - 3 * XS), atol=1e-14)
+        np.testing.assert_allclose(
+            jacobi.legendre(4, XS),
+            (35 * XS**4 - 30 * XS**2 + 3) / 8.0, atol=1e-13)
+
+    def test_endpoint_values(self):
+        # P_n(1) = 1, P_n(-1) = (-1)^n
+        for n in range(12):
+            assert jacobi.legendre(n, np.array([1.0]))[0] == pytest.approx(1)
+            assert jacobi.legendre(n, np.array([-1.0]))[0] == pytest.approx(
+                (-1.0) ** n)
+
+    def test_orthogonality(self):
+        # int_-1^1 P_m P_n = 2/(2n+1) delta_mn via dense trapezoid
+        x = np.linspace(-1, 1, 20001)
+        for m in range(6):
+            for n in range(6):
+                integral = np.trapezoid(
+                    jacobi.legendre(m, x) * jacobi.legendre(n, x), x)
+                expected = 2.0 / (2 * n + 1) if m == n else 0.0
+                assert integral == pytest.approx(expected, abs=5e-7)
+
+    def test_deriv_matches_finite_difference(self):
+        h = 1e-6
+        x = np.linspace(-0.95, 0.95, 21)
+        for n in range(1, 10):
+            fd = (jacobi.legendre(n, x + h) - jacobi.legendre(n, x - h)) / (
+                2 * h)
+            np.testing.assert_allclose(
+                jacobi.legendre_deriv(n, x), fd, rtol=1e-6, atol=1e-6)
+
+    def test_deriv_at_endpoints(self):
+        # P'_n(1) = n(n+1)/2 — the recurrence must be stable at +-1
+        for n in range(1, 12):
+            d = jacobi.legendre_deriv(n, np.array([1.0]))[0]
+            assert d == pytest.approx(n * (n + 1) / 2.0)
+
+    def test_all_variants_match_scalar(self):
+        p = jacobi.legendre_all(8, XS)
+        d = jacobi.legendre_deriv_all(8, XS)
+        for n in range(9):
+            np.testing.assert_allclose(p[n], jacobi.legendre(n, XS),
+                                       atol=1e-14)
+            np.testing.assert_allclose(d[n], jacobi.legendre_deriv(n, XS),
+                                       atol=1e-12)
+
+
+class TestJacobiGeneral:
+    def test_reduces_to_legendre(self):
+        for n in range(8):
+            np.testing.assert_allclose(
+                jacobi.jacobi(n, 0.0, 0.0, XS), jacobi.legendre(n, XS),
+                atol=1e-13)
+
+    def test_deriv_consistency(self):
+        h = 1e-6
+        x = np.linspace(-0.9, 0.9, 13)
+        for n in range(1, 7):
+            fd = (jacobi.jacobi(n, 1.0, 1.0, x + h)
+                  - jacobi.jacobi(n, 1.0, 1.0, x - h)) / (2 * h)
+            np.testing.assert_allclose(
+                jacobi.jacobi_deriv(n, 1.0, 1.0, x), fd, rtol=1e-6,
+                atol=1e-6)
+
+
+class TestTestBasis:
+    def test_vanishes_at_endpoints(self):
+        ends = np.array([-1.0, 1.0])
+        t = basis.test_fn_1d(10, ends)
+        np.testing.assert_allclose(t, 0.0, atol=1e-12)
+
+    def test_matches_definition(self):
+        t = basis.test_fn_1d(6, XS)
+        for j in range(1, 7):
+            expect = jacobi.legendre(j + 1, XS) - jacobi.legendre(j - 1, XS)
+            np.testing.assert_allclose(t[j - 1], expect, atol=1e-13)
+
+    def test_grad_finite_difference(self):
+        h = 1e-6
+        x = np.linspace(-0.99, 0.99, 17)
+        g = basis.test_grad_1d(6, x)
+        tp = basis.test_fn_1d(6, x + h)
+        tm = basis.test_fn_1d(6, x - h)
+        np.testing.assert_allclose(g, (tp - tm) / (2 * h), rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_2d_tensor_structure(self):
+        xi = np.array([-0.3, 0.1, 0.8])
+        eta = np.array([0.5, -0.7, 0.2])
+        v, dxi, deta = basis.test_fn_2d(3, xi, eta)
+        assert v.shape == (9, 3)
+        t_xi = basis.test_fn_1d(3, xi)
+        t_eta = basis.test_fn_1d(3, eta)
+        for a in range(3):
+            for b in range(3):
+                np.testing.assert_allclose(
+                    v[a * 3 + b], t_xi[a] * t_eta[b], atol=1e-14)

@@ -1,0 +1,209 @@
+"""L1 Pallas kernel vs einsum oracle — the core correctness signal.
+
+Hypothesis sweeps shapes; every variant is checked in both the forward
+pass and reverse-mode gradients (the custom_vjp backward kernel).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref as kref
+from compile.kernels import vpinn_residual as kp
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+shape_st = st.tuples(
+    st.integers(min_value=1, max_value=12),   # NE
+    st.integers(min_value=1, max_value=24),   # NT
+    st.integers(min_value=1, max_value=40),   # NQ
+)
+
+
+class TestPickBlockElems:
+    def test_divides(self):
+        for ne in (1, 2, 7, 12, 36, 1024, 1760, 14080):
+            be = kp.pick_block_elems(ne, 25, 400)
+            assert ne % be == 0
+            assert be >= 1
+
+    def test_respects_vmem_budget(self):
+        bytes_, be = kp.vmem_footprint_bytes(14080, 16, 25)
+        assert bytes_ <= 4 * (1 << 20) or be == 1
+
+    def test_prime_ne(self):
+        assert kp.pick_block_elems(887, 25, 25) in (1, 887)
+
+
+class TestPoissonForward:
+    @settings(max_examples=25, deadline=None)
+    @given(shape_st)
+    def test_matches_ref(self, shape):
+        ne, nt, nq = shape
+        gx, gy = rand((ne, nt, nq), 0), rand((ne, nt, nq), 1)
+        ux, uy = rand((ne, nq), 2), rand((ne, nq), 3)
+        f = rand((ne, nt), 4)
+        got = kp.vpinn_residual(gx, gy, ux, uy, f)
+        want = kref.vpinn_residual_ref(gx, gy, ux, uy, f)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_explicit_tiny(self):
+        # NE=1, NT=1, NQ=2 by hand
+        gx = jnp.array([[[1.0, 2.0]]])
+        gy = jnp.array([[[0.5, -1.0]]])
+        ux = jnp.array([[3.0, 4.0]])
+        uy = jnp.array([[2.0, 2.0]])
+        f = jnp.array([[1.0]])
+        # 1*3+2*4 + 0.5*2-1*2 - 1 = 11 - 1 - 1 = 9
+        got = kp.vpinn_residual(gx, gy, ux, uy, f)
+        assert float(got[0, 0]) == pytest.approx(9.0, rel=1e-6)
+
+    def test_block_elems_override(self):
+        gx, gy = rand((8, 4, 9), 5), rand((8, 4, 9), 6)
+        ux, uy = rand((8, 9), 7), rand((8, 9), 8)
+        f = rand((8, 4), 9)
+        for be in (1, 2, 4, 8):
+            got = kp._poisson_fwd_raw(gx, gy, ux, uy, f, block_elems=be)
+            want = kref.vpinn_residual_ref(gx, gy, ux, uy, f)
+            np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+class TestPoissonGrad:
+    @settings(max_examples=10, deadline=None)
+    @given(shape_st)
+    def test_grad_matches_ref(self, shape):
+        ne, nt, nq = shape
+        gx, gy = rand((ne, nt, nq), 10), rand((ne, nt, nq), 11)
+        ux, uy = rand((ne, nq), 12), rand((ne, nq), 13)
+        f = rand((ne, nt), 14)
+
+        def loss_p(ux, uy):
+            r = kp.vpinn_residual(gx, gy, ux, uy, f)
+            return jnp.sum(r * r)
+
+        def loss_r(ux, uy):
+            r = kref.vpinn_residual_ref(gx, gy, ux, uy, f)
+            return jnp.sum(r * r)
+
+        gp = jax.grad(loss_p, argnums=(0, 1))(ux, uy)
+        gr = jax.grad(loss_r, argnums=(0, 1))(ux, uy)
+        np.testing.assert_allclose(gp[0], gr[0], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gp[1], gr[1], rtol=1e-4, atol=1e-4)
+
+    def test_grad_wrt_f(self):
+        gx, gy = rand((3, 5, 7), 20), rand((3, 5, 7), 21)
+        ux, uy = rand((3, 7), 22), rand((3, 7), 23)
+        f = rand((3, 5), 24)
+
+        def lp(f):
+            r = kp.vpinn_residual(gx, gy, ux, uy, f)
+            return jnp.sum(r * r)
+
+        def lr(f):
+            r = kref.vpinn_residual_ref(gx, gy, ux, uy, f)
+            return jnp.sum(r * r)
+
+        np.testing.assert_allclose(jax.grad(lp)(f), jax.grad(lr)(f),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestContractT:
+    @settings(max_examples=15, deadline=None)
+    @given(shape_st)
+    def test_matches_einsum(self, shape):
+        ne, nt, nq = shape
+        g = rand((ne, nt, nq), 30)
+        r = rand((ne, nt), 31)
+        got = kp.contract_t(g, r)
+        want = jnp.einsum("ejq,ej->eq", g, r)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+class TestCdVariant:
+    @settings(max_examples=15, deadline=None)
+    @given(shape_st,
+           st.floats(min_value=0.01, max_value=5.0),
+           st.floats(min_value=-2.0, max_value=2.0),
+           st.floats(min_value=-2.0, max_value=2.0))
+    def test_matches_ref(self, shape, eps, bx, by):
+        ne, nt, nq = shape
+        gx, gy, v = (rand((ne, nt, nq), s) for s in (40, 41, 42))
+        ux, uy = rand((ne, nq), 43), rand((ne, nq), 44)
+        f = rand((ne, nt), 45)
+        got = kp.vpinn_residual_cd(gx, gy, v, ux, uy, f, eps, bx, by)
+        want = kref.vpinn_residual_cd_ref(gx, gy, v, ux, uy, f, eps, bx, by)
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+    def test_grad(self):
+        gx, gy, v = (rand((4, 6, 10), s) for s in (50, 51, 52))
+        ux, uy = rand((4, 10), 53), rand((4, 10), 54)
+        f = rand((4, 6), 55)
+
+        def lp(ux, uy):
+            r = kp.vpinn_residual_cd(gx, gy, v, ux, uy, f, 0.7, 1.2, -0.4)
+            return jnp.sum(r * r)
+
+        def lr(ux, uy):
+            r = kref.vpinn_residual_cd_ref(
+                gx, gy, v, ux, uy, f, 0.7, 1.2, -0.4)
+            return jnp.sum(r * r)
+
+        gp = jax.grad(lp, argnums=(0, 1))(ux, uy)
+        gr = jax.grad(lr, argnums=(0, 1))(ux, uy)
+        np.testing.assert_allclose(gp[0], gr[0], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gp[1], gr[1], rtol=1e-4, atol=1e-4)
+
+
+class TestSpaceEpsVariant:
+    @settings(max_examples=15, deadline=None)
+    @given(shape_st)
+    def test_matches_ref(self, shape):
+        ne, nt, nq = shape
+        gx, gy, v = (rand((ne, nt, nq), s) for s in (60, 61, 62))
+        ux, uy = rand((ne, nq), 63), rand((ne, nq), 64)
+        eps_q = rand((ne, nq), 65)
+        f = rand((ne, nt), 66)
+        got = kp.vpinn_residual_space_eps(
+            gx, gy, v, ux, uy, eps_q, f, 1.0, 0.0)
+        want = kref.vpinn_residual_space_eps_ref(
+            gx, gy, v, ux, uy, eps_q, f, 1.0, 0.0)
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+    def test_grad_including_eps(self):
+        gx, gy, v = (rand((4, 6, 10), s) for s in (70, 71, 72))
+        ux, uy = rand((4, 10), 73), rand((4, 10), 74)
+        eps_q = rand((4, 10), 75)
+        f = rand((4, 6), 76)
+
+        def lp(ux, uy, eps_q):
+            r = kp.vpinn_residual_space_eps(
+                gx, gy, v, ux, uy, eps_q, f, 1.0, 0.0)
+            return jnp.sum(r * r)
+
+        def lr(ux, uy, eps_q):
+            r = kref.vpinn_residual_space_eps_ref(
+                gx, gy, v, ux, uy, eps_q, f, 1.0, 0.0)
+            return jnp.sum(r * r)
+
+        gp = jax.grad(lp, argnums=(0, 1, 2))(ux, uy, eps_q)
+        gr = jax.grad(lr, argnums=(0, 1, 2))(ux, uy, eps_q)
+        for a, b in zip(gp, gr):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+class TestUnderJit:
+    def test_jit_compiles_and_matches(self):
+        gx, gy = rand((6, 9, 16), 80), rand((6, 9, 16), 81)
+        ux, uy = rand((6, 16), 82), rand((6, 16), 83)
+        f = rand((6, 9), 84)
+        got = jax.jit(kp.vpinn_residual)(gx, gy, ux, uy, f)
+        want = kref.vpinn_residual_ref(gx, gy, ux, uy, f)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,263 @@
+"""L2 model tests: losses, Adam, train-step builders, baselines."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.fem_py import assembly, mesh
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_params(layers, seed=0, scale=0.5):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.normal(0, scale, s), jnp.float32)
+            for s in model.param_shapes(layers)]
+
+
+def zeros_like_params(params):
+    return [jnp.zeros_like(p) for p in params]
+
+
+@pytest.fixture(scope="module")
+def poisson_data():
+    pts, cells = mesh.unit_square(2)
+    dom = assembly.assemble(pts, cells, 5, 10)
+    om = 2 * math.pi
+    f = dom.force_matrix(
+        lambda x, y: 2 * om * om * np.sin(om * x) * np.sin(om * y))
+    bd = assembly.boundary_points_unit_square(50)
+    return {
+        "quad_xy": jnp.asarray(dom.quad_xy, jnp.float32),
+        "gx": jnp.asarray(dom.gx, jnp.float32),
+        "gy": jnp.asarray(dom.gy, jnp.float32),
+        "f": jnp.asarray(f, jnp.float32),
+        "bd_xy": jnp.asarray(bd, jnp.float32),
+        "bd_u": jnp.zeros(200, jnp.float32),
+        "shape": dom.gx.shape,
+    }
+
+
+class TestMLP:
+    def test_shapes(self):
+        p = make_params((2, 30, 30, 30, 1))
+        assert len(p) == 8
+        x = jnp.zeros((17, 2))
+        assert model.mlp_apply(p, x).shape == (17, 1)
+
+    def test_two_heads(self):
+        p = make_params((2, 8, 2))
+        assert model.mlp_apply(p, jnp.zeros((5, 2))).shape == (5, 2)
+
+    def test_grad_matches_fd(self):
+        p = make_params((2, 16, 1), seed=4)
+        xy = jnp.asarray(np.random.default_rng(1).uniform(0, 1, (10, 2)),
+                         jnp.float32)
+        u, du = model.u_and_grad(p, xy)
+        h = 1e-3
+        for axis in (0, 1):
+            delta = np.zeros((1, 2), np.float32)
+            delta[0, axis] = h
+            up = model.mlp_apply(p, xy + delta)[:, 0]
+            um = model.mlp_apply(p, xy - delta)[:, 0]
+            fd = (up - um) / (2 * h)
+            np.testing.assert_allclose(du[:, axis], fd, rtol=2e-2,
+                                       atol=2e-3)
+
+    def test_laplacian_matches_hessian_trace(self):
+        p = make_params((2, 12, 1), seed=5)
+        xy = jnp.asarray([[0.3, 0.4], [0.7, 0.1], [0.5, 0.9]], jnp.float32)
+        _, _, lap = model.u_grad_laplacian(p, xy)
+
+        def u_scalar(q):
+            return model.scalar_u(p, q)
+
+        for i in range(xy.shape[0]):
+            hess = jax.hessian(u_scalar)(xy[i])
+            assert float(lap[i]) == pytest.approx(
+                float(jnp.trace(hess)), rel=1e-4, abs=1e-5)
+
+
+class TestAdam:
+    def test_moves_toward_minimum(self):
+        # minimize (p-3)^2 with Adam
+        p = [jnp.asarray(0.0)]
+        m = [jnp.asarray(0.0)]
+        v = [jnp.asarray(0.0)]
+        for t in range(1, 3001):
+            g = [2 * (p[0] - 3.0)]
+            p, m, v = model.adam_update(p, g, m, v, float(t), 0.05)
+        assert float(p[0]) == pytest.approx(3.0, abs=1e-3)
+
+    def test_bias_correction_first_step(self):
+        # after one step from zero state, |delta| ~ lr regardless of g scale
+        for gval in (1e-4, 1.0, 1e4):
+            p, m, v = model.adam_update(
+                [jnp.asarray(0.0)], [jnp.asarray(gval)],
+                [jnp.asarray(0.0)], [jnp.asarray(0.0)], 1.0, 0.01)
+            assert abs(float(p[0])) == pytest.approx(0.01, rel=1e-3)
+
+
+class TestLossesDecrease:
+    def test_fastvpinn_poisson(self, poisson_data):
+        d = poisson_data
+        params = make_params((2, 30, 30, 30, 1))
+        m = zeros_like_params(params)
+        v = zeros_like_params(params)
+        step = jax.jit(model.make_train_step("poisson", len(params)))
+        state = params + m + v
+        losses = []
+        for i in range(1, 121):
+            out = step(*(state + [jnp.float32(i), jnp.float32(1e-3),
+                                  d["quad_xy"], d["gx"], d["gy"], d["f"],
+                                  d["bd_xy"], d["bd_u"], jnp.float32(10.)]))
+            state = list(out[:3 * len(params)])
+            losses.append(float(out[3 * len(params)]))
+        assert losses[-1] < 0.5 * losses[0]
+
+    def test_pinn(self):
+        om = 2 * math.pi
+        rng = np.random.default_rng(0)
+        coll = jnp.asarray(rng.uniform(0, 1, (400, 2)), jnp.float32)
+        fv = jnp.asarray(
+            2 * om * om * np.sin(om * coll[:, 0]) * np.sin(om * coll[:, 1]),
+            jnp.float32)
+        bd = jnp.asarray(assembly.boundary_points_unit_square(25),
+                         jnp.float32)
+        bdu = jnp.zeros(100, jnp.float32)
+        params = make_params((2, 20, 20, 1))
+        m = zeros_like_params(params)
+        v = zeros_like_params(params)
+        step = jax.jit(model.make_train_step(
+            "pinn", len(params),
+            const_kwargs={"eps": 1.0, "bx": 0.0, "by": 0.0}))
+        state = params + m + v
+        losses = []
+        for i in range(1, 101):
+            out = step(*(state + [jnp.float32(i), jnp.float32(1e-3), coll,
+                                  fv, bd, bdu, jnp.float32(10.0)]))
+            state = list(out[:3 * len(params)])
+            losses.append(float(out[3 * len(params)]))
+        assert losses[-1] < losses[0]
+
+    def test_inverse_const_eps_converges_direction(self, poisson_data):
+        """eps should move from init toward eps_actual given consistent
+        forcing: f = eps_actual * (stiffness action of u_exact)."""
+        d = poisson_data
+        params = make_params((2, 20, 20, 1), seed=2)
+        params.append(jnp.asarray(2.0, jnp.float32))  # eps init
+        m = zeros_like_params(params)
+        v = zeros_like_params(params)
+        # sensors on the exact solution u = sin(2pi x) sin(2pi y)
+        rng = np.random.default_rng(3)
+        sxy = jnp.asarray(rng.uniform(0, 1, (50, 2)), jnp.float32)
+        om = 2 * math.pi
+        su = jnp.asarray(np.sin(om * sxy[:, 0]) * np.sin(om * sxy[:, 1]),
+                         jnp.float32)
+        eps_actual = 0.3
+        f_eps = jnp.asarray(eps_actual * np.asarray(d["f"]), jnp.float32)
+        step = jax.jit(model.make_train_step("inverse_const", len(params)))
+        state = params + m + v
+        eps_hist = [2.0]
+        losses = []
+        for i in range(1, 1201):
+            out = step(*(state + [jnp.float32(i), jnp.float32(5e-3),
+                                  d["quad_xy"], d["gx"], d["gy"], f_eps,
+                                  d["bd_xy"], d["bd_u"], sxy, su,
+                                  jnp.float32(10.0), jnp.float32(10.0)]))
+            state = list(out[:3 * len(params)])
+            eps_hist.append(float(state[len(params) - 1]))
+            losses.append(float(out[3 * len(params)]))
+        # eps transiently overshoots, then descends toward 0.3 (paper
+        # needed ~9k epochs for 1e-5; here we assert clear progress)
+        assert abs(eps_hist[-1] - eps_actual) < abs(eps_hist[0] - eps_actual)
+        assert losses[-1] < 0.05 * losses[0]
+
+
+class TestBaselineEquivalence:
+    def test_hp_loop_matches_fastvpinn_loss(self, poisson_data):
+        """The loop-based baseline and the tensorised loss compute the SAME
+        mathematical quantity — only the schedule differs (paper SS4).
+        Verify the variational losses agree at identical parameters."""
+        d = poisson_data
+        params = make_params((2, 30, 30, 30, 1), seed=7)
+        lv_fast, _ = model.loss_fastvpinn_poisson(
+            params, d["quad_xy"], d["gx"], d["gy"], d["f"],
+            d["bd_xy"], d["bd_u"], jnp.float32(10.0), kernel="einsum")
+        lv_loop, _ = model.loss_hp_loop(
+            params, d["quad_xy"], d["gx"], d["gy"], d["f"],
+            d["bd_xy"], d["bd_u"], jnp.float32(10.0))
+        assert float(lv_fast) == pytest.approx(float(lv_loop), rel=1e-4)
+
+    def test_pallas_einsum_step_identical(self, poisson_data):
+        d = poisson_data
+        params = make_params((2, 30, 30, 30, 1), seed=8)
+        m = zeros_like_params(params)
+        v = zeros_like_params(params)
+        args = params + m + v + [
+            jnp.float32(1), jnp.float32(1e-3), d["quad_xy"], d["gx"],
+            d["gy"], d["f"], d["bd_xy"], d["bd_u"], jnp.float32(10.0)]
+        out_p = jax.jit(model.make_train_step(
+            "poisson", len(params), kernel="pallas"))(*args)
+        out_e = jax.jit(model.make_train_step(
+            "poisson", len(params), kernel="einsum"))(*args)
+        for a, b in zip(out_p, out_e):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+
+class TestInverseSpace:
+    def test_two_head_loss_runs_and_decreases(self):
+        pts, cells = mesh.unit_square(2)
+        dom = assembly.assemble(pts, cells, 3, 6)
+        ne, nt, nq = dom.gx.shape
+        f = dom.force_matrix(lambda x, y: 10.0 + 0 * x)
+        params = make_params((2, 16, 16, 2), seed=9)
+        m = zeros_like_params(params)
+        v = zeros_like_params(params)
+        rng = np.random.default_rng(5)
+        sxy = jnp.asarray(rng.uniform(0, 1, (30, 2)), jnp.float32)
+        su = jnp.zeros(30, jnp.float32)
+        bd = jnp.asarray(assembly.boundary_points_unit_square(25),
+                         jnp.float32)
+        step = jax.jit(model.make_train_step(
+            "inverse_space", len(params),
+            const_kwargs={"bx": 1.0, "by": 0.0}))
+        state = params + m + v
+        losses = []
+        for i in range(1, 61):
+            out = step(*(state + [
+                jnp.float32(i), jnp.float32(1e-3),
+                jnp.asarray(dom.quad_xy, jnp.float32),
+                jnp.asarray(dom.gx, jnp.float32),
+                jnp.asarray(dom.gy, jnp.float32),
+                jnp.asarray(dom.v, jnp.float32),
+                jnp.asarray(f, jnp.float32), bd,
+                jnp.zeros(100, jnp.float32), sxy, su,
+                jnp.float32(10.0), jnp.float32(10.0)]))
+            state = list(out[:3 * len(params)])
+            losses.append(float(out[3 * len(params)]))
+        assert losses[-1] < losses[0]
+        assert np.isfinite(losses).all()
+
+
+class TestPredict:
+    def test_predict_heads(self):
+        params = make_params((2, 8, 2), seed=11)
+        fn = model.make_predict(len(params), n_heads=2)
+        xy = jnp.zeros((7, 2), jnp.float32)
+        u, eps = fn(*params, xy)
+        assert u.shape == (7,) and eps.shape == (7,)
+
+    def test_predict_with_grad(self):
+        params = make_params((2, 8, 1), seed=12)
+        fn = model.make_predict_with_grad(len(params))
+        xy = jnp.asarray([[0.1, 0.2], [0.3, 0.4]], jnp.float32)
+        u, ux, uy = fn(*params, xy)
+        _, du = model.u_and_grad(params, xy)
+        np.testing.assert_allclose(ux, du[:, 0], rtol=1e-6)
+        np.testing.assert_allclose(uy, du[:, 1], rtol=1e-6)

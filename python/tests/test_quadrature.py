@@ -1,0 +1,105 @@
+"""Quadrature rule tests (fem_py.quadrature)."""
+
+import numpy as np
+import pytest
+
+from compile.fem_py import quadrature as quad
+
+
+def poly_integral(c):
+    """Exact integral over [-1,1] of sum_i c[i] x^i."""
+    return sum(ci * ((1 - (-1) ** (i + 1)) / (i + 1))
+               for i, ci in enumerate(c))
+
+
+class TestGaussLegendre:
+    @pytest.mark.parametrize("n", range(1, 16))
+    def test_weights_sum_to_two(self, n):
+        _, w = quad.gauss_legendre(n)
+        assert np.sum(w) == pytest.approx(2.0, abs=1e-13)
+
+    @pytest.mark.parametrize("n", range(1, 13))
+    def test_exact_to_degree_2n_minus_1(self, n):
+        x, w = quad.gauss_legendre(n)
+        rng = np.random.default_rng(n)
+        c = rng.normal(size=2 * n)  # degree 2n-1
+        vals = np.polyval(c[::-1], x)
+        assert np.dot(w, vals) == pytest.approx(poly_integral(c), rel=1e-11,
+                                                abs=1e-11)
+
+    @pytest.mark.parametrize("n", [3, 5, 8])
+    def test_not_exact_beyond(self, n):
+        x, w = quad.gauss_legendre(n)
+        # x^{2n} is not integrated exactly
+        approx = np.dot(w, x ** (2 * n))
+        exact = 2.0 / (2 * n + 1)
+        assert abs(approx - exact) > 1e-10
+
+    def test_points_sorted_symmetric(self):
+        x, _ = quad.gauss_legendre(9)
+        assert np.all(np.diff(x) > 0)
+        np.testing.assert_allclose(x, -x[::-1], atol=1e-14)
+
+
+class TestGaussLobatto:
+    @pytest.mark.parametrize("n", range(2, 14))
+    def test_weights_sum_to_two(self, n):
+        _, w = quad.gauss_lobatto(n)
+        assert np.sum(w) == pytest.approx(2.0, abs=1e-12)
+
+    @pytest.mark.parametrize("n", range(2, 12))
+    def test_includes_endpoints(self, n):
+        x, _ = quad.gauss_lobatto(n)
+        assert x[0] == pytest.approx(-1.0)
+        assert x[-1] == pytest.approx(1.0)
+
+    @pytest.mark.parametrize("n", range(2, 12))
+    def test_exact_to_degree_2n_minus_3(self, n):
+        x, w = quad.gauss_lobatto(n)
+        rng = np.random.default_rng(100 + n)
+        c = rng.normal(size=2 * n - 2)  # degree 2n-3
+        vals = np.polyval(c[::-1], x)
+        assert np.dot(w, vals) == pytest.approx(poly_integral(c), rel=1e-10,
+                                                abs=1e-10)
+
+    def test_known_5_point(self):
+        x, w = quad.gauss_lobatto(5)
+        np.testing.assert_allclose(
+            x, [-1.0, -np.sqrt(3 / 7), 0.0, np.sqrt(3 / 7), 1.0],
+            atol=1e-13)
+        np.testing.assert_allclose(
+            w, [0.1, 49 / 90, 32 / 45, 49 / 90, 0.1], atol=1e-13)
+
+
+class TestTensorRule:
+    def test_ordering_contract(self):
+        # q = i*n + j with xi from index i, eta from index j
+        x, _ = quad.gauss_legendre(3)
+        xi, eta, _ = quad.tensor_rule_2d(3)
+        for i in range(3):
+            for j in range(3):
+                q = i * 3 + j
+                assert xi[q] == pytest.approx(x[i])
+                assert eta[q] == pytest.approx(x[j])
+
+    @pytest.mark.parametrize("n", [2, 4, 7])
+    def test_integrates_monomials(self, n):
+        xi, eta, w = quad.tensor_rule_2d(n)
+        for p in range(0, 2 * n - 1, 2):
+            for q in range(0, 2 * n - 1, 2):
+                got = np.dot(w, xi**p * eta**q)
+                exact = (2.0 / (p + 1)) * (2.0 / (q + 1))
+                assert got == pytest.approx(exact, rel=1e-11)
+
+    def test_total_weight_is_area(self):
+        _, _, w = quad.tensor_rule_2d(6)
+        assert np.sum(w) == pytest.approx(4.0)
+
+    def test_lobatto_kind(self):
+        xi, eta, w = quad.tensor_rule_2d(4, "gauss-lobatto")
+        assert xi.min() == pytest.approx(-1.0)
+        assert np.sum(w) == pytest.approx(4.0)
+
+    def test_unknown_kind_raises(self):
+        with pytest.raises(ValueError):
+            quad.rule_1d(4, "monte-carlo")

@@ -1,0 +1,98 @@
+"""Bilinear transformation tests (fem_py.transforms)."""
+
+import numpy as np
+import pytest
+
+from compile.fem_py.transforms import BilinearMap
+
+UNIT = np.array([[0.0, 0.0], [1.0, 0.0], [1.0, 1.0], [0.0, 1.0]])
+SKEWED = np.array([[0.0, 0.0], [2.0, 0.3], [1.7, 1.9], [-0.2, 1.2]])
+
+
+class TestAffineCase:
+    def test_corners(self):
+        bm = BilinearMap(UNIT)
+        ref = np.array([[-1, -1], [1, -1], [1, 1], [-1, 1]], dtype=float)
+        x, y = bm.map(ref[:, 0], ref[:, 1])
+        np.testing.assert_allclose(np.stack([x, y], 1), UNIT, atol=1e-14)
+
+    def test_center(self):
+        bm = BilinearMap(UNIT)
+        x, y = bm.map(0.0, 0.0)
+        assert (x, y) == (pytest.approx(0.5), pytest.approx(0.5))
+
+    def test_constant_jacobian(self):
+        bm = BilinearMap(UNIT)
+        xi = np.linspace(-1, 1, 7)
+        _, _, _, _, det = bm.jacobian(xi, xi[::-1])
+        np.testing.assert_allclose(det, 0.25, atol=1e-15)  # (h/2)^2
+
+    def test_area_from_jacobian(self):
+        # rectangle 3 x 0.5 -> det = 3/2 * 1/4 = 0.375 everywhere
+        rect = np.array([[1, 1], [4, 1], [4, 1.5], [1, 1.5]], dtype=float)
+        bm = BilinearMap(rect)
+        _, _, _, _, det = bm.jacobian(np.array([0.3]), np.array([-0.8]))
+        assert det[0] == pytest.approx(3 * 0.5 / 4)
+
+
+class TestSkewedCase:
+    def test_corners(self):
+        bm = BilinearMap(SKEWED)
+        ref = np.array([[-1, -1], [1, -1], [1, 1], [-1, 1]], dtype=float)
+        x, y = bm.map(ref[:, 0], ref[:, 1])
+        np.testing.assert_allclose(np.stack([x, y], 1), SKEWED, atol=1e-14)
+
+    def test_jacobian_varies(self):
+        bm = BilinearMap(SKEWED)
+        _, _, _, _, d1 = bm.jacobian(np.array([-0.9]), np.array([-0.9]))
+        _, _, _, _, d2 = bm.jacobian(np.array([0.9]), np.array([0.9]))
+        assert abs(d1[0] - d2[0]) > 1e-3  # genuinely non-constant
+
+    def test_jacobian_finite_difference(self):
+        bm = BilinearMap(SKEWED)
+        h = 1e-7
+        xi, eta = np.array([0.37]), np.array([-0.21])
+        j11, j12, j21, j22, _ = bm.jacobian(xi, eta)
+        xp, yp = bm.map(xi + h, eta)
+        xm, ym = bm.map(xi - h, eta)
+        assert j11[0] == pytest.approx((xp - xm)[0] / (2 * h), rel=1e-6)
+        assert j21[0] == pytest.approx((yp - ym)[0] / (2 * h), rel=1e-6)
+        xp, yp = bm.map(xi, eta + h)
+        xm, ym = bm.map(xi, eta - h)
+        assert j12[0] == pytest.approx((xp - xm)[0] / (2 * h), rel=1e-6)
+        assert j22[0] == pytest.approx((yp - ym)[0] / (2 * h), rel=1e-6)
+
+    def test_inverse_roundtrip(self):
+        bm = BilinearMap(SKEWED)
+        rng = np.random.default_rng(3)
+        xi = rng.uniform(-0.95, 0.95, 50)
+        eta = rng.uniform(-0.95, 0.95, 50)
+        x, y = bm.map(xi, eta)
+        xi2, eta2 = bm.inverse_map(x, y)
+        np.testing.assert_allclose(xi2, xi, atol=1e-10)
+        np.testing.assert_allclose(eta2, eta, atol=1e-10)
+
+    def test_grad_transform_chain_rule(self):
+        """For u(x,y) = x^2 + 3xy, the transformed reference gradient must
+        reproduce the analytic actual gradient at mapped points."""
+        bm = BilinearMap(SKEWED)
+        xi = np.linspace(-0.8, 0.8, 9)
+        eta = np.linspace(0.8, -0.8, 9)
+        h = 1e-7
+
+        def u_of_ref(a, b):
+            x, y = bm.map(a, b)
+            return x * x + 3 * x * y
+
+        dxi = (u_of_ref(xi + h, eta) - u_of_ref(xi - h, eta)) / (2 * h)
+        deta = (u_of_ref(xi, eta + h) - u_of_ref(xi, eta - h)) / (2 * h)
+        gx, gy = bm.grad_to_actual(dxi, deta, xi, eta)
+        x, y = bm.map(xi, eta)
+        np.testing.assert_allclose(gx, 2 * x + 3 * y, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(gy, 3 * x, rtol=1e-5, atol=1e-5)
+
+
+class TestValidation:
+    def test_bad_shape_raises(self):
+        with pytest.raises(ValueError):
+            BilinearMap(np.zeros((3, 2)))

@@ -1,0 +1,66 @@
+//! Bench: the Rust-side hot paths outside the compiled step —
+//! premultiplier tensor assembly (one-off per run, but dominates startup
+//! for 14k-element meshes) and host<->literal conversion.
+//! Run: cargo bench --bench assembly_hotpath
+
+use std::time::Instant;
+
+use fastvpinns::fem::assembly;
+use fastvpinns::fem::quadrature::QuadKind;
+use fastvpinns::mesh::generators;
+use fastvpinns::runtime::tensor::TensorData;
+use fastvpinns::util::stats;
+
+fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    stats::median(&samples)
+}
+
+fn main() {
+    println!("== assembly (nt=4, nq=5 per direction) ==");
+    for (label, mesh) in [
+        ("square 20x20 (400 cells)",
+         generators::unit_square(20)),
+        ("skewed 20x20 (400 cells)",
+         generators::skewed_square(20, 0.2)),
+        ("disk 1024", generators::disk_1024()),
+        ("gear 1760 (CI)", generators::gear_ci()),
+        ("gear 14080 (paper)", generators::gear_paper()),
+    ] {
+        let reps = if mesh.n_cells() > 5000 { 3 } else { 10 };
+        let ms = time_median(reps, || {
+            let d = assembly::assemble(&mesh, 4, 5,
+                                       QuadKind::GaussLegendre);
+            std::hint::black_box(d.gx.len());
+        });
+        let cells = mesh.n_cells();
+        println!("  {label:<28} {ms:>9.2} ms  ({:.1} us/cell)",
+                 ms * 1e3 / cells as f64);
+    }
+
+    println!("== force matrix (gear CI, nt=4, nq=5) ==");
+    let mesh = generators::gear_ci();
+    let d = assembly::assemble(&mesh, 4, 5, QuadKind::GaussLegendre);
+    let ms = time_median(10, || {
+        let f = d.force_matrix(|x, _| 50.0 * x.sin() + x.cos());
+        std::hint::black_box(f.len());
+    });
+    println!("  force_matrix                  {ms:>9.2} ms");
+
+    println!("== host->literal conversion (gear CI gx tensor) ==");
+    let gx = d.gx_f32();
+    let shape = vec![d.ne, d.nt, d.nq];
+    let ms = time_median(10, || {
+        let t = TensorData::new(shape.clone(), gx.clone()).unwrap();
+        let lit = t.to_literal().unwrap();
+        std::hint::black_box(lit.size_bytes());
+    });
+    let mb = (gx.len() * 4) as f64 / 1e6;
+    println!("  {:.1} MB tensor -> literal     {ms:>9.2} ms ({:.0} MB/s)",
+             mb, mb / (ms / 1e3));
+}

@@ -1,0 +1,15 @@
+//! Bench harness for paper fig02 (criterion is unavailable offline —
+//! this is a plain main() reporting the paper's median-per-epoch
+//! protocol via the experiments::fig02 driver).
+//! Run: cargo bench --bench fig02_hpvpinn_scaling
+
+fn main() {
+    let args = fastvpinns::util::cli::Args::parse(
+        std::env::args().skip(1).filter(|a| a != "--bench"),
+    )
+    .expect("args");
+    if let Err(e) = fastvpinns::experiments::run("fig02", &args) {
+        eprintln!("bench fig02 failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,15 @@
+//! Bench harness for paper table1 (criterion is unavailable offline —
+//! this is a plain main() reporting the paper's median-per-epoch
+//! protocol via the experiments::table1 driver).
+//! Run: cargo bench --bench table1_fem_vs_predict
+
+fn main() {
+    let args = fastvpinns::util::cli::Args::parse(
+        std::env::args().skip(1).filter(|a| a != "--bench"),
+    )
+    .expect("args");
+    if let Err(e) = fastvpinns::experiments::run("table1", &args) {
+        eprintln!("bench table1 failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,256 @@
+//! Scalar forward-mode automatic differentiation to second order.
+//!
+//! Used to manufacture forcing terms `f = -eps*lap(u) + b.grad(u)` from
+//! exact solutions without hand-derived calculus (problems.rs): a
+//! `Dual2` carries (value, d/dt, d2/dt2) along a 1D probe direction, so
+//! the 2D Laplacian is two axis probes.
+
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+/// Second-order dual number: value, first and second derivative with
+/// respect to a single scalar parameter.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Dual2 {
+    pub v: f64,
+    pub d1: f64,
+    pub d2: f64,
+}
+
+impl Dual2 {
+    /// The active variable: value x, dx/dx = 1.
+    pub fn var(x: f64) -> Dual2 {
+        Dual2 { v: x, d1: 1.0, d2: 0.0 }
+    }
+
+    /// A constant.
+    pub fn con(c: f64) -> Dual2 {
+        Dual2 { v: c, d1: 0.0, d2: 0.0 }
+    }
+
+    pub fn sin(self) -> Dual2 {
+        let (s, c) = (self.v.sin(), self.v.cos());
+        Dual2 {
+            v: s,
+            d1: c * self.d1,
+            d2: c * self.d2 - s * self.d1 * self.d1,
+        }
+    }
+
+    pub fn cos(self) -> Dual2 {
+        let (s, c) = (self.v.sin(), self.v.cos());
+        Dual2 {
+            v: c,
+            d1: -s * self.d1,
+            d2: -s * self.d2 - c * self.d1 * self.d1,
+        }
+    }
+
+    pub fn exp(self) -> Dual2 {
+        let e = self.v.exp();
+        Dual2 {
+            v: e,
+            d1: e * self.d1,
+            d2: e * (self.d2 + self.d1 * self.d1),
+        }
+    }
+
+    pub fn tanh(self) -> Dual2 {
+        let t = self.v.tanh();
+        let sech2 = 1.0 - t * t;
+        Dual2 {
+            v: t,
+            d1: sech2 * self.d1,
+            d2: sech2 * self.d2 - 2.0 * t * sech2 * self.d1 * self.d1,
+        }
+    }
+
+    pub fn powi(self, n: i32) -> Dual2 {
+        let vp = self.v.powi(n - 2);
+        let n_ = n as f64;
+        Dual2 {
+            v: vp * self.v * self.v,
+            d1: n_ * vp * self.v * self.d1,
+            d2: n_ * vp * self.v * self.d2
+                + n_ * (n_ - 1.0) * vp * self.d1 * self.d1,
+        }
+    }
+
+    pub fn sqrt(self) -> Dual2 {
+        let s = self.v.sqrt();
+        Dual2 {
+            v: s,
+            d1: 0.5 / s * self.d1,
+            d2: 0.5 / s * self.d2 - 0.25 / (s * self.v) * self.d1 * self.d1,
+        }
+    }
+}
+
+impl Add for Dual2 {
+    type Output = Dual2;
+    fn add(self, o: Dual2) -> Dual2 {
+        Dual2 { v: self.v + o.v, d1: self.d1 + o.d1, d2: self.d2 + o.d2 }
+    }
+}
+
+impl Sub for Dual2 {
+    type Output = Dual2;
+    fn sub(self, o: Dual2) -> Dual2 {
+        Dual2 { v: self.v - o.v, d1: self.d1 - o.d1, d2: self.d2 - o.d2 }
+    }
+}
+
+impl Mul for Dual2 {
+    type Output = Dual2;
+    fn mul(self, o: Dual2) -> Dual2 {
+        Dual2 {
+            v: self.v * o.v,
+            d1: self.d1 * o.v + self.v * o.d1,
+            d2: self.d2 * o.v + 2.0 * self.d1 * o.d1 + self.v * o.d2,
+        }
+    }
+}
+
+impl Div for Dual2 {
+    type Output = Dual2;
+    fn div(self, o: Dual2) -> Dual2 {
+        let w = self.v / o.v;
+        let d1 = (self.d1 - w * o.d1) / o.v;
+        let d2 = (self.d2 - 2.0 * d1 * o.d1 - w * o.d2) / o.v;
+        Dual2 { v: w, d1, d2 }
+    }
+}
+
+impl Neg for Dual2 {
+    type Output = Dual2;
+    fn neg(self) -> Dual2 {
+        Dual2 { v: -self.v, d1: -self.d1, d2: -self.d2 }
+    }
+}
+
+impl Mul<f64> for Dual2 {
+    type Output = Dual2;
+    fn mul(self, s: f64) -> Dual2 {
+        Dual2 { v: self.v * s, d1: self.d1 * s, d2: self.d2 * s }
+    }
+}
+
+/// Evaluate (u, du/dx, du/dy, lap u) of a bivariate scalar function given
+/// as a Dual2 closure, probing each axis.
+pub fn probe_2d(
+    u: impl Fn(Dual2, Dual2) -> Dual2,
+    x: f64,
+    y: f64,
+) -> Probe2d {
+    let ux = u(Dual2::var(x), Dual2::con(y));
+    let uy = u(Dual2::con(x), Dual2::var(y));
+    Probe2d {
+        u: ux.v,
+        dx: ux.d1,
+        dy: uy.d1,
+        lap: ux.d2 + uy.d2,
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Probe2d {
+    pub u: f64,
+    pub dx: f64,
+    pub dy: f64,
+    pub lap: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn polynomial_derivatives() {
+        // f(x) = x^3 - 2x: f' = 3x^2-2, f'' = 6x
+        let x = Dual2::var(1.7);
+        let f = x.powi(3) - x * 2.0;
+        assert!(close(f.v, 1.7f64.powi(3) - 3.4, 1e-14));
+        assert!(close(f.d1, 3.0 * 1.7 * 1.7 - 2.0, 1e-14));
+        assert!(close(f.d2, 6.0 * 1.7, 1e-14));
+    }
+
+    #[test]
+    fn trig_derivatives() {
+        let x = Dual2::var(0.8);
+        let f = x.sin();
+        assert!(close(f.d1, 0.8f64.cos(), 1e-14));
+        assert!(close(f.d2, -0.8f64.sin(), 1e-14));
+        let g = x.cos();
+        assert!(close(g.d2, -0.8f64.cos(), 1e-14));
+    }
+
+    #[test]
+    fn chain_rule_second_order() {
+        // f = sin(x^2): f'' = 2cos(x^2) - 4x^2 sin(x^2)
+        let xv = 0.6;
+        let f = (Dual2::var(xv) * Dual2::var(xv)).sin();
+        let want = 2.0 * (xv * xv).cos() - 4.0 * xv * xv * (xv * xv).sin();
+        assert!(close(f.d2, want, 1e-13));
+    }
+
+    #[test]
+    fn exp_tanh() {
+        let xv = -0.4;
+        let f = Dual2::var(xv).exp();
+        assert!(close(f.d2, xv.exp(), 1e-14));
+        let t = Dual2::var(xv).tanh();
+        let tv = xv.tanh();
+        assert!(close(t.d1, 1.0 - tv * tv, 1e-14));
+        // (tanh)'' = -2 tanh sech^2
+        assert!(close(t.d2, -2.0 * tv * (1.0 - tv * tv), 1e-13));
+    }
+
+    #[test]
+    fn division() {
+        // f = 1/(1+x^2): check against finite differences
+        let xv = 0.9;
+        let f = Dual2::con(1.0) / (Dual2::con(1.0)
+            + Dual2::var(xv) * Dual2::var(xv));
+        let h = 1e-5;
+        let g = |x: f64| 1.0 / (1.0 + x * x);
+        let fd1 = (g(xv + h) - g(xv - h)) / (2.0 * h);
+        let fd2 = (g(xv + h) - 2.0 * g(xv) + g(xv - h)) / (h * h);
+        assert!(close(f.d1, fd1, 1e-8));
+        assert!(close(f.d2, fd2, 1e-4));
+    }
+
+    #[test]
+    fn laplacian_of_sinsin() {
+        // u = sin(ax) sin(ay): lap u = -2a^2 u
+        let a = 2.0 * std::f64::consts::PI;
+        let p = probe_2d(
+            |x, y| (x * a).sin() * (y * a).sin(),
+            0.3, 0.7,
+        );
+        let u = (a * 0.3f64).sin() * (a * 0.7f64).sin();
+        assert!(close(p.u, u, 1e-14));
+        assert!(close(p.lap, -2.0 * a * a * u, 1e-11));
+    }
+
+    #[test]
+    fn inverse_problem_exact_solution() {
+        // u = 10 sin(x) tanh(x) exp(-eps x^2), eps = 0.3 (paper SS4.7.1):
+        // cross-check the Dual2 laplacian against finite differences
+        let eps = 0.3;
+        let u = |x: Dual2, _y: Dual2| {
+            x.sin() * x.tanh() * ((x * x) * (-eps)).exp() * 10.0
+        };
+        let (xv, yv) = (0.45, -0.2);
+        let p = probe_2d(u, xv, yv);
+        let g = |x: f64| {
+            10.0 * x.sin() * x.tanh() * (-eps * x * x).exp()
+        };
+        let h = 1e-5;
+        let fd2 = (g(xv + h) - 2.0 * g(xv) + g(xv - h)) / (h * h);
+        assert!(close(p.lap, fd2, 1e-4), "{} vs {}", p.lap, fd2);
+        assert!(close(p.dy, 0.0, 1e-14));
+    }
+}

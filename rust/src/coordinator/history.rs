@@ -1,0 +1,79 @@
+//! Training event log: per-step losses and timings, dumped as CSV.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::csv::CsvWriter;
+
+#[derive(Debug, Clone, Copy)]
+pub struct HistoryRow {
+    pub step: usize,
+    pub loss: f64,
+    pub var_loss: f64,
+    pub bd_loss: f64,
+    pub extra: f64, // sensor loss or eps, experiment-dependent
+    pub step_ms: f64,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct TrainHistory {
+    pub rows: Vec<HistoryRow>,
+    /// semantic label of `extra` ("", "sensor_loss", "eps", ...)
+    pub extra_label: String,
+}
+
+impl TrainHistory {
+    pub fn push(&mut self, row: HistoryRow) {
+        self.rows.push(row);
+    }
+
+    pub fn last_loss(&self) -> Option<f64> {
+        self.rows.last().map(|r| r.loss)
+    }
+
+    pub fn to_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let extra = if self.extra_label.is_empty() {
+            "extra"
+        } else {
+            &self.extra_label
+        };
+        let mut w = CsvWriter::create(
+            path,
+            &["step", "loss", "var_loss", "bd_loss", extra, "step_ms"],
+        )?;
+        for r in &self.rows {
+            w.row_f64(&[r.step as f64, r.loss, r.var_loss, r.bd_loss,
+                        r.extra, r.step_ms])?;
+        }
+        w.flush()
+    }
+
+    /// Median step time over the recorded rows (paper protocol).
+    pub fn median_step_ms(&self) -> f64 {
+        crate::util::stats::median(
+            &self.rows.iter().map(|r| r.step_ms).collect::<Vec<_>>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut h = TrainHistory { extra_label: "eps".into(),
+                                   ..Default::default() };
+        h.push(HistoryRow { step: 1, loss: 10.0, var_loss: 9.0,
+                            bd_loss: 1.0, extra: 2.0, step_ms: 1.5 });
+        h.push(HistoryRow { step: 2, loss: 5.0, var_loss: 4.5,
+                            bd_loss: 0.5, extra: 1.5, step_ms: 1.4 });
+        let p = std::env::temp_dir().join("fastvpinns_hist.csv");
+        h.to_csv(&p).unwrap();
+        let rows = crate::util::csv::read_simple(&p).unwrap();
+        assert_eq!(rows[0][4], "eps");
+        assert_eq!(rows.len(), 3);
+        assert_eq!(h.last_loss(), Some(5.0));
+        assert!((h.median_step_ms() - 1.45).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,108 @@
+//! Error norms between predictions and references (exact or FEM).
+
+/// Standard error norms over a point set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ErrorNorms {
+    pub mae: f64,
+    pub rmse: f64,
+    pub linf: f64,
+    /// ||pred - ref||_2 / ||ref||_2
+    pub rel_l2: f64,
+    pub n: usize,
+}
+
+impl ErrorNorms {
+    pub fn compute(pred: &[f64], reference: &[f64]) -> ErrorNorms {
+        assert_eq!(pred.len(), reference.len());
+        let n = pred.len();
+        if n == 0 {
+            return ErrorNorms { mae: 0.0, rmse: 0.0, linf: 0.0,
+                                rel_l2: 0.0, n: 0 };
+        }
+        let mut abs_sum = 0.0;
+        let mut sq_sum = 0.0;
+        let mut linf: f64 = 0.0;
+        let mut ref_sq = 0.0;
+        for (p, r) in pred.iter().zip(reference) {
+            let d = p - r;
+            abs_sum += d.abs();
+            sq_sum += d * d;
+            linf = linf.max(d.abs());
+            ref_sq += r * r;
+        }
+        ErrorNorms {
+            mae: abs_sum / n as f64,
+            rmse: (sq_sum / n as f64).sqrt(),
+            linf,
+            rel_l2: if ref_sq > 0.0 {
+                (sq_sum / ref_sq).sqrt()
+            } else {
+                sq_sum.sqrt()
+            },
+            n,
+        }
+    }
+
+    pub fn compute_f32(pred: &[f32], reference: &[f64]) -> ErrorNorms {
+        let p: Vec<f64> = pred.iter().map(|&v| v as f64).collect();
+        Self::compute(&p, reference)
+    }
+}
+
+/// A uniform evaluation grid over a rectangle (the paper's 100x100 test
+/// grid for the square problems).
+pub fn eval_grid(nx: usize, ny: usize, x0: f64, y0: f64, x1: f64, y1: f64)
+    -> Vec<[f64; 2]> {
+    let mut out = Vec::with_capacity(nx * ny);
+    for iy in 0..ny {
+        for ix in 0..nx {
+            out.push([
+                x0 + (x1 - x0) * ix as f64 / (nx - 1).max(1) as f64,
+                y0 + (y1 - y0) * iy as f64 / (ny - 1).max(1) as f64,
+            ]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_error() {
+        let v = vec![1.0, 2.0, 3.0];
+        let e = ErrorNorms::compute(&v, &v);
+        assert_eq!(e.mae, 0.0);
+        assert_eq!(e.rel_l2, 0.0);
+        assert_eq!(e.linf, 0.0);
+    }
+
+    #[test]
+    fn known_values() {
+        let e = ErrorNorms::compute(&[1.0, 3.0], &[0.0, 0.0]);
+        assert_eq!(e.mae, 2.0);
+        assert!((e.rmse - (5.0f64).sqrt()).abs() < 1e-12);
+        assert_eq!(e.linf, 3.0);
+    }
+
+    #[test]
+    fn rel_l2_scale_invariance() {
+        let p = vec![1.1, 2.2, 3.3];
+        let r = vec![1.0, 2.0, 3.0];
+        let e1 = ErrorNorms::compute(&p, &r);
+        let p10: Vec<f64> = p.iter().map(|v| v * 10.0).collect();
+        let r10: Vec<f64> = r.iter().map(|v| v * 10.0).collect();
+        let e2 = ErrorNorms::compute(&p10, &r10);
+        assert!((e1.rel_l2 - e2.rel_l2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grid_corners() {
+        let g = eval_grid(3, 3, 0.0, 0.0, 1.0, 1.0);
+        assert_eq!(g.len(), 9);
+        assert_eq!(g[0], [0.0, 0.0]);
+        assert_eq!(g[8], [1.0, 1.0]);
+        assert_eq!(g[4], [0.5, 0.5]);
+    }
+}

@@ -1,0 +1,9 @@
+//! The L3 training coordinator: owns parameter/optimizer state as XLA
+//! literals, drives the AOT train-step executable, applies LR schedules,
+//! tracks timing (median per epoch — the paper's protocol), computes
+//! error norms and logs history.
+
+pub mod history;
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;

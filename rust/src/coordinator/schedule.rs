@@ -1,0 +1,55 @@
+//! Learning-rate schedules. The paper uses a constant rate for the
+//! square benchmarks and an exponential decay (x0.99 every 1000 iters)
+//! for the gear run (SS4.6.4).
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    Constant(f64),
+    /// lr0 * factor^(step / every)
+    ExpDecay { lr0: f64, factor: f64, every: usize },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f64 {
+        match *self {
+            LrSchedule::Constant(lr) => lr,
+            LrSchedule::ExpDecay { lr0, factor, every } => {
+                lr0 * factor.powi((step / every.max(1)) as i32)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant() {
+        let s = LrSchedule::Constant(1e-3);
+        assert_eq!(s.at(0), 1e-3);
+        assert_eq!(s.at(100_000), 1e-3);
+    }
+
+    #[test]
+    fn exp_decay_paper_gear() {
+        // x0.99 every 1000 iterations from 0.005
+        let s = LrSchedule::ExpDecay { lr0: 5e-3, factor: 0.99,
+                                       every: 1000 };
+        assert!((s.at(0) - 5e-3).abs() < 1e-12);
+        assert!((s.at(999) - 5e-3).abs() < 1e-12);
+        assert!((s.at(1000) - 5e-3 * 0.99).abs() < 1e-12);
+        assert!((s.at(10_000) - 5e-3 * 0.99f64.powi(10)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decay_monotone() {
+        let s = LrSchedule::ExpDecay { lr0: 1.0, factor: 0.9, every: 10 };
+        let mut last = f64::INFINITY;
+        for step in (0..100).step_by(10) {
+            let lr = s.at(step);
+            assert!(lr <= last);
+            last = lr;
+        }
+    }
+}

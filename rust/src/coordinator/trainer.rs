@@ -1,0 +1,411 @@
+//! The training coordinator: owns parameter + Adam state as XLA
+//! literals, assembles the data inputs demanded by an artifact's
+//! manifest, and drives the train-step executable.
+//!
+//! The hot loop is pure Rust + PJRT — python is not involved.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::coordinator::history::{HistoryRow, TrainHistory};
+use crate::coordinator::metrics::ErrorNorms;
+use crate::coordinator::schedule::LrSchedule;
+use crate::fem::assembly::AssembledDomain;
+use crate::mesh::QuadMesh;
+use crate::problems::Problem;
+use crate::runtime::engine::{Artifact, Engine};
+use crate::runtime::tensor::TensorData;
+use crate::util::rng::Rng;
+use crate::util::stats::StepTimer;
+
+/// Training hyper-parameters (paper defaults where applicable).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub iters: usize,
+    pub lr: LrSchedule,
+    /// Dirichlet penalty (paper's tau).
+    pub tau: f64,
+    /// Sensor penalty for inverse problems (paper's gamma).
+    pub gamma: f64,
+    pub seed: u64,
+    /// Record a history row every `log_every` steps (1 = all).
+    pub log_every: usize,
+    /// Initial guess for the trainable eps (inverse_const; paper: 2.0).
+    pub eps_init: f64,
+    /// Early stop when |eps - target| < tol (inverse_const).
+    pub eps_converge: Option<(f64, f64)>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            iters: 2000,
+            lr: LrSchedule::Constant(1e-3),
+            tau: 10.0,
+            gamma: 10.0,
+            seed: 42,
+            log_every: 1,
+            eps_init: 2.0,
+            eps_converge: None,
+        }
+    }
+}
+
+/// Where the trainer gets its mesh/problem data from.
+pub struct DataSource<'a> {
+    pub mesh: &'a QuadMesh,
+    /// Assembled premultiplier tensors (not needed for PINN artifacts).
+    pub domain: Option<&'a AssembledDomain>,
+    pub problem: &'a dyn Problem,
+    /// Sensor ground truth override (defaults to `problem.exact`).
+    pub sensor_values: Option<&'a dyn Fn(f64, f64) -> f64>,
+}
+
+/// Summary returned by `Trainer::run`.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub steps: usize,
+    pub final_loss: f64,
+    pub final_var_loss: f64,
+    pub final_bd_loss: f64,
+    pub median_step_ms: f64,
+    pub total_seconds: f64,
+    /// Final trainable eps (inverse_const only).
+    pub eps_final: Option<f64>,
+    pub converged_early: bool,
+}
+
+pub struct Trainer<'a> {
+    engine: &'a Engine,
+    art: Rc<Artifact>,
+    /// p/m/v literals in manifest order (3 * n_param_arrays).
+    state: Vec<xla::Literal>,
+    /// Data-segment inputs in manifest order (after step, lr),
+    /// uploaded to the device ONCE — they are step-invariant, and at
+    /// paper scale the premultiplier tensors are hundreds of MB.
+    data: Vec<xla::PjRtBuffer>,
+    /// Host sources of `data`. PJRT CPU uploads are asynchronous: the
+    /// source literal MUST outlive the buffer's first use, so we pin
+    /// them here (dropping them early is a use-after-free that
+    /// manifests as a `literal.size_bytes() == b->size()` CHECK crash).
+    _data_src: Vec<xla::Literal>,
+    cfg: TrainConfig,
+    pub history: TrainHistory,
+    step: usize,
+    n_params: usize,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(
+        engine: &'a Engine,
+        artifact: &str,
+        src: &DataSource<'_>,
+        cfg: &TrainConfig,
+    ) -> Result<Trainer<'a>> {
+        let art = engine.load(artifact)?;
+        ensure!(art.manifest.kind == "train",
+                "{artifact} is not a train artifact");
+        let m = &art.manifest;
+        let n_params = m.n_param_arrays();
+
+        // ---- initial state: glorot weights, zero biases and moments
+        let mut rng = Rng::new(cfg.seed);
+        let mut state: Vec<xla::Literal> = Vec::with_capacity(3 * n_params);
+        for i in 0..n_params {
+            let shape = &m.inputs[i].shape;
+            let t = match shape.len() {
+                2 => TensorData::new(shape.clone(),
+                                     rng.glorot(shape[0], shape[1]))?,
+                1 => TensorData::zeros(shape),
+                0 => TensorData::scalar(cfg.eps_init as f32),
+                _ => bail!("unexpected param rank {shape:?}"),
+            };
+            state.push(t.to_literal()?);
+        }
+        // m and v moments: zeros of the same shapes
+        for i in 0..2 * n_params {
+            let shape = &m.inputs[n_params + i].shape;
+            state.push(TensorData::zeros(shape).to_literal()?);
+        }
+
+        // ---- sanity: step/lr slots where aot.signature puts them
+        ensure!(m.inputs[3 * n_params].name == "step"
+                    && m.inputs[3 * n_params + 1].name == "lr",
+                "manifest layout unexpected: {:?}",
+                &m.inputs[3 * n_params].name);
+
+        // ---- data segment in manifest order, resident on device
+        let mut data = Vec::new();
+        let mut data_src = Vec::new();
+        for spec in &m.inputs[3 * n_params + 2..] {
+            let lit = build_data_input(m, spec, src, cfg)
+                .with_context(|| format!("building input '{}'",
+                                         spec.name))?;
+            data.push(engine.to_buffer(&lit)?);
+            data_src.push(lit);
+        }
+
+        let extra_label = match m.loss.as_str() {
+            "inverse_const" => "eps".to_string(),
+            "inverse_space" => "sensor_loss".to_string(),
+            _ => String::new(),
+        };
+
+        Ok(Trainer {
+            engine,
+            art,
+            state,
+            data,
+            _data_src: data_src,
+            cfg: cfg.clone(),
+            history: TrainHistory { rows: vec![], extra_label },
+            step: 0,
+            n_params,
+        })
+    }
+
+    pub fn manifest(&self) -> &crate::runtime::manifest::Manifest {
+        &self.art.manifest
+    }
+
+    /// Current trainable eps (inverse_const artifacts).
+    pub fn current_eps(&self) -> Result<f64> {
+        ensure!(self.art.manifest.loss == "inverse_const",
+                "no trainable eps in {}", self.art.manifest.name);
+        let lit = &self.state[self.n_params - 1];
+        Ok(lit.to_vec::<f32>()?[0] as f64)
+    }
+
+    /// Network parameter literals (excludes the eps scalar), for predict.
+    pub fn network_params(&self) -> &[xla::Literal] {
+        &self.state[..self.art.manifest.n_network_arrays()]
+    }
+
+    /// One optimizer step; returns (loss, var_loss, bd_loss, extra).
+    pub fn step_once(&mut self) -> Result<(f64, f64, f64, f64)> {
+        self.step += 1;
+        let lr = self.cfg.lr.at(self.step - 1) as f32;
+        let step_lit = xla::Literal::scalar(self.step as f32);
+        let lr_lit = xla::Literal::scalar(lr);
+
+        // upload the (small) mutable state; the big data segment is
+        // already device-resident
+        let state_bufs: Vec<xla::PjRtBuffer> = self
+            .state
+            .iter()
+            .map(|l| self.engine.to_buffer(l))
+            .collect::<Result<_>>()?;
+        let step_buf = self.engine.to_buffer(&step_lit)?;
+        let lr_buf = self.engine.to_buffer(&lr_lit)?;
+        let mut inputs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(self.art.manifest.inputs.len());
+        inputs.extend(state_bufs.iter());
+        inputs.push(&step_buf);
+        inputs.push(&lr_buf);
+        inputs.extend(self.data.iter());
+
+        let outputs = self.art.execute_buffers(&inputs)?;
+        let n_state = 3 * self.n_params;
+        let mut it = outputs.into_iter();
+        let mut new_state = Vec::with_capacity(n_state);
+        for _ in 0..n_state {
+            new_state.push(it.next().ok_or_else(|| anyhow!("short output"))?);
+        }
+        let rest: Vec<xla::Literal> = it.collect();
+        self.state = new_state;
+
+        let scalar = |l: &xla::Literal| -> Result<f64> {
+            Ok(l.to_vec::<f32>()?[0] as f64)
+        };
+        let loss = scalar(&rest[0])?;
+        let var_loss = if rest.len() > 1 { scalar(&rest[1])? } else { 0.0 };
+        let bd_loss = if rest.len() > 2 { scalar(&rest[2])? } else { 0.0 };
+        let extra = match self.art.manifest.loss.as_str() {
+            "inverse_const" => self.current_eps()?,
+            _ if rest.len() > 3 => scalar(&rest[3])?,
+            _ => 0.0,
+        };
+        Ok((loss, var_loss, bd_loss, extra))
+    }
+
+    /// Train for `cfg.iters` steps (or until eps convergence).
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let t0 = std::time::Instant::now();
+        let mut timer = StepTimer::new();
+        let mut last = (f64::NAN, f64::NAN, f64::NAN, 0.0);
+        let mut converged_early = false;
+        for i in 0..self.cfg.iters {
+            timer.start();
+            last = self.step_once()?;
+            timer.stop();
+            if !last.0.is_finite() {
+                bail!("loss diverged to {} at step {}", last.0, self.step);
+            }
+            let log = self.cfg.log_every.max(1);
+            if i % log == 0 || i + 1 == self.cfg.iters {
+                self.history.push(HistoryRow {
+                    step: self.step,
+                    loss: last.0,
+                    var_loss: last.1,
+                    bd_loss: last.2,
+                    extra: last.3,
+                    step_ms: timer.summary().median,
+                });
+            }
+            if let Some((target, tol)) = self.cfg.eps_converge {
+                if self.art.manifest.loss == "inverse_const"
+                    && (last.3 - target).abs() < tol
+                {
+                    converged_early = true;
+                    break;
+                }
+            }
+        }
+        Ok(TrainReport {
+            steps: self.step,
+            final_loss: last.0,
+            final_var_loss: last.1,
+            final_bd_loss: last.2,
+            median_step_ms: timer.summary().median,
+            total_seconds: t0.elapsed().as_secs_f64(),
+            eps_final: if self.art.manifest.loss == "inverse_const" {
+                Some(last.3)
+            } else {
+                None
+            },
+            converged_early,
+        })
+    }
+
+    /// Predict at points via the matching predict artifact, head 0.
+    pub fn predict(&self, predict_name: &str, points: &[[f64; 2]])
+        -> Result<Vec<f32>> {
+        let outs = self.engine.predict(predict_name,
+                                       self.network_params(), points)?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    /// Predict all heads (u, eps for two-head inverse networks).
+    pub fn predict_heads(&self, predict_name: &str, points: &[[f64; 2]])
+        -> Result<Vec<Vec<f32>>> {
+        self.engine.predict(predict_name, self.network_params(), points)
+    }
+
+    /// Evaluate error norms against a reference on given points.
+    pub fn evaluate(
+        &self,
+        predict_name: &str,
+        points: &[[f64; 2]],
+        reference: &[f64],
+    ) -> Result<ErrorNorms> {
+        let pred = self.predict(predict_name, points)?;
+        Ok(ErrorNorms::compute_f32(&pred, reference))
+    }
+}
+
+/// Build one data-segment literal according to its manifest name.
+fn build_data_input(
+    m: &crate::runtime::manifest::Manifest,
+    spec: &crate::runtime::manifest::IoSpec,
+    src: &DataSource<'_>,
+    cfg: &TrainConfig,
+) -> Result<xla::Literal> {
+    let domain = || -> Result<&AssembledDomain> {
+        src.domain.ok_or_else(|| anyhow!(
+            "artifact {} needs assembled tensors but DataSource.domain \
+             is None", m.name))
+    };
+    let lit = match spec.name.as_str() {
+        "quad_xy" => {
+            let d = domain()?;
+            TensorData::new(spec.shape.clone(), d.quad_xy_f32())?
+        }
+        "gx" => TensorData::new(spec.shape.clone(), domain()?.gx_f32())?,
+        "gy" => TensorData::new(spec.shape.clone(), domain()?.gy_f32())?,
+        "v" => TensorData::new(spec.shape.clone(), domain()?.v_f32())?,
+        "f" => {
+            let d = domain()?;
+            let f = d.force_matrix(|x, y| src.problem.forcing(x, y));
+            TensorData::from_f64(spec.shape.clone(), &f)?
+        }
+        "bd_xy" => {
+            let pts = src.mesh.sample_boundary(m.config.nb);
+            let flat: Vec<f32> = pts
+                .iter()
+                .flat_map(|p| [p[0] as f32, p[1] as f32])
+                .collect();
+            TensorData::new(spec.shape.clone(), flat)?
+        }
+        "bd_u" => {
+            let pts = src.mesh.sample_boundary(m.config.nb);
+            let vals: Vec<f32> = pts
+                .iter()
+                .map(|p| src.problem.boundary(p[0], p[1]) as f32)
+                .collect();
+            TensorData::new(spec.shape.clone(), vals)?
+        }
+        "sensor_xy" => {
+            let pts = src.mesh.sample_interior(m.config.ns, cfg.seed + 1);
+            let flat: Vec<f32> = pts
+                .iter()
+                .flat_map(|p| [p[0] as f32, p[1] as f32])
+                .collect();
+            TensorData::new(spec.shape.clone(), flat)?
+        }
+        "sensor_u" => {
+            let pts = src.mesh.sample_interior(m.config.ns, cfg.seed + 1);
+            let vals: Vec<f32> = pts
+                .iter()
+                .map(|p| sensor_value(src, p[0], p[1]))
+                .collect::<Result<_>>()?;
+            TensorData::new(spec.shape.clone(), vals)?
+        }
+        "coll_xy" => {
+            let pts = src.mesh.sample_interior(m.config.n_coll, cfg.seed);
+            let flat: Vec<f32> = pts
+                .iter()
+                .flat_map(|p| [p[0] as f32, p[1] as f32])
+                .collect();
+            TensorData::new(spec.shape.clone(), flat)?
+        }
+        "f_vals" => {
+            let pts = src.mesh.sample_interior(m.config.n_coll, cfg.seed);
+            let vals: Vec<f32> = pts
+                .iter()
+                .map(|p| src.problem.forcing(p[0], p[1]) as f32)
+                .collect();
+            TensorData::new(spec.shape.clone(), vals)?
+        }
+        "tau" => TensorData::scalar(cfg.tau as f32),
+        "gamma" => TensorData::scalar(cfg.gamma as f32),
+        other => bail!("unknown manifest input '{other}'"),
+    };
+    lit.to_literal()
+}
+
+fn sensor_value(src: &DataSource<'_>, x: f64, y: f64) -> Result<f32> {
+    if let Some(f) = src.sensor_values {
+        return Ok(f(x, y) as f32);
+    }
+    src.problem
+        .exact(x, y)
+        .map(|v| v as f32)
+        .ok_or_else(|| anyhow!(
+            "problem '{}' has no exact solution; provide \
+             DataSource.sensor_values", src.problem.name()))
+}
+
+#[cfg(test)]
+mod tests {
+    //! Full Trainer tests need compiled artifacts; they live in
+    //! rust/tests/integration.rs. Here: config defaults only.
+    use super::*;
+
+    #[test]
+    fn config_defaults_match_paper() {
+        let c = TrainConfig::default();
+        assert_eq!(c.eps_init, 2.0); // paper SS4.7.1 initial guess
+        assert!(matches!(c.lr, LrSchedule::Constant(lr) if lr == 1e-3));
+    }
+}

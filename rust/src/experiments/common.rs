@@ -1,0 +1,140 @@
+//! Shared experiment plumbing: standard training runs over square grids,
+//! result directories, timing measurement at the paper's protocol.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::{eval_grid, ErrorNorms};
+use crate::coordinator::trainer::{DataSource, TrainConfig, Trainer};
+use crate::fem::assembly::{self, AssembledDomain};
+use crate::fem::quadrature::QuadKind;
+use crate::mesh::{generators, QuadMesh};
+use crate::problems::Problem;
+use crate::runtime::engine::Engine;
+
+/// results/<id>/ directory (created).
+pub fn results_dir(id: &str) -> Result<PathBuf> {
+    let dir = PathBuf::from("results").join(id);
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+/// The default predict artifact for the standard 30x3 architecture.
+pub const PREDICT_STD: &str = "predict_std_16k";
+
+/// FastVPINN artifact name for a unit-square Poisson config.
+pub fn fv_name(ne: usize, nt1d: usize, nq1d: usize) -> String {
+    format!("fv_poisson_ne{ne}_nt{nt1d}_nq{nq1d}")
+}
+
+pub fn hp_name(ne: usize, nt1d: usize, nq1d: usize) -> String {
+    format!("hp_poisson_ne{ne}_nt{nt1d}_nq{nq1d}")
+}
+
+/// Build the unit-square mesh + assembled tensors for an artifact shape.
+/// `ne` must be a perfect square (paper uses k x k grids).
+pub fn square_domain(ne: usize, nt1d: usize, nq1d: usize)
+    -> (QuadMesh, AssembledDomain) {
+    let k = (ne as f64).sqrt().round() as usize;
+    assert_eq!(k * k, ne, "ne={ne} is not a k x k grid");
+    let mesh = generators::unit_square(k);
+    let dom = assembly::assemble(&mesh, nt1d, nq1d, QuadKind::GaussLegendre);
+    (mesh, dom)
+}
+
+/// Train a unit-square artifact on `problem`; returns (trainer report,
+/// error norms on the paper's 100x100 grid).
+pub struct SquareRun {
+    pub report: crate::coordinator::trainer::TrainReport,
+    pub errors: ErrorNorms,
+    pub history: crate::coordinator::history::TrainHistory,
+}
+
+pub fn run_square(
+    engine: &Engine,
+    artifact: &str,
+    ne: usize,
+    nt1d: usize,
+    nq1d: usize,
+    problem: &dyn Problem,
+    cfg: &TrainConfig,
+) -> Result<SquareRun> {
+    let (mesh, dom) = square_domain(ne, nt1d, nq1d);
+    let src = DataSource {
+        mesh: &mesh,
+        domain: Some(&dom),
+        problem,
+        sensor_values: None,
+    };
+    let mut trainer = Trainer::new(engine, artifact, &src, cfg)?;
+    let report = trainer.run()?;
+    let grid = eval_grid(100, 100, 0.0, 0.0, 1.0, 1.0);
+    let exact: Vec<f64> = grid
+        .iter()
+        .map(|p| problem.exact(p[0], p[1]).unwrap_or(0.0))
+        .collect();
+    let errors = trainer.evaluate(PREDICT_STD, &grid, &exact)?;
+    Ok(SquareRun { report, errors, history: trainer.history.clone() })
+}
+
+/// Median time per training step measured over `iters` steps after
+/// `warmup` steps — the paper's Fig. 2/10/16 protocol.
+pub fn median_step_ms(
+    engine: &Engine,
+    artifact: &str,
+    problem: &dyn Problem,
+    iters: usize,
+    warmup: usize,
+) -> Result<f64> {
+    let art = engine.load(artifact)?;
+    let c = &art.manifest.config;
+    let (mesh, dom) = square_domain(c.ne, c.nt1d, c.nq1d);
+    let src = DataSource {
+        mesh: &mesh,
+        domain: Some(&dom),
+        problem,
+        sensor_values: None,
+    };
+    let cfg = TrainConfig { iters: 1, ..TrainConfig::default() };
+    let mut t = Trainer::new(engine, artifact, &src, &cfg)?;
+    for _ in 0..warmup {
+        t.step_once()?;
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        t.step_once()?;
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(crate::util::stats::median(&samples))
+}
+
+/// PINN timing: same protocol, collocation artifact.
+pub fn median_step_ms_pinn(
+    engine: &Engine,
+    artifact: &str,
+    problem: &dyn Problem,
+    iters: usize,
+    warmup: usize,
+) -> Result<f64> {
+    let mesh = generators::unit_square(1);
+    let src = DataSource {
+        mesh: &mesh,
+        domain: None,
+        problem,
+        sensor_values: None,
+    };
+    let cfg = TrainConfig { iters: 1, ..TrainConfig::default() };
+    let mut t = Trainer::new(engine, artifact, &src, &cfg)?;
+    for _ in 0..warmup {
+        t.step_once()?;
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        t.step_once()?;
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(crate::util::stats::median(&samples))
+}

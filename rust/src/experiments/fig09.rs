@@ -1,0 +1,56 @@
+//! Fig. 9 (+ App. Figs. 17/18): effect of h- and p-refinement on
+//! FastVPINNs accuracy for the omega = 4*pi Poisson problem.
+
+use anyhow::Result;
+
+use super::common;
+use crate::coordinator::trainer::TrainConfig;
+use crate::problems::PoissonSin;
+use crate::runtime::engine::Engine;
+use crate::util::cli::Args;
+use crate::util::csv::CsvWriter;
+
+pub fn run(args: &Args) -> Result<()> {
+    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let iters = args.usize_or("iters", 5000)?;
+    let dir = common::results_dir("fig09")?;
+    let problem = PoissonSin::new(4.0 * std::f64::consts::PI);
+    let cfg = TrainConfig { iters, log_every: 100.max(iters / 100),
+                            ..TrainConfig::default() };
+
+    // ---- h-refinement: 1 -> 16 -> 64 elements (nt=5, nq=20 per elem)
+    println!("fig09 h-refinement (omega=4pi):");
+    let mut w = CsvWriter::create(
+        dir.join("h_refinement.csv"),
+        &["ne", "mae", "rmse", "rel_l2", "linf", "final_loss"],
+    )?;
+    for ne in [1usize, 16, 64] {
+        let r = common::run_square(&engine, &common::fv_name(ne, 5, 20),
+                                   ne, 5, 20, &problem, &cfg)?;
+        println!("  ne={ne:<4} MAE {:.3e}  rel-L2 {:.3e}", r.errors.mae,
+                 r.errors.rel_l2);
+        w.row_f64(&[ne as f64, r.errors.mae, r.errors.rmse,
+                    r.errors.rel_l2, r.errors.linf,
+                    r.report.final_loss])?;
+    }
+    w.flush()?;
+
+    // ---- p-refinement: 5^2 -> 20^2 test functions on one element
+    println!("fig09 p-refinement (1 element, omega=4pi):");
+    let mut w = CsvWriter::create(
+        dir.join("p_refinement.csv"),
+        &["nt1d", "mae", "rmse", "rel_l2", "linf", "final_loss"],
+    )?;
+    for nt in [5usize, 10, 15, 20] {
+        let r = common::run_square(&engine, &common::fv_name(1, nt, 30),
+                                   1, nt, 30, &problem, &cfg)?;
+        println!("  nt={nt:<3} MAE {:.3e}  rel-L2 {:.3e}", r.errors.mae,
+                 r.errors.rel_l2);
+        w.row_f64(&[nt as f64, r.errors.mae, r.errors.rmse,
+                    r.errors.rel_l2, r.errors.linf,
+                    r.report.final_loss])?;
+    }
+    w.flush()?;
+    println!("fig09 -> {}", dir.display());
+    Ok(())
+}

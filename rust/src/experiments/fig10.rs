@@ -1,0 +1,69 @@
+//! Fig. 10: the headline efficiency figure.
+//!
+//! (a) median time/epoch vs residual points: FastVPINNs vs PINNs vs
+//!     loop-based hp-VPINNs (the 100x claim);
+//! (b) median time/epoch vs element count at constant total quadrature
+//!     points (FastVPINNs ~flat, hp-VPINNs linear).
+
+use anyhow::Result;
+
+use super::common;
+use crate::problems::PoissonSin;
+use crate::runtime::engine::Engine;
+use crate::util::cli::Args;
+use crate::util::csv::CsvWriter;
+
+pub fn run(args: &Args) -> Result<()> {
+    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let iters = args.usize_or("timing-iters", 30)?;
+    let warmup = args.usize_or("warmup", 3)?;
+    let full = args.has("paper-scale");
+    let dir = common::results_dir("fig10")?;
+    let problem = PoissonSin::new(2.0 * std::f64::consts::PI);
+
+    // ---- (a) residual-point sweep: 25 quad/elem, 25 test fns
+    println!("fig10a: median step time vs residual points");
+    let mut w = CsvWriter::create(
+        dir.join("fig10a_residual_points.csv"),
+        &["residual_points", "fastvpinn_ms", "pinn_ms", "hp_vpinn_ms"],
+    )?;
+    let ne_sweep: &[usize] = if full {
+        &[16, 64, 256, 400, 1024]
+    } else {
+        &[16, 64, 256, 400]
+    };
+    for &ne in ne_sweep {
+        let pts = ne * 25;
+        let fv = common::median_step_ms(
+            &engine, &common::fv_name(ne, 5, 5), &problem, iters, warmup)?;
+        let pinn = common::median_step_ms_pinn(
+            &engine, &format!("pinn_poisson_nc{pts}"), &problem, iters,
+            warmup)?;
+        let hp = common::median_step_ms(
+            &engine, &common::hp_name(ne, 5, 5), &problem, iters, warmup)?;
+        println!("  pts={pts:<7} fv {fv:>8.3} ms | pinn {pinn:>8.3} ms | \
+                  hp {hp:>9.3} ms | speedup hp/fv {:.1}x", hp / fv);
+        w.row_f64(&[pts as f64, fv, pinn, hp])?;
+    }
+    w.flush()?;
+
+    // ---- (b) element sweep at constant 6400 total quad points
+    println!("fig10b: median step time vs elements (6400 quad total)");
+    let mut w = CsvWriter::create(
+        dir.join("fig10b_elements.csv"),
+        &["ne", "nq1d", "fastvpinn_ms", "hp_vpinn_ms", "speedup"],
+    )?;
+    for (ne, nq) in [(1usize, 80usize), (4, 40), (16, 20), (64, 10),
+                     (256, 5), (400, 4)] {
+        let fv = common::median_step_ms(
+            &engine, &common::fv_name(ne, 5, nq), &problem, iters, warmup)?;
+        let hp = common::median_step_ms(
+            &engine, &common::hp_name(ne, 5, nq), &problem, iters, warmup)?;
+        println!("  ne={ne:<5} fv {fv:>8.3} ms | hp {hp:>9.3} ms | \
+                  {:.1}x", hp / fv);
+        w.row_f64(&[ne as f64, nq as f64, fv, hp, hp / fv])?;
+    }
+    w.flush()?;
+    println!("fig10 -> {}", dir.display());
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! Fig. 11: high-frequency problems. (a) MAE after a fixed budget and
+//! (b) wall-clock time to reach MAE 5e-2 — FastVPINNs (with matched
+//! h-refinement, 6400 total quad points) vs PINNs (6400 collocation).
+
+use anyhow::Result;
+
+use super::common;
+use crate::coordinator::metrics::eval_grid;
+use crate::coordinator::trainer::{DataSource, TrainConfig, Trainer};
+use crate::mesh::generators;
+use crate::problems::{PoissonSin, Problem};
+use crate::runtime::engine::Engine;
+use crate::util::cli::Args;
+use crate::util::csv::CsvWriter;
+
+const MAE_TARGET: f64 = 5e-2;
+
+struct Outcome {
+    mae: f64,
+    secs_to_target: Option<f64>,
+    iters_run: usize,
+}
+
+fn train_until(
+    engine: &Engine,
+    trainer: &mut Trainer<'_>,
+    exact: &[f64],
+    grid: &[[f64; 2]],
+    max_iters: usize,
+    chunk: usize,
+) -> Result<Outcome> {
+    let _ = engine;
+    let t0 = std::time::Instant::now();
+    let mut secs_to_target = None;
+    let mut iters = 0;
+    let mut mae = f64::INFINITY;
+    while iters < max_iters {
+        for _ in 0..chunk.min(max_iters - iters) {
+            trainer.step_once()?;
+            iters += 1;
+        }
+        let err = trainer.evaluate(common::PREDICT_STD, grid, exact)?;
+        mae = err.mae;
+        if secs_to_target.is_none() && mae <= MAE_TARGET {
+            secs_to_target = Some(t0.elapsed().as_secs_f64());
+            break;
+        }
+    }
+    Ok(Outcome { mae, secs_to_target, iters_run: iters })
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let max_iters = args.usize_or("iters", 8000)?;
+    let chunk = args.usize_or("chunk", 250)?;
+    let dir = common::results_dir("fig11")?;
+    let grid = eval_grid(100, 100, 0.0, 0.0, 1.0, 1.0);
+
+    let mut w = CsvWriter::create(
+        dir.join("frequency_sweep.csv"),
+        &["omega_over_pi", "method", "mae", "secs_to_mae_5e-2",
+          "iters_run"],
+    )?;
+
+    // (omega multiplier, fv config matched to frequency)
+    for (k, ne, nq) in [(2usize, 4usize, 40usize), (4, 16, 20),
+                        (8, 64, 10)] {
+        let omega = k as f64 * std::f64::consts::PI;
+        let problem = PoissonSin::new(omega);
+        let exact: Vec<f64> = grid
+            .iter()
+            .map(|p| problem.exact(p[0], p[1]).unwrap())
+            .collect();
+        let cfg = TrainConfig { iters: 1, ..TrainConfig::default() };
+
+        // FastVPINN with h-refinement matched to the frequency
+        let (mesh, dom) = common::square_domain(ne, 5, nq);
+        let src = DataSource { mesh: &mesh, domain: Some(&dom),
+                               problem: &problem, sensor_values: None };
+        let mut fv = Trainer::new(&engine, &common::fv_name(ne, 5, nq),
+                                  &src, &cfg)?;
+        let fv_out = train_until(&engine, &mut fv, &exact, &grid,
+                                 max_iters, chunk)?;
+        println!(
+            "omega={k}pi fastvpinn: MAE {:.3e} ({} iters){}",
+            fv_out.mae, fv_out.iters_run,
+            fv_out.secs_to_target.map(|s| format!(", target in {s:.1}s"))
+                .unwrap_or_default()
+        );
+        w.row(&[k.to_string(), "fastvpinn".into(),
+                format!("{:.6e}", fv_out.mae),
+                fv_out.secs_to_target.map(|s| format!("{s:.3}"))
+                    .unwrap_or_else(|| "nan".into()),
+                fv_out.iters_run.to_string()])?;
+
+        // PINN with the same residual budget
+        let mesh1 = generators::unit_square(1);
+        let srcp = DataSource { mesh: &mesh1, domain: None,
+                                problem: &problem, sensor_values: None };
+        let mut pinn = Trainer::new(&engine, "pinn_poisson_nc6400", &srcp,
+                                    &cfg)?;
+        let pinn_out = train_until(&engine, &mut pinn, &exact, &grid,
+                                   max_iters, chunk)?;
+        println!(
+            "omega={k}pi pinn:      MAE {:.3e} ({} iters){}",
+            pinn_out.mae, pinn_out.iters_run,
+            pinn_out.secs_to_target.map(|s| format!(", target in {s:.1}s"))
+                .unwrap_or_default()
+        );
+        w.row(&[k.to_string(), "pinn".into(),
+                format!("{:.6e}", pinn_out.mae),
+                pinn_out.secs_to_target.map(|s| format!("{s:.3}"))
+                    .unwrap_or_else(|| "nan".into()),
+                pinn_out.iters_run.to_string()])?;
+    }
+    w.flush()?;
+    println!("fig11 -> {}", dir.display());
+    Ok(())
+}

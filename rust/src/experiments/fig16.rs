@@ -1,0 +1,66 @@
+//! Fig. 16: hyperparameter impact on median training time per epoch —
+//! three 2D sweeps over (N_test, N_quad), (N_test, N_elem),
+//! (N_quad, N_elem).
+
+use anyhow::Result;
+
+use super::common;
+use crate::problems::PoissonSin;
+use crate::runtime::engine::Engine;
+use crate::util::cli::Args;
+use crate::util::csv::CsvWriter;
+
+pub fn run(args: &Args) -> Result<()> {
+    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let iters = args.usize_or("timing-iters", 20)?;
+    let warmup = args.usize_or("warmup", 3)?;
+    let dir = common::results_dir("fig16")?;
+    let problem = PoissonSin::new(2.0 * std::f64::consts::PI);
+
+    // (a) N_test x N_quad at N_elem = 1
+    println!("fig16a: nt x nq sweep (ne=1)");
+    let mut w = CsvWriter::create(dir.join("fig16a_nt_nq.csv"),
+                                  &["nt1d", "nq1d", "median_ms"])?;
+    for nt in [5usize, 10, 20] {
+        for nq in [10usize, 20, 40] {
+            let ms = common::median_step_ms(
+                &engine, &common::fv_name(1, nt, nq), &problem, iters,
+                warmup)?;
+            println!("  nt={nt:<3} nq={nq:<3} {ms:.3} ms");
+            w.row_f64(&[nt as f64, nq as f64, ms])?;
+        }
+    }
+    w.flush()?;
+
+    // (b) N_test x N_elem at nq1d = 10
+    println!("fig16b: nt x ne sweep (nq=10x10)");
+    let mut w = CsvWriter::create(dir.join("fig16b_nt_ne.csv"),
+                                  &["nt1d", "ne", "median_ms"])?;
+    for nt in [5usize, 10, 20] {
+        for ne in [4usize, 64, 400] {
+            let ms = common::median_step_ms(
+                &engine, &common::fv_name(ne, nt, 10), &problem, iters,
+                warmup)?;
+            println!("  nt={nt:<3} ne={ne:<4} {ms:.3} ms");
+            w.row_f64(&[nt as f64, ne as f64, ms])?;
+        }
+    }
+    w.flush()?;
+
+    // (c) N_quad x N_elem at nt1d = 10
+    println!("fig16c: nq x ne sweep (nt=10x10)");
+    let mut w = CsvWriter::create(dir.join("fig16c_nq_ne.csv"),
+                                  &["nq1d", "ne", "median_ms"])?;
+    for nq in [5usize, 10, 20] {
+        for ne in [4usize, 64, 400] {
+            let ms = common::median_step_ms(
+                &engine, &common::fv_name(ne, 10, nq), &problem, iters,
+                warmup)?;
+            println!("  nq={nq:<3} ne={ne:<4} {ms:.3} ms");
+            w.row_f64(&[nq as f64, ne as f64, ms])?;
+        }
+    }
+    w.flush()?;
+    println!("fig16 -> {}", dir.display());
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Experiment drivers: one module per table/figure of the paper
+//! (DESIGN.md SS5). Each writes CSV series under `results/<id>/` and
+//! prints the paper-comparable summary.
+
+pub mod common;
+pub mod fig02;
+pub mod fig08;
+pub mod fig09;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig14;
+pub mod fig15;
+pub mod fig16;
+pub mod table1;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+pub const ALL: &[&str] = &[
+    "fig02", "fig08", "fig09", "fig10", "fig11", "fig12", "fig14",
+    "fig15", "fig16", "table1",
+];
+
+/// Dispatch an experiment by id.
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "fig02" => fig02::run(args),
+        "fig08" => fig08::run(args),
+        "fig09" => fig09::run(args),
+        "fig10" => fig10::run(args),
+        "fig11" => fig11::run(args),
+        "fig12" => fig12::run(args),
+        "fig14" => fig14::run(args),
+        "fig15" => fig15::run(args),
+        "fig16" => fig16::run(args),
+        "table1" => table1::run(args),
+        "all" => {
+            for e in ALL {
+                println!("\n================ {e} ================");
+                run(e, args)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment '{other}' (known: {ALL:?})"),
+    }
+}

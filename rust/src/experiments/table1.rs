@@ -1,0 +1,95 @@
+//! Table 1 + Fig. 19: prediction time — classical FEM solve vs a trained
+//! network's forward pass, across DOF counts.
+
+use anyhow::Result;
+
+use super::common;
+use crate::fem_solver::{self, FemProblem};
+use crate::mesh::generators;
+use crate::runtime::engine::Engine;
+use crate::runtime::tensor::TensorData;
+use crate::util::cli::Args;
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Rng;
+
+/// Smallest predict artifact that fits `n` points in one execution.
+fn choose_predict(n: usize) -> &'static str {
+    match n {
+        0..=16384 => "predict_std_16k",
+        16385..=65536 => "predict_std_65k",
+        65537..=262144 => "predict_std_262k",
+        _ => "predict_std_1m",
+    }
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let paper = args.has("paper-scale");
+    let reps = args.usize_or("reps", 5)?;
+    let dir = common::results_dir("table1")?;
+    let om = std::f64::consts::PI;
+
+    // random (but fixed) network parameters: prediction cost does not
+    // depend on training state
+    let mut rng = Rng::new(7);
+    let shapes: [(usize, usize); 4] = [(2, 30), (30, 30), (30, 30), (30, 1)];
+    let mut params = Vec::new();
+    for (nin, nout) in shapes {
+        params.push(
+            TensorData::new(vec![nin, nout], rng.glorot(nin, nout))?
+                .to_literal()?);
+        params.push(TensorData::zeros(&[nout]).to_literal()?);
+    }
+
+    let grids: &[usize] = if paper {
+        &[170, 340, 509, 678]
+    } else {
+        &[64, 128, 256, 512]
+    };
+
+    println!("Table 1: FEM solve time vs NN prediction time");
+    println!("{:>10} {:>12} {:>12} {:>10}", "DOFs", "FEM (s)",
+             "predict (s)", "ratio");
+    let mut w = CsvWriter::create(
+        dir.join("table1.csv"),
+        &["n_dof", "fem_secs", "predict_secs", "fem_over_predict"],
+    )?;
+    for &n in grids {
+        let mesh = generators::unit_square(n);
+        let n_dof = mesh.n_points();
+
+        // --- FEM solve (assembly + CG), the paper's "prediction" cost
+        let t0 = std::time::Instant::now();
+        let _sol = fem_solver::solve(
+            &mesh,
+            &FemProblem {
+                eps: &|_, _| 1.0,
+                b: (0.0, 0.0),
+                f: &|x, y| 2.0 * om * om * (om * x).sin() * (om * y).sin(),
+                g: &|_, _| 0.0,
+            },
+            2,
+        )?;
+        let fem_secs = t0.elapsed().as_secs_f64();
+
+        // --- NN prediction at the same DOF count (median of reps)
+        let art = choose_predict(n_dof);
+        // warm up (compile + first run)
+        engine.predict(art, &params, &mesh.points[..1.min(n_dof)])?;
+        let mut samples = Vec::new();
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            let _ = engine.predict(art, &params, &mesh.points)?;
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let pred_secs = crate::util::stats::median(&samples);
+
+        println!("{n_dof:>10} {fem_secs:>12.4} {pred_secs:>12.5} \
+                  {:>9.0}x", fem_secs / pred_secs);
+        w.row_f64(&[n_dof as f64, fem_secs, pred_secs,
+                    fem_secs / pred_secs])?;
+    }
+    w.flush()?;
+    println!("table1 -> {}", dir.display());
+    Ok(())
+}

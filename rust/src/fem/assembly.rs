@@ -1,0 +1,336 @@
+//! FastVPINNs premultiplier tensor assembly (paper SS4.2-4.4) — the Rust
+//! runtime twin of python fem_py.assembly (cross-validated via
+//! `repro dump-tensors` + pytest).
+//!
+//! For every element e, test function j, quadrature point q:
+//!
+//! ```text
+//! G_x[e,j,q] = w_q * |J_e(q)| * dv_j/dx (x_{e,q})
+//! G_y[e,j,q] = w_q * |J_e(q)| * dv_j/dy (x_{e,q})
+//! V  [e,j,q] = w_q * |J_e(q)| *  v_j    (xi_q, eta_q)
+//! F  [e,j]   = sum_q V[e,j,q] * f(x_{e,q})
+//! ```
+//!
+//! The assembly is embarrassingly parallel over elements and runs on all
+//! cores (std::thread scoped chunks — rayon is unavailable offline).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::fem::bilinear::BilinearMap;
+use crate::fem::jacobi;
+use crate::fem::quadrature::{self, QuadKind};
+use crate::mesh::QuadMesh;
+
+/// Everything a FastVPINNs train step needs, in f64 (cast to f32 at the
+/// runtime boundary).
+#[derive(Debug, Clone)]
+pub struct AssembledDomain {
+    pub ne: usize,
+    pub nt: usize,
+    pub nq: usize,
+    pub nt1d: usize,
+    pub nq1d: usize,
+    /// (ne*nq, 2) row-major, element-major point order.
+    pub quad_xy: Vec<f64>,
+    /// (ne, nt, nq) row-major.
+    pub gx: Vec<f64>,
+    pub gy: Vec<f64>,
+    pub v: Vec<f64>,
+    /// (ne, nq) |J| at each quadrature point.
+    pub jdet: Vec<f64>,
+    /// reference rule (xi, eta, w), each of length nq.
+    pub xi: Vec<f64>,
+    pub eta: Vec<f64>,
+    pub w: Vec<f64>,
+}
+
+impl AssembledDomain {
+    /// F[e,j] = sum_q V[e,j,q] * f(x_q, y_q).
+    pub fn force_matrix(&self, f: impl Fn(f64, f64) -> f64)
+        -> Vec<f64> {
+        let (ne, nt, nq) = (self.ne, self.nt, self.nq);
+        // f at all quadrature points, element-major
+        let fq: Vec<f64> = (0..ne * nq)
+            .map(|i| f(self.quad_xy[2 * i], self.quad_xy[2 * i + 1]))
+            .collect();
+        let mut out = vec![0.0; ne * nt];
+        for e in 0..ne {
+            for j in 0..nt {
+                let base = (e * nt + j) * nq;
+                let mut acc = 0.0;
+                for q in 0..nq {
+                    acc += self.v[base + q] * fq[e * nq + q];
+                }
+                out[e * nt + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// Total integration measure sum_{e,q} w_q |J| (= mesh area).
+    pub fn total_measure(&self) -> f64 {
+        let mut acc = 0.0;
+        for e in 0..self.ne {
+            for q in 0..self.nq {
+                acc += self.w[q] * self.jdet[e * self.nq + q];
+            }
+        }
+        acc
+    }
+
+    /// Quadrature coordinates of element e (x then y per point).
+    pub fn elem_quad_xy(&self, e: usize) -> &[f64] {
+        &self.quad_xy[2 * e * self.nq..2 * (e + 1) * self.nq]
+    }
+
+    /// f32 copies for the runtime boundary.
+    pub fn quad_xy_f32(&self) -> Vec<f32> {
+        self.quad_xy.iter().map(|&v| v as f32).collect()
+    }
+
+    pub fn gx_f32(&self) -> Vec<f32> {
+        self.gx.iter().map(|&v| v as f32).collect()
+    }
+
+    pub fn gy_f32(&self) -> Vec<f32> {
+        self.gy.iter().map(|&v| v as f32).collect()
+    }
+
+    pub fn v_f32(&self) -> Vec<f32> {
+        self.v.iter().map(|&v| v as f32).collect()
+    }
+}
+
+/// Assemble the premultiplier tensors for every element of `mesh`.
+pub fn assemble(mesh: &QuadMesh, nt1d: usize, nq1d: usize, kind: QuadKind)
+    -> AssembledDomain {
+    let ne = mesh.n_cells();
+    let nt = nt1d * nt1d;
+    let nq = nq1d * nq1d;
+    let rule = quadrature::tensor_rule_2d(nq1d, kind);
+    // reference test values/gradients: (nt, nq) row-major, shared
+    let (v_ref, dxi_ref, deta_ref) =
+        jacobi::test_fn_2d(nt1d, &rule.xi, &rule.eta);
+
+    let mut quad_xy = vec![0.0; ne * nq * 2];
+    let mut gx = vec![0.0; ne * nt * nq];
+    let mut gy = vec![0.0; ne * nt * nq];
+    let mut v = vec![0.0; ne * nt * nq];
+    let mut jdet = vec![0.0; ne * nq];
+
+    let n_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(ne.max(1));
+    let next = AtomicUsize::new(0);
+
+    // Split output buffers into per-element chunks and hand them out via
+    // a work-stealing counter.
+    {
+        let quad_chunks: Vec<&mut [f64]> =
+            quad_xy.chunks_mut(nq * 2).collect();
+        let gx_chunks: Vec<&mut [f64]> = gx.chunks_mut(nt * nq).collect();
+        let gy_chunks: Vec<&mut [f64]> = gy.chunks_mut(nt * nq).collect();
+        let v_chunks: Vec<&mut [f64]> = v.chunks_mut(nt * nq).collect();
+        let jd_chunks: Vec<&mut [f64]> = jdet.chunks_mut(nq).collect();
+
+        // Wrap in mutex-free cell-per-element distribution: move chunks
+        // into options guarded by the atomic counter (each index is
+        // claimed exactly once).
+        use std::sync::Mutex;
+        let work: Vec<Mutex<Option<ElemOut>>> = quad_chunks
+            .into_iter()
+            .zip(gx_chunks)
+            .zip(gy_chunks)
+            .zip(v_chunks)
+            .zip(jd_chunks)
+            .map(|((((q, gx), gy), v), jd)| {
+                Mutex::new(Some(ElemOut { quad: q, gx, gy, v, jd }))
+            })
+            .collect();
+
+        std::thread::scope(|s| {
+            for _ in 0..n_threads {
+                s.spawn(|| loop {
+                    let e = next.fetch_add(1, Ordering::Relaxed);
+                    if e >= ne {
+                        break;
+                    }
+                    let mut slot = work[e].lock().unwrap();
+                    let out = slot.take().expect("element claimed once");
+                    assemble_element(
+                        mesh, e, nt, nq, &rule.xi, &rule.eta, &rule.w,
+                        &v_ref, &dxi_ref, &deta_ref, out,
+                    );
+                });
+            }
+        });
+    }
+
+    AssembledDomain {
+        ne, nt, nq, nt1d, nq1d,
+        quad_xy, gx, gy, v, jdet,
+        xi: rule.xi, eta: rule.eta, w: rule.w,
+    }
+}
+
+struct ElemOut<'a> {
+    quad: &'a mut [f64],
+    gx: &'a mut [f64],
+    gy: &'a mut [f64],
+    v: &'a mut [f64],
+    jd: &'a mut [f64],
+}
+
+#[allow(clippy::too_many_arguments)]
+fn assemble_element(
+    mesh: &QuadMesh, e: usize, nt: usize, nq: usize, xi: &[f64],
+    eta: &[f64], w: &[f64], v_ref: &[f64], dxi_ref: &[f64],
+    deta_ref: &[f64], out: ElemOut<'_>,
+) {
+    let bm = BilinearMap::new(&mesh.cell_vertices(e));
+    // per-point jacobian data
+    let mut inv = vec![0.0; nq * 4]; // j22/det, -j21/det, -j12/det, j11/det
+    for q in 0..nq {
+        let p = bm.map(xi[q], eta[q]);
+        out.quad[2 * q] = p[0];
+        out.quad[2 * q + 1] = p[1];
+        let j = bm.jacobian(xi[q], eta[q]);
+        let adet = j.det.abs();
+        out.jd[q] = adet;
+        inv[4 * q] = j.j22 / j.det;
+        inv[4 * q + 1] = -j.j21 / j.det;
+        inv[4 * q + 2] = -j.j12 / j.det;
+        inv[4 * q + 3] = j.j11 / j.det;
+    }
+    for j in 0..nt {
+        let row = j * nq;
+        for q in 0..nq {
+            let wj = w[q] * out.jd[q];
+            let dxi = dxi_ref[row + q];
+            let deta = deta_ref[row + q];
+            // dv/dx = ( j22*dxi - j21*deta)/det etc.
+            let dvx = inv[4 * q] * dxi + inv[4 * q + 1] * deta;
+            let dvy = inv[4 * q + 2] * dxi + inv[4 * q + 3] * deta;
+            out.gx[row + q] = wj * dvx;
+            out.gy[row + q] = wj * dvy;
+            out.v[row + q] = wj * v_ref[row + q];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::generators;
+
+    fn sinsin_grad(om: f64, x: f64, y: f64) -> (f64, f64) {
+        (om * (om * x).cos() * (om * y).sin(),
+         om * (om * x).sin() * (om * y).cos())
+    }
+
+    #[test]
+    fn shapes() {
+        let m = generators::unit_square(3);
+        let d = assemble(&m, 4, 6, QuadKind::GaussLegendre);
+        assert_eq!(d.gx.len(), 9 * 16 * 36);
+        assert_eq!(d.quad_xy.len(), 9 * 36 * 2);
+        assert_eq!(d.jdet.len(), 9 * 36);
+    }
+
+    #[test]
+    fn total_measure_is_area() {
+        let m = generators::skewed_square(4, 0.3);
+        let d = assemble(&m, 2, 8, QuadKind::GaussLegendre);
+        assert!((d.total_measure() - 1.0).abs() < 1e-10);
+        let g = generators::disk(8, 6, 0.0, 0.0, 1.0);
+        let dg = assemble(&g, 2, 6, QuadKind::GaussLegendre);
+        assert!((dg.total_measure() - g.area()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn residual_of_exact_solution_vanishes() {
+        // int (grad u . grad v - f v) -> 0 for u exact, v vanishing on
+        // element boundaries (integration by parts) — the key Galerkin
+        // identity the whole method rests on.
+        let om = 2.0 * std::f64::consts::PI;
+        let m = generators::unit_square(2);
+        let d = assemble(&m, 4, 30, QuadKind::GaussLegendre);
+        let f = d.force_matrix(|x, y| {
+            2.0 * om * om * (om * x).sin() * (om * y).sin()
+        });
+        let mut max_res: f64 = 0.0;
+        for e in 0..d.ne {
+            for j in 0..d.nt {
+                let base = (e * d.nt + j) * d.nq;
+                let mut acc = 0.0;
+                for q in 0..d.nq {
+                    let x = d.quad_xy[2 * (e * d.nq + q)];
+                    let y = d.quad_xy[2 * (e * d.nq + q) + 1];
+                    let (ux, uy) = sinsin_grad(om, x, y);
+                    acc += d.gx[base + q] * ux + d.gy[base + q] * uy;
+                }
+                max_res = max_res.max((acc - f[e * d.nt + j]).abs());
+            }
+        }
+        assert!(max_res < 1e-8, "max residual {max_res}");
+    }
+
+    #[test]
+    fn residual_vanishes_on_skewed_mesh() {
+        let om = std::f64::consts::PI;
+        let m = generators::skewed_square(3, 0.25);
+        let d = assemble(&m, 3, 40, QuadKind::GaussLegendre);
+        let f = d.force_matrix(|x, y| {
+            2.0 * om * om * (om * x).sin() * (om * y).sin()
+        });
+        let mut max_res: f64 = 0.0;
+        for e in 0..d.ne {
+            for j in 0..d.nt {
+                let base = (e * d.nt + j) * d.nq;
+                let mut acc = 0.0;
+                for q in 0..d.nq {
+                    let x = d.quad_xy[2 * (e * d.nq + q)];
+                    let y = d.quad_xy[2 * (e * d.nq + q) + 1];
+                    let (ux, uy) = sinsin_grad(om, x, y);
+                    acc += d.gx[base + q] * ux + d.gy[base + q] * uy;
+                }
+                max_res = max_res.max((acc - f[e * d.nt + j]).abs());
+            }
+        }
+        assert!(max_res < 1e-6, "max residual {max_res}");
+    }
+
+    #[test]
+    fn force_matrix_linear() {
+        let m = generators::unit_square(2);
+        let d = assemble(&m, 3, 8, QuadKind::GaussLegendre);
+        let f1 = d.force_matrix(|x, _| x);
+        let f2 = d.force_matrix(|x, _| 2.0 * x);
+        for (a, b) in f1.iter().zip(&f2) {
+            assert!((2.0 * a - b).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn lobatto_vs_legendre_agree() {
+        let m = generators::unit_square(2);
+        let d1 = assemble(&m, 3, 12, QuadKind::GaussLegendre);
+        let d2 = assemble(&m, 3, 12, QuadKind::GaussLobatto);
+        let f1 = d1.force_matrix(|x, y| (x).sin() * y);
+        let f2 = d2.force_matrix(|x, y| (x).sin() * y);
+        for (a, b) in f1.iter().zip(&f2) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        // the work-stealing parallel assembly must be bit-reproducible
+        let m = generators::skewed_square(5, 0.2);
+        let d1 = assemble(&m, 3, 5, QuadKind::GaussLegendre);
+        let d2 = assemble(&m, 3, 5, QuadKind::GaussLegendre);
+        assert_eq!(d1.gx, d2.gx);
+        assert_eq!(d1.quad_xy, d2.quad_xy);
+    }
+}

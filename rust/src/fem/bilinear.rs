@@ -1,0 +1,231 @@
+//! Bilinear reference->actual element transformation (paper Appendix A.1).
+//!
+//! Mirrors python `fem_py.transforms.BilinearMap` — the Jacobian is
+//! evaluated *pointwise*, which is what makes skewed quadrilaterals work
+//! in FastVPINNs where the original hp-VPINNs assumed it constant.
+
+/// Bilinear map for one quadrilateral (vertices CCW, matching reference
+/// corners (-1,-1), (1,-1), (1,1), (-1,1)).
+#[derive(Debug, Clone, Copy)]
+pub struct BilinearMap {
+    xc: [f64; 4],
+    yc: [f64; 4],
+}
+
+/// Pointwise Jacobian: j11 = dx/dxi, j12 = dx/deta, j21 = dy/dxi,
+/// j22 = dy/deta, det = j11*j22 - j12*j21.
+#[derive(Debug, Clone, Copy)]
+pub struct Jacobian {
+    pub j11: f64,
+    pub j12: f64,
+    pub j21: f64,
+    pub j22: f64,
+    pub det: f64,
+}
+
+impl BilinearMap {
+    pub fn new(verts: &[[f64; 2]; 4]) -> Self {
+        let [p0, p1, p2, p3] = *verts;
+        let (x0, x1, x2, x3) = (p0[0], p1[0], p2[0], p3[0]);
+        let (y0, y1, y2, y3) = (p0[1], p1[1], p2[1], p3[1]);
+        BilinearMap {
+            xc: [
+                (x0 + x1 + x2 + x3) / 4.0,
+                (-x0 + x1 + x2 - x3) / 4.0,
+                (-x0 - x1 + x2 + x3) / 4.0,
+                (x0 - x1 + x2 - x3) / 4.0,
+            ],
+            yc: [
+                (y0 + y1 + y2 + y3) / 4.0,
+                (-y0 + y1 + y2 - y3) / 4.0,
+                (-y0 - y1 + y2 + y3) / 4.0,
+                (y0 - y1 + y2 - y3) / 4.0,
+            ],
+        }
+    }
+
+    /// Reference (xi, eta) -> actual (x, y).
+    pub fn map(&self, xi: f64, eta: f64) -> [f64; 2] {
+        [
+            self.xc[0] + self.xc[1] * xi + self.xc[2] * eta
+                + self.xc[3] * xi * eta,
+            self.yc[0] + self.yc[1] * xi + self.yc[2] * eta
+                + self.yc[3] * xi * eta,
+        ]
+    }
+
+    pub fn jacobian(&self, xi: f64, eta: f64) -> Jacobian {
+        let j11 = self.xc[1] + self.xc[3] * eta;
+        let j12 = self.xc[2] + self.xc[3] * xi;
+        let j21 = self.yc[1] + self.yc[3] * eta;
+        let j22 = self.yc[2] + self.yc[3] * xi;
+        Jacobian { j11, j12, j21, j22, det: j11 * j22 - j12 * j21 }
+    }
+
+    /// Transform reference gradients (d/dxi, d/deta) to actual (d/dx, d/dy):
+    ///
+    /// [du/dx]   1  [ j22  -j21] [du/dxi ]
+    /// [du/dy] = -  [-j12   j11] [du/deta]
+    ///           D
+    pub fn grad_to_actual(&self, dxi: f64, deta: f64, xi: f64, eta: f64)
+        -> [f64; 2] {
+        let j = self.jacobian(xi, eta);
+        [
+            (j.j22 * dxi - j.j21 * deta) / j.det,
+            (-j.j12 * dxi + j.j11 * deta) / j.det,
+        ]
+    }
+
+    /// Actual (x, y) -> reference (xi, eta) via Newton; returns None if
+    /// it fails to converge (point far outside the element).
+    pub fn inverse_map(&self, x: f64, y: f64) -> Option<[f64; 2]> {
+        let (mut xi, mut eta) = (0.0f64, 0.0f64);
+        for _ in 0..60 {
+            let p = self.map(xi, eta);
+            let (rx, ry) = (p[0] - x, p[1] - y);
+            let j = self.jacobian(xi, eta);
+            if j.det.abs() < 1e-300 {
+                return None;
+            }
+            let dxi = (j.j22 * rx - j.j12 * ry) / j.det;
+            let deta = (-j.j21 * rx + j.j11 * ry) / j.det;
+            xi -= dxi;
+            eta -= deta;
+            if dxi.abs() < 1e-13 && deta.abs() < 1e-13 {
+                return Some([xi, eta]);
+            }
+            if !xi.is_finite() || !eta.is_finite() || xi.abs() > 1e3
+                || eta.abs() > 1e3 {
+                return None;
+            }
+        }
+        Some([xi, eta])
+    }
+
+    /// True if (x, y) lies inside this element (with tolerance).
+    pub fn contains(&self, x: f64, y: f64, tol: f64) -> bool {
+        match self.inverse_map(x, y) {
+            Some([xi, eta]) => {
+                xi.abs() <= 1.0 + tol && eta.abs() <= 1.0 + tol
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_result;
+
+    const SKEWED: [[f64; 2]; 4] =
+        [[0.0, 0.0], [2.0, 0.3], [1.7, 1.9], [-0.2, 1.2]];
+
+    #[test]
+    fn maps_corners() {
+        let bm = BilinearMap::new(&SKEWED);
+        let refc = [[-1.0, -1.0], [1.0, -1.0], [1.0, 1.0], [-1.0, 1.0]];
+        for (r, v) in refc.iter().zip(SKEWED.iter()) {
+            let p = bm.map(r[0], r[1]);
+            assert!((p[0] - v[0]).abs() < 1e-14);
+            assert!((p[1] - v[1]).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn affine_constant_jacobian() {
+        let unit = [[0.0, 0.0], [1.0, 0.0], [1.0, 1.0], [0.0, 1.0]];
+        let bm = BilinearMap::new(&unit);
+        for (xi, eta) in [(0.0, 0.0), (0.7, -0.3), (-0.9, 0.9)] {
+            assert!((bm.jacobian(xi, eta).det - 0.25).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn skewed_jacobian_varies() {
+        let bm = BilinearMap::new(&SKEWED);
+        let d1 = bm.jacobian(-0.9, -0.9).det;
+        let d2 = bm.jacobian(0.9, 0.9).det;
+        assert!((d1 - d2).abs() > 1e-3);
+    }
+
+    #[test]
+    fn jacobian_finite_difference() {
+        let bm = BilinearMap::new(&SKEWED);
+        let (xi, eta, h) = (0.37, -0.21, 1e-7);
+        let j = bm.jacobian(xi, eta);
+        let px = bm.map(xi + h, eta);
+        let mx = bm.map(xi - h, eta);
+        assert!((j.j11 - (px[0] - mx[0]) / (2.0 * h)).abs() < 1e-6);
+        assert!((j.j21 - (px[1] - mx[1]) / (2.0 * h)).abs() < 1e-6);
+        let pe = bm.map(xi, eta + h);
+        let me = bm.map(xi, eta - h);
+        assert!((j.j12 - (pe[0] - me[0]) / (2.0 * h)).abs() < 1e-6);
+        assert!((j.j22 - (pe[1] - me[1]) / (2.0 * h)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grad_chain_rule_on_known_function() {
+        // u(x,y) = x^2 + 3xy -> du/dx = 2x+3y, du/dy = 3x
+        let bm = BilinearMap::new(&SKEWED);
+        let h = 1e-7;
+        for (xi, eta) in [(0.2, -0.5), (-0.8, 0.3), (0.0, 0.0)] {
+            let u = |a: f64, b: f64| {
+                let p = bm.map(a, b);
+                p[0] * p[0] + 3.0 * p[0] * p[1]
+            };
+            let dxi = (u(xi + h, eta) - u(xi - h, eta)) / (2.0 * h);
+            let deta = (u(xi, eta + h) - u(xi, eta - h)) / (2.0 * h);
+            let g = bm.grad_to_actual(dxi, deta, xi, eta);
+            let p = bm.map(xi, eta);
+            assert!((g[0] - (2.0 * p[0] + 3.0 * p[1])).abs() < 1e-5);
+            assert!((g[1] - 3.0 * p[0]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn property_inverse_roundtrip_random_convex_quads() {
+        check_result(
+            42,
+            200,
+            |r| {
+                // random convex-ish quad: perturb unit square corners
+                let p = |bx: f64, by: f64, r: &mut crate::util::rng::Rng| {
+                    [bx + r.uniform_in(-0.25, 0.25),
+                     by + r.uniform_in(-0.25, 0.25)]
+                };
+                let verts = [
+                    p(0.0, 0.0, r), p(1.0, 0.0, r), p(1.0, 1.0, r),
+                    p(0.0, 1.0, r),
+                ];
+                let xi = r.uniform_in(-0.95, 0.95);
+                let eta = r.uniform_in(-0.95, 0.95);
+                (verts, xi, eta)
+            },
+            |&(verts, xi, eta)| {
+                let bm = BilinearMap::new(&verts);
+                let p = bm.map(xi, eta);
+                match bm.inverse_map(p[0], p[1]) {
+                    Some([xi2, eta2]) => {
+                        if (xi2 - xi).abs() < 1e-9 && (eta2 - eta).abs() < 1e-9
+                        {
+                            Ok(())
+                        } else {
+                            Err(format!("roundtrip ({xi},{eta}) -> \
+                                         ({xi2},{eta2})"))
+                        }
+                    }
+                    None => Err("inverse_map diverged".into()),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn contains_logic() {
+        let bm = BilinearMap::new(&SKEWED);
+        let inside = bm.map(0.1, -0.4);
+        assert!(bm.contains(inside[0], inside[1], 1e-9));
+        assert!(!bm.contains(10.0, 10.0, 1e-9));
+    }
+}

@@ -1,0 +1,283 @@
+//! Legendre/Jacobi polynomials and the hp-VPINNs test basis
+//! `t_j(x) = P_{j+1}(x) - P_{j-1}(x)` (mirrors python fem_py.jacobi /
+//! fem_py.basis; same recurrences, f64 throughout).
+
+/// P_n(x) by the Bonnet recurrence.
+pub fn legendre(n: usize, x: f64) -> f64 {
+    match n {
+        0 => 1.0,
+        1 => x,
+        _ => {
+            let (mut p0, mut p1) = (1.0, x);
+            for k in 1..n {
+                let k_ = k as f64;
+                let p2 = ((2.0 * k_ + 1.0) * x * p1 - k_ * p0) / (k_ + 1.0);
+                p0 = p1;
+                p1 = p2;
+            }
+            p1
+        }
+    }
+}
+
+/// P'_n(x) via the derivative recurrence (stable at x = +-1).
+pub fn legendre_deriv(n: usize, x: f64) -> f64 {
+    match n {
+        0 => 0.0,
+        1 => 1.0,
+        _ => {
+            let (mut p0, mut p1) = (1.0, x);
+            let (mut d0, mut d1) = (0.0, 1.0);
+            for k in 1..n {
+                let k_ = k as f64;
+                let p2 = ((2.0 * k_ + 1.0) * x * p1 - k_ * p0) / (k_ + 1.0);
+                let d2 = (2.0 * k_ + 1.0) * p1 + d0;
+                p0 = p1;
+                p1 = p2;
+                d0 = d1;
+                d1 = d2;
+            }
+            d1
+        }
+    }
+}
+
+/// Values [P_0..P_n] at x.
+pub fn legendre_all(n: usize, x: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(n + 1);
+    out.push(1.0);
+    if n >= 1 {
+        out.push(x);
+    }
+    for k in 1..n {
+        let k_ = k as f64;
+        let next = ((2.0 * k_ + 1.0) * x * out[k] - k_ * out[k - 1])
+            / (k_ + 1.0);
+        out.push(next);
+    }
+    out
+}
+
+/// Derivatives [P'_0..P'_n] at x.
+pub fn legendre_deriv_all(n: usize, x: f64) -> Vec<f64> {
+    let p = legendre_all(n, x);
+    let mut d = vec![0.0; n + 1];
+    if n >= 1 {
+        d[1] = 1.0;
+    }
+    for k in 1..n {
+        d[k + 1] = (2.0 * k as f64 + 1.0) * p[k] + d[k - 1];
+    }
+    d
+}
+
+/// General Jacobi polynomial P_n^{(a,b)}(x).
+pub fn jacobi(n: usize, a: f64, b: f64, x: f64) -> f64 {
+    if n == 0 {
+        return 1.0;
+    }
+    let mut p0 = 1.0;
+    let mut p1 = 0.5 * (a - b + (a + b + 2.0) * x);
+    for k in 1..n {
+        let k_ = k as f64;
+        let c = 2.0 * k_ + a + b;
+        let a1 = 2.0 * (k_ + 1.0) * (k_ + a + b + 1.0) * c;
+        let a2 = (c + 1.0) * (a * a - b * b);
+        let a3 = c * (c + 1.0) * (c + 2.0);
+        let a4 = 2.0 * (k_ + a) * (k_ + b) * (c + 2.0);
+        let p2 = ((a2 + a3 * x) * p1 - a4 * p0) / a1;
+        p0 = p1;
+        p1 = p2;
+    }
+    p1
+}
+
+/// d/dx P_n^{(a,b)} = (n+a+b+1)/2 * P_{n-1}^{(a+1,b+1)}.
+pub fn jacobi_deriv(n: usize, a: f64, b: f64, x: f64) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    0.5 * (n as f64 + a + b + 1.0) * jacobi(n - 1, a + 1.0, b + 1.0, x)
+}
+
+/// 1D test-basis values t_1..t_n1d at each of the given points.
+/// Returns row-major (n1d, xs.len()).
+pub fn test_fn_1d(n1d: usize, xs: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; n1d * xs.len()];
+    for (qi, &x) in xs.iter().enumerate() {
+        let p = legendre_all(n1d + 1, x);
+        for j in 1..=n1d {
+            out[(j - 1) * xs.len() + qi] = p[j + 1] - p[j - 1];
+        }
+    }
+    out
+}
+
+/// 1D test-basis derivatives t'_1..t'_n1d. Row-major (n1d, xs.len()).
+pub fn test_grad_1d(n1d: usize, xs: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; n1d * xs.len()];
+    for (qi, &x) in xs.iter().enumerate() {
+        let d = legendre_deriv_all(n1d + 1, x);
+        for j in 1..=n1d {
+            out[(j - 1) * xs.len() + qi] = d[j + 1] - d[j - 1];
+        }
+    }
+    out
+}
+
+/// 2D tensor-product test basis at reference points (xi_q, eta_q):
+/// returns (v, dxi, deta), each row-major (n1d*n1d, nq), flattening
+/// J = a*n1d + b — the contract shared with fem_py.basis.test_fn_2d.
+pub fn test_fn_2d(n1d: usize, xi: &[f64], eta: &[f64])
+    -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    assert_eq!(xi.len(), eta.len());
+    let nq = xi.len();
+    let txi = test_fn_1d(n1d, xi);
+    let teta = test_fn_1d(n1d, eta);
+    let dtxi = test_grad_1d(n1d, xi);
+    let dteta = test_grad_1d(n1d, eta);
+    let nt = n1d * n1d;
+    let mut v = vec![0.0; nt * nq];
+    let mut dxi = vec![0.0; nt * nq];
+    let mut deta = vec![0.0; nt * nq];
+    for a in 0..n1d {
+        for b in 0..n1d {
+            let j = a * n1d + b;
+            for q in 0..nq {
+                v[j * nq + q] = txi[a * nq + q] * teta[b * nq + q];
+                dxi[j * nq + q] = dtxi[a * nq + q] * teta[b * nq + q];
+                deta[j * nq + q] = txi[a * nq + q] * dteta[b * nq + q];
+            }
+        }
+    }
+    (v, dxi, deta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_forms() {
+        for &x in &[-1.0, -0.3, 0.0, 0.7, 1.0] {
+            assert!((legendre(2, x) - 0.5 * (3.0 * x * x - 1.0)).abs()
+                < 1e-14);
+            assert!((legendre(3, x) - 0.5 * (5.0 * x * x * x - 3.0 * x))
+                .abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn endpoint_values() {
+        for n in 0..12 {
+            assert!((legendre(n, 1.0) - 1.0).abs() < 1e-13);
+            let sign = if n % 2 == 0 { 1.0 } else { -1.0 };
+            assert!((legendre(n, -1.0) - sign).abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn deriv_at_one() {
+        for n in 1..12 {
+            let expect = n as f64 * (n as f64 + 1.0) / 2.0;
+            assert!((legendre_deriv(n, 1.0) - expect).abs() < 1e-10,
+                    "n={n}");
+        }
+    }
+
+    #[test]
+    fn deriv_finite_difference() {
+        let h = 1e-7;
+        for n in 1..10 {
+            for &x in &[-0.8, -0.1, 0.5, 0.93] {
+                let fd = (legendre(n, x + h) - legendre(n, x - h))
+                    / (2.0 * h);
+                assert!((legendre_deriv(n, x) - fd).abs() < 1e-5,
+                        "n={n} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_variants_match() {
+        let x = 0.37;
+        let p = legendre_all(9, x);
+        let d = legendre_deriv_all(9, x);
+        for n in 0..=9 {
+            assert!((p[n] - legendre(n, x)).abs() < 1e-14);
+            assert!((d[n] - legendre_deriv(n, x)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn jacobi_reduces_to_legendre() {
+        for n in 0..8 {
+            for &x in &[-0.9, 0.0, 0.4, 1.0] {
+                assert!((jacobi(n, 0.0, 0.0, x) - legendre(n, x)).abs()
+                    < 1e-13);
+            }
+        }
+    }
+
+    #[test]
+    fn jacobi_deriv_finite_difference() {
+        let h = 1e-7;
+        for n in 1..6 {
+            let x = 0.3;
+            let fd = (jacobi(n, 1.0, 1.0, x + h) - jacobi(n, 1.0, 1.0, x - h))
+                / (2.0 * h);
+            assert!((jacobi_deriv(n, 1.0, 1.0, x) - fd).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn test_basis_vanishes_at_endpoints() {
+        let t = test_fn_1d(8, &[-1.0, 1.0]);
+        for v in t {
+            assert!(v.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn test_basis_definition() {
+        let xs = [-0.6, 0.2, 0.9];
+        let t = test_fn_1d(4, &xs);
+        for j in 1..=4usize {
+            for (qi, &x) in xs.iter().enumerate() {
+                let expect = legendre(j + 1, x) - legendre(j - 1, x);
+                assert!((t[(j - 1) * 3 + qi] - expect).abs() < 1e-13);
+            }
+        }
+    }
+
+    #[test]
+    fn test_grad_finite_difference() {
+        let xs = [-0.5, 0.0, 0.77];
+        let h = 1e-7;
+        let g = test_grad_1d(5, &xs);
+        let tp = test_fn_1d(5, &xs.map(|x| x + h));
+        let tm = test_fn_1d(5, &xs.map(|x| x - h));
+        for i in 0..g.len() {
+            let fd = (tp[i] - tm[i]) / (2.0 * h);
+            assert!((g[i] - fd).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn test_2d_tensor_structure() {
+        let xi = [-0.3, 0.1, 0.8];
+        let eta = [0.5, -0.7, 0.2];
+        let (v, _, _) = test_fn_2d(3, &xi, &eta);
+        let txi = test_fn_1d(3, &xi);
+        let teta = test_fn_1d(3, &eta);
+        for a in 0..3 {
+            for b in 0..3 {
+                for q in 0..3 {
+                    let got = v[(a * 3 + b) * 3 + q];
+                    let want = txi[a * 3 + q] * teta[b * 3 + q];
+                    assert!((got - want).abs() < 1e-14);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! The mapped-FEM substrate: Jacobi/Legendre test bases, Gauss
+//! quadrature, bilinear reference->actual transforms and the FastVPINNs
+//! premultiplier tensor assembly (the paper's SS4.1-4.4 data layout).
+
+pub mod assembly;
+pub mod bilinear;
+pub mod jacobi;
+pub mod quadrature;

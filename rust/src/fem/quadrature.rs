@@ -1,0 +1,245 @@
+//! Gauss quadrature on [-1,1] and the tensor-product 2D rule (mirrors
+//! python fem_py.quadrature, same Newton iterations and ordering).
+
+use anyhow::{bail, Result};
+
+use super::jacobi;
+
+/// Which 1D rule to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuadKind {
+    GaussLegendre,
+    GaussLobatto,
+}
+
+impl QuadKind {
+    pub fn parse(s: &str) -> Result<QuadKind> {
+        match s {
+            "gauss-legendre" | "gl" => Ok(QuadKind::GaussLegendre),
+            "gauss-lobatto" | "gll" | "lobatto" => Ok(QuadKind::GaussLobatto),
+            _ => bail!("unknown quadrature kind '{s}'"),
+        }
+    }
+}
+
+/// n-point Gauss-Legendre rule (exact to degree 2n-1), ascending points.
+pub fn gauss_legendre(n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(n >= 1);
+    if n == 1 {
+        return (vec![0.0], vec![2.0]);
+    }
+    let mut x: Vec<f64> = (1..=n)
+        .map(|k| {
+            -((std::f64::consts::PI * (k as f64 - 0.25)
+                / (n as f64 + 0.5))
+                .cos())
+        })
+        .collect();
+    for xi in &mut x {
+        for _ in 0..100 {
+            let p = jacobi::legendre(n, *xi);
+            let dp = jacobi::legendre_deriv(n, *xi);
+            let dx = p / dp;
+            *xi -= dx;
+            if dx.abs() < 1e-15 {
+                break;
+            }
+        }
+    }
+    let w: Vec<f64> = x
+        .iter()
+        .map(|&xi| {
+            let dp = jacobi::legendre_deriv(n, xi);
+            2.0 / ((1.0 - xi * xi) * dp * dp)
+        })
+        .collect();
+    (x, w)
+}
+
+/// n-point Gauss-Lobatto-Legendre rule (endpoints included, exact to
+/// degree 2n-3).
+pub fn gauss_lobatto(n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(n >= 2, "Lobatto rules need n >= 2");
+    if n == 2 {
+        return (vec![-1.0, 1.0], vec![1.0, 1.0]);
+    }
+    let m = n - 1;
+    let mut interior: Vec<f64> = (1..m)
+        .map(|k| -((std::f64::consts::PI * k as f64 / m as f64).cos()))
+        .collect();
+    for xi in &mut interior {
+        for _ in 0..100 {
+            let p = jacobi::legendre(m, *xi);
+            let dp = jacobi::legendre_deriv(m, *xi);
+            let d2p = (2.0 * *xi * dp - (m * (m + 1)) as f64 * p)
+                / (1.0 - *xi * *xi);
+            let dx = dp / d2p;
+            *xi -= dx;
+            if dx.abs() < 1e-15 {
+                break;
+            }
+        }
+    }
+    let mut x = Vec::with_capacity(n);
+    x.push(-1.0);
+    x.extend(interior);
+    x.push(1.0);
+    let w: Vec<f64> = x
+        .iter()
+        .map(|&xi| {
+            let pm = jacobi::legendre(m, xi);
+            2.0 / ((m * (m + 1)) as f64 * pm * pm)
+        })
+        .collect();
+    (x, w)
+}
+
+pub fn rule_1d(n: usize, kind: QuadKind) -> (Vec<f64>, Vec<f64>) {
+    match kind {
+        QuadKind::GaussLegendre => gauss_legendre(n),
+        QuadKind::GaussLobatto => gauss_lobatto(n),
+    }
+}
+
+/// Tensor-product rule on [-1,1]^2: q = i*n1d + j, xi_q = x[i],
+/// eta_q = x[j]. Ordering is the cross-layer contract with
+/// fem_py.quadrature.tensor_rule_2d.
+pub struct TensorRule2d {
+    pub xi: Vec<f64>,
+    pub eta: Vec<f64>,
+    pub w: Vec<f64>,
+}
+
+pub fn tensor_rule_2d(n1d: usize, kind: QuadKind) -> TensorRule2d {
+    let (x, w1) = rule_1d(n1d, kind);
+    let nq = n1d * n1d;
+    let mut xi = Vec::with_capacity(nq);
+    let mut eta = Vec::with_capacity(nq);
+    let mut w = Vec::with_capacity(nq);
+    for i in 0..n1d {
+        for j in 0..n1d {
+            xi.push(x[i]);
+            eta.push(x[j]);
+            w.push(w1[i] * w1[j]);
+        }
+    }
+    TensorRule2d { xi, eta, w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poly_val(c: &[f64], x: f64) -> f64 {
+        c.iter().rev().fold(0.0, |acc, &ci| acc * x + ci)
+    }
+
+    fn poly_integral(c: &[f64]) -> f64 {
+        c.iter()
+            .enumerate()
+            .map(|(i, &ci)| {
+                ci * (1.0 - (-1.0f64).powi(i as i32 + 1)) / (i as f64 + 1.0)
+            })
+            .sum()
+    }
+
+    #[test]
+    fn gl_weights_sum_two() {
+        for n in 1..16 {
+            let (_, w) = gauss_legendre(n);
+            assert!((w.iter().sum::<f64>() - 2.0).abs() < 1e-13, "n={n}");
+        }
+    }
+
+    #[test]
+    fn gl_exactness() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        for n in 1..12 {
+            let (x, w) = gauss_legendre(n);
+            let c: Vec<f64> =
+                (0..2 * n).map(|_| rng.normal()).collect();
+            let got: f64 = x
+                .iter()
+                .zip(&w)
+                .map(|(&xi, &wi)| wi * poly_val(&c, xi))
+                .sum();
+            assert!((got - poly_integral(&c)).abs() < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn gl_known_3point() {
+        let (x, w) = gauss_legendre(3);
+        let s = (0.6f64).sqrt();
+        assert!((x[0] + s).abs() < 1e-14);
+        assert!(x[1].abs() < 1e-14);
+        assert!((x[2] - s).abs() < 1e-14);
+        assert!((w[0] - 5.0 / 9.0).abs() < 1e-14);
+        assert!((w[1] - 8.0 / 9.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn lobatto_endpoints_and_exactness() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        for n in 2..12 {
+            let (x, w) = gauss_lobatto(n);
+            assert!((x[0] + 1.0).abs() < 1e-14);
+            assert!((x[n - 1] - 1.0).abs() < 1e-14);
+            assert!((w.iter().sum::<f64>() - 2.0).abs() < 1e-12);
+            let c: Vec<f64> = (0..2 * n - 2).map(|_| rng.normal()).collect();
+            let got: f64 = x
+                .iter()
+                .zip(&w)
+                .map(|(&xi, &wi)| wi * poly_val(&c, xi))
+                .sum();
+            assert!((got - poly_integral(&c)).abs() < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn lobatto_known_5point() {
+        let (x, w) = gauss_lobatto(5);
+        let s = (3.0f64 / 7.0).sqrt();
+        assert!((x[1] + s).abs() < 1e-13);
+        assert!((w[0] - 0.1).abs() < 1e-13);
+        assert!((w[2] - 32.0 / 45.0).abs() < 1e-13);
+    }
+
+    #[test]
+    fn tensor_ordering_contract() {
+        let (x, _) = gauss_legendre(3);
+        let r = tensor_rule_2d(3, QuadKind::GaussLegendre);
+        for i in 0..3 {
+            for j in 0..3 {
+                let q = i * 3 + j;
+                assert!((r.xi[q] - x[i]).abs() < 1e-15);
+                assert!((r.eta[q] - x[j]).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_integrates_monomials() {
+        let r = tensor_rule_2d(5, QuadKind::GaussLegendre);
+        for p in [0usize, 2, 4, 6] {
+            for q in [0usize, 2, 4] {
+                let got: f64 = (0..r.w.len())
+                    .map(|k| {
+                        r.w[k] * r.xi[k].powi(p as i32)
+                            * r.eta[k].powi(q as i32)
+                    })
+                    .sum();
+                let want = (2.0 / (p as f64 + 1.0)) * (2.0 / (q as f64 + 1.0));
+                assert!((got - want).abs() < 1e-12, "x^{p} y^{q}");
+            }
+        }
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(QuadKind::parse("gl").unwrap(), QuadKind::GaussLegendre);
+        assert_eq!(QuadKind::parse("lobatto").unwrap(),
+                   QuadKind::GaussLobatto);
+        assert!(QuadKind::parse("mc").is_err());
+    }
+}

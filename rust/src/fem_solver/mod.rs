@@ -1,0 +1,395 @@
+//! Classical Q1 mapped-FEM reference solver for
+//! `-div(eps(x) grad u) + b . grad u = f` with Dirichlet BCs.
+//!
+//! Plays the role ParMooN plays in the paper: reference solutions for the
+//! gear (Fig. 12) and disk-inverse (Fig. 15) experiments, and the FEM
+//! side of Table 1 (solve time vs NN prediction time).
+
+use anyhow::{ensure, Result};
+
+use crate::fem::bilinear::BilinearMap;
+use crate::fem::quadrature::{self, QuadKind};
+use crate::linalg::{bicgstab_solve, cg_solve, CgOptions, CsrMatrix,
+                    Triplets};
+use crate::mesh::QuadMesh;
+
+/// Variable-coefficient convection-diffusion problem definition.
+pub struct FemProblem<'a> {
+    pub eps: &'a dyn Fn(f64, f64) -> f64,
+    pub b: (f64, f64),
+    pub f: &'a dyn Fn(f64, f64) -> f64,
+    pub g: &'a dyn Fn(f64, f64) -> f64,
+}
+
+/// Q1 shape functions on the reference square, vertex order matching
+/// the mesh/bilinear contract: (-1,-1), (1,-1), (1,1), (-1,1).
+fn q1_shape(xi: f64, eta: f64) -> [f64; 4] {
+    [
+        0.25 * (1.0 - xi) * (1.0 - eta),
+        0.25 * (1.0 + xi) * (1.0 - eta),
+        0.25 * (1.0 + xi) * (1.0 + eta),
+        0.25 * (1.0 - xi) * (1.0 + eta),
+    ]
+}
+
+fn q1_grad(xi: f64, eta: f64) -> [[f64; 2]; 4] {
+    [
+        [-0.25 * (1.0 - eta), -0.25 * (1.0 - xi)],
+        [0.25 * (1.0 - eta), -0.25 * (1.0 + xi)],
+        [0.25 * (1.0 + eta), 0.25 * (1.0 + xi)],
+        [-0.25 * (1.0 + eta), 0.25 * (1.0 - xi)],
+    ]
+}
+
+/// A solved FEM field on a quad mesh (nodal values) with point
+/// evaluation via a cell spatial index.
+pub struct FemSolution {
+    pub mesh: QuadMesh,
+    pub u: Vec<f64>,
+    pub solve_iterations: usize,
+    pub solve_seconds: f64,
+    index: CellIndex,
+}
+
+impl FemSolution {
+    /// Evaluate the field at (x, y); None if outside the mesh.
+    pub fn eval(&self, x: f64, y: f64) -> Option<f64> {
+        let e = self.index.locate(&self.mesh, x, y)?;
+        let bm = BilinearMap::new(&self.mesh.cell_vertices(e));
+        let r = bm.inverse_map(x, y)?;
+        let n = q1_shape(r[0], r[1]);
+        let c = self.mesh.cells[e];
+        Some((0..4).map(|k| n[k] * self.u[c[k]]).sum())
+    }
+
+    /// Nodal values as f64 slice.
+    pub fn nodal(&self) -> &[f64] {
+        &self.u
+    }
+}
+
+/// Solve the problem on `mesh`. Uses CG when b == 0 (SPD), BiCGStab
+/// otherwise.
+pub fn solve(mesh: &QuadMesh, p: &FemProblem, nq1d: usize)
+    -> Result<FemSolution> {
+    let t0 = std::time::Instant::now();
+    let n = mesh.n_points();
+    ensure!(n > 0, "empty mesh");
+    let rule = quadrature::tensor_rule_2d(nq1d, QuadKind::GaussLegendre);
+
+    // boundary nodes
+    let mut is_bd = vec![false; n];
+    for e in &mesh.boundary {
+        is_bd[e.a] = true;
+        is_bd[e.b] = true;
+    }
+    // free-node numbering
+    let mut free_id = vec![usize::MAX; n];
+    let mut n_free = 0;
+    for i in 0..n {
+        if !is_bd[i] {
+            free_id[i] = n_free;
+            n_free += 1;
+        }
+    }
+    // Dirichlet values
+    let gvals: Vec<f64> = (0..n)
+        .map(|i| {
+            if is_bd[i] {
+                (p.g)(mesh.points[i][0], mesh.points[i][1])
+            } else {
+                0.0
+            }
+        })
+        .collect();
+
+    let mut trip = Triplets::new(n_free, n_free);
+    let mut rhs = vec![0.0; n_free];
+
+    for e in 0..mesh.n_cells() {
+        let verts = mesh.cell_vertices(e);
+        let bm = BilinearMap::new(&verts);
+        let c = mesh.cells[e];
+        let mut ke = [[0.0f64; 4]; 4];
+        let mut fe = [0.0f64; 4];
+        for q in 0..rule.w.len() {
+            let (xi, eta, wq) = (rule.xi[q], rule.eta[q], rule.w[q]);
+            let j = bm.jacobian(xi, eta);
+            let adet = j.det.abs();
+            let pxy = bm.map(xi, eta);
+            let epsq = (p.eps)(pxy[0], pxy[1]);
+            let fq = (p.f)(pxy[0], pxy[1]);
+            let shp = q1_shape(xi, eta);
+            let gref = q1_grad(xi, eta);
+            // actual-domain gradients of the 4 shape functions
+            let mut gact = [[0.0f64; 2]; 4];
+            for (k, gk) in gref.iter().enumerate() {
+                let g = bm.grad_to_actual(gk[0], gk[1], xi, eta);
+                gact[k] = g;
+            }
+            let wj = wq * adet;
+            for a in 0..4 {
+                for b_ in 0..4 {
+                    let diff = epsq
+                        * (gact[a][0] * gact[b_][0]
+                            + gact[a][1] * gact[b_][1]);
+                    let conv = (p.b.0 * gact[b_][0] + p.b.1 * gact[b_][1])
+                        * shp[a];
+                    ke[a][b_] += wj * (diff + conv);
+                }
+                fe[a] += wj * fq * shp[a];
+            }
+        }
+        // scatter with Dirichlet elimination
+        for a in 0..4 {
+            let ga = c[a];
+            if is_bd[ga] {
+                continue;
+            }
+            let ia = free_id[ga];
+            rhs[ia] += fe[a];
+            for b_ in 0..4 {
+                let gb = c[b_];
+                if is_bd[gb] {
+                    rhs[ia] -= ke[a][b_] * gvals[gb];
+                } else {
+                    trip.push(ia, free_id[gb], ke[a][b_]);
+                }
+            }
+        }
+    }
+
+    let a: CsrMatrix = trip.to_csr();
+    let opts = CgOptions { max_iter: 20_000, rtol: 1e-10, atol: 1e-14 };
+    let symmetric = p.b.0 == 0.0 && p.b.1 == 0.0;
+    let res = if symmetric {
+        cg_solve(&a, &rhs, opts)
+    } else {
+        bicgstab_solve(&a, &rhs, opts)
+    };
+    ensure!(res.converged,
+            "linear solver did not converge (residual {:.3e})",
+            res.residual_norm);
+
+    let mut u = gvals;
+    for i in 0..n {
+        if free_id[i] != usize::MAX {
+            u[i] = res.x[free_id[i]];
+        }
+    }
+    let index = CellIndex::build(mesh);
+    Ok(FemSolution {
+        mesh: mesh.clone(),
+        u,
+        solve_iterations: res.iterations,
+        solve_seconds: t0.elapsed().as_secs_f64(),
+        index,
+    })
+}
+
+/// Uniform-grid spatial index over cell bounding boxes.
+struct CellIndex {
+    lo: [f64; 2],
+    inv_h: [f64; 2],
+    nx: usize,
+    ny: usize,
+    bins: Vec<Vec<u32>>,
+}
+
+impl CellIndex {
+    fn build(mesh: &QuadMesh) -> CellIndex {
+        let (lo, hi) = mesh.bbox();
+        let ncell = mesh.n_cells();
+        let nx = (ncell as f64).sqrt().ceil() as usize + 1;
+        let ny = nx;
+        let hx = ((hi[0] - lo[0]) / nx as f64).max(1e-12);
+        let hy = ((hi[1] - lo[1]) / ny as f64).max(1e-12);
+        let mut bins = vec![Vec::new(); nx * ny];
+        for e in 0..ncell {
+            let v = mesh.cell_vertices(e);
+            let (mut bx0, mut by0) = (f64::INFINITY, f64::INFINITY);
+            let (mut bx1, mut by1) = (f64::NEG_INFINITY, f64::NEG_INFINITY);
+            for p in v {
+                bx0 = bx0.min(p[0]);
+                by0 = by0.min(p[1]);
+                bx1 = bx1.max(p[0]);
+                by1 = by1.max(p[1]);
+            }
+            let ix0 = (((bx0 - lo[0]) / hx).floor() as isize).max(0) as usize;
+            let iy0 = (((by0 - lo[1]) / hy).floor() as isize).max(0) as usize;
+            let ix1 = (((bx1 - lo[0]) / hx).floor() as usize).min(nx - 1);
+            let iy1 = (((by1 - lo[1]) / hy).floor() as usize).min(ny - 1);
+            for iy in iy0..=iy1 {
+                for ix in ix0..=ix1 {
+                    bins[iy * nx + ix].push(e as u32);
+                }
+            }
+        }
+        CellIndex { lo, inv_h: [1.0 / hx, 1.0 / hy], nx, ny, bins }
+    }
+
+    fn locate(&self, mesh: &QuadMesh, x: f64, y: f64) -> Option<usize> {
+        let ix = ((x - self.lo[0]) * self.inv_h[0]).floor() as isize;
+        let iy = ((y - self.lo[1]) * self.inv_h[1]).floor() as isize;
+        if ix < 0 || iy < 0 || ix >= self.nx as isize
+            || iy >= self.ny as isize {
+            return None;
+        }
+        let bin = &self.bins[iy as usize * self.nx + ix as usize];
+        for &e in bin {
+            let bm = BilinearMap::new(&mesh.cell_vertices(e as usize));
+            if bm.contains(x, y, 1e-9) {
+                return Some(e as usize);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::{generators, refine};
+
+    fn l2_err(mesh: &QuadMesh, u: &[f64], exact: impl Fn(f64, f64) -> f64)
+        -> f64 {
+        let mut acc = 0.0;
+        for (i, p) in mesh.points.iter().enumerate() {
+            let d = u[i] - exact(p[0], p[1]);
+            acc += d * d;
+        }
+        (acc / mesh.n_points() as f64).sqrt()
+    }
+
+    #[test]
+    fn poisson_manufactured_convergence() {
+        // -lap u = f with u = sin(pi x) sin(pi y); O(h^2) in nodal L2
+        let om = std::f64::consts::PI;
+        let exact = move |x: f64, y: f64| (om * x).sin() * (om * y).sin();
+        let f = move |x: f64, y: f64| {
+            2.0 * om * om * (om * x).sin() * (om * y).sin()
+        };
+        let g = |_: f64, _: f64| 0.0;
+        let eps = |_: f64, _: f64| 1.0;
+        let mut errs = Vec::new();
+        for n in [4usize, 8, 16] {
+            let mesh = generators::unit_square(n);
+            let sol = solve(&mesh,
+                            &FemProblem { eps: &eps, b: (0.0, 0.0), f: &f,
+                                          g: &g }, 3).unwrap();
+            errs.push(l2_err(&mesh, &sol.u, exact));
+        }
+        // each refinement should cut the error by ~4
+        assert!(errs[0] / errs[1] > 3.0, "{errs:?}");
+        assert!(errs[1] / errs[2] > 3.0, "{errs:?}");
+    }
+
+    #[test]
+    fn dirichlet_values_exact_on_boundary() {
+        let mesh = generators::unit_square(5);
+        let g = |x: f64, y: f64| 1.0 + x + 2.0 * y;
+        let sol = solve(&mesh,
+                        &FemProblem { eps: &|_, _| 1.0, b: (0.0, 0.0),
+                                      f: &|_, _| 0.0, g: &g }, 3).unwrap();
+        for e in &mesh.boundary {
+            for v in [e.a, e.b] {
+                let p = mesh.points[v];
+                assert!((sol.u[v] - g(p[0], p[1])).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn laplace_linear_solution_exact() {
+        // u = 1 + x + 2y is harmonic -> Q1 FEM reproduces it exactly
+        let mesh = generators::skewed_square(4, 0.2);
+        let g = |x: f64, y: f64| 1.0 + x + 2.0 * y;
+        let sol = solve(&mesh,
+                        &FemProblem { eps: &|_, _| 1.0, b: (0.0, 0.0),
+                                      f: &|_, _| 0.0, g: &g }, 4).unwrap();
+        for (i, p) in mesh.points.iter().enumerate() {
+            assert!((sol.u[i] - g(p[0], p[1])).abs() < 1e-9,
+                    "node {i}: {} vs {}", sol.u[i], g(p[0], p[1]));
+        }
+    }
+
+    #[test]
+    fn convection_diffusion_runs_nonsymmetric() {
+        let mesh = generators::unit_square(8);
+        let sol = solve(&mesh,
+                        &FemProblem { eps: &|_, _| 1.0, b: (1.0, 0.0),
+                                      f: &|_, _| 1.0, g: &|_, _| 0.0 },
+                        3).unwrap();
+        // interior values positive and bounded for this problem
+        let mx = sol.u.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(mx > 0.0 && mx < 1.0);
+    }
+
+    #[test]
+    fn variable_eps_affects_solution() {
+        let mesh = generators::unit_square(8);
+        let base = solve(&mesh,
+                         &FemProblem { eps: &|_, _| 1.0, b: (0.0, 0.0),
+                                       f: &|_, _| 1.0, g: &|_, _| 0.0 },
+                         3).unwrap();
+        let var = solve(&mesh,
+                        &FemProblem { eps: &|x, _| 1.0 + 5.0 * x,
+                                      b: (0.0, 0.0), f: &|_, _| 1.0,
+                                      g: &|_, _| 0.0 }, 3).unwrap();
+        let d: f64 = base
+            .u
+            .iter()
+            .zip(&var.u)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(d > 1e-3, "variable eps had no effect");
+    }
+
+    #[test]
+    fn eval_interpolates() {
+        let mesh = generators::unit_square(6);
+        let g = |x: f64, y: f64| x + y;
+        let sol = solve(&mesh,
+                        &FemProblem { eps: &|_, _| 1.0, b: (0.0, 0.0),
+                                      f: &|_, _| 0.0, g: &g }, 3).unwrap();
+        // harmonic linear solution: eval must match anywhere
+        for (x, y) in [(0.31, 0.77), (0.5, 0.5), (0.99, 0.01)] {
+            let v = sol.eval(x, y).unwrap();
+            assert!((v - (x + y)).abs() < 1e-9, "({x},{y}): {v}");
+        }
+        assert!(sol.eval(2.0, 2.0).is_none());
+    }
+
+    #[test]
+    fn eval_on_gear_mesh() {
+        let mesh = generators::gear(6, 6, 3, 0.4, 0.8, 1.0);
+        let sol = solve(&mesh,
+                        &FemProblem { eps: &|_, _| 1.0, b: (0.0, 0.0),
+                                      f: &|_, _| 1.0, g: &|_, _| 0.0 },
+                        3).unwrap();
+        // a point on the mid annulus must be inside
+        let v = sol.eval(0.6, 0.0);
+        assert!(v.is_some());
+        // hub hole is outside the domain
+        assert!(sol.eval(0.0, 0.0).is_none());
+    }
+
+    #[test]
+    fn convergence_on_refined_disk() {
+        // area-converging mesh + harmonic u = x^2 - y^2
+        let exact = |x: f64, y: f64| x * x - y * y;
+        let mesh = generators::disk(6, 4, 0.0, 0.0, 1.0);
+        let fine = refine::refine_uniform(&mesh);
+        let prob = FemProblem { eps: &|_, _| 1.0, b: (0.0, 0.0),
+                                f: &|_, _| 0.0, g: &exact };
+        let e1 = {
+            let s = solve(&mesh, &prob, 3).unwrap();
+            l2_err(&mesh, &s.u, exact)
+        };
+        let e2 = {
+            let s = solve(&fine, &prob, 3).unwrap();
+            l2_err(&fine, &s.u, exact)
+        };
+        assert!(e2 < e1, "no improvement: {e1} -> {e2}");
+    }
+}

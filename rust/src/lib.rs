@@ -1,0 +1,70 @@
+//! # FastVPINNs — tensor-driven hp-Variational PINNs
+//!
+//! Rust reproduction of *FastVPINNs: Tensor-Driven Acceleration of VPINNs
+//! for Complex Geometries* (Anandh, Ghose, Jain, Ganesan, 2024) as a
+//! three-layer stack:
+//!
+//! - **L3 (this crate)** owns everything at run time: quad meshes and
+//!   generators, the mapped-FEM assembly of the FastVPINNs premultiplier
+//!   tensors, a classical Q1 FEM reference solver, the PJRT runtime that
+//!   executes AOT-compiled training artifacts, the training coordinator,
+//!   and the experiment/bench harness that regenerates every table and
+//!   figure of the paper.
+//! - **L2 (python/compile, build-time only)** defines the JAX model and
+//!   losses and lowers whole train steps (network + autodiff + Adam) to
+//!   HLO text.
+//! - **L1 (python/compile/kernels)** is the Pallas residual-contraction
+//!   kernel the losses call into.
+//!
+//! Python never runs on the training path: `make artifacts` once, then
+//! the `repro` binary is self-contained.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use fastvpinns::prelude::*;
+//! use fastvpinns::coordinator::trainer::DataSource;
+//!
+//! // 1. mesh + assembly (pure Rust)
+//! let mesh = generators::unit_square(2);
+//! let domain = assembly::assemble(&mesh, 5, 20, QuadKind::GaussLegendre);
+//!
+//! // 2. runtime + data source
+//! let engine = Engine::new("artifacts").unwrap();
+//! let problem = problems::poisson_sin(2.0 * std::f64::consts::PI);
+//! let src = DataSource { mesh: &mesh, domain: Some(&domain),
+//!                        problem: &*problem, sensor_values: None };
+//!
+//! // 3. train the AOT-compiled step
+//! let cfg = TrainConfig { iters: 2000, ..TrainConfig::default() };
+//! let mut trainer =
+//!     Trainer::new(&engine, "fv_poisson_ne4_nt5_nq20", &src, &cfg)
+//!         .unwrap();
+//! let report = trainer.run().unwrap();
+//! println!("final loss {:.3e}", report.final_loss);
+//! ```
+
+pub mod autodiff;
+pub mod coordinator;
+pub mod experiments;
+pub mod fem;
+pub mod fem_solver;
+pub mod linalg;
+pub mod mesh;
+pub mod problems;
+pub mod runtime;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::coordinator::metrics::ErrorNorms;
+    pub use crate::coordinator::trainer::{TrainConfig, TrainReport, Trainer};
+    pub use crate::fem::assembly::{self, AssembledDomain};
+    pub use crate::fem::quadrature::QuadKind;
+    pub use crate::fem_solver::{FemProblem, FemSolution};
+    pub use crate::mesh::{generators, QuadMesh};
+    pub use crate::problems;
+    pub use crate::runtime::engine::Engine;
+    pub use crate::runtime::manifest::Manifest;
+    pub use crate::runtime::tensor::TensorData;
+}

@@ -1,0 +1,214 @@
+//! Jacobi-preconditioned conjugate gradients for SPD systems (the FEM
+//! reference solver's workhorse).
+
+use super::csr::CsrMatrix;
+
+#[derive(Debug, Clone, Copy)]
+pub struct CgOptions {
+    pub max_iter: usize,
+    pub rtol: f64,
+    pub atol: f64,
+}
+
+impl Default for CgOptions {
+    fn default() -> Self {
+        CgOptions { max_iter: 10_000, rtol: 1e-10, atol: 1e-14 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CgResult {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub residual_norm: f64,
+    pub converged: bool,
+}
+
+/// Solve A x = b with Jacobi (diagonal) preconditioning.
+pub fn cg_solve(a: &CsrMatrix, b: &[f64], opts: CgOptions) -> CgResult {
+    let n = b.len();
+    assert_eq!(a.n_rows, n);
+    let diag = a.diagonal();
+    let minv: Vec<f64> = diag
+        .iter()
+        .map(|&d| if d.abs() > 1e-300 { 1.0 / d } else { 1.0 })
+        .collect();
+
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec(); // r = b - A*0
+    let mut z: Vec<f64> = r.iter().zip(&minv).map(|(ri, mi)| ri * mi)
+        .collect();
+    let mut p = z.clone();
+    let mut rz: f64 = dot(&r, &z);
+    let b_norm = norm(b).max(1e-300);
+    let mut ap = vec![0.0; n];
+
+    let mut iterations = 0;
+    for it in 0..opts.max_iter {
+        iterations = it;
+        let r_norm = norm(&r);
+        if r_norm <= opts.rtol * b_norm || r_norm <= opts.atol {
+            return CgResult { x, iterations: it, residual_norm: r_norm,
+                              converged: true };
+        }
+        a.matvec(&p, &mut ap);
+        let pap = dot(&p, &ap);
+        if pap <= 0.0 {
+            // not SPD (or breakdown) — bail with what we have
+            return CgResult { x, iterations: it, residual_norm: r_norm,
+                              converged: false };
+        }
+        let alpha = rz / pap;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        for i in 0..n {
+            z[i] = r[i] * minv[i];
+        }
+        let rz_new = dot(&r, &z);
+        let beta = rz_new / rz;
+        rz = rz_new;
+        for i in 0..n {
+            p[i] = z[i] + beta * p[i];
+        }
+    }
+    let r_norm = norm(&r);
+    CgResult { x, iterations, residual_norm: r_norm,
+               converged: r_norm <= opts.rtol * b_norm }
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::csr::Triplets;
+    use crate::util::proptest::check_result;
+    use crate::util::rng::Rng;
+
+    fn laplace_1d(n: usize) -> CsrMatrix {
+        let mut t = Triplets::new(n, n);
+        for i in 0..n {
+            t.push(i, i, 2.0);
+            if i > 0 {
+                t.push(i, i - 1, -1.0);
+            }
+            if i + 1 < n {
+                t.push(i, i + 1, -1.0);
+            }
+        }
+        t.to_csr()
+    }
+
+    #[test]
+    fn solves_identity() {
+        let mut t = Triplets::new(3, 3);
+        for i in 0..3 {
+            t.push(i, i, 1.0);
+        }
+        let r = cg_solve(&t.to_csr(), &[1.0, 2.0, 3.0],
+                         CgOptions::default());
+        assert!(r.converged);
+        assert!((r.x[2] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn solves_laplace_1d() {
+        let n = 50;
+        let a = laplace_1d(n);
+        // manufactured: x = i*(n+1-i), b = A x
+        let xs: Vec<f64> =
+            (1..=n).map(|i| (i * (n + 1 - i)) as f64).collect();
+        let b = a.matvec_alloc(&xs);
+        let r = cg_solve(&a, &b, CgOptions::default());
+        assert!(r.converged, "residual {}", r.residual_norm);
+        for (got, want) in r.x.iter().zip(&xs) {
+            assert!((got - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn preconditioner_helps_scaled_system() {
+        // badly scaled diagonal: D_i = 10^(i mod 6)
+        let n = 40;
+        let mut t = Triplets::new(n, n);
+        for i in 0..n {
+            let s = 10f64.powi((i % 6) as i32);
+            t.push(i, i, 2.0 * s);
+            if i > 0 {
+                t.push(i, i - 1, -0.5);
+                t.push(i - 1, i, -0.5);
+            }
+        }
+        let a = t.to_csr();
+        let want: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let b = a.matvec_alloc(&want);
+        let r = cg_solve(&a, &b, CgOptions { max_iter: 500,
+                                             ..Default::default() });
+        assert!(r.converged);
+        for (g, w) in r.x.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn property_random_spd_systems() {
+        check_result(
+            9,
+            25,
+            |r: &mut Rng| {
+                let n = 5 + r.below(15);
+                // A = B^T B + n I (SPD), dense-ish via triplets
+                let bmat: Vec<f64> =
+                    (0..n * n).map(|_| r.normal()).collect();
+                let x: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+                (n, bmat, x)
+            },
+            |(n, bmat, xs)| {
+                let n = *n;
+                let mut t = Triplets::new(n, n);
+                for i in 0..n {
+                    for j in 0..n {
+                        let mut acc = 0.0;
+                        for k in 0..n {
+                            acc += bmat[k * n + i] * bmat[k * n + j];
+                        }
+                        if i == j {
+                            acc += n as f64;
+                        }
+                        t.push(i, j, acc);
+                    }
+                }
+                let a = t.to_csr();
+                let b = a.matvec_alloc(xs);
+                let r = cg_solve(&a, &b, CgOptions::default());
+                if !r.converged {
+                    return Err(format!("no convergence: {}",
+                                       r.residual_norm));
+                }
+                for (g, w) in r.x.iter().zip(xs) {
+                    if (g - w).abs() > 1e-6 {
+                        return Err(format!("|{g} - {w}| too large"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn non_spd_flagged() {
+        let mut t = Triplets::new(2, 2);
+        t.push(0, 0, -1.0);
+        t.push(1, 1, -1.0);
+        let r = cg_solve(&t.to_csr(), &[1.0, 1.0], CgOptions::default());
+        assert!(!r.converged);
+    }
+}

@@ -1,0 +1,191 @@
+//! Compressed-sparse-row matrix with triplet (COO) assembly.
+
+use anyhow::{ensure, Result};
+
+/// Triplet accumulator: duplicates are summed on conversion (standard FEM
+/// assembly pattern).
+#[derive(Debug, Clone, Default)]
+pub struct Triplets {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    entries: Vec<(usize, usize, f64)>,
+}
+
+impl Triplets {
+    pub fn new(n_rows: usize, n_cols: usize) -> Self {
+        Triplets { n_rows, n_cols, entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.n_rows && j < self.n_cols);
+        if v != 0.0 {
+            self.entries.push((i, j, v));
+        }
+    }
+
+    pub fn to_csr(mut self) -> CsrMatrix {
+        self.entries.sort_unstable_by_key(|&(i, j, _)| (i, j));
+        let mut row_ptr = vec![0usize; self.n_rows + 1];
+        let mut cols: Vec<usize> = Vec::with_capacity(self.entries.len());
+        let mut vals: Vec<f64> = Vec::with_capacity(self.entries.len());
+        let mut last: Option<(usize, usize)> = None;
+        for &(i, j, v) in &self.entries {
+            if last == Some((i, j)) {
+                // duplicate entry in the same (row, col): accumulate
+                *vals.last_mut().unwrap() += v;
+            } else {
+                cols.push(j);
+                vals.push(v);
+                last = Some((i, j));
+            }
+            row_ptr[i + 1] = cols.len();
+        }
+        // prefix-fill rows with no entries
+        for i in 1..=self.n_rows {
+            if row_ptr[i] < row_ptr[i - 1] {
+                row_ptr[i] = row_ptr[i - 1];
+            }
+        }
+        CsrMatrix { n_rows: self.n_rows, n_cols: self.n_cols, row_ptr,
+                    cols, vals }
+    }
+}
+
+/// CSR sparse matrix.
+#[derive(Debug, Clone)]
+pub struct CsrMatrix {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub cols: Vec<usize>,
+    pub vals: Vec<f64>,
+}
+
+impl CsrMatrix {
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// y = A x.
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n_cols);
+        debug_assert_eq!(y.len(), self.n_rows);
+        for i in 0..self.n_rows {
+            let mut acc = 0.0;
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                acc += self.vals[k] * x[self.cols[k]];
+            }
+            y[i] = acc;
+        }
+    }
+
+    pub fn matvec_alloc(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.n_rows];
+        self.matvec(x, &mut y);
+        y
+    }
+
+    /// Diagonal entries (0 where structurally absent).
+    pub fn diagonal(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.n_rows];
+        for i in 0..self.n_rows {
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                if self.cols[k] == i {
+                    d[i] = self.vals[k];
+                }
+            }
+        }
+        d
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+            if self.cols[k] == j {
+                return self.vals[k];
+            }
+        }
+        0.0
+    }
+
+    /// Symmetry check (for tests): max |A - A^T| entry.
+    pub fn asymmetry(&self) -> Result<f64> {
+        ensure!(self.n_rows == self.n_cols, "not square");
+        let mut mx: f64 = 0.0;
+        for i in 0..self.n_rows {
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let j = self.cols[k];
+                mx = mx.max((self.vals[k] - self.get(j, i)).abs());
+            }
+        }
+        Ok(mx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assembles_and_multiplies() {
+        let mut t = Triplets::new(3, 3);
+        t.push(0, 0, 2.0);
+        t.push(1, 1, 3.0);
+        t.push(2, 2, 4.0);
+        t.push(0, 1, 1.0);
+        let a = t.to_csr();
+        assert_eq!(a.nnz(), 4);
+        let y = a.matvec_alloc(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![4.0, 6.0, 12.0]);
+    }
+
+    #[test]
+    fn duplicates_summed() {
+        let mut t = Triplets::new(2, 2);
+        t.push(0, 0, 1.0);
+        t.push(0, 0, 2.5);
+        t.push(1, 0, 1.0);
+        t.push(1, 0, -1.0); // cancels but both nonzero pushes
+        let a = t.to_csr();
+        assert_eq!(a.get(0, 0), 3.5);
+        assert_eq!(a.get(1, 0), 0.0);
+    }
+
+    #[test]
+    fn empty_rows() {
+        let mut t = Triplets::new(4, 4);
+        t.push(3, 3, 1.0);
+        let a = t.to_csr();
+        assert_eq!(a.row_ptr, vec![0, 0, 0, 0, 1]);
+        let y = a.matvec_alloc(&[1.0, 1.0, 1.0, 2.0]);
+        assert_eq!(y, vec![0.0, 0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn diagonal_extraction() {
+        let mut t = Triplets::new(3, 3);
+        t.push(0, 0, 5.0);
+        t.push(1, 2, 7.0);
+        t.push(2, 2, 9.0);
+        let a = t.to_csr();
+        assert_eq!(a.diagonal(), vec![5.0, 0.0, 9.0]);
+    }
+
+    #[test]
+    fn symmetry_metric() {
+        let mut t = Triplets::new(2, 2);
+        t.push(0, 1, 1.0);
+        t.push(1, 0, 1.0);
+        t.push(0, 0, 2.0);
+        t.push(1, 1, 2.0);
+        let a = t.to_csr();
+        assert!(a.asymmetry().unwrap() < 1e-15);
+    }
+
+    #[test]
+    fn zero_entries_skipped() {
+        let mut t = Triplets::new(2, 2);
+        t.push(0, 0, 0.0);
+        t.push(1, 1, 1.0);
+        assert_eq!(t.to_csr().nnz(), 1);
+    }
+}

@@ -1,0 +1,10 @@
+//! Sparse linear algebra for the classical FEM reference solver:
+//! CSR matrices and a Jacobi-preconditioned conjugate-gradient solver.
+
+pub mod bicgstab;
+pub mod cg;
+pub mod csr;
+
+pub use bicgstab::bicgstab_solve;
+pub use cg::{cg_solve, CgOptions, CgResult};
+pub use csr::{CsrMatrix, Triplets};

@@ -1,0 +1,262 @@
+//! `repro` — the FastVPINNs L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   artifacts                      list available AOT artifacts
+//!   train --artifact <name> ...    train one artifact on a square domain
+//!   experiment <id|all> ...        regenerate a paper table/figure
+//!   fem-solve --mesh <kind> ...    run the classical FEM reference solver
+//!   mesh --kind <kind> ...         generate/inspect/export meshes
+//!   dump-tensors                   write assembly dumps for pytest
+//!                                  cross-validation (`make crosscheck`)
+
+use anyhow::{bail, Result};
+
+use fastvpinns::coordinator::schedule::LrSchedule;
+use fastvpinns::coordinator::trainer::{DataSource, TrainConfig, Trainer};
+use fastvpinns::experiments;
+use fastvpinns::fem::assembly;
+use fastvpinns::fem::quadrature::QuadKind;
+use fastvpinns::fem_solver::{self, FemProblem};
+use fastvpinns::mesh::{generators, gmsh, quality, QuadMesh};
+use fastvpinns::problems::{self, Problem};
+use fastvpinns::runtime::engine::Engine;
+use fastvpinns::util::cli::Args;
+use fastvpinns::util::npy;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "artifacts" => cmd_artifacts(args),
+        "train" => cmd_train(args),
+        "experiment" => {
+            if args.positional.is_empty() {
+                bail!("usage: repro experiment <id|all> (ids: {:?})",
+                      experiments::ALL);
+            }
+            for id in &args.positional {
+                experiments::run(id, args)?;
+            }
+            Ok(())
+        }
+        "fem-solve" => cmd_fem_solve(args),
+        "mesh" => cmd_mesh(args),
+        "dump-tensors" => cmd_dump_tensors(args),
+        "" | "help" | "--help" => {
+            println!("{}", USAGE);
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}
+
+const USAGE: &str = "\
+repro — FastVPINNs coordinator
+  repro artifacts [--artifacts DIR]
+  repro train --artifact NAME [--omega-pi K] [--iters N] [--lr F]
+              [--tau F] [--seed N]
+  repro experiment <fig02|fig08|fig09|fig10|fig11|fig12|fig14|fig15|
+                    fig16|table1|all> [--iters N] [--paper-scale]
+  repro fem-solve --mesh <square|disk|gear> [--n N] [--omega-pi K]
+  repro mesh --kind <square|skewed|disk|gear|annulus> [--n N] [--out F.msh]
+  repro dump-tensors [--out DIR]";
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let names = engine.list()?;
+    if names.is_empty() {
+        println!("no artifacts found — run `make artifacts`");
+        return Ok(());
+    }
+    println!("{} artifacts under {} (platform: {}):", names.len(),
+             engine.artifact_dir().display(), engine.platform());
+    for n in names {
+        let art = engine.load(&n);
+        match art {
+            Ok(a) => {
+                let c = &a.manifest.config;
+                println!(
+                    "  {n:<42} {:<8} ne={:<6} nt={:<4} nq={:<5} \
+                     kernel={} ({:.2}s compile)",
+                    a.manifest.kind, c.ne, c.nt, c.nq, c.kernel,
+                    a.compile_seconds
+                );
+            }
+            Err(e) => println!("  {n:<42} FAILED: {e}"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let name = args.req_str("artifact")?;
+    let art = engine.load(&name)?;
+    let c = art.manifest.config.clone();
+    let omega = args.f64_or("omega-pi", 2.0)? * std::f64::consts::PI;
+    let problem = problems::PoissonSin::new(omega);
+
+    let k = (c.ne as f64).sqrt().round() as usize;
+    if k * k != c.ne && art.manifest.loss != "pinn" {
+        bail!("artifact ne={} is not a square grid; use the experiment \
+               drivers for mesh-specific runs", c.ne);
+    }
+    let mesh = generators::unit_square(k.max(1));
+    let dom;
+    let domain = if art.manifest.loss == "pinn" {
+        None
+    } else {
+        dom = assembly::assemble(&mesh, c.nt1d, c.nq1d,
+                                 QuadKind::GaussLegendre);
+        Some(&dom)
+    };
+    let src = DataSource { mesh: &mesh, domain, problem: &problem,
+                           sensor_values: None };
+    let cfg = TrainConfig {
+        iters: args.usize_or("iters", 2000)?,
+        lr: LrSchedule::Constant(args.f64_or("lr", 1e-3)?),
+        tau: args.f64_or("tau", 10.0)?,
+        seed: args.usize_or("seed", 42)? as u64,
+        log_every: args.usize_or("log-every", 100)?,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(&engine, &name, &src, &cfg)?;
+    println!("training {name} (omega = {:.2}pi, {} iters)...",
+             omega / std::f64::consts::PI, cfg.iters);
+    let report = trainer.run()?;
+    println!(
+        "done: loss {:.4e} (var {:.4e}, bd {:.4e}), median {:.3} ms/step, \
+         total {:.1}s",
+        report.final_loss, report.final_var_loss, report.final_bd_loss,
+        report.median_step_ms, report.total_seconds
+    );
+    // error vs exact on the paper's 100x100 grid
+    let grid = fastvpinns::coordinator::metrics::eval_grid(
+        100, 100, 0.0, 0.0, 1.0, 1.0);
+    let exact: Vec<f64> = grid
+        .iter()
+        .map(|p| problem.exact(p[0], p[1]).unwrap())
+        .collect();
+    if let Ok(err) = trainer.evaluate("predict_std_16k", &grid, &exact) {
+        println!("errors: MAE {:.3e}, rel-L2 {:.3e}, Linf {:.3e}",
+                 err.mae, err.rel_l2, err.linf);
+    }
+    if let Some(out) = args.flag("history") {
+        trainer.history.to_csv(out)?;
+        println!("history -> {out}");
+    }
+    Ok(())
+}
+
+fn build_mesh(kind: &str, n: usize) -> Result<QuadMesh> {
+    Ok(match kind {
+        "square" => generators::unit_square(n.max(1)),
+        "skewed" => generators::skewed_square(n.max(1), 0.25),
+        "disk" => generators::disk_1024(),
+        "gear" => generators::gear_ci(),
+        "gear-paper" => generators::gear_paper(),
+        "annulus" => generators::annulus(n.max(8), (n / 4).max(2), 0.0,
+                                         0.0, 0.5, 1.0),
+        other => bail!("unknown mesh kind '{other}'"),
+    })
+}
+
+fn cmd_fem_solve(args: &Args) -> Result<()> {
+    let kind = args.str_or("mesh", "square");
+    let n = args.usize_or("n", 32)?;
+    let mesh = build_mesh(&kind, n)?;
+    let omega = args.f64_or("omega-pi", 1.0)? * std::f64::consts::PI;
+    println!("FEM solve on {kind} mesh: {} cells, {} DOFs",
+             mesh.n_cells(), mesh.n_points());
+    let t0 = std::time::Instant::now();
+    let sol = match kind.as_str() {
+        "gear" | "gear-paper" => {
+            let p = problems::GearCd;
+            fem_solver::solve(&mesh, &FemProblem {
+                eps: &|_, _| 1.0,
+                b: p.b(),
+                f: &|x, y| p.forcing(x, y),
+                g: &|x, y| p.boundary(x, y),
+            }, 3)?
+        }
+        _ => {
+            let f = move |x: f64, y: f64| {
+                2.0 * omega * omega * (omega * x).sin() * (omega * y).sin()
+            };
+            fem_solver::solve(&mesh, &FemProblem {
+                eps: &|_, _| 1.0,
+                b: (0.0, 0.0),
+                f: &f,
+                g: &|_, _| 0.0,
+            }, 3)?
+        }
+    };
+    println!("solved in {:.3}s ({} linear iterations)",
+             t0.elapsed().as_secs_f64(), sol.solve_iterations);
+    let mx = sol.u.iter().cloned().fold(f64::MIN, f64::max);
+    let mn = sol.u.iter().cloned().fold(f64::MAX, f64::min);
+    println!("u in [{mn:.4}, {mx:.4}]");
+    if let Some(out) = args.flag("out") {
+        fastvpinns::mesh::vtk::write_point_fields(&mesh, &[("u", &sol.u)],
+                                                  out)?;
+        println!("field -> {out}");
+    }
+    Ok(())
+}
+
+fn cmd_mesh(args: &Args) -> Result<()> {
+    let kind = args.str_or("kind", "square");
+    let n = args.usize_or("n", 8)?;
+    let mesh = build_mesh(&kind, n)?;
+    let r = quality::report(&mesh);
+    println!("{kind}: {} cells, {} points", r.n_cells, r.n_points);
+    println!("  valid: {} (min |J| {:.3e})", r.all_valid, r.min_jac);
+    println!("  worst in-cell Jacobian ratio: {:.3}", r.worst_ratio);
+    println!("  max aspect ratio: {:.2}", r.max_aspect);
+    println!("  area: {:.6}", r.area);
+    println!("  boundary edges: {}", mesh.boundary.len());
+    if let Some(out) = args.flag("out") {
+        gmsh::write(&mesh, out)?;
+        println!("mesh -> {out}");
+    }
+    Ok(())
+}
+
+/// Cross-validation dumps consumed by python/tests/test_cross_validation.py
+/// — the case list must stay in sync with CASES there.
+fn cmd_dump_tensors(args: &Args) -> Result<()> {
+    let base = args.str_or("out", "artifacts/crosscheck");
+    let cases: [(&str, QuadMesh, usize, usize); 3] = [
+        ("square4_nt3_nq5", generators::unit_square(4), 3, 5),
+        ("skewed4_nt3_nq5", generators::skewed_square(4, 0.15), 3, 5),
+        ("square2_nt5_nq10", generators::unit_square(2), 5, 10),
+    ];
+    for (tag, mesh, nt, nq) in cases {
+        let dir = std::path::PathBuf::from(&base).join(tag);
+        std::fs::create_dir_all(&dir)?;
+        let d = assembly::assemble(&mesh, nt, nq, QuadKind::GaussLegendre);
+        let f = d.force_matrix(|x, y| x.sin() * y.cos() + 2.0 * x * y);
+        npy::write_f64(dir.join("quad_xy.npy"), &d.quad_xy,
+                       &[d.ne * d.nq, 2])?;
+        npy::write_f64(dir.join("gx.npy"), &d.gx, &[d.ne, d.nt, d.nq])?;
+        npy::write_f64(dir.join("gy.npy"), &d.gy, &[d.ne, d.nt, d.nq])?;
+        npy::write_f64(dir.join("v.npy"), &d.v, &[d.ne, d.nt, d.nq])?;
+        npy::write_f64(dir.join("f.npy"), &f, &[d.ne, d.nt])?;
+        npy::write_f64(dir.join("jdet.npy"), &d.jdet, &[d.ne, d.nq])?;
+        println!("dumped {tag} -> {}", dir.display());
+    }
+    println!("now run: cd python && pytest tests/test_cross_validation.py");
+    Ok(())
+}

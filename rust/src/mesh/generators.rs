@@ -1,0 +1,383 @@
+//! Mesh generators: structured grids, skewed grids, disk (butterfly),
+//! annulus and the parametric spur gear (the paper's Fig. 3 workload).
+//!
+//! Numbering contracts (cross-validated against python fem_py.mesh):
+//! - grids: nodes row-major `iy*(nx+1)+ix`, cells row-major
+//!   `[bl, br, tr, tl]`.
+
+use std::collections::HashMap;
+
+use super::QuadMesh;
+
+/// Structured grid on [x0,x1] x [y0,y1] with nx x ny cells.
+pub fn rect_grid(nx: usize, ny: usize, x0: f64, y0: f64, x1: f64, y1: f64)
+    -> QuadMesh {
+    assert!(nx >= 1 && ny >= 1);
+    let mut points = Vec::with_capacity((nx + 1) * (ny + 1));
+    for iy in 0..=ny {
+        for ix in 0..=nx {
+            let x = x0 + (x1 - x0) * ix as f64 / nx as f64;
+            let y = y0 + (y1 - y0) * iy as f64 / ny as f64;
+            points.push([x, y]);
+        }
+    }
+    let mut cells = Vec::with_capacity(nx * ny);
+    for cy in 0..ny {
+        for cx in 0..nx {
+            let bl = cy * (nx + 1) + cx;
+            let br = bl + 1;
+            let tl = bl + (nx + 1);
+            let tr = tl + 1;
+            cells.push([bl, br, tr, tl]);
+        }
+    }
+    QuadMesh::new(points, cells).expect("rect_grid is always valid")
+}
+
+/// n x n grid on the unit square.
+pub fn unit_square(n: usize) -> QuadMesh {
+    rect_grid(n, n, 0.0, 0.0, 1.0, 1.0)
+}
+
+/// Unit-square grid with interior nodes displaced by an analytic field —
+/// genuinely non-constant per-element Jacobians. MUST stay identical to
+/// python fem_py.mesh.skewed_square (cross-validation contract).
+pub fn skewed_square(n: usize, amp: f64) -> QuadMesh {
+    let mut m = unit_square(n);
+    let h = 1.0 / n as f64;
+    for p in &mut m.points {
+        let (x, y) = (p[0], p[1]);
+        let interior = x > 1e-12 && x < 1.0 - 1e-12 && y > 1e-12
+            && y < 1.0 - 1e-12;
+        if interior {
+            p[0] = x + amp * h * (9.0 * x + 5.0 * y).sin();
+            p[1] = y + amp * h * (7.0 * x - 4.0 * y).cos();
+        }
+    }
+    m.compute_boundary();
+    m
+}
+
+/// Helper: weld coincident points (tolerance 1e-9) across blocks.
+struct Welder {
+    points: Vec<[f64; 2]>,
+    index: HashMap<(i64, i64), usize>,
+}
+
+impl Welder {
+    fn new() -> Self {
+        Welder { points: vec![], index: HashMap::new() }
+    }
+
+    fn key(p: [f64; 2]) -> (i64, i64) {
+        ((p[0] * 1e9).round() as i64, (p[1] * 1e9).round() as i64)
+    }
+
+    fn add(&mut self, p: [f64; 2]) -> usize {
+        let k = Self::key(p);
+        *self.index.entry(k).or_insert_with(|| {
+            self.points.push(p);
+            self.points.len() - 1
+        })
+    }
+}
+
+/// Butterfly ("O-grid") disk mesh of radius `r` centred at `(cx, cy)`:
+/// a central n x n square block plus four n x m transition blocks mapped
+/// to the circle. Total cells: n^2 + 4 n m (n=16, m=12 -> 1024, the
+/// paper's SS4.7.2 disk).
+pub fn disk(n: usize, m: usize, cx: f64, cy: f64, r: f64) -> QuadMesh {
+    assert!(n >= 1 && m >= 1);
+    let s = 0.5 * r; // half-side of the inner square block
+    let mut w = Welder::new();
+    let mut cells = Vec::new();
+
+    // --- central block: [-s, s]^2
+    let mut grid = vec![vec![0usize; n + 1]; n + 1];
+    for (iy, row) in grid.iter_mut().enumerate() {
+        for (ix, slot) in row.iter_mut().enumerate() {
+            let x = -s + 2.0 * s * ix as f64 / n as f64;
+            let y = -s + 2.0 * s * iy as f64 / n as f64;
+            *slot = w.add([cx + x, cy + y]);
+        }
+    }
+    for iy in 0..n {
+        for ix in 0..n {
+            cells.push([grid[iy][ix], grid[iy][ix + 1], grid[iy + 1][ix + 1],
+                        grid[iy + 1][ix]]);
+        }
+    }
+
+    // --- four transition blocks: inner edge = square side, outer = arc.
+    // Side k covers angles centred on k*90deg - 135deg..-45deg style;
+    // parametrise t in [0,1] along the side, v in [0,1] inner->outer.
+    for side in 0..4 {
+        let mut block = vec![vec![0usize; n + 1]; m + 1];
+        for (iv, row) in block.iter_mut().enumerate() {
+            let v = iv as f64 / m as f64;
+            for (it, slot) in row.iter_mut().enumerate() {
+                let t = it as f64 / n as f64;
+                // inner square point along this side (CCW)
+                let (sx, sy) = match side {
+                    0 => (-s + 2.0 * s * t, -s), // bottom
+                    1 => (s, -s + 2.0 * s * t),  // right
+                    2 => (s - 2.0 * s * t, s),   // top
+                    _ => (-s, s - 2.0 * s * t),  // left
+                };
+                // matching arc point: angle sweeps the quarter circle
+                let a0 = match side {
+                    0 => -0.75 * std::f64::consts::PI,
+                    1 => -0.25 * std::f64::consts::PI,
+                    2 => 0.25 * std::f64::consts::PI,
+                    _ => 0.75 * std::f64::consts::PI,
+                };
+                let ang = a0 + t * 0.5 * std::f64::consts::PI;
+                let (axp, ayp) = (r * ang.cos(), r * ang.sin());
+                let x = sx + v * (axp - sx);
+                let y = sy + v * (ayp - sy);
+                *slot = w.add([cx + x, cy + y]);
+            }
+        }
+        for iv in 0..m {
+            for it in 0..n {
+                // orientation: keep CCW (inner->outer on the left)
+                cells.push([block[iv][it], block[iv][it + 1],
+                            block[iv + 1][it + 1], block[iv + 1][it]]);
+            }
+        }
+    }
+
+    let mut mesh = QuadMesh::new(w.points, cells).expect("disk mesh valid");
+    fix_orientation(&mut mesh);
+    mesh.compute_boundary();
+    mesh
+}
+
+/// Annulus (ring) mesh: n_theta x n_r cells between radii r0 < r1.
+pub fn annulus(n_theta: usize, n_r: usize, cx: f64, cy: f64, r0: f64,
+               r1: f64) -> QuadMesh {
+    assert!(n_theta >= 3 && n_r >= 1 && r0 > 0.0 && r1 > r0);
+    let mut points = Vec::with_capacity(n_theta * (n_r + 1));
+    for ir in 0..=n_r {
+        let r = r0 + (r1 - r0) * ir as f64 / n_r as f64;
+        for it in 0..n_theta {
+            let ang = 2.0 * std::f64::consts::PI * it as f64
+                / n_theta as f64;
+            points.push([cx + r * ang.cos(), cy + r * ang.sin()]);
+        }
+    }
+    let idx = |ir: usize, it: usize| ir * n_theta + (it % n_theta);
+    let mut cells = Vec::with_capacity(n_theta * n_r);
+    for ir in 0..n_r {
+        for it in 0..n_theta {
+            // CCW winding: radially outward is the "up" direction, so
+            // traverse inner edge first in +theta, then outer edge back.
+            cells.push([idx(ir, it), idx(ir, it + 1), idx(ir + 1, it + 1),
+                        idx(ir + 1, it)]);
+        }
+    }
+    let mut mesh = QuadMesh::new(points, cells).expect("annulus valid");
+    fix_orientation(&mut mesh);
+    mesh.compute_boundary();
+    mesh
+}
+
+/// Spur-gear radius profile at angle `theta`: a smoothed trapezoid wave
+/// between root and tip radius, `teeth` times around the circle. The
+/// smoothing (cosine flanks) keeps cells valid while still producing the
+/// strongly skewed quads the paper's gear mesh stresses.
+pub fn gear_radius(theta: f64, teeth: usize, r_root: f64, r_tip: f64) -> f64 {
+    let phase = (theta * teeth as f64 / (2.0 * std::f64::consts::PI))
+        .rem_euclid(1.0);
+    // tooth occupies [0, 0.45] of the pitch: flanks 0.1 wide each side
+    let prof = |p: f64| -> f64 {
+        let flank = 0.12;
+        let top = 0.45;
+        if p < flank {
+            0.5 * (1.0 - (std::f64::consts::PI * p / flank).cos())
+        } else if p < top - flank {
+            1.0
+        } else if p < top {
+            0.5 * (1.0 + (std::f64::consts::PI * (p - top + flank) / flank)
+                .cos())
+        } else {
+            0.0
+        }
+    };
+    r_root + (r_tip - r_root) * prof(phase)
+}
+
+/// Parametric spur gear with a hub bore: `n_theta x n_layers` quads
+/// between the hub circle (radius `r_hub`) and the gear outline.
+///
+/// `gear(20, 44, 16, ..)` -> 880 x 16 = 14,080 cells, the CI stand-in
+/// for the paper's 14,192-cell Gmsh mesh (DESIGN.md SS3).
+pub fn gear(teeth: usize, pts_per_tooth: usize, n_layers: usize, r_hub: f64,
+            r_root: f64, r_tip: f64) -> QuadMesh {
+    assert!(teeth >= 3 && pts_per_tooth >= 4 && n_layers >= 2);
+    assert!(r_hub < r_root && r_root < r_tip);
+    let n_theta = teeth * pts_per_tooth;
+    let mut points = Vec::with_capacity(n_theta * (n_layers + 1));
+    for il in 0..=n_layers {
+        let v = il as f64 / n_layers as f64;
+        // grade layers toward the outline so teeth are resolved
+        let vv = v.powf(0.8);
+        for it in 0..n_theta {
+            let ang = 2.0 * std::f64::consts::PI * it as f64
+                / n_theta as f64;
+            let r_out = gear_radius(ang, teeth, r_root, r_tip);
+            let r = r_hub + (r_out - r_hub) * vv;
+            points.push([r * ang.cos(), r * ang.sin()]);
+        }
+    }
+    let idx = |il: usize, it: usize| il * n_theta + (it % n_theta);
+    let mut cells = Vec::with_capacity(n_theta * n_layers);
+    for il in 0..n_layers {
+        for it in 0..n_theta {
+            cells.push([idx(il, it), idx(il, it + 1), idx(il + 1, it + 1),
+                        idx(il + 1, it)]);
+        }
+    }
+    let mut mesh = QuadMesh::new(points, cells).expect("gear valid");
+    fix_orientation(&mut mesh);
+    mesh.compute_boundary();
+    mesh
+}
+
+/// The canonical gear workloads from DESIGN.md / specs.py.
+pub fn gear_ci() -> QuadMesh {
+    // 20 teeth * 11 pts = 220 around, 8 layers -> 1760 cells
+    gear(20, 11, 8, 0.35, 0.8, 1.0)
+}
+
+pub fn gear_paper() -> QuadMesh {
+    // 20 teeth * 44 pts = 880 around, 16 layers -> 14,080 cells
+    gear(20, 44, 16, 0.35, 0.8, 1.0)
+}
+
+/// The paper's SS4.7.2 disk: 1024 cells (butterfly 16 + 4x16x12).
+pub fn disk_1024() -> QuadMesh {
+    disk(16, 12, 0.0, 0.0, 1.0)
+}
+
+/// Flip any negatively-oriented cells (shoelace) to CCW.
+fn fix_orientation(m: &mut QuadMesh) {
+    for c in &mut m.cells {
+        let p: Vec<[f64; 2]> = c.iter().map(|&v| m.points[v]).collect();
+        let area = 0.5
+            * ((p[0][0] * p[1][1] - p[1][0] * p[0][1])
+                + (p[1][0] * p[2][1] - p[2][0] * p[1][1])
+                + (p[2][0] * p[3][1] - p[3][0] * p[2][1])
+                + (p[3][0] * p[0][1] - p[0][0] * p[3][1]));
+        if area < 0.0 {
+            c.swap(1, 3);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::quality;
+
+    #[test]
+    fn rect_grid_matches_python_layout() {
+        let m = rect_grid(2, 2, 0.0, 0.0, 1.0, 1.0);
+        // node 4 = (iy=1, ix=1) -> (0.5, 0.5)
+        assert_eq!(m.points[4], [0.5, 0.5]);
+        // cell 0 corners = [0, 1, 4, 3]
+        assert_eq!(m.cells[0], [0, 1, 4, 3]);
+    }
+
+    #[test]
+    fn skewed_square_keeps_boundary_fixed() {
+        let m = skewed_square(4, 0.3);
+        for p in &m.points {
+            let on_bd = p[0].abs() < 1e-9 || (p[0] - 1.0).abs() < 1e-9
+                || p[1].abs() < 1e-9 || (p[1] - 1.0).abs() < 1e-9;
+            let inside = p[0] > -0.1 && p[0] < 1.1 && p[1] > -0.1
+                && p[1] < 1.1;
+            assert!(inside);
+            let _ = on_bd;
+        }
+        assert!((m.area() - 1.0).abs() < 1e-10);
+        assert!(quality::all_jacobians_positive(&m));
+    }
+
+    #[test]
+    fn disk_counts_and_area() {
+        let m = disk_1024();
+        assert_eq!(m.n_cells(), 1024);
+        let exact = std::f64::consts::PI;
+        assert!((m.area() - exact).abs() / exact < 0.01,
+                "area {} vs {}", m.area(), exact);
+        assert!(quality::all_jacobians_positive(&m));
+    }
+
+    #[test]
+    fn disk_boundary_on_circle() {
+        let m = disk(8, 6, 1.0, -2.0, 3.0);
+        for e in &m.boundary {
+            for v in [e.a, e.b] {
+                let p = m.points[v];
+                let r = ((p[0] - 1.0).powi(2) + (p[1] + 2.0).powi(2)).sqrt();
+                assert!((r - 3.0).abs() < 1e-9, "boundary point r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn annulus_counts() {
+        let m = annulus(12, 3, 0.0, 0.0, 0.5, 1.0);
+        assert_eq!(m.n_cells(), 36);
+        assert_eq!(m.n_points(), 12 * 4);
+        // two boundary loops: 12 inner + 12 outer edges
+        assert_eq!(m.boundary.len(), 24);
+        assert!(quality::all_jacobians_positive(&m));
+    }
+
+    #[test]
+    fn gear_ci_counts() {
+        let m = gear_ci();
+        assert_eq!(m.n_cells(), 1760);
+        assert!(quality::all_jacobians_positive(&m));
+        // two boundary loops (hub + outline)
+        assert_eq!(m.boundary.len(), 2 * 220);
+    }
+
+    #[test]
+    fn gear_paper_counts() {
+        let m = gear_paper();
+        assert_eq!(m.n_cells(), 14_080);
+        assert!(quality::all_jacobians_positive(&m));
+    }
+
+    #[test]
+    fn gear_has_genuinely_skewed_cells() {
+        let m = gear_ci();
+        let (mn, mx) = quality::jacobian_ratio_extremes(&m);
+        // teeth flanks produce strongly varying in-cell Jacobians; no
+        // cell of a curved mesh is perfectly affine (ratio < 1)
+        assert!(mn < 0.9, "min in-cell |J| ratio {mn}");
+        assert!(mx <= 1.0 + 1e-12 && mx > mn);
+    }
+
+    #[test]
+    fn gear_radius_periodic() {
+        for k in 0..5 {
+            let t = 0.3 + k as f64 * 2.0 * std::f64::consts::PI / 20.0;
+            let a = gear_radius(0.3, 20, 0.8, 1.0);
+            let b = gear_radius(t, 20, 0.8, 1.0);
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gear_radius_bounds() {
+        for i in 0..1000 {
+            let t = i as f64 * 0.0063;
+            let r = gear_radius(t, 14, 0.8, 1.0);
+            assert!((0.8..=1.0 + 1e-12).contains(&r));
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Gmsh `.msh` v2.2 ASCII reader/writer (quads + boundary lines).
+//!
+//! The paper's gear mesh was produced with Gmsh; this module lets users
+//! bring their own meshes while the generators cover the built-in
+//! workloads.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::QuadMesh;
+
+/// Parse a Gmsh v2.2 ASCII file. Quad elements (type 3) become cells;
+/// line elements (type 1) become tagged boundary edges (first tag).
+pub fn read(path: impl AsRef<Path>) -> Result<QuadMesh> {
+    let text = fs::read_to_string(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    parse(&text)
+}
+
+pub fn parse(text: &str) -> Result<QuadMesh> {
+    let mut lines = text.lines().peekable();
+    let mut node_ids: HashMap<usize, usize> = HashMap::new();
+    let mut points: Vec<[f64; 2]> = Vec::new();
+    let mut cells: Vec<[usize; 4]> = Vec::new();
+    let mut tagged: Vec<(usize, usize, u32)> = Vec::new();
+
+    while let Some(line) = lines.next() {
+        match line.trim() {
+            "$MeshFormat" => {
+                let fmt = lines.next().context("truncated $MeshFormat")?;
+                let ver: f64 = fmt
+                    .split_whitespace()
+                    .next()
+                    .context("bad format line")?
+                    .parse()?;
+                if !(2.0..3.0).contains(&ver) {
+                    bail!("only msh v2.x supported, got {ver}");
+                }
+                expect_end(&mut lines, "$EndMeshFormat")?;
+            }
+            "$Nodes" => {
+                let n: usize =
+                    lines.next().context("truncated $Nodes")?.trim()
+                        .parse()?;
+                for _ in 0..n {
+                    let l = lines.next().context("truncated node list")?;
+                    let mut it = l.split_whitespace();
+                    let id: usize = it.next().context("bad node")?.parse()?;
+                    let x: f64 = it.next().context("bad node")?.parse()?;
+                    let y: f64 = it.next().context("bad node")?.parse()?;
+                    node_ids.insert(id, points.len());
+                    points.push([x, y]);
+                }
+                expect_end(&mut lines, "$EndNodes")?;
+            }
+            "$Elements" => {
+                let n: usize =
+                    lines.next().context("truncated $Elements")?.trim()
+                        .parse()?;
+                for _ in 0..n {
+                    let l = lines.next().context("truncated element list")?;
+                    let toks: Vec<usize> = l
+                        .split_whitespace()
+                        .map(|t| t.parse::<usize>())
+                        .collect::<std::result::Result<_, _>>()?;
+                    if toks.len() < 3 {
+                        bail!("bad element line: {l}");
+                    }
+                    let etype = toks[1];
+                    let ntags = toks[2];
+                    let conn = &toks[3 + ntags..];
+                    let tag = if ntags > 0 { toks[3] as u32 } else { 0 };
+                    match etype {
+                        3 => {
+                            if conn.len() != 4 {
+                                bail!("quad with {} nodes", conn.len());
+                            }
+                            let mut c = [0usize; 4];
+                            for (k, id) in conn.iter().enumerate() {
+                                c[k] = *node_ids
+                                    .get(id)
+                                    .with_context(|| format!(
+                                        "element references unknown node {id}"
+                                    ))?;
+                            }
+                            cells.push(c);
+                        }
+                        1 => {
+                            let a = *node_ids.get(&conn[0])
+                                .context("unknown node")?;
+                            let b = *node_ids.get(&conn[1])
+                                .context("unknown node")?;
+                            tagged.push((a, b, tag));
+                        }
+                        15 => {} // points: ignore
+                        _ => {}  // other element types: ignore
+                    }
+                }
+                expect_end(&mut lines, "$EndElements")?;
+            }
+            _ => {}
+        }
+    }
+
+    if cells.is_empty() {
+        bail!("no quad elements found");
+    }
+    let mut mesh = QuadMesh::new(points, cells)?;
+    // apply tags from $Elements line entries to computed boundary
+    if !tagged.is_empty() {
+        let tag_of: HashMap<(usize, usize), u32> = tagged
+            .iter()
+            .map(|&(a, b, t)| ((a.min(b), a.max(b)), t))
+            .collect();
+        for e in &mut mesh.boundary {
+            if let Some(&t) = tag_of.get(&(e.a.min(e.b), e.a.max(e.b))) {
+                e.tag = t;
+            }
+        }
+    }
+    Ok(mesh)
+}
+
+fn expect_end<'a, I: Iterator<Item = &'a str>>(
+    lines: &mut I, end: &str,
+) -> Result<()> {
+    match lines.next() {
+        Some(l) if l.trim() == end => Ok(()),
+        other => bail!("expected {end}, got {other:?}"),
+    }
+}
+
+/// Write a mesh as Gmsh v2.2 ASCII (quads + tagged boundary lines).
+pub fn write(mesh: &QuadMesh, path: impl AsRef<Path>) -> Result<()> {
+    let mut s = String::new();
+    s.push_str("$MeshFormat\n2.2 0 8\n$EndMeshFormat\n$Nodes\n");
+    let _ = writeln!(s, "{}", mesh.n_points());
+    for (i, p) in mesh.points.iter().enumerate() {
+        let _ = writeln!(s, "{} {} {} 0", i + 1, p[0], p[1]);
+    }
+    s.push_str("$EndNodes\n$Elements\n");
+    let _ = writeln!(s, "{}", mesh.n_cells() + mesh.boundary.len());
+    let mut eid = 1;
+    for e in &mesh.boundary {
+        let _ = writeln!(s, "{eid} 1 2 {} 0 {} {}", e.tag, e.a + 1,
+                         e.b + 1);
+        eid += 1;
+    }
+    for c in &mesh.cells {
+        let _ = writeln!(s, "{eid} 3 2 0 0 {} {} {} {}", c[0] + 1,
+                         c[1] + 1, c[2] + 1, c[3] + 1);
+        eid += 1;
+    }
+    s.push_str("$EndElements\n");
+    fs::write(path.as_ref(), s)
+        .with_context(|| format!("write {}", path.as_ref().display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::generators;
+
+    const SAMPLE: &str = "\
+$MeshFormat
+2.2 0 8
+$EndMeshFormat
+$Nodes
+6
+1 0 0 0
+2 1 0 0
+3 2 0 0
+4 0 1 0
+5 1 1 0
+6 2 1 0
+$EndNodes
+$Elements
+4
+1 3 2 0 0 1 2 5 4
+2 3 2 0 0 2 3 6 5
+3 1 2 7 0 1 2
+4 1 2 7 0 2 3
+$EndElements
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = parse(SAMPLE).unwrap();
+        assert_eq!(m.n_points(), 6);
+        assert_eq!(m.n_cells(), 2);
+        assert!((m.area() - 2.0).abs() < 1e-12);
+        // bottom edges carry tag 7
+        let bottom: Vec<_> = m
+            .boundary
+            .iter()
+            .filter(|e| m.points[e.a][1] < 1e-9 && m.points[e.b][1] < 1e-9)
+            .collect();
+        assert_eq!(bottom.len(), 2);
+        assert!(bottom.iter().all(|e| e.tag == 7));
+    }
+
+    #[test]
+    fn roundtrip_gear() {
+        let m = generators::gear(6, 5, 3, 0.4, 0.8, 1.0);
+        let p = std::env::temp_dir().join("fastvpinns_gear.msh");
+        write(&m, &p).unwrap();
+        let back = read(&p).unwrap();
+        assert_eq!(back.n_cells(), m.n_cells());
+        assert_eq!(back.n_points(), m.n_points());
+        assert!((back.area() - m.area()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_v4() {
+        let bad = "$MeshFormat\n4.1 0 8\n$EndMeshFormat\n";
+        assert!(parse(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(parse("$MeshFormat\n2.2 0 8\n$EndMeshFormat\n").is_err());
+    }
+}

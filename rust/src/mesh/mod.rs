@@ -1,0 +1,270 @@
+//! Quadrilateral meshes: data structure, generators, Gmsh I/O, quality
+//! metrics, refinement and VTK export.
+//!
+//! Cells are counter-clockwise `[v0, v1, v2, v3]`, matching reference
+//! corners (-1,-1), (1,-1), (1,1), (-1,1) — the contract shared with
+//! `fem::bilinear` and python `fem_py.transforms`.
+
+pub mod generators;
+pub mod gmsh;
+pub mod quality;
+pub mod refine;
+pub mod vtk;
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// An oriented boundary edge (a -> b in the owning cell's CCW order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BoundaryEdge {
+    pub a: usize,
+    pub b: usize,
+    /// Physical tag (0 = untagged / default boundary).
+    pub tag: u32,
+}
+
+/// A 2D all-quad mesh.
+#[derive(Debug, Clone, Default)]
+pub struct QuadMesh {
+    pub points: Vec<[f64; 2]>,
+    pub cells: Vec<[usize; 4]>,
+    /// Oriented boundary edges; populated by `compute_boundary` (called
+    /// by all constructors in this crate).
+    pub boundary: Vec<BoundaryEdge>,
+}
+
+impl QuadMesh {
+    pub fn new(points: Vec<[f64; 2]>, cells: Vec<[usize; 4]>) -> Result<Self> {
+        let mut m = QuadMesh { points, cells, boundary: vec![] };
+        m.validate()?;
+        m.compute_boundary();
+        Ok(m)
+    }
+
+    pub fn n_points(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// The 4 vertex coordinates of cell `e`.
+    pub fn cell_vertices(&self, e: usize) -> [[f64; 2]; 4] {
+        let c = self.cells[e];
+        [self.points[c[0]], self.points[c[1]], self.points[c[2]],
+         self.points[c[3]]]
+    }
+
+    fn validate(&self) -> Result<()> {
+        for (i, c) in self.cells.iter().enumerate() {
+            for &v in c {
+                if v >= self.points.len() {
+                    bail!("cell {i} references missing point {v}");
+                }
+            }
+            let set: std::collections::BTreeSet<_> = c.iter().collect();
+            if set.len() != 4 {
+                bail!("cell {i} has repeated vertices: {c:?}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Find boundary edges: cell edges that occur exactly once.
+    pub fn compute_boundary(&mut self) {
+        let mut count: HashMap<(usize, usize), (usize, (usize, usize))> =
+            HashMap::new();
+        for c in &self.cells {
+            for k in 0..4 {
+                let a = c[k];
+                let b = c[(k + 1) % 4];
+                let key = (a.min(b), a.max(b));
+                let e = count.entry(key).or_insert((0, (a, b)));
+                e.0 += 1;
+            }
+        }
+        let mut edges: Vec<BoundaryEdge> = count
+            .into_iter()
+            .filter(|(_, (n, _))| *n == 1)
+            .map(|(_, (_, (a, b)))| BoundaryEdge { a, b, tag: 0 })
+            .collect();
+        // deterministic order (hash maps are not)
+        edges.sort_by_key(|e| (e.a, e.b));
+        self.boundary = edges;
+    }
+
+    /// Total boundary length.
+    pub fn boundary_length(&self) -> f64 {
+        self.boundary
+            .iter()
+            .map(|e| dist(self.points[e.a], self.points[e.b]))
+            .sum()
+    }
+
+    /// Sample exactly `n` points spread along the boundary proportionally
+    /// to edge length (deterministic; used to build the static-shape
+    /// Dirichlet inputs of the AOT artifacts).
+    pub fn sample_boundary(&self, n: usize) -> Vec<[f64; 2]> {
+        assert!(!self.boundary.is_empty(), "mesh has no boundary");
+        let total = self.boundary_length();
+        let mut out = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        let mut edge_iter = self.boundary.iter();
+        let mut cur = edge_iter.next().unwrap();
+        let mut cur_len = dist(self.points[cur.a], self.points[cur.b]);
+        for i in 0..n {
+            let target = total * i as f64 / n as f64;
+            while acc + cur_len < target {
+                acc += cur_len;
+                match edge_iter.next() {
+                    Some(e) => {
+                        cur = e;
+                        cur_len = dist(self.points[cur.a],
+                                       self.points[cur.b]);
+                    }
+                    None => break,
+                }
+            }
+            let t = if cur_len > 0.0 {
+                ((target - acc) / cur_len).clamp(0.0, 1.0)
+            } else {
+                0.0
+            };
+            let pa = self.points[cur.a];
+            let pb = self.points[cur.b];
+            out.push([pa[0] + t * (pb[0] - pa[0]),
+                      pa[1] + t * (pb[1] - pa[1])]);
+        }
+        out
+    }
+
+    /// Draw `n` interior sample points: pick a random cell, then a random
+    /// reference point, and map it — always inside the domain, even for
+    /// non-convex meshes (gear!).
+    pub fn sample_interior(&self, n: usize, seed: u64) -> Vec<[f64; 2]> {
+        use crate::fem::bilinear::BilinearMap;
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let e = rng.below(self.n_cells());
+                let bm = BilinearMap::new(&self.cell_vertices(e));
+                let xi = rng.uniform_in(-1.0, 1.0);
+                let eta = rng.uniform_in(-1.0, 1.0);
+                bm.map(xi, eta)
+            })
+            .collect()
+    }
+
+    /// Bounding box: ((xmin, ymin), (xmax, ymax)).
+    pub fn bbox(&self) -> ([f64; 2], [f64; 2]) {
+        let mut lo = [f64::INFINITY; 2];
+        let mut hi = [f64::NEG_INFINITY; 2];
+        for p in &self.points {
+            for d in 0..2 {
+                lo[d] = lo[d].min(p[d]);
+                hi[d] = hi[d].max(p[d]);
+            }
+        }
+        (lo, hi)
+    }
+
+    /// Total mesh area via the shoelace formula per cell.
+    pub fn area(&self) -> f64 {
+        self.cells
+            .iter()
+            .map(|c| {
+                let p: Vec<[f64; 2]> =
+                    c.iter().map(|&v| self.points[v]).collect();
+                0.5 * ((p[0][0] * p[1][1] - p[1][0] * p[0][1])
+                    + (p[1][0] * p[2][1] - p[2][0] * p[1][1])
+                    + (p[2][0] * p[3][1] - p[3][0] * p[2][1])
+                    + (p[3][0] * p[0][1] - p[0][0] * p[3][1]))
+            })
+            .sum()
+    }
+}
+
+fn dist(a: [f64; 2], b: [f64; 2]) -> f64 {
+    ((a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn square() -> QuadMesh {
+        generators::unit_square(2)
+    }
+
+    #[test]
+    fn unit_square_counts() {
+        let m = square();
+        assert_eq!(m.n_points(), 9);
+        assert_eq!(m.n_cells(), 4);
+        assert_eq!(m.boundary.len(), 8);
+    }
+
+    #[test]
+    fn area_is_one() {
+        assert!((square().area() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn boundary_length_is_four() {
+        assert!((square().boundary_length() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn boundary_samples_on_boundary() {
+        let m = square();
+        for p in m.sample_boundary(40) {
+            let on = p[0].abs() < 1e-12 || (p[0] - 1.0).abs() < 1e-12
+                || p[1].abs() < 1e-12 || (p[1] - 1.0).abs() < 1e-12;
+            assert!(on, "{p:?} not on boundary");
+        }
+    }
+
+    #[test]
+    fn boundary_sample_count_exact() {
+        let m = square();
+        for n in [1, 7, 100, 1000] {
+            assert_eq!(m.sample_boundary(n).len(), n);
+        }
+    }
+
+    #[test]
+    fn interior_samples_inside_bbox() {
+        let m = square();
+        for p in m.sample_interior(200, 1) {
+            assert!((0.0..=1.0).contains(&p[0]));
+            assert!((0.0..=1.0).contains(&p[1]));
+        }
+    }
+
+    #[test]
+    fn rejects_bad_cells() {
+        let pts = vec![[0.0, 0.0], [1.0, 0.0], [1.0, 1.0]];
+        assert!(QuadMesh::new(pts.clone(), vec![[0, 1, 2, 5]]).is_err());
+        assert!(QuadMesh::new(pts, vec![[0, 1, 2, 2]]).is_err());
+    }
+
+    #[test]
+    fn euler_characteristic_disk_topology() {
+        // V - E + F = 1 for a disk-like mesh (counting unique edges)
+        let m = generators::unit_square(5);
+        let mut edges = std::collections::BTreeSet::new();
+        for c in &m.cells {
+            for k in 0..4 {
+                let a = c[k];
+                let b = c[(k + 1) % 4];
+                edges.insert((a.min(b), a.max(b)));
+            }
+        }
+        let v = m.n_points() as i64;
+        let e = edges.len() as i64;
+        let f = m.n_cells() as i64;
+        assert_eq!(v - e + f, 1);
+    }
+}

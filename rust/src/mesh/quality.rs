@@ -1,0 +1,147 @@
+//! Mesh quality metrics: Jacobian positivity (validity), in-cell
+//! Jacobian variation (skewness proxy), aspect ratio.
+
+use crate::fem::bilinear::BilinearMap;
+
+use super::QuadMesh;
+
+const SAMPLE: [f64; 5] = [-1.0, -0.5, 0.0, 0.5, 1.0];
+
+/// Minimum Jacobian determinant over a 5x5 reference sample of cell `e`.
+pub fn min_jacobian(mesh: &QuadMesh, e: usize) -> f64 {
+    let bm = BilinearMap::new(&mesh.cell_vertices(e));
+    let mut mn = f64::INFINITY;
+    for &xi in &SAMPLE {
+        for &eta in &SAMPLE {
+            mn = mn.min(bm.jacobian(xi, eta).det);
+        }
+    }
+    mn
+}
+
+/// Max Jacobian determinant over the same sample.
+pub fn max_jacobian(mesh: &QuadMesh, e: usize) -> f64 {
+    let bm = BilinearMap::new(&mesh.cell_vertices(e));
+    let mut mx = f64::NEG_INFINITY;
+    for &xi in &SAMPLE {
+        for &eta in &SAMPLE {
+            mx = mx.max(bm.jacobian(xi, eta).det);
+        }
+    }
+    mx
+}
+
+/// True if every cell has strictly positive Jacobian everywhere sampled
+/// (the mesh is valid / non-inverted).
+pub fn all_jacobians_positive(mesh: &QuadMesh) -> bool {
+    (0..mesh.n_cells()).all(|e| min_jacobian(mesh, e) > 0.0)
+}
+
+/// Worst in-cell Jacobian ratio min/max over the mesh: 1.0 for perfectly
+/// affine cells, -> 0 for heavily skewed ones. Returns (worst, best).
+pub fn jacobian_ratio_extremes(mesh: &QuadMesh) -> (f64, f64) {
+    let mut worst = f64::INFINITY;
+    let mut best = f64::NEG_INFINITY;
+    for e in 0..mesh.n_cells() {
+        let mn = min_jacobian(mesh, e);
+        let mx = max_jacobian(mesh, e);
+        if mx > 0.0 {
+            let ratio = mn / mx;
+            worst = worst.min(ratio);
+            best = best.max(ratio);
+        }
+    }
+    (worst, best)
+}
+
+/// Aspect ratio of cell `e`: longest edge / shortest edge.
+pub fn aspect_ratio(mesh: &QuadMesh, e: usize) -> f64 {
+    let v = mesh.cell_vertices(e);
+    let mut lens = [0.0; 4];
+    for k in 0..4 {
+        let a = v[k];
+        let b = v[(k + 1) % 4];
+        lens[k] = ((a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2)).sqrt();
+    }
+    let mx = lens.iter().cloned().fold(f64::MIN, f64::max);
+    let mn = lens.iter().cloned().fold(f64::MAX, f64::min);
+    mx / mn
+}
+
+/// Summary over the whole mesh (printed by `repro mesh`).
+#[derive(Debug, Clone, Copy)]
+pub struct QualityReport {
+    pub n_cells: usize,
+    pub n_points: usize,
+    pub all_valid: bool,
+    pub min_jac: f64,
+    pub worst_ratio: f64,
+    pub max_aspect: f64,
+    pub area: f64,
+}
+
+pub fn report(mesh: &QuadMesh) -> QualityReport {
+    let mut min_jac = f64::INFINITY;
+    let mut max_aspect: f64 = 0.0;
+    for e in 0..mesh.n_cells() {
+        min_jac = min_jac.min(min_jacobian(mesh, e));
+        max_aspect = max_aspect.max(aspect_ratio(mesh, e));
+    }
+    let (worst_ratio, _) = jacobian_ratio_extremes(mesh);
+    QualityReport {
+        n_cells: mesh.n_cells(),
+        n_points: mesh.n_points(),
+        all_valid: min_jac > 0.0,
+        min_jac,
+        worst_ratio,
+        max_aspect,
+        area: mesh.area(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::generators;
+
+    #[test]
+    fn unit_square_is_perfect() {
+        let m = generators::unit_square(3);
+        assert!(all_jacobians_positive(&m));
+        let (worst, best) = jacobian_ratio_extremes(&m);
+        assert!((worst - 1.0).abs() < 1e-12);
+        assert!((best - 1.0).abs() < 1e-12);
+        assert!((aspect_ratio(&m, 0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skewed_mesh_valid_but_not_affine() {
+        let m = generators::skewed_square(4, 0.3);
+        assert!(all_jacobians_positive(&m));
+        let (worst, _) = jacobian_ratio_extremes(&m);
+        assert!(worst < 1.0 - 1e-6);
+    }
+
+    #[test]
+    fn inverted_cell_detected() {
+        // deliberately build a bow-tie (self-intersecting) quad
+        let pts = vec![[0.0, 0.0], [1.0, 0.0], [0.0, 1.0], [1.0, 1.0]];
+        let m = QuadMesh::new(pts, vec![[0, 1, 2, 3]]).unwrap();
+        assert!(!all_jacobians_positive(&m));
+    }
+
+    #[test]
+    fn rect_aspect() {
+        let m = generators::rect_grid(1, 1, 0.0, 0.0, 4.0, 1.0);
+        assert!((aspect_ratio(&m, 0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_fields() {
+        let m = generators::disk(4, 3, 0.0, 0.0, 1.0);
+        let r = report(&m);
+        assert_eq!(r.n_cells, m.n_cells());
+        assert!(r.all_valid);
+        assert!(r.area > 3.0 && r.area < 3.2);
+    }
+}

@@ -1,0 +1,104 @@
+//! Uniform quad refinement: each cell splits into 4 (edge midpoints +
+//! centroid). Used for FEM convergence studies (Table 1 DOF ladder).
+
+use std::collections::HashMap;
+
+use super::QuadMesh;
+
+/// One level of uniform refinement.
+pub fn refine_uniform(mesh: &QuadMesh) -> QuadMesh {
+    let mut points = mesh.points.clone();
+    let mut edge_mid: HashMap<(usize, usize), usize> = HashMap::new();
+    let mut cells = Vec::with_capacity(mesh.n_cells() * 4);
+
+    let mut midpoint = |a: usize, b: usize, pts: &mut Vec<[f64; 2]>| {
+        let key = (a.min(b), a.max(b));
+        *edge_mid.entry(key).or_insert_with(|| {
+            let pa = pts[a];
+            let pb = pts[b];
+            pts.push([(pa[0] + pb[0]) / 2.0, (pa[1] + pb[1]) / 2.0]);
+            pts.len() - 1
+        })
+    };
+
+    for c in &mesh.cells {
+        let [v0, v1, v2, v3] = *c;
+        let m01 = midpoint(v0, v1, &mut points);
+        let m12 = midpoint(v1, v2, &mut points);
+        let m23 = midpoint(v2, v3, &mut points);
+        let m30 = midpoint(v3, v0, &mut points);
+        let p = [
+            (points[v0][0] + points[v1][0] + points[v2][0] + points[v3][0])
+                / 4.0,
+            (points[v0][1] + points[v1][1] + points[v2][1] + points[v3][1])
+                / 4.0,
+        ];
+        points.push(p);
+        let ctr = points.len() - 1;
+        cells.push([v0, m01, ctr, m30]);
+        cells.push([m01, v1, m12, ctr]);
+        cells.push([ctr, m12, v2, m23]);
+        cells.push([m30, ctr, m23, v3]);
+    }
+
+    QuadMesh::new(points, cells).expect("refinement preserves validity")
+}
+
+/// `levels` rounds of refinement.
+pub fn refine_n(mesh: &QuadMesh, levels: usize) -> QuadMesh {
+    let mut m = mesh.clone();
+    for _ in 0..levels {
+        m = refine_uniform(&m);
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::{generators, quality};
+
+    #[test]
+    fn counts_quadruple() {
+        let m = generators::unit_square(2);
+        let r = refine_uniform(&m);
+        assert_eq!(r.n_cells(), 16);
+        // structured grid: refined = 4x4 grid -> 25 points
+        assert_eq!(r.n_points(), 25);
+    }
+
+    #[test]
+    fn area_preserved() {
+        let m = generators::skewed_square(3, 0.2);
+        let r = refine_uniform(&m);
+        assert!((r.area() - m.area()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validity_preserved_on_gear() {
+        let m = generators::gear(8, 6, 3, 0.4, 0.8, 1.0);
+        let r = refine_uniform(&m);
+        assert_eq!(r.n_cells(), 4 * m.n_cells());
+        assert!(quality::all_jacobians_positive(&r));
+    }
+
+    #[test]
+    fn refine_n_levels() {
+        let m = generators::unit_square(1);
+        let r = refine_n(&m, 3);
+        assert_eq!(r.n_cells(), 64);
+    }
+
+    #[test]
+    fn shared_edges_welded() {
+        // refined 2x2 grid must not duplicate midpoints on shared edges
+        let m = generators::unit_square(2);
+        let r = refine_uniform(&m);
+        let mut seen = std::collections::HashMap::new();
+        for p in &r.points {
+            let key = ((p[0] * 1e9) as i64, (p[1] * 1e9) as i64);
+            *seen.entry(key).or_insert(0) += 1;
+        }
+        assert!(seen.values().all(|&c| c == 1), "duplicate points");
+    }
+}

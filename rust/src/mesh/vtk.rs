@@ -1,0 +1,78 @@
+//! Legacy VTK (ASCII, unstructured grid) writer for solution fields —
+//! lets users open predictions/errors in ParaView.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use super::QuadMesh;
+
+/// Write `mesh` with any number of named point-data scalar fields.
+pub fn write_point_fields(
+    mesh: &QuadMesh,
+    fields: &[(&str, &[f64])],
+    path: impl AsRef<Path>,
+) -> Result<()> {
+    for (name, data) in fields {
+        ensure!(data.len() == mesh.n_points(),
+                "field '{name}' has {} values for {} points", data.len(),
+                mesh.n_points());
+    }
+    let mut s = String::new();
+    s.push_str("# vtk DataFile Version 3.0\nfastvpinns\nASCII\n");
+    s.push_str("DATASET UNSTRUCTURED_GRID\n");
+    let _ = writeln!(s, "POINTS {} double", mesh.n_points());
+    for p in &mesh.points {
+        let _ = writeln!(s, "{} {} 0", p[0], p[1]);
+    }
+    let _ = writeln!(s, "CELLS {} {}", mesh.n_cells(), mesh.n_cells() * 5);
+    for c in &mesh.cells {
+        let _ = writeln!(s, "4 {} {} {} {}", c[0], c[1], c[2], c[3]);
+    }
+    let _ = writeln!(s, "CELL_TYPES {}", mesh.n_cells());
+    for _ in 0..mesh.n_cells() {
+        s.push_str("9\n"); // VTK_QUAD
+    }
+    if !fields.is_empty() {
+        let _ = writeln!(s, "POINT_DATA {}", mesh.n_points());
+        for (name, data) in fields {
+            let _ = writeln!(s, "SCALARS {name} double 1");
+            s.push_str("LOOKUP_TABLE default\n");
+            for v in *data {
+                let _ = writeln!(s, "{v}");
+            }
+        }
+    }
+    fs::write(path.as_ref(), s)
+        .with_context(|| format!("write {}", path.as_ref().display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::generators;
+
+    #[test]
+    fn writes_valid_header() {
+        let m = generators::unit_square(2);
+        let u: Vec<f64> = m.points.iter().map(|p| p[0] + p[1]).collect();
+        let p = std::env::temp_dir().join("fastvpinns_test.vtk");
+        write_point_fields(&m, &[("u", &u)], &p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("# vtk DataFile"));
+        assert!(text.contains("POINTS 9 double"));
+        assert!(text.contains("CELL_TYPES 4"));
+        assert!(text.contains("SCALARS u double 1"));
+    }
+
+    #[test]
+    fn rejects_wrong_field_length() {
+        let m = generators::unit_square(1);
+        let bad = vec![0.0; 3];
+        let p = std::env::temp_dir().join("fastvpinns_bad.vtk");
+        assert!(write_point_fields(&m, &[("u", &bad)], &p).is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! Every PDE instance the paper evaluates, as `Problem` trait objects:
+//! forcing term, Dirichlet data, exact solution (when analytic) and
+//! coefficients. Forcing terms for manufactured solutions are derived
+//! with the `autodiff` substrate — no hand calculus.
+
+use crate::autodiff::{probe_2d, Dual2};
+
+/// A scalar 2D convection-diffusion problem instance.
+pub trait Problem {
+    fn name(&self) -> &str;
+    /// Source term f(x, y).
+    fn forcing(&self, x: f64, y: f64) -> f64;
+    /// Dirichlet boundary value g(x, y).
+    fn boundary(&self, x: f64, y: f64) -> f64;
+    /// Analytic solution, when available.
+    fn exact(&self, _x: f64, _y: f64) -> Option<f64> {
+        None
+    }
+    /// Diffusion coefficient (constant problems).
+    fn eps(&self) -> f64 {
+        1.0
+    }
+    /// Convection velocity.
+    fn b(&self) -> (f64, f64) {
+        (0.0, 0.0)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Poisson sin(omega x) sin(omega y) family (SS4.6)
+// ---------------------------------------------------------------------
+
+/// `-lap u = -2 omega^2 sin(omega x) sin(omega y)` on (0,1)^2, exact
+/// solution `u = -sin(omega x) sin(omega y)` (paper SS4.6).
+pub struct PoissonSin {
+    pub omega: f64,
+    label: String,
+}
+
+impl PoissonSin {
+    pub fn new(omega: f64) -> Self {
+        PoissonSin { omega, label: format!("poisson_sin_w{omega:.3}") }
+    }
+}
+
+impl Problem for PoissonSin {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn forcing(&self, x: f64, y: f64) -> f64 {
+        let om = self.omega;
+        -2.0 * om * om * (om * x).sin() * (om * y).sin()
+    }
+
+    fn boundary(&self, x: f64, y: f64) -> f64 {
+        self.exact(x, y).unwrap()
+    }
+
+    fn exact(&self, x: f64, y: f64) -> Option<f64> {
+        Some(-(self.omega * x).sin() * (self.omega * y).sin())
+    }
+}
+
+/// Convenience constructor.
+pub fn poisson_sin(omega: f64) -> Box<dyn Problem> {
+    Box::new(PoissonSin::new(omega))
+}
+
+// ---------------------------------------------------------------------
+// Gear convection-diffusion (SS4.6.4, Fig. 12)
+// ---------------------------------------------------------------------
+
+/// `-eps lap u + b . grad u = 50 sin(x) + cos(x)` on the gear domain,
+/// u = 0 on the boundary; eps = 1, b = (0.1, 0). No analytic solution —
+/// the FEM solver provides the reference field.
+pub struct GearCd;
+
+impl Problem for GearCd {
+    fn name(&self) -> &str {
+        "gear_cd"
+    }
+
+    fn forcing(&self, x: f64, _y: f64) -> f64 {
+        50.0 * x.sin() + x.cos()
+    }
+
+    fn boundary(&self, _x: f64, _y: f64) -> f64 {
+        0.0
+    }
+
+    fn b(&self) -> (f64, f64) {
+        (0.1, 0.0)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Inverse: constant diffusion (SS4.7.1, Fig. 14)
+// ---------------------------------------------------------------------
+
+/// `-eps lap u = f` on (-1,1)^2 with exact
+/// `u = 10 sin(x) tanh(x) exp(-eps_actual x^2)`, eps_actual = 0.3.
+/// The forcing is manufactured via Dual2 so the trainable eps must
+/// converge to eps_actual.
+pub struct InverseConstPoisson {
+    pub eps_actual: f64,
+}
+
+impl InverseConstPoisson {
+    pub fn new() -> Self {
+        InverseConstPoisson { eps_actual: 0.3 }
+    }
+
+    fn u_dual(&self, x: Dual2, _y: Dual2) -> Dual2 {
+        let e = self.eps_actual;
+        x.sin() * x.tanh() * ((x * x) * (-e)).exp() * 10.0
+    }
+}
+
+impl Default for InverseConstPoisson {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Problem for InverseConstPoisson {
+    fn name(&self) -> &str {
+        "inverse_const_poisson"
+    }
+
+    fn forcing(&self, x: f64, y: f64) -> f64 {
+        // f = -eps_actual * lap(u_exact)
+        let p = probe_2d(|a, b| self.u_dual(a, b), x, y);
+        -self.eps_actual * p.lap
+    }
+
+    fn boundary(&self, x: f64, y: f64) -> f64 {
+        self.exact(x, y).unwrap()
+    }
+
+    fn exact(&self, x: f64, _y: f64) -> Option<f64> {
+        let e = self.eps_actual;
+        Some(10.0 * x.sin() * x.tanh() * (-e * x * x).exp())
+    }
+
+    fn eps(&self) -> f64 {
+        self.eps_actual
+    }
+}
+
+// ---------------------------------------------------------------------
+// Inverse: space-dependent diffusion (SS4.7.2, Fig. 15)
+// ---------------------------------------------------------------------
+
+/// `-div(eps(x,y) grad u) + u_x = 10` on the unit disk, u = 0 on the
+/// boundary; eps_actual = 0.5 (sin x + cos y). FEM provides u_ref.
+pub struct InverseSpaceCd;
+
+impl InverseSpaceCd {
+    pub fn eps_actual(x: f64, y: f64) -> f64 {
+        0.5 * (x.sin() + y.cos())
+    }
+}
+
+impl Problem for InverseSpaceCd {
+    fn name(&self) -> &str {
+        "inverse_space_cd"
+    }
+
+    fn forcing(&self, _x: f64, _y: f64) -> f64 {
+        10.0
+    }
+
+    fn boundary(&self, _x: f64, _y: f64) -> f64 {
+        0.0
+    }
+
+    fn b(&self) -> (f64, f64) {
+        (1.0, 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_exact_satisfies_pde() {
+        // -lap u == f pointwise
+        let p = PoissonSin::new(2.0 * std::f64::consts::PI);
+        for (x, y) in [(0.3, 0.7), (0.11, 0.95), (0.5, 0.5)] {
+            let om = p.omega;
+            let lap = 2.0 * om * om * (om * x).sin() * (om * y).sin();
+            assert!((-lap - p.forcing(x, y)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn poisson_boundary_zero_for_harmonic_omegas() {
+        let p = PoissonSin::new(2.0 * std::f64::consts::PI);
+        for t in [0.0, 0.31, 0.77, 1.0] {
+            assert!(p.boundary(t, 0.0).abs() < 1e-9);
+            assert!(p.boundary(0.0, t).abs() < 1e-9);
+            assert!(p.boundary(t, 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn inverse_const_forcing_consistent_with_fd() {
+        let p = InverseConstPoisson::new();
+        let g = |x: f64| 10.0 * x.sin() * x.tanh() * (-0.3 * x * x).exp();
+        let (x, y, h) = (0.4, -0.6, 1e-5);
+        let lap_fd = (g(x + h) - 2.0 * g(x) + g(x - h)) / (h * h);
+        let want = -0.3 * lap_fd;
+        assert!((p.forcing(x, y) - want).abs() < 1e-4,
+                "{} vs {}", p.forcing(x, y), want);
+    }
+
+    #[test]
+    fn inverse_const_exact_matches_boundary() {
+        let p = InverseConstPoisson::new();
+        assert_eq!(p.exact(0.7, -1.0), Some(p.boundary(0.7, -1.0)));
+    }
+
+    #[test]
+    fn gear_forcing_formula() {
+        let g = GearCd;
+        assert!((g.forcing(1.0, 5.0)
+            - (50.0 * 1.0f64.sin() + 1.0f64.cos())).abs() < 1e-14);
+        assert_eq!(g.b(), (0.1, 0.0));
+    }
+
+    #[test]
+    fn space_eps_range() {
+        // on the unit disk, eps stays positive (needed for well-posedness)
+        for i in 0..100 {
+            let t = i as f64 * 0.0628;
+            let (x, y) = (t.cos() * 0.9, t.sin() * 0.9);
+            assert!(InverseSpaceCd::eps_actual(x, y) > 0.0);
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! The PJRT engine: a CPU client plus a cache of compiled executables,
+//! keyed by artifact name.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+use super::tensor::TensorData;
+
+/// A loaded + compiled artifact.
+pub struct Artifact {
+    pub manifest: Manifest,
+    pub exe: xla::PjRtLoadedExecutable,
+    pub compile_seconds: f64,
+}
+
+impl Artifact {
+    /// Execute with the given ordered inputs; returns the decomposed
+    /// output tuple as literals.
+    pub fn execute(&self, inputs: &[&xla::Literal])
+        -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.manifest.inputs.len(),
+            "artifact {} expects {} inputs, got {}",
+            self.manifest.name, self.manifest.inputs.len(), inputs.len()
+        );
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", self.manifest.name))?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.manifest.outputs.len(),
+            "artifact {} returned {} outputs, manifest says {}",
+            self.manifest.name, parts.len(), self.manifest.outputs.len()
+        );
+        Ok(parts)
+    }
+
+    /// Execute with device-resident inputs (`PjRtBuffer`s). Avoids
+    /// re-uploading step-invariant tensors (the premultiplier tensors
+    /// can be hundreds of MB at paper scale) on every training step —
+    /// see EXPERIMENTS.md SSPerf.
+    pub fn execute_buffers(&self, inputs: &[&xla::PjRtBuffer])
+        -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.manifest.inputs.len(),
+            "artifact {} expects {} inputs, got {}",
+            self.manifest.name, self.manifest.inputs.len(), inputs.len()
+        );
+        let result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .with_context(|| format!("execute_b {}", self.manifest.name))?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.manifest.outputs.len(),
+            "artifact {} returned {} outputs, manifest says {}",
+            self.manifest.name, parts.len(), self.manifest.outputs.len()
+        );
+        Ok(parts)
+    }
+
+    /// Validate that host tensors match the manifest signature.
+    pub fn check_inputs(&self, tensors: &[TensorData]) -> Result<()> {
+        for (spec, t) in self.manifest.inputs.iter().zip(tensors) {
+            if spec.shape != t.shape {
+                bail!("input '{}' shape mismatch: manifest {:?}, got {:?}",
+                      spec.name, spec.shape, t.shape);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// PJRT CPU client + executable cache + artifact directory.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Artifact>>>,
+}
+
+impl Engine {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Engine { client, dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload a host literal to the device once (for step-invariant
+    /// inputs reused across thousands of `execute_buffers` calls).
+    pub fn to_buffer(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow::anyhow!("host->device upload: {e:?}"))
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Names of all artifacts present in the directory (manifest files).
+    pub fn list(&self) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)
+            .with_context(|| format!("read {}", self.dir.display()))? {
+            let p = entry?.path();
+            if p.extension().map(|e| e == "json").unwrap_or(false) {
+                if let Some(stem) = p.file_stem().and_then(|s| s.to_str()) {
+                    if stem != "index" {
+                        names.push(stem.to_string());
+                    }
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    /// Load (and compile) an artifact; cached by name.
+    pub fn load(&self, name: &str) -> Result<Rc<Artifact>> {
+        if let Some(a) = self.cache.borrow().get(name) {
+            return Ok(a.clone());
+        }
+        let man_path = self.dir.join(format!("{name}.json"));
+        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+        if !man_path.exists() || !hlo_path.exists() {
+            bail!(
+                "artifact '{name}' not found under {} — run `make \
+                 artifacts` (or `python -m compile.aot --name {name}`)",
+                self.dir.display()
+            );
+        }
+        let manifest = Manifest::load(&man_path)?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .map_err(|e| anyhow::anyhow!("parse {name} HLO: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        let art = Rc::new(Artifact {
+            manifest,
+            exe,
+            compile_seconds: t0.elapsed().as_secs_f64(),
+        });
+        self.cache.borrow_mut().insert(name.to_string(), art.clone());
+        Ok(art)
+    }
+
+    /// Evaluate a predict artifact at arbitrary points: pads/chunks to the
+    /// artifact's static n_eval and returns one Vec<f32> per output head.
+    pub fn predict(
+        &self,
+        predict_name: &str,
+        params: &[xla::Literal],
+        points: &[[f64; 2]],
+    ) -> Result<Vec<Vec<f32>>> {
+        let art = self.load(predict_name)?;
+        anyhow::ensure!(art.manifest.kind == "predict",
+                        "{predict_name} is not a predict artifact");
+        let n_eval = art.manifest.config.n_eval;
+        let heads = art.manifest.config.heads.max(1);
+        let n_params = art.manifest.inputs.len() - 1;
+        anyhow::ensure!(params.len() >= n_params,
+                        "predict needs {n_params} param arrays");
+        let mut outs: Vec<Vec<f32>> =
+            (0..heads).map(|_| Vec::with_capacity(points.len())).collect();
+        for chunk in points.chunks(n_eval) {
+            let mut xy = vec![0.0f32; n_eval * 2];
+            for (i, p) in chunk.iter().enumerate() {
+                xy[2 * i] = p[0] as f32;
+                xy[2 * i + 1] = p[1] as f32;
+            }
+            let xy_lit = TensorData::new(vec![n_eval, 2], xy)?.to_literal()?;
+            let mut inputs: Vec<&xla::Literal> =
+                params[..n_params].iter().collect();
+            inputs.push(&xy_lit);
+            let result = art.execute(&inputs)?;
+            for h in 0..heads {
+                let vals = result[h].to_vec::<f32>()?;
+                outs[h].extend_from_slice(&vals[..chunk.len()]);
+            }
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine tests that need real artifacts live in
+    //! rust/tests/integration.rs (skipped when artifacts/ is absent);
+    //! here we only test the filesystem surface.
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_helpful_error() {
+        let dir = std::env::temp_dir().join("fastvpinns_empty_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        let eng = Engine::new(&dir).unwrap();
+        let err = match eng.load("nope") {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn list_empty_dir() {
+        let dir = std::env::temp_dir().join("fastvpinns_empty_artifacts2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let eng = Engine::new(&dir).unwrap();
+        assert!(eng.list().unwrap().is_empty());
+    }
+
+    #[test]
+    fn cpu_client_boots() {
+        let dir = std::env::temp_dir();
+        let eng = Engine::new(dir).unwrap();
+        assert!(!eng.platform().is_empty());
+    }
+}

@@ -1,0 +1,231 @@
+//! Artifact manifests: the JSON sidecar written by `compile/aot.py`
+//! describing the exact ordered input/output signature of each HLO
+//! executable. The Rust side trusts only this file — never positional
+//! conventions baked into code.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.shape.iter().product()
+        }
+    }
+}
+
+/// Static configuration of an artifact (mirrors specs.Spec).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ArtifactConfig {
+    pub layers: Vec<usize>,
+    pub ne: usize,
+    pub nt1d: usize,
+    pub nq1d: usize,
+    pub nt: usize,
+    pub nq: usize,
+    pub nb: usize,
+    pub ns: usize,
+    pub n_coll: usize,
+    pub n_eval: usize,
+    pub kernel: String,
+    pub heads: usize,
+    pub eps: Option<f64>,
+    pub bx: Option<f64>,
+    pub by: Option<f64>,
+    pub paper_scale: bool,
+    pub note: String,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub name: String,
+    /// "train" | "predict"
+    pub kind: String,
+    /// poisson | cd | inverse_const | inverse_space | pinn | hp_loop | ""
+    pub loss: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<String>,
+    pub config: ArtifactConfig,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let name = j.req("name")?.as_str()?.to_string();
+        let kind = j.req("kind")?.as_str()?.to_string();
+        let loss = j.req("loss")?.as_str()?.to_string();
+        let mut inputs = Vec::new();
+        for item in j.req("inputs")?.as_arr()? {
+            let shape = item
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            if item.req("dtype")?.as_str()? != "f32" {
+                bail!("only f32 inputs supported");
+            }
+            inputs.push(IoSpec {
+                name: item.req("name")?.as_str()?.to_string(),
+                shape,
+            });
+        }
+        let outputs = j
+            .req("outputs")?
+            .as_arr()?
+            .iter()
+            .map(|o| o.as_str().map(|s| s.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+
+        let c = j.req("config")?;
+        let get = |k: &str| -> Result<usize> {
+            c.req(k)?.as_usize()
+        };
+        let cf = c.req("const")?;
+        let fopt = |k: &str| -> Option<f64> {
+            cf.get(k).and_then(|v| v.as_f64().ok())
+        };
+        let config = ArtifactConfig {
+            layers: c
+                .req("layers")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+            ne: get("ne")?,
+            nt1d: get("nt1d")?,
+            nq1d: get("nq1d")?,
+            nt: get("nt")?,
+            nq: get("nq")?,
+            nb: get("nb")?,
+            ns: get("ns")?,
+            n_coll: get("n_coll")?,
+            n_eval: get("n_eval")?,
+            kernel: c.req("kernel")?.as_str()?.to_string(),
+            heads: get("heads")?,
+            eps: fopt("eps"),
+            bx: fopt("bx"),
+            by: fopt("by"),
+            paper_scale: c.req("paper_scale")?.as_bool()?,
+            note: c.req("note")?.as_str()?.to_string(),
+        };
+        Ok(Manifest { name, kind, loss, inputs, outputs, config })
+    }
+
+    /// Number of parameter arrays (p0..p{n-1}) in the signature.
+    pub fn n_param_arrays(&self) -> usize {
+        self.inputs
+            .iter()
+            .take_while(|s| s.name.starts_with('p'))
+            .count()
+    }
+
+    /// Number of *network* parameter arrays: 2 per layer transition
+    /// (excludes the trainable eps scalar of inverse_const).
+    pub fn n_network_arrays(&self) -> usize {
+        2 * (self.config.layers.len() - 1)
+    }
+
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|s| s == name)
+    }
+
+    /// Shapes of the parameter/optimizer state arrays in order.
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        (0..self.n_param_arrays())
+            .map(|i| self.inputs[i].shape.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "fv_poisson_test",
+      "kind": "train",
+      "loss": "poisson",
+      "inputs": [
+        {"name": "p0", "shape": [2, 4], "dtype": "f32"},
+        {"name": "p1", "shape": [4], "dtype": "f32"},
+        {"name": "m0", "shape": [2, 4], "dtype": "f32"},
+        {"name": "m1", "shape": [4], "dtype": "f32"},
+        {"name": "v0", "shape": [2, 4], "dtype": "f32"},
+        {"name": "v1", "shape": [4], "dtype": "f32"},
+        {"name": "step", "shape": [], "dtype": "f32"},
+        {"name": "lr", "shape": [], "dtype": "f32"},
+        {"name": "quad_xy", "shape": [36, 2], "dtype": "f32"},
+        {"name": "gx", "shape": [4, 4, 9], "dtype": "f32"},
+        {"name": "gy", "shape": [4, 4, 9], "dtype": "f32"},
+        {"name": "f", "shape": [4, 4], "dtype": "f32"},
+        {"name": "bd_xy", "shape": [8, 2], "dtype": "f32"},
+        {"name": "bd_u", "shape": [8], "dtype": "f32"},
+        {"name": "tau", "shape": [], "dtype": "f32"}
+      ],
+      "outputs": ["p0", "p1", "m0", "m1", "v0", "v1",
+                  "loss", "var_loss", "bd_loss"],
+      "config": {
+        "layers": [2, 4, 1],
+        "ne": 4, "nt1d": 2, "nq1d": 3, "nt": 4, "nq": 9,
+        "nb": 8, "ns": 0, "n_coll": 0, "n_eval": 0,
+        "kernel": "pallas", "heads": 1,
+        "const": {"eps": 1.0},
+        "paper_scale": false, "note": "test",
+        "param_order": "..."
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "fv_poisson_test");
+        assert_eq!(m.inputs.len(), 15);
+        assert_eq!(m.n_param_arrays(), 2);
+        assert_eq!(m.config.ne, 4);
+        assert_eq!(m.config.eps, Some(1.0));
+        assert_eq!(m.config.bx, None);
+        assert_eq!(m.input_index("gx"), Some(9));
+        assert_eq!(m.output_index("loss"), Some(6));
+    }
+
+    #[test]
+    fn numel() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.inputs[m.input_index("gx").unwrap()].numel(), 144);
+        assert_eq!(m.inputs[m.input_index("tau").unwrap()].numel(), 1);
+    }
+
+    #[test]
+    fn rejects_non_f32() {
+        let bad = SAMPLE.replace("\"dtype\": \"f32\"",
+                                 "\"dtype\": \"f64\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_keys() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime: loads AOT artifacts (HLO text + JSON manifest) produced
+//! by `python -m compile.aot` and executes them on the CPU PJRT client.
+//!
+//! Python never runs here — this is the self-contained request path.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;

@@ -1,0 +1,108 @@
+//! Host-side tensor data and conversion to/from `xla::Literal`.
+
+use anyhow::{ensure, Result};
+
+/// A host f32 tensor (C order) with shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorData {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorData {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product::<usize>().max(
+            if shape.is_empty() { 1 } else { 0 });
+        let expect = if shape.is_empty() { 1 } else { n };
+        ensure!(data.len() == expect,
+                "shape {shape:?} wants {expect} elements, got {}",
+                data.len());
+        Ok(TensorData { shape, data })
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        TensorData { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = if shape.is_empty() {
+            1
+        } else {
+            shape.iter().product()
+        };
+        TensorData { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_f64(shape: Vec<usize>, data: &[f64]) -> Result<Self> {
+        Self::new(shape, data.iter().map(|&v| v as f32).collect())
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Convert to an XLA literal (f32).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        if self.shape.is_empty() {
+            return Ok(xla::Literal::scalar(self.data[0]));
+        }
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Read back from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(TensorData { shape: dims, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_validation() {
+        assert!(TensorData::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(TensorData::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(TensorData::new(vec![], vec![1.0]).is_ok());
+    }
+
+    #[test]
+    fn zeros_and_scalar() {
+        assert_eq!(TensorData::zeros(&[2, 2]).len(), 4);
+        assert_eq!(TensorData::scalar(3.0).shape.len(), 0);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = TensorData::new(vec![2, 3],
+                                (0..6).map(|i| i as f32).collect())
+            .unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = TensorData::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literal_roundtrip() {
+        let t = TensorData::scalar(2.5);
+        let lit = t.to_literal().unwrap();
+        let back = TensorData::from_literal(&lit).unwrap();
+        assert_eq!(back.data, vec![2.5]);
+        assert!(back.shape.is_empty());
+    }
+
+    #[test]
+    fn from_f64_casts() {
+        let t = TensorData::from_f64(vec![2], &[1.5, -2.5]).unwrap();
+        assert_eq!(t.data, vec![1.5f32, -2.5f32]);
+    }
+}

@@ -1,0 +1,153 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `repro <subcommand> [--flag value]... [--bool-flag]...`
+//! Flags may be given as `--key value` or `--key=value`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.bools.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_empty() {
+                out.subcommand = tok;
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key) || self.flags.contains_key(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.flag(key).unwrap_or(default).to_string()
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<String> {
+        self.flag(key)
+            .map(|s| s.to_string())
+            .ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got {v}")),
+        }
+    }
+
+    /// Error out on unknown flags — catches typos early.
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys().chain(self.bools.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --artifact fv_x --iters 100 --verbose");
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.flag("artifact"), Some("fv_x"));
+        assert_eq!(a.usize_or("iters", 0).unwrap(), 100);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn eq_form() {
+        let a = parse("run --lr=0.001 --name=x");
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.001);
+        assert_eq!(a.flag("name"), Some("x"));
+    }
+
+    #[test]
+    fn positional() {
+        let a = parse("experiment fig10 fig11");
+        assert_eq!(a.positional, vec!["fig10", "fig11"]);
+    }
+
+    #[test]
+    fn defaults_and_requirements() {
+        let a = parse("train");
+        assert_eq!(a.usize_or("iters", 7).unwrap(), 7);
+        assert!(a.req_str("artifact").is_err());
+    }
+
+    #[test]
+    fn bad_number() {
+        let a = parse("train --iters abc");
+        assert!(a.usize_or("iters", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("train --iterz 5");
+        assert!(a.check_known(&["iters"]).is_err());
+        assert!(a.check_known(&["iterz"]).is_ok());
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = parse("train --force");
+        assert!(a.has("force"));
+    }
+}

@@ -1,0 +1,88 @@
+//! Tiny CSV writer (and reader for tests) for experiment outputs under
+//! `results/`.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    n_cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let f = File::create(path.as_ref())
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(Self { w, n_cols: header.len() })
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> Result<()> {
+        anyhow::ensure!(cells.len() == self.n_cols,
+                        "row has {} cells, header has {}", cells.len(),
+                        self.n_cols);
+        writeln!(self.w, "{}", cells.join(","))?;
+        Ok(())
+    }
+
+    /// Convenience: numeric row.
+    pub fn row_f64(&mut self, cells: &[f64]) -> Result<()> {
+        self.row(&cells.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Parse a simple (no quoting) CSV back into rows — used by tests.
+pub fn read_simple(path: impl AsRef<Path>) -> Result<Vec<Vec<String>>> {
+    let text = fs::read_to_string(path)?;
+    Ok(text
+        .lines()
+        .filter(|l| !l.is_empty())
+        .map(|l| l.split(',').map(|c| c.to_string()).collect())
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("fastvpinns_csv_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn writes_and_reads() {
+        let p = tmp("a.csv");
+        {
+            let mut w = CsvWriter::create(&p, &["x", "y"]).unwrap();
+            w.row_f64(&[1.0, 2.5]).unwrap();
+            w.row(&["a".into(), "b".into()]).unwrap();
+            w.flush().unwrap();
+        }
+        let rows = read_simple(&p).unwrap();
+        assert_eq!(rows[0], vec!["x", "y"]);
+        assert_eq!(rows[1], vec!["1", "2.5"]);
+        assert_eq!(rows[2], vec!["a", "b"]);
+    }
+
+    #[test]
+    fn rejects_wrong_arity() {
+        let p = tmp("b.csv");
+        let mut w = CsvWriter::create(&p, &["x", "y"]).unwrap();
+        assert!(w.row_f64(&[1.0]).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Offline substrates: JSON, npy I/O, CSV, CLI parsing, RNG,
+//! statistics and a small property-test driver.
+//!
+//! The offline crate registry lacks serde/clap/criterion/rand/proptest,
+//! so this module provides the minimal, well-tested equivalents the rest
+//! of the crate builds on (DESIGN.md SS3).
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod npy;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,247 @@
+//! NumPy `.npy` v1.0 read/write for f32/f64 arrays (C order).
+//!
+//! Used for the Rust<->Python assembly cross-validation (`repro
+//! dump-tensors` -> pytest) and for persisting trained parameters.
+
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8] = b"\x93NUMPY";
+
+/// Write a C-ordered f64 array.
+pub fn write_f64(path: impl AsRef<Path>, data: &[f64], shape: &[usize])
+    -> Result<()> {
+    write_raw(path, "<f8", shape, bytemuck_f64(data))
+}
+
+/// Write a C-ordered f32 array.
+pub fn write_f32(path: impl AsRef<Path>, data: &[f32], shape: &[usize])
+    -> Result<()> {
+    write_raw(path, "<f4", shape, bytemuck_f32(data))
+}
+
+fn bytemuck_f64(d: &[f64]) -> Vec<u8> {
+    d.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+fn bytemuck_f32(d: &[f32]) -> Vec<u8> {
+    d.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+fn write_raw(path: impl AsRef<Path>, descr: &str, shape: &[usize],
+             payload: Vec<u8>) -> Result<()> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    let elem = descr[2..].parse::<usize>().unwrap_or(8);
+    if payload.len() != n * elem {
+        bail!("npy write: payload {} != {}x{}", payload.len(), n, elem);
+    }
+    let shape_str = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape.iter().map(|s| s.to_string())
+                .collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '{descr}', 'fortran_order': False, \
+         'shape': {shape_str}, }}"
+    );
+    // pad so that magic(6)+ver(2)+len(2)+header is a multiple of 64
+    let unpadded = MAGIC.len() + 2 + 2 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+
+    let mut f = File::create(path.as_ref())
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&[1u8, 0u8])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    f.write_all(&payload)?;
+    Ok(())
+}
+
+/// A loaded array: shape + f64 data (f32 sources are widened).
+#[derive(Debug, Clone)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: Vec<f64>,
+    /// original dtype descr, e.g. "<f4"
+    pub descr: String,
+}
+
+impl NpyArray {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+}
+
+/// Read a `.npy` file (supports `<f4`, `<f8`, `<i8`).
+pub fn read(path: impl AsRef<Path>) -> Result<NpyArray> {
+    let mut buf = Vec::new();
+    File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?
+        .read_to_end(&mut buf)?;
+    if buf.len() < 10 || &buf[..6] != MAGIC {
+        bail!("not an npy file: {}", path.as_ref().display());
+    }
+    let major = buf[6];
+    let (hlen, hstart) = match major {
+        1 => (u16::from_le_bytes([buf[8], buf[9]]) as usize, 10),
+        2 | 3 => (
+            u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize,
+            12,
+        ),
+        v => bail!("unsupported npy version {v}"),
+    };
+    let header = std::str::from_utf8(&buf[hstart..hstart + hlen])?;
+    let descr = extract_quoted(header, "descr")?;
+    if header.contains("'fortran_order': True") {
+        bail!("fortran order unsupported");
+    }
+    let shape = extract_shape(header)?;
+    let n: usize = shape.iter().product::<usize>().max(1);
+    let payload = &buf[hstart + hlen..];
+    let data: Vec<f64> = match descr.as_str() {
+        "<f8" => {
+            check_len(payload.len(), n * 8)?;
+            payload
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        }
+        "<f4" => {
+            check_len(payload.len(), n * 4)?;
+            payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64)
+                .collect()
+        }
+        "<i8" => {
+            check_len(payload.len(), n * 8)?;
+            payload
+                .chunks_exact(8)
+                .map(|c| i64::from_le_bytes(c.try_into().unwrap()) as f64)
+                .collect()
+        }
+        d => bail!("unsupported dtype {d}"),
+    };
+    Ok(NpyArray { shape, data, descr })
+}
+
+fn check_len(got: usize, want: usize) -> Result<()> {
+    if got < want {
+        bail!("payload too short: {got} < {want}");
+    }
+    Ok(())
+}
+
+fn extract_quoted(header: &str, key: &str) -> Result<String> {
+    let pat = format!("'{key}':");
+    let pos = header
+        .find(&pat)
+        .with_context(|| format!("npy header missing {key}"))?;
+    let rest = &header[pos + pat.len()..];
+    let q1 = rest.find('\'').context("bad header")?;
+    let rest = &rest[q1 + 1..];
+    let q2 = rest.find('\'').context("bad header")?;
+    Ok(rest[..q2].to_string())
+}
+
+fn extract_shape(header: &str) -> Result<Vec<usize>> {
+    let pos = header.find("'shape':").context("npy header missing shape")?;
+    let rest = &header[pos + 8..];
+    let open = rest.find('(').context("bad shape")?;
+    let close = rest.find(')').context("bad shape")?;
+    let inner = &rest[open + 1..close];
+    let mut out = Vec::new();
+    for tok in inner.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        out.push(tok.parse::<usize>()?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("fastvpinns_npy_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_f64_2d() {
+        let p = tmp("a.npy");
+        let data: Vec<f64> = (0..12).map(|i| i as f64 * 0.5).collect();
+        write_f64(&p, &data, &[3, 4]).unwrap();
+        let arr = read(&p).unwrap();
+        assert_eq!(arr.shape, vec![3, 4]);
+        assert_eq!(arr.data, data);
+        assert_eq!(arr.descr, "<f8");
+    }
+
+    #[test]
+    fn roundtrip_f32_3d() {
+        let p = tmp("b.npy");
+        let data: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        write_f32(&p, &data, &[2, 3, 4]).unwrap();
+        let arr = read(&p).unwrap();
+        assert_eq!(arr.shape, vec![2, 3, 4]);
+        assert_eq!(arr.to_f32(), data);
+    }
+
+    #[test]
+    fn roundtrip_scalar() {
+        let p = tmp("c.npy");
+        write_f64(&p, &[3.25], &[]).unwrap();
+        let arr = read(&p).unwrap();
+        assert!(arr.shape.is_empty());
+        assert_eq!(arr.data, vec![3.25]);
+    }
+
+    #[test]
+    fn roundtrip_1d() {
+        let p = tmp("d.npy");
+        write_f64(&p, &[1.0, 2.0], &[2]).unwrap();
+        let arr = read(&p).unwrap();
+        assert_eq!(arr.shape, vec![2]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("e.npy");
+        std::fs::write(&p, b"not an npy").unwrap();
+        assert!(read(&p).is_err());
+    }
+
+    #[test]
+    fn python_numpy_can_read_back() {
+        // header format sanity: 64-byte aligned, v1.0
+        let p = tmp("f.npy");
+        write_f32(&p, &[1.0, 2.0, 3.0], &[3]).unwrap();
+        let buf = std::fs::read(&p).unwrap();
+        assert_eq!(&buf[..6], MAGIC);
+        let hlen = u16::from_le_bytes([buf[8], buf[9]]) as usize;
+        assert_eq!((10 + hlen) % 64, 0);
+    }
+}

@@ -1,0 +1,79 @@
+//! Tiny property-test driver (the proptest crate is unavailable offline).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` against `cases` random
+//! inputs from `gen`; on failure it reports the case index and a Debug
+//! dump of the input, so failures are reproducible from the fixed seed.
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` inputs drawn by `gen`. Panics with context on
+/// the first failing case.
+pub fn check<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed on case {i}/{cases} (seed {seed}):\n\
+                 input = {input:#?}"
+            );
+        }
+    }
+}
+
+/// Like `check`, but the property returns Result so failures carry a
+/// message.
+pub fn check_result<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed on case {i}/{cases} (seed {seed}): {msg}\n\
+                 input = {input:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(1, 100, |r| r.uniform(), |&u| (0.0..1.0).contains(&u));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_loudly() {
+        check(2, 100, |r| r.uniform(), |&u| u < 0.5);
+    }
+
+    #[test]
+    fn result_variant() {
+        check_result(
+            3,
+            50,
+            |r| (r.uniform(), r.uniform()),
+            |&(a, b)| {
+                if a + b < 2.0 {
+                    Ok(())
+                } else {
+                    Err("sum too large".into())
+                }
+            },
+        );
+    }
+}

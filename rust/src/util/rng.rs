@@ -1,0 +1,130 @@
+//! Deterministic RNG (xorshift64*) + parameter initialisation.
+//!
+//! The `rand` crate is unavailable offline; training reproducibility only
+//! needs a seedable generator with decent equidistribution, which
+//! xorshift64* provides.
+
+/// xorshift64* PRNG. Deterministic across platforms.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // splitmix64-style scramble so nearby seeds diverge immediately,
+        // and avoid the all-zero fixed point
+        let mut z = seed.wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        Self { state: (z ^ (z >> 31)) | 1 }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform().max(1e-300);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.uniform() * n as f64) as usize % n.max(1)
+    }
+
+    /// Glorot/Xavier-uniform init for a (n_in, n_out) weight matrix,
+    /// row-major — matches the distribution PINN codes typically use.
+    pub fn glorot(&mut self, n_in: usize, n_out: usize) -> Vec<f32> {
+        let limit = (6.0 / (n_in + n_out) as f64).sqrt();
+        (0..n_in * n_out)
+            .map(|_| self.uniform_in(-limit, limit) as f32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(13);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn glorot_bounds() {
+        let mut r = Rng::new(5);
+        let w = r.glorot(30, 30);
+        let lim = (6.0f64 / 60.0).sqrt() as f32;
+        assert_eq!(w.len(), 900);
+        assert!(w.iter().all(|&x| x.abs() <= lim));
+        // not degenerate
+        let mx = w.iter().cloned().fold(f32::MIN, f32::max);
+        assert!(mx > 0.5 * lim);
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(17);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Timing statistics: the paper reports *median time per epoch*; this
+//! module implements that measurement protocol (plus percentiles) for
+//! the coordinator and the bench harness.
+
+use std::time::Instant;
+
+/// Accumulates per-step wall-clock samples.
+#[derive(Debug, Default, Clone)]
+pub struct StepTimer {
+    samples_ms: Vec<f64>,
+    current: Option<InstantWrap>,
+}
+
+#[derive(Debug, Clone)]
+struct InstantWrap(Instant);
+
+impl StepTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        self.current = Some(InstantWrap(Instant::now()));
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(InstantWrap(t0)) = self.current.take() {
+            self.samples_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary::from(&self.samples_ms)
+    }
+}
+
+/// Order statistics over a sample set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub median: f64,
+    pub p90: f64,
+    pub max: f64,
+    pub mean: f64,
+}
+
+impl Summary {
+    pub fn from(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary { n: 0, min: 0.0, median: 0.0, p90: 0.0,
+                             max: 0.0, mean: 0.0 };
+        }
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n: s.len(),
+            min: s[0],
+            median: percentile_sorted(&s, 50.0),
+            p90: percentile_sorted(&s, 90.0),
+            max: s[s.len() - 1],
+            mean: s.iter().sum::<f64>() / s.len() as f64,
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a sorted slice, p in [0, 100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Median of an unsorted slice.
+pub fn median(samples: &[f64]) -> f64 {
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, 50.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn percentiles() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile_sorted(&s, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile_sorted(&s, 100.0) - 100.0).abs() < 1e-12);
+        assert!((percentile_sorted(&s, 50.0) - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.mean, 22.0);
+        // median robust to the outlier, unlike the mean — exactly why
+        // the paper reports median per-epoch time
+        assert!(s.median < s.mean);
+    }
+
+    #[test]
+    fn empty_summary() {
+        let s = Summary::from(&[]);
+        assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn timer_records() {
+        let mut t = StepTimer::new();
+        for _ in 0..3 {
+            t.start();
+            std::hint::black_box((0..1000).sum::<u64>());
+            t.stop();
+        }
+        assert_eq!(t.count(), 3);
+        assert!(t.summary().min >= 0.0);
+    }
+
+    #[test]
+    fn stop_without_start_is_noop() {
+        let mut t = StepTimer::new();
+        t.stop();
+        assert_eq!(t.count(), 0);
+    }
+}
