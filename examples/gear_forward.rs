@@ -1,8 +1,9 @@
 //! Complex-geometry forward problem (paper SS4.6.4 / Fig. 12, CI scale):
 //! convection-diffusion on a spur-gear mesh with strongly skewed quads —
-//! the workload loop-based hp-VPINNs cannot handle.
+//! the workload loop-based hp-VPINNs cannot handle. Runs fully natively:
+//! FEM reference + pure-Rust FastVPINNs training, no artifacts.
 //!
-//!     make artifacts && cargo run --release --example gear_forward
+//!     cargo run --release --example gear_forward
 //!
 //! Flags via env: GEAR_ITERS (default 800).
 
@@ -14,7 +15,10 @@ use fastvpinns::fem::quadrature::QuadKind;
 use fastvpinns::fem_solver::{self, FemProblem};
 use fastvpinns::mesh::{generators, quality};
 use fastvpinns::problems::{GearCd, Problem};
-use fastvpinns::runtime::engine::Engine;
+use fastvpinns::runtime::backend::native::{
+    NativeBackend, NativeConfig, NativeLoss,
+};
+use fastvpinns::runtime::backend::BackendOpts;
 
 fn main() -> anyhow::Result<()> {
     let iters: usize = std::env::var("GEAR_ITERS")
@@ -39,9 +43,10 @@ fn main() -> anyhow::Result<()> {
     println!("FEM reference: {} iterations, {:.2}s",
              fem.solve_iterations, fem.solve_seconds);
 
-    // 3. FastVPINNs: pointwise-Jacobian tensors handle the skewed quads
+    // 3. FastVPINNs: pointwise-Jacobian tensors handle the skewed quads;
+    //    the native backend optimizes the cd loss with the paper's 3x50
+    //    net — no artifacts involved
     let domain = assembly::assemble(&mesh, 4, 5, QuadKind::GaussLegendre);
-    let engine = Engine::new("artifacts")?;
     let src = DataSource { mesh: &mesh, domain: Some(&domain),
                            problem: &problem, sensor_values: None };
     let cfg = TrainConfig {
@@ -50,13 +55,21 @@ fn main() -> anyhow::Result<()> {
         log_every: 50,
         ..TrainConfig::default()
     };
-    let mut trainer = Trainer::new(&engine, "fv_cd_gear", &src, &cfg)?;
+    let (bx, by) = problem.b();
+    let ncfg = NativeConfig {
+        layers: vec![2, 50, 50, 50, 1],
+        loss: NativeLoss::Forward { eps: problem.eps(), bx, by },
+        nb: 400,
+        ns: 0,
+    };
+    let backend = NativeBackend::new(&ncfg, &src, &BackendOpts::from(&cfg))?;
+    let mut trainer = Trainer::new(Box::new(backend), &cfg);
     let report = trainer.run()?;
     println!("FastVPINNs: {} iters, loss {:.3e}, {:.2} ms/iter median",
              report.steps, report.final_loss, report.median_step_ms);
 
     // 4. compare against FEM at the mesh nodes
-    let pred = trainer.predict("predict_gear_16k", &mesh.points)?;
+    let pred = trainer.predict(&mesh.points)?;
     let err = ErrorNorms::compute_f32(&pred, fem.nodal());
     println!("vs FEM: MAE {:.3e}, rel-L2 {:.3e}", err.mae, err.rel_l2);
     println!("gear_forward OK");

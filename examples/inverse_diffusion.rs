@@ -1,9 +1,10 @@
 //! Inverse problem (paper SS4.7.1 / Fig. 14, CI scale): recover the
 //! unknown constant diffusion coefficient eps = 0.3 from 50 sensor
-//! observations, starting from eps = 2.0. The trainable eps rides inside
-//! the AOT train-step artifact as an extra parameter slot.
+//! observations, starting from eps = 2.0. With the native backend the
+//! trainable eps is an extra scalar parameter with an analytic
+//! d(loss)/d(eps) — no artifacts, no Python.
 //!
-//!     make artifacts && cargo run --release --example inverse_diffusion
+//!     cargo run --release --example inverse_diffusion
 //!
 //! Env: INV_ITERS (default 4000).
 
@@ -13,7 +14,10 @@ use fastvpinns::fem::assembly;
 use fastvpinns::fem::quadrature::QuadKind;
 use fastvpinns::mesh::generators;
 use fastvpinns::problems::InverseConstPoisson;
-use fastvpinns::runtime::engine::Engine;
+use fastvpinns::runtime::backend::native::{
+    NativeBackend, NativeConfig, NativeLoss,
+};
+use fastvpinns::runtime::backend::BackendOpts;
 
 fn main() -> anyhow::Result<()> {
     let iters: usize = std::env::var("INV_ITERS")
@@ -26,7 +30,6 @@ fn main() -> anyhow::Result<()> {
     let mesh = generators::rect_grid(2, 2, -1.0, -1.0, 1.0, 1.0);
     let domain = assembly::assemble(&mesh, 5, 40, QuadKind::GaussLegendre);
 
-    let engine = Engine::new("artifacts")?;
     let src = DataSource { mesh: &mesh, domain: Some(&domain),
                            problem: &problem, sensor_values: None };
     let cfg = TrainConfig {
@@ -37,8 +40,14 @@ fn main() -> anyhow::Result<()> {
         log_every: 100,
         ..TrainConfig::default()
     };
-    let mut trainer = Trainer::new(
-        &engine, "fv_inverse_const_ne4_nt5_nq40", &src, &cfg)?;
+    let ncfg = NativeConfig {
+        layers: vec![2, 30, 30, 30, 1],
+        loss: NativeLoss::InverseConst,
+        nb: 400,
+        ns: 50,
+    };
+    let backend = NativeBackend::new(&ncfg, &src, &BackendOpts::from(&cfg))?;
+    let mut trainer = Trainer::new(Box::new(backend), &cfg);
 
     println!("recovering eps (actual {}, init {})...",
              problem.eps_actual, cfg.eps_init);

@@ -1,38 +1,47 @@
-//! Quickstart: the end-to-end FastVPINNs pipeline in ~50 lines.
+//! Quickstart: the end-to-end FastVPINNs pipeline in ~50 lines —
+//! no artifacts, no Python, no XLA.
 //!
 //! Solves the Poisson problem `-lap u = -2 w^2 sin(wx) sin(wy)` with
 //! omega = 2*pi on the unit square: mesh -> tensor assembly (Rust) ->
-//! AOT train-step execution (PJRT) -> error vs the exact solution.
+//! native train step (pure Rust backprop + Adam) -> error vs the exact
+//! solution. (Build with `--features xla` and `make artifacts` to run
+//! the same pipeline through AOT/PJRT instead.)
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 
 use fastvpinns::coordinator::metrics::eval_grid;
+use fastvpinns::coordinator::schedule::LrSchedule;
 use fastvpinns::coordinator::trainer::{DataSource, TrainConfig, Trainer};
 use fastvpinns::fem::assembly;
 use fastvpinns::fem::quadrature::QuadKind;
 use fastvpinns::mesh::generators;
 use fastvpinns::problems::{PoissonSin, Problem};
-use fastvpinns::runtime::engine::Engine;
+use fastvpinns::runtime::backend::native::{NativeBackend, NativeConfig};
+use fastvpinns::runtime::backend::BackendOpts;
 
 fn main() -> anyhow::Result<()> {
     let omega = 2.0 * std::f64::consts::PI;
     let problem = PoissonSin::new(omega);
 
-    // 1. mesh the unit square 2x2 and assemble the FastVPINNs tensors
-    //    (5^2 test functions, 20^2 quadrature points per element)
-    let mesh = generators::unit_square(2);
-    let domain = assembly::assemble(&mesh, 5, 20, QuadKind::GaussLegendre);
+    // 1. mesh the unit square 4x4 and assemble the FastVPINNs tensors
+    //    (5^2 test functions, 10^2 quadrature points per element)
+    let mesh = generators::unit_square(4);
+    let domain = assembly::assemble(&mesh, 5, 10, QuadKind::GaussLegendre);
     println!("assembled: {} elements x {} tests x {} quad points",
              domain.ne, domain.nt, domain.nq);
 
-    // 2. load the matching AOT artifact and train
-    let engine = Engine::new("artifacts")?;
+    // 2. build the native backend and train
     let src = DataSource { mesh: &mesh, domain: Some(&domain),
                            problem: &problem, sensor_values: None };
-    let cfg = TrainConfig { iters: 3000, log_every: 100,
-                            ..TrainConfig::default() };
-    let mut trainer = Trainer::new(&engine, "fv_poisson_ne4_nt5_nq20",
-                                   &src, &cfg)?;
+    let cfg = TrainConfig {
+        iters: 5000,
+        lr: LrSchedule::Constant(5e-3),
+        log_every: 100,
+        ..TrainConfig::default()
+    };
+    let backend = NativeBackend::new(&NativeConfig::poisson_std(), &src,
+                                     &BackendOpts::from(&cfg))?;
+    let mut trainer = Trainer::new(Box::new(backend), &cfg);
     let report = trainer.run()?;
     println!("trained {} steps: loss {:.3e} ({:.2} ms/step median)",
              report.steps, report.final_loss, report.median_step_ms);
@@ -42,7 +51,7 @@ fn main() -> anyhow::Result<()> {
     let exact: Vec<f64> = grid.iter()
         .map(|p| problem.exact(p[0], p[1]).unwrap())
         .collect();
-    let err = trainer.evaluate("predict_std_16k", &grid, &exact)?;
+    let err = trainer.evaluate(&grid, &exact)?;
     println!("errors vs exact: MAE {:.3e}, rel-L2 {:.3e}, Linf {:.3e}",
              err.mae, err.rel_l2, err.linf);
 

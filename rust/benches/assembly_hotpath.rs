@@ -1,6 +1,8 @@
-//! Bench: the Rust-side hot paths outside the compiled step —
+//! Bench: the Rust-side hot paths outside the train step —
 //! premultiplier tensor assembly (one-off per run, but dominates startup
-//! for 14k-element meshes) and host<->literal conversion.
+//! for 14k-element meshes) and the f32 runtime-boundary conversion.
+//! Covers the historical element counts plus a large ne=4096 grid to
+//! exercise the even-chunk parallel split.
 //! Run: cargo bench --bench assembly_hotpath
 
 use std::time::Instant;
@@ -8,7 +10,6 @@ use std::time::Instant;
 use fastvpinns::fem::assembly;
 use fastvpinns::fem::quadrature::QuadKind;
 use fastvpinns::mesh::generators;
-use fastvpinns::runtime::tensor::TensorData;
 use fastvpinns::util::stats;
 
 fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
@@ -30,6 +31,8 @@ fn main() {
          generators::skewed_square(20, 0.2)),
         ("disk 1024", generators::disk_1024()),
         ("gear 1760 (CI)", generators::gear_ci()),
+        ("square 64x64 (4096 cells)",
+         generators::unit_square(64)),
         ("gear 14080 (paper)", generators::gear_paper()),
     ] {
         let reps = if mesh.n_cells() > 5000 { 3 } else { 10 };
@@ -52,15 +55,12 @@ fn main() {
     });
     println!("  force_matrix                  {ms:>9.2} ms");
 
-    println!("== host->literal conversion (gear CI gx tensor) ==");
-    let gx = d.gx_f32();
-    let shape = vec![d.ne, d.nt, d.nq];
+    println!("== f32 runtime-boundary conversion (gear CI gx tensor) ==");
     let ms = time_median(10, || {
-        let t = TensorData::new(shape.clone(), gx.clone()).unwrap();
-        let lit = t.to_literal().unwrap();
-        std::hint::black_box(lit.size_bytes());
+        let gx = d.gx_f32();
+        std::hint::black_box(gx.len());
     });
-    let mb = (gx.len() * 4) as f64 / 1e6;
-    println!("  {:.1} MB tensor -> literal     {ms:>9.2} ms ({:.0} MB/s)",
+    let mb = (d.gx.len() * 4) as f64 / 1e6;
+    println!("  {:.1} MB tensor -> f32         {ms:>9.2} ms ({:.0} MB/s)",
              mb, mb / (ms / 1e3));
 }

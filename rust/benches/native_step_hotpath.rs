@@ -1,0 +1,38 @@
+//! Bench: the native backend's train step (forward + contraction +
+//! backprop + Adam) across element counts — the pure-Rust analogue of
+//! the paper's median-time-per-epoch protocol, with no artifacts.
+//! Run: cargo bench --bench native_step_hotpath
+
+use fastvpinns::coordinator::trainer::DataSource;
+use fastvpinns::experiments::common::median_backend_step_ms;
+use fastvpinns::fem::assembly;
+use fastvpinns::fem::quadrature::QuadKind;
+use fastvpinns::mesh::generators;
+use fastvpinns::problems::PoissonSin;
+use fastvpinns::runtime::backend::native::{NativeBackend, NativeConfig};
+use fastvpinns::runtime::backend::BackendOpts;
+
+fn main() {
+    let problem = PoissonSin::new(2.0 * std::f64::consts::PI);
+    println!("== native train step, 30x3 net, nt=5x5, nq=5x5/elem ==");
+    for k in [2usize, 4, 8, 16, 20, 32] {
+        let ne = k * k;
+        let mesh = generators::unit_square(k);
+        let dom = assembly::assemble(&mesh, 5, 5, QuadKind::GaussLegendre);
+        let src = DataSource {
+            mesh: &mesh,
+            domain: Some(&dom),
+            problem: &problem,
+            sensor_values: None,
+        };
+        let cfg = NativeConfig::poisson_std();
+        let mut b = NativeBackend::new(&cfg, &src, &BackendOpts::default())
+            .expect("native backend");
+        let ms = median_backend_step_ms(&mut b, 20, 3)
+            .expect("timed steps");
+        println!(
+            "  ne={ne:<5} ({:>6} quad pts)  median {ms:>8.3} ms/step",
+            ne * dom.nq
+        );
+    }
+}

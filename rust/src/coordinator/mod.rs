@@ -1,7 +1,7 @@
-//! The L3 training coordinator: owns parameter/optimizer state as XLA
-//! literals, drives the AOT train-step executable, applies LR schedules,
-//! tracks timing (median per epoch — the paper's protocol), computes
-//! error norms and logs history.
+//! The L3 training coordinator: drives a runtime backend (native pure
+//! Rust, or AOT/PJRT with `--features xla`) through an optimizer run,
+//! applies LR schedules, tracks timing (median per epoch — the paper's
+//! protocol), computes error norms and logs history.
 
 pub mod history;
 pub mod metrics;

@@ -1,22 +1,19 @@
-//! The training coordinator: owns parameter + Adam state as XLA
-//! literals, assembles the data inputs demanded by an artifact's
-//! manifest, and drives the train-step executable.
+//! The training coordinator: drives any [`Backend`] through an optimizer
+//! run — applies the LR schedule, tracks timing (median per epoch — the
+//! paper's protocol), logs history, checks convergence and computes
+//! error norms.
 //!
-//! The hot loop is pure Rust + PJRT — python is not involved.
+//! The coordinator is backend-agnostic: the same loop trains the pure
+//! Rust native backend and (with `--features xla`) the AOT/PJRT
+//! artifacts. No `xla::` type appears in any signature here.
 
-use std::rc::Rc;
-
-use anyhow::{anyhow, bail, ensure, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::coordinator::history::{HistoryRow, TrainHistory};
 use crate::coordinator::metrics::ErrorNorms;
 use crate::coordinator::schedule::LrSchedule;
-use crate::fem::assembly::AssembledDomain;
-use crate::mesh::QuadMesh;
-use crate::problems::Problem;
-use crate::runtime::engine::{Artifact, Engine};
-use crate::runtime::tensor::TensorData;
-use crate::util::rng::Rng;
+use crate::runtime::backend::BackendOpts;
+pub use crate::runtime::backend::{Backend, DataSource, StepStats};
 use crate::util::stats::StepTimer;
 
 /// Training hyper-parameters (paper defaults where applicable).
@@ -52,14 +49,15 @@ impl Default for TrainConfig {
     }
 }
 
-/// Where the trainer gets its mesh/problem data from.
-pub struct DataSource<'a> {
-    pub mesh: &'a QuadMesh,
-    /// Assembled premultiplier tensors (not needed for PINN artifacts).
-    pub domain: Option<&'a AssembledDomain>,
-    pub problem: &'a dyn Problem,
-    /// Sensor ground truth override (defaults to `problem.exact`).
-    pub sensor_values: Option<&'a dyn Fn(f64, f64) -> f64>,
+impl From<&TrainConfig> for BackendOpts {
+    fn from(c: &TrainConfig) -> BackendOpts {
+        BackendOpts {
+            tau: c.tau,
+            gamma: c.gamma,
+            seed: c.seed,
+            eps_init: c.eps_init,
+        }
+    }
 }
 
 /// Summary returned by `Trainer::run`.
@@ -77,156 +75,52 @@ pub struct TrainReport {
 }
 
 pub struct Trainer<'a> {
-    engine: &'a Engine,
-    art: Rc<Artifact>,
-    /// p/m/v literals in manifest order (3 * n_param_arrays).
-    state: Vec<xla::Literal>,
-    /// Data-segment inputs in manifest order (after step, lr),
-    /// uploaded to the device ONCE — they are step-invariant, and at
-    /// paper scale the premultiplier tensors are hundreds of MB.
-    data: Vec<xla::PjRtBuffer>,
-    /// Host sources of `data`. PJRT CPU uploads are asynchronous: the
-    /// source literal MUST outlive the buffer's first use, so we pin
-    /// them here (dropping them early is a use-after-free that
-    /// manifests as a `literal.size_bytes() == b->size()` CHECK crash).
-    _data_src: Vec<xla::Literal>,
+    backend: Box<dyn Backend + 'a>,
     cfg: TrainConfig,
     pub history: TrainHistory,
     step: usize,
-    n_params: usize,
 }
 
 impl<'a> Trainer<'a> {
-    pub fn new(
-        engine: &'a Engine,
-        artifact: &str,
-        src: &DataSource<'_>,
-        cfg: &TrainConfig,
-    ) -> Result<Trainer<'a>> {
-        let art = engine.load(artifact)?;
-        ensure!(art.manifest.kind == "train",
-                "{artifact} is not a train artifact");
-        let m = &art.manifest;
-        let n_params = m.n_param_arrays();
-
-        // ---- initial state: glorot weights, zero biases and moments
-        let mut rng = Rng::new(cfg.seed);
-        let mut state: Vec<xla::Literal> = Vec::with_capacity(3 * n_params);
-        for i in 0..n_params {
-            let shape = &m.inputs[i].shape;
-            let t = match shape.len() {
-                2 => TensorData::new(shape.clone(),
-                                     rng.glorot(shape[0], shape[1]))?,
-                1 => TensorData::zeros(shape),
-                0 => TensorData::scalar(cfg.eps_init as f32),
-                _ => bail!("unexpected param rank {shape:?}"),
-            };
-            state.push(t.to_literal()?);
-        }
-        // m and v moments: zeros of the same shapes
-        for i in 0..2 * n_params {
-            let shape = &m.inputs[n_params + i].shape;
-            state.push(TensorData::zeros(shape).to_literal()?);
-        }
-
-        // ---- sanity: step/lr slots where aot.signature puts them
-        ensure!(m.inputs[3 * n_params].name == "step"
-                    && m.inputs[3 * n_params + 1].name == "lr",
-                "manifest layout unexpected: {:?}",
-                &m.inputs[3 * n_params].name);
-
-        // ---- data segment in manifest order, resident on device
-        let mut data = Vec::new();
-        let mut data_src = Vec::new();
-        for spec in &m.inputs[3 * n_params + 2..] {
-            let lit = build_data_input(m, spec, src, cfg)
-                .with_context(|| format!("building input '{}'",
-                                         spec.name))?;
-            data.push(engine.to_buffer(&lit)?);
-            data_src.push(lit);
-        }
-
-        let extra_label = match m.loss.as_str() {
+    /// Wrap a backend. Backend selection is runtime-polymorphic: pass a
+    /// boxed [`crate::runtime::backend::native::NativeBackend`] or (with
+    /// `--features xla`) an `XlaBackend`.
+    pub fn new(backend: Box<dyn Backend + 'a>, cfg: &TrainConfig)
+        -> Trainer<'a> {
+        let extra_label = match backend.loss_kind() {
             "inverse_const" => "eps".to_string(),
             "inverse_space" => "sensor_loss".to_string(),
             _ => String::new(),
         };
-
-        Ok(Trainer {
-            engine,
-            art,
-            state,
-            data,
-            _data_src: data_src,
+        Trainer {
+            backend,
             cfg: cfg.clone(),
             history: TrainHistory { rows: vec![], extra_label },
             step: 0,
-            n_params,
-        })
+        }
     }
 
-    pub fn manifest(&self) -> &crate::runtime::manifest::Manifest {
-        &self.art.manifest
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
-    /// Current trainable eps (inverse_const artifacts).
+    pub fn loss_kind(&self) -> &str {
+        self.backend.loss_kind()
+    }
+
+    /// Current trainable eps (inverse losses).
     pub fn current_eps(&self) -> Result<f64> {
-        ensure!(self.art.manifest.loss == "inverse_const",
-                "no trainable eps in {}", self.art.manifest.name);
-        let lit = &self.state[self.n_params - 1];
-        Ok(lit.to_vec::<f32>()?[0] as f64)
-    }
-
-    /// Network parameter literals (excludes the eps scalar), for predict.
-    pub fn network_params(&self) -> &[xla::Literal] {
-        &self.state[..self.art.manifest.n_network_arrays()]
+        self.backend.current_eps().ok_or_else(|| anyhow::anyhow!(
+            "no trainable eps in this {} backend ({})",
+            self.backend.name(), self.backend.loss_kind()))
     }
 
     /// One optimizer step; returns (loss, var_loss, bd_loss, extra).
     pub fn step_once(&mut self) -> Result<(f64, f64, f64, f64)> {
         self.step += 1;
-        let lr = self.cfg.lr.at(self.step - 1) as f32;
-        let step_lit = xla::Literal::scalar(self.step as f32);
-        let lr_lit = xla::Literal::scalar(lr);
-
-        // upload the (small) mutable state; the big data segment is
-        // already device-resident
-        let state_bufs: Vec<xla::PjRtBuffer> = self
-            .state
-            .iter()
-            .map(|l| self.engine.to_buffer(l))
-            .collect::<Result<_>>()?;
-        let step_buf = self.engine.to_buffer(&step_lit)?;
-        let lr_buf = self.engine.to_buffer(&lr_lit)?;
-        let mut inputs: Vec<&xla::PjRtBuffer> =
-            Vec::with_capacity(self.art.manifest.inputs.len());
-        inputs.extend(state_bufs.iter());
-        inputs.push(&step_buf);
-        inputs.push(&lr_buf);
-        inputs.extend(self.data.iter());
-
-        let outputs = self.art.execute_buffers(&inputs)?;
-        let n_state = 3 * self.n_params;
-        let mut it = outputs.into_iter();
-        let mut new_state = Vec::with_capacity(n_state);
-        for _ in 0..n_state {
-            new_state.push(it.next().ok_or_else(|| anyhow!("short output"))?);
-        }
-        let rest: Vec<xla::Literal> = it.collect();
-        self.state = new_state;
-
-        let scalar = |l: &xla::Literal| -> Result<f64> {
-            Ok(l.to_vec::<f32>()?[0] as f64)
-        };
-        let loss = scalar(&rest[0])?;
-        let var_loss = if rest.len() > 1 { scalar(&rest[1])? } else { 0.0 };
-        let bd_loss = if rest.len() > 2 { scalar(&rest[2])? } else { 0.0 };
-        let extra = match self.art.manifest.loss.as_str() {
-            "inverse_const" => self.current_eps()?,
-            _ if rest.len() > 3 => scalar(&rest[3])?,
-            _ => 0.0,
-        };
-        Ok((loss, var_loss, bd_loss, extra))
+        let lr = self.cfg.lr.at(self.step - 1);
+        let s = self.backend.step(self.step, lr)?;
+        Ok((s.loss, s.var_loss, s.bd_loss, s.extra))
     }
 
     /// Train for `cfg.iters` steps (or until eps convergence).
@@ -235,6 +129,7 @@ impl<'a> Trainer<'a> {
         let mut timer = StepTimer::new();
         let mut last = (f64::NAN, f64::NAN, f64::NAN, 0.0);
         let mut converged_early = false;
+        let inverse = self.backend.loss_kind() == "inverse_const";
         for i in 0..self.cfg.iters {
             timer.start();
             last = self.step_once()?;
@@ -254,9 +149,7 @@ impl<'a> Trainer<'a> {
                 });
             }
             if let Some((target, tol)) = self.cfg.eps_converge {
-                if self.art.manifest.loss == "inverse_const"
-                    && (last.3 - target).abs() < tol
-                {
+                if inverse && (last.3 - target).abs() < tol {
                     converged_early = true;
                     break;
                 }
@@ -269,143 +162,82 @@ impl<'a> Trainer<'a> {
             final_bd_loss: last.2,
             median_step_ms: timer.summary().median,
             total_seconds: t0.elapsed().as_secs_f64(),
-            eps_final: if self.art.manifest.loss == "inverse_const" {
-                Some(last.3)
-            } else {
-                None
-            },
+            eps_final: if inverse { Some(last.3) } else { None },
             converged_early,
         })
     }
 
-    /// Predict at points via the matching predict artifact, head 0.
-    pub fn predict(&self, predict_name: &str, points: &[[f64; 2]])
-        -> Result<Vec<f32>> {
-        let outs = self.engine.predict(predict_name,
-                                       self.network_params(), points)?;
-        Ok(outs.into_iter().next().unwrap())
+    /// Predict u (head 0) at arbitrary points.
+    pub fn predict(&self, points: &[[f64; 2]]) -> Result<Vec<f32>> {
+        let mut heads = self.backend.predict(points)?;
+        anyhow::ensure!(!heads.is_empty(), "backend returned no heads");
+        Ok(heads.swap_remove(0))
     }
 
     /// Predict all heads (u, eps for two-head inverse networks).
-    pub fn predict_heads(&self, predict_name: &str, points: &[[f64; 2]])
+    pub fn predict_heads(&self, points: &[[f64; 2]])
         -> Result<Vec<Vec<f32>>> {
-        self.engine.predict(predict_name, self.network_params(), points)
+        self.backend.predict(points)
     }
 
     /// Evaluate error norms against a reference on given points.
-    pub fn evaluate(
-        &self,
-        predict_name: &str,
-        points: &[[f64; 2]],
-        reference: &[f64],
-    ) -> Result<ErrorNorms> {
-        let pred = self.predict(predict_name, points)?;
+    pub fn evaluate(&self, points: &[[f64; 2]], reference: &[f64])
+        -> Result<ErrorNorms> {
+        let pred = self.predict(points)?;
         Ok(ErrorNorms::compute_f32(&pred, reference))
     }
 }
 
-/// Build one data-segment literal according to its manifest name.
-fn build_data_input(
-    m: &crate::runtime::manifest::Manifest,
-    spec: &crate::runtime::manifest::IoSpec,
-    src: &DataSource<'_>,
-    cfg: &TrainConfig,
-) -> Result<xla::Literal> {
-    let domain = || -> Result<&AssembledDomain> {
-        src.domain.ok_or_else(|| anyhow!(
-            "artifact {} needs assembled tensors but DataSource.domain \
-             is None", m.name))
-    };
-    let lit = match spec.name.as_str() {
-        "quad_xy" => {
-            let d = domain()?;
-            TensorData::new(spec.shape.clone(), d.quad_xy_f32())?
-        }
-        "gx" => TensorData::new(spec.shape.clone(), domain()?.gx_f32())?,
-        "gy" => TensorData::new(spec.shape.clone(), domain()?.gy_f32())?,
-        "v" => TensorData::new(spec.shape.clone(), domain()?.v_f32())?,
-        "f" => {
-            let d = domain()?;
-            let f = d.force_matrix(|x, y| src.problem.forcing(x, y));
-            TensorData::from_f64(spec.shape.clone(), &f)?
-        }
-        "bd_xy" => {
-            let pts = src.mesh.sample_boundary(m.config.nb);
-            let flat: Vec<f32> = pts
-                .iter()
-                .flat_map(|p| [p[0] as f32, p[1] as f32])
-                .collect();
-            TensorData::new(spec.shape.clone(), flat)?
-        }
-        "bd_u" => {
-            let pts = src.mesh.sample_boundary(m.config.nb);
-            let vals: Vec<f32> = pts
-                .iter()
-                .map(|p| src.problem.boundary(p[0], p[1]) as f32)
-                .collect();
-            TensorData::new(spec.shape.clone(), vals)?
-        }
-        "sensor_xy" => {
-            let pts = src.mesh.sample_interior(m.config.ns, cfg.seed + 1);
-            let flat: Vec<f32> = pts
-                .iter()
-                .flat_map(|p| [p[0] as f32, p[1] as f32])
-                .collect();
-            TensorData::new(spec.shape.clone(), flat)?
-        }
-        "sensor_u" => {
-            let pts = src.mesh.sample_interior(m.config.ns, cfg.seed + 1);
-            let vals: Vec<f32> = pts
-                .iter()
-                .map(|p| sensor_value(src, p[0], p[1]))
-                .collect::<Result<_>>()?;
-            TensorData::new(spec.shape.clone(), vals)?
-        }
-        "coll_xy" => {
-            let pts = src.mesh.sample_interior(m.config.n_coll, cfg.seed);
-            let flat: Vec<f32> = pts
-                .iter()
-                .flat_map(|p| [p[0] as f32, p[1] as f32])
-                .collect();
-            TensorData::new(spec.shape.clone(), flat)?
-        }
-        "f_vals" => {
-            let pts = src.mesh.sample_interior(m.config.n_coll, cfg.seed);
-            let vals: Vec<f32> = pts
-                .iter()
-                .map(|p| src.problem.forcing(p[0], p[1]) as f32)
-                .collect();
-            TensorData::new(spec.shape.clone(), vals)?
-        }
-        "tau" => TensorData::scalar(cfg.tau as f32),
-        "gamma" => TensorData::scalar(cfg.gamma as f32),
-        other => bail!("unknown manifest input '{other}'"),
-    };
-    lit.to_literal()
-}
-
-fn sensor_value(src: &DataSource<'_>, x: f64, y: f64) -> Result<f32> {
-    if let Some(f) = src.sensor_values {
-        return Ok(f(x, y) as f32);
-    }
-    src.problem
-        .exact(x, y)
-        .map(|v| v as f32)
-        .ok_or_else(|| anyhow!(
-            "problem '{}' has no exact solution; provide \
-             DataSource.sensor_values", src.problem.name()))
-}
-
 #[cfg(test)]
 mod tests {
-    //! Full Trainer tests need compiled artifacts; they live in
-    //! rust/tests/integration.rs. Here: config defaults only.
     use super::*;
+    use crate::fem::assembly;
+    use crate::fem::quadrature::QuadKind;
+    use crate::mesh::generators;
+    use crate::problems::PoissonSin;
+    use crate::runtime::backend::native::{
+        NativeBackend, NativeConfig, NativeLoss,
+    };
 
     #[test]
     fn config_defaults_match_paper() {
         let c = TrainConfig::default();
         assert_eq!(c.eps_init, 2.0); // paper SS4.7.1 initial guess
         assert!(matches!(c.lr, LrSchedule::Constant(lr) if lr == 1e-3));
+    }
+
+    #[test]
+    fn trainer_drives_native_backend_and_logs_history() {
+        let mesh = generators::unit_square(1);
+        let dom = assembly::assemble(&mesh, 2, 4, QuadKind::GaussLegendre);
+        let problem = PoissonSin::new(std::f64::consts::PI);
+        let src = DataSource {
+            mesh: &mesh,
+            domain: Some(&dom),
+            problem: &problem,
+            sensor_values: None,
+        };
+        let cfg = TrainConfig {
+            iters: 25,
+            log_every: 5,
+            ..TrainConfig::default()
+        };
+        let ncfg = NativeConfig {
+            layers: vec![2, 8, 1],
+            loss: NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 },
+            nb: 16,
+            ns: 0,
+        };
+        let backend = NativeBackend::new(
+            &ncfg, &src, &BackendOpts::from(&cfg)).unwrap();
+        let mut t = Trainer::new(Box::new(backend), &cfg);
+        assert_eq!(t.backend_name(), "native");
+        let report = t.run().unwrap();
+        assert_eq!(report.steps, 25);
+        assert!(report.final_loss.is_finite());
+        assert!(!t.history.rows.is_empty());
+        assert!(t.current_eps().is_err()); // forward problem: no eps
+        let pred = t.predict(&[[0.5, 0.5]]).unwrap();
+        assert_eq!(pred.len(), 1);
     }
 }

@@ -1,9 +1,17 @@
-//! Shared experiment plumbing: standard training runs over square grids,
-//! result directories, timing measurement at the paper's protocol.
+//! Shared experiment plumbing: CLI backend selection, standard training
+//! runs over square grids, result directories, and timing measurement at
+//! the paper's protocol.
+//!
+//! Every experiment accepts `--backend native|xla` (default: native).
+//! The native backend reproduces accuracy/convergence results with no
+//! artifacts; baselines that only exist as AOT artifacts (loop-based
+//! hp-VPINNs, collocation PINNs, the two-head inverse-space network)
+//! need `--features xla` plus `make artifacts` and are skipped with a
+//! notice otherwise.
 
 use std::path::PathBuf;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::coordinator::metrics::{eval_grid, ErrorNorms};
 use crate::coordinator::trainer::{DataSource, TrainConfig, Trainer};
@@ -11,7 +19,9 @@ use crate::fem::assembly::{self, AssembledDomain};
 use crate::fem::quadrature::QuadKind;
 use crate::mesh::{generators, QuadMesh};
 use crate::problems::Problem;
-use crate::runtime::engine::Engine;
+use crate::runtime::backend::native::{NativeBackend, NativeConfig};
+use crate::runtime::backend::{Backend, BackendOpts};
+use crate::util::cli::Args;
 
 /// results/<id>/ directory (created).
 pub fn results_dir(id: &str) -> Result<PathBuf> {
@@ -20,7 +30,10 @@ pub fn results_dir(id: &str) -> Result<PathBuf> {
     Ok(dir)
 }
 
-/// The default predict artifact for the standard 30x3 architecture.
+/// The paper's standard 30x3 network.
+pub const STD_LAYERS: &[usize] = &[2, 30, 30, 30, 1];
+
+/// The default predict artifact for the standard architecture (XLA).
 pub const PREDICT_STD: &str = "predict_std_16k";
 
 /// FastVPINN artifact name for a unit-square Poisson config.
@@ -30,6 +43,97 @@ pub fn fv_name(ne: usize, nt1d: usize, nq1d: usize) -> String {
 
 pub fn hp_name(ne: usize, nt1d: usize, nq1d: usize) -> String {
     format!("hp_poisson_ne{ne}_nt{nt1d}_nq{nq1d}")
+}
+
+/// Which runtime executes the train step.
+pub enum BackendSel {
+    Native,
+    #[cfg(feature = "xla")]
+    Xla(crate::runtime::engine::Engine),
+}
+
+/// Per-experiment context: backend selection + shared knobs.
+pub struct ExpCtx {
+    pub sel: BackendSel,
+}
+
+impl ExpCtx {
+    pub fn from_args(args: &Args) -> Result<ExpCtx> {
+        let name = args.str_or("backend", "native");
+        crate::runtime::backend::check_backend_name(&name)?;
+        let sel = match name.as_str() {
+            "native" => BackendSel::Native,
+            #[cfg(feature = "xla")]
+            "xla" => BackendSel::Xla(crate::runtime::engine::Engine::new(
+                args.str_or("artifacts", "artifacts"),
+            )?),
+            _ => unreachable!("check_backend_name"),
+        };
+        Ok(ExpCtx { sel })
+    }
+
+    pub fn is_native(&self) -> bool {
+        matches!(self.sel, BackendSel::Native)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self.sel {
+            BackendSel::Native => "native",
+            #[cfg(feature = "xla")]
+            BackendSel::Xla(_) => "xla",
+        }
+    }
+
+    /// Build a FastVPINN train backend. `native_cfg` drives the native
+    /// path; `artifact`/`predict` name the AOT executables for XLA.
+    pub fn make_backend<'s>(
+        &'s self,
+        native_cfg: &NativeConfig,
+        artifact: &str,
+        predict: Option<&str>,
+        src: &DataSource<'_>,
+        cfg: &TrainConfig,
+    ) -> Result<Box<dyn Backend + 's>> {
+        let opts = BackendOpts::from(cfg);
+        match &self.sel {
+            BackendSel::Native => {
+                let _ = (artifact, predict); // XLA-path names
+                Ok(Box::new(NativeBackend::new(native_cfg, src, &opts)?))
+            }
+            #[cfg(feature = "xla")]
+            BackendSel::Xla(engine) => {
+                Ok(Box::new(crate::runtime::backend::xla::XlaBackend::new(
+                    engine, artifact, predict, src, &opts)?))
+            }
+        }
+    }
+
+    /// Build an XLA-only baseline backend (loop hp-VPINNs / collocation
+    /// PINNs); errors on the native backend.
+    pub fn make_xla_only<'s>(
+        &'s self,
+        artifact: &str,
+        predict: Option<&str>,
+        src: &DataSource<'_>,
+        cfg: &TrainConfig,
+    ) -> Result<Box<dyn Backend + 's>> {
+        match &self.sel {
+            BackendSel::Native => {
+                let _ = (predict, src, cfg);
+                bail!(
+                    "baseline artifact '{artifact}' only exists on the \
+                     xla backend (rebuild with --features xla and run \
+                     `make artifacts`)"
+                )
+            }
+            #[cfg(feature = "xla")]
+            BackendSel::Xla(engine) => {
+                let opts = BackendOpts::from(cfg);
+                Ok(Box::new(crate::runtime::backend::xla::XlaBackend::new(
+                    engine, artifact, predict, src, &opts)?))
+            }
+        }
+    }
 }
 
 /// Build the unit-square mesh + assembled tensors for an artifact shape.
@@ -43,8 +147,8 @@ pub fn square_domain(ne: usize, nt1d: usize, nq1d: usize)
     (mesh, dom)
 }
 
-/// Train a unit-square artifact on `problem`; returns (trainer report,
-/// error norms on the paper's 100x100 grid).
+/// Train a unit-square FastVPINN config on `problem`; returns (trainer
+/// report, error norms on the paper's 100x100 grid, history).
 pub struct SquareRun {
     pub report: crate::coordinator::trainer::TrainReport,
     pub errors: ErrorNorms,
@@ -52,8 +156,7 @@ pub struct SquareRun {
 }
 
 pub fn run_square(
-    engine: &Engine,
-    artifact: &str,
+    ctx: &ExpCtx,
     ne: usize,
     nt1d: usize,
     nq1d: usize,
@@ -67,52 +170,89 @@ pub fn run_square(
         problem,
         sensor_values: None,
     };
-    let mut trainer = Trainer::new(engine, artifact, &src, cfg)?;
+    let ncfg = NativeConfig::poisson_std();
+    let backend = ctx.make_backend(&ncfg, &fv_name(ne, nt1d, nq1d),
+                                   Some(PREDICT_STD), &src, cfg)?;
+    let mut trainer = Trainer::new(backend, cfg);
     let report = trainer.run()?;
     let grid = eval_grid(100, 100, 0.0, 0.0, 1.0, 1.0);
     let exact: Vec<f64> = grid
         .iter()
         .map(|p| problem.exact(p[0], p[1]).unwrap_or(0.0))
         .collect();
-    let errors = trainer.evaluate(PREDICT_STD, &grid, &exact)?;
+    let errors = trainer.evaluate(&grid, &exact)?;
     Ok(SquareRun { report, errors, history: trainer.history.clone() })
 }
 
-/// Median time per training step measured over `iters` steps after
-/// `warmup` steps — the paper's Fig. 2/10/16 protocol.
-pub fn median_step_ms(
-    engine: &Engine,
-    artifact: &str,
+/// Median time per training step over `iters` steps after `warmup`
+/// steps — the paper's Fig. 2/10/16 protocol — for any backend.
+pub fn median_backend_step_ms(
+    backend: &mut dyn Backend,
+    iters: usize,
+    warmup: usize,
+) -> Result<f64> {
+    for i in 0..warmup {
+        backend.step(i + 1, 1e-3)?;
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let t0 = std::time::Instant::now();
+        backend.step(warmup + i + 1, 1e-3)?;
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(crate::util::stats::median(&samples))
+}
+
+/// FastVPINN step timing for a unit-square config on either backend.
+pub fn median_step_ms_fv(
+    ctx: &ExpCtx,
+    ne: usize,
+    nt1d: usize,
+    nq1d: usize,
     problem: &dyn Problem,
     iters: usize,
     warmup: usize,
 ) -> Result<f64> {
-    let art = engine.load(artifact)?;
-    let c = &art.manifest.config;
-    let (mesh, dom) = square_domain(c.ne, c.nt1d, c.nq1d);
+    let (mesh, dom) = square_domain(ne, nt1d, nq1d);
     let src = DataSource {
         mesh: &mesh,
         domain: Some(&dom),
         problem,
         sensor_values: None,
     };
-    let cfg = TrainConfig { iters: 1, ..TrainConfig::default() };
-    let mut t = Trainer::new(engine, artifact, &src, &cfg)?;
-    for _ in 0..warmup {
-        t.step_once()?;
-    }
-    let mut samples = Vec::with_capacity(iters);
-    for _ in 0..iters {
-        let t0 = std::time::Instant::now();
-        t.step_once()?;
-        samples.push(t0.elapsed().as_secs_f64() * 1e3);
-    }
-    Ok(crate::util::stats::median(&samples))
+    let cfg = TrainConfig::default();
+    let ncfg = NativeConfig::poisson_std();
+    let mut backend = ctx.make_backend(&ncfg, &fv_name(ne, nt1d, nq1d),
+                                       None, &src, &cfg)?;
+    median_backend_step_ms(backend.as_mut(), iters, warmup)
 }
 
-/// PINN timing: same protocol, collocation artifact.
+/// Loop-based hp-VPINN baseline step timing (XLA artifacts only).
+pub fn median_step_ms_hp(
+    ctx: &ExpCtx,
+    ne: usize,
+    nt1d: usize,
+    nq1d: usize,
+    problem: &dyn Problem,
+    iters: usize,
+    warmup: usize,
+) -> Result<f64> {
+    let (mesh, dom) = square_domain(ne, nt1d, nq1d);
+    let src = DataSource {
+        mesh: &mesh,
+        domain: Some(&dom),
+        problem,
+        sensor_values: None,
+    };
+    let cfg = TrainConfig::default();
+    let mut backend = ctx.make_xla_only(&hp_name(ne, nt1d, nq1d), None,
+                                        &src, &cfg)?;
+    median_backend_step_ms(backend.as_mut(), iters, warmup)
+}
+
+/// Collocation PINN baseline step timing (XLA artifacts only).
 pub fn median_step_ms_pinn(
-    engine: &Engine,
+    ctx: &ExpCtx,
     artifact: &str,
     problem: &dyn Problem,
     iters: usize,
@@ -125,16 +265,7 @@ pub fn median_step_ms_pinn(
         problem,
         sensor_values: None,
     };
-    let cfg = TrainConfig { iters: 1, ..TrainConfig::default() };
-    let mut t = Trainer::new(engine, artifact, &src, &cfg)?;
-    for _ in 0..warmup {
-        t.step_once()?;
-    }
-    let mut samples = Vec::with_capacity(iters);
-    for _ in 0..iters {
-        let t0 = std::time::Instant::now();
-        t.step_once()?;
-        samples.push(t0.elapsed().as_secs_f64() * 1e3);
-    }
-    Ok(crate::util::stats::median(&samples))
+    let cfg = TrainConfig::default();
+    let mut backend = ctx.make_xla_only(artifact, None, &src, &cfg)?;
+    median_backend_step_ms(backend.as_mut(), iters, warmup)
 }

@@ -3,44 +3,67 @@
 //!
 //! (a) residual points vs median step time at 25 quad pts/elem;
 //! (b) element count vs median step time at ~constant total quad points.
+//!
+//! The loop-based hp-VPINN baseline only exists as an AOT artifact
+//! (`--backend xla`); with the native backend this driver instead
+//! records the native tensor-contraction step over the same sweeps,
+//! which documents the contrast the figure motivates (near-flat vs
+//! linear scaling).
 
 use anyhow::Result;
 
-use super::common;
+use super::common::{self, ExpCtx};
 use crate::problems::PoissonSin;
-use crate::runtime::engine::Engine;
 use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
 
 pub fn run(args: &Args) -> Result<()> {
-    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let ctx = ExpCtx::from_args(args)?;
     let iters = args.usize_or("timing-iters", 30)?;
     let warmup = args.usize_or("warmup", 3)?;
     let dir = common::results_dir("fig02")?;
     let problem = PoissonSin::new(2.0 * std::f64::consts::PI);
 
+    let (tag, time_step): (&str, Box<dyn Fn(usize, usize) -> Result<f64> + '_>) =
+        if ctx.is_native() {
+            println!(
+                "fig02 [native]: hp-VPINN loop artifacts unavailable — \
+                 timing the native tensor step instead (use --backend xla \
+                 for the loop baseline)"
+            );
+            ("native_step", Box::new(|ne, nq| {
+                common::median_step_ms_fv(&ctx, ne, 5, nq, &problem,
+                                          iters, warmup)
+            }))
+        } else {
+            ("hp_loop", Box::new(|ne, nq| {
+                common::median_step_ms_hp(&ctx, ne, 5, nq, &problem,
+                                          iters, warmup)
+            }))
+        };
+
     // (a) 25 quad/elem, growing element count -> growing residual points
-    let mut w = CsvWriter::create(dir.join("fig02a_residual_points.csv"),
-                                  &["ne", "residual_points", "median_ms"])?;
-    println!("fig02a: hp-VPINNs (loop) step time vs residual points");
+    let mut w = CsvWriter::create(
+        dir.join(format!("fig02a_residual_points_{tag}.csv")),
+        &["ne", "residual_points", "median_ms"],
+    )?;
+    println!("fig02a: {tag} step time vs residual points");
     for ne in [16usize, 64, 256, 400] {
-        let name = common::hp_name(ne, 5, 5);
-        let ms = common::median_step_ms(&engine, &name, &problem, iters,
-                                        warmup)?;
+        let ms = time_step(ne, 5)?;
         println!("  ne={ne:<5} pts={:<7} median {ms:.3} ms", ne * 25);
         w.row_f64(&[ne as f64, (ne * 25) as f64, ms])?;
     }
     w.flush()?;
 
     // (b) constant total quad (6400), growing element count
-    let mut w = CsvWriter::create(dir.join("fig02b_elements.csv"),
-                                  &["ne", "nq1d", "median_ms"])?;
-    println!("fig02b: hp-VPINNs (loop) step time vs elements (6400 quad)");
+    let mut w = CsvWriter::create(
+        dir.join(format!("fig02b_elements_{tag}.csv")),
+        &["ne", "nq1d", "median_ms"],
+    )?;
+    println!("fig02b: {tag} step time vs elements (6400 quad)");
     for (ne, nq) in [(1usize, 80usize), (4, 40), (16, 20), (64, 10),
                      (256, 5), (400, 4)] {
-        let name = common::hp_name(ne, 5, nq);
-        let ms = common::median_step_ms(&engine, &name, &problem, iters,
-                                        warmup)?;
+        let ms = time_step(ne, nq)?;
         println!("  ne={ne:<5} nq1d={nq:<3} median {ms:.3} ms");
         w.row_f64(&[ne as f64, nq as f64, ms])?;
     }

@@ -1,20 +1,21 @@
 //! Fig. 8: accuracy comparison, FastVPINNs vs PINNs on Poisson
 //! omega = 2*pi (2x2 elements, 40^2 quad, 15^2 test fns vs 6400
-//! collocation points; both 30x3 networks).
+//! collocation points; both 30x3 networks). The collocation PINN
+//! baseline needs the xla backend; with the native backend only the
+//! FastVPINNs row is produced.
 
 use anyhow::Result;
 
-use super::common;
+use super::common::{self, ExpCtx};
 use crate::coordinator::metrics::eval_grid;
 use crate::coordinator::trainer::{DataSource, TrainConfig, Trainer};
 use crate::mesh::generators;
 use crate::problems::{PoissonSin, Problem};
-use crate::runtime::engine::Engine;
 use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
 
 pub fn run(args: &Args) -> Result<()> {
-    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let ctx = ExpCtx::from_args(args)?;
     // paper: 100k iters; CI default trains far fewer but records both
     let iters = args.usize_or("iters", 5000)?;
     let dir = common::results_dir("fig08")?;
@@ -22,9 +23,14 @@ pub fn run(args: &Args) -> Result<()> {
     let cfg = TrainConfig { iters, log_every: 50.max(iters / 200),
                             ..TrainConfig::default() };
 
+    let mut w = CsvWriter::create(
+        dir.join("summary.csv"),
+        &["method", "backend", "iters", "final_loss", "mae", "rmse",
+          "rel_l2", "linf", "median_ms"],
+    )?;
+
     // ---- FastVPINNs (paper shape: ne=4, nt=15, nq=40)
-    let fv = common::run_square(&engine, "fv_poisson_ne4_nt15_nq40", 4, 15,
-                                40, &problem, &cfg)?;
+    let fv = common::run_square(&ctx, 4, 15, 40, &problem, &cfg)?;
     fv.history.to_csv(dir.join("fastvpinn_history.csv"))?;
     println!(
         "FastVPINNs: loss {:.3e}, MAE {:.3e}, rel-L2 {:.3e}, \
@@ -32,47 +38,50 @@ pub fn run(args: &Args) -> Result<()> {
         fv.report.final_loss, fv.errors.mae, fv.errors.rel_l2,
         fv.report.median_step_ms
     );
-
-    // ---- PINN baseline (6400 collocation points)
-    let mesh = generators::unit_square(1);
-    let src = DataSource { mesh: &mesh, domain: None, problem: &problem,
-                           sensor_values: None };
-    let mut pinn = Trainer::new(&engine, "pinn_poisson_nc6400", &src,
-                                &cfg)?;
-    let pinn_report = pinn.run()?;
-    pinn.history.to_csv(dir.join("pinn_history.csv"))?;
-    let grid = eval_grid(100, 100, 0.0, 0.0, 1.0, 1.0);
-    let exact: Vec<f64> = grid
-        .iter()
-        .map(|p| problem.exact(p[0], p[1]).unwrap())
-        .collect();
-    let pinn_err = pinn.evaluate(common::PREDICT_STD, &grid, &exact)?;
-    println!(
-        "PINNs:      loss {:.3e}, MAE {:.3e}, rel-L2 {:.3e}, \
-         median {:.3} ms/step",
-        pinn_report.final_loss, pinn_err.mae, pinn_err.rel_l2,
-        pinn_report.median_step_ms
-    );
-
-    let mut w = CsvWriter::create(
-        dir.join("summary.csv"),
-        &["method", "iters", "final_loss", "mae", "rmse", "rel_l2",
-          "linf", "median_ms"],
-    )?;
-    w.row(&["fastvpinn".into(), iters.to_string(),
+    w.row(&["fastvpinn".into(), ctx.name().into(), iters.to_string(),
             format!("{:.6e}", fv.report.final_loss),
             format!("{:.6e}", fv.errors.mae),
             format!("{:.6e}", fv.errors.rmse),
             format!("{:.6e}", fv.errors.rel_l2),
             format!("{:.6e}", fv.errors.linf),
             format!("{:.4}", fv.report.median_step_ms)])?;
-    w.row(&["pinn".into(), iters.to_string(),
-            format!("{:.6e}", pinn_report.final_loss),
-            format!("{:.6e}", pinn_err.mae),
-            format!("{:.6e}", pinn_err.rmse),
-            format!("{:.6e}", pinn_err.rel_l2),
-            format!("{:.6e}", pinn_err.linf),
-            format!("{:.4}", pinn_report.median_step_ms)])?;
+
+    // ---- PINN baseline (6400 collocation points, xla only)
+    if ctx.is_native() {
+        println!(
+            "SKIP pinn baseline: collocation artifacts need --backend \
+             xla (--features xla + make artifacts)"
+        );
+    } else {
+        let mesh = generators::unit_square(1);
+        let src = DataSource { mesh: &mesh, domain: None,
+                               problem: &problem, sensor_values: None };
+        let backend = ctx.make_xla_only("pinn_poisson_nc6400",
+                                        Some(common::PREDICT_STD), &src,
+                                        &cfg)?;
+        let mut pinn = Trainer::new(backend, &cfg);
+        let pinn_report = pinn.run()?;
+        pinn.history.to_csv(dir.join("pinn_history.csv"))?;
+        let grid = eval_grid(100, 100, 0.0, 0.0, 1.0, 1.0);
+        let exact: Vec<f64> = grid
+            .iter()
+            .map(|p| problem.exact(p[0], p[1]).unwrap())
+            .collect();
+        let pinn_err = pinn.evaluate(&grid, &exact)?;
+        println!(
+            "PINNs:      loss {:.3e}, MAE {:.3e}, rel-L2 {:.3e}, \
+             median {:.3} ms/step",
+            pinn_report.final_loss, pinn_err.mae, pinn_err.rel_l2,
+            pinn_report.median_step_ms
+        );
+        w.row(&["pinn".into(), ctx.name().into(), iters.to_string(),
+                format!("{:.6e}", pinn_report.final_loss),
+                format!("{:.6e}", pinn_err.mae),
+                format!("{:.6e}", pinn_err.rmse),
+                format!("{:.6e}", pinn_err.rel_l2),
+                format!("{:.6e}", pinn_err.linf),
+                format!("{:.4}", pinn_report.median_step_ms)])?;
+    }
     w.flush()?;
     println!("fig08 -> {}", dir.display());
     Ok(())

@@ -1,17 +1,17 @@
 //! Fig. 9 (+ App. Figs. 17/18): effect of h- and p-refinement on
-//! FastVPINNs accuracy for the omega = 4*pi Poisson problem.
+//! FastVPINNs accuracy for the omega = 4*pi Poisson problem. Fully
+//! backend-portable (FastVPINN runs only).
 
 use anyhow::Result;
 
-use super::common;
+use super::common::{self, ExpCtx};
 use crate::coordinator::trainer::TrainConfig;
 use crate::problems::PoissonSin;
-use crate::runtime::engine::Engine;
 use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
 
 pub fn run(args: &Args) -> Result<()> {
-    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let ctx = ExpCtx::from_args(args)?;
     let iters = args.usize_or("iters", 5000)?;
     let dir = common::results_dir("fig09")?;
     let problem = PoissonSin::new(4.0 * std::f64::consts::PI);
@@ -19,14 +19,13 @@ pub fn run(args: &Args) -> Result<()> {
                             ..TrainConfig::default() };
 
     // ---- h-refinement: 1 -> 16 -> 64 elements (nt=5, nq=20 per elem)
-    println!("fig09 h-refinement (omega=4pi):");
+    println!("fig09 h-refinement (omega=4pi, backend={}):", ctx.name());
     let mut w = CsvWriter::create(
         dir.join("h_refinement.csv"),
         &["ne", "mae", "rmse", "rel_l2", "linf", "final_loss"],
     )?;
     for ne in [1usize, 16, 64] {
-        let r = common::run_square(&engine, &common::fv_name(ne, 5, 20),
-                                   ne, 5, 20, &problem, &cfg)?;
+        let r = common::run_square(&ctx, ne, 5, 20, &problem, &cfg)?;
         println!("  ne={ne:<4} MAE {:.3e}  rel-L2 {:.3e}", r.errors.mae,
                  r.errors.rel_l2);
         w.row_f64(&[ne as f64, r.errors.mae, r.errors.rmse,
@@ -42,8 +41,7 @@ pub fn run(args: &Args) -> Result<()> {
         &["nt1d", "mae", "rmse", "rel_l2", "linf", "final_loss"],
     )?;
     for nt in [5usize, 10, 15, 20] {
-        let r = common::run_square(&engine, &common::fv_name(1, nt, 30),
-                                   1, nt, 30, &problem, &cfg)?;
+        let r = common::run_square(&ctx, 1, nt, 30, &problem, &cfg)?;
         println!("  nt={nt:<3} MAE {:.3e}  rel-L2 {:.3e}", r.errors.mae,
                  r.errors.rel_l2);
         w.row_f64(&[nt as f64, r.errors.mae, r.errors.rmse,

@@ -4,22 +4,31 @@
 //!     loop-based hp-VPINNs (the 100x claim);
 //! (b) median time/epoch vs element count at constant total quadrature
 //!     points (FastVPINNs ~flat, hp-VPINNs linear).
+//!
+//! FastVPINN timings come from whichever backend is selected; the PINN
+//! and loop-hp baselines are AOT artifacts (xla backend) and are
+//! recorded as NaN when unavailable.
 
 use anyhow::Result;
 
-use super::common;
+use super::common::{self, ExpCtx};
 use crate::problems::PoissonSin;
-use crate::runtime::engine::Engine;
 use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
 
 pub fn run(args: &Args) -> Result<()> {
-    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let ctx = ExpCtx::from_args(args)?;
     let iters = args.usize_or("timing-iters", 30)?;
     let warmup = args.usize_or("warmup", 3)?;
     let full = args.has("paper-scale");
     let dir = common::results_dir("fig10")?;
     let problem = PoissonSin::new(2.0 * std::f64::consts::PI);
+    if ctx.is_native() {
+        println!(
+            "fig10 [native]: pinn/hp-loop baseline columns are NaN \
+             (artifacts need --backend xla)"
+        );
+    }
 
     // ---- (a) residual-point sweep: 25 quad/elem, 25 test fns
     println!("fig10a: median step time vs residual points");
@@ -34,13 +43,19 @@ pub fn run(args: &Args) -> Result<()> {
     };
     for &ne in ne_sweep {
         let pts = ne * 25;
-        let fv = common::median_step_ms(
-            &engine, &common::fv_name(ne, 5, 5), &problem, iters, warmup)?;
-        let pinn = common::median_step_ms_pinn(
-            &engine, &format!("pinn_poisson_nc{pts}"), &problem, iters,
-            warmup)?;
-        let hp = common::median_step_ms(
-            &engine, &common::hp_name(ne, 5, 5), &problem, iters, warmup)?;
+        let fv = common::median_step_ms_fv(&ctx, ne, 5, 5, &problem,
+                                           iters, warmup)?;
+        let (pinn, hp) = if ctx.is_native() {
+            (f64::NAN, f64::NAN)
+        } else {
+            (
+                common::median_step_ms_pinn(
+                    &ctx, &format!("pinn_poisson_nc{pts}"), &problem,
+                    iters, warmup)?,
+                common::median_step_ms_hp(&ctx, ne, 5, 5, &problem,
+                                          iters, warmup)?,
+            )
+        };
         println!("  pts={pts:<7} fv {fv:>8.3} ms | pinn {pinn:>8.3} ms | \
                   hp {hp:>9.3} ms | speedup hp/fv {:.1}x", hp / fv);
         w.row_f64(&[pts as f64, fv, pinn, hp])?;
@@ -55,10 +70,14 @@ pub fn run(args: &Args) -> Result<()> {
     )?;
     for (ne, nq) in [(1usize, 80usize), (4, 40), (16, 20), (64, 10),
                      (256, 5), (400, 4)] {
-        let fv = common::median_step_ms(
-            &engine, &common::fv_name(ne, 5, nq), &problem, iters, warmup)?;
-        let hp = common::median_step_ms(
-            &engine, &common::hp_name(ne, 5, nq), &problem, iters, warmup)?;
+        let fv = common::median_step_ms_fv(&ctx, ne, 5, nq, &problem,
+                                           iters, warmup)?;
+        let hp = if ctx.is_native() {
+            f64::NAN
+        } else {
+            common::median_step_ms_hp(&ctx, ne, 5, nq, &problem, iters,
+                                      warmup)?
+        };
         println!("  ne={ne:<5} fv {fv:>8.3} ms | hp {hp:>9.3} ms | \
                   {:.1}x", hp / fv);
         w.row_f64(&[ne as f64, nq as f64, fv, hp, hp / fv])?;

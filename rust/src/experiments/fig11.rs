@@ -1,15 +1,16 @@
 //! Fig. 11: high-frequency problems. (a) MAE after a fixed budget and
 //! (b) wall-clock time to reach MAE 5e-2 — FastVPINNs (with matched
 //! h-refinement, 6400 total quad points) vs PINNs (6400 collocation).
+//! The PINN baseline needs the xla backend.
 
 use anyhow::Result;
 
-use super::common;
+use super::common::{self, ExpCtx};
 use crate::coordinator::metrics::eval_grid;
 use crate::coordinator::trainer::{DataSource, TrainConfig, Trainer};
 use crate::mesh::generators;
 use crate::problems::{PoissonSin, Problem};
-use crate::runtime::engine::Engine;
+use crate::runtime::backend::native::NativeConfig;
 use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
 
@@ -22,14 +23,12 @@ struct Outcome {
 }
 
 fn train_until(
-    engine: &Engine,
     trainer: &mut Trainer<'_>,
     exact: &[f64],
     grid: &[[f64; 2]],
     max_iters: usize,
     chunk: usize,
 ) -> Result<Outcome> {
-    let _ = engine;
     let t0 = std::time::Instant::now();
     let mut secs_to_target = None;
     let mut iters = 0;
@@ -39,7 +38,7 @@ fn train_until(
             trainer.step_once()?;
             iters += 1;
         }
-        let err = trainer.evaluate(common::PREDICT_STD, grid, exact)?;
+        let err = trainer.evaluate(grid, exact)?;
         mae = err.mae;
         if secs_to_target.is_none() && mae <= MAE_TARGET {
             secs_to_target = Some(t0.elapsed().as_secs_f64());
@@ -50,7 +49,7 @@ fn train_until(
 }
 
 pub fn run(args: &Args) -> Result<()> {
-    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let ctx = ExpCtx::from_args(args)?;
     let max_iters = args.usize_or("iters", 8000)?;
     let chunk = args.usize_or("chunk", 250)?;
     let dir = common::results_dir("fig11")?;
@@ -77,10 +76,12 @@ pub fn run(args: &Args) -> Result<()> {
         let (mesh, dom) = common::square_domain(ne, 5, nq);
         let src = DataSource { mesh: &mesh, domain: Some(&dom),
                                problem: &problem, sensor_values: None };
-        let mut fv = Trainer::new(&engine, &common::fv_name(ne, 5, nq),
-                                  &src, &cfg)?;
-        let fv_out = train_until(&engine, &mut fv, &exact, &grid,
-                                 max_iters, chunk)?;
+        let backend = ctx.make_backend(
+            &NativeConfig::poisson_std(), &common::fv_name(ne, 5, nq),
+            Some(common::PREDICT_STD), &src, &cfg)?;
+        let mut fv = Trainer::new(backend, &cfg);
+        let fv_out = train_until(&mut fv, &exact, &grid, max_iters,
+                                 chunk)?;
         println!(
             "omega={k}pi fastvpinn: MAE {:.3e} ({} iters){}",
             fv_out.mae, fv_out.iters_run,
@@ -93,14 +94,20 @@ pub fn run(args: &Args) -> Result<()> {
                     .unwrap_or_else(|| "nan".into()),
                 fv_out.iters_run.to_string()])?;
 
-        // PINN with the same residual budget
+        // PINN with the same residual budget (xla only)
+        if ctx.is_native() {
+            println!("omega={k}pi pinn:      SKIP (needs --backend xla)");
+            continue;
+        }
         let mesh1 = generators::unit_square(1);
         let srcp = DataSource { mesh: &mesh1, domain: None,
                                 problem: &problem, sensor_values: None };
-        let mut pinn = Trainer::new(&engine, "pinn_poisson_nc6400", &srcp,
-                                    &cfg)?;
-        let pinn_out = train_until(&engine, &mut pinn, &exact, &grid,
-                                   max_iters, chunk)?;
+        let backend = ctx.make_xla_only("pinn_poisson_nc6400",
+                                        Some(common::PREDICT_STD), &srcp,
+                                        &cfg)?;
+        let mut pinn = Trainer::new(backend, &cfg);
+        let pinn_out = train_until(&mut pinn, &exact, &grid, max_iters,
+                                   chunk)?;
         println!(
             "omega={k}pi pinn:      MAE {:.3e} ({} iters){}",
             pinn_out.mae, pinn_out.iters_run,

@@ -1,10 +1,12 @@
 //! Fig. 12: forward convection-diffusion on the spur-gear domain —
 //! the complex-geometry showcase. FEM (our ParMooN stand-in) provides
-//! the reference field; FastVPINNs trains on the same mesh.
+//! the reference field; FastVPINNs trains on the same mesh. Fully
+//! backend-portable: the native backend optimizes the same cd loss
+//! (eps = 1, b = (0.1, 0)) with the paper's 3x50 network.
 
 use anyhow::Result;
 
-use super::common;
+use super::common::{self, ExpCtx};
 use crate::coordinator::metrics::ErrorNorms;
 use crate::coordinator::schedule::LrSchedule;
 use crate::coordinator::trainer::{DataSource, TrainConfig, Trainer};
@@ -13,12 +15,12 @@ use crate::fem::quadrature::QuadKind;
 use crate::fem_solver::{self, FemProblem};
 use crate::mesh::{generators, vtk};
 use crate::problems::{GearCd, Problem};
-use crate::runtime::engine::Engine;
+use crate::runtime::backend::native::{NativeConfig, NativeLoss};
 use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
 
 pub fn run(args: &Args) -> Result<()> {
-    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let ctx = ExpCtx::from_args(args)?;
     let iters = args.usize_or("iters", 1500)?;
     let paper = args.has("paper-scale");
     let dir = common::results_dir("fig12")?;
@@ -57,7 +59,16 @@ pub fn run(args: &Args) -> Result<()> {
         log_every: 50.max(iters / 100),
         ..TrainConfig::default()
     };
-    let mut trainer = Trainer::new(&engine, "fv_cd_gear", &src, &cfg)?;
+    let (bx, by) = problem.b();
+    let ncfg = NativeConfig {
+        layers: vec![2, 50, 50, 50, 1],
+        loss: NativeLoss::Forward { eps: problem.eps(), bx, by },
+        nb: 400,
+        ns: 0,
+    };
+    let backend = ctx.make_backend(&ncfg, "fv_cd_gear",
+                                   Some("predict_gear_16k"), &src, &cfg)?;
+    let mut trainer = Trainer::new(backend, &cfg);
     let report = trainer.run()?;
     trainer.history.to_csv(dir.join("history.csv"))?;
     println!(
@@ -67,7 +78,7 @@ pub fn run(args: &Args) -> Result<()> {
     );
 
     // ---- compare at mesh nodes
-    let pred = trainer.predict("predict_gear_16k", &mesh.points)?;
+    let pred = trainer.predict(&mesh.points)?;
     let errors = ErrorNorms::compute_f32(&pred, fem.nodal());
     println!("vs FEM: MAE {:.3e}, rel-L2 {:.3e}, Linf {:.3e}",
              errors.mae, errors.rel_l2, errors.linf);

@@ -1,22 +1,24 @@
 //! Fig. 14: inverse problem with constant diffusion — recover eps = 0.3
 //! from an initial guess of 2.0 plus 50 sensor observations
 //! (paper: converged |eps - 0.3| < 1e-5 in 8909 epochs, ~2 ms/epoch).
+//! Backend-portable: the native backend carries eps as an extra
+//! trainable scalar with an analytic d(loss)/d(eps).
 
 use anyhow::Result;
 
-use super::common;
+use super::common::{self, ExpCtx};
 use crate::coordinator::metrics::{eval_grid, ErrorNorms};
 use crate::coordinator::trainer::{DataSource, TrainConfig, Trainer};
 use crate::fem::assembly;
 use crate::fem::quadrature::QuadKind;
 use crate::mesh::generators;
 use crate::problems::{InverseConstPoisson, Problem};
-use crate::runtime::engine::Engine;
+use crate::runtime::backend::native::{NativeConfig, NativeLoss};
 use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
 
 pub fn run(args: &Args) -> Result<()> {
-    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let ctx = ExpCtx::from_args(args)?;
     let iters = args.usize_or("iters", 12_000)?;
     let tol = args.f64_or("tol", 1e-3)?;
     let dir = common::results_dir("fig14")?;
@@ -35,8 +37,15 @@ pub fn run(args: &Args) -> Result<()> {
         eps_converge: Some((problem.eps_actual, tol)),
         ..TrainConfig::default()
     };
-    let mut trainer =
-        Trainer::new(&engine, "fv_inverse_const_ne4_nt5_nq40", &src, &cfg)?;
+    let ncfg = NativeConfig {
+        layers: common::STD_LAYERS.to_vec(),
+        loss: NativeLoss::InverseConst,
+        nb: 400,
+        ns: 50,
+    };
+    let backend = ctx.make_backend(&ncfg, "fv_inverse_const_ne4_nt5_nq40",
+                                   Some(common::PREDICT_STD), &src, &cfg)?;
+    let mut trainer = Trainer::new(backend, &cfg);
     let report = trainer.run()?;
     trainer.history.to_csv(dir.join("eps_history.csv"))?;
 
@@ -55,7 +64,7 @@ pub fn run(args: &Args) -> Result<()> {
         .iter()
         .map(|p| problem.exact(p[0], p[1]).unwrap())
         .collect();
-    let pred = trainer.predict(common::PREDICT_STD, &grid)?;
+    let pred = trainer.predict(&grid)?;
     let errors = ErrorNorms::compute_f32(&pred, &exact);
     println!("solution MAE {:.3e} (paper: 6.6e-2)", errors.mae);
 

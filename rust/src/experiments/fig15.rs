@@ -1,11 +1,14 @@
 //! Fig. 15: inverse problem with space-dependent diffusion
 //! eps(x,y) = 0.5(sin x + cos y) on a 1024-cell disk; the network's two
 //! heads predict u and eps simultaneously, supervised by sensor data
-//! taken from the FEM reference solution.
+//! taken from the FEM reference solution. The two-head inverse-space
+//! loss only exists as an AOT artifact — xla backend required (the
+//! native backend prints a skip notice; a native two-head network is a
+//! natural follow-up once multi-head MLPs land).
 
 use anyhow::Result;
 
-use super::common;
+use super::common::{self, ExpCtx};
 use crate::coordinator::metrics::ErrorNorms;
 use crate::coordinator::trainer::{DataSource, TrainConfig, Trainer};
 use crate::fem::assembly;
@@ -13,12 +16,18 @@ use crate::fem::quadrature::QuadKind;
 use crate::fem_solver::{self, FemProblem};
 use crate::mesh::{generators, vtk};
 use crate::problems::{InverseSpaceCd, Problem};
-use crate::runtime::engine::Engine;
 use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
 
 pub fn run(args: &Args) -> Result<()> {
-    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let ctx = ExpCtx::from_args(args)?;
+    if ctx.is_native() {
+        println!(
+            "fig15 SKIP: the two-head inverse-space network needs \
+             --backend xla (--features xla + make artifacts)"
+        );
+        return Ok(());
+    }
     let iters = args.usize_or("iters", 4000)?;
     let dir = common::results_dir("fig15")?;
     let problem = InverseSpaceCd;
@@ -52,8 +61,10 @@ pub fn run(args: &Args) -> Result<()> {
         log_every: 50.max(iters / 100),
         ..TrainConfig::default()
     };
-    let mut trainer =
-        Trainer::new(&engine, "fv_inverse_space_disk1024", &src, &cfg)?;
+    let backend = ctx.make_xla_only("fv_inverse_space_disk1024",
+                                    Some("predict_inv2_16k"), &src,
+                                    &cfg)?;
+    let mut trainer = Trainer::new(backend, &cfg);
     let report = trainer.run()?;
     trainer.history.to_csv(dir.join("history.csv"))?;
     println!(
@@ -63,7 +74,7 @@ pub fn run(args: &Args) -> Result<()> {
     );
 
     // ---- evaluate both heads at mesh nodes
-    let heads = trainer.predict_heads("predict_inv2_16k", &mesh.points)?;
+    let heads = trainer.predict_heads(&mesh.points)?;
     let u_pred: Vec<f64> = heads[0].iter().map(|&v| v as f64).collect();
     let eps_pred: Vec<f64> = heads[1].iter().map(|&v| v as f64).collect();
     let eps_exact: Vec<f64> = mesh

@@ -1,21 +1,21 @@
 //! Fig. 16: hyperparameter impact on median training time per epoch —
 //! three 2D sweeps over (N_test, N_quad), (N_test, N_elem),
-//! (N_quad, N_elem).
+//! (N_quad, N_elem). Fully backend-portable (FastVPINN step only).
 
 use anyhow::Result;
 
-use super::common;
+use super::common::{self, ExpCtx};
 use crate::problems::PoissonSin;
-use crate::runtime::engine::Engine;
 use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
 
 pub fn run(args: &Args) -> Result<()> {
-    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let ctx = ExpCtx::from_args(args)?;
     let iters = args.usize_or("timing-iters", 20)?;
     let warmup = args.usize_or("warmup", 3)?;
     let dir = common::results_dir("fig16")?;
     let problem = PoissonSin::new(2.0 * std::f64::consts::PI);
+    println!("fig16 backend: {}", ctx.name());
 
     // (a) N_test x N_quad at N_elem = 1
     println!("fig16a: nt x nq sweep (ne=1)");
@@ -23,9 +23,8 @@ pub fn run(args: &Args) -> Result<()> {
                                   &["nt1d", "nq1d", "median_ms"])?;
     for nt in [5usize, 10, 20] {
         for nq in [10usize, 20, 40] {
-            let ms = common::median_step_ms(
-                &engine, &common::fv_name(1, nt, nq), &problem, iters,
-                warmup)?;
+            let ms = common::median_step_ms_fv(&ctx, 1, nt, nq, &problem,
+                                               iters, warmup)?;
             println!("  nt={nt:<3} nq={nq:<3} {ms:.3} ms");
             w.row_f64(&[nt as f64, nq as f64, ms])?;
         }
@@ -38,9 +37,8 @@ pub fn run(args: &Args) -> Result<()> {
                                   &["nt1d", "ne", "median_ms"])?;
     for nt in [5usize, 10, 20] {
         for ne in [4usize, 64, 400] {
-            let ms = common::median_step_ms(
-                &engine, &common::fv_name(ne, nt, 10), &problem, iters,
-                warmup)?;
+            let ms = common::median_step_ms_fv(&ctx, ne, nt, 10, &problem,
+                                               iters, warmup)?;
             println!("  nt={nt:<3} ne={ne:<4} {ms:.3} ms");
             w.row_f64(&[nt as f64, ne as f64, ms])?;
         }
@@ -53,9 +51,8 @@ pub fn run(args: &Args) -> Result<()> {
                                   &["nq1d", "ne", "median_ms"])?;
     for nq in [5usize, 10, 20] {
         for ne in [4usize, 64, 400] {
-            let ms = common::median_step_ms(
-                &engine, &common::fv_name(ne, 10, nq), &problem, iters,
-                warmup)?;
+            let ms = common::median_step_ms_fv(&ctx, ne, 10, nq, &problem,
+                                               iters, warmup)?;
             println!("  nq={nq:<3} ne={ne:<4} {ms:.3} ms");
             w.row_f64(&[nq as f64, ne as f64, ms])?;
         }

@@ -1,18 +1,19 @@
 //! Table 1 + Fig. 19: prediction time — classical FEM solve vs a trained
-//! network's forward pass, across DOF counts.
+//! network's forward pass, across DOF counts. Backend-portable: the
+//! native backend times `Mlp::eval`; the xla backend times the AOT
+//! predict artifacts.
 
 use anyhow::Result;
 
-use super::common;
+use super::common::{self, ExpCtx};
 use crate::fem_solver::{self, FemProblem};
 use crate::mesh::generators;
-use crate::runtime::engine::Engine;
-use crate::runtime::tensor::TensorData;
+use crate::runtime::backend::native::Mlp;
 use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
-use crate::util::rng::Rng;
 
 /// Smallest predict artifact that fits `n` points in one execution.
+#[cfg(feature = "xla")]
 fn choose_predict(n: usize) -> &'static str {
     match n {
         0..=16384 => "predict_std_16k",
@@ -22,8 +23,38 @@ fn choose_predict(n: usize) -> &'static str {
     }
 }
 
+/// One timed prediction pass over all mesh points, per backend.
+enum Predictor<'a> {
+    Native(Mlp),
+    #[cfg(feature = "xla")]
+    Xla {
+        engine: &'a crate::runtime::engine::Engine,
+        params: Vec<xla::Literal>,
+    },
+    /// Uses the `'a` lifetime when the xla variant is compiled out.
+    #[cfg(not(feature = "xla"))]
+    #[allow(dead_code)]
+    Phantom(std::marker::PhantomData<&'a ()>),
+}
+
+impl Predictor<'_> {
+    fn predict(&self, points: &[[f64; 2]]) -> Result<usize> {
+        match self {
+            Predictor::Native(mlp) => Ok(mlp.eval(points).len()),
+            #[cfg(feature = "xla")]
+            Predictor::Xla { engine, params } => {
+                let out = engine.predict(choose_predict(points.len()),
+                                         params, points)?;
+                Ok(out[0].len())
+            }
+            #[cfg(not(feature = "xla"))]
+            Predictor::Phantom(_) => unreachable!(),
+        }
+    }
+}
+
 pub fn run(args: &Args) -> Result<()> {
-    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+    let ctx = ExpCtx::from_args(args)?;
     let paper = args.has("paper-scale");
     let reps = args.usize_or("reps", 5)?;
     let dir = common::results_dir("table1")?;
@@ -31,15 +62,28 @@ pub fn run(args: &Args) -> Result<()> {
 
     // random (but fixed) network parameters: prediction cost does not
     // depend on training state
-    let mut rng = Rng::new(7);
-    let shapes: [(usize, usize); 4] = [(2, 30), (30, 30), (30, 30), (30, 1)];
-    let mut params = Vec::new();
-    for (nin, nout) in shapes {
-        params.push(
-            TensorData::new(vec![nin, nout], rng.glorot(nin, nout))?
-                .to_literal()?);
-        params.push(TensorData::zeros(&[nout]).to_literal()?);
-    }
+    let predictor = match &ctx.sel {
+        common::BackendSel::Native => {
+            Predictor::Native(Mlp::glorot(common::STD_LAYERS, 7)?)
+        }
+        #[cfg(feature = "xla")]
+        common::BackendSel::Xla(engine) => {
+            use crate::runtime::tensor::TensorData;
+            use crate::util::rng::Rng;
+            let mut rng = Rng::new(7);
+            let shapes: [(usize, usize); 4] =
+                [(2, 30), (30, 30), (30, 30), (30, 1)];
+            let mut params = Vec::new();
+            for (nin, nout) in shapes {
+                params.push(
+                    TensorData::new(vec![nin, nout],
+                                    rng.glorot(nin, nout))?
+                        .to_literal()?);
+                params.push(TensorData::zeros(&[nout]).to_literal()?);
+            }
+            Predictor::Xla { engine, params }
+        }
+    };
 
     let grids: &[usize] = if paper {
         &[170, 340, 509, 678]
@@ -47,7 +91,8 @@ pub fn run(args: &Args) -> Result<()> {
         &[64, 128, 256, 512]
     };
 
-    println!("Table 1: FEM solve time vs NN prediction time");
+    println!("Table 1: FEM solve time vs NN prediction time (backend: {})",
+             ctx.name());
     println!("{:>10} {:>12} {:>12} {:>10}", "DOFs", "FEM (s)",
              "predict (s)", "ratio");
     let mut w = CsvWriter::create(
@@ -73,13 +118,11 @@ pub fn run(args: &Args) -> Result<()> {
         let fem_secs = t0.elapsed().as_secs_f64();
 
         // --- NN prediction at the same DOF count (median of reps)
-        let art = choose_predict(n_dof);
-        // warm up (compile + first run)
-        engine.predict(art, &params, &mesh.points[..1.min(n_dof)])?;
+        predictor.predict(&mesh.points[..1.min(n_dof)])?; // warm up
         let mut samples = Vec::new();
         for _ in 0..reps {
             let t0 = std::time::Instant::now();
-            let _ = engine.predict(art, &params, &mesh.points)?;
+            let _ = predictor.predict(&mesh.points)?;
             samples.push(t0.elapsed().as_secs_f64());
         }
         let pred_secs = crate::util::stats::median(&samples);

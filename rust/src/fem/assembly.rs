@@ -12,9 +12,11 @@
 //! ```
 //!
 //! The assembly is embarrassingly parallel over elements and runs on all
-//! cores (std::thread scoped chunks — rayon is unavailable offline).
-
-use std::sync::atomic::{AtomicUsize, Ordering};
+//! cores: each scoped thread owns one contiguous, evenly-split chunk of
+//! elements (lock-free — no work-stealing counter, no per-element
+//! mutexes; rayon is unavailable offline). Output is bit-reproducible
+//! regardless of thread count because every element writes only its own
+//! slice.
 
 use crate::fem::bilinear::BilinearMap;
 use crate::fem::jacobi;
@@ -122,46 +124,38 @@ pub fn assemble(mesh: &QuadMesh, nt1d: usize, nq1d: usize, kind: QuadKind)
         .map(|n| n.get())
         .unwrap_or(1)
         .min(ne.max(1));
-    let next = AtomicUsize::new(0);
-
-    // Split output buffers into per-element chunks and hand them out via
-    // a work-stealing counter.
+    // Even contiguous split: thread t owns elements [t*per, (t+1)*per).
+    // Each thread gets disjoint &mut slices of the output buffers, so no
+    // synchronization at all is needed.
+    let per = if ne == 0 { 1 } else { ne.div_ceil(n_threads) };
     {
-        let quad_chunks: Vec<&mut [f64]> =
-            quad_xy.chunks_mut(nq * 2).collect();
-        let gx_chunks: Vec<&mut [f64]> = gx.chunks_mut(nt * nq).collect();
-        let gy_chunks: Vec<&mut [f64]> = gy.chunks_mut(nt * nq).collect();
-        let v_chunks: Vec<&mut [f64]> = v.chunks_mut(nt * nq).collect();
-        let jd_chunks: Vec<&mut [f64]> = jdet.chunks_mut(nq).collect();
-
-        // Wrap in mutex-free cell-per-element distribution: move chunks
-        // into options guarded by the atomic counter (each index is
-        // claimed exactly once).
-        use std::sync::Mutex;
-        let work: Vec<Mutex<Option<ElemOut>>> = quad_chunks
-            .into_iter()
-            .zip(gx_chunks)
-            .zip(gy_chunks)
-            .zip(v_chunks)
-            .zip(jd_chunks)
-            .map(|((((q, gx), gy), v), jd)| {
-                Mutex::new(Some(ElemOut { quad: q, gx, gy, v, jd }))
-            })
-            .collect();
-
+        let (xi, eta, w) = (&rule.xi, &rule.eta, &rule.w);
+        let (v_ref, dxi_ref, deta_ref) = (&v_ref, &dxi_ref, &deta_ref);
         std::thread::scope(|s| {
-            for _ in 0..n_threads {
-                s.spawn(|| loop {
-                    let e = next.fetch_add(1, Ordering::Relaxed);
-                    if e >= ne {
-                        break;
+            let chunks = quad_xy
+                .chunks_mut(per * nq * 2)
+                .zip(gx.chunks_mut(per * nt * nq))
+                .zip(gy.chunks_mut(per * nt * nq))
+                .zip(v.chunks_mut(per * nt * nq))
+                .zip(jdet.chunks_mut(per * nq))
+                .enumerate();
+            for (t, ((((qc, gxc), gyc), vc), jc)) in chunks {
+                let e0 = t * per;
+                s.spawn(move || {
+                    let elems = qc
+                        .chunks_mut(nq * 2)
+                        .zip(gxc.chunks_mut(nt * nq))
+                        .zip(gyc.chunks_mut(nt * nq))
+                        .zip(vc.chunks_mut(nt * nq))
+                        .zip(jc.chunks_mut(nq))
+                        .enumerate();
+                    for (k, ((((q, gx), gy), v), jd)) in elems {
+                        assemble_element(
+                            mesh, e0 + k, nt, nq, xi, eta, w, v_ref,
+                            dxi_ref, deta_ref,
+                            ElemOut { quad: q, gx, gy, v, jd },
+                        );
                     }
-                    let mut slot = work[e].lock().unwrap();
-                    let out = slot.take().expect("element claimed once");
-                    assemble_element(
-                        mesh, e, nt, nq, &rule.xi, &rule.eta, &rule.w,
-                        &v_ref, &dxi_ref, &deta_ref, out,
-                    );
                 });
             }
         });

@@ -1,48 +1,61 @@
 //! # FastVPINNs — tensor-driven hp-Variational PINNs
 //!
 //! Rust reproduction of *FastVPINNs: Tensor-Driven Acceleration of VPINNs
-//! for Complex Geometries* (Anandh, Ghose, Jain, Ganesan, 2024) as a
-//! three-layer stack:
+//! for Complex Geometries* (Anandh, Ghose, Jain, Ganesan, 2024), built
+//! around a runtime-polymorphic [`runtime::backend::Backend`]:
 //!
-//! - **L3 (this crate)** owns everything at run time: quad meshes and
-//!   generators, the mapped-FEM assembly of the FastVPINNs premultiplier
-//!   tensors, a classical Q1 FEM reference solver, the PJRT runtime that
-//!   executes AOT-compiled training artifacts, the training coordinator,
-//!   and the experiment/bench harness that regenerates every table and
-//!   figure of the paper.
-//! - **L2 (python/compile, build-time only)** defines the JAX model and
-//!   losses and lowers whole train steps (network + autodiff + Adam) to
-//!   HLO text.
-//! - **L1 (python/compile/kernels)** is the Pallas residual-contraction
-//!   kernel the losses call into.
+//! - **Native backend** (default) — the whole FastVPINNs train step in
+//!   pure Rust: tanh-MLP forward carrying spatial tangents, the
+//!   tensor-contraction variational residual over the precomputed
+//!   premultiplier tensors `G_x`/`G_y`/`V`, hand-written reverse-mode
+//!   backprop, Dirichlet/sensor penalties, and Adam. Trains offline with
+//!   no Python, no artifacts and no XLA in the build graph.
+//! - **XLA backend** (`--features xla`) — executes AOT train steps
+//!   (HLO + JSON manifest, produced once by `make artifacts` from the
+//!   JAX/Pallas definitions under `python/compile`) on the PJRT CPU
+//!   client. Same [`coordinator::trainer::Trainer`], same losses — the
+//!   accelerated path.
 //!
-//! Python never runs on the training path: `make artifacts` once, then
-//! the `repro` binary is self-contained.
+//! The rest of the stack is backend-agnostic: quad meshes and
+//! generators, the mapped-FEM assembly of the premultiplier tensors, a
+//! classical Q1 FEM reference solver, the training coordinator, and the
+//! experiment/bench harness that regenerates every table and figure of
+//! the paper.
 //!
-//! ## Quick tour
+//! ## Quick tour (native backend — runs with zero setup)
 //!
-//! ```no_run
+//! ```
 //! use fastvpinns::prelude::*;
-//! use fastvpinns::coordinator::trainer::DataSource;
 //!
-//! // 1. mesh + assembly (pure Rust)
+//! // 1. mesh + premultiplier tensor assembly (pure Rust)
 //! let mesh = generators::unit_square(2);
-//! let domain = assembly::assemble(&mesh, 5, 20, QuadKind::GaussLegendre);
+//! let domain = assembly::assemble(&mesh, 3, 5, QuadKind::GaussLegendre);
 //!
-//! // 2. runtime + data source
-//! let engine = Engine::new("artifacts").unwrap();
-//! let problem = problems::poisson_sin(2.0 * std::f64::consts::PI);
+//! // 2. problem + data source + native backend (no artifacts!)
+//! let problem = problems::poisson_sin(std::f64::consts::PI);
 //! let src = DataSource { mesh: &mesh, domain: Some(&domain),
 //!                        problem: &*problem, sensor_values: None };
+//! let cfg = TrainConfig { iters: 50, ..TrainConfig::default() };
+//! let ncfg = NativeConfig {
+//!     layers: vec![2, 8, 8, 1],
+//!     loss: NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 },
+//!     nb: 40,
+//!     ns: 0,
+//! };
+//! let backend =
+//!     NativeBackend::new(&ncfg, &src, &BackendOpts::from(&cfg)).unwrap();
 //!
-//! // 3. train the AOT-compiled step
-//! let cfg = TrainConfig { iters: 2000, ..TrainConfig::default() };
-//! let mut trainer =
-//!     Trainer::new(&engine, "fv_poisson_ne4_nt5_nq20", &src, &cfg)
-//!         .unwrap();
+//! // 3. train through the backend-agnostic coordinator
+//! let mut trainer = Trainer::new(Box::new(backend), &cfg);
 //! let report = trainer.run().unwrap();
-//! println!("final loss {:.3e}", report.final_loss);
+//! assert!(report.final_loss.is_finite());
+//! let u = trainer.predict(&[[0.5, 0.5]]).unwrap();
+//! assert_eq!(u.len(), 1);
 //! ```
+//!
+//! With `--features xla`, swap `NativeBackend::new(...)` for
+//! `XlaBackend::new(&engine, "fv_poisson_ne4_nt5_nq20", ...)` — the
+//! `Trainer` code does not change.
 
 pub mod autodiff;
 pub mod coordinator;
@@ -58,12 +71,21 @@ pub mod util;
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::coordinator::metrics::ErrorNorms;
-    pub use crate::coordinator::trainer::{TrainConfig, TrainReport, Trainer};
+    pub use crate::coordinator::trainer::{
+        DataSource, TrainConfig, TrainReport, Trainer,
+    };
     pub use crate::fem::assembly::{self, AssembledDomain};
     pub use crate::fem::quadrature::QuadKind;
     pub use crate::fem_solver::{FemProblem, FemSolution};
     pub use crate::mesh::{generators, QuadMesh};
     pub use crate::problems;
+    pub use crate::runtime::backend::native::{
+        Mlp, NativeBackend, NativeConfig, NativeLoss,
+    };
+    pub use crate::runtime::backend::{Backend, BackendOpts, StepStats};
+    #[cfg(feature = "xla")]
+    pub use crate::runtime::backend::xla::XlaBackend;
+    #[cfg(feature = "xla")]
     pub use crate::runtime::engine::Engine;
     pub use crate::runtime::manifest::Manifest;
     pub use crate::runtime::tensor::TensorData;

@@ -1,8 +1,9 @@
 //! `repro` — the FastVPINNs L3 coordinator CLI.
 //!
 //! Subcommands:
-//!   artifacts                      list available AOT artifacts
-//!   train --artifact <name> ...    train one artifact on a square domain
+//!   train [--backend native|xla] ...  train a problem (native: pure
+//!                                     Rust, no artifacts; xla: AOT)
+//!   artifacts                      list available AOT artifacts (xla)
 //!   experiment <id|all> ...        regenerate a paper table/figure
 //!   fem-solve --mesh <kind> ...    run the classical FEM reference solver
 //!   mesh --kind <kind> ...         generate/inspect/export meshes
@@ -11,6 +12,7 @@
 
 use anyhow::{bail, Result};
 
+use fastvpinns::coordinator::metrics::eval_grid;
 use fastvpinns::coordinator::schedule::LrSchedule;
 use fastvpinns::coordinator::trainer::{DataSource, TrainConfig, Trainer};
 use fastvpinns::experiments;
@@ -19,7 +21,10 @@ use fastvpinns::fem::quadrature::QuadKind;
 use fastvpinns::fem_solver::{self, FemProblem};
 use fastvpinns::mesh::{generators, gmsh, quality, QuadMesh};
 use fastvpinns::problems::{self, Problem};
-use fastvpinns::runtime::engine::Engine;
+use fastvpinns::runtime::backend::native::{
+    NativeBackend, NativeConfig, NativeLoss,
+};
+use fastvpinns::runtime::backend::{check_backend_name, BackendOpts};
 use fastvpinns::util::cli::Args;
 use fastvpinns::util::npy;
 
@@ -64,16 +69,28 @@ fn dispatch(args: &Args) -> Result<()> {
 
 const USAGE: &str = "\
 repro — FastVPINNs coordinator
-  repro artifacts [--artifacts DIR]
-  repro train --artifact NAME [--omega-pi K] [--iters N] [--lr F]
-              [--tau F] [--seed N]
+  repro train [--backend native|xla] [--problem poisson_sin|cd_gear|
+              inverse_const] [--omega-pi K] [--n N] [--nt1d N] [--nq1d N]
+              [--layers 2,30,30,30,1] [--iters N] [--lr F] [--tau F]
+              [--seed N] [--history F.csv]
+              (xla backend: --artifact NAME [--artifacts DIR])
+  repro artifacts [--artifacts DIR]              (requires --features xla)
   repro experiment <fig02|fig08|fig09|fig10|fig11|fig12|fig14|fig15|
-                    fig16|table1|all> [--iters N] [--paper-scale]
+                    fig16|table1|all> [--backend native|xla] [--iters N]
+                    [--paper-scale]
   repro fem-solve --mesh <square|disk|gear> [--n N] [--omega-pi K]
   repro mesh --kind <square|skewed|disk|gear|annulus> [--n N] [--out F.msh]
   repro dump-tensors [--out DIR]";
 
+#[cfg(not(feature = "xla"))]
+fn cmd_artifacts(_args: &Args) -> Result<()> {
+    bail!("the artifacts subcommand needs the xla runtime — rebuild \
+           with `cargo build --features xla`")
+}
+
+#[cfg(feature = "xla")]
 fn cmd_artifacts(args: &Args) -> Result<()> {
+    use fastvpinns::runtime::engine::Engine;
     let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
     let names = engine.list()?;
     if names.is_empty() {
@@ -100,41 +117,83 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
-    let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
-    let name = args.req_str("artifact")?;
-    let art = engine.load(&name)?;
-    let c = art.manifest.config.clone();
-    let omega = args.f64_or("omega-pi", 2.0)? * std::f64::consts::PI;
-    let problem = problems::PoissonSin::new(omega);
+/// Parse `--layers 2,30,30,30,1`.
+fn parse_layers(spec: &str) -> Result<Vec<usize>> {
+    let layers: Vec<usize> = spec
+        .split(',')
+        .map(|t| t.trim().parse::<usize>())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|_| anyhow::anyhow!("--layers expects e.g. 2,30,30,30,1"))?;
+    Ok(layers)
+}
 
-    let k = (c.ne as f64).sqrt().round() as usize;
-    if k * k != c.ne && art.manifest.loss != "pinn" {
-        bail!("artifact ne={} is not a square grid; use the experiment \
-               drivers for mesh-specific runs", c.ne);
+fn cmd_train(args: &Args) -> Result<()> {
+    let backend = args.str_or("backend", "native");
+    check_backend_name(&backend)?;
+    match backend.as_str() {
+        "native" => cmd_train_native(args),
+        "xla" => cmd_train_xla(args),
+        _ => unreachable!(),
     }
-    let mesh = generators::unit_square(k.max(1));
-    let dom;
-    let domain = if art.manifest.loss == "pinn" {
-        None
-    } else {
-        dom = assembly::assemble(&mesh, c.nt1d, c.nq1d,
-                                 QuadKind::GaussLegendre);
-        Some(&dom)
-    };
-    let src = DataSource { mesh: &mesh, domain, problem: &problem,
-                           sensor_values: None };
+}
+
+/// Pure-Rust training: no artifacts, no Python, no XLA.
+fn cmd_train_native(args: &Args) -> Result<()> {
+    let problem_name = args.str_or("problem", "poisson_sin");
+    let iters = args.usize_or("iters", 5000)?;
     let cfg = TrainConfig {
-        iters: args.usize_or("iters", 2000)?,
-        lr: LrSchedule::Constant(args.f64_or("lr", 1e-3)?),
+        iters,
+        lr: LrSchedule::Constant(args.f64_or("lr", 5e-3)?),
         tau: args.f64_or("tau", 10.0)?,
         seed: args.usize_or("seed", 42)? as u64,
         log_every: args.usize_or("log-every", 100)?,
         ..TrainConfig::default()
     };
-    let mut trainer = Trainer::new(&engine, &name, &src, &cfg)?;
-    println!("training {name} (omega = {:.2}pi, {} iters)...",
-             omega / std::f64::consts::PI, cfg.iters);
+    let layers = parse_layers(&args.str_or("layers", "2,30,30,30,1"))?;
+    let nt1d = args.usize_or("nt1d", 5)?;
+    let nq1d = args.usize_or("nq1d", 10)?;
+
+    // problem + mesh + loss per problem family
+    let omega = args.f64_or("omega-pi", 2.0)? * std::f64::consts::PI;
+    let (mesh, problem, loss, ns): (QuadMesh, Box<dyn Problem>, NativeLoss,
+                                    usize) = match problem_name.as_str() {
+        "poisson_sin" => {
+            let n = args.usize_or("n", 4)?;
+            (generators::unit_square(n.max(1)),
+             Box::new(problems::PoissonSin::new(omega)),
+             NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 }, 0)
+        }
+        "cd_gear" => {
+            let p = problems::GearCd;
+            let (bx, by) = p.b();
+            (generators::gear_ci(), Box::new(p),
+             NativeLoss::Forward { eps: 1.0, bx, by }, 0)
+        }
+        "inverse_const" => {
+            (generators::rect_grid(2, 2, -1.0, -1.0, 1.0, 1.0),
+             Box::new(problems::InverseConstPoisson::new()),
+             NativeLoss::InverseConst, 50)
+        }
+        other => bail!("unknown --problem '{other}' (known: poisson_sin, \
+                        cd_gear, inverse_const)"),
+    };
+
+    println!(
+        "training {problem_name} [native backend]: {} cells, nt={}^2, \
+         nq={}^2, net {:?}, {} iters",
+        mesh.n_cells(), nt1d, nq1d, layers, cfg.iters
+    );
+    let dom = assembly::assemble(&mesh, nt1d, nq1d, QuadKind::GaussLegendre);
+    let src = DataSource { mesh: &mesh, domain: Some(&dom),
+                           problem: &*problem, sensor_values: None };
+    let ncfg = NativeConfig {
+        layers,
+        loss,
+        nb: args.usize_or("nb", 400)?,
+        ns,
+    };
+    let native = NativeBackend::new(&ncfg, &src, &BackendOpts::from(&cfg))?;
+    let mut trainer = Trainer::new(Box::new(native), &cfg);
     let report = trainer.run()?;
     println!(
         "done: loss {:.4e} (var {:.4e}, bd {:.4e}), median {:.3} ms/step, \
@@ -142,14 +201,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.final_loss, report.final_var_loss, report.final_bd_loss,
         report.median_step_ms, report.total_seconds
     );
-    // error vs exact on the paper's 100x100 grid
-    let grid = fastvpinns::coordinator::metrics::eval_grid(
-        100, 100, 0.0, 0.0, 1.0, 1.0);
-    let exact: Vec<f64> = grid
-        .iter()
-        .map(|p| problem.exact(p[0], p[1]).unwrap())
-        .collect();
-    if let Ok(err) = trainer.evaluate("predict_std_16k", &grid, &exact) {
+    if let Some(eps) = report.eps_final {
+        println!("trainable eps -> {eps:.5}");
+    }
+
+    // error vs exact on the paper's 100x100 grid (when analytic)
+    let (lo, hi) = mesh.bbox();
+    let grid = eval_grid(100, 100, lo[0], lo[1], hi[0], hi[1]);
+    if problem.exact(grid[0][0], grid[0][1]).is_some() {
+        let exact: Vec<f64> = grid
+            .iter()
+            .map(|p| problem.exact(p[0], p[1]).unwrap())
+            .collect();
+        let err = trainer.evaluate(&grid, &exact)?;
         println!("errors: MAE {:.3e}, rel-L2 {:.3e}, Linf {:.3e}",
                  err.mae, err.rel_l2, err.linf);
     }
@@ -158,6 +222,80 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("history -> {out}");
     }
     Ok(())
+}
+
+/// AOT/PJRT training (requires --features xla + `make artifacts`).
+#[cfg(not(feature = "xla"))]
+fn cmd_train_xla(_args: &Args) -> Result<()> {
+    unreachable!("check_backend_name rejects xla without the feature")
+}
+
+#[cfg(feature = "xla")]
+fn cmd_train_xla(args: &Args) -> Result<()> {
+    {
+        use fastvpinns::runtime::backend::xla::XlaBackend;
+        use fastvpinns::runtime::engine::Engine;
+
+        let engine = Engine::new(args.str_or("artifacts", "artifacts"))?;
+        let name = args.req_str("artifact")?;
+        let art = engine.load(&name)?;
+        let c = art.manifest.config.clone();
+        let omega = args.f64_or("omega-pi", 2.0)? * std::f64::consts::PI;
+        let problem = problems::PoissonSin::new(omega);
+
+        let k = (c.ne as f64).sqrt().round() as usize;
+        if k * k != c.ne && art.manifest.loss != "pinn" {
+            bail!("artifact ne={} is not a square grid; use the \
+                   experiment drivers for mesh-specific runs", c.ne);
+        }
+        let mesh = generators::unit_square(k.max(1));
+        let dom;
+        let domain = if art.manifest.loss == "pinn" {
+            None
+        } else {
+            dom = assembly::assemble(&mesh, c.nt1d, c.nq1d,
+                                     QuadKind::GaussLegendre);
+            Some(&dom)
+        };
+        let src = DataSource { mesh: &mesh, domain, problem: &problem,
+                               sensor_values: None };
+        let cfg = TrainConfig {
+            iters: args.usize_or("iters", 2000)?,
+            lr: LrSchedule::Constant(args.f64_or("lr", 1e-3)?),
+            tau: args.f64_or("tau", 10.0)?,
+            seed: args.usize_or("seed", 42)? as u64,
+            log_every: args.usize_or("log-every", 100)?,
+            ..TrainConfig::default()
+        };
+        let backend = XlaBackend::new(&engine, &name,
+                                      Some("predict_std_16k"), &src,
+                                      &BackendOpts::from(&cfg))?;
+        let mut trainer = Trainer::new(Box::new(backend), &cfg);
+        println!("training {name} (omega = {:.2}pi, {} iters)...",
+                 omega / std::f64::consts::PI, cfg.iters);
+        let report = trainer.run()?;
+        println!(
+            "done: loss {:.4e} (var {:.4e}, bd {:.4e}), median {:.3} \
+             ms/step, total {:.1}s",
+            report.final_loss, report.final_var_loss, report.final_bd_loss,
+            report.median_step_ms, report.total_seconds
+        );
+        // error vs exact on the paper's 100x100 grid
+        let grid = eval_grid(100, 100, 0.0, 0.0, 1.0, 1.0);
+        let exact: Vec<f64> = grid
+            .iter()
+            .map(|p| problem.exact(p[0], p[1]).unwrap())
+            .collect();
+        if let Ok(err) = trainer.evaluate(&grid, &exact) {
+            println!("errors: MAE {:.3e}, rel-L2 {:.3e}, Linf {:.3e}",
+                     err.mae, err.rel_l2, err.linf);
+        }
+        if let Some(out) = args.flag("history") {
+            trainer.history.to_csv(out)?;
+            println!("history -> {out}");
+        }
+        Ok(())
+    }
 }
 
 fn build_mesh(kind: &str, n: usize) -> Result<QuadMesh> {

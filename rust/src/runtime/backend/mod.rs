@@ -1,0 +1,110 @@
+//! Training backends: the train-step contract the coordinator drives.
+//!
+//! A [`Backend`] owns everything a training run needs — network
+//! parameters, optimizer state, and the step-invariant data tensors —
+//! and exposes exactly three operations: advance one optimizer step,
+//! predict at arbitrary points, and report the trainable eps (inverse
+//! problems). The coordinator ([`crate::coordinator::trainer::Trainer`])
+//! is backend-agnostic: it drives `&dyn Backend`, applies LR schedules,
+//! logs history and computes error norms.
+//!
+//! Two implementations:
+//! - [`native::NativeBackend`] — the whole FastVPINNs step in pure Rust
+//!   (tanh-MLP forward with input tangents, tensor-contraction residual,
+//!   hand-written reverse-mode backprop, Adam). Always available; no
+//!   artifacts, no Python, no XLA in the build graph.
+//! - [`xla::XlaBackend`] (`--features xla`) — executes AOT-compiled
+//!   train-step artifacts on the PJRT client, the accelerated path.
+
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod xla;
+
+use anyhow::Result;
+
+use crate::fem::assembly::AssembledDomain;
+use crate::mesh::QuadMesh;
+use crate::problems::Problem;
+
+/// Where a backend gets its mesh/problem data from.
+pub struct DataSource<'a> {
+    pub mesh: &'a QuadMesh,
+    /// Assembled premultiplier tensors (not needed for PINN artifacts).
+    pub domain: Option<&'a AssembledDomain>,
+    pub problem: &'a dyn Problem,
+    /// Sensor ground truth override (defaults to `problem.exact`).
+    pub sensor_values: Option<&'a dyn Fn(f64, f64) -> f64>,
+}
+
+/// Scalar penalties + init knobs shared by all backends (a subset of
+/// `TrainConfig`; `From<&TrainConfig>` is implemented in the coordinator).
+#[derive(Debug, Clone, Copy)]
+pub struct BackendOpts {
+    /// Dirichlet penalty (paper's tau).
+    pub tau: f64,
+    /// Sensor penalty for inverse problems (paper's gamma).
+    pub gamma: f64,
+    pub seed: u64,
+    /// Initial guess for the trainable eps (inverse_const; paper: 2.0).
+    pub eps_init: f64,
+}
+
+impl Default for BackendOpts {
+    fn default() -> Self {
+        BackendOpts { tau: 10.0, gamma: 10.0, seed: 42, eps_init: 2.0 }
+    }
+}
+
+/// Loss components of one optimizer step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    /// Total objective (var + tau*bd [+ gamma*sensor]).
+    pub loss: f64,
+    pub var_loss: f64,
+    pub bd_loss: f64,
+    /// Loss-dependent extra: eps (inverse_const), sensor loss
+    /// (inverse_space), else 0.
+    pub extra: f64,
+}
+
+/// The train-step contract.
+pub trait Backend {
+    /// Short backend id ("native", "xla").
+    fn name(&self) -> &'static str;
+
+    /// Loss family being optimized ("poisson", "cd", "inverse_const",
+    /// "inverse_space", "pinn", ...).
+    fn loss_kind(&self) -> &str;
+
+    /// Run one optimizer step. `step` is 1-based (Adam bias correction),
+    /// `lr` the current learning rate.
+    fn step(&mut self, step: usize, lr: f64) -> Result<StepStats>;
+
+    /// Evaluate the network at arbitrary points; one `Vec<f32>` per
+    /// output head (head 0 is always u).
+    fn predict(&self, points: &[[f64; 2]]) -> Result<Vec<Vec<f32>>>;
+
+    /// Current trainable diffusion coefficient, when the loss has one.
+    fn current_eps(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Parse a `--backend` CLI value, erroring helpfully when the XLA path
+/// was not compiled in.
+pub fn check_backend_name(name: &str) -> Result<()> {
+    match name {
+        "native" => Ok(()),
+        #[cfg(feature = "xla")]
+        "xla" => Ok(()),
+        #[cfg(not(feature = "xla"))]
+        "xla" => anyhow::bail!(
+            "backend 'xla' was not compiled in — rebuild with `cargo \
+             build --features xla` (and run `make artifacts` for the \
+             AOT train steps)"
+        ),
+        other => anyhow::bail!(
+            "unknown backend '{other}' (known: native, xla)"
+        ),
+    }
+}

@@ -1,0 +1,918 @@
+//! The native pure-Rust FastVPINNs training backend.
+//!
+//! Implements the paper's tensor-driven train step with no XLA, no
+//! artifacts and no Python:
+//!
+//! 1. tanh-MLP forward over all `ne*nq` quadrature points, carrying the
+//!    input tangents so `(u, du/dx, du/dy)` come out of one pass
+//!    (forward-mode in the two spatial directions);
+//! 2. the tensor-contraction variational residual
+//!    `r[e,j] = eps * sum_q (G_x[e,j,q] du/dx + G_y[e,j,q] du/dy)
+//!              + sum_q V[e,j,q] (b . grad u) - F[e,j]`;
+//! 3. hand-written reverse-mode backprop through the contraction and the
+//!    tangent-carrying MLP (reverse-over-forward), plus the Dirichlet
+//!    penalty and sensor terms;
+//! 4. an Adam update (beta1 0.9, beta2 0.999, eps 1e-8).
+//!
+//! The element loop is parallelized over contiguous element chunks with
+//! scoped threads — the same pattern as `fem::assembly` — and thread
+//! partials are reduced in chunk order, so a run is deterministic for a
+//! fixed thread count.
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::{Backend, BackendOpts, DataSource, StepStats};
+use crate::util::rng::Rng;
+
+/// Which objective the native step optimizes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NativeLoss {
+    /// `-eps lap u + b . grad u = f` with fixed coefficients
+    /// (`bx = by = 0` is plain Poisson).
+    Forward { eps: f64, bx: f64, by: f64 },
+    /// `-eps lap u = f` with trainable eps plus sensor supervision
+    /// (paper SS4.7.1).
+    InverseConst,
+}
+
+impl NativeLoss {
+    fn kind(&self) -> &'static str {
+        match self {
+            NativeLoss::Forward { bx, by, .. } => {
+                if *bx == 0.0 && *by == 0.0 {
+                    "poisson"
+                } else {
+                    "cd"
+                }
+            }
+            NativeLoss::InverseConst => "inverse_const",
+        }
+    }
+}
+
+/// Static configuration of a native training run.
+#[derive(Debug, Clone)]
+pub struct NativeConfig {
+    /// MLP widths, input to output (first must be 2, last 1). The
+    /// paper's standard network is `[2, 30, 30, 30, 1]`.
+    pub layers: Vec<usize>,
+    pub loss: NativeLoss,
+    /// Dirichlet boundary sample count.
+    pub nb: usize,
+    /// Sensor count (inverse losses only).
+    pub ns: usize,
+}
+
+impl NativeConfig {
+    /// The paper's standard 30x3 forward Poisson setup.
+    pub fn poisson_std() -> NativeConfig {
+        NativeConfig {
+            layers: vec![2, 30, 30, 30, 1],
+            loss: NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 },
+            nb: 400,
+            ns: 0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// MLP parameters
+// ---------------------------------------------------------------------
+
+/// A tanh MLP as a flat f64 parameter vector (per layer: row-major
+/// `W[n_in, n_out]` then `b[n_out]`), usable standalone for
+/// prediction-only workloads (e.g. the Table 1 timing run).
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub layers: Vec<usize>,
+    pub theta: Vec<f64>,
+    /// (w_offset, b_offset) per weight layer.
+    offsets: Vec<(usize, usize)>,
+}
+
+impl Mlp {
+    /// Glorot-uniform weights, zero biases (same distribution and RNG as
+    /// the XLA path's init).
+    pub fn glorot(layers: &[usize], seed: u64) -> Result<Mlp> {
+        ensure!(layers.len() >= 2, "need at least input+output layer");
+        ensure!(layers[0] == 2, "input width must be 2 (x, y)");
+        ensure!(*layers.last().unwrap() == 1, "output width must be 1");
+        let mut rng = Rng::new(seed);
+        let mut theta = Vec::new();
+        let mut offsets = Vec::new();
+        for w in layers.windows(2) {
+            let (nin, nout) = (w[0], w[1]);
+            let w_off = theta.len();
+            theta.extend(rng.glorot(nin, nout).iter().map(|&v| v as f64));
+            let b_off = theta.len();
+            theta.resize(b_off + nout, 0.0);
+            offsets.push((w_off, b_off));
+        }
+        Ok(Mlp { layers: layers.to_vec(), theta, offsets })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.theta.len()
+    }
+
+    /// Number of weight layers.
+    fn n_stages(&self) -> usize {
+        self.layers.len() - 1
+    }
+
+    fn max_width(&self) -> usize {
+        self.layers.iter().copied().max().unwrap_or(1)
+    }
+
+    /// Value-only forward at a batch of points (prediction path).
+    pub fn eval(&self, points: &[[f64; 2]]) -> Vec<f32> {
+        let wmax = self.max_width();
+        let mut cur = vec![0.0; wmax];
+        let mut nxt = vec![0.0; wmax];
+        let mut out = Vec::with_capacity(points.len());
+        for p in points {
+            cur[0] = p[0];
+            cur[1] = p[1];
+            let last = self.n_stages() - 1;
+            for (l, win) in self.layers.windows(2).enumerate() {
+                let (nin, nout) = (win[0], win[1]);
+                let (w_off, b_off) = self.offsets[l];
+                let w = &self.theta[w_off..w_off + nin * nout];
+                let b = &self.theta[b_off..b_off + nout];
+                for (j, nj) in nxt.iter_mut().enumerate().take(nout) {
+                    let mut z = b[j];
+                    for (i, &ci) in cur.iter().enumerate().take(nin) {
+                        z += ci * w[i * nout + j];
+                    }
+                    *nj = if l < last { z.tanh() } else { z };
+                }
+                std::mem::swap(&mut cur, &mut nxt);
+            }
+            out.push(cur[0] as f32);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-thread forward/backward workspace
+// ---------------------------------------------------------------------
+
+/// Stored forward state of one hidden layer over a batch of points,
+/// indexed `[q * width + j]`.
+struct LayerTape {
+    a: Vec<f64>,  // tanh activations
+    ax: Vec<f64>, // post-activation x tangents = s * zx
+    ay: Vec<f64>,
+    zx: Vec<f64>, // pre-activation x tangents
+    zy: Vec<f64>,
+}
+
+struct Workspace {
+    tapes: Vec<LayerTape>, // one per hidden layer
+    ux: Vec<f64>,          // per-point outputs
+    uy: Vec<f64>,
+    u: Vec<f64>,
+    // double buffers for one point's layer state
+    cur: [Vec<f64>; 3], // a, ax, ay
+    nxt: [Vec<f64>; 3],
+    gcur: [Vec<f64>; 3], // gz, gzx, gzy
+    gnxt: [Vec<f64>; 3],
+    resid: Vec<f64>, // r[j] of the current element
+}
+
+impl Workspace {
+    fn new(mlp: &Mlp, max_points: usize, nt: usize) -> Workspace {
+        let wmax = mlp.max_width();
+        let hidden_widths: Vec<usize> =
+            mlp.layers[1..mlp.layers.len() - 1].to_vec();
+        let tapes = hidden_widths
+            .iter()
+            .map(|&w| LayerTape {
+                a: vec![0.0; w * max_points],
+                ax: vec![0.0; w * max_points],
+                ay: vec![0.0; w * max_points],
+                zx: vec![0.0; w * max_points],
+                zy: vec![0.0; w * max_points],
+            })
+            .collect();
+        let buf = || [vec![0.0; wmax], vec![0.0; wmax], vec![0.0; wmax]];
+        Workspace {
+            tapes,
+            ux: vec![0.0; max_points],
+            uy: vec![0.0; max_points],
+            u: vec![0.0; max_points],
+            cur: buf(),
+            nxt: buf(),
+            gcur: buf(),
+            gnxt: buf(),
+            resid: vec![0.0; nt],
+        }
+    }
+}
+
+/// Per-thread gradient + loss accumulator.
+struct Partial {
+    grad: Vec<f64>,
+    var_sq: f64,
+    geps: f64,
+}
+
+// ---------------------------------------------------------------------
+// The backend
+// ---------------------------------------------------------------------
+
+pub struct NativeBackend {
+    cfg: NativeConfig,
+    net: Mlp,
+    /// Diffusion coefficient; trainable iff `loss == InverseConst`.
+    eps: f64,
+    bx: f64,
+    by: f64,
+    // Adam state over net params (+ eps slot when trainable)
+    m: Vec<f64>,
+    v: Vec<f64>,
+    // Step-invariant data, owned (f64 — no f32 runtime boundary here).
+    // Owning copies of gx/gy/v/quad_xy doubles peak memory during
+    // construction, but lets the caller drop the AssembledDomain
+    // afterwards — at paper scale keep only one of the two alive.
+    ne: usize,
+    nt: usize,
+    nq: usize,
+    gx: Vec<f64>,
+    gy: Vec<f64>,
+    vmat: Vec<f64>,
+    f_mat: Vec<f64>,
+    quad_xy: Vec<f64>,
+    bd_xy: Vec<[f64; 2]>,
+    bd_u: Vec<f64>,
+    sensor_xy: Vec<[f64; 2]>,
+    sensor_u: Vec<f64>,
+    tau: f64,
+    gamma: f64,
+    n_threads: usize,
+}
+
+impl NativeBackend {
+    pub fn new(
+        cfg: &NativeConfig,
+        src: &DataSource<'_>,
+        opts: &BackendOpts,
+    ) -> Result<NativeBackend> {
+        let dom = src.domain.ok_or_else(|| anyhow!(
+            "the native backend needs assembled premultiplier tensors \
+             (DataSource.domain is None)"
+        ))?;
+        ensure!(cfg.nb >= 4, "need at least 4 boundary samples");
+        let trainable_eps = cfg.loss == NativeLoss::InverseConst;
+        let (eps, bx, by) = match cfg.loss {
+            NativeLoss::Forward { eps, bx, by } => (eps, bx, by),
+            NativeLoss::InverseConst => (opts.eps_init, 0.0, 0.0),
+        };
+
+        let net = Mlp::glorot(&cfg.layers, opts.seed)?;
+        let n_opt = net.n_params() + usize::from(trainable_eps);
+
+        let f_mat = dom.force_matrix(|x, y| src.problem.forcing(x, y));
+        let bd_xy = src.mesh.sample_boundary(cfg.nb);
+        let bd_u: Vec<f64> = bd_xy
+            .iter()
+            .map(|p| src.problem.boundary(p[0], p[1]))
+            .collect();
+
+        let (sensor_xy, sensor_u) = if trainable_eps {
+            ensure!(cfg.ns > 0,
+                    "inverse_const needs ns > 0 sensor points");
+            let pts = src.mesh.sample_interior(cfg.ns, opts.seed + 1);
+            let vals: Vec<f64> = pts
+                .iter()
+                .map(|p| match src.sensor_values {
+                    Some(f) => Ok(f(p[0], p[1])),
+                    None => src.problem.exact(p[0], p[1]).ok_or_else(|| {
+                        anyhow!(
+                            "problem '{}' has no exact solution; provide \
+                             DataSource.sensor_values",
+                            src.problem.name()
+                        )
+                    }),
+                })
+                .collect::<Result<_>>()?;
+            (pts, vals)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+
+        let n_threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(dom.ne.max(1));
+
+        Ok(NativeBackend {
+            cfg: cfg.clone(),
+            net,
+            eps,
+            bx,
+            by,
+            m: vec![0.0; n_opt],
+            v: vec![0.0; n_opt],
+            ne: dom.ne,
+            nt: dom.nt,
+            nq: dom.nq,
+            gx: dom.gx.clone(),
+            gy: dom.gy.clone(),
+            vmat: dom.v.clone(),
+            f_mat,
+            quad_xy: dom.quad_xy.clone(),
+            bd_xy,
+            bd_u,
+            sensor_xy,
+            sensor_u,
+            tau: opts.tau,
+            gamma: opts.gamma,
+            n_threads,
+        })
+    }
+
+    /// Trainable parameter count (network + eps slot when present).
+    pub fn n_opt_params(&self) -> usize {
+        self.m.len()
+    }
+
+    pub fn network(&self) -> &Mlp {
+        &self.net
+    }
+
+    fn trainable_eps(&self) -> bool {
+        self.cfg.loss == NativeLoss::InverseConst
+    }
+
+    /// Flat view of the optimized parameters (tests / diagnostics).
+    pub fn params_flat(&self) -> Vec<f64> {
+        let mut out = self.net.theta.clone();
+        if self.trainable_eps() {
+            out.push(self.eps);
+        }
+        out
+    }
+
+    pub fn set_params_flat(&mut self, theta: &[f64]) -> Result<()> {
+        ensure!(theta.len() == self.n_opt_params(),
+                "expected {} params, got {}", self.n_opt_params(),
+                theta.len());
+        let n_net = self.net.n_params();
+        self.net.theta.copy_from_slice(&theta[..n_net]);
+        if self.trainable_eps() {
+            self.eps = theta[n_net];
+        }
+        Ok(())
+    }
+
+    /// Forward + tangents for one point, recording tapes at batch slot
+    /// `q`; writes (u, ux, uy) into the workspace output arrays.
+    fn forward_point(&self, ws: &mut Workspace, q: usize, x: f64, y: f64) {
+        let net = &self.net;
+        let Workspace { tapes, ux, uy, u, cur, nxt, .. } = ws;
+        cur[0][0] = x;
+        cur[0][1] = y;
+        cur[1][0] = 1.0;
+        cur[1][1] = 0.0;
+        cur[2][0] = 0.0;
+        cur[2][1] = 1.0;
+        let last = net.n_stages() - 1;
+        for (l, win) in net.layers.windows(2).enumerate() {
+            let (nin, nout) = (win[0], win[1]);
+            let (w_off, b_off) = net.offsets[l];
+            let w = &net.theta[w_off..w_off + nin * nout];
+            let b = &net.theta[b_off..b_off + nout];
+            for j in 0..nout {
+                let mut z = b[j];
+                let mut zx = 0.0;
+                let mut zy = 0.0;
+                for i in 0..nin {
+                    let wij = w[i * nout + j];
+                    z += cur[0][i] * wij;
+                    zx += cur[1][i] * wij;
+                    zy += cur[2][i] * wij;
+                }
+                if l < last {
+                    let a = z.tanh();
+                    let s = 1.0 - a * a;
+                    let t = &mut tapes[l];
+                    t.a[q * nout + j] = a;
+                    t.zx[q * nout + j] = zx;
+                    t.zy[q * nout + j] = zy;
+                    t.ax[q * nout + j] = s * zx;
+                    t.ay[q * nout + j] = s * zy;
+                    nxt[0][j] = a;
+                    nxt[1][j] = s * zx;
+                    nxt[2][j] = s * zy;
+                } else {
+                    u[q] = z;
+                    ux[q] = zx;
+                    uy[q] = zy;
+                }
+            }
+            if l < last {
+                std::mem::swap(cur, nxt);
+            }
+        }
+    }
+
+    /// Reverse pass for one point given output seeds, accumulating into
+    /// `grad` (flat layout of `Mlp::theta`). `(x, y)` is the input point
+    /// (needed for the first layer's weight gradients).
+    #[allow(clippy::too_many_arguments)]
+    fn backward_point(
+        &self,
+        ws: &mut Workspace,
+        grad: &mut [f64],
+        q: usize,
+        x: f64,
+        y: f64,
+        gu: f64,
+        gux: f64,
+        guy: f64,
+    ) {
+        let net = &self.net;
+        let Workspace { tapes, gcur, gnxt, .. } = ws;
+        gcur[0][0] = gu;
+        gcur[1][0] = gux;
+        gcur[2][0] = guy;
+        for l in (0..net.n_stages()).rev() {
+            let (nin, nout) = (net.layers[l], net.layers[l + 1]);
+            let (w_off, b_off) = net.offsets[l];
+            for j in 0..nout {
+                let (gz, gzx, gzy) = (gcur[0][j], gcur[1][j], gcur[2][j]);
+                grad[b_off + j] += gz;
+                for i in 0..nin {
+                    // input activations/tangents of this stage
+                    let (ai, axi, ayi) = if l == 0 {
+                        if i == 0 {
+                            (x, 1.0, 0.0)
+                        } else {
+                            (y, 0.0, 1.0)
+                        }
+                    } else {
+                        let t = &tapes[l - 1];
+                        (t.a[q * nin + i], t.ax[q * nin + i],
+                         t.ay[q * nin + i])
+                    };
+                    grad[w_off + i * nout + j] +=
+                        gz * ai + gzx * axi + gzy * ayi;
+                }
+            }
+            if l == 0 {
+                break;
+            }
+            // pull adjoints back through W then through the tanh of the
+            // previous hidden layer
+            let w = &net.theta[w_off..w_off + nin * nout];
+            let t = &tapes[l - 1];
+            for i in 0..nin {
+                let mut ga = 0.0;
+                let mut gax = 0.0;
+                let mut gay = 0.0;
+                for j in 0..nout {
+                    let wij = w[i * nout + j];
+                    ga += wij * gcur[0][j];
+                    gax += wij * gcur[1][j];
+                    gay += wij * gcur[2][j];
+                }
+                let a = t.a[q * nin + i];
+                let s = 1.0 - a * a;
+                let zx = t.zx[q * nin + i];
+                let zy = t.zy[q * nin + i];
+                let ds = -2.0 * a * s; // d s / d z
+                gnxt[0][i] = ga * s + gax * ds * zx + gay * ds * zy;
+                gnxt[1][i] = gax * s;
+                gnxt[2][i] = gay * s;
+            }
+            std::mem::swap(gcur, gnxt);
+        }
+    }
+
+    /// Full objective + flat gradient at the current parameters (public
+    /// for gradient-check tests; `step` wraps this with Adam).
+    pub fn loss_and_grad(&self) -> Result<(StepStats, Vec<f64>)> {
+        // ---- parallel variational part over contiguous element chunks
+        let per = self.ne.div_ceil(self.n_threads);
+        let this: &NativeBackend = self;
+        let partials: Vec<Partial> = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(self.n_threads);
+            for t in 0..self.n_threads {
+                let lo = t * per;
+                let hi = ((t + 1) * per).min(this.ne);
+                if lo >= hi {
+                    break;
+                }
+                handles.push(s.spawn(move || this.element_chunk(lo, hi)));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("native step worker panicked"))
+                .collect()
+        });
+
+        let mut grad = vec![0.0; self.n_opt_params()];
+        let mut var_sq = 0.0;
+        let mut geps = 0.0;
+        for p in &partials {
+            for (g, pg) in grad.iter_mut().zip(&p.grad) {
+                *g += pg;
+            }
+            var_sq += p.var_sq;
+            geps += p.geps;
+        }
+        let var_loss = var_sq / (self.ne * self.nt) as f64;
+
+        // ---- Dirichlet penalty (serial; nb is small)
+        let mut ws = Workspace::new(&self.net,
+                                    self.bd_xy.len().max(1), self.nt);
+        let mut bd_sq = 0.0;
+        let nb = self.bd_xy.len();
+        for (k, p) in self.bd_xy.iter().enumerate() {
+            self.forward_point(&mut ws, k, p[0], p[1]);
+        }
+        {
+            let net_grad = &mut grad[..self.net.n_params()];
+            for (k, p) in self.bd_xy.iter().enumerate() {
+                let d = ws.u[k] - self.bd_u[k];
+                bd_sq += d * d;
+                let gu = 2.0 * self.tau / nb as f64 * d;
+                self.backward_point(&mut ws, net_grad, k, p[0], p[1],
+                                    gu, 0.0, 0.0);
+            }
+        }
+        let bd_loss = bd_sq / nb as f64;
+
+        // ---- sensor penalty (inverse losses)
+        let mut sensor_loss = 0.0;
+        if !self.sensor_xy.is_empty() {
+            let ns = self.sensor_xy.len();
+            let mut wss = Workspace::new(&self.net, ns, self.nt);
+            for (k, p) in self.sensor_xy.iter().enumerate() {
+                self.forward_point(&mut wss, k, p[0], p[1]);
+            }
+            let net_grad = &mut grad[..self.net.n_params()];
+            let mut s_sq = 0.0;
+            for (k, p) in self.sensor_xy.iter().enumerate() {
+                let d = wss.u[k] - self.sensor_u[k];
+                s_sq += d * d;
+                let gu = 2.0 * self.gamma / ns as f64 * d;
+                self.backward_point(&mut wss, net_grad, k, p[0], p[1],
+                                    gu, 0.0, 0.0);
+            }
+            sensor_loss = s_sq / ns as f64;
+        }
+
+        if self.trainable_eps() {
+            let n_net = self.net.n_params();
+            grad[n_net] = geps;
+        }
+
+        let loss = var_loss + self.tau * bd_loss + self.gamma * sensor_loss;
+        let extra = if self.trainable_eps() {
+            self.eps
+        } else {
+            sensor_loss
+        };
+        Ok((StepStats { loss, var_loss, bd_loss, extra }, grad))
+    }
+
+    /// The per-chunk worker (runs on scoped threads).
+    fn element_chunk(&self, lo: usize, hi: usize) -> Partial {
+        let (nt, nq) = (self.nt, self.nq);
+        let cr = 2.0 / (self.ne * nt) as f64;
+        let mut ws = Workspace::new(&self.net, nq, nt);
+        let mut part = Partial {
+            grad: vec![0.0; self.net.n_params()],
+            var_sq: 0.0,
+            geps: 0.0,
+        };
+        for e in lo..hi {
+            let base_xy = 2 * e * nq;
+            for q in 0..nq {
+                let x = self.quad_xy[base_xy + 2 * q];
+                let y = self.quad_xy[base_xy + 2 * q + 1];
+                self.forward_point(&mut ws, q, x, y);
+            }
+            for j in 0..nt {
+                let base = (e * nt + j) * nq;
+                let gxr = &self.gx[base..base + nq];
+                let gyr = &self.gy[base..base + nq];
+                let mut c = 0.0;
+                for q in 0..nq {
+                    c += gxr[q] * ws.ux[q] + gyr[q] * ws.uy[q];
+                }
+                let mut conv = 0.0;
+                if self.bx != 0.0 || self.by != 0.0 {
+                    let vr = &self.vmat[base..base + nq];
+                    for q in 0..nq {
+                        conv += vr[q]
+                            * (self.bx * ws.ux[q] + self.by * ws.uy[q]);
+                    }
+                }
+                let r = self.eps * c + conv - self.f_mat[e * nt + j];
+                ws.resid[j] = r;
+                part.var_sq += r * r;
+                part.geps += cr * r * c;
+            }
+            for q in 0..nq {
+                let mut gux = 0.0;
+                let mut guy = 0.0;
+                for j in 0..nt {
+                    let base = (e * nt + j) * nq;
+                    let rj = cr * ws.resid[j];
+                    gux += rj * (self.eps * self.gx[base + q]
+                        + self.bx * self.vmat[base + q]);
+                    guy += rj * (self.eps * self.gy[base + q]
+                        + self.by * self.vmat[base + q]);
+                }
+                let x = self.quad_xy[base_xy + 2 * q];
+                let y = self.quad_xy[base_xy + 2 * q + 1];
+                self.backward_point(&mut ws, &mut part.grad, q, x, y,
+                                    0.0, gux, guy);
+            }
+        }
+        part
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn loss_kind(&self) -> &str {
+        self.cfg.loss.kind()
+    }
+
+    fn step(&mut self, step: usize, lr: f64) -> Result<StepStats> {
+        ensure!(step >= 1, "step is 1-based");
+        let (mut stats, grad) = self.loss_and_grad()?;
+        // Adam
+        const B1: f64 = 0.9;
+        const B2: f64 = 0.999;
+        const EPS: f64 = 1e-8;
+        let bc1 = 1.0 - B1.powi(step as i32);
+        let bc2 = 1.0 - B2.powi(step as i32);
+        let n_net = self.net.n_params();
+        for (i, &g) in grad.iter().enumerate() {
+            self.m[i] = B1 * self.m[i] + (1.0 - B1) * g;
+            self.v[i] = B2 * self.v[i] + (1.0 - B2) * g * g;
+            let update =
+                lr * (self.m[i] / bc1) / ((self.v[i] / bc2).sqrt() + EPS);
+            if i < n_net {
+                self.net.theta[i] -= update;
+            } else {
+                self.eps -= update;
+            }
+        }
+        // report the post-update eps, matching the XLA backend (which
+        // reads eps back from the updated device state)
+        if self.trainable_eps() {
+            stats.extra = self.eps;
+        }
+        Ok(stats)
+    }
+
+    fn predict(&self, points: &[[f64; 2]]) -> Result<Vec<Vec<f32>>> {
+        Ok(vec![self.net.eval(points)])
+    }
+
+    fn current_eps(&self) -> Option<f64> {
+        if self.trainable_eps() {
+            Some(self.eps)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::Dual2;
+    use crate::fem::assembly;
+    use crate::fem::quadrature::QuadKind;
+    use crate::mesh::generators;
+    use crate::problems::PoissonSin;
+
+    fn tiny_backend(loss: NativeLoss, ns: usize) -> NativeBackend {
+        let mesh = generators::unit_square(1);
+        let dom = assembly::assemble(&mesh, 2, 3, QuadKind::GaussLegendre);
+        let problem = PoissonSin::new(std::f64::consts::PI);
+        let src = DataSource {
+            mesh: &mesh,
+            domain: Some(&dom),
+            problem: &problem,
+            sensor_values: None,
+        };
+        let cfg = NativeConfig {
+            layers: vec![2, 4, 1],
+            loss,
+            nb: 8,
+            ns,
+        };
+        NativeBackend::new(&cfg, &src, &BackendOpts::default()).unwrap()
+    }
+
+    /// Reference loss with Dual2 parameters: recomputes the exact same
+    /// objective as `loss_and_grad`, but with parameter `k` as the
+    /// active Dual2 variable, so `.d1` is the exact dLoss/dtheta_k.
+    fn loss_dual(b: &NativeBackend, k: usize) -> Dual2 {
+        let theta = b.params_flat();
+        let p = |i: usize| -> Dual2 {
+            if i == k {
+                Dual2::var(theta[i])
+            } else {
+                Dual2::con(theta[i])
+            }
+        };
+        let n_net = b.net.n_params();
+        let eps_d = if b.trainable_eps() {
+            p(n_net)
+        } else {
+            Dual2::con(b.eps)
+        };
+        let wmax = b.net.max_width();
+        // forward with tangent-carrying Dual2 arithmetic
+        let fwd = |x: f64, y: f64| -> (Dual2, Dual2, Dual2) {
+            let zero = Dual2::con(0.0);
+            let mut a = vec![zero; wmax];
+            let mut ax = vec![zero; wmax];
+            let mut ay = vec![zero; wmax];
+            a[0] = Dual2::con(x);
+            a[1] = Dual2::con(y);
+            ax[0] = Dual2::con(1.0);
+            ay[1] = Dual2::con(1.0);
+            let last = b.net.n_stages() - 1;
+            for (l, win) in b.net.layers.windows(2).enumerate() {
+                let (nin, nout) = (win[0], win[1]);
+                let (w_off, b_off) = b.net.offsets[l];
+                let mut na = vec![zero; wmax];
+                let mut nax = vec![zero; wmax];
+                let mut nay = vec![zero; wmax];
+                for j in 0..nout {
+                    let mut z = p(b_off + j);
+                    let mut zx = zero;
+                    let mut zy = zero;
+                    for i in 0..nin {
+                        let w = p(w_off + i * nout + j);
+                        z = z + a[i] * w;
+                        zx = zx + ax[i] * w;
+                        zy = zy + ay[i] * w;
+                    }
+                    if l < last {
+                        let t = z.tanh();
+                        let s = Dual2::con(1.0) - t * t;
+                        na[j] = t;
+                        nax[j] = s * zx;
+                        nay[j] = s * zy;
+                    } else {
+                        na[j] = z;
+                        nax[j] = zx;
+                        nay[j] = zy;
+                    }
+                }
+                a = na;
+                ax = nax;
+                ay = nay;
+            }
+            (a[0], ax[0], ay[0])
+        };
+
+        let (ne, nt, nq) = (b.ne, b.nt, b.nq);
+        let mut var = Dual2::con(0.0);
+        for e in 0..ne {
+            let mut ux = Vec::with_capacity(nq);
+            let mut uy = Vec::with_capacity(nq);
+            for q in 0..nq {
+                let x = b.quad_xy[2 * (e * nq + q)];
+                let y = b.quad_xy[2 * (e * nq + q) + 1];
+                let (_, dx, dy) = fwd(x, y);
+                ux.push(dx);
+                uy.push(dy);
+            }
+            for j in 0..nt {
+                let base = (e * nt + j) * nq;
+                let mut c = Dual2::con(0.0);
+                let mut conv = Dual2::con(0.0);
+                for q in 0..nq {
+                    c = c + ux[q] * b.gx[base + q] + uy[q] * b.gy[base + q];
+                    conv = conv
+                        + (ux[q] * b.bx + uy[q] * b.by) * b.vmat[base + q];
+                }
+                let r = eps_d * c + conv - Dual2::con(b.f_mat[e * nt + j]);
+                var = var + r * r;
+            }
+        }
+        var = var * (1.0 / (ne * nt) as f64);
+
+        let mut bd = Dual2::con(0.0);
+        for (i, pt) in b.bd_xy.iter().enumerate() {
+            let (u, _, _) = fwd(pt[0], pt[1]);
+            let d = u - Dual2::con(b.bd_u[i]);
+            bd = bd + d * d;
+        }
+        bd = bd * (1.0 / b.bd_xy.len() as f64);
+
+        let mut sens = Dual2::con(0.0);
+        if !b.sensor_xy.is_empty() {
+            for (i, pt) in b.sensor_xy.iter().enumerate() {
+                let (u, _, _) = fwd(pt[0], pt[1]);
+                let d = u - Dual2::con(b.sensor_u[i]);
+                sens = sens + d * d;
+            }
+            sens = sens * (1.0 / b.sensor_xy.len() as f64);
+        }
+
+        var + bd * b.tau + sens * b.gamma
+    }
+
+    fn check_grad(b: &NativeBackend, tol: f64) {
+        let (stats, grad) = b.loss_and_grad().unwrap();
+        let l_ref = loss_dual(b, 0).v;
+        assert!(
+            (stats.loss - l_ref).abs() <= 1e-10 * (1.0 + l_ref.abs()),
+            "loss mismatch: {} vs Dual2 {}", stats.loss, l_ref
+        );
+        for k in 0..b.n_opt_params() {
+            let want = loss_dual(b, k).d1;
+            let got = grad[k];
+            let denom = 1.0 + want.abs().max(got.abs());
+            assert!(
+                ((got - want) / denom).abs() < tol,
+                "param {k}: backprop {got} vs Dual2 {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn backprop_matches_dual2_poisson() {
+        let b = tiny_backend(
+            NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 }, 0);
+        check_grad(&b, 1e-10);
+    }
+
+    #[test]
+    fn backprop_matches_dual2_convection() {
+        let b = tiny_backend(
+            NativeLoss::Forward { eps: 0.7, bx: 0.3, by: -0.2 }, 0);
+        check_grad(&b, 1e-10);
+    }
+
+    #[test]
+    fn backprop_matches_dual2_inverse_eps() {
+        let b = tiny_backend(NativeLoss::InverseConst, 4);
+        check_grad(&b, 1e-10);
+    }
+
+    #[test]
+    fn step_decreases_loss_on_tiny_problem() {
+        let mut b = tiny_backend(
+            NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 }, 0);
+        let first = b.step(1, 1e-2).unwrap();
+        let mut last = first;
+        for i in 2..=100 {
+            last = b.step(i, 1e-2).unwrap();
+        }
+        assert!(last.loss < first.loss,
+                "loss did not decrease: {} -> {}", first.loss, last.loss);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut b = tiny_backend(
+                NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 }, 0);
+            let mut out = 0.0;
+            for i in 1..=20 {
+                out = b.step(i, 1e-3).unwrap().loss;
+            }
+            out
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn predict_shape_and_determinism() {
+        let b = tiny_backend(
+            NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 }, 0);
+        let pts = [[0.2, 0.3], [0.8, 0.9]];
+        let h = b.predict(&pts).unwrap();
+        assert_eq!(h.len(), 1);
+        assert_eq!(h[0].len(), 2);
+        assert_eq!(b.predict(&pts).unwrap()[0], h[0]);
+    }
+
+    #[test]
+    fn mlp_eval_matches_forward_point() {
+        let b = tiny_backend(
+            NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 }, 0);
+        let mut ws = Workspace::new(&b.net, 1, b.nt);
+        b.forward_point(&mut ws, 0, 0.37, 0.61);
+        let v = b.net.eval(&[[0.37, 0.61]])[0];
+        assert!((v as f64 - ws.u[0]).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,275 @@
+//! The XLA/PJRT training backend (`--features xla`): executes
+//! AOT-compiled train-step artifacts produced by `python -m compile.aot`
+//! (`make artifacts`). This is the accelerated path of the paper
+//! reproduction; the logic here used to live inside `Trainer` before the
+//! backend abstraction.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::{Backend, BackendOpts, DataSource, StepStats};
+use crate::runtime::engine::{Artifact, Engine};
+use crate::runtime::tensor::TensorData;
+use crate::util::rng::Rng;
+
+pub struct XlaBackend<'a> {
+    engine: &'a Engine,
+    art: Rc<Artifact>,
+    /// Predict artifact driven by `Backend::predict` (optional: training
+    /// without evaluation needs none).
+    predict_name: Option<String>,
+    /// p/m/v literals in manifest order (3 * n_param_arrays).
+    state: Vec<xla::Literal>,
+    /// Data-segment inputs in manifest order (after step, lr),
+    /// uploaded to the device ONCE — they are step-invariant, and at
+    /// paper scale the premultiplier tensors are hundreds of MB.
+    data: Vec<xla::PjRtBuffer>,
+    /// Host sources of `data`. PJRT CPU uploads are asynchronous: the
+    /// source literal MUST outlive the buffer's first use, so we pin
+    /// them here (dropping them early is a use-after-free that
+    /// manifests as a `literal.size_bytes() == b->size()` CHECK crash).
+    _data_src: Vec<xla::Literal>,
+    n_params: usize,
+}
+
+impl<'a> XlaBackend<'a> {
+    pub fn new(
+        engine: &'a Engine,
+        artifact: &str,
+        predict_name: Option<&str>,
+        src: &DataSource<'_>,
+        opts: &BackendOpts,
+    ) -> Result<XlaBackend<'a>> {
+        let art = engine.load(artifact)?;
+        ensure!(art.manifest.kind == "train",
+                "{artifact} is not a train artifact");
+        let m = &art.manifest;
+        let n_params = m.n_param_arrays();
+
+        // ---- initial state: glorot weights, zero biases and moments
+        let mut rng = Rng::new(opts.seed);
+        let mut state: Vec<xla::Literal> = Vec::with_capacity(3 * n_params);
+        for i in 0..n_params {
+            let shape = &m.inputs[i].shape;
+            let t = match shape.len() {
+                2 => TensorData::new(shape.clone(),
+                                     rng.glorot(shape[0], shape[1]))?,
+                1 => TensorData::zeros(shape),
+                0 => TensorData::scalar(opts.eps_init as f32),
+                _ => bail!("unexpected param rank {shape:?}"),
+            };
+            state.push(t.to_literal()?);
+        }
+        // m and v moments: zeros of the same shapes
+        for i in 0..2 * n_params {
+            let shape = &m.inputs[n_params + i].shape;
+            state.push(TensorData::zeros(shape).to_literal()?);
+        }
+
+        // ---- sanity: step/lr slots where aot.signature puts them
+        ensure!(m.inputs[3 * n_params].name == "step"
+                    && m.inputs[3 * n_params + 1].name == "lr",
+                "manifest layout unexpected: {:?}",
+                &m.inputs[3 * n_params].name);
+
+        // ---- data segment in manifest order, resident on device
+        let mut data = Vec::new();
+        let mut data_src = Vec::new();
+        for spec in &m.inputs[3 * n_params + 2..] {
+            let lit = build_data_input(m, spec, src, opts)
+                .with_context(|| format!("building input '{}'",
+                                         spec.name))?;
+            data.push(engine.to_buffer(&lit)?);
+            data_src.push(lit);
+        }
+
+        Ok(XlaBackend {
+            engine,
+            art,
+            predict_name: predict_name.map(|s| s.to_string()),
+            state,
+            data,
+            _data_src: data_src,
+            n_params,
+        })
+    }
+
+    pub fn manifest(&self) -> &crate::runtime::manifest::Manifest {
+        &self.art.manifest
+    }
+
+    /// Network parameter literals (excludes the eps scalar), for predict.
+    pub fn network_params(&self) -> &[xla::Literal] {
+        &self.state[..self.art.manifest.n_network_arrays()]
+    }
+
+    fn eps_from_state(&self) -> Result<f64> {
+        ensure!(self.art.manifest.loss == "inverse_const",
+                "no trainable eps in {}", self.art.manifest.name);
+        let lit = &self.state[self.n_params - 1];
+        Ok(lit.to_vec::<f32>()?[0] as f64)
+    }
+}
+
+impl Backend for XlaBackend<'_> {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn loss_kind(&self) -> &str {
+        &self.art.manifest.loss
+    }
+
+    fn step(&mut self, step: usize, lr: f64) -> Result<StepStats> {
+        let step_lit = xla::Literal::scalar(step as f32);
+        let lr_lit = xla::Literal::scalar(lr as f32);
+
+        // upload the (small) mutable state; the big data segment is
+        // already device-resident
+        let state_bufs: Vec<xla::PjRtBuffer> = self
+            .state
+            .iter()
+            .map(|l| self.engine.to_buffer(l))
+            .collect::<Result<_>>()?;
+        let step_buf = self.engine.to_buffer(&step_lit)?;
+        let lr_buf = self.engine.to_buffer(&lr_lit)?;
+        let mut inputs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(self.art.manifest.inputs.len());
+        inputs.extend(state_bufs.iter());
+        inputs.push(&step_buf);
+        inputs.push(&lr_buf);
+        inputs.extend(self.data.iter());
+
+        let outputs = self.art.execute_buffers(&inputs)?;
+        let n_state = 3 * self.n_params;
+        let mut it = outputs.into_iter();
+        let mut new_state = Vec::with_capacity(n_state);
+        for _ in 0..n_state {
+            new_state.push(it.next().ok_or_else(|| anyhow!("short output"))?);
+        }
+        let rest: Vec<xla::Literal> = it.collect();
+        self.state = new_state;
+
+        let scalar = |l: &xla::Literal| -> Result<f64> {
+            Ok(l.to_vec::<f32>()?[0] as f64)
+        };
+        let loss = scalar(&rest[0])?;
+        let var_loss = if rest.len() > 1 { scalar(&rest[1])? } else { 0.0 };
+        let bd_loss = if rest.len() > 2 { scalar(&rest[2])? } else { 0.0 };
+        let extra = match self.art.manifest.loss.as_str() {
+            "inverse_const" => self.eps_from_state()?,
+            _ if rest.len() > 3 => scalar(&rest[3])?,
+            _ => 0.0,
+        };
+        Ok(StepStats { loss, var_loss, bd_loss, extra })
+    }
+
+    fn predict(&self, points: &[[f64; 2]]) -> Result<Vec<Vec<f32>>> {
+        let name = self.predict_name.as_deref().ok_or_else(|| anyhow!(
+            "XlaBackend for {} was built without a predict artifact",
+            self.art.manifest.name
+        ))?;
+        self.engine.predict(name, self.network_params(), points)
+    }
+
+    fn current_eps(&self) -> Option<f64> {
+        if self.art.manifest.loss == "inverse_const" {
+            self.eps_from_state().ok()
+        } else {
+            None
+        }
+    }
+}
+
+/// Build one data-segment literal according to its manifest name.
+fn build_data_input(
+    m: &crate::runtime::manifest::Manifest,
+    spec: &crate::runtime::manifest::IoSpec,
+    src: &DataSource<'_>,
+    opts: &BackendOpts,
+) -> Result<xla::Literal> {
+    let domain = || -> Result<&crate::fem::assembly::AssembledDomain> {
+        src.domain.ok_or_else(|| anyhow!(
+            "artifact {} needs assembled tensors but DataSource.domain \
+             is None", m.name))
+    };
+    let lit = match spec.name.as_str() {
+        "quad_xy" => {
+            let d = domain()?;
+            TensorData::new(spec.shape.clone(), d.quad_xy_f32())?
+        }
+        "gx" => TensorData::new(spec.shape.clone(), domain()?.gx_f32())?,
+        "gy" => TensorData::new(spec.shape.clone(), domain()?.gy_f32())?,
+        "v" => TensorData::new(spec.shape.clone(), domain()?.v_f32())?,
+        "f" => {
+            let d = domain()?;
+            let f = d.force_matrix(|x, y| src.problem.forcing(x, y));
+            TensorData::from_f64(spec.shape.clone(), &f)?
+        }
+        "bd_xy" => {
+            let pts = src.mesh.sample_boundary(m.config.nb);
+            let flat: Vec<f32> = pts
+                .iter()
+                .flat_map(|p| [p[0] as f32, p[1] as f32])
+                .collect();
+            TensorData::new(spec.shape.clone(), flat)?
+        }
+        "bd_u" => {
+            let pts = src.mesh.sample_boundary(m.config.nb);
+            let vals: Vec<f32> = pts
+                .iter()
+                .map(|p| src.problem.boundary(p[0], p[1]) as f32)
+                .collect();
+            TensorData::new(spec.shape.clone(), vals)?
+        }
+        "sensor_xy" => {
+            let pts = src.mesh.sample_interior(m.config.ns, opts.seed + 1);
+            let flat: Vec<f32> = pts
+                .iter()
+                .flat_map(|p| [p[0] as f32, p[1] as f32])
+                .collect();
+            TensorData::new(spec.shape.clone(), flat)?
+        }
+        "sensor_u" => {
+            let pts = src.mesh.sample_interior(m.config.ns, opts.seed + 1);
+            let vals: Vec<f32> = pts
+                .iter()
+                .map(|p| sensor_value(src, p[0], p[1]))
+                .collect::<Result<_>>()?;
+            TensorData::new(spec.shape.clone(), vals)?
+        }
+        "coll_xy" => {
+            let pts = src.mesh.sample_interior(m.config.n_coll, opts.seed);
+            let flat: Vec<f32> = pts
+                .iter()
+                .flat_map(|p| [p[0] as f32, p[1] as f32])
+                .collect();
+            TensorData::new(spec.shape.clone(), flat)?
+        }
+        "f_vals" => {
+            let pts = src.mesh.sample_interior(m.config.n_coll, opts.seed);
+            let vals: Vec<f32> = pts
+                .iter()
+                .map(|p| src.problem.forcing(p[0], p[1]) as f32)
+                .collect();
+            TensorData::new(spec.shape.clone(), vals)?
+        }
+        "tau" => TensorData::scalar(opts.tau as f32),
+        "gamma" => TensorData::scalar(opts.gamma as f32),
+        other => bail!("unknown manifest input '{other}'"),
+    };
+    lit.to_literal()
+}
+
+fn sensor_value(src: &DataSource<'_>, x: f64, y: f64) -> Result<f32> {
+    if let Some(f) = src.sensor_values {
+        return Ok(f(x, y) as f32);
+    }
+    src.problem
+        .exact(x, y)
+        .map(|v| v as f32)
+        .ok_or_else(|| anyhow!(
+            "problem '{}' has no exact solution; provide \
+             DataSource.sensor_values", src.problem.name()))
+}

@@ -1,8 +1,14 @@
-//! PJRT runtime: loads AOT artifacts (HLO text + JSON manifest) produced
-//! by `python -m compile.aot` and executes them on the CPU PJRT client.
+//! The runtime layer: training backends plus (behind `--features xla`)
+//! the PJRT engine that loads AOT artifacts (HLO text + JSON manifest)
+//! produced by `python -m compile.aot` and executes them on the CPU
+//! PJRT client.
 //!
 //! Python never runs here — this is the self-contained request path.
+//! With default features the layer is pure Rust: the native backend
+//! trains with no artifacts at all.
 
+pub mod backend;
+#[cfg(feature = "xla")]
 pub mod engine;
 pub mod manifest;
 pub mod tensor;

@@ -1,19 +1,25 @@
-//! Host-side tensor data and conversion to/from `xla::Literal`.
+//! Host-side tensor data; conversion to/from `xla::Literal` lives
+//! behind the `xla` feature so the native backend and host tensors
+//! compile without PJRT.
 
 use anyhow::{ensure, Result};
 
-/// A host f32 tensor (C order) with shape.
+/// A host f32 tensor (C order) with shape. The empty shape is a scalar
+/// (one element), matching XLA semantics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorData {
     pub shape: Vec<usize>,
     pub data: Vec<f32>,
 }
 
+/// Element count implied by a shape (empty product = 1 = scalar).
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
 impl TensorData {
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
-        let n: usize = shape.iter().product::<usize>().max(
-            if shape.is_empty() { 1 } else { 0 });
-        let expect = if shape.is_empty() { 1 } else { n };
+        let expect = numel(&shape);
         ensure!(data.len() == expect,
                 "shape {shape:?} wants {expect} elements, got {}",
                 data.len());
@@ -25,12 +31,7 @@ impl TensorData {
     }
 
     pub fn zeros(shape: &[usize]) -> Self {
-        let n: usize = if shape.is_empty() {
-            1
-        } else {
-            shape.iter().product()
-        };
-        TensorData { shape: shape.to_vec(), data: vec![0.0; n] }
+        TensorData { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
     }
 
     pub fn from_f64(shape: Vec<usize>, data: &[f64]) -> Result<Self> {
@@ -46,6 +47,7 @@ impl TensorData {
     }
 
     /// Convert to an XLA literal (f32).
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         if self.shape.is_empty() {
             return Ok(xla::Literal::scalar(self.data[0]));
@@ -55,6 +57,7 @@ impl TensorData {
     }
 
     /// Read back from an XLA literal.
+    #[cfg(feature = "xla")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> =
@@ -73,14 +76,24 @@ mod tests {
         assert!(TensorData::new(vec![2, 3], vec![0.0; 6]).is_ok());
         assert!(TensorData::new(vec![2, 3], vec![0.0; 5]).is_err());
         assert!(TensorData::new(vec![], vec![1.0]).is_ok());
+        assert!(TensorData::new(vec![], vec![]).is_err());
+        assert!(TensorData::new(vec![0, 3], vec![]).is_ok());
     }
 
     #[test]
     fn zeros_and_scalar() {
         assert_eq!(TensorData::zeros(&[2, 2]).len(), 4);
+        assert_eq!(TensorData::zeros(&[]).len(), 1);
         assert_eq!(TensorData::scalar(3.0).shape.len(), 0);
     }
 
+    #[test]
+    fn from_f64_casts() {
+        let t = TensorData::from_f64(vec![2], &[1.5, -2.5]).unwrap();
+        assert_eq!(t.data, vec![1.5f32, -2.5f32]);
+    }
+
+    #[cfg(feature = "xla")]
     #[test]
     fn literal_roundtrip() {
         let t = TensorData::new(vec![2, 3],
@@ -91,6 +104,7 @@ mod tests {
         assert_eq!(back, t);
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn scalar_literal_roundtrip() {
         let t = TensorData::scalar(2.5);
@@ -98,11 +112,5 @@ mod tests {
         let back = TensorData::from_literal(&lit).unwrap();
         assert_eq!(back.data, vec![2.5]);
         assert!(back.shape.is_empty());
-    }
-
-    #[test]
-    fn from_f64_casts() {
-        let t = TensorData::from_f64(vec![2], &[1.5, -2.5]).unwrap();
-        assert_eq!(t.data, vec![1.5f32, -2.5f32]);
     }
 }

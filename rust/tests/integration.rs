@@ -1,9 +1,12 @@
 //! Integration tests across runtime + coordinator + assembly, executing
-//! real AOT artifacts on the PJRT CPU client.
+//! real AOT artifacts on the PJRT client via the `XlaBackend`.
 //!
-//! These tests need `make artifacts` to have run; they SKIP (pass
-//! trivially with a notice) when the artifacts directory is missing so
-//! that plain `cargo test` works on a fresh clone.
+//! These tests need `--features xla` plus `make artifacts`; they SKIP
+//! (pass trivially with a notice) when the artifacts directory is
+//! missing so that plain `cargo test --features xla` works on a fresh
+//! clone. Without the xla feature the whole file compiles away — the
+//! native-backend end-to-end tests live in `native_e2e.rs`.
+#![cfg(feature = "xla")]
 
 use fastvpinns::coordinator::metrics::{eval_grid, ErrorNorms};
 use fastvpinns::coordinator::schedule::LrSchedule;
@@ -12,6 +15,8 @@ use fastvpinns::fem::assembly;
 use fastvpinns::fem::quadrature::QuadKind;
 use fastvpinns::mesh::generators;
 use fastvpinns::problems::{InverseConstPoisson, PoissonSin, Problem};
+use fastvpinns::runtime::backend::xla::XlaBackend;
+use fastvpinns::runtime::backend::BackendOpts;
 use fastvpinns::runtime::engine::Engine;
 
 fn engine() -> Option<Engine> {
@@ -21,6 +26,19 @@ fn engine() -> Option<Engine> {
         return None;
     }
     Some(Engine::new(dir).expect("PJRT CPU client"))
+}
+
+fn trainer<'a>(
+    engine: &'a Engine,
+    artifact: &str,
+    predict: Option<&str>,
+    src: &DataSource<'_>,
+    cfg: &TrainConfig,
+) -> Trainer<'a> {
+    let backend = XlaBackend::new(engine, artifact, predict, src,
+                                  &BackendOpts::from(cfg))
+        .expect("XlaBackend");
+    Trainer::new(Box::new(backend), cfg)
 }
 
 #[test]
@@ -44,8 +62,8 @@ fn poisson_training_loss_decreases() {
     let src = DataSource { mesh: &mesh, domain: Some(&dom),
                            problem: &problem, sensor_values: None };
     let cfg = TrainConfig { iters: 500, ..TrainConfig::default() };
-    let mut t = Trainer::new(&engine, "fv_poisson_ne4_nt5_nq20", &src,
-                             &cfg).unwrap();
+    let mut t = trainer(&engine, "fv_poisson_ne4_nt5_nq20", None, &src,
+                        &cfg);
     let (l0, ..) = t.step_once().unwrap();
     let report = t.run().unwrap();
     assert!(report.final_loss < 0.5 * l0,
@@ -62,8 +80,8 @@ fn training_is_deterministic_given_seed() {
                            problem: &problem, sensor_values: None };
     let cfg = TrainConfig { iters: 30, seed: 7, ..TrainConfig::default() };
     let run = || {
-        let mut t = Trainer::new(&engine, "fv_poisson_ne4_nt5_nq20",
-                                 &src, &cfg).unwrap();
+        let mut t = trainer(&engine, "fv_poisson_ne4_nt5_nq20", None,
+                            &src, &cfg);
         t.run().unwrap().final_loss
     };
     let a = run();
@@ -83,8 +101,8 @@ fn different_seeds_differ() {
     for seed in [1u64, 2] {
         let cfg = TrainConfig { iters: 20, seed,
                                 ..TrainConfig::default() };
-        let mut t = Trainer::new(&engine, "fv_poisson_ne4_nt5_nq20",
-                                 &src, &cfg).unwrap();
+        let mut t = trainer(&engine, "fv_poisson_ne4_nt5_nq20", None,
+                            &src, &cfg);
         losses.push(t.run().unwrap().final_loss);
     }
     assert_ne!(losses[0], losses[1]);
@@ -98,8 +116,7 @@ fn pinn_baseline_trains() {
     let src = DataSource { mesh: &mesh, domain: None, problem: &problem,
                            sensor_values: None };
     let cfg = TrainConfig { iters: 100, ..TrainConfig::default() };
-    let mut t = Trainer::new(&engine, "pinn_poisson_nc400", &src, &cfg)
-        .unwrap();
+    let mut t = trainer(&engine, "pinn_poisson_nc400", None, &src, &cfg);
     let (l0, ..) = t.step_once().unwrap();
     let report = t.run().unwrap();
     assert!(report.final_loss < l0);
@@ -116,10 +133,10 @@ fn hp_loop_baseline_matches_fastvpinn_loss_at_same_params() {
     let src = DataSource { mesh: &mesh, domain: Some(&dom),
                            problem: &problem, sensor_values: None };
     let cfg = TrainConfig { iters: 1, seed: 11, ..TrainConfig::default() };
-    let mut fv = Trainer::new(&engine, "fv_poisson_ne16_nt5_nq5", &src,
-                              &cfg).unwrap();
-    let mut hp = Trainer::new(&engine, "hp_poisson_ne16_nt5_nq5", &src,
-                              &cfg).unwrap();
+    let mut fv = trainer(&engine, "fv_poisson_ne16_nt5_nq5", None, &src,
+                         &cfg);
+    let mut hp = trainer(&engine, "hp_poisson_ne16_nt5_nq5", None, &src,
+                         &cfg);
     let (lf, ..) = fv.step_once().unwrap();
     let (lh, ..) = hp.step_once().unwrap();
     let rel = (lf - lh).abs() / lf.abs().max(1e-12);
@@ -135,22 +152,19 @@ fn predict_pads_and_chunks() {
     let src = DataSource { mesh: &mesh, domain: Some(&dom),
                            problem: &problem, sensor_values: None };
     let cfg = TrainConfig { iters: 1, ..TrainConfig::default() };
-    let t = Trainer::new(&engine, "fv_poisson_ne4_nt5_nq20", &src, &cfg)
-        .unwrap();
+    let t = trainer(&engine, "fv_poisson_ne4_nt5_nq20",
+                    Some("predict_std_16k"), &src, &cfg);
     // 3 points (heavy padding) and 20,000 points (chunking)
-    let small = t.predict("predict_std_16k",
-                          &[[0.1, 0.1], [0.5, 0.5], [0.9, 0.9]]).unwrap();
+    let small = t.predict(&[[0.1, 0.1], [0.5, 0.5], [0.9, 0.9]]).unwrap();
     assert_eq!(small.len(), 3);
     let many: Vec<[f64; 2]> = (0..20_000)
         .map(|i| [(i % 141) as f64 / 141.0, (i % 89) as f64 / 89.0])
         .collect();
-    let big = t.predict("predict_std_16k", &many).unwrap();
+    let big = t.predict(&many).unwrap();
     assert_eq!(big.len(), 20_000);
     // consistency: same point -> same value in both calls
-    let p0 = t.predict("predict_std_16k", &[[0.5, 0.5]]).unwrap()[0];
-    let i = many.iter().position(|p| *p == [0.0, 0.0]).unwrap();
-    let _ = i;
-    let again = t.predict("predict_std_16k", &[[0.5, 0.5]]).unwrap()[0];
+    let p0 = t.predict(&[[0.5, 0.5]]).unwrap()[0];
+    let again = t.predict(&[[0.5, 0.5]]).unwrap()[0];
     assert_eq!(p0, again);
 }
 
@@ -168,8 +182,8 @@ fn inverse_const_eps_moves_toward_target() {
         eps_init: 2.0,
         ..TrainConfig::default()
     };
-    let mut t = Trainer::new(&engine, "fv_inverse_const_ne4_nt5_nq40",
-                             &src, &cfg).unwrap();
+    let mut t = trainer(&engine, "fv_inverse_const_ne4_nt5_nq40", None,
+                        &src, &cfg);
     let eps0 = t.current_eps().unwrap();
     assert!((eps0 - 2.0).abs() < 1e-6);
     let report = t.run().unwrap();
@@ -194,10 +208,10 @@ fn trained_model_beats_untrained_on_error_norms() {
         .collect();
     let err_at = |iters: usize| -> ErrorNorms {
         let cfg = TrainConfig { iters, ..TrainConfig::default() };
-        let mut t = Trainer::new(&engine, "fv_poisson_ne4_nt5_nq20",
-                                 &src, &cfg).unwrap();
+        let mut t = trainer(&engine, "fv_poisson_ne4_nt5_nq20",
+                            Some("predict_std_16k"), &src, &cfg);
         t.run().unwrap();
-        t.evaluate("predict_std_16k", &grid, &exact).unwrap()
+        t.evaluate(&grid, &exact).unwrap()
     };
     let early = err_at(5);
     let late = err_at(800);
@@ -219,7 +233,7 @@ fn gear_artifact_loads_and_steps() {
     let src = DataSource { mesh: &mesh, domain: Some(&dom),
                            problem: &problem, sensor_values: None };
     let cfg = TrainConfig { iters: 3, ..TrainConfig::default() };
-    let mut t = Trainer::new(&engine, "fv_cd_gear", &src, &cfg).unwrap();
+    let mut t = trainer(&engine, "fv_cd_gear", None, &src, &cfg);
     let report = t.run().unwrap();
     assert!(report.final_loss.is_finite());
 }

@@ -1,0 +1,200 @@
+//! End-to-end tests of the native pure-Rust backend: training smoke
+//! (loss must drop >= 10x in 500 iters), FEM cross-validation of the
+//! trained network, inverse-eps recovery, and backend/coordinator
+//! integration. No artifacts, no XLA — these run on every `cargo test`.
+
+use fastvpinns::coordinator::metrics::{eval_grid, ErrorNorms};
+use fastvpinns::coordinator::schedule::LrSchedule;
+use fastvpinns::coordinator::trainer::{DataSource, TrainConfig, Trainer};
+use fastvpinns::fem::assembly;
+use fastvpinns::fem::quadrature::QuadKind;
+use fastvpinns::fem_solver::{self, FemProblem};
+use fastvpinns::mesh::generators;
+use fastvpinns::problems::{InverseConstPoisson, PoissonSin, Problem};
+use fastvpinns::runtime::backend::native::{
+    NativeBackend, NativeConfig, NativeLoss,
+};
+use fastvpinns::runtime::backend::BackendOpts;
+
+/// Standard small poisson_sin(pi) setup: 2x2 elements, 3^2 tests, 8^2
+/// quad, 16x2 net — converges fast enough for debug-mode CI.
+fn poisson_trainer<'a>(
+    mesh: &'a fastvpinns::mesh::QuadMesh,
+    dom: &'a fastvpinns::fem::assembly::AssembledDomain,
+    problem: &'a PoissonSin,
+    cfg: &TrainConfig,
+) -> Trainer<'a> {
+    let src = DataSource {
+        mesh,
+        domain: Some(dom),
+        problem,
+        sensor_values: None,
+    };
+    let ncfg = NativeConfig {
+        layers: vec![2, 16, 16, 1],
+        loss: NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 },
+        nb: 80,
+        ns: 0,
+    };
+    let backend =
+        NativeBackend::new(&ncfg, &src, &BackendOpts::from(cfg)).unwrap();
+    Trainer::new(Box::new(backend), cfg)
+}
+
+#[test]
+fn poisson_sin_smoke_loss_drops_10x_in_500_iters() {
+    let problem = PoissonSin::new(std::f64::consts::PI);
+    let mesh = generators::unit_square(2);
+    let dom = assembly::assemble(&mesh, 3, 8, QuadKind::GaussLegendre);
+    let cfg = TrainConfig {
+        iters: 500,
+        lr: LrSchedule::Constant(1e-2),
+        ..TrainConfig::default()
+    };
+    let mut t = poisson_trainer(&mesh, &dom, &problem, &cfg);
+    let (l0, ..) = t.step_once().unwrap();
+    let report = t.run().unwrap();
+    assert!(
+        report.final_loss < 0.1 * l0,
+        "loss {l0:.3e} -> {:.3e}: less than 10x decrease in 500 iters",
+        report.final_loss
+    );
+}
+
+#[test]
+fn trained_network_cross_validates_against_fem() {
+    // Train the native backend, then compare its field against the
+    // classical FEM solver — two completely independent discretizations
+    // of the same PDE must agree.
+    let problem = PoissonSin::new(std::f64::consts::PI);
+    let mesh = generators::unit_square(2);
+    let dom = assembly::assemble(&mesh, 3, 6, QuadKind::GaussLegendre);
+    let cfg = TrainConfig {
+        iters: 1500,
+        lr: LrSchedule::Constant(1e-2),
+        log_every: 100,
+        ..TrainConfig::default()
+    };
+    let mut t = poisson_trainer(&mesh, &dom, &problem, &cfg);
+    t.run().unwrap();
+
+    // FEM reference on a finer grid of the same domain
+    let fem_mesh = generators::unit_square(16);
+    let om = problem.omega;
+    let fem = fem_solver::solve(
+        &fem_mesh,
+        &FemProblem {
+            eps: &|_, _| 1.0,
+            b: (0.0, 0.0),
+            // forcing matches problems::PoissonSin (exact u = -sin sin)
+            f: &|x, y| -2.0 * om * om * (om * x).sin() * (om * y).sin(),
+            g: &|_, _| 0.0,
+        },
+        3,
+    )
+    .unwrap();
+
+    let pred = t.predict(&fem_mesh.points).unwrap();
+    let nn_vs_fem = ErrorNorms::compute_f32(&pred, fem.nodal());
+    assert!(
+        nn_vs_fem.rel_l2 < 0.08,
+        "NN vs FEM rel-L2 {} (MAE {})", nn_vs_fem.rel_l2, nn_vs_fem.mae
+    );
+
+    // and both must be close to the analytic solution
+    let exact: Vec<f64> = fem_mesh
+        .points
+        .iter()
+        .map(|p| problem.exact(p[0], p[1]).unwrap())
+        .collect();
+    let nn_err = ErrorNorms::compute_f32(&pred, &exact);
+    let fem_err = ErrorNorms::compute(fem.nodal(), &exact);
+    assert!(nn_err.rel_l2 < 0.05, "NN rel-L2 vs exact {}", nn_err.rel_l2);
+    assert!(fem_err.rel_l2 < 0.05, "FEM rel-L2 vs exact {}",
+            fem_err.rel_l2);
+}
+
+#[test]
+fn native_training_is_deterministic_given_seed() {
+    let problem = PoissonSin::new(std::f64::consts::PI);
+    let mesh = generators::unit_square(2);
+    let dom = assembly::assemble(&mesh, 3, 6, QuadKind::GaussLegendre);
+    let cfg = TrainConfig { iters: 40, seed: 9, ..TrainConfig::default() };
+    let run = || {
+        let mut t = poisson_trainer(&mesh, &dom, &problem, &cfg);
+        t.run().unwrap().final_loss
+    };
+    assert_eq!(run(), run(), "same seed must give identical trajectories");
+}
+
+#[test]
+fn native_seeds_differ() {
+    let problem = PoissonSin::new(std::f64::consts::PI);
+    let mesh = generators::unit_square(2);
+    let dom = assembly::assemble(&mesh, 3, 6, QuadKind::GaussLegendre);
+    let loss_for = |seed: u64| {
+        let cfg = TrainConfig { iters: 20, seed,
+                                ..TrainConfig::default() };
+        let mut t = poisson_trainer(&mesh, &dom, &problem, &cfg);
+        t.run().unwrap().final_loss
+    };
+    assert_ne!(loss_for(1), loss_for(2));
+}
+
+#[test]
+fn native_inverse_eps_moves_toward_target() {
+    // CI-scale fig14: eps starts at 2.0 and must move toward 0.3.
+    let problem = InverseConstPoisson::new();
+    let mesh = generators::rect_grid(2, 2, -1.0, -1.0, 1.0, 1.0);
+    let dom = assembly::assemble(&mesh, 3, 10, QuadKind::GaussLegendre);
+    let src = DataSource { mesh: &mesh, domain: Some(&dom),
+                           problem: &problem, sensor_values: None };
+    let cfg = TrainConfig {
+        iters: 300,
+        lr: LrSchedule::Constant(5e-3),
+        eps_init: 2.0,
+        ..TrainConfig::default()
+    };
+    let ncfg = NativeConfig {
+        layers: vec![2, 16, 16, 1],
+        loss: NativeLoss::InverseConst,
+        nb: 80,
+        ns: 20,
+    };
+    let backend =
+        NativeBackend::new(&ncfg, &src, &BackendOpts::from(&cfg)).unwrap();
+    let mut t = Trainer::new(Box::new(backend), &cfg);
+    let eps0 = t.current_eps().unwrap();
+    assert!((eps0 - 2.0).abs() < 1e-12);
+    let report = t.run().unwrap();
+    let eps = report.eps_final.unwrap();
+    assert!(report.final_loss.is_finite());
+    assert!((eps - 2.0).abs() > 0.05, "eps stuck at {eps}");
+    assert!(eps < 2.0, "eps should decrease toward 0.3, got {eps}");
+}
+
+#[test]
+fn trained_model_beats_untrained_on_error_norms() {
+    let problem = PoissonSin::new(std::f64::consts::PI);
+    let mesh = generators::unit_square(2);
+    let dom = assembly::assemble(&mesh, 3, 8, QuadKind::GaussLegendre);
+    let grid = eval_grid(40, 40, 0.0, 0.0, 1.0, 1.0);
+    let exact: Vec<f64> = grid
+        .iter()
+        .map(|p| problem.exact(p[0], p[1]).unwrap())
+        .collect();
+    let err_at = |iters: usize| {
+        let cfg = TrainConfig {
+            iters,
+            lr: LrSchedule::Constant(1e-2),
+            ..TrainConfig::default()
+        };
+        let mut t = poisson_trainer(&mesh, &dom, &problem, &cfg);
+        t.run().unwrap();
+        t.evaluate(&grid, &exact).unwrap()
+    };
+    let early = err_at(5);
+    let late = err_at(600);
+    assert!(late.mae < early.mae,
+            "training made things worse: {} -> {}", early.mae, late.mae);
+}

@@ -1,0 +1,221 @@
+//! Offline stub of the `xla` (xla-rs) API surface used by fastvpinns.
+//!
+//! The host-side pieces (`Literal`, shape handling) are real
+//! implementations so `TensorData` round-trips and unit tests work
+//! without PJRT. The device-side pieces (`PjRtClient::compile`,
+//! executable execution) return an explanatory `Error`: actually running
+//! AOT artifacts requires replacing this path dependency with the real
+//! `xla` crate in an environment that has the PJRT CPU plugin.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type mirroring xla-rs's error enum surface.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} is unavailable in the offline stub — build against the \
+         real `xla` crate (see rust/Cargo.toml) to execute AOT artifacts"
+    )))
+}
+
+/// Array shape (dims in elements, f32 only in this stub).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host-resident tensor literal (f32, C order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Vec<f32>,
+}
+
+impl Literal {
+    pub fn scalar(v: f32) -> Literal {
+        Literal { dims: vec![], data: vec![v] }
+    }
+
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: data.to_vec() }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape to {dims:?} wants {n} elements, literal has {}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: FromF32>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// The stub never materialises tuple literals (they only come out of
+    /// executable runs, which the stub cannot perform).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("tuple literal decomposition")
+    }
+}
+
+/// Element conversion helper for `Literal::to_vec` (f32-only stub).
+pub trait FromF32 {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl FromF32 for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+/// A device buffer. In the stub it simply pins the source literal.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// Parsed HLO module. The stub only checks the file exists and keeps the
+/// text so `compile` can report a useful message.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error(format!("read {}: {e}",
+                                       path.as_ref().display())))?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _proto: proto.clone() }
+    }
+}
+
+/// A compiled executable. Unconstructible in the stub.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executable execution")
+    }
+
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executable execution")
+    }
+}
+
+/// The PJRT client. Host-side operations work; `compile` errors.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { literal: literal.clone() })
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+        -> Result<PjRtLoadedExecutable> {
+        unavailable("HLO compilation")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0])
+            .reshape(&[2, 2])
+            .unwrap();
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.size_bytes(), 16);
+    }
+
+    #[test]
+    fn reshape_rejects_bad_count() {
+        assert!(Literal::vec1(&[1.0; 5]).reshape(&[2, 3]).is_err());
+    }
+
+    #[test]
+    fn client_boots_but_compile_errors() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu-stub");
+        let proto = HloModuleProto { _text: String::new() };
+        let comp = XlaComputation::from_proto(&proto);
+        assert!(c.compile(&comp).is_err());
+    }
+}
