@@ -1,38 +1,28 @@
-//! Bench: the native backend's train step (forward + contraction +
-//! backprop + Adam) across element counts — the pure-Rust analogue of
-//! the paper's median-time-per-epoch protocol, with no artifacts.
+//! Bench: the native backend's train step (batched GEMM forward +
+//! blocked residual contraction + batched backprop + Adam) across
+//! element counts — the pure-Rust analogue of the paper's
+//! median-time-per-epoch protocol, with no artifacts. The ne=4096 case
+//! is the tracked acceptance point for the tensorized hot path.
 //! Run: cargo bench --bench native_step_hotpath
+//! (`repro bench` shares the per-case protocol via
+//! `experiments::common::native_step_case` and writes the JSON record;
+//! grid lists and iteration counts differ by harness.)
 
-use fastvpinns::coordinator::trainer::DataSource;
-use fastvpinns::experiments::common::median_backend_step_ms;
-use fastvpinns::fem::assembly;
-use fastvpinns::fem::quadrature::QuadKind;
-use fastvpinns::mesh::generators;
-use fastvpinns::problems::PoissonSin;
-use fastvpinns::runtime::backend::native::{NativeBackend, NativeConfig};
-use fastvpinns::runtime::backend::BackendOpts;
+use fastvpinns::experiments::common::native_step_case;
 
 fn main() {
-    let problem = PoissonSin::new(2.0 * std::f64::consts::PI);
     println!("== native train step, 30x3 net, nt=5x5, nq=5x5/elem ==");
-    for k in [2usize, 4, 8, 16, 20, 32] {
+    for k in [2usize, 4, 8, 16, 32, 64] {
         let ne = k * k;
-        let mesh = generators::unit_square(k);
-        let dom = assembly::assemble(&mesh, 5, 5, QuadKind::GaussLegendre);
-        let src = DataSource {
-            mesh: &mesh,
-            domain: Some(&dom),
-            problem: &problem,
-            sensor_values: None,
-        };
-        let cfg = NativeConfig::poisson_std();
-        let mut b = NativeBackend::new(&cfg, &src, &BackendOpts::default())
-            .expect("native backend");
-        let ms = median_backend_step_ms(&mut b, 20, 3)
+        // fewer timed iters on the big grids keeps the sweep short
+        let iters = if ne >= 1024 { 10 } else { 20 };
+        let case = native_step_case(k, 5, 5, iters, 3)
             .expect("timed steps");
+        let s = &case.summary;
         println!(
-            "  ne={ne:<5} ({:>6} quad pts)  median {ms:>8.3} ms/step",
-            ne * dom.nq
+            "  ne={:<5} ({:>6} quad pts)  median {:>8.3} ms/step  \
+             p90 {:>8.3} ms",
+            case.ne, case.n_quad, s.median, s.p90
         );
     }
 }

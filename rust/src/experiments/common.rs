@@ -184,13 +184,15 @@ pub fn run_square(
     Ok(SquareRun { report, errors, history: trainer.history.clone() })
 }
 
-/// Median time per training step over `iters` steps after `warmup`
-/// steps — the paper's Fig. 2/10/16 protocol — for any backend.
-pub fn median_backend_step_ms(
+/// Per-step wall-clock samples (ms) over `iters` steps after `warmup`
+/// steps — the paper's median-time-per-epoch protocol — for any
+/// backend. Feed the result to [`crate::util::stats::Summary`] for
+/// median/p90 (the bench harness and `repro bench` do).
+pub fn backend_step_samples_ms(
     backend: &mut dyn Backend,
     iters: usize,
     warmup: usize,
-) -> Result<f64> {
+) -> Result<Vec<f64>> {
     for i in 0..warmup {
         backend.step(i + 1, 1e-3)?;
     }
@@ -200,7 +202,68 @@ pub fn median_backend_step_ms(
         backend.step(warmup + i + 1, 1e-3)?;
         samples.push(t0.elapsed().as_secs_f64() * 1e3);
     }
+    Ok(samples)
+}
+
+/// Median time per training step — the paper's Fig. 2/10/16 protocol.
+pub fn median_backend_step_ms(
+    backend: &mut dyn Backend,
+    iters: usize,
+    warmup: usize,
+) -> Result<f64> {
+    let samples = backend_step_samples_ms(backend, iters, warmup)?;
     Ok(crate::util::stats::median(&samples))
+}
+
+/// One measured case of the native step-time sweep. Shared by
+/// `repro bench` (JSON record) and `benches/native_step_hotpath`
+/// (console sweep) so the two harnesses cannot drift apart on the
+/// per-case protocol; grid lists and iteration counts stay per-caller.
+pub struct StepBenchCase {
+    pub ne: usize,
+    /// Total quadrature points per step (`ne * nq`).
+    pub n_quad: usize,
+    /// Trainable parameter count.
+    pub dof: usize,
+    /// Effective worker threads (parallelism clamped to `ne`).
+    pub threads: usize,
+    pub summary: crate::util::stats::Summary,
+}
+
+/// Time the native train step on a `k x k` unit-square Poisson grid
+/// with the paper's standard 30x3 net: `iters` timed steps after
+/// `warmup` discarded ones.
+pub fn native_step_case(
+    k: usize,
+    nt1d: usize,
+    nq1d: usize,
+    iters: usize,
+    warmup: usize,
+) -> Result<StepBenchCase> {
+    let ne = k * k;
+    let mesh = generators::unit_square(k.max(1));
+    let dom = assembly::assemble(&mesh, nt1d, nq1d,
+                                 QuadKind::GaussLegendre);
+    let problem =
+        crate::problems::PoissonSin::new(2.0 * std::f64::consts::PI);
+    let src = DataSource {
+        mesh: &mesh,
+        domain: Some(&dom),
+        problem: &problem,
+        sensor_values: None,
+    };
+    let cfg = NativeConfig::poisson_std();
+    let mut b = NativeBackend::new(&cfg, &src, &BackendOpts::default())?;
+    let dof = b.n_opt_params();
+    let threads = b.n_threads();
+    let samples = backend_step_samples_ms(&mut b, iters, warmup)?;
+    Ok(StepBenchCase {
+        ne,
+        n_quad: ne * dom.nq,
+        dof,
+        threads,
+        summary: crate::util::stats::Summary::from(&samples),
+    })
 }
 
 /// FastVPINN step timing for a unit-square config on either backend.

@@ -8,7 +8,7 @@ use anyhow::Result;
 use super::common::{self, ExpCtx};
 use crate::fem_solver::{self, FemProblem};
 use crate::mesh::generators;
-use crate::runtime::backend::native::Mlp;
+use crate::runtime::backend::native::{EvalScratch, Mlp};
 use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
 
@@ -25,7 +25,9 @@ fn choose_predict(n: usize) -> &'static str {
 
 /// One timed prediction pass over all mesh points, per backend.
 enum Predictor<'a> {
-    Native(Mlp),
+    /// Network + reused eval scratch, so the timed pass pays no
+    /// per-call allocation (mirrors the training hot path).
+    Native(Mlp, EvalScratch),
     #[cfg(feature = "xla")]
     Xla {
         engine: &'a crate::runtime::engine::Engine,
@@ -38,9 +40,11 @@ enum Predictor<'a> {
 }
 
 impl Predictor<'_> {
-    fn predict(&self, points: &[[f64; 2]]) -> Result<usize> {
+    fn predict(&mut self, points: &[[f64; 2]]) -> Result<usize> {
         match self {
-            Predictor::Native(mlp) => Ok(mlp.eval(points).len()),
+            Predictor::Native(mlp, scratch) => {
+                Ok(mlp.eval_with(points, scratch).len())
+            }
             #[cfg(feature = "xla")]
             Predictor::Xla { engine, params } => {
                 let out = engine.predict(choose_predict(points.len()),
@@ -62,9 +66,11 @@ pub fn run(args: &Args) -> Result<()> {
 
     // random (but fixed) network parameters: prediction cost does not
     // depend on training state
-    let predictor = match &ctx.sel {
+    let mut predictor = match &ctx.sel {
         common::BackendSel::Native => {
-            Predictor::Native(Mlp::glorot(common::STD_LAYERS, 7)?)
+            let mlp = Mlp::glorot(common::STD_LAYERS, 7)?;
+            let scratch = EvalScratch::new(&mlp);
+            Predictor::Native(mlp, scratch)
         }
         #[cfg(feature = "xla")]
         common::BackendSel::Xla(engine) => {

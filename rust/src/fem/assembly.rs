@@ -21,6 +21,7 @@
 use crate::fem::bilinear::BilinearMap;
 use crate::fem::jacobi;
 use crate::fem::quadrature::{self, QuadKind};
+use crate::linalg::gemv;
 use crate::mesh::QuadMesh;
 
 /// Everything a FastVPINNs train step needs, in f64 (cast to f32 at the
@@ -56,15 +57,12 @@ impl AssembledDomain {
             .map(|i| f(self.quad_xy[2 * i], self.quad_xy[2 * i + 1]))
             .collect();
         let mut out = vec![0.0; ne * nt];
+        // per element, F[e,:] = V[e] @ f[e] is a blocked (nt x nq)
+        // matrix-vector product against the premultiplier slab
         for e in 0..ne {
-            for j in 0..nt {
-                let base = (e * nt + j) * nq;
-                let mut acc = 0.0;
-                for q in 0..nq {
-                    acc += self.v[base + q] * fq[e * nq + q];
-                }
-                out[e * nt + j] = acc;
-            }
+            gemv(nt, nq, 1.0, &self.v[e * nt * nq..(e + 1) * nt * nq],
+                 false, &fq[e * nq..(e + 1) * nq], 0.0,
+                 &mut out[e * nt..(e + 1) * nt]);
         }
         out
     }

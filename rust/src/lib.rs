@@ -5,11 +5,16 @@
 //! around a runtime-polymorphic [`runtime::backend::Backend`]:
 //!
 //! - **Native backend** (default) — the whole FastVPINNs train step in
-//!   pure Rust: tanh-MLP forward carrying spatial tangents, the
-//!   tensor-contraction variational residual over the precomputed
-//!   premultiplier tensors `G_x`/`G_y`/`V`, hand-written reverse-mode
-//!   backprop, Dirichlet/sensor penalties, and Adam. Trains offline with
-//!   no Python, no artifacts and no XLA in the build graph.
+//!   pure Rust, fully tensorized: quadrature points are batched into
+//!   element blocks and the tanh-MLP forward (carrying spatial
+//!   tangents), the variational residual against the precomputed
+//!   premultiplier tensors `G_x`/`G_y`/`V`, and the hand-written
+//!   reverse-mode backprop all run as cache-blocked micro-GEMMs
+//!   ([`linalg::gemm`]), plus Dirichlet/sensor penalties and Adam.
+//!   Per-thread workspaces are allocated once and reused, so the step
+//!   hot path is allocation-free. Trains offline with no Python, no
+//!   artifacts and no XLA in the build graph (`repro bench` tracks its
+//!   step time).
 //! - **XLA backend** (`--features xla`) — executes AOT train steps
 //!   (HLO + JSON manifest, produced once by `make artifacts` from the
 //!   JAX/Pallas definitions under `python/compile`) on the PJRT CPU

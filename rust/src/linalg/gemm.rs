@@ -1,0 +1,459 @@
+//! Cache-blocked micro-GEMM kernels for the tensorized training hot
+//! path (and anything else that wants dense products).
+//!
+//! The paper's speedup comes from casting the hp-VPINN residual as
+//! dense tensor contractions instead of per-point loops; this module is
+//! the CPU kernel those contractions (and the batched MLP
+//! forward/backward) run through. Classic BLIS-style structure:
+//!
+//! - three blocking loops (`NC` columns of B, `KC`-deep panels, `MC`
+//!   rows of A) keep the working set cache-resident;
+//! - A and B are repacked into contiguous, zero-padded `MR x KC` /
+//!   `KC x NR` panels, so the innermost kernel is branch-free and
+//!   transposed operands cost nothing extra (the packing routines
+//!   absorb the transpose);
+//! - an `MR x NR` register microkernel with fixed-bound loops that the
+//!   compiler unrolls and vectorizes.
+//!
+//! All matrices are row-major `f64` slices; `C` always has row stride
+//! `n`. Accumulation (`beta = 1`) is exact for the backward pass's
+//! `+=` into gradient slices. Everything is deterministic: the
+//! floating-point reduction order depends only on the shapes.
+
+/// Microkernel tile rows (accumulator block height).
+const MR: usize = 4;
+/// Microkernel tile columns (accumulator block width).
+const NR: usize = 8;
+/// Rows of A per packed block (multiple of `MR`).
+const MC: usize = 64;
+/// Panel depth (shared k-extent of the packed A/B panels).
+const KC: usize = 128;
+/// Columns of B per packed block (multiple of `NR`).
+const NC: usize = 256;
+
+/// Reusable packing buffers — allocate once per thread, pass to every
+/// [`gemm`] call to keep the hot path allocation-free.
+#[derive(Debug, Clone)]
+pub struct GemmBufs {
+    pa: Vec<f64>,
+    pb: Vec<f64>,
+}
+
+impl GemmBufs {
+    pub fn new() -> GemmBufs {
+        GemmBufs { pa: vec![0.0; MC * KC], pb: vec![0.0; KC * NC] }
+    }
+}
+
+impl Default for GemmBufs {
+    fn default() -> Self {
+        GemmBufs::new()
+    }
+}
+
+/// `C <- beta*C + alpha * op(A) @ op(B)` with `op(A)` of shape `m x k`
+/// and `op(B)` of shape `k x n`, all row-major.
+///
+/// `ta == false` means `a` is stored `m x k`; `ta == true` means `a` is
+/// stored `k x m` and accessed transposed (likewise `tb` for `b`, which
+/// is then stored `n x k`). `c` is `m x n` with row stride `n`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm(
+    bufs: &mut GemmBufs,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    ta: bool,
+    b: &[f64],
+    tb: bool,
+    beta: f64,
+    c: &mut [f64],
+) {
+    assert!(a.len() >= m * k, "A too short: {} < {}*{}", a.len(), m, k);
+    assert!(b.len() >= k * n, "B too short: {} < {}*{}", b.len(), k, n);
+    assert!(c.len() >= m * n, "C too short: {} < {}*{}", c.len(), m, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if beta == 0.0 {
+        c[..m * n].fill(0.0);
+    } else if beta != 1.0 {
+        for v in &mut c[..m * n] {
+            *v *= beta;
+        }
+    }
+    if k == 0 || alpha == 0.0 {
+        return;
+    }
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            pack_b(b, tb, n, k, pc, jc, kc, nc, &mut bufs.pb);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                pack_a(a, ta, m, k, ic, pc, mc, kc, &mut bufs.pa);
+                block_kernel(&bufs.pa, &bufs.pb, mc, nc, kc, alpha, c,
+                             ic, jc, n);
+            }
+        }
+    }
+}
+
+/// Pack `op(A)[ic..ic+mc, pc..pc+kc]` into `MR`-row panels, p-major
+/// within each panel, zero-padding the ragged last panel so the
+/// microkernel never branches on edges.
+#[allow(clippy::too_many_arguments)]
+fn pack_a(
+    a: &[f64],
+    ta: bool,
+    m: usize,
+    k: usize,
+    ic: usize,
+    pc: usize,
+    mc: usize,
+    kc: usize,
+    pa: &mut [f64],
+) {
+    let mut w = 0;
+    for ip in (0..mc).step_by(MR) {
+        for p in 0..kc {
+            for ii in 0..MR {
+                let i = ip + ii;
+                pa[w] = if i < mc {
+                    if ta {
+                        a[(pc + p) * m + ic + i]
+                    } else {
+                        a[(ic + i) * k + pc + p]
+                    }
+                } else {
+                    0.0
+                };
+                w += 1;
+            }
+        }
+    }
+}
+
+/// Pack `op(B)[pc..pc+kc, jc..jc+nc]` into `NR`-column panels, p-major
+/// within each panel, zero-padded like [`pack_a`].
+#[allow(clippy::too_many_arguments)]
+fn pack_b(
+    b: &[f64],
+    tb: bool,
+    n: usize,
+    k: usize,
+    pc: usize,
+    jc: usize,
+    kc: usize,
+    nc: usize,
+    pb: &mut [f64],
+) {
+    let mut w = 0;
+    for jp in (0..nc).step_by(NR) {
+        for p in 0..kc {
+            for jj in 0..NR {
+                let j = jp + jj;
+                pb[w] = if j < nc {
+                    if tb {
+                        b[(jc + j) * k + pc + p]
+                    } else {
+                        b[(pc + p) * n + jc + j]
+                    }
+                } else {
+                    0.0
+                };
+                w += 1;
+            }
+        }
+    }
+}
+
+/// Multiply one packed `mc x kc` A block against one packed `kc x nc`
+/// B block, accumulating `alpha * product` into `C[ic.., jc..]`.
+#[allow(clippy::too_many_arguments)]
+fn block_kernel(
+    pa: &[f64],
+    pb: &[f64],
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    alpha: f64,
+    c: &mut [f64],
+    ic: usize,
+    jc: usize,
+    ldc: usize,
+) {
+    for jr in (0..nc).step_by(NR) {
+        let nr = NR.min(nc - jr);
+        let bpan = &pb[jr * kc..jr * kc + NR * kc];
+        for ir in (0..mc).step_by(MR) {
+            let mr = MR.min(mc - ir);
+            let apan = &pa[ir * kc..ir * kc + MR * kc];
+            // MR x NR register accumulator; fixed bounds so the
+            // compiler fully unrolls and vectorizes.
+            let mut acc = [[0.0f64; NR]; MR];
+            for p in 0..kc {
+                let av = &apan[p * MR..p * MR + MR];
+                let bv = &bpan[p * NR..p * NR + NR];
+                for (arow, &ai) in acc.iter_mut().zip(av) {
+                    for (aj, &bj) in arow.iter_mut().zip(bv) {
+                        *aj += ai * bj;
+                    }
+                }
+            }
+            for (i, arow) in acc.iter().enumerate().take(mr) {
+                let row = (ic + ir + i) * ldc + jc + jr;
+                for (cj, &aj) in c[row..row + nr].iter_mut().zip(arow) {
+                    *cj += alpha * aj;
+                }
+            }
+        }
+    }
+}
+
+/// `y <- beta*y + alpha * op(A) @ x` for a row-major `m x n` matrix.
+///
+/// `trans == false`: `op(A) = A` (`x` has length `n`, `y` length `m`).
+/// `trans == true`: `op(A) = A^T` (`x` has length `m`, `y` length `n`).
+/// The blocked residual contraction and its adjoint run through this
+/// (per element, the premultiplier slab is an `nt x nq` matrix).
+#[allow(clippy::too_many_arguments)]
+pub fn gemv(
+    m: usize,
+    n: usize,
+    alpha: f64,
+    a: &[f64],
+    trans: bool,
+    x: &[f64],
+    beta: f64,
+    y: &mut [f64],
+) {
+    let (ylen, xlen) = if trans { (n, m) } else { (m, n) };
+    assert!(a.len() >= m * n, "A too short: {} < {}*{}", a.len(), m, n);
+    assert!(x.len() >= xlen, "x too short: {} < {}", x.len(), xlen);
+    assert!(y.len() >= ylen, "y too short: {} < {}", y.len(), ylen);
+    if beta == 0.0 {
+        y[..ylen].fill(0.0);
+    } else if beta != 1.0 {
+        for v in &mut y[..ylen] {
+            *v *= beta;
+        }
+    }
+    if alpha == 0.0 || m == 0 || n == 0 {
+        return;
+    }
+    if !trans {
+        for (i, yi) in y.iter_mut().enumerate().take(m) {
+            let row = &a[i * n..i * n + n];
+            let mut acc = 0.0;
+            for (&aj, &xj) in row.iter().zip(&x[..n]) {
+                acc += aj * xj;
+            }
+            *yi += alpha * acc;
+        }
+    } else {
+        for (i, &xi) in x.iter().enumerate().take(m) {
+            let s = alpha * xi;
+            if s == 0.0 {
+                continue;
+            }
+            let row = &a[i * n..i * n + n];
+            for (yj, &aj) in y[..n].iter_mut().zip(row) {
+                *yj += s * aj;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_result;
+    use crate::util::rng::Rng;
+
+    /// Naive triple-loop reference — deliberately the dumbest possible
+    /// implementation, the ground truth the blocked kernel must match.
+    #[allow(clippy::too_many_arguments)]
+    fn naive_gemm(
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f64,
+        a: &[f64],
+        ta: bool,
+        b: &[f64],
+        tb: bool,
+        beta: f64,
+        c: &mut [f64],
+    ) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for p in 0..k {
+                    let av = if ta { a[p * m + i] } else { a[i * k + p] };
+                    let bv = if tb { b[j * k + p] } else { b[p * n + j] };
+                    acc += av * bv;
+                }
+                c[i * n + j] = beta * c[i * n + j] + alpha * acc;
+            }
+        }
+    }
+
+    fn fill(rng: &mut Rng, len: usize) -> Vec<f64> {
+        (0..len).map(|_| rng.uniform_in(-1.0, 1.0)).collect()
+    }
+
+    #[derive(Debug, Clone, Copy)]
+    struct Case {
+        m: usize,
+        n: usize,
+        k: usize,
+        ta: bool,
+        tb: bool,
+        alpha: f64,
+        beta: f64,
+    }
+
+    /// Dimension pool biased toward block/tile edges: 1-wide, around
+    /// MR/NR, and straddling MC/KC boundaries.
+    const DIMS: [usize; 12] = [1, 2, 3, 4, 5, 7, 8, 9, 15, 17, 31, 33];
+
+    fn run_case(rng: &mut Rng, case: &Case) -> Result<(), String> {
+        let Case { m, n, k, ta, tb, alpha, beta } = *case;
+        let a = fill(rng, m * k);
+        let b = fill(rng, k * n);
+        let c0 = fill(rng, m * n);
+        let mut c_blk = c0.clone();
+        let mut c_ref = c0;
+        let mut bufs = GemmBufs::new();
+        gemm(&mut bufs, m, n, k, alpha, &a, ta, &b, tb, beta, &mut c_blk);
+        naive_gemm(m, n, k, alpha, &a, ta, &b, tb, beta, &mut c_ref);
+        let tol = 1e-12 * (1.0 + k as f64);
+        for (i, (x, y)) in c_blk.iter().zip(&c_ref).enumerate() {
+            if (x - y).abs() > tol {
+                return Err(format!("C[{i}]: blocked {x} vs naive {y}"));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn gemm_matches_naive_on_odd_shapes() {
+        let mut vals = Rng::new(11);
+        check_result(
+            7,
+            60,
+            |r| Case {
+                m: DIMS[r.below(DIMS.len())],
+                n: DIMS[r.below(DIMS.len())],
+                k: DIMS[r.below(DIMS.len())],
+                ta: r.uniform() < 0.5,
+                tb: r.uniform() < 0.5,
+                alpha: [1.0, -1.0, 0.5, 0.0][r.below(4)],
+                beta: [0.0, 1.0, -0.25][r.below(3)],
+            },
+            |case| run_case(&mut vals, case),
+        );
+    }
+
+    #[test]
+    fn gemm_crosses_every_blocking_boundary() {
+        // m > MC, n > NC, k > KC in one shot, plus ragged edges.
+        let mut rng = Rng::new(3);
+        for &(m, n, k) in
+            &[(MC + 1, NC + 3, KC + 5), (MR + 1, NR + 1, 2 * KC + 1)]
+        {
+            run_case(
+                &mut rng,
+                &Case { m, n, k, ta: false, tb: true, alpha: 1.0,
+                        beta: 1.0 },
+            )
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn gemm_one_wide_layers() {
+        // the shapes a [2,1,...,1] network produces
+        let mut rng = Rng::new(5);
+        for &(m, n, k) in &[(1, 1, 1), (9, 1, 2), (1, 7, 1), (30, 1, 1)] {
+            for &(ta, tb) in
+                &[(false, false), (true, false), (false, true), (true, true)]
+            {
+                run_case(
+                    &mut rng,
+                    &Case { m, n, k, ta, tb, alpha: 1.0, beta: 0.0 },
+                )
+                .unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_accumulates_with_beta_one() {
+        // the backward pass does C += A^T B three times in a row
+        let mut rng = Rng::new(17);
+        let (m, n, k) = (6, 5, 40);
+        let a = fill(&mut rng, m * k);
+        let b = fill(&mut rng, k * n);
+        let mut c_blk = vec![0.0; m * n];
+        let mut c_ref = vec![0.0; m * n];
+        let mut bufs = GemmBufs::new();
+        for _ in 0..3 {
+            gemm(&mut bufs, m, n, k, 1.0, &a, true, &b, false, 1.0,
+                 &mut c_blk);
+            naive_gemm(m, n, k, 1.0, &a, true, &b, false, 1.0, &mut c_ref);
+        }
+        for (x, y) in c_blk.iter().zip(&c_ref) {
+            assert!((x - y).abs() < 1e-11, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gemv_matches_naive_both_orientations() {
+        let mut vals = Rng::new(23);
+        check_result(
+            13,
+            60,
+            |r| {
+                (
+                    DIMS[r.below(DIMS.len())],
+                    DIMS[r.below(DIMS.len())],
+                    r.uniform() < 0.5,
+                    [1.0, -0.5, 0.0][r.below(3)],
+                    [0.0, 1.0, 2.0][r.below(3)],
+                )
+            },
+            |&(m, n, trans, alpha, beta)| {
+                let a = fill(&mut vals, m * n);
+                let (xlen, ylen) = if trans { (m, n) } else { (n, m) };
+                let x = fill(&mut vals, xlen);
+                let y0 = fill(&mut vals, ylen);
+                let mut y = y0.clone();
+                gemv(m, n, alpha, &a, trans, &x, beta, &mut y);
+                for (idx, yi) in y.iter().enumerate() {
+                    let mut acc = 0.0;
+                    if trans {
+                        for p in 0..m {
+                            acc += a[p * n + idx] * x[p];
+                        }
+                    } else {
+                        for p in 0..n {
+                            acc += a[idx * n + p] * x[p];
+                        }
+                    }
+                    let want = beta * y0[idx] + alpha * acc;
+                    if (yi - want).abs() > 1e-12 * (1.0 + m.max(n) as f64) {
+                        return Err(format!(
+                            "y[{idx}]: blocked {yi} vs naive {want}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

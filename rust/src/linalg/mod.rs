@@ -1,10 +1,13 @@
-//! Sparse linear algebra for the classical FEM reference solver:
-//! CSR matrices and a Jacobi-preconditioned conjugate-gradient solver.
+//! Linear algebra kernels: sparse CSR + iterative solvers for the
+//! classical FEM reference, and the cache-blocked dense micro-GEMM the
+//! tensorized native training hot path runs on.
 
 pub mod bicgstab;
 pub mod cg;
 pub mod csr;
+pub mod gemm;
 
 pub use bicgstab::bicgstab_solve;
 pub use cg::{cg_solve, CgOptions, CgResult};
 pub use csr::{CsrMatrix, Triplets};
+pub use gemm::{gemm, gemv, GemmBufs};

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   train [--backend native|xla] ...  train a problem (native: pure
 //!                                     Rust, no artifacts; xla: AOT)
+//!   bench [--quick] ...            time the native train-step hot path
+//!                                  and write BENCH_native_step.json
 //!   artifacts                      list available AOT artifacts (xla)
 //!   experiment <id|all> ...        regenerate a paper table/figure
 //!   fem-solve --mesh <kind> ...    run the classical FEM reference solver
@@ -46,6 +48,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_str() {
         "artifacts" => cmd_artifacts(args),
         "train" => cmd_train(args),
+        "bench" => cmd_bench(args),
         "experiment" => {
             if args.positional.is_empty() {
                 bail!("usage: repro experiment <id|all> (ids: {:?})",
@@ -74,6 +77,8 @@ repro — FastVPINNs coordinator
               [--layers 2,30,30,30,1] [--iters N] [--lr F] [--tau F]
               [--seed N] [--history F.csv]
               (xla backend: --artifact NAME [--artifacts DIR])
+  repro bench [--backend native] [--quick] [--iters N] [--warmup N]
+              [--nt1d N] [--nq1d N] [--out BENCH_native_step.json]
   repro artifacts [--artifacts DIR]              (requires --features xla)
   repro experiment <fig02|fig08|fig09|fig10|fig11|fig12|fig14|fig15|
                     fig16|table1|all> [--backend native|xla] [--iters N]
@@ -125,6 +130,77 @@ fn parse_layers(spec: &str) -> Result<Vec<usize>> {
         .collect::<std::result::Result<_, _>>()
         .map_err(|_| anyhow::anyhow!("--layers expects e.g. 2,30,30,30,1"))?;
     Ok(layers)
+}
+
+/// Time the native train-step hot path across grid sizes and write a
+/// JSON perf record — the tracked datapoint CI uploads on every PR.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use fastvpinns::experiments::common::{native_step_case, STD_LAYERS};
+    use fastvpinns::util::json::Json;
+
+    let backend = args.str_or("backend", "native");
+    check_backend_name(&backend)?;
+    if backend != "native" {
+        bail!("repro bench currently times the native backend only");
+    }
+    let quick = args.has("quick");
+    let (ks, iters_default, warmup_default): (&[usize], usize, usize) =
+        if quick {
+            (&[4, 8, 16], 5, 2)
+        } else {
+            (&[4, 8, 16, 32, 64], 15, 3)
+        };
+    let iters = args.usize_or("iters", iters_default)?.max(1);
+    let warmup = args.usize_or("warmup", warmup_default)?;
+    let nt1d = args.usize_or("nt1d", 5)?;
+    let nq1d = args.usize_or("nq1d", 5)?;
+    let out_path = args.str_or("out", "BENCH_native_step.json");
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    println!(
+        "bench: native train step, net {STD_LAYERS:?}, nt={nt1d}^2, \
+         nq={nq1d}^2, {iters} iters (+{warmup} warmup), {threads} threads"
+    );
+    let mut cases = Vec::new();
+    for &k in ks {
+        let case = native_step_case(k, nt1d, nq1d, iters, warmup)?;
+        let s = &case.summary;
+        println!(
+            "  ne={:<6} ({:>8} quad pts)  median {:>9.3} ms/step  \
+             p90 {:>9.3} ms",
+            case.ne, case.n_quad, s.median, s.p90
+        );
+        cases.push(Json::obj(vec![
+            ("ne", Json::num(case.ne as f64)),
+            ("n_quad", Json::num(case.n_quad as f64)),
+            ("dof", Json::num(case.dof as f64)),
+            // effective worker count (clamped to ne), not machine cores
+            ("threads", Json::num(case.threads as f64)),
+            ("median_ms", Json::num(s.median)),
+            ("p90_ms", Json::num(s.p90)),
+            ("min_ms", Json::num(s.min)),
+            ("mean_ms", Json::num(s.mean)),
+        ]));
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("native_step")),
+        ("backend", Json::str("native")),
+        ("layers",
+         Json::Arr(STD_LAYERS.iter().map(|&w| Json::num(w as f64))
+             .collect())),
+        ("nt1d", Json::num(nt1d as f64)),
+        ("nq1d", Json::num(nq1d as f64)),
+        ("iters", Json::num(iters as f64)),
+        ("warmup", Json::num(warmup as f64)),
+        ("threads", Json::num(threads as f64)),
+        ("quick", Json::Bool(quick)),
+        ("cases", Json::Arr(cases)),
+    ]);
+    std::fs::write(&out_path, format!("{doc}\n"))?;
+    println!("bench record -> {out_path}");
+    Ok(())
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
