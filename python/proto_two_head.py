@@ -1,0 +1,585 @@
+"""Numpy prototype of the native two-head InverseSpace train step.
+
+This is the validation harness for rust/src/runtime/backend/native.rs
+NativeLoss::InverseSpace (no rust toolchain in the dev container): it
+transliterates the planned hand-written adjoints exactly, checks every
+parameter gradient against complex-step differentiation (machine
+precision, the numpy analogue of the Rust Dual2 checks), and sizes the
+iteration budgets asserted by tests/native_e2e.rs.
+
+Run:  python3 python/proto_two_head.py
+"""
+import sys
+import time
+import numpy as np
+
+sys.path.insert(0, "python/compile")
+from fem_py import mesh as pmesh, assembly  # noqa: E402
+
+
+# ---------------------------------------------------------------------
+# stable softplus / sigmoid (complex-safe variants for the reference)
+# ---------------------------------------------------------------------
+def softplus(z):
+    return np.where(z > 30.0, z, np.log1p(np.exp(np.minimum(z, 30.0))))
+
+
+def sigmoid(z):
+    out = np.empty_like(z)
+    pos = z >= 0
+    out[pos] = 1.0 / (1.0 + np.exp(-z[pos]))
+    ez = np.exp(z[~pos])
+    out[~pos] = ez / (1.0 + ez)
+    return out
+
+
+def softplus_c(z):  # complex-step-safe (moderate |z| only)
+    return np.log1p(np.exp(z))
+
+
+# ---------------------------------------------------------------------
+# Two-head MLP: trunk hidden layers -> u head (with spatial tangents)
+#                                   -> eps head (value, softplus)
+# ---------------------------------------------------------------------
+class TwoHeadNet:
+    def __init__(self, layers, seed=0, two_head=True):
+        # layers like [2, h1, ..., 1]; eps head is (h_last -> 1) extra
+        rng = np.random.default_rng(seed)
+        self.layers = layers
+        self.two_head = two_head
+        self.params = []  # (W, b) per stage; eps head appended last
+        for nin, nout in zip(layers[:-1], layers[1:]):
+            lim = np.sqrt(6.0 / (nin + nout))
+            self.params.append([rng.uniform(-lim, lim, (nin, nout)),
+                                np.zeros(nout)])
+        if two_head:
+            nin = layers[-2]
+            lim = np.sqrt(6.0 / (nin + 1))
+            self.params.append([rng.uniform(-lim, lim, (nin, 1)),
+                                np.zeros(1)])
+
+    def flat(self):
+        return np.concatenate([np.concatenate([w.ravel(), b])
+                               for w, b in self.params])
+
+    def set_flat(self, theta):
+        o = 0
+        for wb in self.params:
+            w, b = wb
+            wb[0] = theta[o:o + w.size].reshape(w.shape)
+            o += w.size
+            wb[1] = theta[o:o + b.size]
+            o += b.size
+        assert o == theta.size
+
+    def n_stages(self):
+        return len(self.layers) - 1
+
+    def forward(self, pts):
+        """pts (N,2) -> u, ux, uy, eps, tape.
+
+        tape: per hidden layer (a, ax, ay, zx, zy); plus trunk output
+        activation (a_last) and eps pre-activation z_eps.
+        """
+        n = pts.shape[0]
+        cplx = pts.dtype == np.complex128 or self.params[0][0].dtype == np.complex128
+        dt = np.complex128 if cplx else np.float64
+        a = pts.astype(dt)
+        ax = np.zeros((n, 2), dt)
+        ay = np.zeros((n, 2), dt)
+        ax[:, 0] = 1.0
+        ay[:, 1] = 1.0
+        tape = []
+        last = self.n_stages() - 1
+        for l in range(last):
+            w, b = self.params[l]
+            z = a @ w + b
+            zx = ax @ w
+            zy = ay @ w
+            t = np.tanh(z)
+            s = 1.0 - t * t
+            tape.append((t, s * zx, s * zy, zx, zy))
+            a, ax, ay = t, s * zx, s * zy
+        wu, bu = self.params[last]
+        u = (a @ wu + bu)[:, 0]
+        ux = (ax @ wu)[:, 0]
+        uy = (ay @ wu)[:, 0]
+        eps = None
+        z_eps = None
+        if self.two_head:
+            we, be = self.params[-1]
+            z_eps = (a @ we + be)[:, 0]
+            eps = (softplus_c(z_eps) if cplx else softplus(z_eps))
+        return u, ux, uy, eps, (tape, a, ax, ay, z_eps)
+
+    def backward(self, pts, cache, gu, gx_, gy_, ge, grads):
+        """Accumulate parameter grads for seeds (gu,gx_,gy_,ge)."""
+        tape, a_last, ax_last, ay_last, z_eps = cache
+        last = self.n_stages() - 1
+        ga = gu[:, None].copy()
+        gax = gx_[:, None].copy()
+        gay = gy_[:, None].copy()
+        # eps head adjoint
+        gez = None
+        if self.two_head and ge is not None:
+            gez = (ge * sigmoid(z_eps))[:, None]
+            gw_e, gb_e = grads[-1]
+            gw_e += a_last.T @ gez
+            gb_e += gez.sum(axis=0)
+        for l in range(last, -1, -1):
+            w, _ = self.params[l]
+            gw, gb = grads[l]
+            a_in = pts if l == 0 else tape[l - 1][0]
+            gb += ga.sum(axis=0)
+            if l == 0:
+                gw += a_in.T @ ga
+                gw[0] += gax.sum(axis=0)
+                gw[1] += gay.sum(axis=0)
+            else:
+                ax_in, ay_in = tape[l - 1][1], tape[l - 1][2]
+                gw += a_in.T @ ga + ax_in.T @ gax + ay_in.T @ gay
+            if l == 0:
+                break
+            gb_v = ga @ w.T
+            if l == last and gez is not None:
+                gb_v = gb_v + gez @ self.params[-1][0].T
+            gbx = gax @ w.T
+            gby = gay @ w.T
+            a, _, _, zx, zy = tape[l - 1]
+            s = 1.0 - a * a
+            ds = -2.0 * a * s
+            ga = gb_v * s + (gbx * zx + gby * zy) * ds
+            gax = gbx * s
+            gay = gby * s
+
+
+# ---------------------------------------------------------------------
+# The InverseSpace objective (and InverseConst for budget sizing)
+# ---------------------------------------------------------------------
+class Objective:
+    """loss = var + tau*bd + gamma*sensor over an AssembledDomain."""
+
+    def __init__(self, dom, fmat, bd_pts, bd_u, s_pts, s_u,
+                 bx=0.0, by=0.0, tau=10.0, gamma=10.0, mode="space",
+                 eps_const=None):
+        self.dom, self.fmat = dom, fmat
+        self.bd_pts, self.bd_u = bd_pts, bd_u
+        self.s_pts, self.s_u = s_pts, s_u
+        self.bx, self.by, self.tau, self.gamma = bx, by, tau, gamma
+        self.mode = mode          # "space" | "const"
+        self.eps_const = eps_const  # trainable scalar (const mode)
+
+    def loss(self, net, eps_const=None):
+        """Pure forward loss (complex-safe) for gradchecking."""
+        dom = self.dom
+        ne, nt, nq = dom.n_elem, dom.n_test, dom.n_quad
+        u, ux, uy, eps, _ = net.forward(dom.quad_xy)
+        ux = ux.reshape(ne, nq)
+        uy = uy.reshape(ne, nq)
+        if self.mode == "space":
+            exq = eps.reshape(ne, nq) * ux
+            eyq = eps.reshape(ne, nq) * uy
+        else:
+            ec = self.eps_const if eps_const is None else eps_const
+            exq, eyq = ec * ux, ec * uy
+        r = (np.einsum("ejq,eq->ej", dom.gx, exq)
+             + np.einsum("ejq,eq->ej", dom.gy, eyq)
+             - self.fmat)
+        if self.bx != 0.0 or self.by != 0.0:
+            dq = self.bx * ux + self.by * uy
+            r = r + np.einsum("ejq,eq->ej", dom.v, dq)
+        var = (r * r).sum() / (ne * nt)
+        ub, _, _, _, _ = net.forward(self.bd_pts)
+        bd = ((ub - self.bd_u) ** 2).sum() / len(self.bd_u)
+        us, _, _, _, _ = net.forward(self.s_pts)
+        sens = ((us - self.s_u) ** 2).sum() / len(self.s_u)
+        return var + self.tau * bd + self.gamma * sens
+
+    def loss_and_grad(self, net):
+        """Hand-written adjoints — the Rust transliteration."""
+        dom = self.dom
+        ne, nt, nq = dom.n_elem, dom.n_test, dom.n_quad
+        cr = 2.0 / (ne * nt)
+        grads = [[np.zeros_like(w), np.zeros_like(b)]
+                 for w, b in net.params]
+        u, ux, uy, eps, cache = net.forward(dom.quad_xy)
+        uxe = ux.reshape(ne, nq)
+        uye = uy.reshape(ne, nq)
+        if self.mode == "space":
+            epse = eps.reshape(ne, nq)
+            exq, eyq = epse * uxe, epse * uye
+        else:
+            exq, eyq = self.eps_const * uxe, self.eps_const * uye
+        cv = (np.einsum("ejq,eq->ej", dom.gx, exq)
+              + np.einsum("ejq,eq->ej", dom.gy, eyq))
+        r = cv - self.fmat
+        conv = self.bx != 0.0 or self.by != 0.0
+        if conv:
+            dq = self.bx * uxe + self.by * uye
+            r = r + np.einsum("ejq,eq->ej", dom.v, dq)
+        var = (r * r).sum() / (ne * nt)
+        # seeds
+        tgx = cr * np.einsum("ejq,ej->eq", dom.gx, r)
+        tgy = cr * np.einsum("ejq,ej->eq", dom.gy, r)
+        if self.mode == "space":
+            ge = (tgx * uxe + tgy * uye).ravel()
+            sx = epse * tgx
+            sy = epse * tgy
+            geps_const = 0.0
+        else:
+            ge = None
+            sx = self.eps_const * tgx
+            sy = self.eps_const * tgy
+            # dL/deps_const = cr * sum_ej r * c  with c = Gx ux + Gy uy
+            c_pre = (np.einsum("ejq,eq->ej", dom.gx, uxe)
+                     + np.einsum("ejq,eq->ej", dom.gy, uye))
+            geps_const = cr * (r * c_pre).sum()
+        if conv:
+            tv = cr * np.einsum("ejq,ej->eq", dom.v, r)
+            sx = sx + self.bx * tv
+            sy = sy + self.by * tv
+        net.backward(dom.quad_xy, cache, np.zeros(ne * nq),
+                     sx.ravel(), sy.ravel(), ge, grads)
+        # boundary
+        ub, _, _, _, cb = net.forward(self.bd_pts)
+        nb = len(self.bd_u)
+        d = ub - self.bd_u
+        bd = (d * d).sum() / nb
+        net.backward(self.bd_pts, cb, 2.0 * self.tau / nb * d,
+                     np.zeros(nb), np.zeros(nb),
+                     np.zeros(nb) if net.two_head else None, grads)
+        # sensors
+        us, _, _, _, cs = net.forward(self.s_pts)
+        ns = len(self.s_u)
+        d = us - self.s_u
+        sens = (d * d).sum() / ns
+        net.backward(self.s_pts, cs, 2.0 * self.gamma / ns * d,
+                     np.zeros(ns), np.zeros(ns),
+                     np.zeros(ns) if net.two_head else None, grads)
+        total = var + self.tau * bd + self.gamma * sens
+        flat = np.concatenate([np.concatenate([gw.ravel(), gb])
+                               for gw, gb in grads])
+        return total, flat, geps_const, (var, bd, sens)
+
+
+def complex_step_grad(obj, net, eps_const=None):
+    theta0 = net.flat()
+    g = np.zeros_like(theta0)
+    h = 1e-30
+    for k in range(theta0.size):
+        th = theta0.astype(np.complex128)
+        th[k] += 1j * h
+        net.set_flat(th)
+        g[k] = obj.loss(net).imag / h
+    net.set_flat(theta0)
+    if eps_const is not None:
+        l = obj.loss(net, eps_const=eps_const + 1j * h)
+        return g, l.imag / h
+    return g, None
+
+
+def adam_train(obj, net, iters, lr, eps0=None, log_every=0,
+               callback=None):
+    theta = net.flat()
+    has_eps = obj.mode == "const"
+    n = theta.size + (1 if has_eps else 0)
+    m = np.zeros(n)
+    v = np.zeros(n)
+    b1, b2, ae = 0.9, 0.999, 1e-8
+    eps_c = eps0
+    for t in range(1, iters + 1):
+        if has_eps:
+            obj.eps_const = eps_c
+        loss, g, ge, parts = obj.loss_and_grad(net)
+        if has_eps:
+            g = np.append(g, ge)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        upd = lr * (m / (1 - b1 ** t)) / (np.sqrt(v / (1 - b2 ** t)) + ae)
+        theta -= upd[:theta.size]
+        net.set_flat(theta)
+        if has_eps:
+            eps_c -= upd[-1]
+        if log_every and (t % log_every == 0 or t == 1):
+            extra = f" eps={eps_c:.4f}" if has_eps else ""
+            print(f"    it {t:5d} loss {loss:.4e} "
+                  f"(var {parts[0]:.3e} bd {parts[1]:.3e} "
+                  f"sens {parts[2]:.3e}){extra}")
+        if callback and callback(t, loss, eps_c, net):
+            return t, loss, eps_c
+    return iters, loss, eps_c
+
+
+# ---------------------------------------------------------------------
+# Problems
+# ---------------------------------------------------------------------
+def eps_star(x, y):
+    return 0.5 * (np.sin(x) + np.cos(y))
+
+
+def u_star(x, y):
+    return np.sin(np.pi * x) * np.sin(np.pi * y)
+
+
+def forcing_space(x, y):
+    """f = -div(eps* grad u*) + b . grad u* with b=(1,0), via FD."""
+    h = 1e-5
+
+    def flux_div(x, y):
+        # d/dx(eps ux) + d/dy(eps uy) with central differences on the
+        # analytic pieces (accuracy ~1e-9, plenty for training targets)
+        def epsux(x, y):
+            return eps_star(x, y) * np.pi * np.cos(np.pi * x) \
+                * np.sin(np.pi * y)
+
+        def epsuy(x, y):
+            return eps_star(x, y) * np.pi * np.sin(np.pi * x) \
+                * np.cos(np.pi * y)
+        return ((epsux(x + h, y) - epsux(x - h, y)) / (2 * h)
+                + (epsuy(x, y + h) - epsuy(x, y - h)) / (2 * h))
+
+    ux = np.pi * np.cos(np.pi * x) * np.sin(np.pi * y)
+    return -flux_div(x, y) + 1.0 * ux
+
+
+def boundary_square(nb, x0=0.0, y0=0.0, x1=1.0, y1=1.0):
+    per = nb // 4
+    t = np.linspace(0, 1, per, endpoint=False)
+    pts = np.concatenate([
+        np.stack([x0 + (x1 - x0) * t, np.full(per, y0)], 1),
+        np.stack([np.full(per, x1), y0 + (y1 - y0) * t], 1),
+        np.stack([x1 - (x1 - x0) * t, np.full(per, y1)], 1),
+        np.stack([np.full(per, x0), y1 - (y1 - y0) * t], 1),
+    ])
+    return pts
+
+
+def build_space_objective(n=2, nt1d=3, nq1d=8, nb=80, ns=40, seed=5):
+    pts, cells = pmesh.unit_square(n)
+    dom = assembly.assemble(pts, cells, nt1d, nq1d)
+    x = dom.quad_xy[:, 0].reshape(dom.n_elem, dom.n_quad)
+    y = dom.quad_xy[:, 1].reshape(dom.n_elem, dom.n_quad)
+    fmat = np.einsum("ejq,eq->ej", dom.v, forcing_space(x, y))
+    bd = boundary_square(nb)
+    bd_u = u_star(bd[:, 0], bd[:, 1])
+    rng = np.random.default_rng(seed)
+    sp = rng.uniform(0.02, 0.98, (ns, 2))
+    s_u = u_star(sp[:, 0], sp[:, 1])
+    return Objective(dom, fmat, bd, bd_u, sp, s_u, bx=1.0, by=0.0,
+                     mode="space")
+
+
+def eps_l2(net, grid_n=30):
+    g = np.linspace(0.02, 0.98, grid_n)
+    X, Y = np.meshgrid(g, g)
+    p = np.stack([X.ravel(), Y.ravel()], 1)
+    _, _, _, eps, _ = net.forward(p)
+    ref = eps_star(p[:, 0], p[:, 1])
+    return np.sqrt(((eps - ref) ** 2).mean())
+
+
+# ---------------------------------------------------------------------
+def main():
+    print("== gradchecks: hand adjoints vs complex step ==")
+    for layers, conv in [([2, 4, 1], (1.0, 0.0)),
+                         ([2, 4, 1], (0.0, 0.0)),
+                         ([2, 1, 1], (0.3, -0.2)),
+                         ([2, 5, 3, 1], (1.0, 0.5)),
+                         ([2, 1], (1.0, 0.0))]:
+        obj = build_space_objective(n=1, nt1d=2, nq1d=3, nb=8, ns=4)
+        obj.bx, obj.by = conv
+        net = TwoHeadNet(layers, seed=3)
+        _, g, _, _ = obj.loss_and_grad(net)
+        gref, _ = complex_step_grad(obj, net)
+        rel = np.abs(g - gref) / (1.0 + np.maximum(np.abs(g),
+                                                   np.abs(gref)))
+        print(f"  space {layers} b={conv}: max rel err {rel.max():.2e}")
+        assert rel.max() < 1e-12, (layers, rel.max())
+
+    # const-eps variant through the same harness (sanity of geps)
+    obj = build_space_objective(n=1, nt1d=2, nq1d=3, nb=8, ns=4)
+    obj.mode = "const"
+    obj.eps_const = 0.7
+    obj.bx = obj.by = 0.0
+    net = TwoHeadNet([2, 4, 1], seed=3, two_head=False)
+    _, g, ge, _ = obj.loss_and_grad(net)
+    gref, geref = complex_step_grad(obj, net, eps_const=0.7)
+    rel = np.abs(g - gref) / (1.0 + np.maximum(np.abs(g), np.abs(gref)))
+    print(f"  const [2,4,1]: max rel {rel.max():.2e}, "
+          f"geps {ge:.6e} vs {geref:.6e}")
+    assert rel.max() < 1e-12 and abs(ge - geref) < 1e-10 * (1 + abs(ge))
+
+    print("== inverse_const budget (rust e2e hyperparams) ==")
+    # rect_grid(2,2,-1..1), nt=3, nq=10, net [2,16,16,1], nb=80, ns=20,
+    # lr 5e-3, eps_init 2.0, target 0.3 within 1e-2
+    pts, cells = pmesh.rect_grid(2, 2, -1.0, -1.0, 1.0, 1.0)
+    dom = assembly.assemble(pts, cells, 3, 10)
+
+    def u_c(x):
+        return 10.0 * np.sin(x) * np.tanh(x) * np.exp(-0.3 * x * x)
+
+    def lap_u_c(x):
+        h = 1e-4
+        return (u_c(x + h) - 2 * u_c(x) + u_c(x - h)) / (h * h)
+
+    x = dom.quad_xy[:, 0].reshape(dom.n_elem, dom.n_quad)
+    fmat = np.einsum("ejq,eq->ej", dom.v, -0.3 * lap_u_c(x))
+    bd = boundary_square(80, -1.0, -1.0, 1.0, 1.0)
+    bd_u = u_c(bd[:, 0])
+    for seed in [1, 2, 3]:
+        rng = np.random.default_rng(seed)
+        sp = rng.uniform(-0.95, 0.95, (20, 2))
+        s_u = u_c(sp[:, 0])
+        objc = Objective(dom, fmat, bd, bd_u, sp, s_u, mode="const",
+                         eps_const=2.0)
+        net = TwoHeadNet([2, 16, 16, 1], seed=seed, two_head=False)
+        hit = {"t": None}
+
+        def cb(t, loss, eps_c, _n):
+            if hit["t"] is None and abs(eps_c - 0.3) < 1e-2:
+                hit["t"] = t
+            return False
+
+        t0 = time.time()
+        it, loss, eps_c = adam_train(objc, net, 4000, 5e-3, eps0=2.0,
+                                     callback=cb)
+        print(f"  seed {seed}: eps={eps_c:.4f} after {it} iters "
+              f"(first |eps-0.3|<1e-2 at {hit['t']}), "
+              f"{time.time()-t0:.1f}s")
+
+    print("== inverse_space smoke budget (unit_square(2)) ==")
+    for seed in [1, 2, 3]:
+        obj = build_space_objective(n=2, nt1d=3, nq1d=8, nb=80, ns=60,
+                                    seed=seed)
+        net = TwoHeadNet([2, 16, 16, 1], seed=seed)
+        e0 = eps_l2(net)
+        t0 = time.time()
+        marks = {}
+
+        def cb(t, loss, _e, n):
+            if t in (300, 600, 1000, 1500, 2000):
+                marks[t] = eps_l2(n)
+            return False
+
+        adam_train(obj, net, 2000, 5e-3, callback=cb)
+        e1 = eps_l2(net)
+        print(f"  seed {seed}: ||eps-eps*|| {e0:.4f} -> {e1:.4f} "
+              f"(x{e0/e1:.1f}), marks "
+              + " ".join(f"{k}:{v:.4f}(x{e0/v:.1f})"
+                         for k, v in sorted(marks.items()))
+              + f", {time.time()-t0:.1f}s")
+
+    print("== fig15-scale stability probe (8x8 square, nt1d=4 nq1d=5) ==")
+    obj = build_space_objective(n=8, nt1d=4, nq1d=5, nb=200, ns=200,
+                                seed=7)
+    net = TwoHeadNet([2, 30, 30, 30, 1], seed=7)
+    e0 = eps_l2(net)
+    t0 = time.time()
+    adam_train(obj, net, 800, 2e-3, log_every=200)
+    print(f"  ||eps-eps*|| {e0:.4f} -> {eps_l2(net):.4f}, "
+          f"{time.time()-t0:.1f}s for 800 iters")
+
+
+
+
+# ---------------------------------------------------------------------
+# disk_1024 stability probe (port of mesh::generators::disk)
+# ---------------------------------------------------------------------
+def disk_mesh(n=16, m=12, r=1.0):
+    s = 0.5 * r
+    pts = []
+    index = {}
+
+    def add(x, y):
+        key = (round(x, 12), round(y, 12))
+        if key not in index:
+            index[key] = len(pts)
+            pts.append([x, y])
+        return index[key]
+
+    cells = []
+    grid = [[add(-s + 2 * s * ix / n, -s + 2 * s * iy / n)
+             for ix in range(n + 1)] for iy in range(n + 1)]
+    for iy in range(n):
+        for ix in range(n):
+            cells.append([grid[iy][ix], grid[iy][ix + 1],
+                          grid[iy + 1][ix + 1], grid[iy + 1][ix]])
+    for side in range(4):
+        blk = [[0] * (n + 1) for _ in range(m + 1)]
+        for iv in range(m + 1):
+            v = iv / m
+            for it in range(n + 1):
+                t = it / n
+                sx, sy = [(-s + 2 * s * t, -s), (s, -s + 2 * s * t),
+                          (s - 2 * s * t, s), (-s, s - 2 * s * t)][side]
+                a0 = [-0.75, -0.25, 0.25, 0.75][side] * np.pi
+                ang = a0 + t * 0.5 * np.pi
+                axp, ayp = r * np.cos(ang), r * np.sin(ang)
+                blk[iv][it] = add(sx + v * (axp - sx), sy + v * (ayp - sy))
+        for iv in range(m):
+            for it in range(n):
+                cells.append([blk[iv][it], blk[iv][it + 1],
+                              blk[iv + 1][it + 1], blk[iv + 1][it]])
+    pts = np.array(pts)
+    cells = np.array(cells)
+    # fix orientation (shoelace)
+    for c in cells:
+        p = pts[c]
+        a2 = ((p[0, 0] * p[1, 1] - p[1, 0] * p[0, 1])
+              + (p[1, 0] * p[2, 1] - p[2, 0] * p[1, 1])
+              + (p[2, 0] * p[3, 1] - p[3, 0] * p[2, 1])
+              + (p[3, 0] * p[0, 1] - p[0, 0] * p[3, 1]))
+        if a2 < 0:
+            c[1], c[3] = c[3], c[1]
+    return pts, cells
+
+
+def probe_disk():
+    print("== disk_1024 two-head stability probe (manufactured) ==")
+    pts, cells = disk_mesh()
+    print(f"  disk mesh: {len(cells)} cells, {len(pts)} points")
+    dom = assembly.assemble(pts, cells, 4, 5)
+
+    def u_d(x, y):
+        return 2.5 * (1.0 - x * x - y * y)
+
+    # f = -div(eps* grad u) + u_x, u = 2.5(1-x^2-y^2):
+    # ux=-5x, uy=-5y, lap=-10; epsx=0.5cos x, epsy=-0.5 sin y
+    def forcing_d(x, y):
+        ex, ey = 0.5 * np.cos(x), -0.5 * np.sin(y)
+        return -(ex * (-5 * x) + ey * (-5 * y)
+                 + eps_star(x, y) * (-10.0)) + (-5 * x)
+
+    x = dom.quad_xy[:, 0].reshape(dom.n_elem, dom.n_quad)
+    y = dom.quad_xy[:, 1].reshape(dom.n_elem, dom.n_quad)
+    fmat = np.einsum("ejq,eq->ej", dom.v, forcing_d(x, y))
+    th = np.linspace(0, 2 * np.pi, 400, endpoint=False)
+    bd = np.stack([np.cos(th), np.sin(th)], 1)
+    bd_u = np.zeros(400)
+    rng = np.random.default_rng(11)
+    rr = np.sqrt(rng.uniform(0, 0.9, 400))
+    ta = rng.uniform(0, 2 * np.pi, 400)
+    sp = np.stack([rr * np.cos(ta), rr * np.sin(ta)], 1)
+    s_u = u_d(sp[:, 0], sp[:, 1])
+    obj = Objective(dom, fmat, bd, bd_u, sp, s_u, bx=1.0, by=0.0,
+                    mode="space")
+    net = TwoHeadNet([2, 30, 30, 30, 1], seed=4)
+
+    def el2(n_):
+        g = np.linspace(-0.7, 0.7, 25)
+        X, Y = np.meshgrid(g, g)
+        p = np.stack([X.ravel(), Y.ravel()], 1)
+        _, _, _, eps, _ = n_.forward(p)
+        return np.sqrt(((eps - eps_star(p[:, 0], p[:, 1])) ** 2).mean())
+
+    e0 = el2(net)
+    t0 = time.time()
+    adam_train(obj, net, 600, 2e-3, log_every=150)
+    print(f"  ||eps-eps*|| {e0:.4f} -> {el2(net):.4f}, "
+          f"{time.time()-t0:.1f}s for 600 iters")
+
+
+
+if __name__ == "__main__":
+    main()
+    probe_disk()

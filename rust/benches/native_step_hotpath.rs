@@ -8,7 +8,9 @@
 //! `experiments::common::native_step_case` and writes the JSON record;
 //! grid lists and iteration counts differ by harness.)
 
-use fastvpinns::experiments::common::native_step_case;
+use fastvpinns::experiments::common::{
+    native_inverse_space_step_case, native_step_case,
+};
 
 fn main() {
     println!("== native train step, 30x3 net, nt=5x5, nq=5x5/elem ==");
@@ -17,6 +19,17 @@ fn main() {
         // fewer timed iters on the big grids keeps the sweep short
         let iters = if ne >= 1024 { 10 } else { 20 };
         let case = native_step_case(k, 5, 5, iters, 3)
+            .expect("timed steps");
+        let s = &case.summary;
+        println!(
+            "  ne={:<5} ({:>6} quad pts)  median {:>8.3} ms/step  \
+             p90 {:>8.3} ms",
+            case.ne, case.n_quad, s.median, s.p90
+        );
+    }
+    println!("== two-head inverse-space step (eps head in contraction) ==");
+    for k in [4usize, 16, 64] {
+        let case = native_inverse_space_step_case(k, 5, 5, 20, 3)
             .expect("timed steps");
         let s = &case.summary;
         println!(

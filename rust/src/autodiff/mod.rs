@@ -75,6 +75,15 @@ impl Dual2 {
         }
     }
 
+    pub fn ln(self) -> Dual2 {
+        let d1 = self.d1 / self.v;
+        Dual2 {
+            v: self.v.ln(),
+            d1,
+            d2: self.d2 / self.v - d1 * d1,
+        }
+    }
+
     pub fn sqrt(self) -> Dual2 {
         let s = self.v.sqrt();
         Dual2 {
@@ -206,6 +215,21 @@ mod tests {
         assert!(close(t.d1, 1.0 - tv * tv, 1e-14));
         // (tanh)'' = -2 tanh sech^2
         assert!(close(t.d2, -2.0 * tv * (1.0 - tv * tv), 1e-13));
+    }
+
+    #[test]
+    fn ln_derivatives() {
+        // f = ln(x): f' = 1/x, f'' = -1/x^2
+        let x = Dual2::var(1.3);
+        let f = x.ln();
+        assert!(close(f.v, 1.3f64.ln(), 1e-14));
+        assert!(close(f.d1, 1.0 / 1.3, 1e-14));
+        assert!(close(f.d2, -1.0 / (1.3 * 1.3), 1e-14));
+        // chain: ln(1 + e^z) has d1 = sigmoid(z)
+        let z = Dual2::var(-0.7);
+        let sp = (z.exp() + Dual2::con(1.0)).ln();
+        let sig = 1.0 / (1.0 + 0.7f64.exp());
+        assert!(close(sp.d1, sig, 1e-14));
     }
 
     #[test]

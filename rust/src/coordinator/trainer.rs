@@ -180,6 +180,25 @@ impl<'a> Trainer<'a> {
         self.backend.predict(points)
     }
 
+    /// Predict the trainable eps *field* (two-head inverse-space
+    /// networks). Prefers the backend's dedicated
+    /// [`Backend::predict_eps_field`]; falls back to head 1 of
+    /// `predict` for backends that only expose the field as a second
+    /// output head (AOT two-head artifacts).
+    pub fn predict_eps_field(&self, points: &[[f64; 2]])
+        -> Result<Vec<f32>> {
+        if let Some(eps) = self.backend.predict_eps_field(points)? {
+            return Ok(eps);
+        }
+        let mut heads = self.backend.predict(points)?;
+        anyhow::ensure!(
+            heads.len() >= 2,
+            "backend {} ({}) has no eps field head",
+            self.backend.name(), self.backend.loss_kind()
+        );
+        Ok(heads.swap_remove(1))
+    }
+
     /// Evaluate error norms against a reference on given points.
     pub fn evaluate(&self, points: &[[f64; 2]], reference: &[f64])
         -> Result<ErrorNorms> {
@@ -239,5 +258,39 @@ mod tests {
         assert!(t.current_eps().is_err()); // forward problem: no eps
         let pred = t.predict(&[[0.5, 0.5]]).unwrap();
         assert_eq!(pred.len(), 1);
+    }
+
+    #[test]
+    fn trainer_drives_two_head_inverse_space_backend() {
+        let mesh = generators::unit_square(1);
+        let dom = assembly::assemble(&mesh, 2, 4, QuadKind::GaussLegendre);
+        let problem = PoissonSin::new(std::f64::consts::PI);
+        let src = DataSource {
+            mesh: &mesh,
+            domain: Some(&dom),
+            problem: &problem,
+            sensor_values: None,
+        };
+        let cfg = TrainConfig { iters: 5, ..TrainConfig::default() };
+        let ncfg = NativeConfig {
+            layers: vec![2, 8, 1],
+            loss: NativeLoss::InverseSpace { bx: 1.0, by: 0.0 },
+            nb: 16,
+            ns: 8,
+        };
+        let backend = NativeBackend::new(
+            &ncfg, &src, &BackendOpts::from(&cfg)).unwrap();
+        let mut t = Trainer::new(Box::new(backend), &cfg);
+        assert_eq!(t.loss_kind(), "inverse_space");
+        assert_eq!(t.history.extra_label, "sensor_loss");
+        t.run().unwrap();
+        assert!(t.current_eps().is_err()); // field, not a scalar
+        let pts = [[0.5, 0.5], [0.2, 0.8]];
+        let heads = t.predict_heads(&pts).unwrap();
+        assert_eq!(heads.len(), 2, "u and eps heads");
+        let eps = t.predict_eps_field(&pts).unwrap();
+        assert_eq!(eps.len(), 2);
+        assert_eq!(eps, heads[1]);
+        assert!(eps.iter().all(|&e| e > 0.0), "softplus positivity");
     }
 }

@@ -4,10 +4,11 @@
 //!
 //! Every experiment accepts `--backend native|xla` (default: native).
 //! The native backend reproduces accuracy/convergence results with no
-//! artifacts; baselines that only exist as AOT artifacts (loop-based
-//! hp-VPINNs, collocation PINNs, the two-head inverse-space network)
-//! need `--features xla` plus `make artifacts` and are skipped with a
-//! notice otherwise.
+//! artifacts — including the two-head inverse-space network (fig15),
+//! which trains natively via `NativeLoss::InverseSpace`; baselines
+//! that only exist as AOT artifacts (loop-based hp-VPINNs, collocation
+//! PINNs) need `--features xla` plus `make artifacts` and are skipped
+//! with a notice otherwise.
 
 use std::path::PathBuf;
 
@@ -220,6 +221,8 @@ pub fn median_backend_step_ms(
 /// (console sweep) so the two harnesses cannot drift apart on the
 /// per-case protocol; grid lists and iteration counts stay per-caller.
 pub struct StepBenchCase {
+    /// Loss family being timed ("poisson" | "inverse_space").
+    pub loss: &'static str,
     pub ne: usize,
     /// Total quadrature points per step (`ne * nq`).
     pub n_quad: usize,
@@ -240,24 +243,59 @@ pub fn native_step_case(
     iters: usize,
     warmup: usize,
 ) -> Result<StepBenchCase> {
+    let cfg = NativeConfig::poisson_std();
+    native_step_case_cfg(k, nt1d, nq1d, iters, warmup, &cfg, "poisson")
+}
+
+/// Time the native two-head InverseSpace train step on a `k x k` grid
+/// (manufactured eps-field problem, `ns` = 100 sensors): the tracked
+/// `inverse_space` case of `repro bench` — the eps head's extra cost on
+/// the same blocked tensor path.
+pub fn native_inverse_space_step_case(
+    k: usize,
+    nt1d: usize,
+    nq1d: usize,
+    iters: usize,
+    warmup: usize,
+) -> Result<StepBenchCase> {
+    let cfg = NativeConfig::inverse_space_std(1.0, 0.0, 100);
+    native_step_case_cfg(k, nt1d, nq1d, iters, warmup, &cfg,
+                         "inverse_space")
+}
+
+fn native_step_case_cfg(
+    k: usize,
+    nt1d: usize,
+    nq1d: usize,
+    iters: usize,
+    warmup: usize,
+    cfg: &NativeConfig,
+    loss: &'static str,
+) -> Result<StepBenchCase> {
     let ne = k * k;
     let mesh = generators::unit_square(k.max(1));
     let dom = assembly::assemble(&mesh, nt1d, nq1d,
                                  QuadKind::GaussLegendre);
-    let problem =
+    let poisson =
         crate::problems::PoissonSin::new(2.0 * std::f64::consts::PI);
+    let inverse = crate::problems::InverseSpaceSin;
+    let problem: &dyn Problem = if loss == "inverse_space" {
+        &inverse
+    } else {
+        &poisson
+    };
     let src = DataSource {
         mesh: &mesh,
         domain: Some(&dom),
-        problem: &problem,
+        problem,
         sensor_values: None,
     };
-    let cfg = NativeConfig::poisson_std();
-    let mut b = NativeBackend::new(&cfg, &src, &BackendOpts::default())?;
+    let mut b = NativeBackend::new(cfg, &src, &BackendOpts::default())?;
     let dof = b.n_opt_params();
     let threads = b.n_threads();
     let samples = backend_step_samples_ms(&mut b, iters, warmup)?;
     Ok(StepBenchCase {
+        loss,
         ne,
         n_quad: ne * dom.nq,
         dof,

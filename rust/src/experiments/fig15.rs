@@ -1,10 +1,14 @@
 //! Fig. 15: inverse problem with space-dependent diffusion
-//! eps(x,y) = 0.5(sin x + cos y) on a 1024-cell disk; the network's two
-//! heads predict u and eps simultaneously, supervised by sensor data
-//! taken from the FEM reference solution. The two-head inverse-space
-//! loss only exists as an AOT artifact — xla backend required (the
-//! native backend prints a skip notice; a native two-head network is a
-//! natural follow-up once multi-head MLPs land).
+//! eps(x,y) = 0.5(sin x + cos y) on a 1024-cell disk; a two-head
+//! network (shared tanh trunk, separate u and eps output heads, the
+//! eps head softplus'd for positivity) predicts u and the diffusion
+//! field simultaneously, supervised by sensor data taken from the FEM
+//! reference solution. Runs on both backends: the native backend
+//! trains [`crate::runtime::backend::native::NativeLoss::InverseSpace`]
+//! — the eps field enters the tensor contraction per quadrature point —
+//! with no artifacts; `--backend xla` executes the AOT two-head
+//! artifact instead. Reports `||eps - eps*||` against
+//! [`InverseSpaceCd::eps_actual`].
 
 use anyhow::Result;
 
@@ -16,19 +20,14 @@ use crate::fem::quadrature::QuadKind;
 use crate::fem_solver::{self, FemProblem};
 use crate::mesh::{generators, vtk};
 use crate::problems::{InverseSpaceCd, Problem};
+use crate::runtime::backend::native::NativeConfig;
 use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
 
 pub fn run(args: &Args) -> Result<()> {
     let ctx = ExpCtx::from_args(args)?;
-    if ctx.is_native() {
-        println!(
-            "fig15 SKIP: the two-head inverse-space network needs \
-             --backend xla (--features xla + make artifacts)"
-        );
-        return Ok(());
-    }
     let iters = args.usize_or("iters", 4000)?;
+    let ns = args.usize_or("ns", 400)?;
     let dir = common::results_dir("fig15")?;
     let problem = InverseSpaceCd;
 
@@ -61,10 +60,13 @@ pub fn run(args: &Args) -> Result<()> {
         log_every: 50.max(iters / 100),
         ..TrainConfig::default()
     };
-    let backend = ctx.make_xla_only("fv_inverse_space_disk1024",
-                                    Some("predict_inv2_16k"), &src,
-                                    &cfg)?;
+    let (bx, by) = problem.b();
+    let ncfg = NativeConfig::inverse_space_std(bx, by, ns);
+    let backend = ctx.make_backend(&ncfg, "fv_inverse_space_disk1024",
+                                   Some("predict_inv2_16k"), &src, &cfg)?;
     let mut trainer = Trainer::new(backend, &cfg);
+    println!("two-head inverse-space training [{} backend], {} sensors",
+             ctx.name(), ns);
     let report = trainer.run()?;
     trainer.history.to_csv(dir.join("history.csv"))?;
     println!(
@@ -73,8 +75,10 @@ pub fn run(args: &Args) -> Result<()> {
         report.steps, report.final_loss, report.median_step_ms
     );
 
-    // ---- evaluate both heads at mesh nodes
+    // ---- evaluate both heads at mesh nodes (one trunk pass)
     let heads = trainer.predict_heads(&mesh.points)?;
+    anyhow::ensure!(heads.len() >= 2,
+                    "fig15 needs a two-head (u, eps) network");
     let u_pred: Vec<f64> = heads[0].iter().map(|&v| v as f64).collect();
     let eps_pred: Vec<f64> = heads[1].iter().map(|&v| v as f64).collect();
     let eps_exact: Vec<f64> = mesh

@@ -1,6 +1,11 @@
 //! Fig. 16: hyperparameter impact on median training time per epoch —
 //! three 2D sweeps over (N_test, N_quad), (N_test, N_elem),
-//! (N_quad, N_elem). Fully backend-portable (FastVPINN step only).
+//! (N_quad, N_elem), plus a fourth sweep timing the two-head
+//! inverse-space step (u + softplus'd eps head on the shared trunk)
+//! against the plain forward step at the same grid sizes. Fully
+//! backend-portable (FastVPINN step only); the inverse-space sweep
+//! runs on the native backend (no AOT artifact sweep exists for the
+//! two-head nets).
 
 use anyhow::Result;
 
@@ -58,6 +63,27 @@ pub fn run(args: &Args) -> Result<()> {
         }
     }
     w.flush()?;
+
+    // (d) forward vs two-head inverse-space step at nt1d=5, nq1d=5
+    if ctx.is_native() {
+        println!("fig16d: forward vs two-head inverse-space step (native)");
+        let mut w = CsvWriter::create(
+            dir.join("fig16d_inverse_space.csv"),
+            &["ne", "forward_median_ms", "inverse_space_median_ms"])?;
+        for k in [2usize, 8, 20] {
+            let fwd = common::native_step_case(k, 5, 5, iters, warmup)?;
+            let inv = common::native_inverse_space_step_case(
+                k, 5, 5, iters, warmup)?;
+            println!("  ne={:<4} forward {:.3} ms, inverse_space {:.3} ms",
+                     k * k, fwd.summary.median, inv.summary.median);
+            w.row_f64(&[(k * k) as f64, fwd.summary.median,
+                        inv.summary.median])?;
+        }
+        w.flush()?;
+    } else {
+        println!("fig16d SKIP on xla: the two-head sweep times the \
+                  native InverseSpace step");
+    }
     println!("fig16 -> {}", dir.display());
     Ok(())
 }

@@ -116,7 +116,7 @@ impl BilinearMap {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::proptest::check_result;
+    use crate::util::proptest::{check_result, geom};
 
     const SKEWED: [[f64; 2]; 4] =
         [[0.0, 0.0], [2.0, 0.3], [1.7, 1.9], [-0.2, 1.2]];
@@ -184,20 +184,81 @@ mod tests {
     }
 
     #[test]
+    fn property_positive_det_on_random_convex_quads() {
+        // det(J) is bilinear in (xi, eta), so its minimum over the
+        // reference square sits at a corner: positive at the four
+        // corners (<=> strict convexity, CCW) implies positive
+        // everywhere — checked here on corners plus random interiors.
+        check_result(11, 300, |r| {
+            let q = geom::convex_quad(r, 0.25);
+            let xi = r.uniform_in(-1.0, 1.0);
+            let eta = r.uniform_in(-1.0, 1.0);
+            (q, xi, eta)
+        }, |&(q, xi, eta)| {
+            let bm = BilinearMap::new(&q);
+            for (cx, cy) in
+                [(-1.0, -1.0), (1.0, -1.0), (1.0, 1.0), (-1.0, 1.0)]
+            {
+                let d = bm.jacobian(cx, cy).det;
+                if d <= 0.0 {
+                    return Err(format!("corner det {d} <= 0"));
+                }
+            }
+            let d = bm.jacobian(xi, eta).det;
+            if d <= 0.0 {
+                return Err(format!("interior det {d} <= 0 at \
+                                    ({xi},{eta})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_affine_maps_have_constant_jacobian() {
+        // parallelograms are the affine bilinear maps: J must not vary
+        // with (xi, eta) and det * 4 must equal the shoelace area
+        check_result(12, 300, |r| {
+            let q = geom::parallelogram(r);
+            let xi = r.uniform_in(-1.0, 1.0);
+            let eta = r.uniform_in(-1.0, 1.0);
+            (q, xi, eta)
+        }, |&(q, xi, eta)| {
+            let bm = BilinearMap::new(&q);
+            let j0 = bm.jacobian(0.0, 0.0);
+            let j = bm.jacobian(xi, eta);
+            let tol = 1e-13 * (1.0 + j0.det.abs());
+            for (a, b) in [(j.j11, j0.j11), (j.j12, j0.j12),
+                           (j.j21, j0.j21), (j.j22, j0.j22),
+                           (j.det, j0.det)]
+            {
+                if (a - b).abs() > tol {
+                    return Err(format!("J varies on an affine map: \
+                                        {a} vs {b}"));
+                }
+            }
+            let area: f64 = (0..4)
+                .map(|i| {
+                    let p = q[i];
+                    let n = q[(i + 1) % 4];
+                    p[0] * n[1] - n[0] * p[1]
+                })
+                .sum::<f64>()
+                / 2.0;
+            if (4.0 * j0.det - area).abs() > 1e-12 * (1.0 + area) {
+                return Err(format!("4 det = {} vs area {area}",
+                                   4.0 * j0.det));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn property_inverse_roundtrip_random_convex_quads() {
         check_result(
             42,
             200,
             |r| {
-                // random convex-ish quad: perturb unit square corners
-                let p = |bx: f64, by: f64, r: &mut crate::util::rng::Rng| {
-                    [bx + r.uniform_in(-0.25, 0.25),
-                     by + r.uniform_in(-0.25, 0.25)]
-                };
-                let verts = [
-                    p(0.0, 0.0, r), p(1.0, 0.0, r), p(1.0, 1.0, r),
-                    p(0.0, 1.0, r),
-                ];
+                let verts = geom::convex_quad(r, 0.25);
                 let xi = r.uniform_in(-0.95, 0.95);
                 let eta = r.uniform_in(-0.95, 0.95);
                 (verts, xi, eta)

@@ -11,6 +11,11 @@
 //!   premultiplier tensors `G_x`/`G_y`/`V`, and the hand-written
 //!   reverse-mode backprop all run as cache-blocked micro-GEMMs
 //!   ([`linalg::gemm`]), plus Dirichlet/sensor penalties and Adam.
+//!   Every paper loss trains natively — forward Poisson /
+//!   convection-diffusion, the scalar inverse problem, and the
+//!   two-head inverse-space problem (`NativeLoss::InverseSpace`: a
+//!   shared trunk with u and softplus'd eps heads, the eps *field*
+//!   entering the residual contraction per quadrature point).
 //!   Per-thread workspaces are allocated once and reused, so the step
 //!   hot path is allocation-free. Trains offline with no Python, no
 //!   artifacts and no XLA in the build graph (`repro bench` tracks its

@@ -73,9 +73,9 @@ fn dispatch(args: &Args) -> Result<()> {
 const USAGE: &str = "\
 repro — FastVPINNs coordinator
   repro train [--backend native|xla] [--problem poisson_sin|cd_gear|
-              inverse_const] [--omega-pi K] [--n N] [--nt1d N] [--nq1d N]
-              [--layers 2,30,30,30,1] [--iters N] [--lr F] [--tau F]
-              [--seed N] [--history F.csv]
+              inverse_const|inverse_space] [--omega-pi K] [--n N]
+              [--nt1d N] [--nq1d N] [--layers 2,30,30,30,1] [--iters N]
+              [--lr F] [--tau F] [--seed N] [--ns N] [--history F.csv]
               (xla backend: --artifact NAME [--artifacts DIR])
   repro bench [--backend native] [--quick] [--iters N] [--warmup N]
               [--nt1d N] [--nq1d N] [--out BENCH_native_step.json]
@@ -135,7 +135,10 @@ fn parse_layers(spec: &str) -> Result<Vec<usize>> {
 /// Time the native train-step hot path across grid sizes and write a
 /// JSON perf record — the tracked datapoint CI uploads on every PR.
 fn cmd_bench(args: &Args) -> Result<()> {
-    use fastvpinns::experiments::common::{native_step_case, STD_LAYERS};
+    use fastvpinns::experiments::common::{
+        native_inverse_space_step_case, native_step_case, StepBenchCase,
+        STD_LAYERS,
+    };
     use fastvpinns::util::json::Json;
 
     let backend = args.str_or("backend", "native");
@@ -144,11 +147,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
         bail!("repro bench currently times the native backend only");
     }
     let quick = args.has("quick");
-    let (ks, iters_default, warmup_default): (&[usize], usize, usize) =
+    let (ks, inv_ks, iters_default, warmup_default): (&[usize], &[usize],
+                                                      usize, usize) =
         if quick {
-            (&[4, 8, 16], 5, 2)
+            (&[4, 8, 16], &[4, 16], 5, 2)
         } else {
-            (&[4, 8, 16, 32, 64], 15, 3)
+            (&[4, 8, 16, 32, 64], &[4, 16, 64], 15, 3)
         };
     let iters = args.usize_or("iters", iters_default)?.max(1);
     let warmup = args.usize_or("warmup", warmup_default)?;
@@ -164,15 +168,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
          nq={nq1d}^2, {iters} iters (+{warmup} warmup), {threads} threads"
     );
     let mut cases = Vec::new();
-    for &k in ks {
-        let case = native_step_case(k, nt1d, nq1d, iters, warmup)?;
+    let mut push_case = |case: StepBenchCase| {
         let s = &case.summary;
         println!(
-            "  ne={:<6} ({:>8} quad pts)  median {:>9.3} ms/step  \
-             p90 {:>9.3} ms",
-            case.ne, case.n_quad, s.median, s.p90
+            "  {:<14} ne={:<6} ({:>8} quad pts)  median {:>9.3} \
+             ms/step  p90 {:>9.3} ms",
+            case.loss, case.ne, case.n_quad, s.median, s.p90
         );
         cases.push(Json::obj(vec![
+            ("loss", Json::str(case.loss)),
             ("ne", Json::num(case.ne as f64)),
             ("n_quad", Json::num(case.n_quad as f64)),
             ("dof", Json::num(case.dof as f64)),
@@ -183,6 +187,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
             ("min_ms", Json::num(s.min)),
             ("mean_ms", Json::num(s.mean)),
         ]));
+    };
+    for &k in ks {
+        push_case(native_step_case(k, nt1d, nq1d, iters, warmup)?);
+    }
+    // the two-head inverse-space step on the same grids: tracks the
+    // eps head's cost on the blocked tensor path
+    for &k in inv_ks {
+        push_case(native_inverse_space_step_case(k, nt1d, nq1d, iters,
+                                                 warmup)?);
     }
     let doc = Json::obj(vec![
         ("bench", Json::str("native_step")),
@@ -248,10 +261,20 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         "inverse_const" => {
             (generators::rect_grid(2, 2, -1.0, -1.0, 1.0, 1.0),
              Box::new(problems::InverseConstPoisson::new()),
-             NativeLoss::InverseConst, 50)
+             NativeLoss::InverseConst, args.usize_or("ns", 50)?)
+        }
+        "inverse_space" => {
+            // two-head net: u + softplus'd eps field, sensors from the
+            // manufactured exact solution
+            let n = args.usize_or("n", 2)?;
+            let p = problems::InverseSpaceSin;
+            let (bx, by) = p.b();
+            (generators::unit_square(n.max(1)), Box::new(p),
+             NativeLoss::InverseSpace { bx, by },
+             args.usize_or("ns", 200)?)
         }
         other => bail!("unknown --problem '{other}' (known: poisson_sin, \
-                        cd_gear, inverse_const)"),
+                        cd_gear, inverse_const, inverse_space)"),
     };
 
     println!(
@@ -284,7 +307,32 @@ fn cmd_train_native(args: &Args) -> Result<()> {
     // error vs exact on the paper's 100x100 grid (when analytic)
     let (lo, hi) = mesh.bbox();
     let grid = eval_grid(100, 100, lo[0], lo[1], hi[0], hi[1]);
-    if problem.exact(grid[0][0], grid[0][1]).is_some() {
+    let exact_known = problem.exact(grid[0][0], grid[0][1]).is_some();
+    if problem_name == "inverse_space" {
+        // both heads in one trunk pass: u vs exact + the recovered
+        // diffusion field vs the manufactured truth
+        use fastvpinns::coordinator::metrics::ErrorNorms;
+        let heads = trainer.predict_heads(&grid)?;
+        anyhow::ensure!(heads.len() >= 2, "two-head network expected");
+        if exact_known {
+            let exact: Vec<f64> = grid
+                .iter()
+                .map(|p| problem.exact(p[0], p[1]).unwrap())
+                .collect();
+            let err = ErrorNorms::compute_f32(&heads[0], &exact);
+            println!("errors: MAE {:.3e}, rel-L2 {:.3e}, Linf {:.3e}",
+                     err.mae, err.rel_l2, err.linf);
+        }
+        let eps_pred: Vec<f64> =
+            heads[1].iter().map(|&v| v as f64).collect();
+        let eps_exact: Vec<f64> = grid
+            .iter()
+            .map(|p| problems::InverseSpaceSin::eps_actual(p[0], p[1]))
+            .collect();
+        let err = ErrorNorms::compute(&eps_pred, &eps_exact);
+        println!("eps field: MAE {:.3e}, rel-L2 {:.3e}, Linf {:.3e}",
+                 err.mae, err.rel_l2, err.linf);
+    } else if exact_known {
         let exact: Vec<f64> = grid
             .iter()
             .map(|p| problem.exact(p[0], p[1]).unwrap())

@@ -216,6 +216,59 @@ $EndElements
     }
 
     #[test]
+    fn property_write_read_roundtrip_random_jittered_meshes() {
+        // Random rectangle grids with jittered interior nodes and
+        // randomly tagged boundary edges must survive write -> parse
+        // exactly: f64 Display output round-trips, node/cell order is
+        // preserved, and tags reattach by edge identity.
+        use crate::util::proptest::check_result;
+        // pid-unique path: concurrent test processes must not collide
+        let path = std::env::temp_dir().join(format!(
+            "fastvpinns_prop_rt_{}.msh", std::process::id()));
+        check_result(
+            31,
+            40,
+            |r| {
+                let nx = 1 + r.below(4);
+                let ny = 1 + r.below(4);
+                let mut m = generators::rect_grid(
+                    nx, ny, -1.0, 0.5, 1.0, 2.0);
+                let h = 0.2 / nx.max(ny) as f64;
+                for p in &mut m.points {
+                    let interior = p[0] > -1.0 + 1e-9 && p[0] < 1.0 - 1e-9
+                        && p[1] > 0.5 + 1e-9 && p[1] < 2.0 - 1e-9;
+                    if interior {
+                        p[0] += r.uniform_in(-h, h);
+                        p[1] += r.uniform_in(-h, h);
+                    }
+                }
+                for e in &mut m.boundary {
+                    e.tag = r.below(5) as u32;
+                }
+                m
+            },
+            |m| {
+                write(m, &path).map_err(|e| e.to_string())?;
+                let back = read(&path).map_err(|e| e.to_string())?;
+                if back.points != m.points {
+                    return Err("points changed in roundtrip".into());
+                }
+                if back.cells != m.cells {
+                    return Err("cells changed in roundtrip".into());
+                }
+                if back.boundary != m.boundary {
+                    return Err(format!(
+                        "boundary changed: {:?} vs {:?}",
+                        back.boundary, m.boundary
+                    ));
+                }
+                Ok(())
+            },
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
     fn rejects_v4() {
         let bad = "$MeshFormat\n4.1 0 8\n$EndMeshFormat\n";
         assert!(parse(bad).is_err());

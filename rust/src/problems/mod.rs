@@ -180,6 +180,61 @@ impl Problem for InverseSpaceCd {
     }
 }
 
+// ---------------------------------------------------------------------
+// Inverse: space-dependent diffusion, manufactured (native tests/CLI)
+// ---------------------------------------------------------------------
+
+/// `-div(eps(x,y) grad u) + u_x = f` on (0,1)^2 with the paper's
+/// eps_actual = 0.5 (sin x + cos y) but a manufactured exact solution
+/// `u = sin(pi x) sin(pi y)` — the forcing is derived with Dual2
+/// probes, so sensors can be fed from `exact` with no FEM solve. This
+/// is the CI-scale counterpart of [`InverseSpaceCd`] (whose reference
+/// field comes from FEM on the disk).
+pub struct InverseSpaceSin;
+
+impl InverseSpaceSin {
+    /// The paper's field — delegates to [`InverseSpaceCd::eps_actual`]
+    /// so the CI-scale problem cannot drift from the fig15 reference.
+    pub fn eps_actual(x: f64, y: f64) -> f64 {
+        InverseSpaceCd::eps_actual(x, y)
+    }
+
+    fn u_dual(x: Dual2, y: Dual2) -> Dual2 {
+        (x * std::f64::consts::PI).sin() * (y * std::f64::consts::PI).sin()
+    }
+
+    fn eps_dual(x: Dual2, y: Dual2) -> Dual2 {
+        (x.sin() + y.cos()) * 0.5
+    }
+}
+
+impl Problem for InverseSpaceSin {
+    fn name(&self) -> &str {
+        "inverse_space_sin"
+    }
+
+    fn forcing(&self, x: f64, y: f64) -> f64 {
+        // f = -(eps_x u_x + eps_y u_y + eps lap u) + b . grad u
+        let u = probe_2d(Self::u_dual, x, y);
+        let e = probe_2d(Self::eps_dual, x, y);
+        let (bx, by) = self.b();
+        -(e.dx * u.dx + e.dy * u.dy + e.u * u.lap) + bx * u.dx + by * u.dy
+    }
+
+    fn boundary(&self, x: f64, y: f64) -> f64 {
+        self.exact(x, y).unwrap()
+    }
+
+    fn exact(&self, x: f64, y: f64) -> Option<f64> {
+        Some((std::f64::consts::PI * x).sin()
+            * (std::f64::consts::PI * y).sin())
+    }
+
+    fn b(&self) -> (f64, f64) {
+        (1.0, 0.0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -228,6 +283,45 @@ mod tests {
         assert!((g.forcing(1.0, 5.0)
             - (50.0 * 1.0f64.sin() + 1.0f64.cos())).abs() < 1e-14);
         assert_eq!(g.b(), (0.1, 0.0));
+    }
+
+    #[test]
+    fn inverse_space_sin_forcing_consistent_with_fd() {
+        // f must equal -div(eps grad u) + u_x of the manufactured pair
+        let p = InverseSpaceSin;
+        let u = |x: f64, y: f64| {
+            (std::f64::consts::PI * x).sin() * (std::f64::consts::PI * y).sin()
+        };
+        let e = InverseSpaceSin::eps_actual;
+        let h = 1e-5;
+        for (x, y) in [(0.3, 0.7), (0.52, 0.18), (0.9, 0.4)] {
+            // flux divergence via central differences of eps*grad u
+            let fx = |x: f64, y: f64| {
+                e(x, y) * (u(x + h, y) - u(x - h, y)) / (2.0 * h)
+            };
+            let fy = |x: f64, y: f64| {
+                e(x, y) * (u(x, y + h) - u(x, y - h)) / (2.0 * h)
+            };
+            let div = (fx(x + h, y) - fx(x - h, y)) / (2.0 * h)
+                + (fy(x, y + h) - fy(x, y - h)) / (2.0 * h);
+            let ux = (u(x + h, y) - u(x - h, y)) / (2.0 * h);
+            let want = -div + ux;
+            assert!((p.forcing(x, y) - want).abs() < 1e-4,
+                    "({x},{y}): {} vs {}", p.forcing(x, y), want);
+        }
+    }
+
+    #[test]
+    fn inverse_space_sin_exact_on_boundary_and_eps_positive() {
+        let p = InverseSpaceSin;
+        for t in [0.0, 0.3, 0.77, 1.0] {
+            assert!(p.boundary(t, 0.0).abs() < 1e-12);
+            assert!(p.boundary(0.0, t).abs() < 1e-12);
+        }
+        for i in 0..50 {
+            let t = i as f64 / 49.0;
+            assert!(InverseSpaceSin::eps_actual(t, 1.0 - t) > 0.0);
+        }
     }
 
     #[test]

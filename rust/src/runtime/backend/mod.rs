@@ -2,9 +2,10 @@
 //!
 //! A [`Backend`] owns everything a training run needs — network
 //! parameters, optimizer state, and the step-invariant data tensors —
-//! and exposes exactly three operations: advance one optimizer step,
-//! predict at arbitrary points, and report the trainable eps (inverse
-//! problems). The coordinator ([`crate::coordinator::trainer::Trainer`])
+//! and exposes four operations: advance one optimizer step, predict at
+//! arbitrary points, evaluate the trainable eps *field* (two-head
+//! inverse-space networks), and report the trainable scalar eps
+//! (inverse_const). The coordinator ([`crate::coordinator::trainer::Trainer`])
 //! is backend-agnostic: it drives `&dyn Backend`, applies LR schedules,
 //! logs history and computes error norms.
 //!
@@ -83,6 +84,16 @@ pub trait Backend {
     /// Evaluate the network at arbitrary points; one `Vec<f32>` per
     /// output head (head 0 is always u).
     fn predict(&self, points: &[[f64; 2]]) -> Result<Vec<Vec<f32>>>;
+
+    /// Evaluate the trainable diffusion *field* `eps(x, y)` at
+    /// arbitrary points (two-head inverse-space networks). `None` when
+    /// the loss has no eps field head — callers may still find the
+    /// field as head 1 of [`Backend::predict`] (AOT two-head
+    /// artifacts).
+    fn predict_eps_field(&self, _points: &[[f64; 2]])
+        -> Result<Option<Vec<f32>>> {
+        Ok(None)
+    }
 
     /// Current trainable diffusion coefficient, when the loss has one.
     fn current_eps(&self) -> Option<f64> {

@@ -13,7 +13,13 @@
 //!    `r[e,j] = eps * sum_q (G_x[e,j,q] du/dx + G_y[e,j,q] du/dy)
 //!              + sum_q V[e,j,q] (b . grad u) - F[e,j]`
 //!    and its adjoint are blocked matrix products against the
-//!    precomputed `G_x`/`G_y`/`V` premultiplier slabs;
+//!    precomputed `G_x`/`G_y`/`V` premultiplier slabs. On the two-head
+//!    inverse-space loss (`NativeLoss::InverseSpace`) `eps` is not a
+//!    scalar but the softplus'd second network head evaluated *per
+//!    quadrature point* —
+//!    `r[e,j] = sum_q eps(x_q) (G_x du/dx + G_y du/dy) + conv - F` —
+//!    folded into the same blocked products by scaling the tangents
+//!    before the contraction;
 //! 3. the reverse pass (reverse-over-forward through the
 //!    tangent-carrying MLP) is three accumulating GEMMs per layer for
 //!    the weight gradients plus three GEMMs against `W^T` for the
@@ -49,6 +55,12 @@ pub enum NativeLoss {
     /// `-eps lap u = f` with trainable eps plus sensor supervision
     /// (paper SS4.7.1).
     InverseConst,
+    /// `-div(eps(x,y) grad u) + b . grad u = f` with a trainable
+    /// diffusion *field* from the network's second head plus sensor
+    /// supervision of u (paper SS4.7.2, Figs. 15-16). The field enters
+    /// the contraction per quadrature point:
+    /// `r[e,j] = sum_q eps(x_q) (G_x du/dx + G_y du/dy) + conv - F`.
+    InverseSpace { bx: f64, by: f64 },
 }
 
 impl NativeLoss {
@@ -62,7 +74,29 @@ impl NativeLoss {
                 }
             }
             NativeLoss::InverseConst => "inverse_const",
+            NativeLoss::InverseSpace { .. } => "inverse_space",
         }
+    }
+}
+
+/// Numerically stable `ln(1 + e^z)` — the positivity map of the eps
+/// head (a positive diffusion field keeps the inverse problem
+/// well-posed for any parameter value).
+fn softplus(z: f64) -> f64 {
+    if z > 30.0 {
+        z
+    } else {
+        z.exp().ln_1p()
+    }
+}
+
+/// Stable logistic `1 / (1 + e^-z)` = d softplus / dz.
+fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
     }
 }
 
@@ -89,6 +123,17 @@ impl NativeConfig {
             ns: 0,
         }
     }
+
+    /// The paper's SS4.7.2 two-head inverse-space setup: the standard
+    /// 30x3 trunk shared by the u and eps heads, `ns` interior sensors.
+    pub fn inverse_space_std(bx: f64, by: f64, ns: usize) -> NativeConfig {
+        NativeConfig {
+            layers: vec![2, 30, 30, 30, 1],
+            loss: NativeLoss::InverseSpace { bx, by },
+            nb: 400,
+            ns,
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -98,18 +143,38 @@ impl NativeConfig {
 /// A tanh MLP as a flat f64 parameter vector (per layer: row-major
 /// `W[n_in, n_out]` then `b[n_out]`), usable standalone for
 /// prediction-only workloads (e.g. the Table 1 timing run).
+///
+/// Two-head networks ([`Mlp::glorot_two_head`]) share the trunk and the
+/// u output layer with the single-head layout, and append one extra
+/// linear head `(last hidden width -> 1)` whose softplus'd output is
+/// the trainable diffusion field `eps(x, y)` of the inverse-space loss.
 #[derive(Debug, Clone)]
 pub struct Mlp {
     pub layers: Vec<usize>,
     pub theta: Vec<f64>,
     /// (w_offset, b_offset) per weight layer.
     offsets: Vec<(usize, usize)>,
+    /// (w_offset, b_offset) of the eps head, when two-head.
+    eps_head: Option<(usize, usize)>,
 }
 
 impl Mlp {
     /// Glorot-uniform weights, zero biases (same distribution and RNG as
     /// the XLA path's init).
     pub fn glorot(layers: &[usize], seed: u64) -> Result<Mlp> {
+        Mlp::glorot_with(layers, seed, false)
+    }
+
+    /// [`Mlp::glorot`] plus the eps head for the two-head inverse-space
+    /// network; the head's weights are drawn from the same RNG stream
+    /// after the trunk's, so single- and two-head nets with equal seeds
+    /// share their trunk init.
+    pub fn glorot_two_head(layers: &[usize], seed: u64) -> Result<Mlp> {
+        Mlp::glorot_with(layers, seed, true)
+    }
+
+    fn glorot_with(layers: &[usize], seed: u64, two_head: bool)
+        -> Result<Mlp> {
         ensure!(layers.len() >= 2, "need at least input+output layer");
         ensure!(layers[0] == 2, "input width must be 2 (x, y)");
         ensure!(*layers.last().unwrap() == 1, "output width must be 1");
@@ -124,7 +189,22 @@ impl Mlp {
             theta.resize(b_off + nout, 0.0);
             offsets.push((w_off, b_off));
         }
-        Ok(Mlp { layers: layers.to_vec(), theta, offsets })
+        let eps_head = if two_head {
+            let nin = layers[layers.len() - 2];
+            let w_off = theta.len();
+            theta.extend(rng.glorot(nin, 1).iter().map(|&v| v as f64));
+            let b_off = theta.len();
+            theta.push(0.0);
+            Some((w_off, b_off))
+        } else {
+            None
+        };
+        Ok(Mlp { layers: layers.to_vec(), theta, offsets, eps_head })
+    }
+
+    /// Whether this network carries the eps field head.
+    pub fn two_head(&self) -> bool {
+        self.eps_head.is_some()
     }
 
     pub fn n_params(&self) -> usize {
@@ -156,18 +236,40 @@ impl Mlp {
         points: &[[f64; 2]],
         scratch: &mut EvalScratch,
     ) -> Vec<f32> {
+        self.eval_heads_with(points, scratch).0
+    }
+
+    /// Evaluate every output head: `(u, Some(eps))` for two-head
+    /// networks, `(u, None)` otherwise.
+    pub fn eval_heads(&self, points: &[[f64; 2]])
+        -> (Vec<f32>, Option<Vec<f32>>) {
+        let mut scratch = EvalScratch::new(self);
+        self.eval_heads_with(points, &mut scratch)
+    }
+
+    /// [`Mlp::eval_heads`] with caller-owned scratch. The trunk runs
+    /// once per block; both heads read the same last hidden activation.
+    pub fn eval_heads_with(
+        &self,
+        points: &[[f64; 2]],
+        scratch: &mut EvalScratch,
+    ) -> (Vec<f32>, Option<Vec<f32>>) {
         let wmax = self.max_width();
         assert!(scratch.cur.len() >= EVAL_BLOCK * wmax,
                 "EvalScratch built for a narrower network");
         let last = self.n_stages() - 1;
         let mut out = Vec::with_capacity(points.len());
+        let mut out_eps = self
+            .eps_head
+            .map(|_| Vec::with_capacity(points.len()));
         for chunk in points.chunks(EVAL_BLOCK) {
             let n = chunk.len();
             for (p, pt) in chunk.iter().enumerate() {
                 scratch.xy[2 * p] = pt[0];
                 scratch.xy[2 * p + 1] = pt[1];
             }
-            for l in 0..=last {
+            // trunk: hidden layers into `cur` (kept for both heads)
+            for l in 0..last {
                 let (nin, nout) = (self.layers[l], self.layers[l + 1]);
                 let (w_off, b_off) = self.offsets[l];
                 let w = &self.theta[w_off..w_off + nin * nout];
@@ -181,15 +283,37 @@ impl Mlp {
                      w, false, 0.0, &mut scratch.z);
                 for p in 0..n {
                     for (j, &bj) in bias.iter().enumerate() {
-                        let v = scratch.z[p * nout + j] + bj;
                         scratch.cur[p * nout + j] =
-                            if l < last { v.tanh() } else { v };
+                            (scratch.z[p * nout + j] + bj).tanh();
                     }
                 }
             }
-            out.extend((0..n).map(|p| scratch.cur[p] as f32));
+            let nin = self.layers[last];
+            let a_in: &[f64] = if last == 0 {
+                &scratch.xy[..2 * n]
+            } else {
+                &scratch.cur[..n * nin]
+            };
+            // u head
+            let (w_off, b_off) = self.offsets[last];
+            let w = &self.theta[w_off..w_off + nin];
+            gemm(&mut scratch.bufs, n, 1, nin, 1.0, a_in, false, w,
+                 false, 0.0, &mut scratch.z);
+            let bu = self.theta[b_off];
+            out.extend((0..n).map(|p| (scratch.z[p] + bu) as f32));
+            // eps head (softplus positivity)
+            if let (Some((we_off, be_off)), Some(oe)) =
+                (self.eps_head, out_eps.as_mut())
+            {
+                let we = &self.theta[we_off..we_off + nin];
+                gemm(&mut scratch.bufs, n, 1, nin, 1.0, a_in, false, we,
+                     false, 0.0, &mut scratch.z);
+                let be = self.theta[be_off];
+                oe.extend(
+                    (0..n).map(|p| softplus(scratch.z[p] + be) as f32));
+            }
         }
-        out
+        (out, out_eps)
     }
 
     /// Scalar reference forward with spatial tangents — the
@@ -243,7 +367,16 @@ impl Mlp {
     /// is three `(n x nin) @ (nin x nout)` blocked GEMMs (value, x- and
     /// y-tangent) plus the fused bias + tanh + tangent-scaling
     /// epilogue; tapes land point-major in `ws` for the backward pass.
-    fn forward_block(&self, ws: &mut Workspace, pts: &[f64], n: usize) {
+    /// `with_eps` gates the eps head: the variational pass needs the
+    /// field at quadrature points, the boundary/sensor penalty passes
+    /// (which supervise u only) skip it.
+    fn forward_block(
+        &self,
+        ws: &mut Workspace,
+        pts: &[f64],
+        n: usize,
+        with_eps: bool,
+    ) {
         debug_assert!(pts.len() >= 2 * n && n <= ws.block_pts);
         let last = self.n_stages() - 1;
         for l in 0..=last {
@@ -307,28 +440,83 @@ impl Mlp {
                 }
             }
         }
+        if !with_eps {
+            return;
+        }
+        // eps head (two-head nets): value-only linear layer off the
+        // same last hidden activation, then the softplus positivity
+        // map. Tapes `eps_z` (pre-activation) and `epsv` (the field)
+        // feed the residual contraction and the backward pass.
+        if let Some((we_off, be_off)) = self.eps_head {
+            let nin = self.layers[last];
+            let we = &self.theta[we_off..we_off + nin];
+            let be = self.theta[be_off];
+            if last == 0 {
+                for p in 0..n {
+                    ws.eps_z[p] =
+                        pts[2 * p] * we[0] + pts[2 * p + 1] * we[1] + be;
+                }
+            } else {
+                let t = &ws.tapes[last - 1];
+                gemm(&mut ws.bufs, n, 1, nin, 1.0, &t.a, false, we,
+                     false, 0.0, &mut ws.eps_z);
+                for p in 0..n {
+                    ws.eps_z[p] += be;
+                }
+            }
+            for p in 0..n {
+                ws.epsv[p] = softplus(ws.eps_z[p]);
+            }
+        }
     }
 
     /// Tensorized reverse pass over a block of `n` points. Seeds (the
-    /// per-point adjoints of `u`, `du/dx`, `du/dy`) are read from
-    /// `ws.seed_u/seed_x/seed_y`; parameter gradients accumulate into
-    /// `grad` (flat `theta` layout). Per layer: three accumulating
+    /// per-point adjoints of `u`, `du/dx`, `du/dy` — plus `eps` via
+    /// `ws.seed_e` on two-head nets) are read from
+    /// `ws.seed_u/seed_x/seed_y/seed_e`; parameter gradients accumulate
+    /// into `grad` (flat `theta` layout). Per layer: three accumulating
     /// `A^T @ G` GEMMs for the weight gradients, column sums for the
     /// bias, three `G @ W^T` GEMMs for the pulled-back adjoints, and
-    /// the tanh adjoint against the forward tape.
+    /// the tanh adjoint against the forward tape. The eps head's
+    /// adjoint (softplus then its linear layer) is folded into the
+    /// trunk's value adjoint at the last hidden layer; `with_eps`
+    /// false (penalty passes — no eps adjoint exists) skips the head
+    /// entirely.
     fn backward_block(
         &self,
         ws: &mut Workspace,
         grad: &mut [f64],
         pts: &[f64],
         n: usize,
+        with_eps: bool,
     ) {
         debug_assert!(pts.len() >= 2 * n && n <= ws.block_pts);
         let last = self.n_stages() - 1;
+        let eps_head = if with_eps { self.eps_head } else { None };
         // output layer has width 1: adjoint matrices start as columns
         ws.ga[..n].copy_from_slice(&ws.seed_u[..n]);
         ws.gax[..n].copy_from_slice(&ws.seed_x[..n]);
         ws.gay[..n].copy_from_slice(&ws.seed_y[..n]);
+        // eps head: softplus adjoint (`gez = seed_e * sigmoid(z)`) then
+        // the head's linear layer. Its pulled-back value adjoint joins
+        // the u head's before the trunk walk below (at l == last).
+        if let Some((we_off, be_off)) = eps_head {
+            let nin = self.layers[last];
+            for p in 0..n {
+                ws.gez[p] = ws.seed_e[p] * sigmoid(ws.eps_z[p]);
+            }
+            grad[be_off] += ws.gez[..n].iter().sum::<f64>();
+            if last == 0 {
+                for p in 0..n {
+                    grad[we_off] += pts[2 * p] * ws.gez[p];
+                    grad[we_off + 1] += pts[2 * p + 1] * ws.gez[p];
+                }
+            } else {
+                let t = &ws.tapes[last - 1];
+                gemm(&mut ws.bufs, nin, 1, n, 1.0, &t.a, true, &ws.gez,
+                     false, 1.0, &mut grad[we_off..we_off + nin]);
+            }
+        }
         for l in (0..=last).rev() {
             let (nin, nout) = (self.layers[l], self.layers[l + 1]);
             let (w_off, b_off) = self.offsets[l];
@@ -372,6 +560,15 @@ impl Mlp {
             let w = &self.theta[w_off..w_off + nin * nout];
             gemm(&mut ws.bufs, n, nin, nout, 1.0, &ws.ga, false, w, true,
                  0.0, &mut ws.gb);
+            if l == last {
+                if let Some((we_off, _)) = eps_head {
+                    // merge the eps head's value adjoint into the
+                    // trunk's: gb += gez @ We^T
+                    let we = &self.theta[we_off..we_off + nin];
+                    gemm(&mut ws.bufs, n, nin, 1, 1.0, &ws.gez, false,
+                         we, true, 1.0, &mut ws.gb);
+                }
+            }
             gemm(&mut ws.bufs, n, nin, nout, 1.0, &ws.gax, false, w,
                  true, 0.0, &mut ws.gbx);
             gemm(&mut ws.bufs, n, nin, nout, 1.0, &ws.gay, false, w,
@@ -454,9 +651,15 @@ struct Workspace {
     seed_u: Vec<f64>, // per-point backward seeds
     seed_x: Vec<f64>,
     seed_y: Vec<f64>,
+    seed_e: Vec<f64>, // per-point eps field adjoint (two-head nets)
     cvals: Vec<f64>, // per-(element, j) pre-eps contraction
     resid: Vec<f64>, // per-(element, j) residual
     dq: Vec<f64>,    // per-point convection scratch b . grad u
+    eps_z: Vec<f64>, // eps head pre-activation tape
+    epsv: Vec<f64>,  // eps head field values softplus(eps_z)
+    gez: Vec<f64>,   // eps head pre-activation adjoint
+    uxs: Vec<f64>,   // eps-scaled tangents eps(x_q) * du/dx
+    uys: Vec<f64>,
     bufs: GemmBufs,
 }
 
@@ -490,9 +693,15 @@ impl Workspace {
             seed_u: vec![0.0; bp],
             seed_x: vec![0.0; bp],
             seed_y: vec![0.0; bp],
+            seed_e: vec![0.0; bp],
             cvals: vec![0.0; jrows.max(1)],
             resid: vec![0.0; jrows.max(1)],
             dq: vec![0.0; bp],
+            eps_z: vec![0.0; bp],
+            epsv: vec![0.0; bp],
+            gez: vec![0.0; bp],
+            uxs: vec![0.0; bp],
+            uys: vec![0.0; bp],
             bufs: GemmBufs::new(),
         }
     }
@@ -539,7 +748,9 @@ fn penalty_pass(
     while off < n_total {
         let n = bp.min(n_total - off);
         let pts = &pts_flat[2 * off..2 * (off + n)];
-        net.forward_block(ws, pts, n);
+        // penalties supervise u only: with_eps = false skips the eps
+        // head's forward and (zero-adjoint) backward entirely
+        net.forward_block(ws, pts, n, false);
         ws.seed_x[..n].fill(0.0);
         ws.seed_y[..n].fill(0.0);
         for k in 0..n {
@@ -547,7 +758,7 @@ fn penalty_pass(
             sq += d * d;
             ws.seed_u[k] = 2.0 * weight / n_total as f64 * d;
         }
-        net.backward_block(ws, grad, pts, n);
+        net.backward_block(ws, grad, pts, n, false);
         off += n;
     }
     sq
@@ -607,12 +818,20 @@ impl NativeBackend {
         ))?;
         ensure!(cfg.nb >= 4, "need at least 4 boundary samples");
         let trainable_eps = cfg.loss == NativeLoss::InverseConst;
+        let two_head = matches!(cfg.loss, NativeLoss::InverseSpace { .. });
         let (eps, bx, by) = match cfg.loss {
             NativeLoss::Forward { eps, bx, by } => (eps, bx, by),
             NativeLoss::InverseConst => (opts.eps_init, 0.0, 0.0),
+            // the eps *field* lives in the second network head; the
+            // scalar slot is unused on this path
+            NativeLoss::InverseSpace { bx, by } => (1.0, bx, by),
         };
 
-        let net = Mlp::glorot(&cfg.layers, opts.seed)?;
+        let net = if two_head {
+            Mlp::glorot_two_head(&cfg.layers, opts.seed)?
+        } else {
+            Mlp::glorot(&cfg.layers, opts.seed)?
+        };
         let n_opt = net.n_params() + usize::from(trainable_eps);
 
         let f_mat = dom.force_matrix(|x, y| src.problem.forcing(x, y));
@@ -624,9 +843,9 @@ impl NativeBackend {
         let bd_flat: Vec<f64> =
             bd_pts.iter().flat_map(|p| [p[0], p[1]]).collect();
 
-        let (sensor_flat, sensor_u) = if trainable_eps {
+        let (sensor_flat, sensor_u) = if trainable_eps || two_head {
             ensure!(cfg.ns > 0,
-                    "inverse_const needs ns > 0 sensor points");
+                    "{} needs ns > 0 sensor points", cfg.loss.kind());
             let pts = src.mesh.sample_interior(cfg.ns, opts.seed + 1);
             let vals: Vec<f64> = pts
                 .iter()
@@ -829,10 +1048,19 @@ impl NativeBackend {
     /// The per-chunk worker (runs on scoped threads): batched forward
     /// over element blocks, blocked residual contraction against the
     /// `G_x`/`G_y`/`V` slabs, then one batched reverse pass per block.
+    ///
+    /// For the two-head inverse-space loss, the eps *field* enters the
+    /// contraction per quadrature point — the tangents are scaled by
+    /// `eps(x_q)` before the `G_x`/`G_y` products, so the same blocked
+    /// GEMV path covers coefficient fields — and the backward seeds
+    /// split three ways: the field adjoint `seed_e` (pre-scaling) plus
+    /// the eps-scaled tangent adjoints `seed_x`/`seed_y`.
     fn element_chunk(&self, lo: usize, hi: usize, slot: &mut ThreadSlot) {
         let (nt, nq) = (self.nt, self.nq);
         let cr = 2.0 / (self.ne * nt) as f64;
         let conv = self.bx != 0.0 || self.by != 0.0;
+        let space =
+            matches!(self.cfg.loss, NativeLoss::InverseSpace { .. });
         let be = self.block_elems;
         let ThreadSlot { ws, partial } = slot;
         for blk in (lo..hi).step_by(be) {
@@ -840,24 +1068,36 @@ impl NativeBackend {
             let nbl = bhi - blk;
             let npts = nbl * nq;
             let pts = &self.quad_xy[2 * blk * nq..2 * bhi * nq];
-            self.net.forward_block(ws, pts, npts);
+            self.net.forward_block(ws, pts, npts, true);
             if conv {
                 for p in 0..npts {
                     ws.dq[p] = self.bx * ws.ux[p] + self.by * ws.uy[p];
                 }
             }
+            if space {
+                // fold the eps head into the tangents per point
+                for p in 0..npts {
+                    ws.uxs[p] = ws.epsv[p] * ws.ux[p];
+                    ws.uys[p] = ws.epsv[p] * ws.uy[p];
+                }
+            }
             // residual r[e,j] as blocked products per element:
-            // c = Gx @ ux + Gy @ uy, conv = V @ (b . grad u)
+            // c = Gx @ (eps? ux) + Gy @ (eps? uy), conv = V @ (b.grad u)
             for ei in 0..nbl {
                 let e = blk + ei;
                 let gbase = e * nt * nq;
                 let slab = gbase..gbase + nt * nq;
                 let pr = ei * nq..(ei + 1) * nq;
                 let jr = ei * nt..(ei + 1) * nt;
-                gemv(nt, nq, 1.0, &self.gx[slab.clone()], false,
-                     &ws.ux[pr.clone()], 0.0, &mut ws.cvals[jr.clone()]);
-                gemv(nt, nq, 1.0, &self.gy[slab.clone()], false,
-                     &ws.uy[pr.clone()], 1.0, &mut ws.cvals[jr.clone()]);
+                let (tx, ty): (&[f64], &[f64]) = if space {
+                    (&ws.uxs[pr.clone()], &ws.uys[pr.clone()])
+                } else {
+                    (&ws.ux[pr.clone()], &ws.uy[pr.clone()])
+                };
+                gemv(nt, nq, 1.0, &self.gx[slab.clone()], false, tx, 0.0,
+                     &mut ws.cvals[jr.clone()]);
+                gemv(nt, nq, 1.0, &self.gy[slab.clone()], false, ty, 1.0,
+                     &mut ws.cvals[jr.clone()]);
                 if conv {
                     gemv(nt, nq, 1.0, &self.vmat[slab], false,
                          &ws.dq[pr], 0.0, &mut ws.resid[jr.clone()]);
@@ -865,17 +1105,28 @@ impl NativeBackend {
                     ws.resid[jr.clone()].fill(0.0);
                 }
                 let fb = e * nt;
+                // the scalar eps multiplies the contraction on the
+                // fixed/const paths; on the space path it is already
+                // folded in per point (scale 1)
+                let escale = if space { 1.0 } else { self.eps };
                 for j in 0..nt {
                     let c = ws.cvals[ei * nt + j];
-                    let r = self.eps * c + ws.resid[ei * nt + j]
+                    let r = escale * c + ws.resid[ei * nt + j]
                         - self.f_mat[fb + j];
                     ws.resid[ei * nt + j] = r;
                     partial.var_sq += r * r;
-                    partial.geps += cr * r * c;
+                    // scalar-eps gradient; on the space path c is
+                    // already eps-folded, so the sum would be neither
+                    // meaningful nor used — skip it
+                    if !space {
+                        partial.geps += cr * r * c;
+                    }
                 }
             }
             // backward seeds: the residual adjoint pulled back to the
-            // per-point tangents, gux = (cr r)^T (eps Gx + bx V) etc.
+            // per-point tangents, gux = (cr r)^T (eps Gx + bx V) etc.;
+            // on the space path additionally the field adjoint
+            // geps_q = (cr r)^T (Gx ux + Gy uy) per quadrature point.
             ws.seed_u[..npts].fill(0.0);
             for ei in 0..nbl {
                 let e = blk + ei;
@@ -883,12 +1134,24 @@ impl NativeBackend {
                 let slab = gbase..gbase + nt * nq;
                 let jr = ei * nt..(ei + 1) * nt;
                 let pr = ei * nq..(ei + 1) * nq;
-                gemv(nt, nq, cr * self.eps, &self.gx[slab.clone()], true,
+                let escale = if space { 1.0 } else { self.eps };
+                gemv(nt, nq, cr * escale, &self.gx[slab.clone()], true,
                      &ws.resid[jr.clone()], 0.0,
                      &mut ws.seed_x[pr.clone()]);
-                gemv(nt, nq, cr * self.eps, &self.gy[slab.clone()], true,
+                gemv(nt, nq, cr * escale, &self.gy[slab.clone()], true,
                      &ws.resid[jr.clone()], 0.0,
                      &mut ws.seed_y[pr.clone()]);
+                if space {
+                    // seed_x/seed_y hold cr * Gx^T r / cr * Gy^T r:
+                    // combine into the field adjoint, then scale them
+                    // by eps(x_q) for the tangent pull-back
+                    for p in pr.clone() {
+                        ws.seed_e[p] = ws.seed_x[p] * ws.ux[p]
+                            + ws.seed_y[p] * ws.uy[p];
+                        ws.seed_x[p] *= ws.epsv[p];
+                        ws.seed_y[p] *= ws.epsv[p];
+                    }
+                }
                 if conv {
                     gemv(nt, nq, cr * self.bx, &self.vmat[slab.clone()],
                          true, &ws.resid[jr.clone()], 1.0,
@@ -897,7 +1160,8 @@ impl NativeBackend {
                          &ws.resid[jr], 1.0, &mut ws.seed_y[pr]);
                 }
             }
-            self.net.backward_block(ws, &mut partial.grad, pts, npts);
+            self.net.backward_block(ws, &mut partial.grad, pts, npts,
+                                    true);
         }
     }
 }
@@ -942,7 +1206,16 @@ impl Backend for NativeBackend {
     }
 
     fn predict(&self, points: &[[f64; 2]]) -> Result<Vec<Vec<f32>>> {
-        Ok(vec![self.net.eval(points)])
+        let (u, eps) = self.net.eval_heads(points);
+        Ok(match eps {
+            Some(e) => vec![u, e],
+            None => vec![u],
+        })
+    }
+
+    fn predict_eps_field(&self, points: &[[f64; 2]])
+        -> Result<Option<Vec<f32>>> {
+        Ok(self.net.eval_heads(points).1)
     }
 
     fn current_eps(&self) -> Option<f64> {
@@ -990,8 +1263,20 @@ mod tests {
         NativeBackend::new(&cfg, &src, &BackendOpts::default()).unwrap()
     }
 
+    /// `ln(1 + e^z)` on Dual2 with the same branch structure as the
+    /// scalar `softplus`, so reference and implementation agree to
+    /// roundoff.
+    fn softplus_dual(z: Dual2) -> Dual2 {
+        if z.v > 30.0 {
+            z
+        } else {
+            (z.exp() + Dual2::con(1.0)).ln()
+        }
+    }
+
     /// Reference loss with Dual2 parameters: recomputes the exact same
-    /// objective as `loss_and_grad`, but with parameter `k` as the
+    /// objective as `loss_and_grad` (all three loss families, incl. the
+    /// two-head inverse-space residual), but with parameter `k` as the
     /// active Dual2 variable, so `.d1` is the exact dLoss/dtheta_k.
     fn loss_dual(b: &NativeBackend, k: usize) -> Dual2 {
         let theta = b.params_flat();
@@ -1003,14 +1288,17 @@ mod tests {
             }
         };
         let n_net = b.net.n_params();
+        let space =
+            matches!(b.cfg.loss, NativeLoss::InverseSpace { .. });
         let eps_d = if b.trainable_eps() {
             p(n_net)
         } else {
             Dual2::con(b.eps)
         };
         let wmax = b.net.max_width();
-        // forward with tangent-carrying Dual2 arithmetic
-        let fwd = |x: f64, y: f64| -> (Dual2, Dual2, Dual2) {
+        // forward with tangent-carrying Dual2 arithmetic; the last
+        // hidden activation feeds both heads
+        let fwd = |x: f64, y: f64| -> (Dual2, Dual2, Dual2, Dual2) {
             let zero = Dual2::con(0.0);
             let mut a = vec![zero; wmax];
             let mut ax = vec![zero; wmax];
@@ -1020,8 +1308,8 @@ mod tests {
             ax[0] = Dual2::con(1.0);
             ay[1] = Dual2::con(1.0);
             let last = b.net.n_stages() - 1;
-            for (l, win) in b.net.layers.windows(2).enumerate() {
-                let (nin, nout) = (win[0], win[1]);
+            for l in 0..last {
+                let (nin, nout) = (b.net.layers[l], b.net.layers[l + 1]);
                 let (w_off, b_off) = b.net.offsets[l];
                 let mut na = vec![zero; wmax];
                 let mut nax = vec![zero; wmax];
@@ -1036,23 +1324,38 @@ mod tests {
                         zx = zx + ax[i] * w;
                         zy = zy + ay[i] * w;
                     }
-                    if l < last {
-                        let t = z.tanh();
-                        let s = Dual2::con(1.0) - t * t;
-                        na[j] = t;
-                        nax[j] = s * zx;
-                        nay[j] = s * zy;
-                    } else {
-                        na[j] = z;
-                        nax[j] = zx;
-                        nay[j] = zy;
-                    }
+                    let t = z.tanh();
+                    let s = Dual2::con(1.0) - t * t;
+                    na[j] = t;
+                    nax[j] = s * zx;
+                    nay[j] = s * zy;
                 }
                 a = na;
                 ax = nax;
                 ay = nay;
             }
-            (a[0], ax[0], ay[0])
+            let nin = b.net.layers[last];
+            let (w_off, b_off) = b.net.offsets[last];
+            let mut u = p(b_off);
+            let mut ux = zero;
+            let mut uy = zero;
+            for i in 0..nin {
+                let w = p(w_off + i);
+                u = u + a[i] * w;
+                ux = ux + ax[i] * w;
+                uy = uy + ay[i] * w;
+            }
+            let eps = match b.net.eps_head {
+                Some((we_off, be_off)) => {
+                    let mut z = p(be_off);
+                    for i in 0..nin {
+                        z = z + a[i] * p(we_off + i);
+                    }
+                    softplus_dual(z)
+                }
+                None => zero,
+            };
+            (u, ux, uy, eps)
         };
 
         let (ne, nt, nq) = (b.ne, b.nt, b.nq);
@@ -1060,23 +1363,27 @@ mod tests {
         for e in 0..ne {
             let mut ux = Vec::with_capacity(nq);
             let mut uy = Vec::with_capacity(nq);
+            let mut epsq = Vec::with_capacity(nq);
             for q in 0..nq {
                 let x = b.quad_xy[2 * (e * nq + q)];
                 let y = b.quad_xy[2 * (e * nq + q) + 1];
-                let (_, dx, dy) = fwd(x, y);
+                let (_, dx, dy, ep) = fwd(x, y);
                 ux.push(dx);
                 uy.push(dy);
+                epsq.push(ep);
             }
             for j in 0..nt {
                 let base = (e * nt + j) * nq;
                 let mut c = Dual2::con(0.0);
                 let mut conv = Dual2::con(0.0);
                 for q in 0..nq {
-                    c = c + ux[q] * b.gx[base + q] + uy[q] * b.gy[base + q];
+                    let g = ux[q] * b.gx[base + q] + uy[q] * b.gy[base + q];
+                    c = c + if space { epsq[q] * g } else { g };
                     conv = conv
                         + (ux[q] * b.bx + uy[q] * b.by) * b.vmat[base + q];
                 }
-                let r = eps_d * c + conv - Dual2::con(b.f_mat[e * nt + j]);
+                let ec = if space { c } else { eps_d * c };
+                let r = ec + conv - Dual2::con(b.f_mat[e * nt + j]);
                 var = var + r * r;
             }
         }
@@ -1084,7 +1391,7 @@ mod tests {
 
         let mut bd = Dual2::con(0.0);
         for (i, pt) in b.bd_flat.chunks_exact(2).enumerate() {
-            let (u, _, _) = fwd(pt[0], pt[1]);
+            let (u, _, _, _) = fwd(pt[0], pt[1]);
             let d = u - Dual2::con(b.bd_u[i]);
             bd = bd + d * d;
         }
@@ -1093,7 +1400,7 @@ mod tests {
         let mut sens = Dual2::con(0.0);
         if !b.sensor_u.is_empty() {
             for (i, pt) in b.sensor_flat.chunks_exact(2).enumerate() {
-                let (u, _, _) = fwd(pt[0], pt[1]);
+                let (u, _, _, _) = fwd(pt[0], pt[1]);
                 let d = u - Dual2::con(b.sensor_u[i]);
                 sens = sens + d * d;
             }
@@ -1139,6 +1446,169 @@ mod tests {
     fn backprop_matches_dual2_inverse_eps() {
         let mut b = tiny_backend(NativeLoss::InverseConst, 4);
         check_grad(&mut b, 1e-10);
+    }
+
+    #[test]
+    fn backprop_matches_dual2_inverse_space() {
+        // full two-head step: trunk, u head, eps head, sensor term
+        let mut b = tiny_backend(
+            NativeLoss::InverseSpace { bx: 1.0, by: 0.0 }, 4);
+        assert!(b.net.two_head());
+        check_grad(&mut b, 1e-10);
+    }
+
+    #[test]
+    fn backprop_matches_dual2_inverse_space_no_convection() {
+        let mut b = tiny_backend(
+            NativeLoss::InverseSpace { bx: 0.0, by: 0.0 }, 5);
+        check_grad(&mut b, 1e-10);
+    }
+
+    #[test]
+    fn backprop_matches_dual2_inverse_space_ragged_blocks() {
+        // block_elems = 1 on a 4-element mesh forces multiple blocks
+        // per chunk; nb = 25 > block_pts forces chunked penalty blocks
+        // with the eps head seeds zeroed per block.
+        let mesh = generators::unit_square(2);
+        let dom = assembly::assemble(&mesh, 2, 3, QuadKind::GaussLegendre);
+        let problem = PoissonSin::new(std::f64::consts::PI);
+        let src = DataSource {
+            mesh: &mesh,
+            domain: Some(&dom),
+            problem: &problem,
+            sensor_values: None,
+        };
+        let cfg = NativeConfig {
+            layers: vec![2, 4, 1],
+            loss: NativeLoss::InverseSpace { bx: 0.3, by: -0.2 },
+            nb: 25,
+            ns: 6,
+        };
+        let mut b =
+            NativeBackend::new(&cfg, &src, &BackendOpts::default())
+                .unwrap();
+        b.set_block_elems(1);
+        check_grad(&mut b, 1e-10);
+    }
+
+    #[test]
+    fn backprop_matches_dual2_inverse_space_one_wide_heads() {
+        // 1-wide last hidden layer: both heads read a width-1 trunk
+        let mesh = generators::unit_square(1);
+        let dom = assembly::assemble(&mesh, 2, 3, QuadKind::GaussLegendre);
+        let problem = PoissonSin::new(std::f64::consts::PI);
+        let src = DataSource {
+            mesh: &mesh,
+            domain: Some(&dom),
+            problem: &problem,
+            sensor_values: None,
+        };
+        let cfg = NativeConfig {
+            layers: vec![2, 1, 1],
+            loss: NativeLoss::InverseSpace { bx: 0.1, by: -0.4 },
+            nb: 8,
+            ns: 3,
+        };
+        let mut b =
+            NativeBackend::new(&cfg, &src, &BackendOpts::default())
+                .unwrap();
+        check_grad(&mut b, 1e-10);
+    }
+
+    #[test]
+    fn backprop_matches_dual2_inverse_space_trunkless() {
+        // layers [2, 1]: both heads read the raw (x, y) input — the
+        // degenerate l == 0 branch of the head adjoints
+        let mesh = generators::unit_square(1);
+        let dom = assembly::assemble(&mesh, 2, 3, QuadKind::GaussLegendre);
+        let problem = PoissonSin::new(std::f64::consts::PI);
+        let src = DataSource {
+            mesh: &mesh,
+            domain: Some(&dom),
+            problem: &problem,
+            sensor_values: None,
+        };
+        let cfg = NativeConfig {
+            layers: vec![2, 1],
+            loss: NativeLoss::InverseSpace { bx: 1.0, by: 0.5 },
+            nb: 8,
+            ns: 3,
+        };
+        let mut b =
+            NativeBackend::new(&cfg, &src, &BackendOpts::default())
+                .unwrap();
+        check_grad(&mut b, 1e-10);
+    }
+
+    #[test]
+    fn inverse_space_block_size_invariance() {
+        let mk = || {
+            tiny_backend_nb(
+                NativeLoss::InverseSpace { bx: 1.0, by: 0.0 }, 4, 25)
+        };
+        let mut b1 = mk();
+        let mut b2 = mk();
+        b2.set_block_elems(1);
+        let (s1, g1) = b1.loss_and_grad().unwrap();
+        let (s2, g2) = b2.loss_and_grad().unwrap();
+        assert!((s1.loss - s2.loss).abs() < 1e-12 * (1.0 + s1.loss.abs()));
+        for (a, b) in g1.iter().zip(&g2) {
+            assert!((a - b).abs() < 1e-11 * (1.0 + a.abs()),
+                    "grad mismatch across block sizes: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn thread_slots_are_reused_across_steps() {
+        // the hot path must not reallocate: every per-thread workspace
+        // and partial-gradient buffer keeps its address across steps
+        let mut b = tiny_backend(
+            NativeLoss::InverseSpace { bx: 1.0, by: 0.0 }, 4);
+        let ptrs: Vec<(*const f64, *const f64, *const f64)> = b
+            .slots
+            .iter()
+            .map(|s| (s.ws.u.as_ptr(), s.ws.epsv.as_ptr(),
+                      s.partial.grad.as_ptr()))
+            .collect();
+        let caps: Vec<usize> =
+            b.slots.iter().map(|s| s.ws.gez.capacity()).collect();
+        for i in 1..=5 {
+            b.step(i, 1e-3).unwrap();
+        }
+        for (slot, (pu, pe, pg)) in b.slots.iter().zip(&ptrs) {
+            assert_eq!(slot.ws.u.as_ptr(), *pu, "workspace reallocated");
+            assert_eq!(slot.ws.epsv.as_ptr(), *pe,
+                       "eps buffers reallocated");
+            assert_eq!(slot.partial.grad.as_ptr(), *pg,
+                       "partial grad reallocated");
+        }
+        for (slot, c) in b.slots.iter().zip(&caps) {
+            assert_eq!(slot.ws.gez.capacity(), *c);
+        }
+    }
+
+    #[test]
+    fn eval_heads_matches_training_tape() {
+        // the prediction-path eps head must agree with the training
+        // forward block's epsv tape
+        let mlp = Mlp::glorot_two_head(&[2, 6, 4, 1], 11).unwrap();
+        let n = 9;
+        let mut ws = Workspace::new(&mlp, n, 1);
+        let mut rng = Rng::new(5);
+        let pts: Vec<f64> =
+            (0..2 * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        mlp.forward_block(&mut ws, &pts, n, true);
+        let pt_arr: Vec<[f64; 2]> =
+            pts.chunks_exact(2).map(|c| [c[0], c[1]]).collect();
+        let (u, eps) = mlp.eval_heads(&pt_arr);
+        let eps = eps.expect("two-head net must report an eps field");
+        for p in 0..n {
+            assert!((u[p] as f64 - ws.u[p]).abs() < 1e-6);
+            assert!((eps[p] as f64 - ws.epsv[p]).abs() < 1e-6,
+                    "eps head mismatch at {p}: {} vs {}", eps[p],
+                    ws.epsv[p]);
+            assert!(eps[p] > 0.0, "softplus must keep eps positive");
+        }
     }
 
     #[test]
@@ -1224,7 +1694,7 @@ mod tests {
             let mut rng = Rng::new(3);
             let pts: Vec<f64> =
                 (0..2 * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
-            mlp.forward_block(&mut ws, &pts, n);
+            mlp.forward_block(&mut ws, &pts, n, true);
             for p in 0..n {
                 let (u, ux, uy) = mlp
                     .forward_point_reference(pts[2 * p], pts[2 * p + 1]);

@@ -46,9 +46,82 @@ pub fn check_result<T: std::fmt::Debug>(
     }
 }
 
+/// Shared random-geometry generators for the mesh/FEM property tests,
+/// so `fem::bilinear` and `mesh::gmsh` draw inputs from one vocabulary.
+pub mod geom {
+    use crate::util::rng::Rng;
+
+    /// A randomized convex CCW quadrilateral: unit-square corners
+    /// jittered by up to `amp`, re-drawn until strictly convex (all
+    /// four corner cross products positive). `amp <= 0.25` converges
+    /// in a couple of draws.
+    pub fn convex_quad(r: &mut Rng, amp: f64) -> [[f64; 2]; 4] {
+        loop {
+            let mut q = [[0.0, 0.0], [1.0, 0.0], [1.0, 1.0], [0.0, 1.0]];
+            for v in &mut q {
+                v[0] += r.uniform_in(-amp, amp);
+                v[1] += r.uniform_in(-amp, amp);
+            }
+            if is_strictly_convex(&q) {
+                return q;
+            }
+        }
+    }
+
+    /// A randomized non-degenerate CCW parallelogram (an *affine*
+    /// bilinear map: p2 = p1 + p3 - p0).
+    pub fn parallelogram(r: &mut Rng) -> [[f64; 2]; 4] {
+        loop {
+            let p0 = [r.uniform_in(-1.0, 1.0), r.uniform_in(-1.0, 1.0)];
+            let e1 = [r.uniform_in(0.2, 2.0), r.uniform_in(-0.5, 0.5)];
+            let e2 = [r.uniform_in(-0.5, 0.5), r.uniform_in(0.2, 2.0)];
+            let cross = e1[0] * e2[1] - e1[1] * e2[0];
+            if cross > 0.05 {
+                return [
+                    p0,
+                    [p0[0] + e1[0], p0[1] + e1[1]],
+                    [p0[0] + e1[0] + e2[0], p0[1] + e1[1] + e2[1]],
+                    [p0[0] + e2[0], p0[1] + e2[1]],
+                ];
+            }
+        }
+    }
+
+    fn is_strictly_convex(q: &[[f64; 2]; 4]) -> bool {
+        (0..4).all(|i| {
+            let a = q[i];
+            let b = q[(i + 1) % 4];
+            let c = q[(i + 2) % 4];
+            (b[0] - a[0]) * (c[1] - b[1]) - (b[1] - a[1]) * (c[0] - b[0])
+                > 1e-3
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn generated_quads_satisfy_their_invariants() {
+        check(7, 200, |r| geom::convex_quad(r, 0.25), |q| {
+            // CCW shoelace area positive
+            let a2: f64 = (0..4)
+                .map(|i| {
+                    let p = q[i];
+                    let n = q[(i + 1) % 4];
+                    p[0] * n[1] - n[0] * p[1]
+                })
+                .sum();
+            a2 > 0.0
+        });
+        check(8, 200, |r| geom::parallelogram(r), |q| {
+            // opposite edges equal: p2 - p1 == p3 - p0
+            ((q[2][0] - q[1][0]) - (q[3][0] - q[0][0])).abs() < 1e-12
+                && ((q[2][1] - q[1][1]) - (q[3][1] - q[0][1])).abs()
+                    < 1e-12
+        });
+    }
 
     #[test]
     fn passes_trivial_property() {

@@ -1,7 +1,10 @@
 //! End-to-end tests of the native pure-Rust backend: training smoke
 //! (loss must drop >= 10x in 500 iters), FEM cross-validation of the
-//! trained network, inverse-eps recovery, and backend/coordinator
-//! integration. No artifacts, no XLA — these run on every `cargo test`.
+//! trained network, the inverse tier (scalar-eps recovery to paper
+//! accuracy and the two-head eps-field smoke — `#[ignore]`d in the
+//! debug-mode default suite; the CI inverse-tier job runs them in
+//! release via the filter `inverse` + `--include-ignored`), and
+//! backend/coordinator integration. No artifacts, no XLA.
 
 use fastvpinns::coordinator::metrics::{eval_grid, ErrorNorms};
 use fastvpinns::coordinator::schedule::LrSchedule;
@@ -10,7 +13,9 @@ use fastvpinns::fem::assembly;
 use fastvpinns::fem::quadrature::QuadKind;
 use fastvpinns::fem_solver::{self, FemProblem};
 use fastvpinns::mesh::generators;
-use fastvpinns::problems::{InverseConstPoisson, PoissonSin, Problem};
+use fastvpinns::problems::{
+    InverseConstPoisson, InverseSpaceSin, PoissonSin, Problem,
+};
 use fastvpinns::runtime::backend::native::{
     NativeBackend, NativeConfig, NativeLoss,
 };
@@ -171,6 +176,107 @@ fn native_inverse_eps_moves_toward_target() {
     assert!(report.final_loss.is_finite());
     assert!((eps - 2.0).abs() > 0.05, "eps stuck at {eps}");
     assert!(eps < 2.0, "eps should decrease toward 0.3, got {eps}");
+}
+
+#[test]
+#[ignore = "release inverse tier (CI: --include-ignored); slow in debug"]
+fn inverse_const_recovers_eps_to_paper_accuracy() {
+    // Paper SS4.7.1 at CI scale: starting from eps = 2.0, the scalar
+    // diffusion coefficient must recover eps_actual = 0.3 to within
+    // 1e-2 inside a bounded iteration budget (numpy transliteration:
+    // first |eps - 0.3| < 1e-2 hit between ~230 and ~1700 iters across
+    // seeds; 4000 gives >2x headroom). Early-stops once well inside.
+    let problem = InverseConstPoisson::new();
+    let mesh = generators::rect_grid(2, 2, -1.0, -1.0, 1.0, 1.0);
+    let dom = assembly::assemble(&mesh, 3, 10, QuadKind::GaussLegendre);
+    let src = DataSource { mesh: &mesh, domain: Some(&dom),
+                           problem: &problem, sensor_values: None };
+    let cfg = TrainConfig {
+        iters: 4000,
+        lr: LrSchedule::Constant(5e-3),
+        eps_init: 2.0,
+        eps_converge: Some((0.3, 5e-3)),
+        log_every: 200,
+        ..TrainConfig::default()
+    };
+    let ncfg = NativeConfig {
+        layers: vec![2, 16, 16, 1],
+        loss: NativeLoss::InverseConst,
+        nb: 80,
+        ns: 20,
+    };
+    let backend =
+        NativeBackend::new(&ncfg, &src, &BackendOpts::from(&cfg)).unwrap();
+    let mut t = Trainer::new(Box::new(backend), &cfg);
+    let report = t.run().unwrap();
+    let eps = report.eps_final.unwrap();
+    assert!(
+        (eps - 0.3).abs() < 1e-2,
+        "eps = {eps} after {} iters (converged_early = {}): \
+         |eps - 0.3| >= 1e-2",
+        report.steps, report.converged_early
+    );
+}
+
+#[test]
+#[ignore = "release inverse tier (CI: --include-ignored); slow in debug"]
+fn inverse_space_smoke_recovers_eps_field_2x() {
+    // Two-head inverse-space smoke on a 4-element mesh: training must
+    // reduce ||eps - eps*||_L2 on an interior grid by >= 2x from the
+    // softplus init (numpy transliteration reaches 4-13x at this
+    // budget across seeds; 2x is the floor).
+    let problem = InverseSpaceSin;
+    let mesh = generators::unit_square(2);
+    let dom = assembly::assemble(&mesh, 3, 8, QuadKind::GaussLegendre);
+    let src = DataSource { mesh: &mesh, domain: Some(&dom),
+                           problem: &problem, sensor_values: None };
+    let cfg = TrainConfig {
+        iters: 2000,
+        lr: LrSchedule::Constant(5e-3),
+        log_every: 200,
+        ..TrainConfig::default()
+    };
+    let (bx, by) = problem.b();
+    let ncfg = NativeConfig {
+        layers: vec![2, 16, 16, 1],
+        loss: NativeLoss::InverseSpace { bx, by },
+        nb: 80,
+        ns: 60,
+    };
+    let backend =
+        NativeBackend::new(&ncfg, &src, &BackendOpts::from(&cfg)).unwrap();
+    let mut t = Trainer::new(Box::new(backend), &cfg);
+
+    let grid = eval_grid(30, 30, 0.02, 0.02, 0.98, 0.98);
+    let eps_exact: Vec<f64> = grid
+        .iter()
+        .map(|p| InverseSpaceSin::eps_actual(p[0], p[1]))
+        .collect();
+    let eps_l2 = |t: &Trainer| -> f64 {
+        let pred = t.predict_eps_field(&grid).unwrap();
+        let sq: f64 = pred
+            .iter()
+            .zip(&eps_exact)
+            .map(|(&p, &r)| (p as f64 - r) * (p as f64 - r))
+            .sum();
+        (sq / grid.len() as f64).sqrt()
+    };
+    let e0 = eps_l2(&t);
+    let report = t.run().unwrap();
+    let e1 = eps_l2(&t);
+    assert!(report.final_loss.is_finite());
+    assert!(
+        2.0 * e1 <= e0,
+        "||eps - eps*|| {e0:.4} -> {e1:.4}: less than 2x reduction in \
+         {} iters", report.steps
+    );
+    // and u itself must have learned something
+    let exact: Vec<f64> = grid
+        .iter()
+        .map(|p| problem.exact(p[0], p[1]).unwrap())
+        .collect();
+    let err = t.evaluate(&grid, &exact).unwrap();
+    assert!(err.rel_l2 < 0.2, "u rel-L2 {} after training", err.rel_l2);
 }
 
 #[test]
