@@ -23,7 +23,8 @@ fn main() -> anyhow::Result<()> {
         let mesh = generators::unit_square(n);
         let sol = fem_solver::solve(&mesh, &FemProblem {
             eps: &|_, _| 1.0,
-            b: (0.0, 0.0),
+            b: None,
+            c: None,
             f: &f,
             g: &|_, _| 0.0,
         }, 3)?;

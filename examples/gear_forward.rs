@@ -12,9 +12,9 @@ use fastvpinns::coordinator::schedule::LrSchedule;
 use fastvpinns::coordinator::trainer::{DataSource, TrainConfig, Trainer};
 use fastvpinns::fem::assembly;
 use fastvpinns::fem::quadrature::QuadKind;
-use fastvpinns::fem_solver::{self, FemProblem};
+use fastvpinns::fem_solver;
 use fastvpinns::mesh::{generators, quality};
-use fastvpinns::problems::{GearCd, Problem};
+use fastvpinns::problems::GearCd;
 use fastvpinns::runtime::backend::native::{
     NativeBackend, NativeConfig, NativeLoss,
 };
@@ -33,13 +33,9 @@ fn main() -> anyhow::Result<()> {
     println!("gear mesh: {} cells, min |J| {:.2e}, worst in-cell \
               Jacobian ratio {:.2}", q.n_cells, q.min_jac, q.worst_ratio);
 
-    // 2. FEM reference (our ParMooN stand-in)
-    let fem = fem_solver::solve(&mesh, &FemProblem {
-        eps: &|_, _| 1.0,
-        b: problem.b(),
-        f: &|x, y| problem.forcing(x, y),
-        g: &|x, y| problem.boundary(x, y),
-    }, 3)?;
+    // 2. FEM reference (our ParMooN stand-in), driven by the same
+    //    Problem trait object as the training run
+    let fem = fem_solver::solve_problem(&mesh, &problem, 3)?;
     println!("FEM reference: {} iterations, {:.2}s",
              fem.solve_iterations, fem.solve_seconds);
 
@@ -55,10 +51,9 @@ fn main() -> anyhow::Result<()> {
         log_every: 50,
         ..TrainConfig::default()
     };
-    let (bx, by) = problem.b();
     let ncfg = NativeConfig {
         layers: vec![2, 50, 50, 50, 1],
-        loss: NativeLoss::Forward { eps: problem.eps(), bx, by },
+        loss: NativeLoss::Forward,
         nb: 400,
         ns: 0,
     };

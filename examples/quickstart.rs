@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
         log_every: 100,
         ..TrainConfig::default()
     };
-    let backend = NativeBackend::new(&NativeConfig::poisson_std(), &src,
+    let backend = NativeBackend::new(&NativeConfig::forward_std(), &src,
                                      &BackendOpts::from(&cfg))?;
     let mut trainer = Trainer::new(Box::new(backend), &cfg);
     let report = trainer.run()?;

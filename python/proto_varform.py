@@ -1,0 +1,393 @@
+"""Numpy prototype of the generalized variational-form native step.
+
+Validation harness for the VariationalForm refactor in
+rust/src/runtime/backend/{form.rs,native.rs} (no rust toolchain in the
+dev container). It transliterates the generalized residual
+
+    r[e,j] = sum_q eps_q (Gx ux + Gy uy) + sum_q V (b_q . grad u + c_q u) - F
+
+and its hand-written adjoints — per-point eps/b/c tables, constant fast
+path, the reaction seed (seed_u = c_q V^T r), the trainable-scalar mode
+and the two-head eps-field mode — and checks every parameter gradient
+against complex-step differentiation at machine precision. It then
+sizes the budgets asserted by the new helmholtz/cd_var e2e tests and
+the `train --problem helmholtz` acceptance run.
+
+Run:  python3 python/proto_varform.py          # gradchecks + e2e budgets
+      python3 python/proto_varform.py --accept # + CLI-scale acceptance
+"""
+import sys
+import time
+import numpy as np
+
+sys.path.insert(0, "python/compile")
+from fem_py import mesh as pmesh, assembly  # noqa: E402
+
+from proto_two_head import (  # noqa: E402
+    TwoHeadNet, boundary_square, complex_step_grad, sigmoid,
+)
+
+
+# ---------------------------------------------------------------------
+# Generalized objective: eps/b/c as per-point tables or constants
+# ---------------------------------------------------------------------
+class FormObjective:
+    """loss = var + tau*bd + gamma*sensor with a VariationalForm.
+
+    eps/bx/by/c are each either a float (constant fast path) or an
+    (ne*nq,) table. mode: "forward" | "const" | "space".
+    """
+
+    def __init__(self, dom, fmat, bd_pts, bd_u, s_pts, s_u,
+                 eps=1.0, bx=0.0, by=0.0, c=0.0,
+                 tau=10.0, gamma=10.0, mode="forward", eps_const=None):
+        self.dom, self.fmat = dom, fmat
+        self.bd_pts, self.bd_u = bd_pts, bd_u
+        self.s_pts, self.s_u = s_pts, s_u
+        self.eps, self.bx, self.by, self.c = eps, bx, by, c
+        self.tau, self.gamma = tau, gamma
+        self.mode = mode
+        self.eps_const = eps_const
+
+    def _tab(self, v):
+        """Coefficient as an (ne, nq) array regardless of class."""
+        ne, nq = self.dom.n_elem, self.dom.n_quad
+        if np.isscalar(v):
+            return np.full((ne, nq), v)
+        return np.asarray(v).reshape(ne, nq)
+
+    def _conv_reac(self):
+        conv = (not np.isscalar(self.bx) or self.bx != 0.0
+                or not np.isscalar(self.by) or self.by != 0.0)
+        reac = not np.isscalar(self.c) or self.c != 0.0
+        return conv, reac
+
+    def loss(self, net, eps_const=None):
+        """Pure forward loss (complex-safe) for gradchecking."""
+        dom = self.dom
+        ne, nt, nq = dom.n_elem, dom.n_test, dom.n_quad
+        u, ux, uy, eps_h, _ = net.forward(dom.quad_xy)
+        ue = u.reshape(ne, nq)
+        uxe = ux.reshape(ne, nq)
+        uye = uy.reshape(ne, nq)
+        if self.mode == "space":
+            epse = eps_h.reshape(ne, nq)
+        elif self.mode == "const":
+            ec = self.eps_const if eps_const is None else eps_const
+            epse = np.full((ne, nq), ec)
+        else:
+            epse = self._tab(self.eps)
+        r = (np.einsum("ejq,eq->ej", dom.gx, epse * uxe)
+             + np.einsum("ejq,eq->ej", dom.gy, epse * uye)
+             - self.fmat)
+        conv, reac = self._conv_reac()
+        if conv or reac:
+            vq = 0.0
+            if conv:
+                vq = self._tab(self.bx) * uxe + self._tab(self.by) * uye
+            if reac:
+                vq = vq + self._tab(self.c) * ue
+            r = r + np.einsum("ejq,eq->ej", dom.v, vq)
+        var = (r * r).sum() / (ne * nt)
+        ub, _, _, _, _ = net.forward(self.bd_pts)
+        bd = ((ub - self.bd_u) ** 2).sum() / len(self.bd_u)
+        total = var + self.tau * bd
+        if len(self.s_u):
+            us, _, _, _, _ = net.forward(self.s_pts)
+            total = total + self.gamma * (
+                (us - self.s_u) ** 2).sum() / len(self.s_u)
+        return total
+
+    def loss_and_grad(self, net):
+        """Hand-written adjoints — the Rust transliteration."""
+        dom = self.dom
+        ne, nt, nq = dom.n_elem, dom.n_test, dom.n_quad
+        cr = 2.0 / (ne * nt)
+        grads = [[np.zeros_like(w), np.zeros_like(b)]
+                 for w, b in net.params]
+        u, ux, uy, eps_h, cache = net.forward(dom.quad_xy)
+        ue = u.reshape(ne, nq)
+        uxe = ux.reshape(ne, nq)
+        uye = uy.reshape(ne, nq)
+        space = self.mode == "space"
+        if space:
+            epse = eps_h.reshape(ne, nq)
+        elif self.mode == "const":
+            epse = np.full((ne, nq), self.eps_const)
+        else:
+            epse = self._tab(self.eps)
+        cv_pre = (np.einsum("ejq,eq->ej", dom.gx, uxe)
+                  + np.einsum("ejq,eq->ej", dom.gy, uye))
+        r = (np.einsum("ejq,eq->ej", dom.gx, epse * uxe)
+             + np.einsum("ejq,eq->ej", dom.gy, epse * uye)
+             - self.fmat)
+        conv, reac = self._conv_reac()
+        if conv or reac:
+            vq = 0.0
+            if conv:
+                vq = self._tab(self.bx) * uxe + self._tab(self.by) * uye
+            if reac:
+                vq = vq + self._tab(self.c) * ue
+            r = r + np.einsum("ejq,eq->ej", dom.v, vq)
+        var = (r * r).sum() / (ne * nt)
+        # seeds (the Rust block_seeds transliteration)
+        tgx = cr * np.einsum("ejq,ej->eq", dom.gx, r)
+        tgy = cr * np.einsum("ejq,ej->eq", dom.gy, r)
+        ge = (tgx * uxe + tgy * uye).ravel() if space else None
+        sx = epse * tgx
+        sy = epse * tgy
+        su = np.zeros((ne, nq))
+        geps_const = 0.0
+        if self.mode == "const":
+            geps_const = cr * (r * cv_pre).sum()
+        if conv or reac:
+            tv = cr * np.einsum("ejq,ej->eq", dom.v, r)
+            if conv:
+                sx = sx + self._tab(self.bx) * tv
+                sy = sy + self._tab(self.by) * tv
+            if reac:
+                su = self._tab(self.c) * tv
+        net.backward(dom.quad_xy, cache, su.ravel(), sx.ravel(),
+                     sy.ravel(), ge, grads)
+        # boundary
+        ub, _, _, _, cb = net.forward(self.bd_pts)
+        nb = len(self.bd_u)
+        d = ub - self.bd_u
+        bd = (d * d).sum() / nb
+        net.backward(self.bd_pts, cb, 2.0 * self.tau / nb * d,
+                     np.zeros(nb), np.zeros(nb),
+                     np.zeros(nb) if net.two_head else None, grads)
+        total = var + self.tau * bd
+        sens = 0.0
+        if len(self.s_u):
+            us, _, _, _, cs = net.forward(self.s_pts)
+            ns = len(self.s_u)
+            d = us - self.s_u
+            sens = (d * d).sum() / ns
+            net.backward(self.s_pts, cs, 2.0 * self.gamma / ns * d,
+                         np.zeros(ns), np.zeros(ns),
+                         np.zeros(ns) if net.two_head else None, grads)
+            total = total + self.gamma * sens
+        flat = np.concatenate([np.concatenate([gw.ravel(), gb])
+                               for gw, gb in grads])
+        return total, flat, geps_const, (var, bd, sens)
+
+
+# ---------------------------------------------------------------------
+# Problems
+# ---------------------------------------------------------------------
+def helmholtz_exact(k):
+    return lambda x, y: np.sin(k * x) * np.sin(k * y)
+
+
+def build_helmholtz(k, n=2, nt1d=3, nq1d=8, nb=80):
+    pts, cells = pmesh.unit_square(n)
+    dom = assembly.assemble(pts, cells, nt1d, nq1d)
+    u = helmholtz_exact(k)
+    x = dom.quad_xy[:, 0].reshape(dom.n_elem, dom.n_quad)
+    y = dom.quad_xy[:, 1].reshape(dom.n_elem, dom.n_quad)
+    # f = -lap u - k^2 u = (2k^2 - k^2) u = k^2 u
+    fmat = np.einsum("ejq,eq->ej", dom.v, k * k * u(x, y))
+    bd = boundary_square(nb)
+    bd_u = u(bd[:, 0], bd[:, 1])
+    return FormObjective(dom, fmat, bd, bd_u, np.zeros((0, 2)),
+                         np.zeros(0), eps=1.0, c=-k * k), u
+
+
+def cd_var_b(x, y, omr=2.0):
+    return omr * (y - 0.5), omr * (0.5 - x)
+
+
+def build_cd_var(n=2, nt1d=3, nq1d=8, nb=80):
+    pts, cells = pmesh.unit_square(n)
+    dom = assembly.assemble(pts, cells, nt1d, nq1d)
+
+    def u(x, y):
+        return np.sin(np.pi * x) * np.sin(np.pi * y)
+
+    x = dom.quad_xy[:, 0].reshape(dom.n_elem, dom.n_quad)
+    y = dom.quad_xy[:, 1].reshape(dom.n_elem, dom.n_quad)
+    bx, by = cd_var_b(x, y)
+    ux = np.pi * np.cos(np.pi * x) * np.sin(np.pi * y)
+    uy = np.pi * np.sin(np.pi * x) * np.cos(np.pi * y)
+    lap = -2.0 * np.pi * np.pi * u(x, y)
+    f = -lap + bx * ux + by * uy
+    fmat = np.einsum("ejq,eq->ej", dom.v, f)
+    bxq, byq = cd_var_b(dom.quad_xy[:, 0], dom.quad_xy[:, 1])
+    bd = boundary_square(nb)
+    bd_u = u(bd[:, 0], bd[:, 1])
+    return FormObjective(dom, fmat, bd, bd_u, np.zeros((0, 2)),
+                         np.zeros(0), eps=1.0, bx=bxq, by=byq), u
+
+
+def rel_l2(net, exact, grid_n=50, lo=0.0, hi=1.0):
+    g = np.linspace(lo, hi, grid_n)
+    X, Y = np.meshgrid(g, g)
+    p = np.stack([X.ravel(), Y.ravel()], 1)
+    u, _, _, _, _ = net.forward(p)
+    ref = exact(p[:, 0], p[:, 1])
+    return np.sqrt(((u - ref) ** 2).sum() / (ref ** 2).sum())
+
+
+# ---------------------------------------------------------------------
+def gradchecks():
+    print("== gradchecks: generalized adjoints vs complex step ==")
+    pts, cells = pmesh.unit_square(1)
+    dom = assembly.assemble(pts, cells, 2, 3)
+    ne, nq = dom.n_elem, dom.n_quad
+    rng = np.random.default_rng(0)
+    xq, yq = dom.quad_xy[:, 0], dom.quad_xy[:, 1]
+    fmat = np.einsum("ejq,eq->ej",
+                     dom.v, (np.sin(xq) * np.cos(yq) + 0.5)
+                     .reshape(ne, nq))
+    bd = boundary_square(8)
+    bd_u = np.sin(1.3 * bd[:, 0]) * np.cos(0.7 * bd[:, 1])
+    sp = rng.uniform(0.05, 0.95, (4, 2))
+    s_u = np.sin(1.3 * sp[:, 0]) * np.cos(0.7 * sp[:, 1])
+    nope = (np.zeros((0, 2)), np.zeros(0))
+
+    # coefficient tables mirroring the Rust TestProblem fields
+    eps_tab = 0.9 * (1.0 + 0.3 * np.sin(xq + yq))
+    bx_tab = 0.3 + 0.2 * np.cos(yq)
+    by_tab = -0.2 + 0.3 * np.sin(xq)
+    c_tab = -1.5 + 0.2 * np.cos(xq * yq)
+
+    cases = [
+        ("poisson const", dict(eps=1.0), "forward", False, False),
+        ("cd const", dict(eps=0.7, bx=0.3, by=-0.2), "forward",
+         False, False),
+        ("helmholtz c=-6.25", dict(eps=1.0, c=-6.25), "forward",
+         False, False),
+        ("var b", dict(eps=0.8, bx=bx_tab, by=by_tab), "forward",
+         False, False),
+        ("var eps", dict(eps=eps_tab), "forward", False, False),
+        ("all var + reac",
+         dict(eps=eps_tab, bx=bx_tab, by=by_tab, c=c_tab), "forward",
+         False, False),
+        ("inv_const + conv + reac", dict(eps=1.0, bx=0.2, by=-0.1,
+                                         c=-0.8), "const", False, True),
+        ("two-head + conv", dict(eps=1.0, bx=1.0), "space", True, True),
+        ("two-head + reac + var b",
+         dict(eps=1.0, bx=0.5 + 0.2 * np.cos(yq),
+              by=-0.4 + 0.3 * np.sin(xq), c=-1.1 + 0.2 *
+              np.cos(xq * yq)), "space", True, True),
+    ]
+    for label, coeffs, mode, two_head, sensors in cases:
+        spts, svals = (sp, s_u) if sensors else nope
+        obj = FormObjective(dom, fmat, bd, bd_u, spts, svals,
+                            mode=mode, **coeffs)
+        if mode == "const":
+            obj.eps_const = 0.7
+        net = TwoHeadNet([2, 4, 1], seed=3, two_head=two_head)
+        _, g, ge, _ = obj.loss_and_grad(net)
+        if mode == "const":
+            gref, geref = complex_step_grad(obj, net, eps_const=0.7)
+            assert abs(ge - geref) < 1e-10 * (1 + abs(ge)), label
+        else:
+            gref, _ = complex_step_grad(obj, net)
+        rel = np.abs(g - gref) / (1.0 + np.maximum(np.abs(g),
+                                                   np.abs(gref)))
+        print(f"  {label:<28} max rel err {rel.max():.2e}")
+        assert rel.max() < 1e-12, (label, rel.max())
+
+
+def adam_sched(obj, net, iters, lr_fn):
+    """Adam with a per-step lr schedule (the Rust LrSchedule analogue)."""
+    theta = net.flat()
+    m = np.zeros(theta.size)
+    v = np.zeros(theta.size)
+    b1, b2, ae = 0.9, 0.999, 1e-8
+    for t in range(1, iters + 1):
+        _, g, _, _ = obj.loss_and_grad(net)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        theta -= lr_fn(t - 1) * (m / (1 - b1 ** t)) / (
+            np.sqrt(v / (1 - b2 ** t)) + ae)
+        net.set_flat(theta)
+
+
+def e2e_budgets():
+    # the exact Rust release-tier config: unit_square(2), nt=3, nq=8,
+    # net [2,16,16,1], nb=80, ExpDecay(1e-2, x0.5 every 500), 3000
+    # iters -> the tests assert rel-L2 < 5e-2 (measured here:
+    # helmholtz 0.8-2.6e-2, cd_var 0.8-1.3e-2 across seeds)
+    lr_fn = lambda s: 1e-2 * 0.5 ** (s // 500)  # noqa: E731
+    print("== helmholtz e2e budget (rust native_e2e hyperparams) ==")
+    k = np.pi
+    for seed in [1, 2, 3]:
+        obj, u = build_helmholtz(k)
+        net = TwoHeadNet([2, 16, 16, 1], seed=seed, two_head=False)
+        t0 = time.time()
+        adam_sched(obj, net, 3000, lr_fn)
+        print(f"  seed {seed}: rel-L2 {rel_l2(net, u):.2e}, "
+              f"{time.time()-t0:.1f}s")
+
+    print("== cd_var e2e budget ==")
+    for seed in [1, 2, 3]:
+        obj, u = build_cd_var()
+        net = TwoHeadNet([2, 16, 16, 1], seed=seed, two_head=False)
+        t0 = time.time()
+        adam_sched(obj, net, 3000, lr_fn)
+        print(f"  seed {seed}: rel-L2 {rel_l2(net, u):.2e}, "
+              f"{time.time()-t0:.1f}s")
+
+
+def acceptance():
+    """Exact-seed replica of `train --problem helmholtz` (registry
+    defaults): k = 2pi on unit_square(2) — the coarse mesh keeps the
+    per-element forcing projections (and with them the variational
+    signal) strong against the boundary penalty; on the 4x4 mesh the
+    run collapses into the u ~ 0 boundary-satisfying saddle and the
+    (k^2-weak) forcing cannot pull it out within the budget (observed
+    rel-L2 ~ 1 after 5000 iters for k = pi AND k = 2pi, while plain
+    Poisson at omega = 2pi escapes the same saddle at ~2500 iters
+    because its forcing is 2x stronger). nt=5, nq=10, net
+    [2,30,30,30,1], nb=400 via the RustRng boundary-sampler port,
+    Mlp::glorot seed-42 init via the RustRng port, 12000 iters with
+    ExpDecay(5e-3, x0.7 every 1500) — the tight lr tail damps the
+    late rel-L2 wander a constant rate shows near the accuracy floor.
+
+    Measured at 12000 iters: rel-L2 6.4e-3 (Rust init seed 42),
+    7.8e-3 (seed 1), 3.6e-3/7.6e-3 (seeds 7/123 on the gentler 0.7/2000
+    tail) — the `cargo run --release -- train --problem helmholtz`
+    acceptance bar (< 1e-2) holds with margin.
+    """
+    import proto_rust_seed_check as rsc
+    from fem_py import mesh as pmesh
+
+    print("== CLI acceptance: train --problem helmholtz defaults ==")
+    k = 2.0 * np.pi
+    obj, u = build_helmholtz(k, n=2, nt1d=5, nq1d=10, nb=400)
+    pts, cells = pmesh.unit_square(2)
+    edges = rsc.compute_boundary(pts, cells)
+    bd = rsc.sample_boundary(pts, edges, 400)
+    obj.bd_pts = bd
+    obj.bd_u = u(bd[:, 0], bd[:, 1])
+    net = rsc.rust_net([2, 30, 30, 30, 1], 42, False)
+    theta = net.flat()
+    m = np.zeros(theta.size)
+    v = np.zeros(theta.size)
+    b1, b2, ae = 0.9, 0.999, 1e-8
+    t0 = time.time()
+    marks = {}
+    for t in range(1, 12001):
+        _, g, _, _ = obj.loss_and_grad(net)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        lr = 5e-3 * 0.7 ** ((t - 1) // 1500)
+        theta -= lr * (m / (1 - b1 ** t)) / (np.sqrt(v / (1 - b2 ** t))
+                                             + ae)
+        net.set_flat(theta)
+        if t % 3000 == 0:
+            marks[t] = rel_l2(net, u)
+    print("  rel-L2 "
+          + " ".join(f"{t}:{v_:.2e}" for t, v_ in sorted(marks.items()))
+          + f", {time.time()-t0:.1f}s")
+    assert marks[12000] < 1e-2, "acceptance bar rel-L2 < 1e-2 violated"
+
+
+if __name__ == "__main__":
+    gradchecks()
+    e2e_budgets()
+    if "--accept" in sys.argv:
+        acceptance()

@@ -9,8 +9,18 @@
 //! grid lists and iteration counts differ by harness.)
 
 use fastvpinns::experiments::common::{
-    native_inverse_space_step_case, native_step_case,
+    native_forward_step_case, native_inverse_space_step_case,
+    native_step_case, StepBenchCase,
 };
+
+fn print_case(case: &StepBenchCase) {
+    let s = &case.summary;
+    println!(
+        "  {:<17} ne={:<5} ({:>6} quad pts)  median {:>8.3} ms/step  \
+         p90 {:>8.3} ms",
+        case.pde, case.ne, case.n_quad, s.median, s.p90
+    );
+}
 
 fn main() {
     println!("== native train step, 30x3 net, nt=5x5, nq=5x5/elem ==");
@@ -18,24 +28,19 @@ fn main() {
         let ne = k * k;
         // fewer timed iters on the big grids keeps the sweep short
         let iters = if ne >= 1024 { 10 } else { 20 };
-        let case = native_step_case(k, 5, 5, iters, 3)
-            .expect("timed steps");
-        let s = &case.summary;
-        println!(
-            "  ne={:<5} ({:>6} quad pts)  median {:>8.3} ms/step  \
-             p90 {:>8.3} ms",
-            case.ne, case.n_quad, s.median, s.p90
-        );
+        print_case(&native_step_case(k, 5, 5, iters, 3)
+            .expect("timed steps"));
+    }
+    println!("== generalized-form PDEs (reaction / hoisted b tables) ==");
+    for pde in ["helmholtz", "cd_var", "poisson_tab"] {
+        for k in [4usize, 16, 64] {
+            print_case(&native_forward_step_case(pde, k, 5, 5, 20, 3)
+                .expect("timed steps"));
+        }
     }
     println!("== two-head inverse-space step (eps head in contraction) ==");
     for k in [4usize, 16, 64] {
-        let case = native_inverse_space_step_case(k, 5, 5, 20, 3)
-            .expect("timed steps");
-        let s = &case.summary;
-        println!(
-            "  ne={:<5} ({:>6} quad pts)  median {:>8.3} ms/step  \
-             p90 {:>8.3} ms",
-            case.ne, case.n_quad, s.median, s.p90
-        );
+        print_case(&native_inverse_space_step_case(k, 5, 5, 20, 3)
+            .expect("timed steps"));
     }
 }

@@ -243,7 +243,7 @@ mod tests {
         };
         let ncfg = NativeConfig {
             layers: vec![2, 8, 1],
-            loss: NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 },
+            loss: NativeLoss::Forward,
             nb: 16,
             ns: 0,
         };
@@ -274,7 +274,7 @@ mod tests {
         let cfg = TrainConfig { iters: 5, ..TrainConfig::default() };
         let ncfg = NativeConfig {
             layers: vec![2, 8, 1],
-            loss: NativeLoss::InverseSpace { bx: 1.0, by: 0.0 },
+            loss: NativeLoss::InverseSpace,
             nb: 16,
             ns: 8,
         };

@@ -171,7 +171,7 @@ pub fn run_square(
         problem,
         sensor_values: None,
     };
-    let ncfg = NativeConfig::poisson_std();
+    let ncfg = NativeConfig::forward_std();
     let backend = ctx.make_backend(&ncfg, &fv_name(ne, nt1d, nq1d),
                                    Some(PREDICT_STD), &src, cfg)?;
     let mut trainer = Trainer::new(backend, cfg);
@@ -221,8 +221,15 @@ pub fn median_backend_step_ms(
 /// (console sweep) so the two harnesses cannot drift apart on the
 /// per-case protocol; grid lists and iteration counts stay per-caller.
 pub struct StepBenchCase {
-    /// Loss family being timed ("poisson" | "inverse_space").
+    /// Loss family being timed ("poisson" | "cd" | "helmholtz" |
+    /// "inverse_space").
     pub loss: &'static str,
+    /// Which PDE drives the step ("poisson_sin" | "poisson_tab" |
+    /// "helmholtz" | "cd_var" | "inverse_space_sin") — `poisson_tab`
+    /// is the same constant-coefficient Poisson problem forced through
+    /// the generalized per-point eps table path, the hoisting
+    /// regression probe.
+    pub pde: &'static str,
     pub ne: usize,
     /// Total quadrature points per step (`ne * nq`).
     pub n_quad: usize,
@@ -243,8 +250,57 @@ pub fn native_step_case(
     iters: usize,
     warmup: usize,
 ) -> Result<StepBenchCase> {
-    let cfg = NativeConfig::poisson_std();
-    native_step_case_cfg(k, nt1d, nq1d, iters, warmup, &cfg, "poisson")
+    native_forward_step_case("poisson_sin", k, nt1d, nq1d, iters, warmup)
+}
+
+/// Time the native forward step for one of the registered PDE cases on
+/// a `k x k` unit-square grid: `poisson_sin` (scalar fast path),
+/// `poisson_tab` (same PDE through the eps table path), `helmholtz`
+/// (reaction term) or `cd_var` (hoisted convection tables).
+pub fn native_forward_step_case(
+    pde: &'static str,
+    k: usize,
+    nt1d: usize,
+    nq1d: usize,
+    iters: usize,
+    warmup: usize,
+) -> Result<StepBenchCase> {
+    let (problem, loss): (Box<dyn Problem>, &'static str) = match pde {
+        "poisson_sin" => (
+            Box::new(crate::problems::PoissonSin::new(
+                2.0 * std::f64::consts::PI)),
+            "poisson",
+        ),
+        // the same constant-eps Poisson problem rerouted onto the
+        // per-point eps table path: if the coefficient tables were
+        // ever re-evaluated on the hot path instead of hoisted, this
+        // case would blow past the poisson case's step time
+        "poisson_tab" => (
+            Box::new(crate::problems::ForceVariable::with(
+                crate::problems::PoissonSin::new(
+                    2.0 * std::f64::consts::PI),
+                crate::problems::CoeffVariability {
+                    eps: true,
+                    b: false,
+                    c: false,
+                },
+            )),
+            "poisson",
+        ),
+        "helmholtz" => (
+            Box::new(crate::problems::Helmholtz2D::new(
+                2.0 * std::f64::consts::PI)),
+            "helmholtz",
+        ),
+        "cd_var" => (
+            Box::new(crate::problems::VariableConvectionCd::new()),
+            "cd",
+        ),
+        other => bail!("unknown bench pde '{other}'"),
+    };
+    let cfg = NativeConfig::forward_std();
+    native_step_case_cfg(k, nt1d, nq1d, iters, warmup, &cfg,
+                         problem.as_ref(), loss, pde)
 }
 
 /// Time the native two-head InverseSpace train step on a `k x k` grid
@@ -258,11 +314,13 @@ pub fn native_inverse_space_step_case(
     iters: usize,
     warmup: usize,
 ) -> Result<StepBenchCase> {
-    let cfg = NativeConfig::inverse_space_std(1.0, 0.0, 100);
-    native_step_case_cfg(k, nt1d, nq1d, iters, warmup, &cfg,
-                         "inverse_space")
+    let cfg = NativeConfig::inverse_space_std(100);
+    let problem = crate::problems::InverseSpaceSin;
+    native_step_case_cfg(k, nt1d, nq1d, iters, warmup, &cfg, &problem,
+                         "inverse_space", "inverse_space_sin")
 }
 
+#[allow(clippy::too_many_arguments)]
 fn native_step_case_cfg(
     k: usize,
     nt1d: usize,
@@ -270,20 +328,14 @@ fn native_step_case_cfg(
     iters: usize,
     warmup: usize,
     cfg: &NativeConfig,
+    problem: &dyn Problem,
     loss: &'static str,
+    pde: &'static str,
 ) -> Result<StepBenchCase> {
     let ne = k * k;
     let mesh = generators::unit_square(k.max(1));
     let dom = assembly::assemble(&mesh, nt1d, nq1d,
                                  QuadKind::GaussLegendre);
-    let poisson =
-        crate::problems::PoissonSin::new(2.0 * std::f64::consts::PI);
-    let inverse = crate::problems::InverseSpaceSin;
-    let problem: &dyn Problem = if loss == "inverse_space" {
-        &inverse
-    } else {
-        &poisson
-    };
     let src = DataSource {
         mesh: &mesh,
         domain: Some(&dom),
@@ -296,6 +348,7 @@ fn native_step_case_cfg(
     let samples = backend_step_samples_ms(&mut b, iters, warmup)?;
     Ok(StepBenchCase {
         loss,
+        pde,
         ne,
         n_quad: ne * dom.nq,
         dof,
@@ -322,7 +375,7 @@ pub fn median_step_ms_fv(
         sensor_values: None,
     };
     let cfg = TrainConfig::default();
-    let ncfg = NativeConfig::poisson_std();
+    let ncfg = NativeConfig::forward_std();
     let mut backend = ctx.make_backend(&ncfg, &fv_name(ne, nt1d, nq1d),
                                        None, &src, &cfg)?;
     median_backend_step_ms(backend.as_mut(), iters, warmup)

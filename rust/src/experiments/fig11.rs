@@ -77,7 +77,7 @@ pub fn run(args: &Args) -> Result<()> {
         let src = DataSource { mesh: &mesh, domain: Some(&dom),
                                problem: &problem, sensor_values: None };
         let backend = ctx.make_backend(
-            &NativeConfig::poisson_std(), &common::fv_name(ne, 5, nq),
+            &NativeConfig::forward_std(), &common::fv_name(ne, 5, nq),
             Some(common::PREDICT_STD), &src, &cfg)?;
         let mut fv = Trainer::new(backend, &cfg);
         let fv_out = train_until(&mut fv, &exact, &grid, max_iters,

@@ -12,9 +12,9 @@ use crate::coordinator::schedule::LrSchedule;
 use crate::coordinator::trainer::{DataSource, TrainConfig, Trainer};
 use crate::fem::assembly;
 use crate::fem::quadrature::QuadKind;
-use crate::fem_solver::{self, FemProblem};
+use crate::fem_solver;
 use crate::mesh::{generators, vtk};
-use crate::problems::{GearCd, Problem};
+use crate::problems::GearCd;
 use crate::runtime::backend::native::{NativeConfig, NativeLoss};
 use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
@@ -34,18 +34,10 @@ pub fn run(args: &Args) -> Result<()> {
     println!("gear mesh: {} cells, {} points (paper: 14,192 cells)",
              mesh.n_cells(), mesh.n_points());
 
-    // ---- FEM reference (the paper's "exact" solution source)
+    // ---- FEM reference (the paper's "exact" solution source),
+    // driven by the same Problem trait object as the training run
     let t0 = std::time::Instant::now();
-    let fem = fem_solver::solve(
-        &mesh,
-        &FemProblem {
-            eps: &|_, _| 1.0,
-            b: problem.b(),
-            f: &|x, y| problem.forcing(x, y),
-            g: &|x, y| problem.boundary(x, y),
-        },
-        3,
-    )?;
+    let fem = fem_solver::solve_problem(&mesh, &problem, 3)?;
     println!("FEM reference: {} CG/BiCGStab iters in {:.2}s",
              fem.solve_iterations, t0.elapsed().as_secs_f64());
 
@@ -59,10 +51,9 @@ pub fn run(args: &Args) -> Result<()> {
         log_every: 50.max(iters / 100),
         ..TrainConfig::default()
     };
-    let (bx, by) = problem.b();
     let ncfg = NativeConfig {
         layers: vec![2, 50, 50, 50, 1],
-        loss: NativeLoss::Forward { eps: problem.eps(), bx, by },
+        loss: NativeLoss::Forward,
         nb: 400,
         ns: 0,
     };

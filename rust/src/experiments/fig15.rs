@@ -17,9 +17,9 @@ use crate::coordinator::metrics::ErrorNorms;
 use crate::coordinator::trainer::{DataSource, TrainConfig, Trainer};
 use crate::fem::assembly;
 use crate::fem::quadrature::QuadKind;
-use crate::fem_solver::{self, FemProblem};
+use crate::fem_solver;
 use crate::mesh::{generators, vtk};
-use crate::problems::{InverseSpaceCd, Problem};
+use crate::problems::InverseSpaceCd;
 use crate::runtime::backend::native::NativeConfig;
 use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
@@ -34,17 +34,9 @@ pub fn run(args: &Args) -> Result<()> {
     let mesh = generators::disk_1024();
     println!("disk mesh: {} cells (paper: 1024)", mesh.n_cells());
 
-    // ---- FEM reference with the true eps(x,y)
-    let fem = fem_solver::solve(
-        &mesh,
-        &FemProblem {
-            eps: &InverseSpaceCd::eps_actual,
-            b: problem.b(),
-            f: &|x, y| problem.forcing(x, y),
-            g: &|x, y| problem.boundary(x, y),
-        },
-        3,
-    )?;
+    // ---- FEM reference with the true eps(x,y), driven by the same
+    // Problem trait object (eps_at carries the ground-truth field)
+    let fem = fem_solver::solve_problem(&mesh, &problem, 3)?;
     println!("FEM reference solved in {:.2}s ({} iters)",
              fem.solve_seconds, fem.solve_iterations);
 
@@ -60,8 +52,7 @@ pub fn run(args: &Args) -> Result<()> {
         log_every: 50.max(iters / 100),
         ..TrainConfig::default()
     };
-    let (bx, by) = problem.b();
-    let ncfg = NativeConfig::inverse_space_std(bx, by, ns);
+    let ncfg = NativeConfig::inverse_space_std(ns);
     let backend = ctx.make_backend(&ncfg, "fv_inverse_space_disk1024",
                                    Some("predict_inv2_16k"), &src, &cfg)?;
     let mut trainer = Trainer::new(backend, &cfg);

@@ -12,6 +12,7 @@ pub mod fig12;
 pub mod fig14;
 pub mod fig15;
 pub mod fig16;
+pub mod helmholtz;
 pub mod table1;
 
 use anyhow::{bail, Result};
@@ -20,7 +21,7 @@ use crate::util::cli::Args;
 
 pub const ALL: &[&str] = &[
     "fig02", "fig08", "fig09", "fig10", "fig11", "fig12", "fig14",
-    "fig15", "fig16", "table1",
+    "fig15", "fig16", "helmholtz", "table1",
 ];
 
 /// Dispatch an experiment by id.
@@ -35,6 +36,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "fig14" => fig14::run(args),
         "fig15" => fig15::run(args),
         "fig16" => fig16::run(args),
+        "helmholtz" => helmholtz::run(args),
         "table1" => table1::run(args),
         "all" => {
             for e in ALL {

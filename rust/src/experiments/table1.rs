@@ -115,7 +115,8 @@ pub fn run(args: &Args) -> Result<()> {
             &mesh,
             &FemProblem {
                 eps: &|_, _| 1.0,
-                b: (0.0, 0.0),
+                b: None,
+                c: None,
                 f: &|x, y| 2.0 * om * om * (om * x).sin() * (om * y).sin(),
                 g: &|_, _| 0.0,
             },

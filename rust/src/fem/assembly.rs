@@ -67,6 +67,17 @@ impl AssembledDomain {
         out
     }
 
+    /// Sample a pointwise coefficient field at every quadrature point:
+    /// `(ne * nq)` element-major — the hoisted table a
+    /// [`VariationalForm`](crate::runtime::backend::VariationalForm)
+    /// threads through the residual contraction. Evaluated once per
+    /// backend construction, never on the step hot path.
+    pub fn coeff_table(&self, f: impl Fn(f64, f64) -> f64) -> Vec<f64> {
+        (0..self.ne * self.nq)
+            .map(|i| f(self.quad_xy[2 * i], self.quad_xy[2 * i + 1]))
+            .collect()
+    }
+
     /// Total integration measure sum_{e,q} w_q |J| (= mesh area).
     pub fn total_measure(&self) -> f64 {
         let mut acc = 0.0;
@@ -291,6 +302,59 @@ mod tests {
             }
         }
         assert!(max_res < 1e-6, "max residual {max_res}");
+    }
+
+    #[test]
+    fn residual_with_reaction_and_convection_vanishes() {
+        // the generalized Galerkin identity for
+        // -eps lap u + b . grad u + c u = f:
+        // int (eps grad u . grad v + (b . grad u + c u) v - f v) -> 0
+        // for exact u and v vanishing on element boundaries — the
+        // identity the Helmholtz / variable-convection scenarios rest
+        // on, evaluated straight from the Gx/Gy/V premultipliers.
+        let om = std::f64::consts::PI;
+        let k2 = 6.25; // Helmholtz-style reaction c = -k^2
+        let (eps, bx, by) = (0.7, 0.4, -0.3);
+        let u = move |x: f64, y: f64| (om * x).sin() * (om * y).sin();
+        let m = generators::skewed_square(2, 0.2);
+        let d = assemble(&m, 3, 30, QuadKind::GaussLegendre);
+        let f = d.force_matrix(|x, y| {
+            let lap = -2.0 * om * om * u(x, y);
+            let (ux, uy) = sinsin_grad(om, x, y);
+            -eps * lap + bx * ux + by * uy - k2 * u(x, y)
+        });
+        let ctab = d.coeff_table(|_, _| -k2);
+        let mut max_res: f64 = 0.0;
+        for e in 0..d.ne {
+            for j in 0..d.nt {
+                let base = (e * d.nt + j) * d.nq;
+                let mut acc = 0.0;
+                for q in 0..d.nq {
+                    let gp = e * d.nq + q;
+                    let x = d.quad_xy[2 * gp];
+                    let y = d.quad_xy[2 * gp + 1];
+                    let (ux, uy) = sinsin_grad(om, x, y);
+                    acc += eps * (d.gx[base + q] * ux
+                        + d.gy[base + q] * uy)
+                        + d.v[base + q]
+                            * (bx * ux + by * uy + ctab[gp] * u(x, y));
+                }
+                max_res = max_res.max((acc - f[e * d.nt + j]).abs());
+            }
+        }
+        assert!(max_res < 1e-6, "max residual {max_res}");
+    }
+
+    #[test]
+    fn coeff_table_samples_quadrature_points() {
+        let m = generators::unit_square(2);
+        let d = assemble(&m, 2, 4, QuadKind::GaussLegendre);
+        let t = d.coeff_table(|x, y| 2.0 * x - y);
+        assert_eq!(t.len(), d.ne * d.nq);
+        for i in 0..t.len() {
+            let want = 2.0 * d.quad_xy[2 * i] - d.quad_xy[2 * i + 1];
+            assert_eq!(t[i], want);
+        }
     }
 
     #[test]

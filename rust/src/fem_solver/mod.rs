@@ -1,5 +1,10 @@
 //! Classical Q1 mapped-FEM reference solver for
-//! `-div(eps(x) grad u) + b . grad u = f` with Dirichlet BCs.
+//! `-div(eps(x) grad u) + b(x) . grad u + c(x) u = f` with Dirichlet
+//! BCs — variable diffusion, variable convection and a reaction (mass)
+//! term, mirroring the coefficient fields of the
+//! [`VariationalForm`](crate::runtime::backend::VariationalForm) layer
+//! so every `Problem` the backends train can be cross-validated
+//! against an independent discretization ([`solve_problem`]).
 //!
 //! Plays the role ParMooN plays in the paper: reference solutions for the
 //! gear (Fig. 12) and disk-inverse (Fig. 15) experiments, and the FEM
@@ -12,11 +17,19 @@ use crate::fem::quadrature::{self, QuadKind};
 use crate::linalg::{bicgstab_solve, cg_solve, CgOptions, CsrMatrix,
                     Triplets};
 use crate::mesh::QuadMesh;
+use crate::problems::Problem;
 
-/// Variable-coefficient convection-diffusion problem definition.
+/// Variable-coefficient problem definition
+/// `-div(eps grad u) + b . grad u + c u = f`, Dirichlet data `g`.
 pub struct FemProblem<'a> {
     pub eps: &'a dyn Fn(f64, f64) -> f64,
-    pub b: (f64, f64),
+    /// Convection field; `None` means `b == 0` (keeps the system
+    /// symmetric so CG applies).
+    pub b: Option<&'a dyn Fn(f64, f64) -> (f64, f64)>,
+    /// Reaction coefficient field; `None` means `c == 0`. A negative
+    /// `c` (Helmholtz, `c = -k^2`) makes the system indefinite — the
+    /// solver switches to BiCGStab.
+    pub c: Option<&'a dyn Fn(f64, f64) -> f64>,
     pub f: &'a dyn Fn(f64, f64) -> f64,
     pub g: &'a dyn Fn(f64, f64) -> f64,
 }
@@ -118,6 +131,11 @@ pub fn solve(mesh: &QuadMesh, p: &FemProblem, nq1d: usize)
             let adet = j.det.abs();
             let pxy = bm.map(xi, eta);
             let epsq = (p.eps)(pxy[0], pxy[1]);
+            let (bxq, byq) = match p.b {
+                Some(b) => b(pxy[0], pxy[1]),
+                None => (0.0, 0.0),
+            };
+            let cq = p.c.map(|c| c(pxy[0], pxy[1])).unwrap_or(0.0);
             let fq = (p.f)(pxy[0], pxy[1]);
             let shp = q1_shape(xi, eta);
             let gref = q1_grad(xi, eta);
@@ -133,9 +151,10 @@ pub fn solve(mesh: &QuadMesh, p: &FemProblem, nq1d: usize)
                     let diff = epsq
                         * (gact[a][0] * gact[b_][0]
                             + gact[a][1] * gact[b_][1]);
-                    let conv = (p.b.0 * gact[b_][0] + p.b.1 * gact[b_][1])
+                    let conv = (bxq * gact[b_][0] + byq * gact[b_][1])
                         * shp[a];
-                    ke[a][b_] += wj * (diff + conv);
+                    let mass = cq * shp[b_] * shp[a];
+                    ke[a][b_] += wj * (diff + conv + mass);
                 }
                 fe[a] += wj * fq * shp[a];
             }
@@ -161,7 +180,9 @@ pub fn solve(mesh: &QuadMesh, p: &FemProblem, nq1d: usize)
 
     let a: CsrMatrix = trip.to_csr();
     let opts = CgOptions { max_iter: 20_000, rtol: 1e-10, atol: 1e-14 };
-    let symmetric = p.b.0 == 0.0 && p.b.1 == 0.0;
+    // CG needs SPD: convection breaks symmetry, a (possibly negative)
+    // reaction can break definiteness — both fall back to BiCGStab
+    let symmetric = p.b.is_none() && p.c.is_none();
     let res = if symmetric {
         cg_solve(&a, &rhs, opts)
     } else {
@@ -185,6 +206,34 @@ pub fn solve(mesh: &QuadMesh, p: &FemProblem, nq1d: usize)
         solve_seconds: t0.elapsed().as_secs_f64(),
         index,
     })
+}
+
+/// Solve the PDE described by a [`Problem`] — coefficient fields
+/// (`eps_at`/`b_at`/`c_at`), forcing and Dirichlet data — on `mesh`.
+/// This is the FEM cross-check entry point for every trainable
+/// problem: the same trait object that drives the variational backend
+/// drives an independent classical discretization.
+pub fn solve_problem(mesh: &QuadMesh, p: &dyn Problem, nq1d: usize)
+    -> Result<FemSolution> {
+    let var = p.coeff_variability();
+    let has_b = var.b || p.b() != (0.0, 0.0);
+    let has_c = var.c || p.c() != 0.0;
+    let eps = |x: f64, y: f64| p.eps_at(x, y);
+    let b = |x: f64, y: f64| p.b_at(x, y);
+    let c = |x: f64, y: f64| p.c_at(x, y);
+    let f = |x: f64, y: f64| p.forcing(x, y);
+    let g = |x: f64, y: f64| p.boundary(x, y);
+    solve(
+        mesh,
+        &FemProblem {
+            eps: &eps,
+            b: if has_b { Some(&b) } else { None },
+            c: if has_c { Some(&c) } else { None },
+            f: &f,
+            g: &g,
+        },
+        nq1d,
+    )
 }
 
 /// Uniform-grid spatial index over cell bounding boxes.
@@ -275,8 +324,8 @@ mod tests {
         for n in [4usize, 8, 16] {
             let mesh = generators::unit_square(n);
             let sol = solve(&mesh,
-                            &FemProblem { eps: &eps, b: (0.0, 0.0), f: &f,
-                                          g: &g }, 3).unwrap();
+                            &FemProblem { eps: &eps, b: None, c: None,
+                                          f: &f, g: &g }, 3).unwrap();
             errs.push(l2_err(&mesh, &sol.u, exact));
         }
         // each refinement should cut the error by ~4
@@ -289,7 +338,7 @@ mod tests {
         let mesh = generators::unit_square(5);
         let g = |x: f64, y: f64| 1.0 + x + 2.0 * y;
         let sol = solve(&mesh,
-                        &FemProblem { eps: &|_, _| 1.0, b: (0.0, 0.0),
+                        &FemProblem { eps: &|_, _| 1.0, b: None, c: None,
                                       f: &|_, _| 0.0, g: &g }, 3).unwrap();
         for e in &mesh.boundary {
             for v in [e.a, e.b] {
@@ -305,7 +354,7 @@ mod tests {
         let mesh = generators::skewed_square(4, 0.2);
         let g = |x: f64, y: f64| 1.0 + x + 2.0 * y;
         let sol = solve(&mesh,
-                        &FemProblem { eps: &|_, _| 1.0, b: (0.0, 0.0),
+                        &FemProblem { eps: &|_, _| 1.0, b: None, c: None,
                                       f: &|_, _| 0.0, g: &g }, 4).unwrap();
         for (i, p) in mesh.points.iter().enumerate() {
             assert!((sol.u[i] - g(p[0], p[1])).abs() < 1e-9,
@@ -317,7 +366,8 @@ mod tests {
     fn convection_diffusion_runs_nonsymmetric() {
         let mesh = generators::unit_square(8);
         let sol = solve(&mesh,
-                        &FemProblem { eps: &|_, _| 1.0, b: (1.0, 0.0),
+                        &FemProblem { eps: &|_, _| 1.0,
+                                      b: Some(&|_, _| (1.0, 0.0)), c: None,
                                       f: &|_, _| 1.0, g: &|_, _| 0.0 },
                         3).unwrap();
         // interior values positive and bounded for this problem
@@ -329,12 +379,12 @@ mod tests {
     fn variable_eps_affects_solution() {
         let mesh = generators::unit_square(8);
         let base = solve(&mesh,
-                         &FemProblem { eps: &|_, _| 1.0, b: (0.0, 0.0),
+                         &FemProblem { eps: &|_, _| 1.0, b: None, c: None,
                                        f: &|_, _| 1.0, g: &|_, _| 0.0 },
                          3).unwrap();
         let var = solve(&mesh,
                         &FemProblem { eps: &|x, _| 1.0 + 5.0 * x,
-                                      b: (0.0, 0.0), f: &|_, _| 1.0,
+                                      b: None, c: None, f: &|_, _| 1.0,
                                       g: &|_, _| 0.0 }, 3).unwrap();
         let d: f64 = base
             .u
@@ -346,11 +396,77 @@ mod tests {
     }
 
     #[test]
+    fn helmholtz_manufactured_convergence() {
+        // -lap u - k^2 u = f with u = sin(k x) sin(k y), k = pi (below
+        // the first Dirichlet eigenvalue 2 pi^2): O(h^2) in nodal L2
+        let k = std::f64::consts::PI;
+        let exact = move |x: f64, y: f64| (k * x).sin() * (k * y).sin();
+        // -lap u = 2 k^2 u  =>  f = (2 k^2 - k^2) u = k^2 u
+        let f = move |x: f64, y: f64| k * k * exact(x, y);
+        let c = move |_: f64, _: f64| -k * k;
+        let mut errs = Vec::new();
+        for n in [4usize, 8, 16] {
+            let mesh = generators::unit_square(n);
+            let sol = solve(&mesh,
+                            &FemProblem { eps: &|_, _| 1.0, b: None,
+                                          c: Some(&c), f: &f,
+                                          g: &|_, _| 0.0 }, 3).unwrap();
+            errs.push(l2_err(&mesh, &sol.u, exact));
+        }
+        assert!(errs[0] / errs[1] > 3.0, "{errs:?}");
+        assert!(errs[1] / errs[2] > 3.0, "{errs:?}");
+    }
+
+    #[test]
+    fn positive_reaction_damps_the_solution() {
+        // adding c > 0 to -lap u + c u = 1 must shrink u everywhere
+        let mesh = generators::unit_square(8);
+        let base = solve(&mesh,
+                         &FemProblem { eps: &|_, _| 1.0, b: None, c: None,
+                                       f: &|_, _| 1.0, g: &|_, _| 0.0 },
+                         3).unwrap();
+        let damped = solve(&mesh,
+                           &FemProblem { eps: &|_, _| 1.0, b: None,
+                                         c: Some(&|_, _| 50.0),
+                                         f: &|_, _| 1.0,
+                                         g: &|_, _| 0.0 }, 3).unwrap();
+        let mx_base = base.u.iter().cloned().fold(f64::MIN, f64::max);
+        let mx_damp = damped.u.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(mx_damp < mx_base, "{mx_damp} !< {mx_base}");
+        assert!(mx_damp > 0.0);
+    }
+
+    #[test]
+    fn solve_problem_helmholtz_cross_validates_exact() {
+        // the Problem-driven entry point: FEM vs the manufactured
+        // Helmholtz solution through the trait's coefficient fields
+        use crate::problems::Helmholtz2D;
+        let p = Helmholtz2D::new(std::f64::consts::PI);
+        let mesh = generators::unit_square(16);
+        let sol = solve_problem(&mesh, &p, 3).unwrap();
+        let err = l2_err(&mesh, &sol.u,
+                         |x, y| p.exact(x, y).unwrap());
+        assert!(err < 0.02, "helmholtz FEM vs exact L2 {err}");
+    }
+
+    #[test]
+    fn solve_problem_cd_var_cross_validates_exact() {
+        // variable rotating convection through the trait's b_at field
+        use crate::problems::VariableConvectionCd;
+        let p = VariableConvectionCd::new();
+        let mesh = generators::unit_square(16);
+        let sol = solve_problem(&mesh, &p, 3).unwrap();
+        let err = l2_err(&mesh, &sol.u,
+                         |x, y| p.exact(x, y).unwrap());
+        assert!(err < 0.02, "cd_var FEM vs exact L2 {err}");
+    }
+
+    #[test]
     fn eval_interpolates() {
         let mesh = generators::unit_square(6);
         let g = |x: f64, y: f64| x + y;
         let sol = solve(&mesh,
-                        &FemProblem { eps: &|_, _| 1.0, b: (0.0, 0.0),
+                        &FemProblem { eps: &|_, _| 1.0, b: None, c: None,
                                       f: &|_, _| 0.0, g: &g }, 3).unwrap();
         // harmonic linear solution: eval must match anywhere
         for (x, y) in [(0.31, 0.77), (0.5, 0.5), (0.99, 0.01)] {
@@ -364,7 +480,7 @@ mod tests {
     fn eval_on_gear_mesh() {
         let mesh = generators::gear(6, 6, 3, 0.4, 0.8, 1.0);
         let sol = solve(&mesh,
-                        &FemProblem { eps: &|_, _| 1.0, b: (0.0, 0.0),
+                        &FemProblem { eps: &|_, _| 1.0, b: None, c: None,
                                       f: &|_, _| 1.0, g: &|_, _| 0.0 },
                         3).unwrap();
         // a point on the mid annulus must be inside
@@ -380,7 +496,7 @@ mod tests {
         let exact = |x: f64, y: f64| x * x - y * y;
         let mesh = generators::disk(6, 4, 0.0, 0.0, 1.0);
         let fine = refine::refine_uniform(&mesh);
-        let prob = FemProblem { eps: &|_, _| 1.0, b: (0.0, 0.0),
+        let prob = FemProblem { eps: &|_, _| 1.0, b: None, c: None,
                                 f: &|_, _| 0.0, g: &exact };
         let e1 = {
             let s = solve(&mesh, &prob, 3).unwrap();

@@ -11,15 +11,24 @@
 //!   premultiplier tensors `G_x`/`G_y`/`V`, and the hand-written
 //!   reverse-mode backprop all run as cache-blocked micro-GEMMs
 //!   ([`linalg::gemm`]), plus Dirichlet/sensor penalties and Adam.
-//!   Every paper loss trains natively — forward Poisson /
-//!   convection-diffusion, the scalar inverse problem, and the
-//!   two-head inverse-space problem (`NativeLoss::InverseSpace`: a
-//!   shared trunk with u and softplus'd eps heads, the eps *field*
-//!   entering the residual contraction per quadrature point).
-//!   Per-thread workspaces are allocated once and reused, so the step
-//!   hot path is allocation-free. Trains offline with no Python, no
-//!   artifacts and no XLA in the build graph (`repro bench` tracks its
-//!   step time).
+//!   The *PDE* is decoupled from that hot path by the
+//!   [`runtime::backend::VariationalForm`] layer: a problem's
+//!   coefficient fields — diffusion `eps(x,y)`, convection `b(x,y)`,
+//!   reaction `c(x,y)` (Helmholtz is `c = -k²`) — are hoisted once
+//!   into scalars or per-quadrature-point tables and threaded through
+//!   the same contraction,
+//!   `r[e,j] = Σ_q eps_q (G_x ∂u/∂x + G_y ∂u/∂y) + Σ_q V (b_q·∇u +
+//!   c_q u) − F`, so Poisson, convection–diffusion, Helmholtz and
+//!   variable-coefficient scenarios all train on one kernel and a new
+//!   PDE is a ~50-line [`problems::Problem`] impl plus a registry
+//!   line. `NativeLoss` is just the *mode*: `Forward` (fixed
+//!   coefficients), `InverseConst` (trainable scalar eps + sensors),
+//!   `InverseSpace` (the two-head eps *field* from the network's
+//!   softplus'd second head, entering the contraction per quadrature
+//!   point). Per-thread workspaces are allocated once and reused, so
+//!   the step hot path is allocation-free. Trains offline with no
+//!   Python, no artifacts and no XLA in the build graph (`repro
+//!   bench` tracks its step time, tagged per PDE).
 //! - **XLA backend** (`--features xla`) — executes AOT train steps
 //!   (HLO + JSON manifest, produced once by `make artifacts` from the
 //!   JAX/Pallas definitions under `python/compile`) on the PJRT CPU
@@ -41,22 +50,31 @@
 //! let mesh = generators::unit_square(2);
 //! let domain = assembly::assemble(&mesh, 3, 5, QuadKind::GaussLegendre);
 //!
-//! // 2. problem + data source + native backend (no artifacts!)
-//! let problem = problems::poisson_sin(std::f64::consts::PI);
+//! // 2. pick a PDE: the Problem carries the weak form's coefficient
+//! //    fields (eps/b/c); the backend hoists them into a
+//! //    VariationalForm once — Helmholtz is just c = -k^2, no
+//! //    backend-specific code anywhere
+//! let problem = problems::Helmholtz2D::new(std::f64::consts::PI);
+//! let form = VariationalForm::from_problem(&problem, &domain);
+//! assert!(form.has_reaction());
+//!
+//! // 3. data source + native backend (no artifacts!); the loss is
+//! //    only the *mode* — the PDE came from the problem
 //! let src = DataSource { mesh: &mesh, domain: Some(&domain),
-//!                        problem: &*problem, sensor_values: None };
+//!                        problem: &problem, sensor_values: None };
 //! let cfg = TrainConfig { iters: 50, ..TrainConfig::default() };
 //! let ncfg = NativeConfig {
 //!     layers: vec![2, 8, 8, 1],
-//!     loss: NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 },
+//!     loss: NativeLoss::Forward,
 //!     nb: 40,
 //!     ns: 0,
 //! };
 //! let backend =
 //!     NativeBackend::new(&ncfg, &src, &BackendOpts::from(&cfg)).unwrap();
 //!
-//! // 3. train through the backend-agnostic coordinator
+//! // 4. train through the backend-agnostic coordinator
 //! let mut trainer = Trainer::new(Box::new(backend), &cfg);
+//! assert_eq!(trainer.loss_kind(), "helmholtz");
 //! let report = trainer.run().unwrap();
 //! assert!(report.final_loss.is_finite());
 //! let u = trainer.predict(&[[0.5, 0.5]]).unwrap();
@@ -65,7 +83,10 @@
 //!
 //! With `--features xla`, swap `NativeBackend::new(...)` for
 //! `XlaBackend::new(&engine, "fv_poisson_ne4_nt5_nq20", ...)` — the
-//! `Trainer` code does not change.
+//! `Trainer` code does not change. On the CLI the same registry that
+//! builds these problems drives `repro train --problem
+//! poisson_sin|cd_gear|helmholtz|cd_var|inverse_const|inverse_space`
+//! (and the help text is generated from it).
 
 pub mod autodiff;
 pub mod coordinator;
@@ -92,7 +113,9 @@ pub mod prelude {
     pub use crate::runtime::backend::native::{
         Mlp, NativeBackend, NativeConfig, NativeLoss,
     };
-    pub use crate::runtime::backend::{Backend, BackendOpts, StepStats};
+    pub use crate::runtime::backend::{
+        Backend, BackendOpts, Coeff, StepStats, VariationalForm,
+    };
     #[cfg(feature = "xla")]
     pub use crate::runtime::backend::xla::XlaBackend;
     #[cfg(feature = "xla")]

@@ -1,11 +1,40 @@
 //! Every PDE instance the paper evaluates, as `Problem` trait objects:
 //! forcing term, Dirichlet data, exact solution (when analytic) and
-//! coefficients. Forcing terms for manufactured solutions are derived
-//! with the `autodiff` substrate — no hand calculus.
+//! the coefficient fields of the weak form. Forcing terms for
+//! manufactured solutions are derived with the `autodiff` substrate —
+//! no hand calculus.
+//!
+//! A `Problem` fully describes the PDE
+//! `-div(eps(x,y) grad u) + b(x,y) . grad u + c(x,y) u = f`:
+//! the backend hoists `eps_at`/`b_at`/`c_at` into a
+//! [`VariationalForm`](crate::runtime::backend::VariationalForm) once
+//! and the same tensor contraction covers Poisson, convection–
+//! diffusion, Helmholtz (`c = -k²`) and any coefficient field — adding
+//! a PDE is implementing this trait, not forking the hot path.
+//! [`registry`] maps CLI `--problem` names to ready-to-train setups.
+
+pub mod registry;
 
 use crate::autodiff::{probe_2d, Dual2};
 
-/// A scalar 2D convection-diffusion problem instance.
+/// Which coefficients of a problem vary in space. Constant
+/// coefficients take the backend's scalar fast path; variable ones are
+/// tabulated once per quadrature point (`eps_at`/`b_at`/`c_at`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CoeffVariability {
+    pub eps: bool,
+    pub b: bool,
+    pub c: bool,
+}
+
+impl CoeffVariability {
+    /// All coefficients spatially constant (the common case).
+    pub const CONST: CoeffVariability =
+        CoeffVariability { eps: false, b: false, c: false };
+}
+
+/// A scalar 2D second-order problem instance
+/// `-div(eps grad u) + b . grad u + c u = f` with Dirichlet data.
 pub trait Problem {
     fn name(&self) -> &str;
     /// Source term f(x, y).
@@ -20,9 +49,89 @@ pub trait Problem {
     fn eps(&self) -> f64 {
         1.0
     }
-    /// Convection velocity.
+    /// Convection velocity (constant problems).
     fn b(&self) -> (f64, f64) {
         (0.0, 0.0)
+    }
+    /// Reaction coefficient (constant problems; Helmholtz: `-k²`).
+    fn c(&self) -> f64 {
+        0.0
+    }
+    /// Diffusion field eps(x, y); defaults to the constant [`Problem::eps`].
+    fn eps_at(&self, _x: f64, _y: f64) -> f64 {
+        self.eps()
+    }
+    /// Convection field b(x, y); defaults to the constant [`Problem::b`].
+    fn b_at(&self, _x: f64, _y: f64) -> (f64, f64) {
+        self.b()
+    }
+    /// Reaction field c(x, y); defaults to the constant [`Problem::c`].
+    fn c_at(&self, _x: f64, _y: f64) -> f64 {
+        self.c()
+    }
+    /// Which coefficient fields vary in space (drives table hoisting).
+    fn coeff_variability(&self) -> CoeffVariability {
+        CoeffVariability::CONST
+    }
+}
+
+/// Wrapper overriding which coefficients of `P` take the tabulated
+/// (generalized) path even when spatially constant — the bench harness
+/// and the contraction regression tests use it to time/compare the
+/// table path against the scalar fast path on the *same* PDE.
+pub struct ForceVariable<P: Problem> {
+    inner: P,
+    var: CoeffVariability,
+}
+
+impl<P: Problem> ForceVariable<P> {
+    /// Force *every* coefficient onto the table path.
+    pub fn new(inner: P) -> Self {
+        ForceVariable {
+            inner,
+            var: CoeffVariability { eps: true, b: true, c: true },
+        }
+    }
+
+    /// Force only the selected coefficients onto the table path.
+    pub fn with(inner: P, var: CoeffVariability) -> Self {
+        ForceVariable { inner, var }
+    }
+}
+
+impl<P: Problem> Problem for ForceVariable<P> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+    fn forcing(&self, x: f64, y: f64) -> f64 {
+        self.inner.forcing(x, y)
+    }
+    fn boundary(&self, x: f64, y: f64) -> f64 {
+        self.inner.boundary(x, y)
+    }
+    fn exact(&self, x: f64, y: f64) -> Option<f64> {
+        self.inner.exact(x, y)
+    }
+    fn eps(&self) -> f64 {
+        self.inner.eps()
+    }
+    fn b(&self) -> (f64, f64) {
+        self.inner.b()
+    }
+    fn c(&self) -> f64 {
+        self.inner.c()
+    }
+    fn eps_at(&self, x: f64, y: f64) -> f64 {
+        self.inner.eps_at(x, y)
+    }
+    fn b_at(&self, x: f64, y: f64) -> (f64, f64) {
+        self.inner.b_at(x, y)
+    }
+    fn c_at(&self, x: f64, y: f64) -> f64 {
+        self.inner.c_at(x, y)
+    }
+    fn coeff_variability(&self) -> CoeffVariability {
+        self.var
     }
 }
 
@@ -91,6 +200,119 @@ impl Problem for GearCd {
 
     fn b(&self) -> (f64, f64) {
         (0.1, 0.0)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Helmholtz (paper SS4.6: same kernel, reaction term c = -k^2)
+// ---------------------------------------------------------------------
+
+/// `-lap u - k^2 u = f` on (0,1)^2 with the manufactured exact solution
+/// `u = sin(k x) sin(k y)` — the weak form is the Poisson contraction
+/// plus a mass term `c = -k^2` against the same `V` premultiplier.
+/// Forcing derived via Dual2 probes. Well-posed for `k^2` away from the
+/// Dirichlet Laplacian spectrum `pi^2 (m^2 + n^2)`, coercive below
+/// `2 pi^2`.
+pub struct Helmholtz2D {
+    pub k: f64,
+    label: String,
+}
+
+impl Helmholtz2D {
+    pub fn new(k: f64) -> Self {
+        Helmholtz2D { k, label: format!("helmholtz_k{k:.3}") }
+    }
+
+    fn u_dual(&self, x: Dual2, y: Dual2) -> Dual2 {
+        (x * self.k).sin() * (y * self.k).sin()
+    }
+}
+
+impl Problem for Helmholtz2D {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn forcing(&self, x: f64, y: f64) -> f64 {
+        // f = -lap u + c u with c = -k^2
+        let p = probe_2d(|a, b| self.u_dual(a, b), x, y);
+        -p.lap + self.c() * p.u
+    }
+
+    fn boundary(&self, x: f64, y: f64) -> f64 {
+        self.exact(x, y).unwrap()
+    }
+
+    fn exact(&self, x: f64, y: f64) -> Option<f64> {
+        Some((self.k * x).sin() * (self.k * y).sin())
+    }
+
+    fn c(&self) -> f64 {
+        -self.k * self.k
+    }
+}
+
+// ---------------------------------------------------------------------
+// Variable-convection cd (a b(x,y) field through the same kernel)
+// ---------------------------------------------------------------------
+
+/// `-eps lap u + b(x,y) . grad u = f` on (0,1)^2 with the rotating
+/// convection field `b = omega_r (y - 1/2, 1/2 - x)` and manufactured
+/// exact `u = sin(pi x) sin(pi y)`; forcing via Dual2. The `b` tables
+/// are hoisted per quadrature point — no per-step evaluation.
+pub struct VariableConvectionCd {
+    pub eps0: f64,
+    /// Angular rate of the rotating field.
+    pub omega_r: f64,
+}
+
+impl VariableConvectionCd {
+    pub fn new() -> Self {
+        VariableConvectionCd { eps0: 1.0, omega_r: 2.0 }
+    }
+
+    fn u_dual(x: Dual2, y: Dual2) -> Dual2 {
+        (x * std::f64::consts::PI).sin() * (y * std::f64::consts::PI).sin()
+    }
+}
+
+impl Default for VariableConvectionCd {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Problem for VariableConvectionCd {
+    fn name(&self) -> &str {
+        "cd_var"
+    }
+
+    fn forcing(&self, x: f64, y: f64) -> f64 {
+        // f = -eps lap u + b(x,y) . grad u
+        let u = probe_2d(Self::u_dual, x, y);
+        let (bx, by) = self.b_at(x, y);
+        -self.eps0 * u.lap + bx * u.dx + by * u.dy
+    }
+
+    fn boundary(&self, x: f64, y: f64) -> f64 {
+        self.exact(x, y).unwrap()
+    }
+
+    fn exact(&self, x: f64, y: f64) -> Option<f64> {
+        Some((std::f64::consts::PI * x).sin()
+            * (std::f64::consts::PI * y).sin())
+    }
+
+    fn eps(&self) -> f64 {
+        self.eps0
+    }
+
+    fn b_at(&self, x: f64, y: f64) -> (f64, f64) {
+        (self.omega_r * (y - 0.5), self.omega_r * (0.5 - x))
+    }
+
+    fn coeff_variability(&self) -> CoeffVariability {
+        CoeffVariability { eps: false, b: true, c: false }
     }
 }
 
@@ -178,6 +400,17 @@ impl Problem for InverseSpaceCd {
     fn b(&self) -> (f64, f64) {
         (1.0, 0.0)
     }
+
+    // the *true* diffusion field: the inverse-space loss replaces it
+    // with the trainable head, but the FEM reference solve and any
+    // forward run see the ground truth through the trait
+    fn eps_at(&self, x: f64, y: f64) -> f64 {
+        Self::eps_actual(x, y)
+    }
+
+    fn coeff_variability(&self) -> CoeffVariability {
+        CoeffVariability { eps: true, b: false, c: false }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -232,6 +465,15 @@ impl Problem for InverseSpaceSin {
 
     fn b(&self) -> (f64, f64) {
         (1.0, 0.0)
+    }
+
+    // ground truth field (the inverse-space loss trains a head for it)
+    fn eps_at(&self, x: f64, y: f64) -> f64 {
+        Self::eps_actual(x, y)
+    }
+
+    fn coeff_variability(&self) -> CoeffVariability {
+        CoeffVariability { eps: true, b: false, c: false }
     }
 }
 
@@ -322,6 +564,67 @@ mod tests {
             let t = i as f64 / 49.0;
             assert!(InverseSpaceSin::eps_actual(t, 1.0 - t) > 0.0);
         }
+    }
+
+    #[test]
+    fn helmholtz_forcing_consistent_with_fd() {
+        // f must equal -lap u - k^2 u of the manufactured solution
+        let k = 2.5;
+        let p = Helmholtz2D::new(k);
+        let u = |x: f64, y: f64| (k * x).sin() * (k * y).sin();
+        let h = 1e-5;
+        for (x, y) in [(0.3, 0.7), (0.52, 0.18), (0.9, 0.4)] {
+            let lap = (u(x + h, y) - 2.0 * u(x, y) + u(x - h, y)) / (h * h)
+                + (u(x, y + h) - 2.0 * u(x, y) + u(x, y - h)) / (h * h);
+            let want = -lap - k * k * u(x, y);
+            assert!((p.forcing(x, y) - want).abs() < 1e-4,
+                    "({x},{y}): {} vs {}", p.forcing(x, y), want);
+        }
+        assert_eq!(p.c(), -k * k);
+        assert_eq!(p.coeff_variability(), CoeffVariability::CONST);
+    }
+
+    #[test]
+    fn helmholtz_pi_has_zero_boundary() {
+        let p = Helmholtz2D::new(std::f64::consts::PI);
+        for t in [0.0, 0.31, 0.77, 1.0] {
+            assert!(p.boundary(t, 0.0).abs() < 1e-12);
+            assert!(p.boundary(0.0, t).abs() < 1e-12);
+            assert!(p.boundary(t, 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn cd_var_forcing_consistent_with_fd() {
+        let p = VariableConvectionCd::new();
+        let u = |x: f64, y: f64| {
+            (std::f64::consts::PI * x).sin() * (std::f64::consts::PI * y).sin()
+        };
+        let h = 1e-5;
+        for (x, y) in [(0.3, 0.7), (0.52, 0.18), (0.9, 0.4)] {
+            let lap = (u(x + h, y) - 2.0 * u(x, y) + u(x - h, y)) / (h * h)
+                + (u(x, y + h) - 2.0 * u(x, y) + u(x, y - h)) / (h * h);
+            let ux = (u(x + h, y) - u(x - h, y)) / (2.0 * h);
+            let uy = (u(x, y + h) - u(x, y - h)) / (2.0 * h);
+            let (bx, by) = p.b_at(x, y);
+            let want = -p.eps() * lap + bx * ux + by * uy;
+            assert!((p.forcing(x, y) - want).abs() < 1e-4,
+                    "({x},{y}): {} vs {}", p.forcing(x, y), want);
+        }
+        assert!(p.coeff_variability().b);
+        // the rotating field is divergence-free and vanishes at center
+        assert_eq!(p.b_at(0.5, 0.5), (0.0, 0.0));
+    }
+
+    #[test]
+    fn force_variable_delegates_everything_but_variability() {
+        let p = ForceVariable::new(Helmholtz2D::new(2.0));
+        let inner = Helmholtz2D::new(2.0);
+        assert_eq!(p.forcing(0.3, 0.4), inner.forcing(0.3, 0.4));
+        assert_eq!(p.eps_at(0.1, 0.9), inner.eps_at(0.1, 0.9));
+        assert_eq!(p.c_at(0.1, 0.9), inner.c_at(0.1, 0.9));
+        let v = p.coeff_variability();
+        assert!(v.eps && v.b && v.c);
     }
 
     #[test]

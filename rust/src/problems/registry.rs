@@ -1,0 +1,231 @@
+//! The single problem registry: every CLI-trainable problem family in
+//! one table. `repro train --problem <name>` dispatch *and* the USAGE
+//! problem list are both derived from [`REGISTRY`], so the help text
+//! cannot drift from the supported set.
+//!
+//! Each entry builds a ready-to-train [`ProblemSetup`] (mesh, problem,
+//! native loss mode, sensor count) from CLI flags; the backend derives
+//! the [`VariationalForm`](crate::runtime::backend::VariationalForm)
+//! coefficient tables from the problem itself, so a new PDE is one
+//! `Problem` impl plus one registry line.
+
+use anyhow::Result;
+
+use crate::coordinator::schedule::LrSchedule;
+use crate::mesh::{generators, QuadMesh};
+use crate::problems::{self, Problem};
+use crate::runtime::backend::native::NativeLoss;
+use crate::util::cli::Args;
+
+/// Everything `repro train` needs for one named problem family.
+pub struct ProblemSetup {
+    pub mesh: QuadMesh,
+    pub problem: Box<dyn Problem>,
+    /// Native loss *mode* (the PDE coefficients live on the problem).
+    pub loss: NativeLoss,
+    /// Sensor count (inverse modes).
+    pub ns: usize,
+    /// Default iteration budget for this family (`--iters` overrides);
+    /// weak-forcing problems need longer to escape the early
+    /// boundary-dominated plateau.
+    pub iters: usize,
+    /// Default learning-rate schedule (`--lr F` overrides with a
+    /// constant rate).
+    pub lr: LrSchedule,
+    /// Ground-truth eps field for post-training evaluation
+    /// (inverse-space problems with a manufactured field).
+    pub eps_star: Option<fn(f64, f64) -> f64>,
+}
+
+/// One registry row.
+pub struct Entry {
+    pub name: &'static str,
+    /// One-line summary for the CLI help.
+    pub summary: &'static str,
+    pub build: fn(&Args) -> Result<ProblemSetup>,
+}
+
+/// The registry — the only list of trainable problems in the tree.
+pub const REGISTRY: &[Entry] = &[
+    Entry {
+        name: "poisson_sin",
+        summary: "-lap u = f, exact sin(wx)sin(wy) on (0,1)^2 (SS4.6)",
+        build: build_poisson_sin,
+    },
+    Entry {
+        name: "cd_gear",
+        summary: "convection-diffusion on the 1760-cell spur gear (Fig 12)",
+        build: build_cd_gear,
+    },
+    Entry {
+        name: "helmholtz",
+        summary: "-lap u - k^2 u = f via the reaction term (c = -k^2)",
+        build: build_helmholtz,
+    },
+    Entry {
+        name: "cd_var",
+        summary: "rotating convection field b(x,y) via hoisted b tables",
+        build: build_cd_var,
+    },
+    Entry {
+        name: "inverse_const",
+        summary: "recover the scalar eps = 0.3 from sensors (SS4.7.1)",
+        build: build_inverse_const,
+    },
+    Entry {
+        name: "inverse_space",
+        summary: "recover the eps(x,y) field with the two-head net (SS4.7.2)",
+        build: build_inverse_space,
+    },
+];
+
+/// Look a problem family up by its CLI name.
+pub fn lookup(name: &str) -> Option<&'static Entry> {
+    REGISTRY.iter().find(|e| e.name == name)
+}
+
+/// `"a|b|c"` — the USAGE string's problem list.
+pub fn name_list() -> String {
+    REGISTRY
+        .iter()
+        .map(|e| e.name)
+        .collect::<Vec<_>>()
+        .join("|")
+}
+
+fn build_poisson_sin(args: &Args) -> Result<ProblemSetup> {
+    let omega = args.f64_or("omega-pi", 2.0)? * std::f64::consts::PI;
+    let n = args.usize_or("n", 4)?;
+    Ok(ProblemSetup {
+        mesh: generators::unit_square(n.max(1)),
+        problem: Box::new(problems::PoissonSin::new(omega)),
+        loss: NativeLoss::Forward,
+        ns: 0,
+        iters: 5000,
+        lr: LrSchedule::Constant(5e-3),
+        eps_star: None,
+    })
+}
+
+fn build_cd_gear(_args: &Args) -> Result<ProblemSetup> {
+    Ok(ProblemSetup {
+        mesh: generators::gear_ci(),
+        problem: Box::new(problems::GearCd),
+        loss: NativeLoss::Forward,
+        ns: 0,
+        iters: 5000,
+        lr: LrSchedule::Constant(5e-3),
+        eps_star: None,
+    })
+}
+
+fn build_helmholtz(args: &Args) -> Result<ProblemSetup> {
+    // default k = 2pi, mirroring poisson_sin's omega default: the
+    // forcing scales with k^2, so larger k strengthens the variational
+    // signal against the boundary penalty (k = pi trains much slower
+    // at this mesh scale; it stays reachable via --k-pi 1)
+    let k = args.f64_or("k-pi", 2.0)? * std::f64::consts::PI;
+    // coarse 2x2 mesh with high-order tests (the CLI's nt1d=5/nq1d=10):
+    // the per-element forcing projections scale with the element
+    // measure, so the coarse mesh keeps the variational signal strong
+    // against the boundary penalty — on finer meshes the run collapses
+    // into the u ~ 0 boundary-satisfying saddle and the (k^2-weak)
+    // forcing cannot pull it out within the budget. The decayed-lr
+    // 12000-iter default escapes the saddle at full rate, then the
+    // tight tail (~3e-4 by the end) damps the late rel-L2 wander that
+    // a constant rate shows near the accuracy floor. Exact-Rust-init
+    // numpy replicas (RustRng port): rel-L2 6.4e-3 (seed 42), 7.8e-3
+    // (seed 1) at 12000 — under the 1e-2 acceptance bar with margin.
+    let n = args.usize_or("n", 2)?;
+    Ok(ProblemSetup {
+        mesh: generators::unit_square(n.max(1)),
+        problem: Box::new(problems::Helmholtz2D::new(k)),
+        loss: NativeLoss::Forward,
+        ns: 0,
+        iters: 12_000,
+        lr: LrSchedule::ExpDecay { lr0: 5e-3, factor: 0.7, every: 1500 },
+        eps_star: None,
+    })
+}
+
+fn build_cd_var(args: &Args) -> Result<ProblemSetup> {
+    let n = args.usize_or("n", 4)?;
+    Ok(ProblemSetup {
+        mesh: generators::unit_square(n.max(1)),
+        problem: Box::new(problems::VariableConvectionCd::new()),
+        loss: NativeLoss::Forward,
+        ns: 0,
+        iters: 5000,
+        lr: LrSchedule::Constant(5e-3),
+        eps_star: None,
+    })
+}
+
+fn build_inverse_const(args: &Args) -> Result<ProblemSetup> {
+    Ok(ProblemSetup {
+        mesh: generators::rect_grid(2, 2, -1.0, -1.0, 1.0, 1.0),
+        problem: Box::new(problems::InverseConstPoisson::new()),
+        loss: NativeLoss::InverseConst,
+        ns: args.usize_or("ns", 50)?,
+        iters: 5000,
+        lr: LrSchedule::Constant(5e-3),
+        eps_star: None,
+    })
+}
+
+fn build_inverse_space(args: &Args) -> Result<ProblemSetup> {
+    let n = args.usize_or("n", 2)?;
+    Ok(ProblemSetup {
+        mesh: generators::unit_square(n.max(1)),
+        problem: Box::new(problems::InverseSpaceSin),
+        loss: NativeLoss::InverseSpace,
+        ns: args.usize_or("ns", 200)?,
+        iters: 5000,
+        lr: LrSchedule::Constant(5e-3),
+        eps_star: Some(problems::InverseSpaceSin::eps_actual),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_builds_with_default_args() {
+        let args = Args::default();
+        for e in REGISTRY {
+            let setup = (e.build)(&args)
+                .unwrap_or_else(|err| panic!("{} failed: {err}", e.name));
+            assert!(setup.mesh.n_cells() > 0, "{}: empty mesh", e.name);
+            // forcing/boundary must be evaluable on the mesh bbox
+            let (lo, _hi) = setup.mesh.bbox();
+            let f = setup.problem.forcing(lo[0], lo[1]);
+            assert!(f.is_finite(), "{}: non-finite forcing", e.name);
+            match setup.loss {
+                NativeLoss::InverseConst | NativeLoss::InverseSpace => {
+                    assert!(setup.ns > 0, "{}: inverse needs sensors",
+                            e.name)
+                }
+                NativeLoss::Forward => assert_eq!(setup.ns, 0),
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_and_name_list_agree_with_the_registry() {
+        assert!(lookup("helmholtz").is_some());
+        assert!(lookup("cd_var").is_some());
+        assert!(lookup("nope").is_none());
+        let list = name_list();
+        for e in REGISTRY {
+            assert!(list.contains(e.name), "{} missing from {list}",
+                    e.name);
+        }
+        // names are unique
+        for (i, a) in REGISTRY.iter().enumerate() {
+            for b in &REGISTRY[i + 1..] {
+                assert_ne!(a.name, b.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! The variational-form layer: the weak form of a second-order scalar
+//! PDE as per-quadrature-point coefficient fields, decoupled from the
+//! backend hot path.
+//!
+//! The paper's central claim is that the tensorized residual
+//! contraction is *PDE-agnostic*: Poisson, convection–diffusion and
+//! Helmholtz all run on the same kernel. This module makes that true in
+//! code. A [`VariationalForm`] describes
+//!
+//! ```text
+//! r[e,j] = Σ_q eps_q (G_x[e,j,q] ∂u/∂x + G_y[e,j,q] ∂u/∂y)
+//!        + Σ_q V[e,j,q] (b_q · ∇u + c_q u) − F[e,j]
+//! ```
+//!
+//! where each coefficient is a [`Coeff`]: either a spatial **constant**
+//! (the scalar fast path — a GEMV `alpha` or a single multiply, exactly
+//! the pre-refactor closed form) or a **table** of per-quadrature-point
+//! values, hoisted *once* at backend construction from the
+//! [`Problem`](crate::problems::Problem)'s coefficient fields
+//! (`eps_at`/`b_at`/`c_at`) and threaded through the blocked GEMM/GEMV
+//! contraction every step with no re-evaluation. Helmholtz is nothing
+//! but `c = -k²`; a rotating-convection problem is nothing but a `b`
+//! table — no backend fork, no new adjoint code.
+//!
+//! The trainable-eps losses compose with the form: `inverse_const`
+//! replaces the form's diffusion with the trainable scalar,
+//! `inverse_space` with the network's softplus'd eps head; convection
+//! and reaction still come from the form.
+
+use crate::fem::assembly::AssembledDomain;
+use crate::problems::Problem;
+
+/// One coefficient of the weak form, hoisted to step-invariant data.
+#[derive(Debug, Clone)]
+pub enum Coeff {
+    /// Spatially constant — the backend keeps the pre-refactor scalar
+    /// fast path (fold into a GEMV `alpha` / one multiply).
+    Const(f64),
+    /// Per-quadrature-point values, `ne * nq` element-major — sampled
+    /// once at construction, never re-evaluated on the hot path.
+    Table(Vec<f64>),
+}
+
+impl Coeff {
+    /// Value at global quadrature-point index `p` (= `e * nq + q`).
+    #[inline]
+    pub fn at(&self, p: usize) -> f64 {
+        match self {
+            Coeff::Const(v) => *v,
+            Coeff::Table(t) => t[p],
+        }
+    }
+
+    /// The constant value, when this coefficient is one.
+    pub fn constant(&self) -> Option<f64> {
+        match self {
+            Coeff::Const(v) => Some(*v),
+            Coeff::Table(_) => None,
+        }
+    }
+
+    /// Whether the coefficient is identically zero (`Const(0.0)`): the
+    /// backend skips the corresponding term entirely.
+    pub fn is_zero(&self) -> bool {
+        matches!(self, Coeff::Const(v) if *v == 0.0)
+    }
+}
+
+/// The weak form `-div(eps grad u) + b . grad u + c u = f` as hoisted
+/// coefficient data. Built once per backend from the problem's
+/// coefficient fields; the step loop only ever indexes it.
+#[derive(Debug, Clone)]
+pub struct VariationalForm {
+    /// Diffusion `eps(x, y)`.
+    pub eps: Coeff,
+    /// Convection `b_x(x, y)`.
+    pub bx: Coeff,
+    /// Convection `b_y(x, y)`.
+    pub by: Coeff,
+    /// Reaction `c(x, y)` (Helmholtz: `c = -k²`).
+    pub c: Coeff,
+}
+
+impl VariationalForm {
+    /// Hoist the problem's coefficient fields over the assembled
+    /// domain's quadrature points: constants stay scalars (the fast
+    /// path), spatially varying coefficients are tabulated once.
+    pub fn from_problem(p: &dyn Problem, dom: &AssembledDomain)
+        -> VariationalForm {
+        let var = p.coeff_variability();
+        // the variability flags must agree with the pointwise
+        // overrides: a Problem that overrides eps_at/b_at/c_at but
+        // leaves the matching flag unset would silently train the
+        // wrong PDE (the constant would be hoisted instead of the
+        // field). Probe a few quadrature points at construction —
+        // off the step hot path — and fail loudly; setting the flag
+        // (tabulating is always correct) resolves any false positive.
+        for gp in [0, dom.ne * dom.nq / 2, dom.ne * dom.nq - 1] {
+            let (x, y) = (dom.quad_xy[2 * gp], dom.quad_xy[2 * gp + 1]);
+            assert!(
+                var.eps || p.eps_at(x, y) == p.eps(),
+                "problem '{}' overrides eps_at but \
+                 coeff_variability().eps is false", p.name());
+            assert!(
+                var.b || p.b_at(x, y) == p.b(),
+                "problem '{}' overrides b_at but \
+                 coeff_variability().b is false", p.name());
+            assert!(
+                var.c || p.c_at(x, y) == p.c(),
+                "problem '{}' overrides c_at but \
+                 coeff_variability().c is false", p.name());
+        }
+        let eps = if var.eps {
+            Coeff::Table(dom.coeff_table(|x, y| p.eps_at(x, y)))
+        } else {
+            Coeff::Const(p.eps())
+        };
+        let (bx, by) = if var.b {
+            (Coeff::Table(dom.coeff_table(|x, y| p.b_at(x, y).0)),
+             Coeff::Table(dom.coeff_table(|x, y| p.b_at(x, y).1)))
+        } else {
+            let (bx, by) = p.b();
+            (Coeff::Const(bx), Coeff::Const(by))
+        };
+        let c = if var.c {
+            Coeff::Table(dom.coeff_table(|x, y| p.c_at(x, y)))
+        } else {
+            Coeff::Const(p.c())
+        };
+        VariationalForm { eps, bx, by, c }
+    }
+
+    /// Whether the form carries a convection term at all.
+    pub fn has_convection(&self) -> bool {
+        !self.bx.is_zero() || !self.by.is_zero()
+    }
+
+    /// Whether the form carries a reaction (mass) term.
+    pub fn has_reaction(&self) -> bool {
+        !self.c.is_zero()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fem::assembly;
+    use crate::fem::quadrature::QuadKind;
+    use crate::mesh::generators;
+    use crate::problems::{
+        ForceVariable, Helmholtz2D, PoissonSin, VariableConvectionCd,
+    };
+
+    #[test]
+    fn constant_problem_stays_on_the_scalar_path() {
+        let mesh = generators::unit_square(2);
+        let dom = assembly::assemble(&mesh, 2, 3, QuadKind::GaussLegendre);
+        let p = PoissonSin::new(std::f64::consts::PI);
+        let f = VariationalForm::from_problem(&p, &dom);
+        assert_eq!(f.eps.constant(), Some(1.0));
+        assert!(f.bx.is_zero() && f.by.is_zero() && f.c.is_zero());
+        assert!(!f.has_convection() && !f.has_reaction());
+    }
+
+    #[test]
+    fn helmholtz_reaction_is_minus_k_squared() {
+        let mesh = generators::unit_square(1);
+        let dom = assembly::assemble(&mesh, 2, 3, QuadKind::GaussLegendre);
+        let k = 2.5;
+        let f = VariationalForm::from_problem(&Helmholtz2D::new(k), &dom);
+        assert_eq!(f.c.constant(), Some(-k * k));
+        assert!(f.has_reaction() && !f.has_convection());
+    }
+
+    #[test]
+    fn variable_coefficients_are_tabulated_at_quadrature_points() {
+        let mesh = generators::skewed_square(2, 0.15);
+        let dom = assembly::assemble(&mesh, 2, 4, QuadKind::GaussLegendre);
+        let p = VariableConvectionCd::new();
+        let f = VariationalForm::from_problem(&p, &dom);
+        assert!(f.eps.constant().is_some(), "eps is constant for cd_var");
+        let (bxt, byt) = match (&f.bx, &f.by) {
+            (Coeff::Table(a), Coeff::Table(b)) => (a, b),
+            other => panic!("b must be tabulated, got {other:?}"),
+        };
+        assert_eq!(bxt.len(), dom.ne * dom.nq);
+        for gp in 0..dom.ne * dom.nq {
+            let (x, y) = (dom.quad_xy[2 * gp], dom.quad_xy[2 * gp + 1]);
+            let (bx, by) = p.b_at(x, y);
+            assert_eq!(bxt[gp], bx);
+            assert_eq!(byt[gp], by);
+            assert_eq!(f.bx.at(gp), bx);
+            assert_eq!(f.by.at(gp), by);
+        }
+    }
+
+    #[test]
+    fn force_variable_tabulates_constants_faithfully() {
+        let mesh = generators::unit_square(2);
+        let dom = assembly::assemble(&mesh, 2, 3, QuadKind::GaussLegendre);
+        let p = ForceVariable::new(PoissonSin::new(std::f64::consts::PI));
+        let f = VariationalForm::from_problem(&p, &dom);
+        for coeff in [&f.eps, &f.bx, &f.by, &f.c] {
+            assert!(coeff.constant().is_none(), "must be a table");
+        }
+        for gp in 0..dom.ne * dom.nq {
+            assert_eq!(f.eps.at(gp), 1.0);
+            assert_eq!(f.c.at(gp), 0.0);
+        }
+        // zero tables are *not* Const(0): has_* answers by value class
+        assert!(f.has_convection() && f.has_reaction());
+    }
+}

@@ -9,6 +9,14 @@
 //! is backend-agnostic: it drives `&dyn Backend`, applies LR schedules,
 //! logs history and computes error norms.
 //!
+//! The *PDE itself* is decoupled from the backends by the
+//! [`form::VariationalForm`] layer: a problem's coefficient fields
+//! (diffusion `eps(x,y)`, convection `b(x,y)`, reaction `c(x,y)` —
+//! Helmholtz is `c = -k²`) are hoisted once into scalars/per-
+//! quadrature-point tables and threaded through the blocked
+//! contraction, so every PDE — Poisson, convection-diffusion,
+//! Helmholtz, variable-coefficient fields — runs on the same kernel.
+//!
 //! Two implementations:
 //! - [`native::NativeBackend`] — the whole FastVPINNs step in pure Rust
 //!   (tanh-MLP forward with input tangents, tensor-contraction residual,
@@ -17,9 +25,12 @@
 //! - [`xla::XlaBackend`] (`--features xla`) — executes AOT-compiled
 //!   train-step artifacts on the PJRT client, the accelerated path.
 
+pub mod form;
 pub mod native;
 #[cfg(feature = "xla")]
 pub mod xla;
+
+pub use form::{Coeff, VariationalForm};
 
 use anyhow::Result;
 

@@ -9,17 +9,20 @@
 //!    two spatial input tangents) runs as cache-blocked GEMMs through
 //!    [`crate::linalg::gemm`], with a fused bias + tanh +
 //!    tangent-scaling epilogue per layer;
-//! 2. the variational residual
-//!    `r[e,j] = eps * sum_q (G_x[e,j,q] du/dx + G_y[e,j,q] du/dy)
-//!              + sum_q V[e,j,q] (b . grad u) - F[e,j]`
+//! 2. the variational residual of the *generalized* weak form
+//!    `r[e,j] = sum_q eps_q (G_x[e,j,q] du/dx + G_y[e,j,q] du/dy)
+//!              + sum_q V[e,j,q] (b_q . grad u + c_q u) - F[e,j]`
 //!    and its adjoint are blocked matrix products against the
-//!    precomputed `G_x`/`G_y`/`V` premultiplier slabs. On the two-head
-//!    inverse-space loss (`NativeLoss::InverseSpace`) `eps` is not a
-//!    scalar but the softplus'd second network head evaluated *per
-//!    quadrature point* —
-//!    `r[e,j] = sum_q eps(x_q) (G_x du/dx + G_y du/dy) + conv - F` —
-//!    folded into the same blocked products by scaling the tangents
-//!    before the contraction;
+//!    precomputed `G_x`/`G_y`/`V` premultiplier slabs. The coefficient
+//!    fields `eps_q`/`b_q`/`c_q` come from the
+//!    [`VariationalForm`](super::VariationalForm) hoisted once at
+//!    construction: spatial constants fold into GEMV alphas (the
+//!    closed-form fast path — bit-identical to the pre-form code),
+//!    tables scale the tangents / V-contracted values per quadrature
+//!    point. On the two-head inverse-space loss
+//!    (`NativeLoss::InverseSpace`) `eps_q` is the softplus'd second
+//!    network head instead, folded into the same blocked products by
+//!    the identical tangent-scaling trick;
 //! 3. the reverse pass (reverse-over-forward through the
 //!    tangent-carrying MLP) is three accumulating GEMMs per layer for
 //!    the weight gradients plus three GEMMs against `W^T` for the
@@ -36,6 +39,7 @@
 
 use anyhow::{anyhow, ensure, Result};
 
+use super::form::VariationalForm;
 use super::{Backend, BackendOpts, DataSource, StepStats};
 use crate::linalg::gemm::{gemm, gemv, GemmBufs};
 use crate::util::rng::Rng;
@@ -46,37 +50,24 @@ use crate::util::rng::Rng;
 /// the blocked kernel's throughput regime.
 const TARGET_BLOCK_PTS: usize = 256;
 
-/// Which objective the native step optimizes.
+/// Which objective *mode* the native step optimizes. The PDE itself —
+/// the coefficient fields of the weak form — lives on the
+/// [`crate::problems::Problem`] and is hoisted into a
+/// [`VariationalForm`] at construction; the mode only decides what (if
+/// anything) is trainable besides the network's u head.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum NativeLoss {
-    /// `-eps lap u + b . grad u = f` with fixed coefficients
-    /// (`bx = by = 0` is plain Poisson).
-    Forward { eps: f64, bx: f64, by: f64 },
-    /// `-eps lap u = f` with trainable eps plus sensor supervision
-    /// (paper SS4.7.1).
+    /// Fixed coefficients from the problem's form: Poisson,
+    /// convection-diffusion, Helmholtz (`c = -k²`), variable fields.
+    Forward,
+    /// The form's diffusion is replaced by a trainable scalar eps,
+    /// plus sensor supervision (paper SS4.7.1).
     InverseConst,
-    /// `-div(eps(x,y) grad u) + b . grad u = f` with a trainable
-    /// diffusion *field* from the network's second head plus sensor
-    /// supervision of u (paper SS4.7.2, Figs. 15-16). The field enters
-    /// the contraction per quadrature point:
-    /// `r[e,j] = sum_q eps(x_q) (G_x du/dx + G_y du/dy) + conv - F`.
-    InverseSpace { bx: f64, by: f64 },
-}
-
-impl NativeLoss {
-    fn kind(&self) -> &'static str {
-        match self {
-            NativeLoss::Forward { bx, by, .. } => {
-                if *bx == 0.0 && *by == 0.0 {
-                    "poisson"
-                } else {
-                    "cd"
-                }
-            }
-            NativeLoss::InverseConst => "inverse_const",
-            NativeLoss::InverseSpace { .. } => "inverse_space",
-        }
-    }
+    /// The form's diffusion is replaced by a trainable *field* from
+    /// the network's second head, plus sensor supervision of u (paper
+    /// SS4.7.2, Figs. 15-16); convection/reaction still come from the
+    /// form.
+    InverseSpace,
 }
 
 /// Numerically stable `ln(1 + e^z)` — the positivity map of the eps
@@ -114,22 +105,24 @@ pub struct NativeConfig {
 }
 
 impl NativeConfig {
-    /// The paper's standard 30x3 forward Poisson setup.
-    pub fn poisson_std() -> NativeConfig {
+    /// The paper's standard 30x3 forward setup (the PDE coefficients
+    /// come from the problem's variational form).
+    pub fn forward_std() -> NativeConfig {
         NativeConfig {
             layers: vec![2, 30, 30, 30, 1],
-            loss: NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 },
+            loss: NativeLoss::Forward,
             nb: 400,
             ns: 0,
         }
     }
 
     /// The paper's SS4.7.2 two-head inverse-space setup: the standard
-    /// 30x3 trunk shared by the u and eps heads, `ns` interior sensors.
-    pub fn inverse_space_std(bx: f64, by: f64, ns: usize) -> NativeConfig {
+    /// 30x3 trunk shared by the u and eps heads, `ns` interior sensors
+    /// (convection/reaction come from the problem's form).
+    pub fn inverse_space_std(ns: usize) -> NativeConfig {
         NativeConfig {
             layers: vec![2, 30, 30, 30, 1],
-            loss: NativeLoss::InverseSpace { bx, by },
+            loss: NativeLoss::InverseSpace,
             nb: 400,
             ns,
         }
@@ -654,7 +647,8 @@ struct Workspace {
     seed_e: Vec<f64>, // per-point eps field adjoint (two-head nets)
     cvals: Vec<f64>, // per-(element, j) pre-eps contraction
     resid: Vec<f64>, // per-(element, j) residual
-    dq: Vec<f64>,    // per-point convection scratch b . grad u
+    dq: Vec<f64>,    // per-point V-weighted values b . grad u + c u
+    tv: Vec<f64>,    // per-point V^T r pull-back (conv/reaction seeds)
     eps_z: Vec<f64>, // eps head pre-activation tape
     epsv: Vec<f64>,  // eps head field values softplus(eps_z)
     gez: Vec<f64>,   // eps head pre-activation adjoint
@@ -697,6 +691,7 @@ impl Workspace {
             cvals: vec![0.0; jrows.max(1)],
             resid: vec![0.0; jrows.max(1)],
             dq: vec![0.0; bp],
+            tv: vec![0.0; bp],
             eps_z: vec![0.0; bp],
             epsv: vec![0.0; bp],
             gez: vec![0.0; bp],
@@ -771,10 +766,13 @@ fn penalty_pass(
 pub struct NativeBackend {
     cfg: NativeConfig,
     net: Mlp,
-    /// Diffusion coefficient; trainable iff `loss == InverseConst`.
+    /// The hoisted weak form: eps/b/c as scalars or per-quadrature-
+    /// point tables (step-invariant, never re-evaluated).
+    form: VariationalForm,
+    /// Loss family id derived from mode + form at construction.
+    kind: &'static str,
+    /// Trainable scalar diffusion (`loss == InverseConst` only).
     eps: f64,
-    bx: f64,
-    by: f64,
     // Adam state over net params (+ eps slot when trainable)
     m: Vec<f64>,
     v: Vec<f64>,
@@ -818,14 +816,26 @@ impl NativeBackend {
         ))?;
         ensure!(cfg.nb >= 4, "need at least 4 boundary samples");
         let trainable_eps = cfg.loss == NativeLoss::InverseConst;
-        let two_head = matches!(cfg.loss, NativeLoss::InverseSpace { .. });
-        let (eps, bx, by) = match cfg.loss {
-            NativeLoss::Forward { eps, bx, by } => (eps, bx, by),
-            NativeLoss::InverseConst => (opts.eps_init, 0.0, 0.0),
-            // the eps *field* lives in the second network head; the
-            // scalar slot is unused on this path
-            NativeLoss::InverseSpace { bx, by } => (1.0, bx, by),
+        let two_head = cfg.loss == NativeLoss::InverseSpace;
+        // hoist the problem's coefficient fields once: constants stay
+        // scalars (GEMV-alpha fast path), varying fields become
+        // per-quadrature-point tables
+        let form = VariationalForm::from_problem(src.problem, dom);
+        let kind: &'static str = match cfg.loss {
+            NativeLoss::InverseConst => "inverse_const",
+            NativeLoss::InverseSpace => "inverse_space",
+            NativeLoss::Forward => {
+                match (form.has_reaction(), form.has_convection()) {
+                    (true, true) => "cd_reaction",
+                    (true, false) => "helmholtz",
+                    (false, true) => "cd",
+                    (false, false) => "poisson",
+                }
+            }
         };
+        // the scalar slot is only meaningful when trainable; on the
+        // other modes eps comes from the form / the network head
+        let eps = if trainable_eps { opts.eps_init } else { 0.0 };
 
         let net = if two_head {
             Mlp::glorot_two_head(&cfg.layers, opts.seed)?
@@ -844,8 +854,7 @@ impl NativeBackend {
             bd_pts.iter().flat_map(|p| [p[0], p[1]]).collect();
 
         let (sensor_flat, sensor_u) = if trainable_eps || two_head {
-            ensure!(cfg.ns > 0,
-                    "{} needs ns > 0 sensor points", cfg.loss.kind());
+            ensure!(cfg.ns > 0, "{kind} needs ns > 0 sensor points");
             let pts = src.mesh.sample_interior(cfg.ns, opts.seed + 1);
             let vals: Vec<f64> = pts
                 .iter()
@@ -867,17 +876,31 @@ impl NativeBackend {
             (Vec::new(), Vec::new())
         };
 
-        let n_threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(dom.ne.max(1));
+        // FASTVPINNS_THREADS pins the worker count: thread chunking
+        // decides the floating-point reduction order, so a pinned
+        // count makes a fixed-seed run bit-reproducible across
+        // machines (the CI acceptance gate relies on this). An
+        // unparsable value errors rather than silently unpinning.
+        let n_threads = match std::env::var("FASTVPINNS_THREADS") {
+            Ok(v) => v
+                .parse::<usize>()
+                .ok()
+                .filter(|&n| n > 0)
+                .ok_or_else(|| anyhow!(
+                    "FASTVPINNS_THREADS must be a positive integer, \
+                     got '{v}'"))?,
+            Err(_) => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        }
+        .min(dom.ne.max(1));
 
         let mut backend = NativeBackend {
             cfg: cfg.clone(),
             net,
+            form,
+            kind,
             eps,
-            bx,
-            by,
             m: vec![0.0; n_opt],
             v: vec![0.0; n_opt],
             ne: dom.ne,
@@ -1045,124 +1068,223 @@ impl NativeBackend {
         Ok(StepStats { loss, var_loss, bd_loss, extra })
     }
 
+    /// How the diffusion coefficient enters the contraction: `Some(s)`
+    /// is the scalar fast path (folded into GEMV alphas — the
+    /// pre-form closed form), `None` means a per-point field (the
+    /// form's eps table, or the network head on `InverseSpace`).
+    fn eps_scale(&self) -> Option<f64> {
+        match self.cfg.loss {
+            NativeLoss::InverseConst => Some(self.eps),
+            NativeLoss::InverseSpace => None,
+            NativeLoss::Forward => self.form.eps.constant(),
+        }
+    }
+
     /// The per-chunk worker (runs on scoped threads): batched forward
-    /// over element blocks, blocked residual contraction against the
-    /// `G_x`/`G_y`/`V` slabs, then one batched reverse pass per block.
-    ///
-    /// For the two-head inverse-space loss, the eps *field* enters the
-    /// contraction per quadrature point — the tangents are scaled by
-    /// `eps(x_q)` before the `G_x`/`G_y` products, so the same blocked
-    /// GEMV path covers coefficient fields — and the backward seeds
-    /// split three ways: the field adjoint `seed_e` (pre-scaling) plus
-    /// the eps-scaled tangent adjoints `seed_x`/`seed_y`.
+    /// over element blocks, the generalized blocked residual
+    /// contraction, the backward seeds, then one batched reverse pass
+    /// per block.
     fn element_chunk(&self, lo: usize, hi: usize, slot: &mut ThreadSlot) {
-        let (nt, nq) = (self.nt, self.nq);
-        let cr = 2.0 / (self.ne * nt) as f64;
-        let conv = self.bx != 0.0 || self.by != 0.0;
-        let space =
-            matches!(self.cfg.loss, NativeLoss::InverseSpace { .. });
+        let nq = self.nq;
+        let space = self.cfg.loss == NativeLoss::InverseSpace;
         let be = self.block_elems;
         let ThreadSlot { ws, partial } = slot;
         for blk in (lo..hi).step_by(be) {
             let bhi = (blk + be).min(hi);
-            let nbl = bhi - blk;
-            let npts = nbl * nq;
+            let npts = (bhi - blk) * nq;
             let pts = &self.quad_xy[2 * blk * nq..2 * bhi * nq];
-            self.net.forward_block(ws, pts, npts, true);
-            if conv {
-                for p in 0..npts {
-                    ws.dq[p] = self.bx * ws.ux[p] + self.by * ws.uy[p];
+            self.net.forward_block(ws, pts, npts, space);
+            self.block_residual(ws, blk, bhi, partial);
+            self.block_seeds(ws, blk, bhi);
+            self.net.backward_block(ws, &mut partial.grad, pts, npts,
+                                    space);
+        }
+    }
+
+    /// The generalized residual of one element block (forward tapes
+    /// already in `ws`):
+    /// `r[e,j] = sum_q eps_q (Gx ux + Gy uy) + sum_q V (b_q.grad u +
+    /// c_q u) - F`. Constant eps folds into the products as a scalar
+    /// (identical operations to the pre-form closed form); per-point
+    /// eps (table or network head) scales the tangents first — the
+    /// same blocked GEMVs either way. Accumulates `var_sq` and, on the
+    /// trainable-scalar mode, `geps` into `partial`.
+    fn block_residual(
+        &self,
+        ws: &mut Workspace,
+        blk: usize,
+        bhi: usize,
+        partial: &mut Partial,
+    ) {
+        let (nt, nq) = (self.nt, self.nq);
+        let cr = 2.0 / (self.ne * nt) as f64;
+        let nbl = bhi - blk;
+        let npts = nbl * nq;
+        let p0 = blk * nq;
+        let space = self.cfg.loss == NativeLoss::InverseSpace;
+        let eps_scale = self.eps_scale();
+        let conv = self.form.has_convection();
+        let reac = self.form.has_reaction();
+        // V-contracted point values: convection + reaction share one
+        // product against the V slab
+        if conv || reac {
+            for p in 0..npts {
+                let gp = p0 + p;
+                let mut v = 0.0;
+                if conv {
+                    v += self.form.bx.at(gp) * ws.ux[p]
+                        + self.form.by.at(gp) * ws.uy[p];
                 }
+                if reac {
+                    v += self.form.c.at(gp) * ws.u[p];
+                }
+                ws.dq[p] = v;
             }
+        }
+        // per-point diffusion fields fold into the tangents
+        if eps_scale.is_none() {
             if space {
-                // fold the eps head into the tangents per point
                 for p in 0..npts {
                     ws.uxs[p] = ws.epsv[p] * ws.ux[p];
                     ws.uys[p] = ws.epsv[p] * ws.uy[p];
                 }
-            }
-            // residual r[e,j] as blocked products per element:
-            // c = Gx @ (eps? ux) + Gy @ (eps? uy), conv = V @ (b.grad u)
-            for ei in 0..nbl {
-                let e = blk + ei;
-                let gbase = e * nt * nq;
-                let slab = gbase..gbase + nt * nq;
-                let pr = ei * nq..(ei + 1) * nq;
-                let jr = ei * nt..(ei + 1) * nt;
-                let (tx, ty): (&[f64], &[f64]) = if space {
-                    (&ws.uxs[pr.clone()], &ws.uys[pr.clone()])
-                } else {
-                    (&ws.ux[pr.clone()], &ws.uy[pr.clone()])
-                };
-                gemv(nt, nq, 1.0, &self.gx[slab.clone()], false, tx, 0.0,
-                     &mut ws.cvals[jr.clone()]);
-                gemv(nt, nq, 1.0, &self.gy[slab.clone()], false, ty, 1.0,
-                     &mut ws.cvals[jr.clone()]);
-                if conv {
-                    gemv(nt, nq, 1.0, &self.vmat[slab], false,
-                         &ws.dq[pr], 0.0, &mut ws.resid[jr.clone()]);
-                } else {
-                    ws.resid[jr.clone()].fill(0.0);
-                }
-                let fb = e * nt;
-                // the scalar eps multiplies the contraction on the
-                // fixed/const paths; on the space path it is already
-                // folded in per point (scale 1)
-                let escale = if space { 1.0 } else { self.eps };
-                for j in 0..nt {
-                    let c = ws.cvals[ei * nt + j];
-                    let r = escale * c + ws.resid[ei * nt + j]
-                        - self.f_mat[fb + j];
-                    ws.resid[ei * nt + j] = r;
-                    partial.var_sq += r * r;
-                    // scalar-eps gradient; on the space path c is
-                    // already eps-folded, so the sum would be neither
-                    // meaningful nor used — skip it
-                    if !space {
-                        partial.geps += cr * r * c;
-                    }
+            } else {
+                for p in 0..npts {
+                    let e = self.form.eps.at(p0 + p);
+                    ws.uxs[p] = e * ws.ux[p];
+                    ws.uys[p] = e * ws.uy[p];
                 }
             }
-            // backward seeds: the residual adjoint pulled back to the
-            // per-point tangents, gux = (cr r)^T (eps Gx + bx V) etc.;
-            // on the space path additionally the field adjoint
-            // geps_q = (cr r)^T (Gx ux + Gy uy) per quadrature point.
-            ws.seed_u[..npts].fill(0.0);
-            for ei in 0..nbl {
-                let e = blk + ei;
-                let gbase = e * nt * nq;
-                let slab = gbase..gbase + nt * nq;
-                let jr = ei * nt..(ei + 1) * nt;
-                let pr = ei * nq..(ei + 1) * nq;
-                let escale = if space { 1.0 } else { self.eps };
-                gemv(nt, nq, cr * escale, &self.gx[slab.clone()], true,
-                     &ws.resid[jr.clone()], 0.0,
-                     &mut ws.seed_x[pr.clone()]);
-                gemv(nt, nq, cr * escale, &self.gy[slab.clone()], true,
-                     &ws.resid[jr.clone()], 0.0,
-                     &mut ws.seed_y[pr.clone()]);
+        }
+        let escale = eps_scale.unwrap_or(1.0);
+        let track_geps = self.trainable_eps();
+        for ei in 0..nbl {
+            let e = blk + ei;
+            let gbase = e * nt * nq;
+            let slab = gbase..gbase + nt * nq;
+            let pr = ei * nq..(ei + 1) * nq;
+            let jr = ei * nt..(ei + 1) * nt;
+            let (tx, ty): (&[f64], &[f64]) = if eps_scale.is_none() {
+                (&ws.uxs[pr.clone()], &ws.uys[pr.clone()])
+            } else {
+                (&ws.ux[pr.clone()], &ws.uy[pr.clone()])
+            };
+            gemv(nt, nq, 1.0, &self.gx[slab.clone()], false, tx, 0.0,
+                 &mut ws.cvals[jr.clone()]);
+            gemv(nt, nq, 1.0, &self.gy[slab.clone()], false, ty, 1.0,
+                 &mut ws.cvals[jr.clone()]);
+            if conv || reac {
+                gemv(nt, nq, 1.0, &self.vmat[slab], false, &ws.dq[pr],
+                     0.0, &mut ws.resid[jr.clone()]);
+            } else {
+                ws.resid[jr.clone()].fill(0.0);
+            }
+            let fb = e * nt;
+            for j in 0..nt {
+                let c = ws.cvals[ei * nt + j];
+                let r = escale * c + ws.resid[ei * nt + j]
+                    - self.f_mat[fb + j];
+                ws.resid[ei * nt + j] = r;
+                partial.var_sq += r * r;
+                // on the trainable-scalar mode `c` is the pre-eps
+                // contraction, so this is exactly dL/deps
+                if track_geps {
+                    partial.geps += cr * r * c;
+                }
+            }
+        }
+    }
+
+    /// Backward seeds of one block from the residuals in `ws.resid`:
+    /// `seed_x/seed_y = eps_q (cr Gx^T r / cr Gy^T r) + b_q (cr V^T r)`,
+    /// `seed_u = c_q (cr V^T r)` (the reaction adjoint), and on the
+    /// two-head mode the field adjoint
+    /// `seed_e = (cr Gx^T r) ux + (cr Gy^T r) uy` per quadrature point.
+    fn block_seeds(&self, ws: &mut Workspace, blk: usize, bhi: usize) {
+        let (nt, nq) = (self.nt, self.nq);
+        let cr = 2.0 / (self.ne * nt) as f64;
+        let nbl = bhi - blk;
+        let npts = nbl * nq;
+        let p0 = blk * nq;
+        let space = self.cfg.loss == NativeLoss::InverseSpace;
+        let eps_scale = self.eps_scale();
+        let conv = self.form.has_convection();
+        let reac = self.form.has_reaction();
+        let escale = eps_scale.unwrap_or(1.0);
+        ws.seed_u[..npts].fill(0.0);
+        for ei in 0..nbl {
+            let e = blk + ei;
+            let gbase = e * nt * nq;
+            let slab = gbase..gbase + nt * nq;
+            let jr = ei * nt..(ei + 1) * nt;
+            let pr = ei * nq..(ei + 1) * nq;
+            gemv(nt, nq, cr * escale, &self.gx[slab.clone()], true,
+                 &ws.resid[jr.clone()], 0.0, &mut ws.seed_x[pr.clone()]);
+            gemv(nt, nq, cr * escale, &self.gy[slab.clone()], true,
+                 &ws.resid[jr.clone()], 0.0, &mut ws.seed_y[pr.clone()]);
+            if eps_scale.is_none() {
+                // seed_x/seed_y hold cr Gx^T r / cr Gy^T r: on the
+                // two-head mode combine them into the field adjoint,
+                // then scale by the per-point eps for the tangent
+                // pull-back
                 if space {
-                    // seed_x/seed_y hold cr * Gx^T r / cr * Gy^T r:
-                    // combine into the field adjoint, then scale them
-                    // by eps(x_q) for the tangent pull-back
                     for p in pr.clone() {
                         ws.seed_e[p] = ws.seed_x[p] * ws.ux[p]
                             + ws.seed_y[p] * ws.uy[p];
                         ws.seed_x[p] *= ws.epsv[p];
                         ws.seed_y[p] *= ws.epsv[p];
                     }
-                }
-                if conv {
-                    gemv(nt, nq, cr * self.bx, &self.vmat[slab.clone()],
-                         true, &ws.resid[jr.clone()], 1.0,
-                         &mut ws.seed_x[pr.clone()]);
-                    gemv(nt, nq, cr * self.by, &self.vmat[slab], true,
-                         &ws.resid[jr], 1.0, &mut ws.seed_y[pr]);
+                } else {
+                    for p in pr.clone() {
+                        let epq = self.form.eps.at(p0 + p);
+                        ws.seed_x[p] *= epq;
+                        ws.seed_y[p] *= epq;
+                    }
                 }
             }
-            self.net.backward_block(ws, &mut partial.grad, pts, npts,
-                                    true);
+            if conv || reac {
+                gemv(nt, nq, cr, &self.vmat[slab], true,
+                     &ws.resid[jr], 0.0, &mut ws.tv[pr.clone()]);
+                for p in pr {
+                    let gp = p0 + p;
+                    let tv = ws.tv[p];
+                    if conv {
+                        ws.seed_x[p] += self.form.bx.at(gp) * tv;
+                        ws.seed_y[p] += self.form.by.at(gp) * tv;
+                    }
+                    if reac {
+                        ws.seed_u[p] = self.form.c.at(gp) * tv;
+                    }
+                }
+            }
         }
+    }
+
+    /// Test hook: run the forward + residual contraction sequentially
+    /// and collect `r[e,j]` for every element — the regression surface
+    /// the closed-form bit-for-bit property test compares against.
+    #[cfg(test)]
+    fn residuals_for_test(&mut self) -> Vec<f64> {
+        let mut out = vec![0.0; self.ne * self.nt];
+        let mut slots = std::mem::take(&mut self.slots);
+        {
+            let slot = &mut slots[0];
+            slot.partial.reset();
+            let (nt, nq, be) = (self.nt, self.nq, self.block_elems);
+            let space = self.cfg.loss == NativeLoss::InverseSpace;
+            for blk in (0..self.ne).step_by(be) {
+                let bhi = (blk + be).min(self.ne);
+                let npts = (bhi - blk) * nq;
+                let pts = &self.quad_xy[2 * blk * nq..2 * bhi * nq];
+                self.net.forward_block(&mut slot.ws, pts, npts, space);
+                self.block_residual(&mut slot.ws, blk, bhi,
+                                    &mut slot.partial);
+                out[blk * nt..bhi * nt]
+                    .copy_from_slice(&slot.ws.resid[..(bhi - blk) * nt]);
+            }
+        }
+        self.slots = slots;
+        out
     }
 }
 
@@ -1172,7 +1294,7 @@ impl Backend for NativeBackend {
     }
 
     fn loss_kind(&self) -> &str {
-        self.cfg.loss.kind()
+        self.kind
     }
 
     fn step(&mut self, step: usize, lr: f64) -> Result<StepStats> {
@@ -1234,7 +1356,92 @@ mod tests {
     use crate::fem::assembly;
     use crate::fem::quadrature::QuadKind;
     use crate::mesh::generators;
-    use crate::problems::PoissonSin;
+    use crate::problems::{CoeffVariability, PoissonSin, Problem};
+
+    /// Scratch problem for gradchecks: any combination of constant
+    /// eps/b/c, each optionally promoted to a spatially-varying field
+    /// via the variability flags (the varying fields perturb the
+    /// constants so the tables are genuinely non-constant).
+    struct TestProblem {
+        eps: f64,
+        b: (f64, f64),
+        c: f64,
+        var: CoeffVariability,
+    }
+
+    impl TestProblem {
+        fn constant(eps: f64, b: (f64, f64), c: f64) -> TestProblem {
+            TestProblem { eps, b, c, var: CoeffVariability::CONST }
+        }
+    }
+
+    impl Problem for TestProblem {
+        fn name(&self) -> &str {
+            "test_problem"
+        }
+        fn forcing(&self, x: f64, y: f64) -> f64 {
+            x.sin() * y.cos() + 0.5
+        }
+        fn boundary(&self, x: f64, y: f64) -> f64 {
+            self.exact(x, y).unwrap()
+        }
+        fn exact(&self, x: f64, y: f64) -> Option<f64> {
+            Some((1.3 * x).sin() * (0.7 * y).cos())
+        }
+        fn eps(&self) -> f64 {
+            self.eps
+        }
+        fn b(&self) -> (f64, f64) {
+            self.b
+        }
+        fn c(&self) -> f64 {
+            self.c
+        }
+        fn eps_at(&self, x: f64, y: f64) -> f64 {
+            if self.var.eps {
+                self.eps * (1.0 + 0.3 * (x + y).sin())
+            } else {
+                self.eps
+            }
+        }
+        fn b_at(&self, x: f64, y: f64) -> (f64, f64) {
+            if self.var.b {
+                (self.b.0 + 0.2 * y.cos(), self.b.1 + 0.3 * x.sin())
+            } else {
+                self.b
+            }
+        }
+        fn c_at(&self, x: f64, y: f64) -> f64 {
+            if self.var.c {
+                self.c + 0.2 * (x * y).cos()
+            } else {
+                self.c
+            }
+        }
+        fn coeff_variability(&self) -> CoeffVariability {
+            self.var
+        }
+    }
+
+    fn build_backend(
+        mesh_n: usize,
+        layers: &[usize],
+        loss: NativeLoss,
+        nb: usize,
+        ns: usize,
+        problem: &dyn Problem,
+    ) -> NativeBackend {
+        let mesh = generators::unit_square(mesh_n);
+        let dom = assembly::assemble(&mesh, 2, 3, QuadKind::GaussLegendre);
+        let src = DataSource {
+            mesh: &mesh,
+            domain: Some(&dom),
+            problem,
+            sensor_values: None,
+        };
+        let cfg = NativeConfig { layers: layers.to_vec(), loss, nb, ns };
+        NativeBackend::new(&cfg, &src, &BackendOpts::default()).unwrap()
+    }
 
     fn tiny_backend(loss: NativeLoss, ns: usize) -> NativeBackend {
         tiny_backend_nb(loss, ns, 8)
@@ -1245,22 +1452,8 @@ mod tests {
         ns: usize,
         nb: usize,
     ) -> NativeBackend {
-        let mesh = generators::unit_square(1);
-        let dom = assembly::assemble(&mesh, 2, 3, QuadKind::GaussLegendre);
         let problem = PoissonSin::new(std::f64::consts::PI);
-        let src = DataSource {
-            mesh: &mesh,
-            domain: Some(&dom),
-            problem: &problem,
-            sensor_values: None,
-        };
-        let cfg = NativeConfig {
-            layers: vec![2, 4, 1],
-            loss,
-            nb,
-            ns,
-        };
-        NativeBackend::new(&cfg, &src, &BackendOpts::default()).unwrap()
+        build_backend(1, &[2, 4, 1], loss, nb, ns, &problem)
     }
 
     /// `ln(1 + e^z)` on Dual2 with the same branch structure as the
@@ -1288,12 +1481,12 @@ mod tests {
             }
         };
         let n_net = b.net.n_params();
-        let space =
-            matches!(b.cfg.loss, NativeLoss::InverseSpace { .. });
-        let eps_d = if b.trainable_eps() {
+        let space = b.cfg.loss == NativeLoss::InverseSpace;
+        let inv_const = b.trainable_eps();
+        let eps_d = if inv_const {
             p(n_net)
         } else {
-            Dual2::con(b.eps)
+            Dual2::con(0.0) // unused: form or head supplies eps
         };
         let wmax = b.net.max_width();
         // forward with tangent-carrying Dual2 arithmetic; the last
@@ -1361,29 +1554,41 @@ mod tests {
         let (ne, nt, nq) = (b.ne, b.nt, b.nq);
         let mut var = Dual2::con(0.0);
         for e in 0..ne {
+            let mut uv = Vec::with_capacity(nq);
             let mut ux = Vec::with_capacity(nq);
             let mut uy = Vec::with_capacity(nq);
             let mut epsq = Vec::with_capacity(nq);
             for q in 0..nq {
                 let x = b.quad_xy[2 * (e * nq + q)];
                 let y = b.quad_xy[2 * (e * nq + q) + 1];
-                let (_, dx, dy, ep) = fwd(x, y);
+                let (u, dx, dy, ep) = fwd(x, y);
+                uv.push(u);
                 ux.push(dx);
                 uy.push(dy);
                 epsq.push(ep);
             }
             for j in 0..nt {
                 let base = (e * nt + j) * nq;
-                let mut c = Dual2::con(0.0);
-                let mut conv = Dual2::con(0.0);
+                let mut r = -Dual2::con(b.f_mat[e * nt + j]);
                 for q in 0..nq {
+                    let gp = e * nq + q;
                     let g = ux[q] * b.gx[base + q] + uy[q] * b.gy[base + q];
-                    c = c + if space { epsq[q] * g } else { g };
-                    conv = conv
-                        + (ux[q] * b.bx + uy[q] * b.by) * b.vmat[base + q];
+                    // eps per point: head field (two-head), trainable
+                    // scalar (inverse_const) or the hoisted form
+                    let ep = if space {
+                        epsq[q]
+                    } else if inv_const {
+                        eps_d
+                    } else {
+                        Dual2::con(b.form.eps.at(gp))
+                    };
+                    let conv = (ux[q] * b.form.bx.at(gp)
+                        + uy[q] * b.form.by.at(gp))
+                        * b.vmat[base + q];
+                    let reac =
+                        uv[q] * (b.form.c.at(gp) * b.vmat[base + q]);
+                    r = r + ep * g + conv + reac;
                 }
-                let ec = if space { c } else { eps_d * c };
-                let r = ec + conv - Dual2::con(b.f_mat[e * nt + j]);
                 var = var + r * r;
             }
         }
@@ -1430,15 +1635,70 @@ mod tests {
 
     #[test]
     fn backprop_matches_dual2_poisson() {
-        let mut b = tiny_backend(
-            NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 }, 0);
+        let mut b = tiny_backend(NativeLoss::Forward, 0);
+        assert_eq!(b.loss_kind(), "poisson");
         check_grad(&mut b, 1e-10);
     }
 
     #[test]
     fn backprop_matches_dual2_convection() {
-        let mut b = tiny_backend(
-            NativeLoss::Forward { eps: 0.7, bx: 0.3, by: -0.2 }, 0);
+        let p = TestProblem::constant(0.7, (0.3, -0.2), 0.0);
+        let mut b =
+            build_backend(1, &[2, 4, 1], NativeLoss::Forward, 8, 0, &p);
+        assert_eq!(b.loss_kind(), "cd");
+        check_grad(&mut b, 1e-10);
+    }
+
+    #[test]
+    fn backprop_matches_dual2_reaction_helmholtz() {
+        // constant reaction c = -k^2: the Helmholtz mass term through
+        // the V premultiplier
+        let p = TestProblem::constant(1.0, (0.0, 0.0), -6.25);
+        let mut b =
+            build_backend(1, &[2, 4, 1], NativeLoss::Forward, 8, 0, &p);
+        assert_eq!(b.loss_kind(), "helmholtz");
+        check_grad(&mut b, 1e-10);
+    }
+
+    #[test]
+    fn backprop_matches_dual2_variable_convection() {
+        let p = TestProblem {
+            eps: 0.8,
+            b: (0.4, -0.3),
+            c: 0.0,
+            var: CoeffVariability { eps: false, b: true, c: false },
+        };
+        let mut b =
+            build_backend(1, &[2, 4, 1], NativeLoss::Forward, 8, 0, &p);
+        check_grad(&mut b, 1e-10);
+    }
+
+    #[test]
+    fn backprop_matches_dual2_variable_eps_forward() {
+        // a *fixed* eps(x,y) table on the forward mode: same tangent
+        // scaling as the two-head path, no field adjoint
+        let p = TestProblem {
+            eps: 1.2,
+            b: (0.0, 0.0),
+            c: 0.0,
+            var: CoeffVariability { eps: true, b: false, c: false },
+        };
+        let mut b =
+            build_backend(1, &[2, 4, 1], NativeLoss::Forward, 8, 0, &p);
+        check_grad(&mut b, 1e-10);
+    }
+
+    #[test]
+    fn backprop_matches_dual2_all_variable_coefficients() {
+        // eps/b/c all tabulated at once, reaction included
+        let p = TestProblem {
+            eps: 0.9,
+            b: (0.3, -0.2),
+            c: -1.5,
+            var: CoeffVariability { eps: true, b: true, c: true },
+        };
+        let mut b =
+            build_backend(2, &[2, 4, 1], NativeLoss::Forward, 12, 0, &p);
         check_grad(&mut b, 1e-10);
     }
 
@@ -1449,18 +1709,45 @@ mod tests {
     }
 
     #[test]
+    fn backprop_matches_dual2_inverse_eps_with_conv_and_reaction() {
+        // the trainable scalar eps composes with the form's fixed
+        // convection + reaction terms
+        let p = TestProblem::constant(0.5, (0.2, -0.1), -0.8);
+        let mut b = build_backend(1, &[2, 4, 1], NativeLoss::InverseConst,
+                                  8, 4, &p);
+        check_grad(&mut b, 1e-10);
+    }
+
+    #[test]
     fn backprop_matches_dual2_inverse_space() {
-        // full two-head step: trunk, u head, eps head, sensor term
-        let mut b = tiny_backend(
-            NativeLoss::InverseSpace { bx: 1.0, by: 0.0 }, 4);
+        // full two-head step: trunk, u head, eps head, sensor term,
+        // constant convection from the form
+        let p = TestProblem::constant(1.0, (1.0, 0.0), 0.0);
+        let mut b = build_backend(1, &[2, 4, 1], NativeLoss::InverseSpace,
+                                  8, 4, &p);
         assert!(b.net.two_head());
         check_grad(&mut b, 1e-10);
     }
 
     #[test]
     fn backprop_matches_dual2_inverse_space_no_convection() {
-        let mut b = tiny_backend(
-            NativeLoss::InverseSpace { bx: 0.0, by: 0.0 }, 5);
+        let mut b = tiny_backend(NativeLoss::InverseSpace, 5);
+        check_grad(&mut b, 1e-10);
+    }
+
+    #[test]
+    fn backprop_matches_dual2_inverse_space_with_reaction_and_var_b() {
+        // the eps head composes with a variable convection field and a
+        // reaction term: all three seeds (seed_e, scaled seed_x/y,
+        // seed_u) live in the same backward pass
+        let p = TestProblem {
+            eps: 1.0,
+            b: (0.5, -0.4),
+            c: -1.1,
+            var: CoeffVariability { eps: false, b: true, c: true },
+        };
+        let mut b = build_backend(1, &[2, 4, 1], NativeLoss::InverseSpace,
+                                  8, 4, &p);
         check_grad(&mut b, 1e-10);
     }
 
@@ -1469,49 +1756,50 @@ mod tests {
         // block_elems = 1 on a 4-element mesh forces multiple blocks
         // per chunk; nb = 25 > block_pts forces chunked penalty blocks
         // with the eps head seeds zeroed per block.
-        let mesh = generators::unit_square(2);
-        let dom = assembly::assemble(&mesh, 2, 3, QuadKind::GaussLegendre);
-        let problem = PoissonSin::new(std::f64::consts::PI);
-        let src = DataSource {
-            mesh: &mesh,
-            domain: Some(&dom),
-            problem: &problem,
-            sensor_values: None,
-        };
-        let cfg = NativeConfig {
-            layers: vec![2, 4, 1],
-            loss: NativeLoss::InverseSpace { bx: 0.3, by: -0.2 },
-            nb: 25,
-            ns: 6,
+        let p = TestProblem::constant(1.0, (0.3, -0.2), 0.0);
+        let mut b = build_backend(2, &[2, 4, 1], NativeLoss::InverseSpace,
+                                  25, 6, &p);
+        b.set_block_elems(1);
+        check_grad(&mut b, 1e-10);
+    }
+
+    #[test]
+    fn backprop_matches_dual2_reaction_ragged_blocks() {
+        // variable reaction + convection across ragged single-element
+        // blocks: the seed_u reaction adjoint must reset per block
+        let p = TestProblem {
+            eps: 1.0,
+            b: (0.3, -0.2),
+            c: -2.0,
+            var: CoeffVariability { eps: true, b: true, c: true },
         };
         let mut b =
-            NativeBackend::new(&cfg, &src, &BackendOpts::default())
-                .unwrap();
+            build_backend(2, &[2, 4, 1], NativeLoss::Forward, 25, 0, &p);
         b.set_block_elems(1);
+        check_grad(&mut b, 1e-10);
+    }
+
+    #[test]
+    fn backprop_matches_dual2_reaction_one_wide_layers() {
+        // 1-wide then 3-wide hidden layers through the reaction and
+        // variable-convection adjoints
+        let p = TestProblem {
+            eps: 0.7,
+            b: (0.1, -0.4),
+            c: -1.3,
+            var: CoeffVariability { eps: false, b: true, c: true },
+        };
+        let mut b = build_backend(1, &[2, 1, 3, 1], NativeLoss::Forward,
+                                  8, 0, &p);
         check_grad(&mut b, 1e-10);
     }
 
     #[test]
     fn backprop_matches_dual2_inverse_space_one_wide_heads() {
         // 1-wide last hidden layer: both heads read a width-1 trunk
-        let mesh = generators::unit_square(1);
-        let dom = assembly::assemble(&mesh, 2, 3, QuadKind::GaussLegendre);
-        let problem = PoissonSin::new(std::f64::consts::PI);
-        let src = DataSource {
-            mesh: &mesh,
-            domain: Some(&dom),
-            problem: &problem,
-            sensor_values: None,
-        };
-        let cfg = NativeConfig {
-            layers: vec![2, 1, 1],
-            loss: NativeLoss::InverseSpace { bx: 0.1, by: -0.4 },
-            nb: 8,
-            ns: 3,
-        };
-        let mut b =
-            NativeBackend::new(&cfg, &src, &BackendOpts::default())
-                .unwrap();
+        let p = TestProblem::constant(1.0, (0.1, -0.4), 0.0);
+        let mut b = build_backend(1, &[2, 1, 1], NativeLoss::InverseSpace,
+                                  8, 3, &p);
         check_grad(&mut b, 1e-10);
     }
 
@@ -1519,33 +1807,43 @@ mod tests {
     fn backprop_matches_dual2_inverse_space_trunkless() {
         // layers [2, 1]: both heads read the raw (x, y) input — the
         // degenerate l == 0 branch of the head adjoints
-        let mesh = generators::unit_square(1);
-        let dom = assembly::assemble(&mesh, 2, 3, QuadKind::GaussLegendre);
-        let problem = PoissonSin::new(std::f64::consts::PI);
-        let src = DataSource {
-            mesh: &mesh,
-            domain: Some(&dom),
-            problem: &problem,
-            sensor_values: None,
-        };
-        let cfg = NativeConfig {
-            layers: vec![2, 1],
-            loss: NativeLoss::InverseSpace { bx: 1.0, by: 0.5 },
-            nb: 8,
-            ns: 3,
-        };
-        let mut b =
-            NativeBackend::new(&cfg, &src, &BackendOpts::default())
-                .unwrap();
+        let p = TestProblem::constant(1.0, (1.0, 0.5), 0.0);
+        let mut b = build_backend(1, &[2, 1], NativeLoss::InverseSpace,
+                                  8, 3, &p);
         check_grad(&mut b, 1e-10);
     }
 
     #[test]
     fn inverse_space_block_size_invariance() {
+        let p = TestProblem::constant(1.0, (1.0, 0.0), 0.0);
         let mk = || {
-            tiny_backend_nb(
-                NativeLoss::InverseSpace { bx: 1.0, by: 0.0 }, 4, 25)
+            build_backend(1, &[2, 4, 1], NativeLoss::InverseSpace, 25, 4,
+                          &p)
         };
+        let mut b1 = mk();
+        let mut b2 = mk();
+        b2.set_block_elems(1);
+        let (s1, g1) = b1.loss_and_grad().unwrap();
+        let (s2, g2) = b2.loss_and_grad().unwrap();
+        assert!((s1.loss - s2.loss).abs() < 1e-12 * (1.0 + s1.loss.abs()));
+        for (a, b) in g1.iter().zip(&g2) {
+            assert!((a - b).abs() < 1e-11 * (1.0 + a.abs()),
+                    "grad mismatch across block sizes: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn generalized_block_size_invariance() {
+        // variable eps/b/c tables must index by *global* quadrature
+        // point, not block-local offsets — block retiling is the test
+        let p = TestProblem {
+            eps: 0.9,
+            b: (0.3, -0.2),
+            c: -1.5,
+            var: CoeffVariability { eps: true, b: true, c: true },
+        };
+        let mk =
+            || build_backend(2, &[2, 4, 1], NativeLoss::Forward, 25, 0, &p);
         let mut b1 = mk();
         let mut b2 = mk();
         b2.set_block_elems(1);
@@ -1562,8 +1860,9 @@ mod tests {
     fn thread_slots_are_reused_across_steps() {
         // the hot path must not reallocate: every per-thread workspace
         // and partial-gradient buffer keeps its address across steps
-        let mut b = tiny_backend(
-            NativeLoss::InverseSpace { bx: 1.0, by: 0.0 }, 4);
+        let p = TestProblem::constant(1.0, (1.0, 0.0), 0.0);
+        let mut b = build_backend(1, &[2, 4, 1], NativeLoss::InverseSpace,
+                                  8, 4, &p);
         let ptrs: Vec<(*const f64, *const f64, *const f64)> = b
             .slots
             .iter()
@@ -1615,24 +1914,9 @@ mod tests {
     fn backprop_matches_dual2_with_ragged_blocks() {
         // block_elems = 1 on a 4-element mesh forces multiple blocks per
         // chunk; nb = 25 > block_pts = 9 forces chunked boundary blocks.
-        let mesh = generators::unit_square(2);
-        let dom = assembly::assemble(&mesh, 2, 3, QuadKind::GaussLegendre);
         let problem = PoissonSin::new(std::f64::consts::PI);
-        let src = DataSource {
-            mesh: &mesh,
-            domain: Some(&dom),
-            problem: &problem,
-            sensor_values: None,
-        };
-        let cfg = NativeConfig {
-            layers: vec![2, 4, 1],
-            loss: NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 },
-            nb: 25,
-            ns: 0,
-        };
-        let mut b =
-            NativeBackend::new(&cfg, &src, &BackendOpts::default())
-                .unwrap();
+        let mut b = build_backend(2, &[2, 4, 1], NativeLoss::Forward, 25,
+                                  0, &problem);
         b.set_block_elems(1);
         check_grad(&mut b, 1e-10);
     }
@@ -1640,24 +1924,9 @@ mod tests {
     #[test]
     fn backprop_matches_dual2_one_wide_hidden_layer() {
         // odd widths through the GEMM path: a 1-wide then 3-wide net
-        let mesh = generators::unit_square(1);
-        let dom = assembly::assemble(&mesh, 2, 3, QuadKind::GaussLegendre);
-        let problem = PoissonSin::new(std::f64::consts::PI);
-        let src = DataSource {
-            mesh: &mesh,
-            domain: Some(&dom),
-            problem: &problem,
-            sensor_values: None,
-        };
-        let cfg = NativeConfig {
-            layers: vec![2, 1, 3, 1],
-            loss: NativeLoss::Forward { eps: 1.0, bx: 0.1, by: -0.4 },
-            nb: 8,
-            ns: 0,
-        };
-        let mut b =
-            NativeBackend::new(&cfg, &src, &BackendOpts::default())
-                .unwrap();
+        let p = TestProblem::constant(1.0, (0.1, -0.4), 0.0);
+        let mut b = build_backend(1, &[2, 1, 3, 1], NativeLoss::Forward,
+                                  8, 0, &p);
         check_grad(&mut b, 1e-10);
     }
 
@@ -1665,10 +1934,8 @@ mod tests {
     fn block_size_does_not_change_the_gradient() {
         // same objective, different block tilings: the reductions are
         // reordered, so agreement is to roundoff, not bit-exact
-        let mut b1 = tiny_backend_nb(
-            NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 }, 0, 25);
-        let mut b2 = tiny_backend_nb(
-            NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 }, 0, 25);
+        let mut b1 = tiny_backend_nb(NativeLoss::Forward, 0, 25);
+        let mut b2 = tiny_backend_nb(NativeLoss::Forward, 0, 25);
         b2.set_block_elems(1);
         let (s1, g1) = b1.loss_and_grad().unwrap();
         let (s2, g2) = b2.loss_and_grad().unwrap();
@@ -1710,8 +1977,7 @@ mod tests {
 
     #[test]
     fn step_decreases_loss_on_tiny_problem() {
-        let mut b = tiny_backend(
-            NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 }, 0);
+        let mut b = tiny_backend(NativeLoss::Forward, 0);
         let first = b.step(1, 1e-2).unwrap();
         let mut last = first;
         for i in 2..=100 {
@@ -1724,8 +1990,7 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let run = || {
-            let mut b = tiny_backend(
-                NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 }, 0);
+            let mut b = tiny_backend(NativeLoss::Forward, 0);
             let mut out = 0.0;
             for i in 1..=20 {
                 out = b.step(i, 1e-3).unwrap().loss;
@@ -1737,13 +2002,135 @@ mod tests {
 
     #[test]
     fn predict_shape_and_determinism() {
-        let b = tiny_backend(
-            NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 }, 0);
+        let b = tiny_backend(NativeLoss::Forward, 0);
         let pts = [[0.2, 0.3], [0.8, 0.9]];
         let h = b.predict(&pts).unwrap();
         assert_eq!(h.len(), 1);
         assert_eq!(h[0].len(), 2);
         assert_eq!(b.predict(&pts).unwrap()[0], h[0]);
+    }
+
+    #[test]
+    fn generalized_contraction_reproduces_closed_form_bit_for_bit() {
+        // With constant eps/b and c = 0 the generalized path must take
+        // the scalar fast path: the *identical* floating-point
+        // operations as the pre-form closed-form residual
+        // `r = eps (Gx ux + Gy uy) + V (b . grad u) - F`. The reference
+        // transliterates the per-element gemv accumulation order
+        // exactly, so the comparison is to the bit, across random
+        // jittered meshes, nets and coefficients.
+        use crate::util::proptest::check_result;
+        check_result(
+            17,
+            12,
+            |r| {
+                (
+                    1 + (r.uniform() * 3.0) as usize, // mesh n in 1..=3
+                    r.uniform_in(0.0, 0.24),          // jitter amplitude
+                    r.uniform_in(0.3, 2.0),           // eps
+                    r.uniform_in(-0.6, 0.6),          // bx
+                    r.uniform_in(-0.6, 0.6),          // by
+                    1 + (r.uniform() * 1000.0) as u64, // net seed
+                )
+            },
+            |&(n, amp, eps, bx, by, seed)| {
+                let mesh = generators::skewed_square(n, amp);
+                let dom = assembly::assemble(&mesh, 2, 3,
+                                             QuadKind::GaussLegendre);
+                let p = TestProblem::constant(eps, (bx, by), 0.0);
+                let src = DataSource {
+                    mesh: &mesh,
+                    domain: Some(&dom),
+                    problem: &p,
+                    sensor_values: None,
+                };
+                let cfg = NativeConfig {
+                    layers: vec![2, 5, 1],
+                    loss: NativeLoss::Forward,
+                    nb: 8,
+                    ns: 0,
+                };
+                let opts = BackendOpts { seed, ..BackendOpts::default() };
+                let mut b = NativeBackend::new(&cfg, &src, &opts).unwrap();
+                let got = b.residuals_for_test();
+
+                let (nt, nq, be) = (b.nt, b.nq, b.block_elems);
+                let mut ws = Workspace::new(&b.net, be * nq, be * nt);
+                let conv = bx != 0.0 || by != 0.0;
+                let mut want = vec![0.0; b.ne * nt];
+                for blk in (0..b.ne).step_by(be) {
+                    let bhi = (blk + be).min(b.ne);
+                    let npts = (bhi - blk) * nq;
+                    let pts = &b.quad_xy[2 * blk * nq..2 * bhi * nq];
+                    b.net.forward_block(&mut ws, pts, npts, false);
+                    for ei in 0..bhi - blk {
+                        let e = blk + ei;
+                        for j in 0..nt {
+                            let base = (e * nt + j) * nq;
+                            let mut accx = 0.0;
+                            let mut accy = 0.0;
+                            for q in 0..nq {
+                                accx +=
+                                    b.gx[base + q] * ws.ux[ei * nq + q];
+                            }
+                            for q in 0..nq {
+                                accy +=
+                                    b.gy[base + q] * ws.uy[ei * nq + q];
+                            }
+                            let c = 1.0 * accx + 1.0 * accy;
+                            let mut cv = 0.0;
+                            if conv {
+                                let mut acc = 0.0;
+                                for q in 0..nq {
+                                    let d = bx * ws.ux[ei * nq + q]
+                                        + by * ws.uy[ei * nq + q];
+                                    acc += b.vmat[base + q] * d;
+                                }
+                                cv = 1.0 * acc;
+                            }
+                            want[e * nt + j] =
+                                eps * c + cv - b.f_mat[e * nt + j];
+                        }
+                    }
+                }
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    if g.to_bits() != w.to_bits() {
+                        return Err(format!(
+                            "resid[{i}]: {g:e} != closed form {w:e}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn tabulated_constants_match_scalar_path_to_roundoff() {
+        // ForceVariable reroutes the same PDE through the table path;
+        // values agree with the scalar path to roundoff (the operation
+        // *order* differs — that is the point of the two paths)
+        let p = TestProblem::constant(0.8, (0.4, -0.3), -1.2);
+        let pv = crate::problems::ForceVariable::new(TestProblem {
+            eps: 0.8,
+            b: (0.4, -0.3),
+            c: -1.2,
+            var: CoeffVariability::CONST,
+        });
+        let mut bc =
+            build_backend(2, &[2, 4, 1], NativeLoss::Forward, 12, 0, &p);
+        let mut bt =
+            build_backend(2, &[2, 4, 1], NativeLoss::Forward, 12, 0, &pv);
+        assert!(bc.eps_scale().is_some(), "scalar fast path expected");
+        assert!(bt.eps_scale().is_none(), "table path expected");
+        let (sc, gc) = bc.loss_and_grad().unwrap();
+        let (st, gt) = bt.loss_and_grad().unwrap();
+        assert!((sc.loss - st.loss).abs() < 1e-12 * (1.0 + sc.loss.abs()),
+                "loss {} vs {}", sc.loss, st.loss);
+        for (a, b) in gc.iter().zip(&gt) {
+            assert!((a - b).abs() < 1e-11 * (1.0 + a.abs()),
+                    "grad mismatch across paths: {a} vs {b}");
+        }
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! End-to-end tests of the native pure-Rust backend: training smoke
-//! (loss must drop >= 10x in 500 iters), FEM cross-validation of the
-//! trained network, the inverse tier (scalar-eps recovery to paper
-//! accuracy and the two-head eps-field smoke — `#[ignore]`d in the
-//! debug-mode default suite; the CI inverse-tier job runs them in
-//! release via the filter `inverse` + `--include-ignored`), and
-//! backend/coordinator integration. No artifacts, no XLA.
+//! (loss must drop >= 10x in 500 iters) for Poisson and the
+//! generalized-form scenarios (Helmholtz reaction term, hoisted
+//! variable-convection tables), FEM cross-validation of trained
+//! networks, the inverse tier (scalar-eps recovery to paper accuracy
+//! and the two-head eps-field smoke) and the helmholtz/cd_var
+//! convergence tier — both tiers `#[ignore]`d in the debug-mode
+//! default suite; the CI release-tier job runs them in release via
+//! name filters + `--include-ignored` — and backend/coordinator
+//! integration. No artifacts, no XLA.
 
 use fastvpinns::coordinator::metrics::{eval_grid, ErrorNorms};
 use fastvpinns::coordinator::schedule::LrSchedule;
@@ -14,7 +17,8 @@ use fastvpinns::fem::quadrature::QuadKind;
 use fastvpinns::fem_solver::{self, FemProblem};
 use fastvpinns::mesh::generators;
 use fastvpinns::problems::{
-    InverseConstPoisson, InverseSpaceSin, PoissonSin, Problem,
+    Helmholtz2D, InverseConstPoisson, InverseSpaceSin, PoissonSin,
+    Problem, VariableConvectionCd,
 };
 use fastvpinns::runtime::backend::native::{
     NativeBackend, NativeConfig, NativeLoss,
@@ -37,7 +41,7 @@ fn poisson_trainer<'a>(
     };
     let ncfg = NativeConfig {
         layers: vec![2, 16, 16, 1],
-        loss: NativeLoss::Forward { eps: 1.0, bx: 0.0, by: 0.0 },
+        loss: NativeLoss::Forward,
         nb: 80,
         ns: 0,
     };
@@ -90,7 +94,8 @@ fn trained_network_cross_validates_against_fem() {
         &fem_mesh,
         &FemProblem {
             eps: &|_, _| 1.0,
-            b: (0.0, 0.0),
+            b: None,
+            c: None,
             // forcing matches problems::PoissonSin (exact u = -sin sin)
             f: &|x, y| -2.0 * om * om * (om * x).sin() * (om * y).sin(),
             g: &|_, _| 0.0,
@@ -236,10 +241,9 @@ fn inverse_space_smoke_recovers_eps_field_2x() {
         log_every: 200,
         ..TrainConfig::default()
     };
-    let (bx, by) = problem.b();
     let ncfg = NativeConfig {
         layers: vec![2, 16, 16, 1],
-        loss: NativeLoss::InverseSpace { bx, by },
+        loss: NativeLoss::InverseSpace,
         nb: 80,
         ns: 60,
     };
@@ -277,6 +281,167 @@ fn inverse_space_smoke_recovers_eps_field_2x() {
         .collect();
     let err = t.evaluate(&grid, &exact).unwrap();
     assert!(err.rel_l2 < 0.2, "u rel-L2 {} after training", err.rel_l2);
+}
+
+#[test]
+fn helmholtz_smoke_loss_drops_10x_in_500_iters() {
+    // the reaction term (c = -k^2) rides the same tensor contraction:
+    // the generalized path must train Helmholtz as readily as Poisson
+    let problem = Helmholtz2D::new(std::f64::consts::PI);
+    let mesh = generators::unit_square(2);
+    let dom = assembly::assemble(&mesh, 3, 8, QuadKind::GaussLegendre);
+    let src = DataSource { mesh: &mesh, domain: Some(&dom),
+                           problem: &problem, sensor_values: None };
+    let cfg = TrainConfig {
+        iters: 500,
+        lr: LrSchedule::Constant(1e-2),
+        ..TrainConfig::default()
+    };
+    let ncfg = NativeConfig {
+        layers: vec![2, 16, 16, 1],
+        loss: NativeLoss::Forward,
+        nb: 80,
+        ns: 0,
+    };
+    let backend =
+        NativeBackend::new(&ncfg, &src, &BackendOpts::from(&cfg)).unwrap();
+    let mut t = Trainer::new(Box::new(backend), &cfg);
+    assert_eq!(t.loss_kind(), "helmholtz");
+    let (l0, ..) = t.step_once().unwrap();
+    let report = t.run().unwrap();
+    assert!(
+        report.final_loss < 0.1 * l0,
+        "helmholtz loss {l0:.3e} -> {:.3e}: < 10x drop in 500 iters",
+        report.final_loss
+    );
+}
+
+#[test]
+fn cd_var_smoke_loss_drops_10x_in_500_iters() {
+    // hoisted per-point convection tables through the same kernel
+    let problem = VariableConvectionCd::new();
+    let mesh = generators::unit_square(2);
+    let dom = assembly::assemble(&mesh, 3, 8, QuadKind::GaussLegendre);
+    let src = DataSource { mesh: &mesh, domain: Some(&dom),
+                           problem: &problem, sensor_values: None };
+    let cfg = TrainConfig {
+        iters: 500,
+        lr: LrSchedule::Constant(1e-2),
+        ..TrainConfig::default()
+    };
+    let ncfg = NativeConfig {
+        layers: vec![2, 16, 16, 1],
+        loss: NativeLoss::Forward,
+        nb: 80,
+        ns: 0,
+    };
+    let backend =
+        NativeBackend::new(&ncfg, &src, &BackendOpts::from(&cfg)).unwrap();
+    let mut t = Trainer::new(Box::new(backend), &cfg);
+    assert_eq!(t.loss_kind(), "cd");
+    let (l0, ..) = t.step_once().unwrap();
+    let report = t.run().unwrap();
+    assert!(
+        report.final_loss < 0.1 * l0,
+        "cd_var loss {l0:.3e} -> {:.3e}: < 10x drop in 500 iters",
+        report.final_loss
+    );
+}
+
+#[test]
+#[ignore = "release helmholtz tier (CI: --include-ignored); slow in debug"]
+fn helmholtz_converges_and_cross_validates_against_fem() {
+    // Release-tier Helmholtz e2e at CI scale (2x2 mesh, 16x2 net):
+    // the decayed-lr budget reaches rel-L2 ~0.8e-2..2.6e-2 across
+    // seeds in the numpy transliteration, so 5e-2 is the floor with
+    // ~2x headroom; the strict 1e-2 acceptance bar applies to the
+    // CLI-default run (30x3 net, coarse 2x2 mesh, decayed lr — see
+    // problems::registry) exercised separately by the release CI job.
+    let problem = Helmholtz2D::new(std::f64::consts::PI);
+    let mesh = generators::unit_square(2);
+    let dom = assembly::assemble(&mesh, 3, 8, QuadKind::GaussLegendre);
+    let src = DataSource { mesh: &mesh, domain: Some(&dom),
+                           problem: &problem, sensor_values: None };
+    let cfg = TrainConfig {
+        iters: 3000,
+        lr: LrSchedule::ExpDecay { lr0: 1e-2, factor: 0.5, every: 500 },
+        log_every: 200,
+        ..TrainConfig::default()
+    };
+    let ncfg = NativeConfig {
+        layers: vec![2, 16, 16, 1],
+        loss: NativeLoss::Forward,
+        nb: 80,
+        ns: 0,
+    };
+    let backend =
+        NativeBackend::new(&ncfg, &src, &BackendOpts::from(&cfg)).unwrap();
+    let mut t = Trainer::new(Box::new(backend), &cfg);
+    t.run().unwrap();
+
+    let grid = eval_grid(50, 50, 0.0, 0.0, 1.0, 1.0);
+    let exact: Vec<f64> = grid
+        .iter()
+        .map(|p| problem.exact(p[0], p[1]).unwrap())
+        .collect();
+    let err = t.evaluate(&grid, &exact).unwrap();
+    assert!(err.rel_l2 < 5e-2,
+            "helmholtz rel-L2 {} >= 5e-2 vs exact", err.rel_l2);
+
+    // independent discretization must agree with the trained network
+    let fem_mesh = generators::unit_square(16);
+    let fem = fem_solver::solve_problem(&fem_mesh, &problem, 3).unwrap();
+    let pred = t.predict(&fem_mesh.points).unwrap();
+    let nn_vs_fem = ErrorNorms::compute_f32(&pred, fem.nodal());
+    assert!(nn_vs_fem.rel_l2 < 0.05,
+            "helmholtz NN vs FEM rel-L2 {}", nn_vs_fem.rel_l2);
+}
+
+#[test]
+#[ignore = "release helmholtz tier (CI: --include-ignored); slow in debug"]
+fn cd_var_converges_and_cross_validates_against_fem() {
+    // Release-tier variable-convection e2e: the hoisted b(x,y) tables
+    // must train to the manufactured solution and agree with the FEM
+    // reference that assembles the same rotating field (numpy
+    // transliteration: rel-L2 ~0.8e-2..1.3e-2 across seeds at this
+    // decayed-lr budget; 5e-2 is the floor).
+    let problem = VariableConvectionCd::new();
+    let mesh = generators::unit_square(2);
+    let dom = assembly::assemble(&mesh, 3, 8, QuadKind::GaussLegendre);
+    let src = DataSource { mesh: &mesh, domain: Some(&dom),
+                           problem: &problem, sensor_values: None };
+    let cfg = TrainConfig {
+        iters: 3000,
+        lr: LrSchedule::ExpDecay { lr0: 1e-2, factor: 0.5, every: 500 },
+        log_every: 200,
+        ..TrainConfig::default()
+    };
+    let ncfg = NativeConfig {
+        layers: vec![2, 16, 16, 1],
+        loss: NativeLoss::Forward,
+        nb: 80,
+        ns: 0,
+    };
+    let backend =
+        NativeBackend::new(&ncfg, &src, &BackendOpts::from(&cfg)).unwrap();
+    let mut t = Trainer::new(Box::new(backend), &cfg);
+    t.run().unwrap();
+
+    let grid = eval_grid(50, 50, 0.0, 0.0, 1.0, 1.0);
+    let exact: Vec<f64> = grid
+        .iter()
+        .map(|p| problem.exact(p[0], p[1]).unwrap())
+        .collect();
+    let err = t.evaluate(&grid, &exact).unwrap();
+    assert!(err.rel_l2 < 5e-2,
+            "cd_var rel-L2 {} >= 5e-2 vs exact", err.rel_l2);
+
+    let fem_mesh = generators::unit_square(16);
+    let fem = fem_solver::solve_problem(&fem_mesh, &problem, 3).unwrap();
+    let pred = t.predict(&fem_mesh.points).unwrap();
+    let nn_vs_fem = ErrorNorms::compute_f32(&pred, fem.nodal());
+    assert!(nn_vs_fem.rel_l2 < 0.05,
+            "cd_var NN vs FEM rel-L2 {}", nn_vs_fem.rel_l2);
 }
 
 #[test]
