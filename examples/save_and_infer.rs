@@ -1,0 +1,107 @@
+//! Train once, query many: the amortized-inference story on the gear
+//! geometry. Trains the convection-diffusion problem on the 1760-cell
+//! spur gear, exports a versioned checkpoint, then serves two query
+//! workloads from the artifact alone — the mesh nodes (VTK output for
+//! ParaView) and a dense uniform grid (streamed CSV) — through the
+//! batched blocked-GEMM inference path, verifying the reloaded model
+//! reproduces the trainer's predictions bit-for-bit.
+//!
+//!     cargo run --release --example save_and_infer
+//!
+//! Flags via env: SAVE_ITERS (default 400).
+
+use std::time::Instant;
+
+use fastvpinns::coordinator::metrics::eval_grid;
+use fastvpinns::coordinator::schedule::LrSchedule;
+use fastvpinns::coordinator::trainer::{DataSource, TrainConfig, Trainer};
+use fastvpinns::fem::assembly;
+use fastvpinns::fem::quadrature::QuadKind;
+use fastvpinns::mesh::{generators, vtk};
+use fastvpinns::problems::GearCd;
+use fastvpinns::runtime::backend::native::{
+    NativeBackend, NativeConfig, NativeLoss,
+};
+use fastvpinns::runtime::backend::BackendOpts;
+use fastvpinns::runtime::infer::InferenceSession;
+use fastvpinns::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let iters: usize = std::env::var("SAVE_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let dir = std::path::PathBuf::from("results/save_and_infer");
+    std::fs::create_dir_all(&dir)?;
+
+    // 1. train once (the expensive part)
+    let problem = GearCd;
+    let mesh = generators::gear_ci();
+    let domain = assembly::assemble(&mesh, 4, 5, QuadKind::GaussLegendre);
+    let src = DataSource { mesh: &mesh, domain: Some(&domain),
+                           problem: &problem, sensor_values: None };
+    let cfg = TrainConfig {
+        iters,
+        lr: LrSchedule::Constant(5e-3),
+        log_every: 50,
+        ..TrainConfig::default()
+    };
+    let ncfg = NativeConfig {
+        layers: vec![2, 30, 30, 30, 1],
+        loss: NativeLoss::Forward,
+        nb: 400,
+        ns: 0,
+    };
+    let backend = NativeBackend::new(&ncfg, &src, &BackendOpts::from(&cfg))?;
+    let mut trainer = Trainer::new(Box::new(backend), &cfg);
+    let report = trainer.run()?;
+    println!("trained {} iters on {} gear cells: loss {:.3e}, \
+              {:.2} ms/step median",
+             report.steps, mesh.n_cells(), report.final_loss,
+             report.median_step_ms);
+
+    // 2. persist the model (registry id so `repro infer --quad` /
+    //    `repro train --resume` can rebuild the setup)
+    let ckpt_path = dir.join("gear.ckpt");
+    let mut ck = trainer.checkpoint()?;
+    ck.problem = "cd_gear".into();
+    ck.write(&ckpt_path)?;
+    println!("checkpoint -> {} ({} bytes)", ckpt_path.display(),
+             std::fs::metadata(&ckpt_path)?.len());
+
+    // 3. serve from the artifact alone — no mesh assembly, no trainer
+    let mut sess = InferenceSession::open(&ckpt_path)?;
+
+    // query workload A: the mesh nodes, written as VTK for ParaView
+    let (u_nodes, _) = sess.eval(&mesh.points);
+    let u_f64: Vec<f64> = u_nodes.iter().map(|&v| v as f64).collect();
+    let vtk_path = dir.join("gear_u.vtk");
+    vtk::write_point_fields(&mesh, &[("u", &u_f64)], &vtk_path)?;
+    println!("mesh-node field -> {}", vtk_path.display());
+
+    // the reloaded model must reproduce the live trainer bit-for-bit
+    assert_eq!(u_nodes, trainer.predict(&mesh.points)?,
+               "checkpointed predictions must be bit-identical");
+
+    // query workload B: a dense grid over the gear bbox, streamed to
+    // CSV in batches — the serve-many half of train-once/query-many
+    let (lo, hi) = mesh.bbox();
+    let grid = eval_grid(200, 200, lo[0], lo[1], hi[0], hi[1]);
+    let csv_path = dir.join("gear_grid.csv");
+    let mut w = CsvWriter::create(&csv_path, &["x", "y", "u"])?;
+    let t0 = Instant::now();
+    for chunk in grid.chunks(4096) {
+        let u = sess.eval_u(chunk);
+        for (p, &v) in chunk.iter().zip(&u) {
+            w.row_f64(&[p[0], p[1], v as f64])?;
+        }
+    }
+    w.flush()?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!("grid queries -> {}: {} points in {:.3}s \
+              ({:.0} points/s)",
+             csv_path.display(), grid.len(), secs,
+             grid.len() as f64 / secs.max(1e-12));
+    println!("save_and_infer OK");
+    Ok(())
+}

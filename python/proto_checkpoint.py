@@ -1,0 +1,211 @@
+"""Reference second implementation of the version-1 checkpoint format
+(rust/src/runtime/checkpoint.rs), used to validate the documented
+layout offline: encodes a synthetic artifact per the spec in the Rust
+module docs / README, decodes it back, and checks the FNV-1a test
+vectors — any divergence between this file and the Rust reader means
+the *documentation* drifted, which is exactly what it exists to catch
+(no Rust toolchain in this container).
+
+Run: python proto_checkpoint.py
+"""
+
+import json
+import struct
+
+MAGIC = b"FVPCHKPT"
+FORMAT_VERSION = 1
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MASK = (1 << 64) - 1
+
+SECTION_NAMES = [
+    "theta", "eps", "adam_m", "adam_v",
+    "form_eps", "form_bx", "form_by", "form_c",
+]
+
+
+def fnv1a_64(data: bytes) -> int:
+    h = FNV_OFFSET
+    for b in data:
+        h = ((h ^ b) * FNV_PRIME) & MASK
+    return h
+
+
+def hash_f64_bits(vals) -> int:
+    return fnv1a_64(struct.pack(f"<{len(vals)}d", *vals))
+
+
+def encode(ck: dict) -> bytes:
+    """ck: problem, problem_label, loss_mode, loss_kind, cli (list of
+    pairs), layers, two_head, step, theta, eps, adam_m, adam_v,
+    form (dict coeff -> ("const", v) | ("table", [v...])),
+    fingerprint, hyper."""
+    coeffs = [ck["form"][k] for k in ("eps", "bx", "by", "c")]
+    sections = [
+        ["theta", len(ck["theta"])],
+        ["eps", 1],
+        ["adam_m", len(ck["adam_m"])],
+        ["adam_v", len(ck["adam_v"])],
+    ] + [
+        [f"form_{k}", 1 if kind == "const" else len(v)]
+        for k, (kind, v) in zip(("eps", "bx", "by", "c"), coeffs)
+    ]
+    fp = dict(ck["fingerprint"])
+    fp["quad_hash"] = format(fp["quad_hash"], "016x")
+    hyper = dict(ck["hyper"])
+    hyper["seed"] = format(hyper["seed"], "x")
+    meta = {
+        "format": "fastvpinns-checkpoint",
+        "version": FORMAT_VERSION,
+        "problem": ck["problem"],
+        "problem_label": ck["problem_label"],
+        "loss_mode": ck["loss_mode"],
+        "loss_kind": ck["loss_kind"],
+        "cli": dict(ck["cli"]),
+        "layers": ck["layers"],
+        "two_head": ck["two_head"],
+        "step": ck["step"],
+        "best_metric": ck["best_metric"],
+        "hyper": hyper,
+        "fingerprint": fp,
+        "form": {
+            k: ({"kind": "const"} if kind == "const"
+                else {"kind": "table", "len": len(v)})
+            for k, (kind, v) in zip(("eps", "bx", "by", "c"), coeffs)
+        },
+        "sections": sections,
+    }
+    meta_b = json.dumps(meta, separators=(",", ":")).encode()
+    payload = list(ck["theta"]) + [ck["eps"]] + list(ck["adam_m"]) \
+        + list(ck["adam_v"])
+    for kind, v in coeffs:
+        payload += [v] if kind == "const" else list(v)
+    body = (MAGIC + bytes([FORMAT_VERSION])
+            + struct.pack("<I", len(meta_b)) + meta_b
+            + struct.pack(f"<{len(payload)}d", *payload))
+    return body + struct.pack("<Q", fnv1a_64(body))
+
+
+def decode(b: bytes) -> dict:
+    assert len(b) >= 8 + 1 + 4 + 8, "too short"
+    assert b[:8] == MAGIC, "bad magic"
+    assert b[8] == FORMAT_VERSION, f"unsupported version {b[8]}"
+    body, stored = b[:-8], struct.unpack("<Q", b[-8:])[0]
+    assert fnv1a_64(body) == stored, "checksum mismatch"
+    (meta_len,) = struct.unpack("<I", b[9:13])
+    meta = json.loads(b[13:13 + meta_len])
+    assert [n for n, _ in meta["sections"]] == SECTION_NAMES
+    total = sum(n for _, n in meta["sections"])
+    payload = body[13 + meta_len:]
+    assert len(payload) == 8 * total, "payload size mismatch"
+    vals = list(struct.unpack(f"<{total}d", payload))
+    out, off = {}, 0
+    for name, n in meta["sections"]:
+        out[name] = vals[off:off + n]
+        off += n
+    form = {}
+    for k, sec in zip(("eps", "bx", "by", "c"),
+                      ("form_eps", "form_bx", "form_by", "form_c")):
+        spec = meta["form"][k]
+        if spec["kind"] == "const":
+            assert len(out[sec]) == 1
+            form[k] = ("const", out[sec][0])
+        else:
+            assert spec["len"] == len(out[sec])
+            form[k] = ("table", out[sec])
+    # theta length validation
+    layers, two_head = meta["layers"], meta["two_head"]
+    want = sum(a * b + b for a, b in zip(layers, layers[1:]))
+    if two_head:
+        want += layers[-2] + 1
+    assert len(out["theta"]) == want, "theta length mismatch"
+    fp = dict(meta["fingerprint"])
+    fp["quad_hash"] = int(fp["quad_hash"], 16)
+    hyper = dict(meta["hyper"])
+    hyper["seed"] = int(hyper["seed"], 16)
+    return {
+        "problem": meta["problem"],
+        "problem_label": meta["problem_label"],
+        "loss_mode": meta["loss_mode"],
+        "loss_kind": meta["loss_kind"],
+        "cli": sorted(meta["cli"].items()),
+        "layers": layers,
+        "two_head": two_head,
+        "step": meta["step"],
+        "best_metric": meta["best_metric"],
+        "theta": out["theta"],
+        "eps": out["eps"][0],
+        "adam_m": out["adam_m"],
+        "adam_v": out["adam_v"],
+        "form": form,
+        "fingerprint": fp,
+        "hyper": hyper,
+    }
+
+
+def main():
+    # FNV-1a standard vectors (same asserted in the Rust unit tests)
+    assert fnv1a_64(b"") == 0xCBF29CE484222325
+    assert fnv1a_64(b"a") == 0xAF63DC4C8601EC8C
+    assert fnv1a_64(b"foobar") == 0x85944171F73967E8
+
+    theta = [0.1 * i - 0.37 for i in range(2 * 3 + 3 + 3 * 1 + 1)]
+    ck = {
+        "problem": "helmholtz",
+        "problem_label": "helmholtz_k6.283",
+        "loss_mode": "forward",
+        "loss_kind": "helmholtz",
+        "cli": [("k-pi", "2"), ("n", "2")],
+        "layers": [2, 3, 1],
+        "two_head": False,
+        "step": 1234,
+        "best_metric": None,
+        "theta": theta,
+        "eps": 0.0,
+        "adam_m": [0.25] * len(theta),
+        "adam_v": [1e-9] * len(theta),
+        "form": {
+            "eps": ("const", 1.0),
+            "bx": ("const", 0.0),
+            "by": ("const", 0.0),
+            "c": ("table", [-39.47, -39.47, 0.1 + 0.2]),
+        },
+        "fingerprint": {
+            "ne": 4, "nt": 25, "nq": 100, "n_points": 9, "n_cells": 4,
+            "bbox": [0.0, 0.0, 1.0, 1.0],
+            "quad_hash": 0xDEADBEEF01234567,
+        },
+        "hyper": {"tau": 10.0, "gamma": 10.0,
+                  "seed": (1 << 63) + 12345,  # beyond f64's 2^53
+                  "eps_init": 2.0, "nb": 400, "ns": 0},
+    }
+    blob = encode(ck)
+    back = decode(blob)
+    assert back == ck, "round-trip mismatch"
+
+    # corruption anywhere must break the checksum
+    for i in (9, len(blob) // 2, len(blob) - 9):
+        bad = bytearray(blob)
+        bad[i] ^= 0x40
+        try:
+            decode(bytes(bad))
+        except AssertionError:
+            pass
+        else:
+            raise SystemExit(f"corruption at byte {i} not caught")
+
+    # a version bump with a fixed-up checksum is a version error
+    bad = bytearray(blob)
+    bad[8] = FORMAT_VERSION + 1
+    bad[-8:] = struct.pack("<Q", fnv1a_64(bytes(bad[:-8])))
+    try:
+        decode(bytes(bad))
+    except AssertionError as e:
+        assert "version" in str(e)
+
+    print(f"proto_checkpoint OK: {len(blob)}-byte artifact, "
+          f"round-trip + corruption + version checks passed")
+
+
+if __name__ == "__main__":
+    main()

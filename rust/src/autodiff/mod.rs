@@ -11,8 +11,11 @@ use std::ops::{Add, Div, Mul, Neg, Sub};
 /// respect to a single scalar parameter.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Dual2 {
+    /// Value.
     pub v: f64,
+    /// First derivative along the probe direction.
     pub d1: f64,
+    /// Second derivative along the probe direction.
     pub d2: f64,
 }
 
@@ -27,6 +30,7 @@ impl Dual2 {
         Dual2 { v: c, d1: 0.0, d2: 0.0 }
     }
 
+    /// `sin`, propagating both derivatives.
     pub fn sin(self) -> Dual2 {
         let (s, c) = (self.v.sin(), self.v.cos());
         Dual2 {
@@ -36,6 +40,7 @@ impl Dual2 {
         }
     }
 
+    /// `cos`, propagating both derivatives.
     pub fn cos(self) -> Dual2 {
         let (s, c) = (self.v.sin(), self.v.cos());
         Dual2 {
@@ -45,6 +50,7 @@ impl Dual2 {
         }
     }
 
+    /// `exp`, propagating both derivatives.
     pub fn exp(self) -> Dual2 {
         let e = self.v.exp();
         Dual2 {
@@ -54,6 +60,7 @@ impl Dual2 {
         }
     }
 
+    /// `tanh`, propagating both derivatives.
     pub fn tanh(self) -> Dual2 {
         let t = self.v.tanh();
         let sech2 = 1.0 - t * t;
@@ -64,6 +71,7 @@ impl Dual2 {
         }
     }
 
+    /// Integer power (`n >= 2`), propagating both derivatives.
     pub fn powi(self, n: i32) -> Dual2 {
         let vp = self.v.powi(n - 2);
         let n_ = n as f64;
@@ -75,6 +83,7 @@ impl Dual2 {
         }
     }
 
+    /// Natural log, propagating both derivatives.
     pub fn ln(self) -> Dual2 {
         let d1 = self.d1 / self.v;
         Dual2 {
@@ -84,6 +93,7 @@ impl Dual2 {
         }
     }
 
+    /// Square root, propagating both derivatives.
     pub fn sqrt(self) -> Dual2 {
         let s = self.v.sqrt();
         Dual2 {
@@ -160,11 +170,17 @@ pub fn probe_2d(
     }
 }
 
+/// Result of probing a 2D function with axis-aligned [`Dual2`]
+/// variables: value, gradient and Laplacian at one point.
 #[derive(Debug, Clone, Copy)]
 pub struct Probe2d {
+    /// u(x, y).
     pub u: f64,
+    /// du/dx.
     pub dx: f64,
+    /// du/dy.
     pub dy: f64,
+    /// lap u = u_xx + u_yy.
     pub lap: f64,
 }
 

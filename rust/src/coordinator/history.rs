@@ -6,32 +6,44 @@ use anyhow::Result;
 
 use crate::util::csv::CsvWriter;
 
+/// One logged training step.
 #[derive(Debug, Clone, Copy)]
 pub struct HistoryRow {
+    /// 1-based optimizer step.
     pub step: usize,
+    /// Total objective.
     pub loss: f64,
+    /// Variational component.
     pub var_loss: f64,
+    /// Dirichlet-penalty component.
     pub bd_loss: f64,
-    pub extra: f64, // sensor loss or eps, experiment-dependent
+    /// Sensor loss or eps, experiment-dependent.
+    pub extra: f64,
+    /// Median step wall-clock so far (ms).
     pub step_ms: f64,
 }
 
+/// The per-run step log, dumped as CSV by `--history`.
 #[derive(Debug, Default, Clone)]
 pub struct TrainHistory {
+    /// Logged rows, in step order.
     pub rows: Vec<HistoryRow>,
     /// semantic label of `extra` ("", "sensor_loss", "eps", ...)
     pub extra_label: String,
 }
 
 impl TrainHistory {
+    /// Append a row.
     pub fn push(&mut self, row: HistoryRow) {
         self.rows.push(row);
     }
 
+    /// Total loss of the most recent row.
     pub fn last_loss(&self) -> Option<f64> {
         self.rows.last().map(|r| r.loss)
     }
 
+    /// Dump all rows as CSV (header derived from the extra label).
     pub fn to_csv(&self, path: impl AsRef<Path>) -> Result<()> {
         let extra = if self.extra_label.is_empty() {
             "extra"

@@ -3,15 +3,20 @@
 /// Standard error norms over a point set.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ErrorNorms {
+    /// Mean absolute error.
     pub mae: f64,
+    /// Root-mean-square error.
     pub rmse: f64,
+    /// Max absolute error.
     pub linf: f64,
     /// ||pred - ref||_2 / ||ref||_2
     pub rel_l2: f64,
+    /// Point count.
     pub n: usize,
 }
 
 impl ErrorNorms {
+    /// All norms of `pred - reference` over a point set.
     pub fn compute(pred: &[f64], reference: &[f64]) -> ErrorNorms {
         assert_eq!(pred.len(), reference.len());
         let n = pred.len();
@@ -43,6 +48,7 @@ impl ErrorNorms {
         }
     }
 
+    /// [`ErrorNorms::compute`] for f32 predictions (runtime outputs).
     pub fn compute_f32(pred: &[f32], reference: &[f64]) -> ErrorNorms {
         let p: Vec<f64> = pred.iter().map(|&v| v as f64).collect();
         Self::compute(&p, reference)

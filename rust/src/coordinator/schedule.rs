@@ -2,14 +2,24 @@
 //! square benchmarks and an exponential decay (x0.99 every 1000 iters)
 //! for the gear run (SS4.6.4).
 
+/// A learning-rate schedule, evaluated per optimizer step.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum LrSchedule {
+    /// Fixed rate.
     Constant(f64),
     /// lr0 * factor^(step / every)
-    ExpDecay { lr0: f64, factor: f64, every: usize },
+    ExpDecay {
+        /// Initial rate.
+        lr0: f64,
+        /// Multiplicative decay applied every `every` steps.
+        factor: f64,
+        /// Decay interval in steps.
+        every: usize,
+    },
 }
 
 impl LrSchedule {
+    /// The rate at 0-based step `step`.
     pub fn at(&self, step: usize) -> f64 {
         match *self {
             LrSchedule::Constant(lr) => lr,

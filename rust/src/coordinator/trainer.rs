@@ -6,6 +6,18 @@
 //! The coordinator is backend-agnostic: the same loop trains the pure
 //! Rust native backend and (with `--features xla`) the AOT/PJRT
 //! artifacts. No `xla::` type appears in any signature here.
+//!
+//! It also owns run-level persistence: a [`CheckpointPolicy`] makes
+//! [`Trainer::run`] write a versioned
+//! [`Checkpoint`](crate::runtime::checkpoint::Checkpoint) artifact
+//! periodically and at the end of the run, tracking the best model so
+//! far (by validation rel-L2 when a validation set is attached, by
+//! total loss otherwise) at `<path>.best`; and
+//! [`Trainer::resume_from_step`] continues a warm-restarted run at the
+//! persisted step count, so the LR schedule and Adam bias correction
+//! pick up exactly where the interrupted run left off.
+
+use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
@@ -14,17 +26,21 @@ use crate::coordinator::metrics::ErrorNorms;
 use crate::coordinator::schedule::LrSchedule;
 use crate::runtime::backend::BackendOpts;
 pub use crate::runtime::backend::{Backend, DataSource, StepStats};
+use crate::runtime::checkpoint::Checkpoint;
 use crate::util::stats::StepTimer;
 
 /// Training hyper-parameters (paper defaults where applicable).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// Optimizer step budget for one `run()`.
     pub iters: usize,
+    /// Learning-rate schedule.
     pub lr: LrSchedule,
     /// Dirichlet penalty (paper's tau).
     pub tau: f64,
     /// Sensor penalty for inverse problems (paper's gamma).
     pub gamma: f64,
+    /// RNG seed (weight init + boundary/sensor sampling).
     pub seed: u64,
     /// Record a history row every `log_every` steps (1 = all).
     pub log_every: usize,
@@ -60,25 +76,59 @@ impl From<&TrainConfig> for BackendOpts {
     }
 }
 
+/// When and where [`Trainer::run`] persists checkpoints.
+#[derive(Debug, Clone)]
+pub struct CheckpointPolicy {
+    /// Artifact path; overwritten on every save. The best model so far
+    /// additionally lands at `<path>.best`.
+    pub path: PathBuf,
+    /// Save every `every` steps (0 = only at the end of the run).
+    pub every: usize,
+    /// Registry problem id persisted into the artifact (what
+    /// `--resume` looks up).
+    pub problem: String,
+    /// CLI flags persisted into the artifact so a resumed run can
+    /// rebuild the identical setup.
+    pub cli: Vec<(String, String)>,
+}
+
 /// Summary returned by `Trainer::run`.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
+    /// Optimizer steps taken in total (incl. a resumed prefix).
     pub steps: usize,
+    /// Total objective after the last step.
     pub final_loss: f64,
+    /// Variational component of the final loss.
     pub final_var_loss: f64,
+    /// Dirichlet-penalty component of the final loss.
     pub final_bd_loss: f64,
+    /// Median wall-clock per step (the paper's protocol).
     pub median_step_ms: f64,
+    /// Total wall-clock of the run.
     pub total_seconds: f64,
     /// Final trainable eps (inverse_const only).
     pub eps_final: Option<f64>,
+    /// Whether the eps-convergence early stop fired.
     pub converged_early: bool,
+    /// Best checkpoint metric seen (validation rel-L2 when a
+    /// validation set is attached, total loss otherwise); `None`
+    /// without a [`CheckpointPolicy`].
+    pub best_metric: Option<f64>,
 }
 
+/// Drives a boxed [`Backend`] through a training run; see the module
+/// docs for responsibilities.
 pub struct Trainer<'a> {
     backend: Box<dyn Backend + 'a>,
     cfg: TrainConfig,
+    /// Per-step loss/timing log (CSV-dumpable).
     pub history: TrainHistory,
     step: usize,
+    ckpt: Option<CheckpointPolicy>,
+    /// Validation set for best-model tracking: points + reference.
+    validation: Option<(Vec<[f64; 2]>, Vec<f64>)>,
+    best_metric: f64,
 }
 
 impl<'a> Trainer<'a> {
@@ -97,13 +147,102 @@ impl<'a> Trainer<'a> {
             cfg: cfg.clone(),
             history: TrainHistory { rows: vec![], extra_label },
             step: 0,
+            ckpt: None,
+            validation: None,
+            best_metric: f64::INFINITY,
         }
     }
 
+    /// Enable checkpointing for the next [`Trainer::run`] (see
+    /// [`CheckpointPolicy`]).
+    pub fn set_checkpoint_policy(&mut self, policy: CheckpointPolicy) {
+        self.ckpt = Some(policy);
+    }
+
+    /// Attach a validation set: with one, best-model tracking ranks
+    /// checkpoints by rel-L2 of head 0 against `reference` on `points`
+    /// instead of by total loss.
+    pub fn set_validation(
+        &mut self,
+        points: Vec<[f64; 2]>,
+        reference: Vec<f64>,
+    ) {
+        self.validation = Some((points, reference));
+    }
+
+    /// Continue a warm-restarted run at `step` (the checkpoint's
+    /// persisted count): the LR schedule position and the 1-based Adam
+    /// step the backend sees both pick up from there, so the resumed
+    /// trajectory matches the uninterrupted one.
+    pub fn resume_from_step(&mut self, step: usize) {
+        self.step = step;
+    }
+
+    /// Seed best-model tracking from a prior run's persisted
+    /// [`Checkpoint::best_metric`] (warm restart): the resumed run
+    /// then only overwrites `<path>.best` when it actually beats the
+    /// original run's best, instead of restarting the comparison from
+    /// scratch.
+    pub fn resume_best_metric(&mut self, metric: f64) {
+        self.best_metric = metric;
+    }
+
+    /// Export the backend's state as a [`Checkpoint`] with the
+    /// trainer's current step count stamped in — the manual
+    /// counterpart of a [`CheckpointPolicy`]-driven save (run-level
+    /// metadata like the registry problem id is the caller's to fill).
+    pub fn checkpoint(&self) -> Result<Checkpoint> {
+        let mut ck = self.backend.export_checkpoint()?;
+        ck.step = self.step;
+        if self.best_metric.is_finite() {
+            ck.best_metric = Some(self.best_metric);
+        }
+        Ok(ck)
+    }
+
+    /// Write a policy-driven checkpoint: stamp step + run metadata,
+    /// save to the policy path, and — if this is the best model so far
+    /// by the current metric — to `<path>.best` as well.
+    fn save_checkpoint(&mut self, last_loss: f64) -> Result<()> {
+        let metric = match &self.validation {
+            Some((pts, reference)) => {
+                let mut heads = self.backend.predict(pts)?;
+                anyhow::ensure!(
+                    !heads.is_empty(),
+                    "backend returned no heads for validation"
+                );
+                ErrorNorms::compute_f32(&heads.swap_remove(0), reference)
+                    .rel_l2
+            }
+            None => last_loss,
+        };
+        let improved = metric < self.best_metric;
+        if improved {
+            self.best_metric = metric;
+        }
+        let policy = self.ckpt.as_ref().expect("save without policy");
+        let mut ck = self.backend.export_checkpoint()?;
+        ck.step = self.step;
+        if self.best_metric.is_finite() {
+            ck.best_metric = Some(self.best_metric);
+        }
+        ck.problem = policy.problem.clone();
+        ck.cli = policy.cli.clone();
+        ck.write(&policy.path)?;
+        if improved {
+            let mut best = policy.path.clone().into_os_string();
+            best.push(".best");
+            ck.write(PathBuf::from(best))?;
+        }
+        Ok(())
+    }
+
+    /// The wrapped backend's id ("native", "xla").
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }
 
+    /// The wrapped backend's loss family ("poisson", "helmholtz", ...).
     pub fn loss_kind(&self) -> &str {
         self.backend.loss_kind()
     }
@@ -129,6 +268,7 @@ impl<'a> Trainer<'a> {
         let mut timer = StepTimer::new();
         let mut last = (f64::NAN, f64::NAN, f64::NAN, 0.0);
         let mut converged_early = false;
+        let mut saved_at = None;
         let inverse = self.backend.loss_kind() == "inverse_const";
         for i in 0..self.cfg.iters {
             timer.start();
@@ -148,12 +288,22 @@ impl<'a> Trainer<'a> {
                     step_ms: timer.summary().median,
                 });
             }
+            let every = self.ckpt.as_ref().map_or(0, |p| p.every);
+            if every > 0 && self.step % every == 0 {
+                self.save_checkpoint(last.0)?;
+                saved_at = Some(self.step);
+            }
             if let Some((target, tol)) = self.cfg.eps_converge {
                 if inverse && (last.3 - target).abs() < tol {
                     converged_early = true;
                     break;
                 }
             }
+        }
+        // final save, unless the last periodic save already covered
+        // this exact step
+        if self.ckpt.is_some() && saved_at != Some(self.step) {
+            self.save_checkpoint(last.0)?;
         }
         Ok(TrainReport {
             steps: self.step,
@@ -164,6 +314,13 @@ impl<'a> Trainer<'a> {
             total_seconds: t0.elapsed().as_secs_f64(),
             eps_final: if inverse { Some(last.3) } else { None },
             converged_early,
+            best_metric: if self.ckpt.is_some()
+                && self.best_metric.is_finite()
+            {
+                Some(self.best_metric)
+            } else {
+                None
+            },
         })
     }
 
@@ -292,5 +449,63 @@ mod tests {
         assert_eq!(eps.len(), 2);
         assert_eq!(eps, heads[1]);
         assert!(eps.iter().all(|&e| e > 0.0), "softplus positivity");
+    }
+
+    #[test]
+    fn checkpoint_policy_writes_periodic_final_and_best() {
+        let mesh = generators::unit_square(1);
+        let dom = assembly::assemble(&mesh, 2, 4, QuadKind::GaussLegendre);
+        let problem = PoissonSin::new(std::f64::consts::PI);
+        let src = DataSource {
+            mesh: &mesh,
+            domain: Some(&dom),
+            problem: &problem,
+            sensor_values: None,
+        };
+        let cfg = TrainConfig { iters: 25, ..TrainConfig::default() };
+        let ncfg = NativeConfig {
+            layers: vec![2, 8, 1],
+            loss: NativeLoss::Forward,
+            nb: 16,
+            ns: 0,
+        };
+        let backend = NativeBackend::new(
+            &ncfg, &src, &BackendOpts::from(&cfg)).unwrap();
+        let mut t = Trainer::new(Box::new(backend), &cfg);
+        let path = std::env::temp_dir().join(format!(
+            "fastvpinns_trainer_policy_{}.ckpt",
+            std::process::id()
+        ));
+        let best = {
+            let mut b = path.clone().into_os_string();
+            b.push(".best");
+            std::path::PathBuf::from(b)
+        };
+        t.set_checkpoint_policy(CheckpointPolicy {
+            path: path.clone(),
+            every: 10,
+            problem: "poisson_sin".into(),
+            cli: vec![("n".into(), "1".into())],
+        });
+        let pts = vec![[0.25, 0.25], [0.5, 0.75], [0.9, 0.1]];
+        let exact: Vec<f64> = pts
+            .iter()
+            .map(|p| problem.exact(p[0], p[1]).unwrap())
+            .collect();
+        t.set_validation(pts.clone(), exact);
+        let report = t.run().unwrap();
+        assert!(report.best_metric.is_some(), "validation metric tracked");
+        let ck = Checkpoint::read(&path).unwrap();
+        assert_eq!(ck.step, 25, "final save carries the step count");
+        assert_eq!(ck.problem, "poisson_sin");
+        assert_eq!(ck.cli, vec![("n".to_string(), "1".to_string())]);
+        // the final artifact reproduces the live backend bit-for-bit
+        let net = crate::runtime::backend::native::Mlp::from_theta(
+            &ck.layers, ck.two_head, ck.theta.clone()).unwrap();
+        assert_eq!(net.eval(&pts), t.predict(&pts).unwrap());
+        let bk = Checkpoint::read(&best).unwrap();
+        assert_eq!(bk.layers, ck.layers);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&best).ok();
     }
 }

@@ -42,23 +42,29 @@ pub fn fv_name(ne: usize, nt1d: usize, nq1d: usize) -> String {
     format!("fv_poisson_ne{ne}_nt{nt1d}_nq{nq1d}")
 }
 
+/// Loop-based hp-VPINN baseline artifact name (XLA).
 pub fn hp_name(ne: usize, nt1d: usize, nq1d: usize) -> String {
     format!("hp_poisson_ne{ne}_nt{nt1d}_nq{nq1d}")
 }
 
 /// Which runtime executes the train step.
 pub enum BackendSel {
+    /// The pure-Rust native backend.
     Native,
+    /// The AOT/PJRT artifact executor.
     #[cfg(feature = "xla")]
     Xla(crate::runtime::engine::Engine),
 }
 
 /// Per-experiment context: backend selection + shared knobs.
 pub struct ExpCtx {
+    /// Which runtime executes the train steps.
     pub sel: BackendSel,
 }
 
 impl ExpCtx {
+    /// Resolve `--backend` (and, for XLA, `--artifacts`) into a
+    /// context.
     pub fn from_args(args: &Args) -> Result<ExpCtx> {
         let name = args.str_or("backend", "native");
         crate::runtime::backend::check_backend_name(&name)?;
@@ -73,10 +79,12 @@ impl ExpCtx {
         Ok(ExpCtx { sel })
     }
 
+    /// Whether the native backend is selected.
     pub fn is_native(&self) -> bool {
         matches!(self.sel, BackendSel::Native)
     }
 
+    /// The selected backend's id ("native", "xla").
     pub fn name(&self) -> &'static str {
         match self.sel {
             BackendSel::Native => "native",
@@ -151,11 +159,16 @@ pub fn square_domain(ne: usize, nt1d: usize, nq1d: usize)
 /// Train a unit-square FastVPINN config on `problem`; returns (trainer
 /// report, error norms on the paper's 100x100 grid, history).
 pub struct SquareRun {
+    /// Trainer summary.
     pub report: crate::coordinator::trainer::TrainReport,
+    /// Error norms on the paper's 100x100 grid.
     pub errors: ErrorNorms,
+    /// Per-step log.
     pub history: crate::coordinator::history::TrainHistory,
 }
 
+/// Train the standard FastVPINN config on a `ne`-element unit-square
+/// grid and evaluate it against the problem's exact solution.
 pub fn run_square(
     ctx: &ExpCtx,
     ne: usize,
@@ -230,6 +243,7 @@ pub struct StepBenchCase {
     /// the generalized per-point eps table path, the hoisting
     /// regression probe.
     pub pde: &'static str,
+    /// Element count (k x k unit-square grid).
     pub ne: usize,
     /// Total quadrature points per step (`ne * nq`).
     pub n_quad: usize,
@@ -237,6 +251,7 @@ pub struct StepBenchCase {
     pub dof: usize,
     /// Effective worker threads (parallelism clamped to `ne`).
     pub threads: usize,
+    /// Per-step wall-clock (ms) order statistics.
     pub summary: crate::util::stats::Summary,
 }
 
@@ -318,6 +333,64 @@ pub fn native_inverse_space_step_case(
     let problem = crate::problems::InverseSpaceSin;
     native_step_case_cfg(k, nt1d, nq1d, iters, warmup, &cfg, &problem,
                          "inverse_space", "inverse_space_sin")
+}
+
+/// One measured case of the inference-throughput sweep: repeated full
+/// passes over a fixed query cloud, evaluated in batches of `batch`
+/// through the blocked-GEMM prediction path (what an
+/// [`InferenceSession`](crate::runtime::infer::InferenceSession)
+/// serves per request).
+pub struct InferBenchCase {
+    /// Points per forward call (the serving batch size).
+    pub batch: usize,
+    /// Query-cloud size (points evaluated per timed pass).
+    pub n_points: usize,
+    /// Wall-clock per full pass (ms) order statistics.
+    pub summary: crate::util::stats::Summary,
+    /// `n_points` / median pass time — the headline serving metric.
+    pub points_per_sec: f64,
+}
+
+/// Time batched inference with the paper's standard 30x3 network:
+/// `iters` timed passes (after `warmup` discarded ones) over an
+/// `n_points` uniform query cloud, evaluated `batch` points at a time
+/// with a reused scratch — the `repro bench` `"infer"` cases
+/// (points/sec at batch sizes 1, 256, 4096).
+pub fn native_infer_case(
+    batch: usize,
+    n_points: usize,
+    iters: usize,
+    warmup: usize,
+) -> Result<InferBenchCase> {
+    use crate::runtime::backend::native::{EvalScratch, Mlp};
+    let net = Mlp::glorot(STD_LAYERS, 42)?;
+    let mut scratch = EvalScratch::new(&net);
+    let side = (n_points as f64).sqrt().ceil() as usize;
+    let mut cloud = eval_grid(side, side, 0.0, 0.0, 1.0, 1.0);
+    cloud.truncate(n_points);
+    let batch = batch.max(1);
+    let pass = |net: &Mlp, scratch: &mut EvalScratch| {
+        for chunk in cloud.chunks(batch) {
+            std::hint::black_box(net.eval_with(chunk, scratch));
+        }
+    };
+    for _ in 0..warmup {
+        pass(&net, &mut scratch);
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = std::time::Instant::now();
+        pass(&net, &mut scratch);
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let summary = crate::util::stats::Summary::from(&samples);
+    Ok(InferBenchCase {
+        batch,
+        n_points: cloud.len(),
+        points_per_sec: cloud.len() as f64
+            / (summary.median * 1e-3).max(1e-9),
+        summary,
+    })
 }
 
 #[allow(clippy::too_many_arguments)]

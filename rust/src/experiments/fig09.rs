@@ -10,6 +10,8 @@ use crate::problems::PoissonSin;
 use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
 
+/// Run this experiment (see the module docs for what it
+/// reproduces); results land under `results/`.
 pub fn run(args: &Args) -> Result<()> {
     let ctx = ExpCtx::from_args(args)?;
     let iters = args.usize_or("iters", 5000)?;

@@ -48,6 +48,8 @@ fn train_until(
     Ok(Outcome { mae, secs_to_target, iters_run: iters })
 }
 
+/// Run this experiment (see the module docs for what it
+/// reproduces); results land under `results/`.
 pub fn run(args: &Args) -> Result<()> {
     let ctx = ExpCtx::from_args(args)?;
     let max_iters = args.usize_or("iters", 8000)?;

@@ -21,6 +21,8 @@ use crate::problems::Helmholtz2D;
 use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
 
+/// Run this experiment (see the module docs for what it
+/// reproduces); results land under `results/`.
 pub fn run(args: &Args) -> Result<()> {
     let ctx = ExpCtx::from_args(args)?;
     // run_square's XLA path would execute the *Poisson* AOT artifact

@@ -19,6 +19,7 @@ use anyhow::{bail, Result};
 
 use crate::util::cli::Args;
 
+/// Every experiment id `repro experiment` accepts.
 pub const ALL: &[&str] = &[
     "fig02", "fig08", "fig09", "fig10", "fig11", "fig12", "fig14",
     "fig15", "fig16", "helmholtz", "table1",

@@ -57,6 +57,8 @@ impl Predictor<'_> {
     }
 }
 
+/// Run this experiment (see the module docs for what it
+/// reproduces); results land under `results/`.
 pub fn run(args: &Args) -> Result<()> {
     let ctx = ExpCtx::from_args(args)?;
     let paper = args.has("paper-scale");

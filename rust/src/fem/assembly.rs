@@ -28,22 +28,31 @@ use crate::mesh::QuadMesh;
 /// runtime boundary).
 #[derive(Debug, Clone)]
 pub struct AssembledDomain {
+    /// Element count.
     pub ne: usize,
+    /// Test functions per element (`nt1d`^2).
     pub nt: usize,
+    /// Quadrature points per element (`nq1d`^2).
     pub nq: usize,
+    /// 1D test-function order.
     pub nt1d: usize,
+    /// 1D quadrature order.
     pub nq1d: usize,
     /// (ne*nq, 2) row-major, element-major point order.
     pub quad_xy: Vec<f64>,
-    /// (ne, nt, nq) row-major.
+    /// (ne, nt, nq) row-major: `w |J| dv_j/dx`.
     pub gx: Vec<f64>,
+    /// (ne, nt, nq) row-major: `w |J| dv_j/dy`.
     pub gy: Vec<f64>,
+    /// (ne, nt, nq) row-major: `w |J| v_j`.
     pub v: Vec<f64>,
     /// (ne, nq) |J| at each quadrature point.
     pub jdet: Vec<f64>,
-    /// reference rule (xi, eta, w), each of length nq.
+    /// Reference-rule xi coordinates (length nq).
     pub xi: Vec<f64>,
+    /// Reference-rule eta coordinates (length nq).
     pub eta: Vec<f64>,
+    /// Reference-rule weights (length nq).
     pub w: Vec<f64>,
 }
 
@@ -99,14 +108,17 @@ impl AssembledDomain {
         self.quad_xy.iter().map(|&v| v as f32).collect()
     }
 
+    /// f32 copy of `gx` for the runtime boundary.
     pub fn gx_f32(&self) -> Vec<f32> {
         self.gx.iter().map(|&v| v as f32).collect()
     }
 
+    /// f32 copy of `gy` for the runtime boundary.
     pub fn gy_f32(&self) -> Vec<f32> {
         self.gy.iter().map(|&v| v as f32).collect()
     }
 
+    /// f32 copy of `v` for the runtime boundary.
     pub fn v_f32(&self) -> Vec<f32> {
         self.v.iter().map(|&v| v as f32).collect()
     }

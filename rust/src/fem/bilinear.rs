@@ -16,14 +16,20 @@ pub struct BilinearMap {
 /// j22 = dy/deta, det = j11*j22 - j12*j21.
 #[derive(Debug, Clone, Copy)]
 pub struct Jacobian {
+    /// dx/dxi.
     pub j11: f64,
+    /// dx/deta.
     pub j12: f64,
+    /// dy/dxi.
     pub j21: f64,
+    /// dy/deta.
     pub j22: f64,
+    /// j11*j22 - j12*j21.
     pub det: f64,
 }
 
 impl BilinearMap {
+    /// Map for one quad cell from its vertices in mesh order.
     pub fn new(verts: &[[f64; 2]; 4]) -> Self {
         let [p0, p1, p2, p3] = *verts;
         let (x0, x1, x2, x3) = (p0[0], p1[0], p2[0], p3[0]);
@@ -54,6 +60,7 @@ impl BilinearMap {
         ]
     }
 
+    /// The Jacobian of the map at reference point (xi, eta).
     pub fn jacobian(&self, xi: f64, eta: f64) -> Jacobian {
         let j11 = self.xc[1] + self.xc[3] * eta;
         let j12 = self.xc[2] + self.xc[3] * xi;

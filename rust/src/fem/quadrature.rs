@@ -8,11 +8,14 @@ use super::jacobi;
 /// Which 1D rule to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum QuadKind {
+    /// Interior Gauss-Legendre points (exact to degree 2n-1).
     GaussLegendre,
+    /// Gauss-Lobatto points incl. the endpoints.
     GaussLobatto,
 }
 
 impl QuadKind {
+    /// Parse a CLI quadrature name ("gauss-legendre"/"gl", ...).
     pub fn parse(s: &str) -> Result<QuadKind> {
         match s {
             "gauss-legendre" | "gl" => Ok(QuadKind::GaussLegendre),
@@ -94,6 +97,7 @@ pub fn gauss_lobatto(n: usize) -> (Vec<f64>, Vec<f64>) {
     (x, w)
 }
 
+/// The n-point 1D rule on [-1, 1]: (points, weights).
 pub fn rule_1d(n: usize, kind: QuadKind) -> (Vec<f64>, Vec<f64>) {
     match kind {
         QuadKind::GaussLegendre => gauss_legendre(n),
@@ -105,11 +109,15 @@ pub fn rule_1d(n: usize, kind: QuadKind) -> (Vec<f64>, Vec<f64>) {
 /// eta_q = x[j]. Ordering is the cross-layer contract with
 /// fem_py.quadrature.tensor_rule_2d.
 pub struct TensorRule2d {
+    /// xi coordinate per 2D point.
     pub xi: Vec<f64>,
+    /// eta coordinate per 2D point.
     pub eta: Vec<f64>,
+    /// Weight per 2D point.
     pub w: Vec<f64>,
 }
 
+/// The `n1d x n1d` tensor-product rule on the reference square.
 pub fn tensor_rule_2d(n1d: usize, kind: QuadKind) -> TensorRule2d {
     let (x, w1) = rule_1d(n1d, kind);
     let nq = n1d * n1d;

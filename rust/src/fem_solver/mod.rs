@@ -22,6 +22,7 @@ use crate::problems::Problem;
 /// Variable-coefficient problem definition
 /// `-div(eps grad u) + b . grad u + c u = f`, Dirichlet data `g`.
 pub struct FemProblem<'a> {
+    /// Diffusion coefficient field.
     pub eps: &'a dyn Fn(f64, f64) -> f64,
     /// Convection field; `None` means `b == 0` (keeps the system
     /// symmetric so CG applies).
@@ -30,7 +31,9 @@ pub struct FemProblem<'a> {
     /// `c` (Helmholtz, `c = -k^2`) makes the system indefinite — the
     /// solver switches to BiCGStab.
     pub c: Option<&'a dyn Fn(f64, f64) -> f64>,
+    /// Source term.
     pub f: &'a dyn Fn(f64, f64) -> f64,
+    /// Dirichlet boundary data.
     pub g: &'a dyn Fn(f64, f64) -> f64,
 }
 
@@ -57,9 +60,13 @@ fn q1_grad(xi: f64, eta: f64) -> [[f64; 2]; 4] {
 /// A solved FEM field on a quad mesh (nodal values) with point
 /// evaluation via a cell spatial index.
 pub struct FemSolution {
+    /// The mesh the field lives on.
     pub mesh: QuadMesh,
+    /// Nodal solution values.
     pub u: Vec<f64>,
+    /// Linear-solver iterations used.
     pub solve_iterations: usize,
+    /// Linear-solve wall clock.
     pub solve_seconds: f64,
     index: CellIndex,
 }

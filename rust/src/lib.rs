@@ -41,6 +41,17 @@
 //! experiment/bench harness that regenerates every table and figure of
 //! the paper.
 //!
+//! Trained models are not train-and-discard: any backend can export a
+//! versioned on-disk artifact ([`runtime::checkpoint`]) carrying the
+//! network weights (raw `f64` bits — reloaded predictions are
+//! bit-identical), the Adam state for warm restart, the hoisted
+//! weak-form coefficients and a domain fingerprint; the coordinator
+//! writes them periodically with best-by-validation tracking, `repro
+//! train --resume` continues the loss trajectory exactly, and
+//! [`runtime::infer::InferenceSession`] (CLI: `repro infer`) serves
+//! batched point-cloud queries from the artifact alone — the paper's
+//! amortized-inference payoff (`repro bench` tracks points/sec).
+//!
 //! ## Quick tour (native backend — runs with zero setup)
 //!
 //! ```
@@ -79,6 +90,18 @@
 //! assert!(report.final_loss.is_finite());
 //! let u = trainer.predict(&[[0.5, 0.5]]).unwrap();
 //! assert_eq!(u.len(), 1);
+//!
+//! // 5. persist the trained model and serve it through the batched
+//! //    inference engine: raw f64 weights + the same blocked-GEMM
+//! //    forward path make the reloaded predictions bit-identical
+//! let ck = trainer.checkpoint().unwrap();
+//! let path = std::env::temp_dir().join("fastvpinns_tour.ckpt");
+//! ck.write(&path).unwrap();
+//! let mut sess = InferenceSession::open(&path).unwrap();
+//! let (u2, eps2) = sess.eval(&[[0.5, 0.5]]);
+//! assert_eq!(u2, u);
+//! assert!(eps2.is_none()); // single-head forward network
+//! std::fs::remove_file(&path).ok();
 //! ```
 //!
 //! With `--features xla`, swap `NativeBackend::new(...)` for
@@ -87,6 +110,8 @@
 //! builds these problems drives `repro train --problem
 //! poisson_sin|cd_gear|helmholtz|cd_var|inverse_const|inverse_space`
 //! (and the help text is generated from it).
+
+#![warn(missing_docs)]
 
 pub mod autodiff;
 pub mod coordinator;
@@ -103,7 +128,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::coordinator::metrics::ErrorNorms;
     pub use crate::coordinator::trainer::{
-        DataSource, TrainConfig, TrainReport, Trainer,
+        CheckpointPolicy, DataSource, TrainConfig, TrainReport, Trainer,
     };
     pub use crate::fem::assembly::{self, AssembledDomain};
     pub use crate::fem::quadrature::QuadKind;
@@ -116,6 +141,10 @@ pub mod prelude {
     pub use crate::runtime::backend::{
         Backend, BackendOpts, Coeff, StepStats, VariationalForm,
     };
+    pub use crate::runtime::checkpoint::{
+        Checkpoint, DomainFingerprint, TrainHyper,
+    };
+    pub use crate::runtime::infer::InferenceSession;
     #[cfg(feature = "xla")]
     pub use crate::runtime::backend::xla::XlaBackend;
     #[cfg(feature = "xla")]

@@ -3,10 +3,14 @@
 
 use super::csr::CsrMatrix;
 
+/// Iteration/tolerance knobs for the Krylov solvers.
 #[derive(Debug, Clone, Copy)]
 pub struct CgOptions {
+    /// Iteration cap.
     pub max_iter: usize,
+    /// Relative residual tolerance (vs ||b||).
     pub rtol: f64,
+    /// Absolute residual tolerance.
     pub atol: f64,
 }
 
@@ -16,11 +20,16 @@ impl Default for CgOptions {
     }
 }
 
+/// Outcome of a Krylov solve.
 #[derive(Debug, Clone)]
 pub struct CgResult {
+    /// Solution vector.
     pub x: Vec<f64>,
+    /// Iterations used.
     pub iterations: usize,
+    /// Final residual 2-norm.
     pub residual_norm: f64,
+    /// Whether a tolerance was met before the iteration cap.
     pub converged: bool,
 }
 

@@ -6,16 +6,20 @@ use anyhow::{ensure, Result};
 /// assembly pattern).
 #[derive(Debug, Clone, Default)]
 pub struct Triplets {
+    /// Row count.
     pub n_rows: usize,
+    /// Column count.
     pub n_cols: usize,
     entries: Vec<(usize, usize, f64)>,
 }
 
 impl Triplets {
+    /// Empty accumulator for an `n_rows x n_cols` matrix.
     pub fn new(n_rows: usize, n_cols: usize) -> Self {
         Triplets { n_rows, n_cols, entries: Vec::new() }
     }
 
+    /// Add `v` at (i, j); duplicates are summed by [`Triplets::to_csr`].
     pub fn push(&mut self, i: usize, j: usize, v: f64) {
         debug_assert!(i < self.n_rows && j < self.n_cols);
         if v != 0.0 {
@@ -23,6 +27,7 @@ impl Triplets {
         }
     }
 
+    /// Sort, merge duplicates and compress to CSR.
     pub fn to_csr(mut self) -> CsrMatrix {
         self.entries.sort_unstable_by_key(|&(i, j, _)| (i, j));
         let mut row_ptr = vec![0usize; self.n_rows + 1];
@@ -54,14 +59,20 @@ impl Triplets {
 /// CSR sparse matrix.
 #[derive(Debug, Clone)]
 pub struct CsrMatrix {
+    /// Row count.
     pub n_rows: usize,
+    /// Column count.
     pub n_cols: usize,
+    /// Start offset of each row in `cols`/`vals` (len `n_rows + 1`).
     pub row_ptr: Vec<usize>,
+    /// Column index per stored entry.
     pub cols: Vec<usize>,
+    /// Value per stored entry.
     pub vals: Vec<f64>,
 }
 
 impl CsrMatrix {
+    /// Stored (structurally nonzero) entry count.
     pub fn nnz(&self) -> usize {
         self.vals.len()
     }
@@ -79,6 +90,7 @@ impl CsrMatrix {
         }
     }
 
+    /// [`CsrMatrix::matvec`] into a fresh vector.
     pub fn matvec_alloc(&self, x: &[f64]) -> Vec<f64> {
         let mut y = vec![0.0; self.n_rows];
         self.matvec(x, &mut y);
@@ -98,6 +110,7 @@ impl CsrMatrix {
         d
     }
 
+    /// Value at (i, j), 0.0 if not stored.
     pub fn get(&self, i: usize, j: usize) -> f64 {
         for k in self.row_ptr[i]..self.row_ptr[i + 1] {
             if self.cols[k] == j {

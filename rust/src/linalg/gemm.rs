@@ -40,6 +40,7 @@ pub struct GemmBufs {
 }
 
 impl GemmBufs {
+    /// Allocate the packing panels (one-time, reused across calls).
     pub fn new() -> GemmBufs {
         GemmBufs { pa: vec![0.0; MC * KC], pb: vec![0.0; KC * NC] }
     }

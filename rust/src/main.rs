@@ -2,9 +2,15 @@
 //!
 //! Subcommands:
 //!   train [--backend native|xla] ...  train a problem (native: pure
-//!                                     Rust, no artifacts; xla: AOT)
+//!                                     Rust, no artifacts; xla: AOT);
+//!                                     --checkpoint persists the model,
+//!                                     --resume warm-restarts one
+//!   infer --ckpt out.ckpt ...      load a checkpoint and serve batched
+//!                                  predictions over a query point cloud
+//!                                  (CSV/VTK output)
 //!   bench [--quick] ...            time the native train-step hot path
-//!                                  and write BENCH_native_step.json
+//!                                  + inference throughput and write
+//!                                  BENCH_native_step.json
 //!   artifacts                      list available AOT artifacts (xla)
 //!   experiment <id|all> ...        regenerate a paper table/figure
 //!   fem-solve --mesh <kind> ...    run the classical FEM reference solver
@@ -12,7 +18,7 @@
 //!   dump-tensors                   write assembly dumps for pytest
 //!                                  cross-validation (`make crosscheck`)
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context as _, Result};
 
 use fastvpinns::coordinator::metrics::eval_grid;
 use fastvpinns::coordinator::schedule::LrSchedule;
@@ -48,6 +54,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_str() {
         "artifacts" => cmd_artifacts(args),
         "train" => cmd_train(args),
+        "infer" => cmd_infer(args),
         "bench" => cmd_bench(args),
         "experiment" => {
             if args.positional.is_empty() {
@@ -81,8 +88,13 @@ repro — FastVPINNs coordinator
               [--problem {problems}]
               [--omega-pi K] [--k-pi K] [--n N] [--nt1d N] [--nq1d N]
               [--layers 2,30,30,30,1] [--iters N] [--lr F] [--tau F]
-              [--seed N] [--ns N] [--expect-rel-l2 F] [--history F.csv]
+              [--seed N] [--ns N] [--nb N] [--log-every N]
+              [--expect-rel-l2 F] [--history F.csv]
+              [--checkpoint F.ckpt [--checkpoint-every N]]
+              [--resume F.ckpt]
               (xla backend: --artifact NAME [--artifacts DIR])
+  repro infer --ckpt F.ckpt [--points F.csv | --grid N | --quad]
+              [--out pred.csv|pred.vtk] [--batch N]
   repro bench [--backend native] [--quick] [--iters N] [--warmup N]
               [--nt1d N] [--nq1d N] [--out BENCH_native_step.json]
   repro artifacts [--artifacts DIR]              (requires --features xla)
@@ -153,8 +165,9 @@ fn parse_layers(spec: &str) -> Result<Vec<usize>> {
 /// JSON perf record — the tracked datapoint CI uploads on every PR.
 fn cmd_bench(args: &Args) -> Result<()> {
     use fastvpinns::experiments::common::{
-        native_forward_step_case, native_inverse_space_step_case,
-        native_step_case, StepBenchCase, STD_LAYERS,
+        native_forward_step_case, native_infer_case,
+        native_inverse_space_step_case, native_step_case, StepBenchCase,
+        STD_LAYERS,
     };
     use fastvpinns::util::json::Json;
 
@@ -272,6 +285,29 @@ fn cmd_bench(args: &Args) -> Result<()> {
             tab.summary.median, k_ref * k_ref
         );
     }
+    // inference throughput: repeated passes over a 4096-point query
+    // cloud through the blocked prediction path, at serving batch
+    // sizes — the amortized-inference datapoint `repro infer` serves
+    for &batch in &[1usize, 256, 4096] {
+        let c = native_infer_case(batch, 4096, iters, warmup)?;
+        println!(
+            "  {:<14} {:<17} batch={:<6} ({:>7} points)   median \
+             {:>9.3} ms/pass  {:>12.0} points/s",
+            "infer", "mlp_predict", c.batch, c.n_points,
+            c.summary.median, c.points_per_sec
+        );
+        cases.push(Json::obj(vec![
+            ("loss", Json::str("infer")),
+            ("pde", Json::str("mlp_predict")),
+            ("batch", Json::num(c.batch as f64)),
+            ("n_points", Json::num(c.n_points as f64)),
+            ("median_ms", Json::num(c.summary.median)),
+            ("p90_ms", Json::num(c.summary.p90)),
+            ("min_ms", Json::num(c.summary.min)),
+            ("mean_ms", Json::num(c.summary.mean)),
+            ("points_per_sec", Json::num(c.points_per_sec)),
+        ]));
+    }
     let doc = Json::obj(vec![
         ("bench", Json::str("native_step")),
         ("backend", Json::str("native")),
@@ -294,6 +330,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     let backend = args.str_or("backend", "native");
     check_backend_name(&backend)?;
+    if backend != "native"
+        && (args.has("checkpoint") || args.has("resume")
+            || args.has("checkpoint-every"))
+    {
+        // fail loudly rather than train-and-discard: the xla artifact
+        // executor keeps its state on device and does not implement
+        // Backend::export_checkpoint
+        bail!(
+            "--checkpoint/--resume are only supported on the native \
+             backend ('{backend}' does not persist state)"
+        );
+    }
     match backend.as_str() {
         "native" => cmd_train_native(args),
         "xla" => cmd_train_xla(args),
@@ -301,23 +349,85 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
 }
 
+/// Flags worth persisting into a checkpoint: everything that shapes
+/// the problem/mesh/network, minus per-run control flags (the resumed
+/// run picks its own iteration budget, output paths and gates).
+fn persistable_flags(args: &Args) -> Vec<(String, String)> {
+    const CONTROL: &[&str] = &[
+        "backend", "resume", "checkpoint", "checkpoint-every", "history",
+        "expect-rel-l2", "iters", "log-every",
+    ];
+    args.flag_pairs()
+        .into_iter()
+        .filter(|(k, _)| !CONTROL.contains(&k.as_str()))
+        .collect()
+}
+
 /// Pure-Rust training: no artifacts, no Python, no XLA. The problem
 /// family is looked up in the single registry (`problems::registry`),
 /// which also owns the USAGE list — mesh, loss mode and sensor counts
 /// all come from the entry; the PDE coefficients come from the problem
 /// itself via its variational form.
+///
+/// `--checkpoint F.ckpt` persists the model (periodically with
+/// `--checkpoint-every N`, always at the end; best-by-validation at
+/// `F.ckpt.best` when the problem has an exact solution).
+/// `--resume F.ckpt` warm-restarts: the artifact's stored flags
+/// rebuild the identical setup, its Adam state, step count and best
+/// metric are restored, and training continues the original loss
+/// trajectory for `--iters` further steps. Run-control flags
+/// (`--iters`, `--lr`, `--log-every`, output paths, gates) may be
+/// given anew; trained state (`--tau`, `--seed`, `--layers`, the
+/// problem and its mesh shape, ...) cannot be overridden and is
+/// rejected loudly.
 fn cmd_train_native(args: &Args) -> Result<()> {
-    let problem_name = args.str_or("problem", "poisson_sin");
+    use fastvpinns::coordinator::trainer::CheckpointPolicy;
+    use fastvpinns::runtime::checkpoint::{hash_f32_bits, Checkpoint};
+
+    let resume: Option<Checkpoint> = match args.flag("resume") {
+        Some(p) => Some(Checkpoint::read(p)?),
+        None => None,
+    };
+    // effective args: the checkpoint's persisted invocation underneath
+    // anything given now
+    let eff: Args = match &resume {
+        Some(ck) => {
+            anyhow::ensure!(
+                !ck.problem.is_empty(),
+                "checkpoint has no registry problem id (it was \
+                 exported outside `repro train --checkpoint`); rebuild \
+                 the setup in code via NativeBackend::from_checkpoint \
+                 instead"
+            );
+            // the trained hyper-parameters and network shape are
+            // restored from the artifact — overriding them now would
+            // silently train a different objective, so reject instead
+            for k in ["tau", "gamma", "nb", "ns", "seed", "layers",
+                      "problem"] {
+                anyhow::ensure!(
+                    !args.has(k),
+                    "--{k} cannot be overridden on --resume (it is \
+                     part of the trained state restored from the \
+                     artifact); retrain from scratch to change it"
+                );
+            }
+            let mut a = args.with_defaults(&ck.cli);
+            a.set("problem", &ck.problem);
+            a
+        }
+        None => args.clone(),
+    };
+    let problem_name = eff.str_or("problem", "poisson_sin");
     let entry = problems::registry::lookup(&problem_name)
         .ok_or_else(|| anyhow::anyhow!(
             "unknown --problem '{problem_name}' (known: {})",
             problems::registry::name_list()
         ))?;
-    let setup = (entry.build)(args)?;
-    let iters = args.usize_or("iters", setup.iters)?;
+    let setup = (entry.build)(&eff)?;
+    let iters = eff.usize_or("iters", setup.iters)?;
     // --lr overrides the registry's per-problem schedule with a
     // constant rate
-    let lr = match args.flag("lr") {
+    let lr = match eff.flag("lr") {
         Some(v) => LrSchedule::Constant(v.parse().map_err(
             |_| anyhow::anyhow!("--lr expects a number, got {v}"))?),
         None => setup.lr,
@@ -325,14 +435,18 @@ fn cmd_train_native(args: &Args) -> Result<()> {
     let cfg = TrainConfig {
         iters,
         lr,
-        tau: args.f64_or("tau", 10.0)?,
-        seed: args.usize_or("seed", 42)? as u64,
-        log_every: args.usize_or("log-every", 100)?,
+        tau: eff.f64_or("tau", 10.0)?,
+        seed: eff.usize_or("seed", 42)? as u64,
+        log_every: eff.usize_or("log-every", 100)?,
         ..TrainConfig::default()
     };
-    let layers = parse_layers(&args.str_or("layers", "2,30,30,30,1"))?;
-    let nt1d = args.usize_or("nt1d", 5)?;
-    let nq1d = args.usize_or("nq1d", 10)?;
+    // on resume the network shape is the artifact's, not --layers
+    let layers = match &resume {
+        Some(ck) => ck.layers.clone(),
+        None => parse_layers(&eff.str_or("layers", "2,30,30,30,1"))?,
+    };
+    let nt1d = eff.usize_or("nt1d", 5)?;
+    let nq1d = eff.usize_or("nq1d", 10)?;
     let (mesh, problem) = (setup.mesh, setup.problem);
 
     println!(
@@ -343,14 +457,61 @@ fn cmd_train_native(args: &Args) -> Result<()> {
     let dom = assembly::assemble(&mesh, nt1d, nq1d, QuadKind::GaussLegendre);
     let src = DataSource { mesh: &mesh, domain: Some(&dom),
                            problem: &*problem, sensor_values: None };
-    let ncfg = NativeConfig {
-        layers,
-        loss: setup.loss,
-        nb: args.usize_or("nb", 400)?,
-        ns: setup.ns,
+    let native = match &resume {
+        Some(ck) => NativeBackend::from_checkpoint(ck, &src)?,
+        None => {
+            let ncfg = NativeConfig {
+                layers,
+                loss: setup.loss,
+                nb: eff.usize_or("nb", 400)?,
+                ns: setup.ns,
+            };
+            NativeBackend::new(&ncfg, &src, &BackendOpts::from(&cfg))?
+        }
     };
-    let native = NativeBackend::new(&ncfg, &src, &BackendOpts::from(&cfg))?;
     let mut trainer = Trainer::new(Box::new(native), &cfg);
+    if let Some(ck) = &resume {
+        trainer.resume_from_step(ck.step);
+        if let Some(best) = ck.best_metric {
+            // continue best-model tracking instead of letting the
+            // first resumed save clobber <path>.best with a worse
+            // model
+            trainer.resume_best_metric(best);
+        }
+        println!(
+            "resumed from step {} of '{}' ({} further iters)",
+            ck.step, ck.problem, cfg.iters
+        );
+    }
+
+    // evaluation grid (the paper's 100x100) — also the validation set
+    // for best-model tracking when the solution is analytic
+    let (lo, hi) = mesh.bbox();
+    let grid = eval_grid(100, 100, lo[0], lo[1], hi[0], hi[1]);
+    let exact_known = problem.exact(grid[0][0], grid[0][1]).is_some();
+
+    // --checkpoint enables persistence; a bare --resume keeps saving
+    // to the artifact it restarted from
+    let ckpt_path: Option<String> = args
+        .flag("checkpoint")
+        .or_else(|| args.flag("resume"))
+        .map(|s| s.to_string());
+    if let Some(path) = &ckpt_path {
+        trainer.set_checkpoint_policy(CheckpointPolicy {
+            path: path.into(),
+            every: eff.usize_or("checkpoint-every", 0)?,
+            problem: problem_name.clone(),
+            cli: persistable_flags(&eff),
+        });
+        if exact_known {
+            let exact: Vec<f64> = grid
+                .iter()
+                .map(|p| problem.exact(p[0], p[1]).unwrap())
+                .collect();
+            trainer.set_validation(grid.clone(), exact);
+        }
+    }
+
     let report = trainer.run()?;
     println!(
         "done: loss {:.4e} (var {:.4e}, bd {:.4e}), median {:.3} ms/step, \
@@ -363,9 +524,6 @@ fn cmd_train_native(args: &Args) -> Result<()> {
     }
 
     // error vs exact on the paper's 100x100 grid (when analytic)
-    let (lo, hi) = mesh.bbox();
-    let grid = eval_grid(100, 100, lo[0], lo[1], hi[0], hi[1]);
-    let exact_known = problem.exact(grid[0][0], grid[0][1]).is_some();
     let mut rel_l2_measured: Option<f64> = None;
     if setup.loss == NativeLoss::InverseSpace {
         // both heads in one trunk pass: u vs exact + the recovered
@@ -407,6 +565,25 @@ fn cmd_train_native(args: &Args) -> Result<()> {
     if let Some(out) = args.flag("history") {
         trainer.history.to_csv(out)?;
         println!("history -> {out}");
+    }
+    if let Some(path) = &ckpt_path {
+        // quadrature-point prediction hash: `repro infer --ckpt <path>
+        // --quad` recomputes this from the written artifact, so
+        // bit-for-bit reproduction is a string comparison away
+        let qpts: Vec<[f64; 2]> =
+            dom.quad_xy.chunks(2).map(|c| [c[0], c[1]]).collect();
+        let uq = trainer.predict(&qpts)?;
+        println!(
+            "checkpoint -> {path} (step {}); quad-point u hash \
+             {:016x} over {} points",
+            report.steps, hash_f32_bits(&uq), uq.len()
+        );
+        if let Some(best) = report.best_metric {
+            println!(
+                "best model -> {path}.best ({} {best:.3e})",
+                if exact_known { "validation rel-L2" } else { "loss" }
+            );
+        }
     }
     // --expect-rel-l2 F turns the printed error into an enforced gate
     // (nonzero exit on miss) — what the CI acceptance step runs
@@ -496,6 +673,184 @@ fn cmd_train_xla(args: &Args) -> Result<()> {
         }
         Ok(())
     }
+}
+
+/// Parse a query point cloud from a CSV of `x,y` rows (an optional
+/// non-numeric header row is skipped).
+fn read_points_csv(path: &str) -> Result<Vec<[f64; 2]>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read points file {path}"))?;
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split(',');
+        let xs = it.next().unwrap_or("").trim();
+        let ys = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!(
+                "{path}:{}: expected 'x,y', got '{line}'", ln + 1))?
+            .trim();
+        match (xs.parse::<f64>(), ys.parse::<f64>()) {
+            (Ok(x), Ok(y)) => out.push([x, y]),
+            _ if ln == 0 => continue, // header row
+            _ => bail!("{path}:{}: cannot parse '{line}' as 'x,y'",
+                       ln + 1),
+        }
+    }
+    Ok(out)
+}
+
+/// Rebuild the training quadrature points of a CLI-written checkpoint
+/// from its persisted registry id + flags, verifying the result
+/// against the artifact's domain fingerprint.
+fn quad_points_for(
+    ck: &fastvpinns::runtime::checkpoint::Checkpoint,
+) -> Result<Vec<[f64; 2]>> {
+    use fastvpinns::runtime::checkpoint::hash_f64_bits;
+    anyhow::ensure!(
+        !ck.problem.is_empty(),
+        "--quad needs a checkpoint written by `repro train \
+         --checkpoint` (it stores the problem id and flags); this one \
+         was exported manually"
+    );
+    let entry = problems::registry::lookup(&ck.problem).ok_or_else(
+        || anyhow::anyhow!(
+            "checkpoint problem '{}' is not in the registry (known: {})",
+            ck.problem, problems::registry::name_list()
+        ),
+    )?;
+    let mut a = Args::default();
+    for (k, v) in &ck.cli {
+        a.set(k, v);
+    }
+    let setup = (entry.build)(&a)?;
+    let nt1d = a.usize_or("nt1d", 5)?;
+    let nq1d = a.usize_or("nq1d", 10)?;
+    let dom = assembly::assemble(&setup.mesh, nt1d, nq1d,
+                                 QuadKind::GaussLegendre);
+    anyhow::ensure!(
+        hash_f64_bits(&dom.quad_xy) == ck.fingerprint.quad_hash,
+        "rebuilt quadrature points do not match the checkpoint's \
+         domain fingerprint — the mesh generator or assembly changed \
+         since the artifact was written"
+    );
+    Ok(dom.quad_xy.chunks(2).map(|c| [c[0], c[1]]).collect())
+}
+
+/// Batched inference from a checkpoint: evaluate u (and the eps field
+/// for two-head inverse models) over a query point cloud — a CSV
+/// file, a uniform grid over the training bbox, or the training
+/// quadrature points — through the blocked-GEMM forward path,
+/// streaming CSV (or writing VTK) output.
+fn cmd_infer(args: &Args) -> Result<()> {
+    use fastvpinns::runtime::checkpoint::{hash_f32_bits, Checkpoint};
+    use fastvpinns::runtime::infer::InferenceSession;
+    use fastvpinns::util::csv::CsvWriter;
+
+    let path = args.req_str("ckpt")?;
+    let ck = Checkpoint::read(&path)?;
+    let mut sess = InferenceSession::from_checkpoint(&ck)?;
+    println!(
+        "loaded {path}: problem '{}' ({}), loss {}, net {:?}{}, step {}",
+        if ck.problem.is_empty() {
+            "<manual export>"
+        } else {
+            ck.problem.as_str()
+        },
+        ck.problem_label, ck.loss_kind, ck.layers,
+        if ck.two_head { " + eps head" } else { "" }, ck.step
+    );
+
+    let pts: Vec<[f64; 2]> = if let Some(f) = args.flag("points") {
+        read_points_csv(f)?
+    } else if args.has("quad") {
+        quad_points_for(&ck)?
+    } else {
+        let n = args.usize_or("grid", 100)?.max(2);
+        let [x0, y0, x1, y1] = ck.fingerprint.bbox;
+        eval_grid(n, n, x0, y0, x1, y1)
+    };
+    anyhow::ensure!(!pts.is_empty(), "empty query point cloud");
+    let batch = args.usize_or("batch", 4096)?.max(1);
+
+    // evaluate batch-by-batch, streaming CSV rows as they are computed
+    let out = args.flag("out").map(|s| s.to_string());
+    let mut csv = match &out {
+        Some(p) if p.ends_with(".csv") => Some(CsvWriter::create(
+            p,
+            if sess.two_head() { &["x", "y", "u", "eps"][..] }
+            else { &["x", "y", "u"][..] },
+        )?),
+        Some(p) if p.ends_with(".vtk") => None,
+        Some(p) => bail!(
+            "--out '{p}': unknown extension (expected .csv or .vtk)"),
+        None => None,
+    };
+    let mut u = Vec::with_capacity(pts.len());
+    let mut eps: Option<Vec<f32>> = sess
+        .two_head()
+        .then(|| Vec::with_capacity(pts.len()));
+    let t0 = std::time::Instant::now();
+    for chunk in pts.chunks(batch) {
+        let (cu, ce) = sess.eval(chunk);
+        if let Some(w) = csv.as_mut() {
+            for (i, p) in chunk.iter().enumerate() {
+                match &ce {
+                    Some(e) => w.row_f64(&[p[0], p[1], cu[i] as f64,
+                                           e[i] as f64])?,
+                    None => w.row_f64(&[p[0], p[1], cu[i] as f64])?,
+                }
+            }
+        }
+        if let (Some(all), Some(e)) = (eps.as_mut(), ce) {
+            all.extend_from_slice(&e);
+        }
+        u.extend_from_slice(&cu);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    if let Some(w) = csv.as_mut() {
+        w.flush()?;
+    }
+    if let Some(p) = &out {
+        if p.ends_with(".vtk") {
+            let uf: Vec<f64> = u.iter().map(|&v| v as f64).collect();
+            let ef: Option<Vec<f64>> = eps
+                .as_ref()
+                .map(|e| e.iter().map(|&v| v as f64).collect());
+            let mut fields: Vec<(&str, &[f64])> =
+                vec![("u", uf.as_slice())];
+            if let Some(ef) = &ef {
+                fields.push(("eps", ef.as_slice()));
+            }
+            fastvpinns::mesh::vtk::write_point_cloud(&pts, &fields, p)?;
+        }
+        println!("predictions -> {p}");
+    }
+
+    let (umin, umax) = u.iter().fold(
+        (f64::MAX, f64::MIN),
+        |(lo, hi), &v| (lo.min(v as f64), hi.max(v as f64)),
+    );
+    println!(
+        "{} points in {:.3}s (batch {batch}): {:.0} points/s, u in \
+         [{umin:.4}, {umax:.4}]",
+        u.len(), secs, u.len() as f64 / secs.max(1e-12)
+    );
+    if let Some(e) = &eps {
+        let (emin, emax) = e.iter().fold(
+            (f64::MAX, f64::MIN),
+            |(lo, hi), &v| (lo.min(v as f64), hi.max(v as f64)),
+        );
+        println!("eps field in [{emin:.4}, {emax:.4}]");
+    }
+    // with --quad this reproduces the hash `repro train --checkpoint`
+    // printed — bit-for-bit agreement with the exporting trainer
+    println!("u hash {:016x} over {} points", hash_f32_bits(&u),
+             u.len());
+    Ok(())
 }
 
 fn build_mesh(kind: &str, n: usize) -> Result<QuadMesh> {

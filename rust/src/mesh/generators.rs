@@ -250,6 +250,7 @@ pub fn gear_ci() -> QuadMesh {
     gear(20, 11, 8, 0.35, 0.8, 1.0)
 }
 
+/// The paper-scale spur gear: 14,080 cells.
 pub fn gear_paper() -> QuadMesh {
     // 20 teeth * 44 pts = 880 around, 16 layers -> 14,080 cells
     gear(20, 44, 16, 0.35, 0.8, 1.0)

@@ -21,6 +21,7 @@ pub fn read(path: impl AsRef<Path>) -> Result<QuadMesh> {
     parse(&text)
 }
 
+/// Parse Gmsh 2.2 ASCII text into a [`QuadMesh`].
 pub fn parse(text: &str) -> Result<QuadMesh> {
     let mut lines = text.lines().peekable();
     let mut node_ids: HashMap<usize, usize> = HashMap::new();

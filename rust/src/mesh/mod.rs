@@ -18,7 +18,9 @@ use anyhow::{bail, Result};
 /// An oriented boundary edge (a -> b in the owning cell's CCW order).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BoundaryEdge {
+    /// Start point index.
     pub a: usize,
+    /// End point index.
     pub b: usize,
     /// Physical tag (0 = untagged / default boundary).
     pub tag: u32,
@@ -27,7 +29,9 @@ pub struct BoundaryEdge {
 /// A 2D all-quad mesh.
 #[derive(Debug, Clone, Default)]
 pub struct QuadMesh {
+    /// Vertex coordinates.
     pub points: Vec<[f64; 2]>,
+    /// CCW vertex indices per quad cell.
     pub cells: Vec<[usize; 4]>,
     /// Oriented boundary edges; populated by `compute_boundary` (called
     /// by all constructors in this crate).
@@ -35,6 +39,8 @@ pub struct QuadMesh {
 }
 
 impl QuadMesh {
+    /// Build a mesh, validating indices/orientation and computing the
+    /// boundary.
     pub fn new(points: Vec<[f64; 2]>, cells: Vec<[usize; 4]>) -> Result<Self> {
         let mut m = QuadMesh { points, cells, boundary: vec![] };
         m.validate()?;
@@ -42,10 +48,12 @@ impl QuadMesh {
         Ok(m)
     }
 
+    /// Vertex count.
     pub fn n_points(&self) -> usize {
         self.points.len()
     }
 
+    /// Cell count.
     pub fn n_cells(&self) -> usize {
         self.cells.len()
     }

@@ -71,15 +71,23 @@ pub fn aspect_ratio(mesh: &QuadMesh, e: usize) -> f64 {
 /// Summary over the whole mesh (printed by `repro mesh`).
 #[derive(Debug, Clone, Copy)]
 pub struct QualityReport {
+    /// Cell count.
     pub n_cells: usize,
+    /// Vertex count.
     pub n_points: usize,
+    /// Whether every cell has a positive Jacobian everywhere probed.
     pub all_valid: bool,
+    /// Smallest Jacobian determinant seen.
     pub min_jac: f64,
+    /// Worst max/min in-cell Jacobian ratio (skewness proxy).
     pub worst_ratio: f64,
+    /// Largest cell aspect ratio.
     pub max_aspect: f64,
+    /// Total mesh area.
     pub area: f64,
 }
 
+/// Probe every cell's Jacobian and sizes into a [`QualityReport`].
 pub fn report(mesh: &QuadMesh) -> QualityReport {
     let mut min_jac = f64::INFINITY;
     let mut max_aspect: f64 = 0.0;

@@ -50,6 +50,46 @@ pub fn write_point_fields(
     Ok(())
 }
 
+/// Write a bare point cloud (no mesh connectivity) with named scalar
+/// fields as legacy-VTK POLYDATA — the `repro infer` output path for
+/// arbitrary query clouds, viewable in ParaView as vertices.
+pub fn write_point_cloud(
+    points: &[[f64; 2]],
+    fields: &[(&str, &[f64])],
+    path: impl AsRef<Path>,
+) -> Result<()> {
+    for (name, data) in fields {
+        ensure!(data.len() == points.len(),
+                "field '{name}' has {} values for {} points", data.len(),
+                points.len());
+    }
+    let n = points.len();
+    let mut s = String::new();
+    s.push_str("# vtk DataFile Version 3.0\nfastvpinns\nASCII\n");
+    s.push_str("DATASET POLYDATA\n");
+    let _ = writeln!(s, "POINTS {n} double");
+    for p in points {
+        let _ = writeln!(s, "{} {} 0", p[0], p[1]);
+    }
+    let _ = writeln!(s, "VERTICES {n} {}", 2 * n);
+    for i in 0..n {
+        let _ = writeln!(s, "1 {i}");
+    }
+    if !fields.is_empty() {
+        let _ = writeln!(s, "POINT_DATA {n}");
+        for (name, data) in fields {
+            let _ = writeln!(s, "SCALARS {name} double 1");
+            s.push_str("LOOKUP_TABLE default\n");
+            for v in *data {
+                let _ = writeln!(s, "{v}");
+            }
+        }
+    }
+    fs::write(path.as_ref(), s)
+        .with_context(|| format!("write {}", path.as_ref().display()))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -74,5 +114,20 @@ mod tests {
         let bad = vec![0.0; 3];
         let p = std::env::temp_dir().join("fastvpinns_bad.vtk");
         assert!(write_point_fields(&m, &[("u", &bad)], &p).is_err());
+    }
+
+    #[test]
+    fn point_cloud_polydata() {
+        let pts = [[0.0, 0.0], [0.5, 0.25], [1.0, 1.0]];
+        let u = vec![1.0, 2.0, 3.0];
+        let e = vec![0.1, 0.2, 0.3];
+        let p = std::env::temp_dir().join("fastvpinns_cloud.vtk");
+        write_point_cloud(&pts, &[("u", &u), ("eps", &e)], &p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("DATASET POLYDATA"));
+        assert!(text.contains("POINTS 3 double"));
+        assert!(text.contains("VERTICES 3 6"));
+        assert!(text.contains("SCALARS eps double 1"));
+        assert!(write_point_cloud(&pts, &[("u", &e[..2])], &p).is_err());
     }
 }

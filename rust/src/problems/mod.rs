@@ -22,8 +22,11 @@ use crate::autodiff::{probe_2d, Dual2};
 /// tabulated once per quadrature point (`eps_at`/`b_at`/`c_at`).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CoeffVariability {
+    /// Diffusion eps(x, y) varies in space.
     pub eps: bool,
+    /// Convection b(x, y) varies in space.
     pub b: bool,
+    /// Reaction c(x, y) varies in space.
     pub c: bool,
 }
 
@@ -36,6 +39,8 @@ impl CoeffVariability {
 /// A scalar 2D second-order problem instance
 /// `-div(eps grad u) + b . grad u + c u = f` with Dirichlet data.
 pub trait Problem {
+    /// Stable instance label (may encode parameters, e.g.
+    /// `helmholtz_k6.283`).
     fn name(&self) -> &str;
     /// Source term f(x, y).
     fn forcing(&self, x: f64, y: f64) -> f64;
@@ -142,11 +147,13 @@ impl<P: Problem> Problem for ForceVariable<P> {
 /// `-lap u = -2 omega^2 sin(omega x) sin(omega y)` on (0,1)^2, exact
 /// solution `u = -sin(omega x) sin(omega y)` (paper SS4.6).
 pub struct PoissonSin {
+    /// Frequency of the manufactured solution.
     pub omega: f64,
     label: String,
 }
 
 impl PoissonSin {
+    /// The problem at frequency `omega`.
     pub fn new(omega: f64) -> Self {
         PoissonSin { omega, label: format!("poisson_sin_w{omega:.3}") }
     }
@@ -214,11 +221,13 @@ impl Problem for GearCd {
 /// Dirichlet Laplacian spectrum `pi^2 (m^2 + n^2)`, coercive below
 /// `2 pi^2`.
 pub struct Helmholtz2D {
+    /// Wavenumber.
     pub k: f64,
     label: String,
 }
 
 impl Helmholtz2D {
+    /// The problem at wavenumber `k`.
     pub fn new(k: f64) -> Self {
         Helmholtz2D { k, label: format!("helmholtz_k{k:.3}") }
     }
@@ -261,12 +270,14 @@ impl Problem for Helmholtz2D {
 /// exact `u = sin(pi x) sin(pi y)`; forcing via Dual2. The `b` tables
 /// are hoisted per quadrature point — no per-step evaluation.
 pub struct VariableConvectionCd {
+    /// Constant diffusion coefficient.
     pub eps0: f64,
     /// Angular rate of the rotating field.
     pub omega_r: f64,
 }
 
 impl VariableConvectionCd {
+    /// The standard instance (eps = 1, omega_r = 2).
     pub fn new() -> Self {
         VariableConvectionCd { eps0: 1.0, omega_r: 2.0 }
     }
@@ -325,10 +336,12 @@ impl Problem for VariableConvectionCd {
 /// The forcing is manufactured via Dual2 so the trainable eps must
 /// converge to eps_actual.
 pub struct InverseConstPoisson {
+    /// Ground-truth diffusion constant the run must recover.
     pub eps_actual: f64,
 }
 
 impl InverseConstPoisson {
+    /// The paper's instance (eps_actual = 0.3).
     pub fn new() -> Self {
         InverseConstPoisson { eps_actual: 0.3 }
     }
@@ -379,6 +392,7 @@ impl Problem for InverseConstPoisson {
 pub struct InverseSpaceCd;
 
 impl InverseSpaceCd {
+    /// The paper's ground-truth diffusion field.
     pub fn eps_actual(x: f64, y: f64) -> f64 {
         0.5 * (x.sin() + y.cos())
     }

@@ -19,7 +19,9 @@ use crate::util::cli::Args;
 
 /// Everything `repro train` needs for one named problem family.
 pub struct ProblemSetup {
+    /// The mesh this family trains on.
     pub mesh: QuadMesh,
+    /// The PDE instance (coefficients, forcing, exact solution).
     pub problem: Box<dyn Problem>,
     /// Native loss *mode* (the PDE coefficients live on the problem).
     pub loss: NativeLoss,
@@ -39,9 +41,11 @@ pub struct ProblemSetup {
 
 /// One registry row.
 pub struct Entry {
+    /// CLI name (`--problem <name>`).
     pub name: &'static str,
     /// One-line summary for the CLI help.
     pub summary: &'static str,
+    /// Build the ready-to-train setup from CLI flags.
     pub build: fn(&Args) -> Result<ProblemSetup>,
 }
 

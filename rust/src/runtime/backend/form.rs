@@ -31,7 +31,7 @@ use crate::fem::assembly::AssembledDomain;
 use crate::problems::Problem;
 
 /// One coefficient of the weak form, hoisted to step-invariant data.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Coeff {
     /// Spatially constant — the backend keeps the pre-refactor scalar
     /// fast path (fold into a GEMV `alpha` / one multiply).
@@ -69,7 +69,7 @@ impl Coeff {
 /// The weak form `-div(eps grad u) + b . grad u + c u = f` as hoisted
 /// coefficient data. Built once per backend from the problem's
 /// coefficient fields; the step loop only ever indexes it.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct VariationalForm {
     /// Diffusion `eps(x, y)`.
     pub eps: Coeff,

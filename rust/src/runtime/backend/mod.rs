@@ -40,9 +40,11 @@ use crate::problems::Problem;
 
 /// Where a backend gets its mesh/problem data from.
 pub struct DataSource<'a> {
+    /// The training mesh.
     pub mesh: &'a QuadMesh,
     /// Assembled premultiplier tensors (not needed for PINN artifacts).
     pub domain: Option<&'a AssembledDomain>,
+    /// The PDE instance being solved.
     pub problem: &'a dyn Problem,
     /// Sensor ground truth override (defaults to `problem.exact`).
     pub sensor_values: Option<&'a dyn Fn(f64, f64) -> f64>,
@@ -56,6 +58,7 @@ pub struct BackendOpts {
     pub tau: f64,
     /// Sensor penalty for inverse problems (paper's gamma).
     pub gamma: f64,
+    /// RNG seed (weight init + boundary/sensor sampling).
     pub seed: u64,
     /// Initial guess for the trainable eps (inverse_const; paper: 2.0).
     pub eps_init: f64,
@@ -72,7 +75,9 @@ impl Default for BackendOpts {
 pub struct StepStats {
     /// Total objective (var + tau*bd [+ gamma*sensor]).
     pub loss: f64,
+    /// Variational component.
     pub var_loss: f64,
+    /// Dirichlet-penalty component.
     pub bd_loss: f64,
     /// Loss-dependent extra: eps (inverse_const), sensor loss
     /// (inverse_space), else 0.
@@ -109,6 +114,19 @@ pub trait Backend {
     /// Current trainable diffusion coefficient, when the loss has one.
     fn current_eps(&self) -> Option<f64> {
         None
+    }
+
+    /// Export the backend's full training state as a versioned
+    /// [`Checkpoint`](crate::runtime::checkpoint::Checkpoint) artifact:
+    /// network parameters (both heads), trainable scalar eps, Adam
+    /// state, the hoisted weak form and the domain fingerprint. The
+    /// coordinator fills in run-level metadata (registry problem id,
+    /// CLI flags, step count) before writing. Backends without
+    /// persistence support return an error (the default).
+    fn export_checkpoint(&self)
+        -> Result<crate::runtime::checkpoint::Checkpoint> {
+        anyhow::bail!(
+            "backend '{}' does not support checkpointing", self.name())
     }
 }
 

@@ -37,11 +37,14 @@
 //! Thread partials are reduced in chunk order, so a run is
 //! deterministic for a fixed thread count.
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use super::form::VariationalForm;
 use super::{Backend, BackendOpts, DataSource, StepStats};
 use crate::linalg::gemm::{gemm, gemv, GemmBufs};
+use crate::runtime::checkpoint::{
+    hash_f64_bits, Checkpoint, DomainFingerprint, TrainHyper,
+};
 use crate::util::rng::Rng;
 
 /// Target number of quadrature points batched per forward/backward
@@ -68,6 +71,31 @@ pub enum NativeLoss {
     /// SS4.7.2, Figs. 15-16); convection/reaction still come from the
     /// form.
     InverseSpace,
+}
+
+impl NativeLoss {
+    /// Stable id of the mode (`"forward"`, `"inverse_const"`,
+    /// `"inverse_space"`) — what checkpoints persist.
+    pub fn mode_str(self) -> &'static str {
+        match self {
+            NativeLoss::Forward => "forward",
+            NativeLoss::InverseConst => "inverse_const",
+            NativeLoss::InverseSpace => "inverse_space",
+        }
+    }
+
+    /// Parse a [`NativeLoss::mode_str`] id back (checkpoint loading).
+    pub fn from_mode_str(s: &str) -> Result<NativeLoss> {
+        match s {
+            "forward" => Ok(NativeLoss::Forward),
+            "inverse_const" => Ok(NativeLoss::InverseConst),
+            "inverse_space" => Ok(NativeLoss::InverseSpace),
+            other => bail!(
+                "unknown loss mode '{other}' (known: forward, \
+                 inverse_const, inverse_space)"
+            ),
+        }
+    }
 }
 
 /// Numerically stable `ln(1 + e^z)` — the positivity map of the eps
@@ -97,6 +125,7 @@ pub struct NativeConfig {
     /// MLP widths, input to output (first must be 2, last 1). The
     /// paper's standard network is `[2, 30, 30, 30, 1]`.
     pub layers: Vec<usize>,
+    /// Objective mode (the PDE itself comes from the problem).
     pub loss: NativeLoss,
     /// Dirichlet boundary sample count.
     pub nb: usize,
@@ -143,7 +172,9 @@ impl NativeConfig {
 /// the trainable diffusion field `eps(x, y)` of the inverse-space loss.
 #[derive(Debug, Clone)]
 pub struct Mlp {
+    /// Layer widths, input to output.
     pub layers: Vec<usize>,
+    /// Flat parameters (per layer: row-major W then b; eps head last).
     pub theta: Vec<f64>,
     /// (w_offset, b_offset) per weight layer.
     offsets: Vec<(usize, usize)>,
@@ -195,11 +226,48 @@ impl Mlp {
         Ok(Mlp { layers: layers.to_vec(), theta, offsets, eps_head })
     }
 
+    /// Rebuild a network from a persisted flat parameter vector (the
+    /// checkpoint path): same layout as [`Mlp::glorot`] /
+    /// [`Mlp::glorot_two_head`], but with `theta` supplied instead of
+    /// drawn — so a reloaded network reproduces the exporting one's
+    /// predictions bit-for-bit. Validates the parameter count against
+    /// the layer widths.
+    pub fn from_theta(layers: &[usize], two_head: bool, theta: Vec<f64>)
+        -> Result<Mlp> {
+        ensure!(layers.len() >= 2, "need at least input+output layer");
+        ensure!(layers[0] == 2, "input width must be 2 (x, y)");
+        ensure!(*layers.last().unwrap() == 1, "output width must be 1");
+        let mut offsets = Vec::new();
+        let mut n = 0usize;
+        for w in layers.windows(2) {
+            let (nin, nout) = (w[0], w[1]);
+            offsets.push((n, n + nin * nout));
+            n += nin * nout + nout;
+        }
+        let eps_head = if two_head {
+            let nin = layers[layers.len() - 2];
+            let head = (n, n + nin);
+            n += nin + 1;
+            Some(head)
+        } else {
+            None
+        };
+        ensure!(
+            theta.len() == n,
+            "theta has {} values but layers {:?}{} need {n}",
+            theta.len(),
+            layers,
+            if two_head { " + eps head" } else { "" }
+        );
+        Ok(Mlp { layers: layers.to_vec(), theta, offsets, eps_head })
+    }
+
     /// Whether this network carries the eps field head.
     pub fn two_head(&self) -> bool {
         self.eps_head.is_some()
     }
 
+    /// Flat parameter count (both heads).
     pub fn n_params(&self) -> usize {
         self.theta.len()
     }
@@ -599,6 +667,7 @@ pub struct EvalScratch {
 }
 
 impl EvalScratch {
+    /// Buffers sized for `mlp`'s widest layer.
     pub fn new(mlp: &Mlp) -> EvalScratch {
         let wmax = mlp.max_width();
         EvalScratch {
@@ -763,6 +832,11 @@ fn penalty_pass(
 // The backend
 // ---------------------------------------------------------------------
 
+/// The pure-Rust training backend (see the module docs for the step
+/// algorithm). Holds the network, optimizer state and step-invariant
+/// data tensors; built from a [`DataSource`] via [`NativeBackend::new`]
+/// or restored from a persisted artifact via
+/// [`NativeBackend::from_checkpoint`].
 pub struct NativeBackend {
     cfg: NativeConfig,
     net: Mlp,
@@ -771,6 +845,17 @@ pub struct NativeBackend {
     form: VariationalForm,
     /// Loss family id derived from mode + form at construction.
     kind: &'static str,
+    /// Problem instance label (`Problem::name`), exported into
+    /// checkpoints.
+    problem_label: String,
+    /// Identity of the assembled domain (checkpoint export + resume
+    /// verification).
+    fingerprint: DomainFingerprint,
+    /// RNG seed (weights + boundary/sensor sampling), persisted so a
+    /// resumed run re-draws identical point sets.
+    seed: u64,
+    /// Initial trainable-eps guess, persisted for resume.
+    eps_init: f64,
     /// Trainable scalar diffusion (`loss == InverseConst` only).
     eps: f64,
     // Adam state over net params (+ eps slot when trainable)
@@ -805,6 +890,10 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
+    /// Build a backend from assembled data: hoist the problem's
+    /// coefficient fields into the [`VariationalForm`], draw the
+    /// Glorot init and boundary/sensor samples from `opts.seed`, and
+    /// allocate the per-thread workspaces.
     pub fn new(
         cfg: &NativeConfig,
         src: &DataSource<'_>,
@@ -895,11 +984,26 @@ impl NativeBackend {
         }
         .min(dom.ne.max(1));
 
+        let (blo, bhi) = src.mesh.bbox();
+        let fingerprint = DomainFingerprint {
+            ne: dom.ne,
+            nt: dom.nt,
+            nq: dom.nq,
+            n_points: src.mesh.n_points(),
+            n_cells: src.mesh.n_cells(),
+            bbox: [blo[0], blo[1], bhi[0], bhi[1]],
+            quad_hash: hash_f64_bits(&dom.quad_xy),
+        };
+
         let mut backend = NativeBackend {
             cfg: cfg.clone(),
             net,
             form,
             kind,
+            problem_label: src.problem.name().to_string(),
+            fingerprint,
+            seed: opts.seed,
+            eps_init: opts.eps_init,
             eps,
             m: vec![0.0; n_opt],
             v: vec![0.0; n_opt],
@@ -962,6 +1066,7 @@ impl NativeBackend {
         self.n_threads
     }
 
+    /// The live network (e.g. for prediction-only timing runs).
     pub fn network(&self) -> &Mlp {
         &self.net
     }
@@ -979,6 +1084,9 @@ impl NativeBackend {
         out
     }
 
+    /// Overwrite the optimized parameters from a flat vector (tests /
+    /// diagnostics; checkpoints restore via
+    /// [`NativeBackend::load_checkpoint`] instead).
     pub fn set_params_flat(&mut self, theta: &[f64]) -> Result<()> {
         ensure!(theta.len() == self.n_opt_params(),
                 "expected {} params, got {}", self.n_opt_params(),
@@ -989,6 +1097,114 @@ impl NativeBackend {
             self.eps = theta[n_net];
         }
         Ok(())
+    }
+
+    /// Restore network parameters, trainable eps and Adam state from a
+    /// parsed artifact, after verifying the checkpoint describes *this*
+    /// backend: same loss mode, same network shape, same domain
+    /// fingerprint and same hoisted weak-form coefficients. Every
+    /// mismatch is a clear error, never a silently different run.
+    pub fn load_checkpoint(&mut self, ck: &Checkpoint) -> Result<()> {
+        ensure!(
+            ck.loss_mode == self.cfg.loss.mode_str(),
+            "checkpoint was trained with loss mode '{}' but this \
+             backend runs '{}'",
+            ck.loss_mode,
+            self.cfg.loss.mode_str()
+        );
+        ensure!(
+            ck.layers == self.cfg.layers
+                && ck.two_head == self.net.two_head(),
+            "checkpoint network {:?} (two_head: {}) does not match the \
+             configured {:?} (two_head: {})",
+            ck.layers,
+            ck.two_head,
+            self.cfg.layers,
+            self.net.two_head()
+        );
+        ensure!(
+            ck.fingerprint == self.fingerprint,
+            "checkpoint domain fingerprint does not match this run \
+             (checkpoint: ne={} nt={} nq={} points={}, here: ne={} \
+             nt={} nq={} points={}) — rebuild with the same mesh kind, \
+             --n, --nt1d and --nq1d the checkpoint was trained on",
+            ck.fingerprint.ne,
+            ck.fingerprint.nt,
+            ck.fingerprint.nq,
+            ck.fingerprint.n_points,
+            self.fingerprint.ne,
+            self.fingerprint.nt,
+            self.fingerprint.nq,
+            self.fingerprint.n_points
+        );
+        ensure!(
+            ck.form == self.form,
+            "checkpoint weak-form coefficients differ from problem \
+             '{}''s — resume with the same --problem and the same \
+             coefficient flags (e.g. --k-pi)",
+            self.problem_label
+        );
+        let here = TrainHyper {
+            tau: self.tau,
+            gamma: self.gamma,
+            seed: self.seed,
+            eps_init: self.eps_init,
+            nb: self.cfg.nb,
+            ns: self.cfg.ns,
+        };
+        ensure!(
+            ck.hyper == here,
+            "checkpoint hyper-parameters {:?} do not match this \
+             backend's {:?} — build the backend with the artifact's \
+             values (NativeBackend::from_checkpoint does this) so the \
+             resumed objective and boundary/sensor samples are \
+             identical",
+            ck.hyper,
+            here
+        );
+        ensure!(
+            ck.theta.len() == self.net.theta.len()
+                && ck.adam_m.len() == self.m.len()
+                && ck.adam_v.len() == self.v.len(),
+            "checkpoint parameter/optimizer sizes ({}, {}, {}) do not \
+             match this backend ({}, {}, {})",
+            ck.theta.len(),
+            ck.adam_m.len(),
+            ck.adam_v.len(),
+            self.net.theta.len(),
+            self.m.len(),
+            self.v.len()
+        );
+        self.net.theta.copy_from_slice(&ck.theta);
+        self.eps = ck.eps;
+        self.m.copy_from_slice(&ck.adam_m);
+        self.v.copy_from_slice(&ck.adam_v);
+        Ok(())
+    }
+
+    /// Build a backend from a checkpoint + the (re-assembled) data it
+    /// was trained on: network shape, loss mode and scalar hyper-
+    /// parameters come from the artifact, the mesh/domain from `src` —
+    /// then [`NativeBackend::load_checkpoint`] verifies they agree and
+    /// restores the trained state. The warm-restart entry point of
+    /// `repro train --resume`.
+    pub fn from_checkpoint(ck: &Checkpoint, src: &DataSource<'_>)
+        -> Result<NativeBackend> {
+        let cfg = NativeConfig {
+            layers: ck.layers.clone(),
+            loss: NativeLoss::from_mode_str(&ck.loss_mode)?,
+            nb: ck.hyper.nb,
+            ns: ck.hyper.ns,
+        };
+        let opts = BackendOpts {
+            tau: ck.hyper.tau,
+            gamma: ck.hyper.gamma,
+            seed: ck.hyper.seed,
+            eps_init: ck.hyper.eps_init,
+        };
+        let mut backend = NativeBackend::new(&cfg, src, &opts)?;
+        backend.load_checkpoint(ck)?;
+        Ok(backend)
     }
 
     /// Full objective + flat gradient at the current parameters (public
@@ -1338,6 +1554,36 @@ impl Backend for NativeBackend {
     fn predict_eps_field(&self, points: &[[f64; 2]])
         -> Result<Option<Vec<f32>>> {
         Ok(self.net.eval_heads(points).1)
+    }
+
+    fn export_checkpoint(&self) -> Result<Checkpoint> {
+        // run-level metadata (registry id, CLI flags, step count) is
+        // the coordinator's to fill in — the backend does not know it
+        Ok(Checkpoint {
+            problem: String::new(),
+            problem_label: self.problem_label.clone(),
+            loss_mode: self.cfg.loss.mode_str().to_string(),
+            loss_kind: self.kind.to_string(),
+            cli: Vec::new(),
+            layers: self.cfg.layers.clone(),
+            two_head: self.net.two_head(),
+            step: 0,
+            best_metric: None,
+            theta: self.net.theta.clone(),
+            eps: self.eps,
+            adam_m: self.m.clone(),
+            adam_v: self.v.clone(),
+            form: self.form.clone(),
+            fingerprint: self.fingerprint.clone(),
+            hyper: TrainHyper {
+                tau: self.tau,
+                gamma: self.gamma,
+                seed: self.seed,
+                eps_init: self.eps_init,
+                nb: self.cfg.nb,
+                ns: self.cfg.ns,
+            },
+        })
     }
 
     fn current_eps(&self) -> Option<f64> {
@@ -2147,5 +2393,76 @@ mod tests {
             assert!((g as f64 - u).abs() < 1e-6,
                     "eval {g} vs reference {u}");
         }
+    }
+
+    #[test]
+    fn from_theta_reproduces_glorot_layout() {
+        for (layers, two_head) in [
+            (vec![2usize, 4, 3, 1], false),
+            (vec![2, 5, 1], true),
+            (vec![2, 1], false),
+        ] {
+            let a = if two_head {
+                Mlp::glorot_two_head(&layers, 7).unwrap()
+            } else {
+                Mlp::glorot(&layers, 7).unwrap()
+            };
+            let b =
+                Mlp::from_theta(&layers, two_head, a.theta.clone())
+                    .unwrap();
+            let pts = [[0.3, 0.7], [-0.2, 0.9], [0.0, 0.0]];
+            let (ua, ea) = a.eval_heads(&pts);
+            let (ub, eb) = b.eval_heads(&pts);
+            assert_eq!(ua, ub);
+            assert_eq!(ea, eb);
+            // wrong parameter count must be rejected, not mis-indexed
+            let mut short = a.theta.clone();
+            short.pop();
+            assert!(Mlp::from_theta(&layers, two_head, short).is_err());
+        }
+    }
+
+    #[test]
+    fn export_load_checkpoint_roundtrip_restores_state() {
+        let mut a = tiny_backend(NativeLoss::InverseConst, 6);
+        for s in 1..=7 {
+            a.step(s, 5e-3).unwrap();
+        }
+        let mut ck = a.export_checkpoint().unwrap();
+        assert_eq!(ck.loss_mode, "inverse_const");
+        assert_eq!(ck.adam_m.len(), ck.theta.len() + 1); // eps slot
+        // serialize through the on-disk format too
+        ck = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        let mut b = tiny_backend(NativeLoss::InverseConst, 6);
+        b.load_checkpoint(&ck).unwrap();
+        assert_eq!(a.params_flat(), b.params_flat());
+        // next step must be bit-identical on both
+        let sa = a.step(8, 5e-3).unwrap();
+        let sb = b.step(8, 5e-3).unwrap();
+        assert_eq!(sa.loss.to_bits(), sb.loss.to_bits());
+        assert_eq!(a.params_flat(), b.params_flat());
+    }
+
+    #[test]
+    fn load_checkpoint_rejects_mismatched_runs() {
+        let a = tiny_backend(NativeLoss::Forward, 0);
+        let ck = a.export_checkpoint().unwrap();
+        // different architecture
+        let problem = PoissonSin::new(std::f64::consts::PI);
+        let mut wider =
+            build_backend(1, &[2, 6, 1], NativeLoss::Forward, 8, 0,
+                          &problem);
+        let err = wider.load_checkpoint(&ck).unwrap_err();
+        assert!(err.to_string().contains("network"), "{err}");
+        // different mesh resolution -> fingerprint mismatch
+        let mut finer =
+            build_backend(2, &[2, 4, 1], NativeLoss::Forward, 8, 0,
+                          &problem);
+        let err = finer.load_checkpoint(&ck).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        // different loss mode
+        let mut inv = tiny_backend(NativeLoss::InverseConst, 6);
+        let err = inv.load_checkpoint(&ck).unwrap_err();
+        assert!(err.to_string().contains("loss mode"), "{err}");
     }
 }

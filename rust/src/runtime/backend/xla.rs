@@ -13,6 +13,8 @@ use crate::runtime::engine::{Artifact, Engine};
 use crate::runtime::tensor::TensorData;
 use crate::util::rng::Rng;
 
+/// Executes AOT-compiled train/predict artifacts on the PJRT client —
+/// the accelerated implementation of [`Backend`].
 pub struct XlaBackend<'a> {
     engine: &'a Engine,
     art: Rc<Artifact>,
@@ -34,6 +36,9 @@ pub struct XlaBackend<'a> {
 }
 
 impl<'a> XlaBackend<'a> {
+    /// Load `artifact` (and optionally a predict artifact), upload the
+    /// step-invariant data tensors once and initialize the parameter
+    /// state on device.
     pub fn new(
         engine: &'a Engine,
         artifact: &str,
@@ -95,6 +100,7 @@ impl<'a> XlaBackend<'a> {
         })
     }
 
+    /// The loaded train artifact's manifest.
     pub fn manifest(&self) -> &crate::runtime::manifest::Manifest {
         &self.art.manifest
     }

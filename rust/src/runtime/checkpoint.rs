@@ -1,0 +1,750 @@
+//! Versioned on-disk checkpoints: persist a trained FastVPINNs model,
+//! resume it, or serve it — the durable artifact behind
+//! `repro train --checkpoint` / `--resume` and `repro infer`.
+//!
+//! A [`Checkpoint`] captures everything needed to (a) reproduce the
+//! trained network's predictions **bit-for-bit** and (b) warm-restart
+//! the optimizer so a resumed run continues the loss trajectory of the
+//! uninterrupted one:
+//!
+//! - the MLP layer shapes and flat `f64` parameter vector (both heads
+//!   of a two-head inverse-space network),
+//! - the trainable scalar diffusion (`inverse_const` runs),
+//! - the full Adam state (`m`, `v`, step count),
+//! - the hoisted [`VariationalForm`] coefficient description (the PDE
+//!   the model was trained on, as data),
+//! - a [`DomainFingerprint`] of the mesh/quadrature the run used,
+//! - the scalar training hyper-parameters ([`TrainHyper`]) plus the
+//!   registry problem id and the CLI flags that built the setup, and
+//! - an integrity checksum over the whole artifact.
+//!
+//! ## On-disk format (version 1)
+//!
+//! All integers little-endian; all floating-point payload values are
+//! raw IEEE-754 `f64` bit patterns (which is what makes reloaded
+//! predictions bit-identical — no text round-trip on the weights):
+//!
+//! ```text
+//! offset        size  field
+//! 0             8     magic bytes "FVPCHKPT"
+//! 8             1     format version byte (= 1)
+//! 9             4     u32 byte length L of the metadata blob
+//! 13            L     metadata: one UTF-8 JSON object (see below)
+//! 13+L          8*N   payload: N f64 values, the concatenation of the
+//!                     sections listed (in order, with lengths) by the
+//!                     metadata's "sections" key:
+//!                       theta    network parameters, flat Mlp layout
+//!                       eps      the trainable scalar diffusion (1)
+//!                       adam_m   Adam first-moment state
+//!                       adam_v   Adam second-moment state
+//!                       form_eps weak-form diffusion (1 if constant,
+//!                                ne*nq if tabulated)
+//!                       form_bx  weak-form convection x  (ditto)
+//!                       form_by  weak-form convection y  (ditto)
+//!                       form_c   weak-form reaction      (ditto)
+//! 13+L+8*N      8     u64 FNV-1a checksum of ALL preceding bytes
+//! ```
+//!
+//! The metadata object carries the structure (problem ids, CLI flags,
+//! layer widths, two-head flag, step count, hyper-parameters, domain
+//! fingerprint, and the kind — constant or tabulated — of each weak-
+//! form coefficient). Scalar floats in the metadata round-trip exactly
+//! through Rust's shortest-representation `f64` formatting/parsing;
+//! everything numerically load-bearing lives in the binary payload
+//! regardless.
+//!
+//! **Compatibility rule:** the version byte is authoritative. A reader
+//! accepts exactly the versions it knows (this build: version 1) and
+//! rejects anything else with a clear error — there is no silent
+//! best-effort migration. Any layout change (new section, reordered
+//! fields, different hash) bumps the byte.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::runtime::backend::form::{Coeff, VariationalForm};
+use crate::util::json::Json;
+
+/// The artifact's leading magic bytes.
+pub const MAGIC: [u8; 8] = *b"FVPCHKPT";
+
+/// The format version this build writes — and the only one it reads
+/// (see the module-level compatibility rule).
+pub const FORMAT_VERSION: u8 = 1;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a 64-bit hash of a byte slice — the artifact's integrity
+/// checksum (and the primitive behind the fingerprint/prediction
+/// hashes). Standard parameters, so any FNV-1a implementation can
+/// verify an artifact.
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    fnv1a_update(FNV_OFFSET, bytes)
+}
+
+/// FNV-1a over the little-endian bit patterns of an `f64` slice: equal
+/// hashes mean bit-identical values. Used for the domain fingerprint's
+/// quadrature hash.
+pub fn hash_f64_bits(vals: &[f64]) -> u64 {
+    vals.iter()
+        .fold(FNV_OFFSET, |h, v| fnv1a_update(h, &v.to_le_bytes()))
+}
+
+/// FNV-1a over the little-endian bit patterns of an `f32` slice —
+/// `repro train --checkpoint` and `repro infer` both print this over
+/// their quadrature-point predictions, so bit-for-bit agreement is a
+/// string comparison away.
+pub fn hash_f32_bits(vals: &[f32]) -> u64 {
+    vals.iter()
+        .fold(FNV_OFFSET, |h, v| fnv1a_update(h, &v.to_le_bytes()))
+}
+
+/// Identity of the assembled domain a checkpoint was trained on. A
+/// resumed run must reproduce it exactly — the quadrature hash covers
+/// the bit patterns of every quadrature point, so a different mesh,
+/// refinement level or quadrature order is rejected up front instead
+/// of silently optimizing a different objective.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DomainFingerprint {
+    /// Element count.
+    pub ne: usize,
+    /// Test functions per element.
+    pub nt: usize,
+    /// Quadrature points per element.
+    pub nq: usize,
+    /// Mesh point count.
+    pub n_points: usize,
+    /// Mesh cell count.
+    pub n_cells: usize,
+    /// Mesh bounding box `[x0, y0, x1, y1]`.
+    pub bbox: [f64; 4],
+    /// [`hash_f64_bits`] over the assembled `quad_xy` coordinates.
+    pub quad_hash: u64,
+}
+
+/// Scalar training hyper-parameters captured in the artifact — enough
+/// to rebuild an identical [`BackendOpts`](super::backend::BackendOpts)
+/// + sampling configuration on resume (the boundary and sensor point
+/// sets are re-drawn from `seed`, so they match the original run).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrainHyper {
+    /// Dirichlet penalty (paper's tau).
+    pub tau: f64,
+    /// Sensor penalty (paper's gamma).
+    pub gamma: f64,
+    /// RNG seed (weights init + boundary/sensor sampling).
+    pub seed: u64,
+    /// Initial guess for the trainable scalar eps (inverse_const).
+    pub eps_init: f64,
+    /// Dirichlet boundary sample count.
+    pub nb: usize,
+    /// Sensor count (inverse losses).
+    pub ns: usize,
+}
+
+/// A trained (or training) FastVPINNs model as a plain data record —
+/// see the module docs for the on-disk layout. Produced by
+/// [`Backend::export_checkpoint`](super::backend::Backend::export_checkpoint),
+/// consumed by
+/// [`NativeBackend::from_checkpoint`](super::backend::native::NativeBackend::from_checkpoint)
+/// (warm restart) and
+/// [`InferenceSession`](super::infer::InferenceSession) (serving).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Registry problem id (`repro train --problem <this>`); empty for
+    /// manual exports that never went through the CLI.
+    pub problem: String,
+    /// The problem *instance* label ([`Problem::name`]) — e.g.
+    /// `helmholtz_k6.283`.
+    ///
+    /// [`Problem::name`]: crate::problems::Problem::name
+    pub problem_label: String,
+    /// Native loss mode: `forward`, `inverse_const` or `inverse_space`.
+    pub loss_mode: String,
+    /// Derived loss family (`poisson`, `helmholtz`, `cd`, ...).
+    pub loss_kind: String,
+    /// The CLI flags that built the training setup (mesh size,
+    /// wavenumber, quadrature orders, ...), persisted so `--resume`
+    /// and `repro infer --quad` can rebuild it without re-typing.
+    pub cli: Vec<(String, String)>,
+    /// MLP trunk layer widths, input to output.
+    pub layers: Vec<usize>,
+    /// Whether an eps field head is appended to the trunk.
+    pub two_head: bool,
+    /// Optimizer step count at export (Adam bias correction + LR
+    /// schedule position for warm restart).
+    pub step: usize,
+    /// Best checkpoint metric seen by the exporting run (validation
+    /// rel-L2 when a validation set was attached, else total loss) —
+    /// lets a resumed run continue best-model tracking instead of
+    /// clobbering `<path>.best` with a worse model. `None` when no
+    /// policy-driven save has happened.
+    pub best_metric: Option<f64>,
+    /// Flat network parameters (the `Mlp` layout, both heads).
+    pub theta: Vec<f64>,
+    /// Trainable scalar diffusion (meaningful on `inverse_const`).
+    pub eps: f64,
+    /// Adam first moments, aligned with the optimized parameter vector
+    /// (`theta` plus the eps slot on `inverse_const`).
+    pub adam_m: Vec<f64>,
+    /// Adam second moments (same layout as `adam_m`).
+    pub adam_v: Vec<f64>,
+    /// The hoisted weak-form coefficients the run trained against.
+    pub form: VariationalForm,
+    /// Identity of the mesh/quadrature the run used.
+    pub fingerprint: DomainFingerprint,
+    /// Scalar training hyper-parameters.
+    pub hyper: TrainHyper,
+}
+
+/// Flat parameter count of an MLP with the given trunk widths (and
+/// optionally the appended eps head) — the validation rule readers
+/// apply to the `theta` section.
+pub fn expected_n_params(layers: &[usize], two_head: bool) -> usize {
+    let mut n = 0;
+    for w in layers.windows(2) {
+        n += w[0] * w[1] + w[1];
+    }
+    if two_head && layers.len() >= 2 {
+        n += layers[layers.len() - 2] + 1;
+    }
+    n
+}
+
+fn coeff_len(c: &Coeff) -> usize {
+    match c {
+        Coeff::Const(_) => 1,
+        Coeff::Table(t) => t.len(),
+    }
+}
+
+fn coeff_meta(c: &Coeff) -> Json {
+    match c {
+        Coeff::Const(_) => Json::obj(vec![("kind", Json::str("const"))]),
+        Coeff::Table(t) => Json::obj(vec![
+            ("kind", Json::str("table")),
+            ("len", Json::num(t.len() as f64)),
+        ]),
+    }
+}
+
+fn push_coeff(out: &mut Vec<u8>, c: &Coeff) {
+    match c {
+        Coeff::Const(v) => out.extend_from_slice(&v.to_le_bytes()),
+        Coeff::Table(t) => {
+            for v in t {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+}
+
+/// The fixed section order of payload version 1.
+const SECTION_NAMES: [&str; 8] = [
+    "theta", "eps", "adam_m", "adam_v", "form_eps", "form_bx", "form_by",
+    "form_c",
+];
+
+impl Checkpoint {
+    /// Serialize to the version-1 artifact bytes (see module docs).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let sections: Vec<(&str, usize)> = vec![
+            ("theta", self.theta.len()),
+            ("eps", 1),
+            ("adam_m", self.adam_m.len()),
+            ("adam_v", self.adam_v.len()),
+            ("form_eps", coeff_len(&self.form.eps)),
+            ("form_bx", coeff_len(&self.form.bx)),
+            ("form_by", coeff_len(&self.form.by)),
+            ("form_c", coeff_len(&self.form.c)),
+        ];
+        let total: usize = sections.iter().map(|(_, n)| n).sum();
+        let fp = &self.fingerprint;
+        let meta = Json::obj(vec![
+            ("format", Json::str("fastvpinns-checkpoint")),
+            ("version", Json::num(FORMAT_VERSION as f64)),
+            ("problem", Json::str(self.problem.as_str())),
+            ("problem_label", Json::str(self.problem_label.as_str())),
+            ("loss_mode", Json::str(self.loss_mode.as_str())),
+            ("loss_kind", Json::str(self.loss_kind.as_str())),
+            ("cli", Json::Obj(
+                self.cli
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::str(v.as_str())))
+                    .collect(),
+            )),
+            ("layers", Json::Arr(
+                self.layers.iter().map(|&w| Json::num(w as f64)).collect(),
+            )),
+            ("two_head", Json::Bool(self.two_head)),
+            ("step", Json::num(self.step as f64)),
+            ("best_metric", match self.best_metric {
+                Some(v) => Json::num(v),
+                None => Json::Null,
+            }),
+            ("hyper", Json::obj(vec![
+                ("tau", Json::num(self.hyper.tau)),
+                ("gamma", Json::num(self.hyper.gamma)),
+                // hex string: a u64 seed does not fit a JSON f64
+                ("seed", Json::str(format!("{:x}", self.hyper.seed))),
+                ("eps_init", Json::num(self.hyper.eps_init)),
+                ("nb", Json::num(self.hyper.nb as f64)),
+                ("ns", Json::num(self.hyper.ns as f64)),
+            ])),
+            ("fingerprint", Json::obj(vec![
+                ("ne", Json::num(fp.ne as f64)),
+                ("nt", Json::num(fp.nt as f64)),
+                ("nq", Json::num(fp.nq as f64)),
+                ("n_points", Json::num(fp.n_points as f64)),
+                ("n_cells", Json::num(fp.n_cells as f64)),
+                ("bbox", Json::Arr(
+                    fp.bbox.iter().map(|&v| Json::num(v)).collect(),
+                )),
+                // hex string: u64 hashes do not fit a JSON f64
+                ("quad_hash",
+                 Json::str(format!("{:016x}", fp.quad_hash))),
+            ])),
+            ("form", Json::obj(vec![
+                ("eps", coeff_meta(&self.form.eps)),
+                ("bx", coeff_meta(&self.form.bx)),
+                ("by", coeff_meta(&self.form.by)),
+                ("c", coeff_meta(&self.form.c)),
+            ])),
+            ("sections", Json::Arr(
+                sections
+                    .iter()
+                    .map(|(name, n)| Json::Arr(vec![
+                        Json::str(*name),
+                        Json::num(*n as f64),
+                    ]))
+                    .collect(),
+            )),
+        ])
+        .to_string();
+        let meta_b = meta.as_bytes();
+        let mut out =
+            Vec::with_capacity(13 + meta_b.len() + 8 * total + 8);
+        out.extend_from_slice(&MAGIC);
+        out.push(FORMAT_VERSION);
+        out.extend_from_slice(&(meta_b.len() as u32).to_le_bytes());
+        out.extend_from_slice(meta_b);
+        for v in &self.theta {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&self.eps.to_le_bytes());
+        for v in &self.adam_m {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in &self.adam_v {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        push_coeff(&mut out, &self.form.eps);
+        push_coeff(&mut out, &self.form.bx);
+        push_coeff(&mut out, &self.form.by);
+        push_coeff(&mut out, &self.form.c);
+        let ck = fnv1a_64(&out);
+        out.extend_from_slice(&ck.to_le_bytes());
+        out
+    }
+
+    /// Parse a version-1 artifact, validating magic, version, checksum
+    /// and every structural invariant. Always an `Err` — never a panic
+    /// — on malformed input.
+    pub fn from_bytes(b: &[u8]) -> Result<Checkpoint> {
+        ensure!(
+            b.len() >= 8 + 1 + 4 + 8,
+            "file too short to be a checkpoint ({} bytes)",
+            b.len()
+        );
+        ensure!(
+            b[..8] == MAGIC,
+            "bad magic bytes — not a FastVPINNs checkpoint"
+        );
+        let version = b[8];
+        ensure!(
+            version == FORMAT_VERSION,
+            "unsupported checkpoint version {version} (this build reads \
+             only version {FORMAT_VERSION}; re-export the model with a \
+             matching build)"
+        );
+        let body = &b[..b.len() - 8];
+        let stored =
+            u64::from_le_bytes(b[b.len() - 8..].try_into().unwrap());
+        ensure!(
+            fnv1a_64(body) == stored,
+            "checkpoint is corrupted (checksum mismatch)"
+        );
+        let meta_len =
+            u32::from_le_bytes(b[9..13].try_into().unwrap()) as usize;
+        ensure!(
+            13 + meta_len <= body.len(),
+            "checkpoint is corrupted (metadata length {meta_len} \
+             overruns the file)"
+        );
+        let meta = std::str::from_utf8(&b[13..13 + meta_len])
+            .context("checkpoint metadata is not UTF-8")?;
+        let m = Json::parse(meta)
+            .context("checkpoint metadata is not valid JSON")?;
+
+        // ---- structure -----------------------------------------------
+        let layers: Vec<usize> = m
+            .req("layers")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<_>>()?;
+        ensure!(layers.len() >= 2, "checkpoint has {} layer widths, \
+                 need at least input + output", layers.len());
+        let two_head = m.req("two_head")?.as_bool()?;
+        let loss_mode = m.req("loss_mode")?.as_str()?.to_string();
+        let cli: Vec<(String, String)> = match m.req("cli")? {
+            Json::Obj(o) => o
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), v.as_str()?.to_string())))
+                .collect::<Result<_>>()?,
+            other => bail!("'cli' must be an object, got {other:?}"),
+        };
+        let sections: Vec<(String, usize)> = m
+            .req("sections")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                let pair = s.as_arr()?;
+                ensure!(pair.len() == 2, "malformed section entry");
+                Ok((pair[0].as_str()?.to_string(), pair[1].as_usize()?))
+            })
+            .collect::<Result<_>>()?;
+        ensure!(
+            sections.len() == SECTION_NAMES.len()
+                && sections
+                    .iter()
+                    .zip(SECTION_NAMES)
+                    .all(|((name, _), want)| name == want),
+            "unexpected payload sections {:?} (version 1 expects {:?})",
+            sections.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+            SECTION_NAMES
+        );
+        ensure!(
+            sections[1].1 == 1,
+            "eps section must hold exactly 1 value, got {}",
+            sections[1].1
+        );
+        let total: usize = sections.iter().map(|(_, n)| n).sum();
+        let payload = &body[13 + meta_len..];
+        ensure!(
+            payload.len() == 8 * total,
+            "checkpoint is corrupted (payload holds {} bytes, sections \
+             declare {})",
+            payload.len(),
+            8 * total
+        );
+
+        // ---- payload -------------------------------------------------
+        let mut off = 0usize;
+        let mut take = |n: usize| -> Vec<f64> {
+            let vals = payload[8 * off..8 * (off + n)]
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            off += n;
+            vals
+        };
+        let theta = take(sections[0].1);
+        let eps = take(1)[0];
+        let adam_m = take(sections[2].1);
+        let adam_v = take(sections[3].1);
+        let form_meta = m.req("form")?;
+        let mut coeff = |key: &str, len: usize| -> Result<Coeff> {
+            let spec = form_meta.req(key)?;
+            let vals = take(len);
+            match spec.req("kind")?.as_str()? {
+                "const" => {
+                    ensure!(len == 1, "constant coefficient '{key}' \
+                             has a {len}-value section");
+                    Ok(Coeff::Const(vals[0]))
+                }
+                "table" => {
+                    ensure!(
+                        spec.req("len")?.as_usize()? == len,
+                        "coefficient '{key}' table length disagrees \
+                         with its section"
+                    );
+                    Ok(Coeff::Table(vals))
+                }
+                other => bail!(
+                    "unknown coefficient kind '{other}' for '{key}'"
+                ),
+            }
+        };
+        let form = VariationalForm {
+            eps: coeff("eps", sections[4].1)?,
+            bx: coeff("bx", sections[5].1)?,
+            by: coeff("by", sections[6].1)?,
+            c: coeff("c", sections[7].1)?,
+        };
+
+        // ---- cross-validation ----------------------------------------
+        let want = expected_n_params(&layers, two_head);
+        ensure!(
+            theta.len() == want,
+            "theta section has {} parameters but layers {:?}{} imply \
+             {want}",
+            theta.len(),
+            layers,
+            if two_head { " + eps head" } else { "" }
+        );
+        let n_opt = want + usize::from(loss_mode == "inverse_const");
+        ensure!(
+            adam_m.len() == n_opt && adam_v.len() == n_opt,
+            "Adam state has {}/{} entries for {} optimized parameters",
+            adam_m.len(),
+            adam_v.len(),
+            n_opt
+        );
+
+        // ---- scalars -------------------------------------------------
+        let hy = m.req("hyper")?;
+        let hyper = TrainHyper {
+            tau: hy.req("tau")?.as_f64()?,
+            gamma: hy.req("gamma")?.as_f64()?,
+            seed: u64::from_str_radix(hy.req("seed")?.as_str()?, 16)
+                .context("hyper seed is not a hex u64")?,
+            eps_init: hy.req("eps_init")?.as_f64()?,
+            nb: hy.req("nb")?.as_usize()?,
+            ns: hy.req("ns")?.as_usize()?,
+        };
+        let best_metric = match m.req("best_metric")? {
+            Json::Null => None,
+            v => Some(v.as_f64()?),
+        };
+        let fj = m.req("fingerprint")?;
+        let bbox_v = fj.req("bbox")?.as_arr()?;
+        ensure!(bbox_v.len() == 4, "fingerprint bbox needs 4 entries");
+        let mut bbox = [0.0; 4];
+        for (slot, v) in bbox.iter_mut().zip(bbox_v) {
+            *slot = v.as_f64()?;
+        }
+        let quad_hash =
+            u64::from_str_radix(fj.req("quad_hash")?.as_str()?, 16)
+                .context("fingerprint quad_hash is not a hex u64")?;
+        let fingerprint = DomainFingerprint {
+            ne: fj.req("ne")?.as_usize()?,
+            nt: fj.req("nt")?.as_usize()?,
+            nq: fj.req("nq")?.as_usize()?,
+            n_points: fj.req("n_points")?.as_usize()?,
+            n_cells: fj.req("n_cells")?.as_usize()?,
+            bbox,
+            quad_hash,
+        };
+
+        Ok(Checkpoint {
+            problem: m.req("problem")?.as_str()?.to_string(),
+            problem_label: m.req("problem_label")?.as_str()?.to_string(),
+            loss_mode,
+            loss_kind: m.req("loss_kind")?.as_str()?.to_string(),
+            cli,
+            layers,
+            two_head,
+            step: m.req("step")?.as_usize()?,
+            best_metric,
+            theta,
+            eps,
+            adam_m,
+            adam_v,
+            form,
+            fingerprint,
+            hyper,
+        })
+    }
+
+    /// Serialize and write the artifact to `path`.
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_bytes()).with_context(
+            || format!("write checkpoint {}", path.as_ref().display()),
+        )
+    }
+
+    /// Read and parse an artifact from `path`.
+    pub fn read(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path.as_ref()).with_context(|| {
+            format!("read checkpoint {}", path.as_ref().display())
+        })?;
+        Checkpoint::from_bytes(&bytes).with_context(|| {
+            format!("load checkpoint {}", path.as_ref().display())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            problem: "helmholtz".into(),
+            problem_label: "helmholtz_k6.283".into(),
+            loss_mode: "forward".into(),
+            loss_kind: "helmholtz".into(),
+            cli: vec![("k-pi".into(), "2".into()),
+                      ("n".into(), "2".into())],
+            layers: vec![2, 3, 1],
+            two_head: false,
+            step: 1234,
+            best_metric: Some(6.4e-3),
+            theta: (0..expected_n_params(&[2, 3, 1], false))
+                .map(|i| 0.1 * i as f64 - 0.37)
+                .collect(),
+            eps: 0.0,
+            adam_m: vec![0.25; expected_n_params(&[2, 3, 1], false)],
+            adam_v: vec![1e-9; expected_n_params(&[2, 3, 1], false)],
+            form: VariationalForm {
+                eps: Coeff::Const(1.0),
+                bx: Coeff::Const(0.0),
+                by: Coeff::Const(0.0),
+                c: Coeff::Table(vec![-39.47, -39.47, 0.1 + 0.2]),
+            },
+            fingerprint: DomainFingerprint {
+                ne: 4,
+                nt: 25,
+                nq: 100,
+                n_points: 9,
+                n_cells: 4,
+                bbox: [0.0, 0.0, 1.0, 1.0],
+                quad_hash: 0xdead_beef_0123_4567,
+            },
+            hyper: TrainHyper {
+                tau: 10.0,
+                gamma: 10.0,
+                seed: 42,
+                eps_init: 2.0,
+                nb: 400,
+                ns: 0,
+            },
+        }
+    }
+
+    #[test]
+    fn fnv1a_standard_vectors() {
+        assert_eq!(fnv1a_64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn roundtrip_is_lossless() {
+        let ck = sample();
+        let bytes = ck.to_bytes();
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back, ck);
+        // and the serialization is deterministic
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let ck = sample();
+        let p = std::env::temp_dir().join(format!(
+            "fastvpinns_ckpt_rt_{}.ckpt",
+            std::process::id()
+        ));
+        ck.write(&p).unwrap();
+        let back = Checkpoint::read(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(back, ck);
+    }
+
+    #[test]
+    fn corrupted_payload_is_rejected() {
+        let mut bytes = sample().to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("corrupted"), "{err}");
+    }
+
+    #[test]
+    fn truncated_file_is_rejected() {
+        let bytes = sample().to_bytes();
+        for keep in [0, 5, 12, bytes.len() / 3, bytes.len() - 1] {
+            assert!(
+                Checkpoint::from_bytes(&bytes[..keep]).is_err(),
+                "accepted a {keep}-byte truncation"
+            );
+        }
+    }
+
+    #[test]
+    fn wrong_magic_is_rejected() {
+        let mut bytes = sample().to_bytes();
+        bytes[0] = b'X';
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("not a FastVPINNs"), "{err}");
+    }
+
+    #[test]
+    fn future_version_is_rejected_with_a_version_error() {
+        // a well-formed future artifact: bump the byte, re-checksum
+        let mut bytes = sample().to_bytes();
+        bytes[8] = FORMAT_VERSION + 1;
+        let n = bytes.len();
+        let ck = fnv1a_64(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&ck.to_le_bytes());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(
+            err.to_string().contains("unsupported checkpoint version"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn theta_length_mismatch_is_rejected() {
+        let mut ck = sample();
+        ck.theta.push(0.0);
+        let err = Checkpoint::from_bytes(&ck.to_bytes()).unwrap_err();
+        assert!(err.to_string().contains("theta"), "{err}");
+    }
+
+    #[test]
+    fn expected_params_counts_both_heads() {
+        // [2,4,1]: (2*4+4) + (4*1+1) = 17; eps head adds 4+1
+        assert_eq!(expected_n_params(&[2, 4, 1], false), 17);
+        assert_eq!(expected_n_params(&[2, 4, 1], true), 22);
+    }
+
+    #[test]
+    fn meta_floats_roundtrip_exactly() {
+        let mut ck = sample();
+        ck.hyper.tau = 0.1 + 0.2; // not representable in short decimal
+        ck.fingerprint.bbox = [-1.0 / 3.0, 1e-17, 2.5e300, f64::MIN];
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.hyper.tau.to_bits(), ck.hyper.tau.to_bits());
+        for (a, b) in back
+            .fingerprint
+            .bbox
+            .iter()
+            .zip(ck.fingerprint.bbox.iter())
+        {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn large_seed_and_missing_best_metric_roundtrip() {
+        let mut ck = sample();
+        ck.hyper.seed = u64::MAX - 12345; // far beyond f64's 2^53
+        ck.best_metric = None;
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.hyper.seed, ck.hyper.seed);
+        assert_eq!(back.best_metric, None);
+    }
+}

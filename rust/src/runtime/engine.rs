@@ -13,8 +13,11 @@ use super::tensor::TensorData;
 
 /// A loaded + compiled artifact.
 pub struct Artifact {
+    /// The JSON sidecar describing the executable's I/O.
     pub manifest: Manifest,
+    /// The compiled PJRT executable.
     pub exe: xla::PjRtLoadedExecutable,
+    /// Wall-clock spent compiling the HLO.
     pub compile_seconds: f64,
 }
 
@@ -81,12 +84,14 @@ impl Artifact {
 
 /// PJRT CPU client + executable cache + artifact directory.
 pub struct Engine {
+    /// The PJRT CPU client artifacts execute on.
     pub client: xla::PjRtClient,
     dir: PathBuf,
     cache: RefCell<HashMap<String, Rc<Artifact>>>,
 }
 
 impl Engine {
+    /// Create a CPU PJRT client reading artifacts from `artifact_dir`.
     pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Engine> {
         let dir = artifact_dir.as_ref().to_path_buf();
         let client = xla::PjRtClient::cpu()
@@ -94,6 +99,7 @@ impl Engine {
         Ok(Engine { client, dir, cache: RefCell::new(HashMap::new()) })
     }
 
+    /// The PJRT platform name ("cpu" offline).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -106,6 +112,7 @@ impl Engine {
             .map_err(|e| anyhow::anyhow!("host->device upload: {e:?}"))
     }
 
+    /// The directory artifacts are loaded from.
     pub fn artifact_dir(&self) -> &Path {
         &self.dir
     }

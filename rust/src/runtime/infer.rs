@@ -1,0 +1,155 @@
+//! Batched inference over persisted checkpoints: the serve-trained-
+//! models half of the amortized-inference story. Training a VPINN is
+//! the expensive part; once trained, evaluating it at arbitrary points
+//! is a few small GEMMs per batch — this module makes that a
+//! first-class path (`repro infer` on the CLI) instead of something
+//! only the training process could do.
+//!
+//! An [`InferenceSession`] rebuilds the network (both heads of a
+//! two-head inverse-space model) from a
+//! [`Checkpoint`](super::checkpoint::Checkpoint) and answers
+//! point-cloud queries through the *same* blocked-GEMM forward path
+//! training uses ([`Mlp::eval_heads_with`]) — points are batched into
+//! blocks and each layer is one cache-blocked GEMM plus a fused
+//! bias/tanh epilogue, never a per-point scalar loop. Because the
+//! checkpoint stores raw `f64` parameter bits, a session's predictions
+//! are bit-identical to the exporting backend's.
+//!
+//! The session owns a reusable scratch allocation, so steady-state
+//! query traffic performs no per-batch setup beyond the output
+//! vectors. `repro bench` tracks the resulting throughput (points/sec
+//! at batch sizes 1, 256 and 4096).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::backend::native::{EvalScratch, Mlp};
+use super::checkpoint::Checkpoint;
+
+/// A loaded model ready to answer batched point queries. Build with
+/// [`InferenceSession::open`] (from a file) or
+/// [`InferenceSession::from_checkpoint`] (from a parsed artifact).
+pub struct InferenceSession {
+    net: Mlp,
+    scratch: EvalScratch,
+    /// Registry problem id from the artifact ("" for manual exports).
+    pub problem: String,
+    /// Problem instance label (e.g. `helmholtz_k6.283`).
+    pub problem_label: String,
+    /// Loss family the model was trained on.
+    pub loss_kind: String,
+    /// Optimizer step count at export.
+    pub step: usize,
+    /// Training-domain bounding box `[x0, y0, x1, y1]` — the region
+    /// the model was fit on (useful for building query grids; the
+    /// network extrapolates beyond it at the caller's own risk).
+    pub bbox: [f64; 4],
+}
+
+impl InferenceSession {
+    /// Build a session from a parsed artifact.
+    pub fn from_checkpoint(ck: &Checkpoint) -> Result<InferenceSession> {
+        let net =
+            Mlp::from_theta(&ck.layers, ck.two_head, ck.theta.clone())
+                .context("checkpoint network does not reconstruct")?;
+        let scratch = EvalScratch::new(&net);
+        Ok(InferenceSession {
+            net,
+            scratch,
+            problem: ck.problem.clone(),
+            problem_label: ck.problem_label.clone(),
+            loss_kind: ck.loss_kind.clone(),
+            step: ck.step,
+            bbox: ck.fingerprint.bbox,
+        })
+    }
+
+    /// Read an artifact from disk and build a session from it.
+    pub fn open(path: impl AsRef<Path>) -> Result<InferenceSession> {
+        InferenceSession::from_checkpoint(&Checkpoint::read(path)?)
+    }
+
+    /// Whether the model carries an eps field head (two-head
+    /// inverse-space networks).
+    pub fn two_head(&self) -> bool {
+        self.net.two_head()
+    }
+
+    /// The reconstructed network (e.g. for custom evaluation drivers).
+    pub fn network(&self) -> &Mlp {
+        &self.net
+    }
+
+    /// Evaluate the model over a query point cloud: `(u, eps)` with
+    /// `eps = Some(field)` for two-head models. Batched through the
+    /// blocked-GEMM forward path; reuses the session's scratch, so
+    /// repeated calls allocate only the output vectors.
+    pub fn eval(&mut self, points: &[[f64; 2]])
+        -> (Vec<f32>, Option<Vec<f32>>) {
+        self.net.eval_heads_with(points, &mut self.scratch)
+    }
+
+    /// [`InferenceSession::eval`], u head only.
+    pub fn eval_u(&mut self, points: &[[f64; 2]]) -> Vec<f32> {
+        self.eval(points).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trainer::{DataSource, TrainConfig, Trainer};
+    use crate::fem::assembly;
+    use crate::fem::quadrature::QuadKind;
+    use crate::mesh::generators;
+    use crate::problems::InverseSpaceSin;
+    use crate::runtime::backend::native::{
+        NativeBackend, NativeConfig, NativeLoss,
+    };
+    use crate::runtime::backend::BackendOpts;
+
+    #[test]
+    fn session_reproduces_trained_two_head_backend_bitwise() {
+        let mesh = generators::unit_square(1);
+        let dom = assembly::assemble(&mesh, 2, 4, QuadKind::GaussLegendre);
+        let problem = InverseSpaceSin;
+        let src = DataSource {
+            mesh: &mesh,
+            domain: Some(&dom),
+            problem: &problem,
+            sensor_values: None,
+        };
+        let cfg = TrainConfig { iters: 12, ..TrainConfig::default() };
+        let ncfg = NativeConfig {
+            layers: vec![2, 6, 1],
+            loss: NativeLoss::InverseSpace,
+            nb: 16,
+            ns: 8,
+        };
+        let backend = NativeBackend::new(
+            &ncfg, &src, &BackendOpts::from(&cfg)).unwrap();
+        let mut t = Trainer::new(Box::new(backend), &cfg);
+        t.run().unwrap();
+        let ck = t.checkpoint().unwrap();
+        // through the on-disk bytes, not just the in-memory struct
+        let ck = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        let mut sess = InferenceSession::from_checkpoint(&ck).unwrap();
+        assert!(sess.two_head());
+        assert_eq!(sess.step, 12);
+        let pts: Vec<[f64; 2]> = (0..137)
+            .map(|i| {
+                let s = i as f64 / 136.0;
+                [s, (1.7 * s).fract()]
+            })
+            .collect();
+        let (u, eps) = sess.eval(&pts);
+        let heads = t.predict_heads(&pts).unwrap();
+        assert_eq!(u, heads[0], "u head must be bit-identical");
+        assert_eq!(eps.as_deref(), Some(&heads[1][..]),
+                   "eps head must be bit-identical");
+        // repeated queries reuse the scratch and stay identical
+        let (u2, _) = sess.eval(&pts);
+        assert_eq!(u, u2);
+    }
+}

@@ -9,13 +9,17 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
+/// One named input/output buffer of an artifact.
 #[derive(Debug, Clone, PartialEq)]
 pub struct IoSpec {
+    /// Buffer name (matches the python spec).
     pub name: String,
+    /// Buffer shape (empty = scalar).
     pub shape: Vec<usize>,
 }
 
 impl IoSpec {
+    /// Element count (1 for scalars).
     pub fn numel(&self) -> usize {
         if self.shape.is_empty() {
             1
@@ -28,44 +32,69 @@ impl IoSpec {
 /// Static configuration of an artifact (mirrors specs.Spec).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ArtifactConfig {
+    /// MLP layer widths.
     pub layers: Vec<usize>,
+    /// Element count.
     pub ne: usize,
+    /// 1D test-function order.
     pub nt1d: usize,
+    /// 1D quadrature order.
     pub nq1d: usize,
+    /// Test functions per element.
     pub nt: usize,
+    /// Quadrature points per element.
     pub nq: usize,
+    /// Boundary sample count.
     pub nb: usize,
+    /// Sensor count.
     pub ns: usize,
+    /// Collocation point count (PINN baselines).
     pub n_coll: usize,
+    /// Prediction batch size (predict artifacts).
     pub n_eval: usize,
+    /// Which residual kernel was lowered ("tensor", "loop", ...).
     pub kernel: String,
+    /// Output head count.
     pub heads: usize,
+    /// Baked-in diffusion constant, when the loss has one.
     pub eps: Option<f64>,
+    /// Baked-in convection x component.
     pub bx: Option<f64>,
+    /// Baked-in convection y component.
     pub by: Option<f64>,
+    /// Whether this is a paper-scale (vs CI-scale) config.
     pub paper_scale: bool,
+    /// Free-form provenance note.
     pub note: String,
 }
 
+/// The JSON sidecar describing one AOT artifact (name, kind, loss and
+/// I/O buffer layout) — written by `python -m compile.aot`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Manifest {
+    /// Artifact name (file stem).
     pub name: String,
     /// "train" | "predict"
     pub kind: String,
     /// poisson | cd | inverse_const | inverse_space | pinn | hp_loop | ""
     pub loss: String,
+    /// Input buffers, in call order.
     pub inputs: Vec<IoSpec>,
+    /// Output buffer names, in result order.
     pub outputs: Vec<String>,
+    /// Static shape/hyper-parameter record.
     pub config: ArtifactConfig,
 }
 
 impl Manifest {
+    /// Read and parse a manifest file.
     pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("read {}", path.as_ref().display()))?;
         Self::parse(&text)
     }
 
+    /// Parse manifest JSON text.
     pub fn parse(text: &str) -> Result<Manifest> {
         let j = Json::parse(text)?;
         let name = j.req("name")?.as_str()?.to_string();
@@ -143,10 +172,12 @@ impl Manifest {
         2 * (self.config.layers.len() - 1)
     }
 
+    /// Position of input buffer `name`, if declared.
     pub fn input_index(&self, name: &str) -> Option<usize> {
         self.inputs.iter().position(|s| s.name == name)
     }
 
+    /// Position of output buffer `name`, if declared.
     pub fn output_index(&self, name: &str) -> Option<usize> {
         self.outputs.iter().position(|s| s == name)
     }

@@ -6,9 +6,17 @@
 //! Python never runs here — this is the self-contained request path.
 //! With default features the layer is pure Rust: the native backend
 //! trains with no artifacts at all.
+//!
+//! Besides the backends, the layer owns the serve-trained-models
+//! story: [`checkpoint`] defines the versioned on-disk artifact a
+//! trained backend exports (and resumes from), and [`infer`] is the
+//! batched inference engine that loads such an artifact and answers
+//! point-cloud queries through the blocked-GEMM forward path.
 
 pub mod backend;
+pub mod checkpoint;
 #[cfg(feature = "xla")]
 pub mod engine;
+pub mod infer;
 pub mod manifest;
 pub mod tensor;

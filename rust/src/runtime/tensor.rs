@@ -8,7 +8,9 @@ use anyhow::{ensure, Result};
 /// (one element), matching XLA semantics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorData {
+    /// Dimension sizes (empty = scalar).
     pub shape: Vec<usize>,
+    /// Row-major (C order) elements.
     pub data: Vec<f32>,
 }
 
@@ -18,6 +20,7 @@ fn numel(shape: &[usize]) -> usize {
 }
 
 impl TensorData {
+    /// Wrap `data` with `shape`, validating the element count.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
         let expect = numel(&shape);
         ensure!(data.len() == expect,
@@ -26,22 +29,27 @@ impl TensorData {
         Ok(TensorData { shape, data })
     }
 
+    /// A rank-0 scalar.
     pub fn scalar(v: f32) -> Self {
         TensorData { shape: vec![], data: vec![v] }
     }
 
+    /// An all-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         TensorData { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
     }
 
+    /// Narrowing f64 -> f32 constructor (the runtime boundary).
     pub fn from_f64(shape: Vec<usize>, data: &[f64]) -> Result<Self> {
         Self::new(shape, data.iter().map(|&v| v as f32).collect())
     }
 
+    /// Element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }

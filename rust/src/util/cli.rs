@@ -7,9 +7,12 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+/// A parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First bare token (e.g. `train`).
     pub subcommand: String,
+    /// Bare tokens after the subcommand.
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
     bools: Vec<String>,
@@ -43,28 +46,34 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the process arguments.
     pub fn from_env() -> Result<Args> {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// The value of `--key value`, if given.
     pub fn flag(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// Whether `--key` was given (with or without a value).
     pub fn has(&self, key: &str) -> bool {
         self.bools.iter().any(|b| b == key) || self.flags.contains_key(key)
     }
 
+    /// String flag with a default.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.flag(key).unwrap_or(default).to_string()
     }
 
+    /// Required string flag (errors when missing).
     pub fn req_str(&self, key: &str) -> Result<String> {
         self.flag(key)
             .map(|s| s.to_string())
             .ok_or_else(|| anyhow!("missing required flag --{key}"))
     }
 
+    /// Integer flag with a default (errors on non-integers).
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.flag(key) {
             None => Ok(default),
@@ -74,6 +83,7 @@ impl Args {
         }
     }
 
+    /// Float flag with a default (errors on non-numbers).
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
         match self.flag(key) {
             None => Ok(default),
@@ -81,6 +91,34 @@ impl Args {
                 .parse()
                 .map_err(|_| anyhow!("--{key} expects a number, got {v}")),
         }
+    }
+
+    /// Insert (or overwrite) a `--key value` flag.
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.flags.insert(key.to_string(), value.to_string());
+    }
+
+    /// All `--key value` flags as owned pairs (sorted by key) — what
+    /// checkpoints persist so `--resume` can rebuild the invocation.
+    pub fn flag_pairs(&self) -> Vec<(String, String)> {
+        self.flags
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    /// A copy of these args with `defaults` filled in underneath: any
+    /// key already given (as a flag or a bool) wins over its default.
+    /// This is how `--resume` merges a checkpoint's persisted flags
+    /// with overrides from the current command line.
+    pub fn with_defaults(&self, defaults: &[(String, String)]) -> Args {
+        let mut out = self.clone();
+        for (k, v) in defaults {
+            if !out.has(k) {
+                out.flags.insert(k.clone(), v.clone());
+            }
+        }
+        out
     }
 
     /// Error out on unknown flags — catches typos early.
@@ -149,5 +187,30 @@ mod tests {
     fn trailing_bool_flag() {
         let a = parse("train --force");
         assert!(a.has("force"));
+    }
+
+    #[test]
+    fn defaults_merge_under_given_flags() {
+        let a = parse("train --n 8 --quiet");
+        let merged = a.with_defaults(&[
+            ("n".into(), "2".into()),
+            ("k-pi".into(), "4".into()),
+            ("quiet".into(), "x".into()),
+        ]);
+        assert_eq!(merged.flag("n"), Some("8"), "given flag wins");
+        assert_eq!(merged.flag("k-pi"), Some("4"), "default fills in");
+        assert!(merged.has("quiet"));
+        assert!(merged.flag("quiet").is_none(), "bool blocks the default");
+        let pairs = merged.flag_pairs();
+        assert!(pairs.contains(&("k-pi".into(), "4".into())));
+    }
+
+    #[test]
+    fn set_inserts_and_overwrites() {
+        let mut a = parse("infer");
+        a.set("ckpt", "out.ckpt");
+        assert_eq!(a.flag("ckpt"), Some("out.ckpt"));
+        a.set("ckpt", "b.ckpt");
+        assert_eq!(a.flag("ckpt"), Some("b.ckpt"));
     }
 }

@@ -14,6 +14,8 @@ pub struct CsvWriter {
 }
 
 impl CsvWriter {
+    /// Create/truncate `path` (parent dirs included) and write the
+    /// header row.
     pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
         if let Some(dir) = path.as_ref().parent() {
             fs::create_dir_all(dir)?;
@@ -25,6 +27,7 @@ impl CsvWriter {
         Ok(Self { w, n_cols: header.len() })
     }
 
+    /// Write one row (arity-checked against the header).
     pub fn row(&mut self, cells: &[String]) -> Result<()> {
         anyhow::ensure!(cells.len() == self.n_cols,
                         "row has {} cells, header has {}", cells.len(),
@@ -38,6 +41,7 @@ impl CsvWriter {
         self.row(&cells.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
     }
 
+    /// Flush buffered rows to disk.
     pub fn flush(&mut self) -> Result<()> {
         self.w.flush()?;
         Ok(())

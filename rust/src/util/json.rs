@@ -13,16 +13,22 @@ use anyhow::{anyhow, bail, Result};
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
     /// Key order preserved as encountered.
     Obj(Vec<(String, Json)>),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -36,6 +42,7 @@ impl Json {
 
     // ---- typed accessors -------------------------------------------------
 
+    /// The number, or an error.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -43,6 +50,7 @@ impl Json {
         }
     }
 
+    /// The non-negative integer, or an error.
     pub fn as_usize(&self) -> Result<usize> {
         let f = self.as_f64()?;
         if f < 0.0 || f.fract() != 0.0 {
@@ -51,6 +59,7 @@ impl Json {
         Ok(f as usize)
     }
 
+    /// The string, or an error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -58,6 +67,7 @@ impl Json {
         }
     }
 
+    /// The bool, or an error.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -65,6 +75,7 @@ impl Json {
         }
     }
 
+    /// The array elements, or an error.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),
@@ -72,6 +83,7 @@ impl Json {
         }
     }
 
+    /// Object field `key`, if present.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(o) => o.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -79,6 +91,7 @@ impl Json {
         }
     }
 
+    /// Object field `key`, or a missing-key error.
     pub fn req(&self, key: &str) -> Result<&Json> {
         self.get(key).ok_or_else(|| anyhow!("missing key '{key}'"))
     }
@@ -95,14 +108,17 @@ impl Json {
 
     // ---- builders ---------------------------------------------------------
 
+    /// Build an object from (key, value) pairs.
     pub fn obj(fields: Vec<(&str, Json)>) -> Json {
         Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a string value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Build a number value.
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
@@ -305,6 +321,7 @@ impl fmt::Display for Json {
 }
 
 impl Json {
+    /// Serialize (compact form) into `out`.
     pub fn write_to(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),

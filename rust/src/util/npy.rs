@@ -70,21 +70,26 @@ fn write_raw(path: impl AsRef<Path>, descr: &str, shape: &[usize],
 /// A loaded array: shape + f64 data (f32 sources are widened).
 #[derive(Debug, Clone)]
 pub struct NpyArray {
+    /// Array shape.
     pub shape: Vec<usize>,
+    /// Row-major values, widened to f64.
     pub data: Vec<f64>,
     /// original dtype descr, e.g. "<f4"
     pub descr: String,
 }
 
 impl NpyArray {
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the array has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Narrowing f32 copy (runtime boundary).
     pub fn to_f32(&self) -> Vec<f32> {
         self.data.iter().map(|&v| v as f32).collect()
     }

@@ -11,6 +11,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seeded generator (any seed, incl. 0, is valid).
     pub fn new(seed: u64) -> Self {
         // splitmix64-style scramble so nearby seeds diverge immediately,
         // and avoid the all-zero fixed point
@@ -20,6 +21,7 @@ impl Rng {
         Self { state: (z ^ (z >> 31)) | 1 }
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;
         x ^= x >> 12;

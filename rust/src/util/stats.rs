@@ -15,28 +15,34 @@ pub struct StepTimer {
 struct InstantWrap(Instant);
 
 impl StepTimer {
+    /// Empty timer.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Mark the start of a step.
     pub fn start(&mut self) {
         self.current = Some(InstantWrap(Instant::now()));
     }
 
+    /// Mark the end of a step, recording its duration.
     pub fn stop(&mut self) {
         if let Some(InstantWrap(t0)) = self.current.take() {
             self.samples_ms.push(t0.elapsed().as_secs_f64() * 1e3);
         }
     }
 
+    /// Record an externally measured sample.
     pub fn record_ms(&mut self, ms: f64) {
         self.samples_ms.push(ms);
     }
 
+    /// Recorded sample count.
     pub fn count(&self) -> usize {
         self.samples_ms.len()
     }
 
+    /// Order statistics over the recorded samples.
     pub fn summary(&self) -> Summary {
         Summary::from(&self.samples_ms)
     }
@@ -45,15 +51,22 @@ impl StepTimer {
 /// Order statistics over a sample set.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Smallest sample.
     pub min: f64,
+    /// 50th percentile.
     pub median: f64,
+    /// 90th percentile.
     pub p90: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Arithmetic mean.
     pub mean: f64,
 }
 
 impl Summary {
+    /// Summarize a sample set (all zeros when empty).
     pub fn from(samples: &[f64]) -> Summary {
         if samples.is_empty() {
             return Summary { n: 0, min: 0.0, median: 0.0, p90: 0.0,

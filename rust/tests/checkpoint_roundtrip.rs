@@ -1,0 +1,280 @@
+//! End-to-end tests of the checkpoint + batched-inference subsystem:
+//! train → export → import must reproduce predictions bit-for-bit, a
+//! warm restart must continue the uninterrupted run's loss trajectory
+//! exactly, and malformed artifacts (corruption, truncation, wrong
+//! version) must be rejected with clear errors — never a panic. All
+//! tiny configurations, fast enough for the debug-mode default suite.
+
+use std::path::PathBuf;
+
+use fastvpinns::coordinator::schedule::LrSchedule;
+use fastvpinns::coordinator::trainer::{
+    CheckpointPolicy, DataSource, TrainConfig, Trainer,
+};
+use fastvpinns::fem::assembly::{self, AssembledDomain};
+use fastvpinns::fem::quadrature::QuadKind;
+use fastvpinns::mesh::{generators, QuadMesh};
+use fastvpinns::problems::{Helmholtz2D, InverseSpaceSin, Problem};
+use fastvpinns::runtime::backend::native::{
+    NativeBackend, NativeConfig, NativeLoss,
+};
+use fastvpinns::runtime::backend::{Backend, BackendOpts};
+use fastvpinns::runtime::checkpoint::Checkpoint;
+use fastvpinns::runtime::infer::InferenceSession;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("fastvpinns_ckpt_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{name}", std::process::id()))
+}
+
+/// Small Helmholtz setup: exercises a reaction-term form (a constant
+/// `c` coefficient travels through the artifact) on a 2x2 mesh.
+fn setup() -> (QuadMesh, AssembledDomain, Helmholtz2D) {
+    let mesh = generators::unit_square(2);
+    let dom = assembly::assemble(&mesh, 2, 4, QuadKind::GaussLegendre);
+    (mesh, dom, Helmholtz2D::new(std::f64::consts::PI))
+}
+
+fn trainer<'a>(
+    mesh: &'a QuadMesh,
+    dom: &'a AssembledDomain,
+    problem: &'a dyn Problem,
+    loss: NativeLoss,
+    ns: usize,
+    cfg: &TrainConfig,
+) -> Trainer<'a> {
+    let src = DataSource {
+        mesh,
+        domain: Some(dom),
+        problem,
+        sensor_values: None,
+    };
+    let ncfg = NativeConfig {
+        layers: vec![2, 10, 1],
+        loss,
+        nb: 24,
+        ns,
+    };
+    let backend =
+        NativeBackend::new(&ncfg, &src, &BackendOpts::from(cfg)).unwrap();
+    Trainer::new(Box::new(backend), cfg)
+}
+
+#[test]
+fn train_export_import_predicts_bit_identically() {
+    let (mesh, dom, problem) = setup();
+    let cfg = TrainConfig { iters: 40, ..TrainConfig::default() };
+    let mut t = trainer(&mesh, &dom, &problem, NativeLoss::Forward, 0,
+                        &cfg);
+    t.run().unwrap();
+    let path = tmp("roundtrip.ckpt");
+    let mut ck = t.checkpoint().unwrap();
+    ck.problem = "helmholtz".into();
+    ck.write(&path).unwrap();
+
+    // a fixed query cloud, deliberately not the training points
+    let pts: Vec<[f64; 2]> = (0..301)
+        .map(|i| {
+            let s = i as f64 / 300.0;
+            [s, (0.5 + 0.37 * s).fract()]
+        })
+        .collect();
+    let want = t.predict(&pts).unwrap();
+
+    let mut sess = InferenceSession::open(&path).unwrap();
+    assert_eq!(sess.problem, "helmholtz");
+    assert!(!sess.two_head());
+    let (got, eps) = sess.eval(&pts);
+    assert!(eps.is_none());
+    // bit-for-bit: raw f64 weights + the same blocked forward path
+    assert_eq!(got, want);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn warm_restart_continues_the_loss_trajectory_exactly() {
+    let (mesh, dom, problem) = setup();
+    let lr = LrSchedule::ExpDecay { lr0: 5e-3, factor: 0.5, every: 20 };
+
+    // uninterrupted reference: 60 steps, losses recorded per step
+    let cfg_a = TrainConfig {
+        iters: 60,
+        lr,
+        log_every: 1,
+        ..TrainConfig::default()
+    };
+    let mut a = trainer(&mesh, &dom, &problem, NativeLoss::Forward, 0,
+                        &cfg_a);
+    a.run().unwrap();
+    let ref_losses: Vec<f64> =
+        a.history.rows.iter().map(|r| r.loss).collect();
+    assert_eq!(ref_losses.len(), 60);
+
+    // interrupted run: 30 steps, checkpoint, then resume 30 more
+    let cfg_b = TrainConfig { iters: 30, ..cfg_a.clone() };
+    let mut b = trainer(&mesh, &dom, &problem, NativeLoss::Forward, 0,
+                        &cfg_b);
+    b.run().unwrap();
+    let ck = b.checkpoint().unwrap();
+    assert_eq!(ck.step, 30);
+    // through the on-disk format, as a real restart would
+    let ck = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+
+    let src = DataSource {
+        mesh: &mesh,
+        domain: Some(&dom),
+        problem: &problem,
+        sensor_values: None,
+    };
+    let resumed = NativeBackend::from_checkpoint(&ck, &src).unwrap();
+    let mut c = Trainer::new(Box::new(resumed), &cfg_b);
+    c.resume_from_step(ck.step);
+    c.run().unwrap();
+
+    // the resumed half must be bit-identical to steps 31..60 of the
+    // uninterrupted run: same Adam state, same step numbering, same
+    // LR-schedule position, same re-drawn boundary samples
+    let resumed_losses: Vec<f64> =
+        c.history.rows.iter().map(|r| r.loss).collect();
+    assert_eq!(resumed_losses.len(), 30);
+    for (i, (ra, rb)) in ref_losses[30..]
+        .iter()
+        .zip(&resumed_losses)
+        .enumerate()
+    {
+        assert_eq!(
+            ra.to_bits(),
+            rb.to_bits(),
+            "step {}: uninterrupted {ra:.17e} vs resumed {rb:.17e}",
+            31 + i
+        );
+    }
+    // and the final parameters agree bitwise across both runs
+    let pts = [[0.3, 0.3], [0.7, 0.2]];
+    assert_eq!(a.predict(&pts).unwrap(), c.predict(&pts).unwrap());
+}
+
+#[test]
+fn two_head_checkpoint_roundtrips_eps_field() {
+    let mesh = generators::unit_square(1);
+    let dom = assembly::assemble(&mesh, 2, 4, QuadKind::GaussLegendre);
+    let problem = InverseSpaceSin;
+    let cfg = TrainConfig { iters: 15, ..TrainConfig::default() };
+    let mut t = trainer(&mesh, &dom, &problem, NativeLoss::InverseSpace,
+                        10, &cfg);
+    t.run().unwrap();
+    let path = tmp("two_head.ckpt");
+    t.checkpoint().unwrap().write(&path).unwrap();
+    let mut sess = InferenceSession::open(&path).unwrap();
+    assert!(sess.two_head());
+    let pts = [[0.1, 0.9], [0.6, 0.6], [0.9, 0.2]];
+    let (u, eps) = sess.eval(&pts);
+    let heads = t.predict_heads(&pts).unwrap();
+    assert_eq!(u, heads[0]);
+    assert_eq!(eps.unwrap(), heads[1]);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn trainer_policy_resume_via_best_artifact() {
+    // the .best artifact a CheckpointPolicy writes is itself a valid
+    // warm-restart source
+    let (mesh, dom, problem) = setup();
+    let cfg = TrainConfig { iters: 20, ..TrainConfig::default() };
+    let mut t = trainer(&mesh, &dom, &problem, NativeLoss::Forward, 0,
+                        &cfg);
+    let path = tmp("policy.ckpt");
+    t.set_checkpoint_policy(CheckpointPolicy {
+        path: path.clone(),
+        every: 0,
+        problem: "helmholtz".into(),
+        cli: vec![("k-pi".into(), "1".into()), ("n".into(), "2".into())],
+    });
+    let report = t.run().unwrap();
+    assert!(report.best_metric.is_some());
+    let best = {
+        let mut b = path.clone().into_os_string();
+        b.push(".best");
+        PathBuf::from(b)
+    };
+    let ck = Checkpoint::read(&best).unwrap();
+    assert_eq!(ck.problem, "helmholtz");
+    assert_eq!(ck.cli.len(), 2);
+    let src = DataSource {
+        mesh: &mesh,
+        domain: Some(&dom),
+        problem: &problem,
+        sensor_values: None,
+    };
+    let mut resumed = NativeBackend::from_checkpoint(&ck, &src).unwrap();
+    assert_eq!(resumed.loss_kind(), "helmholtz");
+    resumed.step(ck.step + 1, 1e-3).unwrap();
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&best).ok();
+}
+
+#[test]
+fn malformed_artifacts_error_instead_of_panicking() {
+    let (mesh, dom, problem) = setup();
+    let cfg = TrainConfig { iters: 3, ..TrainConfig::default() };
+    let mut t = trainer(&mesh, &dom, &problem, NativeLoss::Forward, 0,
+                        &cfg);
+    t.run().unwrap();
+    let bytes = t.checkpoint().unwrap().to_bytes();
+
+    // single-bit corruption anywhere must be caught by the checksum
+    for frac in [0.2, 0.5, 0.9] {
+        let mut bad = bytes.clone();
+        let i = (bad.len() as f64 * frac) as usize;
+        bad[i] ^= 0x01;
+        let err = Checkpoint::from_bytes(&bad).unwrap_err();
+        assert!(
+            err.to_string().contains("corrupted")
+                || err.to_string().contains("not a FastVPINNs"),
+            "byte {i}: {err}"
+        );
+    }
+    // truncation
+    assert!(Checkpoint::from_bytes(&bytes[..bytes.len() / 2]).is_err());
+    // a non-checkpoint file read through the public path
+    let path = tmp("not_a_checkpoint.bin");
+    std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+    let err = Checkpoint::read(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("checkpoint"), "{err:#}");
+    std::fs::remove_file(&path).ok();
+    // missing file: error mentions the path, still no panic
+    assert!(Checkpoint::read(tmp("missing.ckpt")).is_err());
+}
+
+#[test]
+fn resume_on_a_different_domain_is_rejected() {
+    let (mesh, dom, problem) = setup();
+    let cfg = TrainConfig { iters: 3, ..TrainConfig::default() };
+    let mut t = trainer(&mesh, &dom, &problem, NativeLoss::Forward, 0,
+                        &cfg);
+    t.run().unwrap();
+    let ck = t.checkpoint().unwrap();
+
+    // same problem, different quadrature order -> different fingerprint
+    let dom2 = assembly::assemble(&mesh, 2, 5, QuadKind::GaussLegendre);
+    let src = DataSource {
+        mesh: &mesh,
+        domain: Some(&dom2),
+        problem: &problem,
+        sensor_values: None,
+    };
+    let err = NativeBackend::from_checkpoint(&ck, &src).unwrap_err();
+    assert!(err.to_string().contains("fingerprint"), "{err}");
+
+    // different PDE coefficients (k) under the same mesh -> form error
+    let other = Helmholtz2D::new(2.0 * std::f64::consts::PI);
+    let src = DataSource {
+        mesh: &mesh,
+        domain: Some(&dom),
+        problem: &other,
+        sensor_values: None,
+    };
+    let err = NativeBackend::from_checkpoint(&ck, &src).unwrap_err();
+    assert!(err.to_string().contains("coefficients"), "{err}");
+}
