@@ -1,0 +1,209 @@
+"""Offline validation of the SIMD kernels in rust/src/linalg/simd.rs.
+
+No Rust toolchain runs in the authoring container, so (following
+proto_two_head.py / proto_varform.py) the numerically risky pieces of
+the AVX2 path ship with this transliteration, executed offline:
+
+1. `tanh_accurate`   -- the f64 vector tanh used by the training
+   epilogue: blend of an odd Taylor branch (|x| < 0.125) and an
+   exp-based branch tanh = (E-1)/(E+1), E = e^{2|x|} via Cody-Waite
+   range reduction + degree-13 Taylor exp + 2^k bit reconstruction.
+   Claim under test: max relative error vs the libm tanh is
+   "1e-15-class" (a few ulp) over the whole line.
+2. `tanh_fast_f32`   -- the f32 inference variant (same structure,
+   degree-7 exp polynomial). Claim: rel err well under the 1e-5
+   budget of the f32 serve path.
+3. f32-compute / f64-accumulate GEMM -- products and 16-deep partial
+   sums in f32 (FMA), chunk sums accumulated in f64. Claim: a
+   30x30-weight MLP layer stays within ~1e-6 of the f64 result, so
+   the end-to-end f32 serve path clears max rel-err < 1e-5.
+
+Every operation below mirrors the Rust/AVX2 instruction sequence
+(same polynomial orders, same Horner order, same magic-number
+round-to-nearest) so the measured bounds transfer.
+"""
+
+import numpy as np
+
+# --- constants shared with rust/src/linalg/simd.rs -------------------
+LOG2E = 1.4426950408889634
+LN2_HI = 6.93147180369123816490e-01  # 0x3FE62E42FEE00000
+LN2_LO = 1.90821492927058770002e-10  # 0x3DEA39EF35793C76
+MAGIC = 1.5 * 2.0**52  # round-to-nearest-even bias trick
+
+# tanh odd Taylor coefficients (x + x^3*c3 + ... + x^13*c13)
+TANH_C = [
+    -1.0 / 3.0,
+    2.0 / 15.0,
+    -17.0 / 315.0,
+    62.0 / 2835.0,
+    -1382.0 / 155925.0,
+    21844.0 / 6081075.0,
+]
+
+# exp Taylor 1/i! for i = 0..13 (Horner from the top)
+import math
+EXP_C = [1.0 / math.factorial(i) for i in range(14)]
+
+
+def exp_reduced(y):
+    """e^y for y in [0, ~40] via 2^k * P(r), mirroring the AVX2 ops."""
+    y = np.asarray(y, dtype=np.float64)
+    kd = (y * LOG2E + MAGIC) - MAGIC  # rint via magic number
+    r = (y - kd * LN2_HI) - kd * LN2_LO
+    # Horner, degree 13, top-down — same order as the Rust kernel
+    q = np.full_like(r, EXP_C[13])
+    for i in range(12, -1, -1):
+        q = q * r + EXP_C[i]
+    k = kd.astype(np.int64)
+    scale = ((k + 1023) << 52).view(np.float64)
+    return q * scale
+
+
+def tanh_accurate(x):
+    """f64 vector tanh: blend(small Taylor, (E-1)/(E+1))."""
+    x = np.asarray(x, dtype=np.float64)
+    ax = np.abs(x)
+    # small branch: x + x*(x2*p)
+    x2 = x * x
+    p = np.full_like(x, TANH_C[5])
+    for c in TANH_C[4::-1]:
+        p = p * x2 + c
+    small = x + x * (x2 * p)
+    # exp branch
+    y = np.minimum(2.0 * ax, 40.0)
+    e = exp_reduced(y)
+    big = np.copysign((e - 1.0) / (e + 1.0), x)
+    return np.where(ax < 0.125, small, big)
+
+
+# --- f32 variant -----------------------------------------------------
+LOG2E_F = np.float32(LOG2E)
+LN2_HI_F = np.float32(0.6933594)   # 0x3F318000 (exact in 11 bits)
+LN2_LO_F = np.float32(-2.1219444e-4)  # ln2 - LN2_HI_F
+MAGIC_F = np.float32(1.5 * 2.0**23)
+TANH_CF = [np.float32(c) for c in TANH_C[:3]]
+EXP_CF = [np.float32(1.0 / math.factorial(i)) for i in range(8)]
+
+
+def tanh_fast_f32(x):
+    """f32 inference tanh, degree-7 exp polynomial."""
+    x = np.asarray(x, dtype=np.float32)
+    ax = np.abs(x)
+    x2 = x * x
+    p = np.full_like(x, TANH_CF[2])
+    for c in TANH_CF[1::-1]:
+        p = p * x2 + c
+    small = x + x * (x2 * p)
+    y = np.minimum(np.float32(2.0) * ax, np.float32(18.0))
+    kd = (y * LOG2E_F + MAGIC_F) - MAGIC_F
+    r = (y - kd * LN2_HI_F) - kd * LN2_LO_F
+    q = np.full_like(r, EXP_CF[7])
+    for i in range(6, -1, -1):
+        q = q * r + EXP_CF[i]
+    k = kd.astype(np.int32)
+    scale = ((k + 127) << 23).view(np.float32)
+    e = q * scale
+    big = np.copysign((e - np.float32(1.0)) / (e + np.float32(1.0)), x)
+    return np.where(ax < np.float32(0.125), small, big).astype(np.float32)
+
+
+def rel_err(approx, exact):
+    exact = np.asarray(exact, dtype=np.float64)
+    denom = np.maximum(np.abs(exact), 1e-300)
+    return np.abs(np.asarray(approx, dtype=np.float64) - exact) / denom
+
+
+def check_tanh_f64():
+    rng = np.random.default_rng(7)
+    xs = np.concatenate([
+        np.linspace(-25.0, 25.0, 2_000_001),
+        rng.uniform(-1.0, 1.0, 500_000),
+        rng.uniform(-0.2, 0.2, 500_000),  # dense around the blend seam
+        np.array([0.0, 0.125, -0.125, 19.0, -19.0, 1e-30, -1e-30,
+                  700.0, -700.0, 1e308]),
+    ])
+    got = tanh_accurate(xs)
+    want = np.tanh(xs)
+    re = rel_err(got, want)
+    print(f"f64 tanh_accurate: max rel err {re.max():.3e} "
+          f"(n={xs.size})")
+    assert re.max() < 5e-15, "not 1e-15-class"
+    # seam continuity: both branches agree to ~1 ulp at the boundary
+    seam = np.linspace(0.1249, 0.1251, 10001)
+    re_seam = rel_err(tanh_accurate(seam), np.tanh(seam))
+    print(f"  seam [0.1249,0.1251]: max rel err {re_seam.max():.3e}")
+    assert re_seam.max() < 5e-15
+
+
+def check_tanh_f32():
+    rng = np.random.default_rng(11)
+    xs = np.concatenate([
+        np.linspace(-12.0, 12.0, 1_000_001),
+        rng.uniform(-1.5, 1.5, 500_000),
+    ]).astype(np.float32)
+    got = tanh_fast_f32(xs).astype(np.float64)
+    want = np.tanh(xs.astype(np.float64))
+    # absolute-or-relative: tanh saturates at +-1
+    err = np.abs(got - want) / np.maximum(np.abs(want), 1e-6)
+    print(f"f32 tanh_fast: max rel err {err.max():.3e} (n={xs.size})")
+    assert err.max() < 2e-6, "f32 tanh outside budget"
+
+
+def gemm_f32_acc64(a32, w32, kblk=16):
+    """z[p,o] = sum_i a[p,i] w[o,i]: f32 FMA products, f32 partial sums
+    within kblk-deep chunks, chunk totals accumulated in f64 — the
+    mixed-precision inference kernel's reduction scheme."""
+    m, k = a32.shape
+    o = w32.shape[0]
+    z = np.zeros((m, o), dtype=np.float64)
+    for c0 in range(0, k, kblk):
+        c1 = min(c0 + kblk, k)
+        part = np.zeros((m, o), dtype=np.float32)
+        for i in range(c0, c1):
+            # np float32 * float32 -> float32 rounds once per op like
+            # mul+add; hardware FMA rounds once per fma (tighter), so
+            # this measured bound is conservative for the Rust kernel.
+            part += a32[:, i:i + 1] * w32[:, i].T[None, :]
+        z += part.astype(np.float64)
+    return z
+
+
+def check_f32_serve_path():
+    """End-to-end [2,30,30,30,1] forward in the mixed-precision scheme
+    vs the f64 reference: the --precision f32 rel-err budget."""
+    rng = np.random.default_rng(42)
+    layers = [2, 30, 30, 30, 1]
+    glorot = [rng.uniform(-1, 1, (o, i)) * np.sqrt(6.0 / (i + o))
+              for i, o in zip(layers[:-1], layers[1:])]
+    biases = [rng.uniform(-0.1, 0.1, o) for o in layers[1:]]
+    pts = rng.uniform(0.0, 1.0, (4096, 2))
+
+    # f64 reference (libm tanh)
+    a = pts.copy()
+    for l, (w, b) in enumerate(zip(glorot, biases)):
+        z = a @ w.T + b
+        a = np.tanh(z) if l < len(glorot) - 1 else z
+    u64 = a[:, 0]
+
+    # f32 serve path: weights/bias packed to f32 once, activations f32,
+    # mixed-precision GEMM, fast f32 tanh
+    a32 = pts.astype(np.float32)
+    for l, (w, b) in enumerate(zip(glorot, biases)):
+        z = gemm_f32_acc64(a32, w.astype(np.float32))
+        z = (z + b).astype(np.float32)
+        a32 = tanh_fast_f32(z) if l < len(glorot) - 1 else z
+    u32 = a32[:, 0].astype(np.float64)
+
+    scale = np.abs(u64).max()
+    re = np.abs(u32 - u64) / max(scale, 1e-12)
+    print(f"f32 serve path: max rel err {re.max():.3e} vs f64 "
+          f"(scale {scale:.3e}, 4096 points)")
+    assert re.max() < 1e-5, "f32 inference path outside 1e-5 budget"
+
+
+if __name__ == "__main__":
+    check_tanh_f64()
+    check_tanh_f32()
+    check_f32_serve_path()
+    print("all SIMD-kernel prototype checks passed")

@@ -23,6 +23,12 @@ fn print_case(case: &StepBenchCase) {
 }
 
 fn main() {
+    println!(
+        "kernel: {} (cpu avx2={}, fma={})",
+        fastvpinns::linalg::simd::kernel_name(),
+        fastvpinns::linalg::simd::cpu_avx2(),
+        fastvpinns::linalg::simd::cpu_fma(),
+    );
     println!("== native train step, 30x3 net, nt=5x5, nq=5x5/elem ==");
     for k in [2usize, 4, 8, 16, 32, 64] {
         let ne = k * k;

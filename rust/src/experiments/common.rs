@@ -251,6 +251,9 @@ pub struct StepBenchCase {
     pub dof: usize,
     /// Effective worker threads (parallelism clamped to `ne`).
     pub threads: usize,
+    /// GEMM/epilogue kernel the case ran on
+    /// ([`crate::linalg::simd::kernel_name`] at measurement time).
+    pub kernel: &'static str,
     /// Per-step wall-clock (ms) order statistics.
     pub summary: crate::util::stats::Summary,
 }
@@ -345,6 +348,11 @@ pub struct InferBenchCase {
     pub batch: usize,
     /// Query-cloud size (points evaluated per timed pass).
     pub n_points: usize,
+    /// GEMM/epilogue kernel the case ran on.
+    pub kernel: &'static str,
+    /// Serving precision ("f64" bit-identical path, "f32"
+    /// mixed-precision path).
+    pub precision: &'static str,
     /// Wall-clock per full pass (ms) order statistics.
     pub summary: crate::util::stats::Summary,
     /// `n_points` / median pass time — the headline serving metric.
@@ -355,42 +363,92 @@ pub struct InferBenchCase {
 /// `iters` timed passes (after `warmup` discarded ones) over an
 /// `n_points` uniform query cloud, evaluated `batch` points at a time
 /// with a reused scratch — the `repro bench` `"infer"` cases
-/// (points/sec at batch sizes 1, 256, 4096).
+/// (points/sec at batch sizes 1, 256, 4096, at both serving
+/// precisions).
 pub fn native_infer_case(
     batch: usize,
     n_points: usize,
     iters: usize,
     warmup: usize,
+    precision: crate::runtime::infer::Precision,
 ) -> Result<InferBenchCase> {
     use crate::runtime::backend::native::{EvalScratch, Mlp};
+    use crate::runtime::infer::{F32Evaluator, Precision};
     let net = Mlp::glorot(STD_LAYERS, 42)?;
     let mut scratch = EvalScratch::new(&net);
+    let mut f32ev = match precision {
+        Precision::F32 => Some(F32Evaluator::from_mlp(&net)),
+        Precision::F64 => None,
+    };
     let side = (n_points as f64).sqrt().ceil() as usize;
     let mut cloud = eval_grid(side, side, 0.0, 0.0, 1.0, 1.0);
     cloud.truncate(n_points);
     let batch = batch.max(1);
-    let pass = |net: &Mlp, scratch: &mut EvalScratch| {
+    let mut pass = || {
         for chunk in cloud.chunks(batch) {
-            std::hint::black_box(net.eval_with(chunk, scratch));
+            match f32ev.as_mut() {
+                Some(ev) => {
+                    std::hint::black_box(ev.eval_heads(chunk));
+                }
+                None => {
+                    std::hint::black_box(
+                        net.eval_with(chunk, &mut scratch));
+                }
+            }
         }
     };
     for _ in 0..warmup {
-        pass(&net, &mut scratch);
+        pass();
     }
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters.max(1) {
         let t0 = std::time::Instant::now();
-        pass(&net, &mut scratch);
+        pass();
         samples.push(t0.elapsed().as_secs_f64() * 1e3);
     }
     let summary = crate::util::stats::Summary::from(&samples);
     Ok(InferBenchCase {
         batch,
         n_points: cloud.len(),
+        kernel: crate::linalg::simd::kernel_name(),
+        precision: match precision {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        },
         points_per_sec: cloud.len() as f64
             / (summary.median * 1e-3).max(1e-9),
         summary,
     })
+}
+
+/// Run `steps` native training steps on a small Poisson grid and
+/// return the final loss — the numeric half of the bench harness's
+/// simd-vs-scalar parity guard (the two kernels are bit-identical, so
+/// any drift here means a broken kernel, not FP noise).
+pub fn native_probe_loss(
+    k: usize,
+    nt1d: usize,
+    nq1d: usize,
+    steps: usize,
+) -> Result<f64> {
+    let mesh = generators::unit_square(k.max(1));
+    let dom = assembly::assemble(&mesh, nt1d, nq1d,
+                                 QuadKind::GaussLegendre);
+    let problem =
+        crate::problems::PoissonSin::new(2.0 * std::f64::consts::PI);
+    let src = DataSource {
+        mesh: &mesh,
+        domain: Some(&dom),
+        problem: &problem,
+        sensor_values: None,
+    };
+    let cfg = NativeConfig::forward_std();
+    let mut b = NativeBackend::new(&cfg, &src, &BackendOpts::default())?;
+    let mut loss = f64::NAN;
+    for i in 0..steps.max(1) {
+        loss = b.step(i + 1, 1e-3)?.loss;
+    }
+    Ok(loss)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -426,6 +484,7 @@ fn native_step_case_cfg(
         n_quad: ne * dom.nq,
         dof,
         threads,
+        kernel: crate::linalg::simd::kernel_name(),
         summary: crate::util::stats::Summary::from(&samples),
     })
 }

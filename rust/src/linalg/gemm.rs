@@ -19,36 +19,158 @@
 //! `n`. Accumulation (`beta = 1`) is exact for the backward pass's
 //! `+=` into gradient slices. Everything is deterministic: the
 //! floating-point reduction order depends only on the shapes.
+//!
+//! Two microkernels can execute the packed blocks: the portable scalar
+//! `4x8` tile below (the property-tested ground truth) and the AVX2
+//! `4x12` tile in [`simd`](super::simd), selected once per call via
+//! [`simd::active`]. Because the per-(i, j) reduction order is
+//! invariant under the tile width (the packing loops only regroup
+//! *independent* output elements, and the AVX2 kernel uses the same
+//! multiply-then-add sequence — no FMA), the two kernels produce
+//! bit-identical results; the proptests at the bottom enforce that.
+
+use super::simd;
 
 /// Microkernel tile rows (accumulator block height).
 const MR: usize = 4;
 /// Microkernel tile columns (accumulator block width).
 const NR: usize = 8;
-/// Rows of A per packed block (multiple of `MR`).
+/// Rows of A per packed block (multiple of every kernel's `mr`).
 const MC: usize = 64;
 /// Panel depth (shared k-extent of the packed A/B panels).
 const KC: usize = 128;
-/// Columns of B per packed block (multiple of `NR`).
+/// Columns of B per packed block.
 const NC: usize = 256;
+/// `NC` rounded up to the widest kernel tile (`NR_AVX2 = 12`): the
+/// packed-B capacity that serves every kernel without reallocation.
+const NC_PAD_MAX: usize = NC.div_ceil(simd::NR_AVX2) * simd::NR_AVX2;
+
+/// 64-byte-aligned, exactly-sized `f64` scratch for the packed
+/// panels: cache-line (and thus 32-byte vector-load) aligned so the
+/// AVX2 microkernel can use aligned panel loads. Growth via
+/// [`AlignedBuf::ensure`] reallocates only when the requested size
+/// exceeds the current capacity — steady-state reuse never churns.
+struct AlignedBuf {
+    ptr: std::ptr::NonNull<f64>,
+    cap: usize,
+}
+
+impl AlignedBuf {
+    const ALIGN: usize = 64;
+
+    fn layout(cap: usize) -> std::alloc::Layout {
+        std::alloc::Layout::from_size_align(
+            cap * std::mem::size_of::<f64>(),
+            Self::ALIGN,
+        )
+        .expect("panel layout overflows")
+    }
+
+    /// Grow to at least `n` f64 slots (exact allocation, zeroed; a
+    /// no-op when capacity already suffices). Panel contents are
+    /// scratch, so growth need not preserve them.
+    fn ensure(&mut self, n: usize) {
+        if n <= self.cap {
+            return;
+        }
+        self.release();
+        let layout = Self::layout(n);
+        // SAFETY: layout has non-zero size (n > cap >= 0).
+        let raw = unsafe { std::alloc::alloc_zeroed(layout) };
+        let Some(ptr) = std::ptr::NonNull::new(raw.cast::<f64>())
+        else {
+            std::alloc::handle_alloc_error(layout)
+        };
+        debug_assert_eq!(
+            ptr.as_ptr() as usize % Self::ALIGN,
+            0,
+            "allocator violated the panel alignment contract"
+        );
+        self.ptr = ptr;
+        self.cap = n;
+    }
+
+    fn release(&mut self) {
+        if self.cap > 0 {
+            // SAFETY: ptr was allocated with exactly this layout.
+            unsafe {
+                std::alloc::dealloc(
+                    self.ptr.as_ptr().cast(),
+                    Self::layout(self.cap),
+                );
+            }
+            self.ptr = std::ptr::NonNull::dangling();
+            self.cap = 0;
+        }
+    }
+
+    fn as_mut_slice(&mut self) -> &mut [f64] {
+        // SAFETY: ptr is valid for cap f64s (or dangling with cap 0).
+        unsafe {
+            std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.cap)
+        }
+    }
+
+    fn as_slice(&self) -> &[f64] {
+        // SAFETY: as above.
+        unsafe {
+            std::slice::from_raw_parts(self.ptr.as_ptr(), self.cap)
+        }
+    }
+}
+
+impl Default for AlignedBuf {
+    fn default() -> Self {
+        AlignedBuf { ptr: std::ptr::NonNull::dangling(), cap: 0 }
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+impl Clone for AlignedBuf {
+    fn clone(&self) -> Self {
+        let mut b = AlignedBuf::default();
+        b.ensure(self.cap);
+        b.as_mut_slice().copy_from_slice(self.as_slice());
+        b
+    }
+}
+
+impl std::fmt::Debug for AlignedBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>)
+        -> std::fmt::Result {
+        f.debug_struct("AlignedBuf").field("cap", &self.cap).finish()
+    }
+}
+
+// SAFETY: AlignedBuf uniquely owns its allocation (no interior
+// mutability, no aliasing), so moving/sharing it across threads is as
+// safe as for Vec<f64>.
+unsafe impl Send for AlignedBuf {}
+unsafe impl Sync for AlignedBuf {}
 
 /// Reusable packing buffers — allocate once per thread, pass to every
-/// [`gemm`] call to keep the hot path allocation-free.
-#[derive(Debug, Clone)]
+/// [`gemm`] call to keep the hot path allocation-free. `Default`
+/// yields empty buffers that the first [`gemm`] call grows (exactly
+/// once); [`GemmBufs::new`] pre-allocates the full panel capacity up
+/// front.
+#[derive(Debug, Clone, Default)]
 pub struct GemmBufs {
-    pa: Vec<f64>,
-    pb: Vec<f64>,
+    pa: AlignedBuf,
+    pb: AlignedBuf,
 }
 
 impl GemmBufs {
     /// Allocate the packing panels (one-time, reused across calls).
     pub fn new() -> GemmBufs {
-        GemmBufs { pa: vec![0.0; MC * KC], pb: vec![0.0; KC * NC] }
-    }
-}
-
-impl Default for GemmBufs {
-    fn default() -> Self {
-        GemmBufs::new()
+        let mut b = GemmBufs::default();
+        b.pa.ensure(MC * KC);
+        b.pb.ensure(KC * NC_PAD_MAX);
+        b
     }
 }
 
@@ -58,8 +180,35 @@ impl Default for GemmBufs {
 /// `ta == false` means `a` is stored `m x k`; `ta == true` means `a` is
 /// stored `k x m` and accessed transposed (likewise `tb` for `b`, which
 /// is then stored `n x k`). `c` is `m x n` with row stride `n`.
+///
+/// Runs on the kernel selected once per call by
+/// [`simd::active`] (AVX2 `4x12` where detected, scalar `4x8`
+/// otherwise or under `REPRO_FORCE_SCALAR=1`); both kernels produce
+/// bit-identical results.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm(
+    bufs: &mut GemmBufs,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    ta: bool,
+    b: &[f64],
+    tb: bool,
+    beta: f64,
+    c: &mut [f64],
+) {
+    gemm_with(simd::active(), bufs, m, n, k, alpha, a, ta, b, tb, beta,
+              c);
+}
+
+/// [`gemm`] on an explicitly chosen kernel — the bit-for-bit parity
+/// proptests compare the kernels directly through this (no racy
+/// global toggles).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_with(
+    kern: simd::Kernel,
     bufs: &mut GemmBufs,
     m: usize,
     n: usize,
@@ -88,24 +237,50 @@ pub fn gemm(
     if k == 0 || alpha == 0.0 {
         return;
     }
+    let (mr, nr) = match kern {
+        simd::Kernel::Scalar => (MR, NR),
+        simd::Kernel::Avx2 => (simd::MR_AVX2, simd::NR_AVX2),
+    };
+    debug_assert_eq!(MC % mr, 0, "MC must be a multiple of the tile");
+    bufs.pa.ensure(MC * KC);
+    bufs.pb.ensure(KC * NC.div_ceil(nr) * nr);
     for jc in (0..n).step_by(NC) {
         let nc = NC.min(n - jc);
         for pc in (0..k).step_by(KC) {
             let kc = KC.min(k - pc);
-            pack_b(b, tb, n, k, pc, jc, kc, nc, &mut bufs.pb);
+            pack_b(b, tb, n, k, pc, jc, kc, nc, nr,
+                   bufs.pb.as_mut_slice());
             for ic in (0..m).step_by(MC) {
                 let mc = MC.min(m - ic);
-                pack_a(a, ta, m, k, ic, pc, mc, kc, &mut bufs.pa);
-                block_kernel(&bufs.pa, &bufs.pb, mc, nc, kc, alpha, c,
-                             ic, jc, n);
+                pack_a(a, ta, m, k, ic, pc, mc, kc, mr,
+                       bufs.pa.as_mut_slice());
+                match kern {
+                    simd::Kernel::Scalar => block_kernel(
+                        bufs.pa.as_slice(), bufs.pb.as_slice(), mc, nc,
+                        kc, alpha, c, ic, jc, n),
+                    #[cfg(target_arch = "x86_64")]
+                    // SAFETY: Kernel::Avx2 is only ever produced by
+                    // simd::active() after feature detection (or by
+                    // tests that checked simd_available()).
+                    simd::Kernel::Avx2 => unsafe {
+                        simd::block_kernel_avx2(
+                            bufs.pa.as_slice(), bufs.pb.as_slice(), mc,
+                            nc, kc, alpha, c, ic, jc, n)
+                    },
+                    #[cfg(not(target_arch = "x86_64"))]
+                    simd::Kernel::Avx2 => block_kernel(
+                        bufs.pa.as_slice(), bufs.pb.as_slice(), mc, nc,
+                        kc, alpha, c, ic, jc, n),
+                }
             }
         }
     }
 }
 
-/// Pack `op(A)[ic..ic+mc, pc..pc+kc]` into `MR`-row panels, p-major
+/// Pack `op(A)[ic..ic+mc, pc..pc+kc]` into `mr`-row panels, p-major
 /// within each panel, zero-padding the ragged last panel so the
-/// microkernel never branches on edges.
+/// microkernel never branches on edges. `mr` is the active kernel's
+/// tile height.
 #[allow(clippy::too_many_arguments)]
 fn pack_a(
     a: &[f64],
@@ -116,12 +291,13 @@ fn pack_a(
     pc: usize,
     mc: usize,
     kc: usize,
+    mr: usize,
     pa: &mut [f64],
 ) {
     let mut w = 0;
-    for ip in (0..mc).step_by(MR) {
+    for ip in (0..mc).step_by(mr) {
         for p in 0..kc {
-            for ii in 0..MR {
+            for ii in 0..mr {
                 let i = ip + ii;
                 pa[w] = if i < mc {
                     if ta {
@@ -138,8 +314,9 @@ fn pack_a(
     }
 }
 
-/// Pack `op(B)[pc..pc+kc, jc..jc+nc]` into `NR`-column panels, p-major
-/// within each panel, zero-padded like [`pack_a`].
+/// Pack `op(B)[pc..pc+kc, jc..jc+nc]` into `nr`-column panels, p-major
+/// within each panel, zero-padded like [`pack_a`]. `nr` is the active
+/// kernel's tile width.
 #[allow(clippy::too_many_arguments)]
 fn pack_b(
     b: &[f64],
@@ -150,12 +327,13 @@ fn pack_b(
     jc: usize,
     kc: usize,
     nc: usize,
+    nr: usize,
     pb: &mut [f64],
 ) {
     let mut w = 0;
-    for jp in (0..nc).step_by(NR) {
+    for jp in (0..nc).step_by(nr) {
         for p in 0..kc {
-            for jj in 0..NR {
+            for jj in 0..nr {
                 let j = jp + jj;
                 pb[w] = if j < nc {
                     if tb {
@@ -221,8 +399,28 @@ fn block_kernel(
 /// `trans == true`: `op(A) = A^T` (`x` has length `m`, `y` length `n`).
 /// The blocked residual contraction and its adjoint run through this
 /// (per element, the premultiplier slab is an `nt x nq` matrix).
+///
+/// Dispatched like [`gemm`]; the AVX2 variants preserve the scalar
+/// loops' per-element reduction order exactly (one lane per output),
+/// so both kernels are bit-identical here too.
 #[allow(clippy::too_many_arguments)]
 pub fn gemv(
+    m: usize,
+    n: usize,
+    alpha: f64,
+    a: &[f64],
+    trans: bool,
+    x: &[f64],
+    beta: f64,
+    y: &mut [f64],
+) {
+    gemv_with(simd::active(), m, n, alpha, a, trans, x, beta, y);
+}
+
+/// [`gemv`] on an explicitly chosen kernel (parity tests).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemv_with(
+    kern: simd::Kernel,
     m: usize,
     n: usize,
     alpha: f64,
@@ -246,6 +444,21 @@ pub fn gemv(
     if alpha == 0.0 || m == 0 || n == 0 {
         return;
     }
+    #[cfg(target_arch = "x86_64")]
+    if kern == simd::Kernel::Avx2 {
+        // SAFETY: Kernel::Avx2 implies the feature probe passed;
+        // slice lengths were asserted above.
+        unsafe {
+            if trans {
+                simd::gemv_trans_avx2(m, n, alpha, a, x, y);
+            } else {
+                simd::gemv_notrans_avx2(m, n, alpha, a, x, y);
+            }
+        }
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = kern;
     if !trans {
         for (i, yi) in y.iter_mut().enumerate().take(m) {
             let row = &a[i * n..i * n + n];
@@ -456,5 +669,158 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn simd_gemm_is_bit_identical_to_scalar() {
+        if !simd::simd_available() {
+            eprintln!("skipping: no AVX2 on this host");
+            return;
+        }
+        let mut vals = Rng::new(29);
+        check_result(
+            31,
+            80,
+            |r| Case {
+                m: DIMS[r.below(DIMS.len())],
+                n: DIMS[r.below(DIMS.len())],
+                k: DIMS[r.below(DIMS.len())],
+                ta: r.uniform() < 0.5,
+                tb: r.uniform() < 0.5,
+                alpha: [1.0, -1.0, 0.5][r.below(3)],
+                beta: [0.0, 1.0, -0.25][r.below(3)],
+            },
+            |case| {
+                let Case { m, n, k, ta, tb, alpha, beta } = *case;
+                let a = fill(&mut vals, m * k);
+                let b = fill(&mut vals, k * n);
+                let c0 = fill(&mut vals, m * n);
+                let mut c_s = c0.clone();
+                let mut c_v = c0;
+                let mut bufs = GemmBufs::new();
+                gemm_with(simd::Kernel::Scalar, &mut bufs, m, n, k,
+                          alpha, &a, ta, &b, tb, beta, &mut c_s);
+                gemm_with(simd::Kernel::Avx2, &mut bufs, m, n, k,
+                          alpha, &a, ta, &b, tb, beta, &mut c_v);
+                for (i, (s, v)) in c_s.iter().zip(&c_v).enumerate() {
+                    if s.to_bits() != v.to_bits() {
+                        return Err(format!(
+                            "C[{i}]: scalar {s:?} vs avx2 {v:?} \
+                             (bits differ)"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn simd_gemm_bit_identity_across_blocking_boundaries() {
+        if !simd::simd_available() {
+            eprintln!("skipping: no AVX2 on this host");
+            return;
+        }
+        // Shapes straddling MC/KC/NC and both kernels' ragged tile
+        // edges (NR = 8 vs NR_AVX2 = 12).
+        let mut rng = Rng::new(41);
+        for &(m, n, k) in &[
+            (MC + 1, NC + 3, KC + 5),
+            (MC, NC, KC),
+            (MR + 1, simd::NR_AVX2 + 1, 2 * KC + 1),
+            (3, 2 * NC + 11, 7),
+        ] {
+            let a = fill(&mut rng, m * k);
+            let b = fill(&mut rng, k * n);
+            let mut c_s = vec![0.0; m * n];
+            let mut c_v = vec![0.0; m * n];
+            let mut bufs = GemmBufs::new();
+            gemm_with(simd::Kernel::Scalar, &mut bufs, m, n, k, 1.0,
+                      &a, false, &b, true, 1.0, &mut c_s);
+            gemm_with(simd::Kernel::Avx2, &mut bufs, m, n, k, 1.0,
+                      &a, false, &b, true, 1.0, &mut c_v);
+            for (s, v) in c_s.iter().zip(&c_v) {
+                assert_eq!(
+                    s.to_bits(),
+                    v.to_bits(),
+                    "({m},{n},{k}): scalar {s:?} vs avx2 {v:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_gemv_is_bit_identical_to_scalar() {
+        if !simd::simd_available() {
+            eprintln!("skipping: no AVX2 on this host");
+            return;
+        }
+        let mut vals = Rng::new(37);
+        check_result(
+            43,
+            80,
+            |r| {
+                (
+                    DIMS[r.below(DIMS.len())],
+                    DIMS[r.below(DIMS.len())],
+                    r.uniform() < 0.5,
+                    [1.0, -0.5, 2.0][r.below(3)],
+                    [0.0, 1.0, -0.25][r.below(3)],
+                )
+            },
+            |&(m, n, trans, alpha, beta)| {
+                let a = fill(&mut vals, m * n);
+                let (xlen, ylen) = if trans { (m, n) } else { (n, m) };
+                let mut x = fill(&mut vals, xlen);
+                // exercise the trans path's `s == 0.0` skip too
+                if xlen > 2 {
+                    x[1] = 0.0;
+                }
+                let y0 = fill(&mut vals, ylen);
+                let mut y_s = y0.clone();
+                let mut y_v = y0;
+                gemv_with(simd::Kernel::Scalar, m, n, alpha, &a, trans,
+                          &x, beta, &mut y_s);
+                gemv_with(simd::Kernel::Avx2, m, n, alpha, &a, trans,
+                          &x, beta, &mut y_v);
+                for (i, (s, v)) in y_s.iter().zip(&y_v).enumerate() {
+                    if s.to_bits() != v.to_bits() {
+                        return Err(format!(
+                            "y[{i}] (trans={trans}): scalar {s:?} vs \
+                             avx2 {v:?} (bits differ)"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn gemm_bufs_default_grows_once_and_is_reused() {
+        // Default starts empty; the first gemm grows the panels and
+        // later (smaller or equal) calls must not reallocate.
+        let mut bufs = GemmBufs::default();
+        assert_eq!(bufs.pa.cap, 0);
+        assert_eq!(bufs.pb.cap, 0);
+        let mut rng = Rng::new(53);
+        let (m, n, k) = (9, 11, 13);
+        let a = fill(&mut rng, m * k);
+        let b = fill(&mut rng, k * n);
+        let mut c = vec![0.0; m * n];
+        gemm(&mut bufs, m, n, k, 1.0, &a, false, &b, false, 0.0, &mut c);
+        let (pa_ptr, pb_ptr) =
+            (bufs.pa.ptr.as_ptr() as usize, bufs.pb.ptr.as_ptr() as usize);
+        assert_eq!(pa_ptr % 64, 0, "packed-A panel not 64-byte aligned");
+        assert_eq!(pb_ptr % 64, 0, "packed-B panel not 64-byte aligned");
+        assert!(bufs.pa.cap >= MC * KC);
+        gemm(&mut bufs, m, n, k, 1.0, &a, false, &b, false, 0.0, &mut c);
+        assert_eq!(bufs.pa.ptr.as_ptr() as usize, pa_ptr,
+                   "steady-state gemm reallocated the A panel");
+        assert_eq!(bufs.pb.ptr.as_ptr() as usize, pb_ptr,
+                   "steady-state gemm reallocated the B panel");
+        // ensure() with a smaller request is a no-op
+        bufs.pa.ensure(1);
+        assert_eq!(bufs.pa.ptr.as_ptr() as usize, pa_ptr);
     }
 }

@@ -6,8 +6,13 @@ pub mod bicgstab;
 pub mod cg;
 pub mod csr;
 pub mod gemm;
+pub mod simd;
 
 pub use bicgstab::bicgstab_solve;
 pub use cg::{cg_solve, CgOptions, CgResult};
 pub use csr::{CsrMatrix, Triplets};
 pub use gemm::{gemm, gemv, GemmBufs};
+pub use simd::{
+    cpu_avx2, cpu_fma, kernel_name, set_force_scalar, simd_available,
+    Kernel,
+};

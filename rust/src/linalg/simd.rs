@@ -1,0 +1,878 @@
+//! Runtime-dispatched SIMD kernels for the dense hot path: an AVX2
+//! `f64` GEMM/GEMV microkernel family, vectorized `tanh` epilogues,
+//! and the f32-compute / f64-accumulate inference GEMM.
+//!
+//! Design rules, in order:
+//!
+//! 1. **The scalar kernels in [`gemm`](super::gemm) stay the ground
+//!    truth.** The AVX2 `f64` microkernel uses vectorized multiply +
+//!    add (never FMA) in exactly the scalar kernel's per-element
+//!    reduction order, so `f64` results are *bit-identical* to the
+//!    scalar fallback on every machine — property-tested in
+//!    `gemm::tests`. Fused multiply-add rounds once instead of twice
+//!    and would silently fork trajectories between machines; it is
+//!    reserved for the f32 inference path, whose contract is a
+//!    relative-error bound rather than bit equality.
+//! 2. **Dispatch is resolved once.** [`active`] consults a cached
+//!    `is_x86_feature_detected!` probe (AVX2 + FMA), the
+//!    `REPRO_FORCE_SCALAR` environment variable (any value other than
+//!    `0`/empty forces the scalar fallback — the CI leg that keeps the
+//!    fallback green), and a process-wide override
+//!    ([`set_force_scalar`]) used by the `repro bench` parity guard.
+//! 3. **The vector `tanh` is documented-error, not libm.** The
+//!    training epilogue's [`tanh_block`] evaluates tanh as a blend of
+//!    an odd Taylor branch (|x| < 1/8) and `(E-1)/(E+1)` with
+//!    `E = exp(2|x|)` via Cody-Waite range reduction — measured max
+//!    relative error 6.7e-16 vs libm (see
+//!    `python/proto_simd_tanh.py`, the executable reference for every
+//!    constant below). The scalar fallback keeps calling `f64::tanh`,
+//!    so `REPRO_FORCE_SCALAR=1` reproduces pre-SIMD trajectories
+//!    bit-for-bit. NaN inputs return a finite value on the vector
+//!    path (the hot path treats NaN as already-diverged training).
+//! 4. **f32 serving is bounded, cheap, and opt-in.** [`gemm_f32acc`]
+//!    takes f32 products (FMA on AVX2) into f32 partial sums over
+//!    16-deep k-chunks and accumulates chunk totals in f64; with the
+//!    degree-7 [`tanh_fast_f32`] the end-to-end `[2,30,30,30,1]`
+//!    forward stays within ~1.3e-6 of the f64 path (budget: 1e-5,
+//!    guarded by tests here and in `runtime::infer`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// Which GEMM/GEMV/epilogue implementation executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable scalar kernels (`4x8` tile) — the always-compiled,
+    /// property-tested ground truth and fallback.
+    Scalar,
+    /// AVX2 `4x12` f64 microkernel + vector epilogues (x86_64 with
+    /// AVX2 and FMA detected at runtime).
+    Avx2,
+}
+
+/// AVX2 microkernel tile rows (matches the scalar `MR`, so the packed
+/// A panels are shared).
+pub(crate) const MR_AVX2: usize = 4;
+/// AVX2 microkernel tile columns: 3 x `__m256d` accumulator rows — 12
+/// accumulators + 3 B loads + 1 broadcast fill the 16 ymm registers.
+pub(crate) const NR_AVX2: usize = 12;
+
+#[derive(Debug, Clone, Copy)]
+struct Detect {
+    avx2: bool,
+    fma: bool,
+    env_force: bool,
+}
+
+static DETECT: OnceLock<Detect> = OnceLock::new();
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+fn detect() -> Detect {
+    *DETECT.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        let (avx2, fma) = (
+            is_x86_feature_detected!("avx2"),
+            is_x86_feature_detected!("fma"),
+        );
+        #[cfg(not(target_arch = "x86_64"))]
+        let (avx2, fma) = (false, false);
+        let env_force = std::env::var("REPRO_FORCE_SCALAR")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        Detect { avx2, fma, env_force }
+    })
+}
+
+/// Whether the CPU reports AVX2 (independent of overrides) — recorded
+/// in the bench JSON so perf records are comparable across machines.
+pub fn cpu_avx2() -> bool {
+    detect().avx2
+}
+
+/// Whether the CPU reports FMA (independent of overrides).
+pub fn cpu_fma() -> bool {
+    detect().fma
+}
+
+/// Whether the SIMD kernels are usable: features detected and not
+/// disabled via `REPRO_FORCE_SCALAR`.
+pub fn simd_available() -> bool {
+    let d = detect();
+    d.avx2 && d.fma && !d.env_force
+}
+
+/// Process-wide override forcing the scalar kernels (the bench
+/// harness's simd-vs-scalar parity probe). Relaxed-atomic: set it
+/// before spawning worker threads, not concurrently with them.
+pub fn set_force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+/// The kernel the next `gemm`/`gemv`/epilogue call will run on.
+pub fn active() -> Kernel {
+    if simd_available() && !FORCE_SCALAR.load(Ordering::Relaxed) {
+        Kernel::Avx2
+    } else {
+        Kernel::Scalar
+    }
+}
+
+/// Stable identifier of the active kernel (bench JSON `kernel` field).
+pub fn kernel_name() -> &'static str {
+    match active() {
+        Kernel::Avx2 => "avx2_4x12",
+        Kernel::Scalar => "scalar_4x8",
+    }
+}
+
+// ---------------------------------------------------------------------
+// tanh: accurate f64 (training epilogue) and fast f32 (inference)
+// ---------------------------------------------------------------------
+//
+// Shared constants; every value is validated against the numpy
+// transliteration in python/proto_simd_tanh.py. The magic-number
+// round-to-nearest and the 2^k bit reconstruction assume
+// round-to-nearest-even FP mode (the only mode Rust runs in).
+
+/// Cody-Waite high part of ln 2 (top 32 mantissa bits).
+const LN2_HI: f64 = 0.693_147_180_369_123_8;
+/// Cody-Waite low part: `ln 2 - LN2_HI`.
+const LN2_LO: f64 = 1.908_214_929_270_587_7e-10;
+/// `1.5 * 2^52`: adding and subtracting rounds to the nearest integer.
+const MAGIC: f64 = 6_755_399_441_055_744.0;
+/// tanh odd-Taylor coefficients (x^3 … x^13).
+const TANH_C: [f64; 6] = [
+    -0.333_333_333_333_333_3,
+    0.133_333_333_333_333_33,
+    -0.053_968_253_968_253_97,
+    0.021_869_488_536_155_203,
+    -0.008_863_235_529_902_197,
+    0.003_592_128_036_572_481,
+];
+/// exp Taylor coefficients `1/i!` for `i = 0..13`.
+const EXP_C: [f64; 14] = [
+    1.0,
+    1.0,
+    0.5,
+    0.166_666_666_666_666_66,
+    0.041_666_666_666_666_664,
+    0.008_333_333_333_333_333,
+    0.001_388_888_888_888_889,
+    1.984_126_984_126_984e-4,
+    2.480_158_730_158_73e-5,
+    2.755_731_922_398_589_3e-6,
+    2.755_731_922_398_589e-7,
+    2.505_210_838_544_172e-8,
+    2.087_675_698_786_81e-9,
+    1.605_904_383_682_161_3e-10,
+];
+
+/// Scalar transliteration of the AVX2 `tanh` lanes — the *same*
+/// operation sequence, so remainder elements of a [`tanh_block`] call
+/// are bit-identical to vector lanes (values never depend on an
+/// element's position within a block). Max relative error vs libm:
+/// 6.7e-16 (`python/proto_simd_tanh.py`).
+pub fn tanh_accurate(x: f64) -> f64 {
+    let ax = x.abs();
+    if ax < 0.125 {
+        let x2 = x * x;
+        let mut p = TANH_C[5];
+        for &c in TANH_C[..5].iter().rev() {
+            p = p * x2 + c;
+        }
+        x + x * (x2 * p)
+    } else {
+        // tanh(|x|) = (E - 1) / (E + 1), E = exp(2|x|); clamped at
+        // y = 40 where the quotient already rounds to 1.0.
+        let y = (2.0 * ax).min(40.0);
+        let kd = (y * std::f64::consts::LOG2_E + MAGIC) - MAGIC;
+        let r = (y - kd * LN2_HI) - kd * LN2_LO;
+        let mut q = EXP_C[13];
+        for &c in EXP_C[..13].iter().rev() {
+            q = q * r + c;
+        }
+        let k = kd as i64;
+        let scale = f64::from_bits(((1023 + k) as u64) << 52);
+        let e = q * scale;
+        ((e - 1.0) / (e + 1.0)).copysign(x)
+    }
+}
+
+/// In-place tanh over a block, dispatched: AVX2 runs the vector
+/// algorithm above (documented ≤1e-15-class relative error); the
+/// scalar fallback keeps libm's `f64::tanh`, preserving pre-SIMD
+/// trajectories bit-for-bit under `REPRO_FORCE_SCALAR=1`.
+pub fn tanh_block(z: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if active() == Kernel::Avx2 {
+        // SAFETY: `active()` returned Avx2, so AVX2+FMA are present.
+        unsafe { avx2::tanh_block(z) };
+        return;
+    }
+    for v in z {
+        *v = v.tanh();
+    }
+}
+
+/// f32 Cody-Waite ln 2 split (11 exact high bits).
+const LN2_HI_F: f32 = 0.693_359_4;
+/// f32 Cody-Waite low part.
+const LN2_LO_F: f32 = -2.121_944_4e-4;
+/// `1.5 * 2^23` — the f32 round-to-nearest magic.
+const MAGIC_F: f32 = 12_582_912.0;
+/// f32 tanh odd-Taylor coefficients (x^3, x^5, x^7).
+const TANH_CF: [f32; 3] = [-0.333_333_34, 0.133_333_34, -0.053_968_254];
+/// f32 exp Taylor coefficients `1/i!` for `i = 0..7`.
+const EXP_CF: [f32; 8] = [
+    1.0,
+    1.0,
+    0.5,
+    0.166_666_67,
+    0.041_666_668,
+    0.008_333_334,
+    0.001_388_888_9,
+    1.984_127e-4,
+];
+
+/// Fast f32 tanh for the mixed-precision inference path: same blend
+/// structure as [`tanh_accurate`] with a degree-7 exp polynomial. Max
+/// relative error ~3.1e-7 vs the f64 libm tanh
+/// (`python/proto_simd_tanh.py`) — well inside the serve path's 1e-5
+/// budget. The AVX2 8-lane version performs the identical operation
+/// sequence, so vector and scalar agree bit-for-bit.
+pub fn tanh_fast_f32(x: f32) -> f32 {
+    let ax = x.abs();
+    if ax < 0.125 {
+        let x2 = x * x;
+        let p = (TANH_CF[2] * x2 + TANH_CF[1]) * x2 + TANH_CF[0];
+        x + x * (x2 * p)
+    } else {
+        let y = (2.0 * ax).min(18.0);
+        let kd = (y * std::f32::consts::LOG2_E + MAGIC_F) - MAGIC_F;
+        let r = (y - kd * LN2_HI_F) - kd * LN2_LO_F;
+        let mut q = EXP_CF[7];
+        for &c in EXP_CF[..7].iter().rev() {
+            q = q * r + c;
+        }
+        let k = kd as i32;
+        let scale = f32::from_bits(((127 + k) as u32) << 23);
+        let e = q * scale;
+        ((e - 1.0) / (e + 1.0)).copysign(x)
+    }
+}
+
+/// In-place [`tanh_fast_f32`] over a block (8-wide on AVX2).
+pub fn tanh_block_f32(z: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if active() == Kernel::Avx2 {
+        // SAFETY: `active()` returned Avx2.
+        unsafe { avx2::tanh_block_f32(z) };
+        return;
+    }
+    for v in z {
+        *v = tanh_fast_f32(*v);
+    }
+}
+
+// ---------------------------------------------------------------------
+// f32-compute / f64-accumulate inference GEMM
+// ---------------------------------------------------------------------
+
+/// k-chunk depth of the f32 partial sums: products accumulate in f32
+/// for at most this many terms before the running total moves to f64.
+const KBLK_F32: usize = 16;
+
+/// Pack a row-major `nin x nout` f64 weight matrix (the [`Mlp`]
+/// storage layout) into f32 panels of 8 output columns, zero-padded:
+/// `wp[blk * nin * 8 + i * 8 + lane] = w[i * nout + blk * 8 + lane]`.
+/// Returns `(panels, nout_pad)`. Done once per layer when a serving
+/// session switches to f32 precision.
+///
+/// [`Mlp`]: crate::runtime::backend::native::Mlp
+pub fn pack_weights_f32(w: &[f64], nin: usize, nout: usize)
+    -> (Vec<f32>, usize) {
+    assert!(w.len() >= nin * nout);
+    let nout_pad = nout.div_ceil(8) * 8;
+    let mut wp = vec![0.0f32; nin * nout_pad];
+    for blk in 0..nout_pad / 8 {
+        for i in 0..nin {
+            for lane in 0..8 {
+                let j = blk * 8 + lane;
+                if j < nout {
+                    wp[blk * nin * 8 + i * 8 + lane] =
+                        w[i * nout + j] as f32;
+                }
+            }
+        }
+    }
+    (wp, nout_pad)
+}
+
+/// Mixed-precision layer product: `z[p, o] = sum_i a[p, i] * w[i, o]`
+/// with `a` f32 row-major `m x nin`, `wp` the [`pack_weights_f32`]
+/// panels, and `z` f64 row-major `m x nout_pad`. Products are f32
+/// (FMA on AVX2), partial sums stay f32 within [`KBLK_F32`]-deep
+/// k-chunks, and chunk totals accumulate in f64 — the
+/// "f32-compute / f64-accumulate" serving scheme. Measured end-to-end
+/// error of the f32 serve path: ~1.3e-6 relative (budget 1e-5).
+pub fn gemm_f32acc(
+    a: &[f32],
+    m: usize,
+    nin: usize,
+    wp: &[f32],
+    nout_pad: usize,
+    z: &mut [f64],
+) {
+    assert_eq!(nout_pad % 8, 0, "packed width must be a multiple of 8");
+    assert!(a.len() >= m * nin);
+    assert!(wp.len() >= nin * nout_pad);
+    assert!(z.len() >= m * nout_pad);
+    #[cfg(target_arch = "x86_64")]
+    if active() == Kernel::Avx2 {
+        // SAFETY: `active()` returned Avx2; lengths asserted above.
+        unsafe { avx2::gemm_f32acc(a, m, nin, wp, nout_pad, z) };
+        return;
+    }
+    for p in 0..m {
+        let arow = &a[p * nin..p * nin + nin];
+        for blk in 0..nout_pad / 8 {
+            let panel = &wp[blk * nin * 8..(blk + 1) * nin * 8];
+            let mut acc = [0.0f64; 8];
+            for c0 in (0..nin).step_by(KBLK_F32) {
+                let c1 = (c0 + KBLK_F32).min(nin);
+                let mut part = [0.0f32; 8];
+                for (i, &ai) in arow[c0..c1].iter().enumerate() {
+                    let wrow = &panel[(c0 + i) * 8..(c0 + i) * 8 + 8];
+                    for (s, &wv) in part.iter_mut().zip(wrow) {
+                        *s += ai * wv;
+                    }
+                }
+                for (d, &s) in acc.iter_mut().zip(&part) {
+                    *d += s as f64;
+                }
+            }
+            z[p * nout_pad + blk * 8..p * nout_pad + blk * 8 + 8]
+                .copy_from_slice(&acc);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2 implementations
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) use avx2::{block_kernel_avx2, gemv_notrans_avx2,
+                      gemv_trans_avx2};
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use super::{EXP_C, EXP_CF, KBLK_F32, LN2_HI, LN2_HI_F, LN2_LO,
+                LN2_LO_F, MAGIC, MAGIC_F, MR_AVX2, NR_AVX2, TANH_C,
+                TANH_CF};
+
+    /// AVX2 analogue of `gemm::block_kernel`: one packed `mc x kc` A
+    /// block against one packed (NR=12) `kc x nc` B block,
+    /// accumulating `alpha * product` into `C[ic.., jc..]`. Vectorized
+    /// multiply + add only — per-(i,j) the reduction order is exactly
+    /// the scalar kernel's, so results are bit-identical (FMA would
+    /// round differently; see the module docs).
+    ///
+    /// # Safety
+    /// Requires AVX2. `pa`/`pb` must hold full zero-padded panels
+    /// (`pb` 32-byte aligned — guaranteed by `GemmBufs`) and `c` the
+    /// `(ic + mc) x ldc` destination.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+    pub(crate) unsafe fn block_kernel_avx2(
+        pa: &[f64],
+        pb: &[f64],
+        mc: usize,
+        nc: usize,
+        kc: usize,
+        alpha: f64,
+        c: &mut [f64],
+        ic: usize,
+        jc: usize,
+        ldc: usize,
+    ) {
+        let alpha_v = _mm256_set1_pd(alpha);
+        for jr in (0..nc).step_by(NR_AVX2) {
+            let nr = NR_AVX2.min(nc - jr);
+            let bpan = pb.as_ptr().add(jr * kc);
+            for ir in (0..mc).step_by(MR_AVX2) {
+                let mr = MR_AVX2.min(mc - ir);
+                let apan = pa.as_ptr().add(ir * kc);
+                // 4 x 12 accumulator: 12 ymm + 3 B loads + 1 broadcast
+                let mut acc = [[_mm256_setzero_pd(); 3]; MR_AVX2];
+                for p in 0..kc {
+                    let b0 = _mm256_load_pd(bpan.add(p * NR_AVX2));
+                    let b1 = _mm256_load_pd(bpan.add(p * NR_AVX2 + 4));
+                    let b2 = _mm256_load_pd(bpan.add(p * NR_AVX2 + 8));
+                    for i in 0..MR_AVX2 {
+                        let ai = _mm256_broadcast_sd(
+                            &*apan.add(p * MR_AVX2 + i));
+                        acc[i][0] = _mm256_add_pd(
+                            acc[i][0], _mm256_mul_pd(ai, b0));
+                        acc[i][1] = _mm256_add_pd(
+                            acc[i][1], _mm256_mul_pd(ai, b1));
+                        acc[i][2] = _mm256_add_pd(
+                            acc[i][2], _mm256_mul_pd(ai, b2));
+                    }
+                }
+                if mr == MR_AVX2 && nr == NR_AVX2 {
+                    for i in 0..MR_AVX2 {
+                        let row = (ic + ir + i) * ldc + jc + jr;
+                        let cp = c.as_mut_ptr().add(row);
+                        for v in 0..3 {
+                            let cv = _mm256_loadu_pd(cp.add(4 * v));
+                            let cv = _mm256_add_pd(
+                                cv, _mm256_mul_pd(alpha_v, acc[i][v]));
+                            _mm256_storeu_pd(cp.add(4 * v), cv);
+                        }
+                    }
+                } else {
+                    // ragged edge: spill the tile, then the scalar
+                    // kernel's exact `c += alpha * acc` writes
+                    let mut tile = [0.0f64; MR_AVX2 * NR_AVX2];
+                    for i in 0..MR_AVX2 {
+                        for v in 0..3 {
+                            _mm256_storeu_pd(
+                                tile.as_mut_ptr()
+                                    .add(i * NR_AVX2 + 4 * v),
+                                acc[i][v],
+                            );
+                        }
+                    }
+                    for i in 0..mr {
+                        let row = (ic + ir + i) * ldc + jc + jr;
+                        for j in 0..nr {
+                            c[row + j] += alpha * tile[i * NR_AVX2 + j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// `y[i] += alpha * dot(A[i, :], x)`, 4 rows per accumulator with
+    /// one lane per row — each lane performs the scalar loop's exact
+    /// serial reduction, so results are bit-identical to it.
+    ///
+    /// # Safety
+    /// Requires AVX2; `a` is `m x n` row-major, `x` len >= n, `y` len
+    /// >= m.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn gemv_notrans_avx2(
+        m: usize,
+        n: usize,
+        alpha: f64,
+        a: &[f64],
+        x: &[f64],
+        y: &mut [f64],
+    ) {
+        let m4 = m - m % 4;
+        let ap = a.as_ptr();
+        let xp = x.as_ptr();
+        for i in (0..m4).step_by(4) {
+            let (r0, r1, r2, r3) = (
+                ap.add(i * n),
+                ap.add((i + 1) * n),
+                ap.add((i + 2) * n),
+                ap.add((i + 3) * n),
+            );
+            let mut acc = _mm256_setzero_pd();
+            for j in 0..n {
+                let av = _mm256_set_pd(
+                    *r3.add(j), *r2.add(j), *r1.add(j), *r0.add(j));
+                let xv = _mm256_broadcast_sd(&*xp.add(j));
+                acc = _mm256_add_pd(acc, _mm256_mul_pd(av, xv));
+            }
+            let mut t = [0.0f64; 4];
+            _mm256_storeu_pd(t.as_mut_ptr(), acc);
+            for (yi, &ti) in y[i..i + 4].iter_mut().zip(&t) {
+                *yi += alpha * ti;
+            }
+        }
+        for i in m4..m {
+            let row = &a[i * n..i * n + n];
+            let mut acc = 0.0;
+            for (&aj, &xj) in row.iter().zip(&x[..n]) {
+                acc += aj * xj;
+            }
+            y[i] += alpha * acc;
+        }
+    }
+
+    /// `y[j] += (alpha * x[i]) * A[i, j]` over rows i — vectorized
+    /// across the independent outputs j, preserving the scalar loop's
+    /// per-element order (and its skip of zero-scaled rows).
+    ///
+    /// # Safety
+    /// Requires AVX2; `a` is `m x n` row-major, `x` len >= m, `y` len
+    /// >= n.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn gemv_trans_avx2(
+        m: usize,
+        n: usize,
+        alpha: f64,
+        a: &[f64],
+        x: &[f64],
+        y: &mut [f64],
+    ) {
+        let n4 = n - n % 4;
+        for (i, &xi) in x.iter().enumerate().take(m) {
+            let s = alpha * xi;
+            if s == 0.0 {
+                continue;
+            }
+            let sv = _mm256_set1_pd(s);
+            let row = a.as_ptr().add(i * n);
+            let yp = y.as_mut_ptr();
+            for j in (0..n4).step_by(4) {
+                let yv = _mm256_loadu_pd(yp.add(j));
+                let av = _mm256_loadu_pd(row.add(j));
+                _mm256_storeu_pd(
+                    yp.add(j),
+                    _mm256_add_pd(yv, _mm256_mul_pd(sv, av)),
+                );
+            }
+            for j in n4..n {
+                y[j] += s * *row.add(j);
+            }
+        }
+    }
+
+    /// 4-lane vector body of [`super::tanh_accurate`] — identical
+    /// operation sequence, both branches computed and blended.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn tanh4(x: __m256d) -> __m256d {
+        let sign_mask = _mm256_set1_pd(-0.0);
+        let ax = _mm256_andnot_pd(sign_mask, x);
+        let sgn = _mm256_and_pd(sign_mask, x);
+        // small branch: x + x * (x2 * P(x2))
+        let x2 = _mm256_mul_pd(x, x);
+        let mut p = _mm256_set1_pd(TANH_C[5]);
+        for &c in TANH_C[..5].iter().rev() {
+            p = _mm256_add_pd(_mm256_mul_pd(p, x2), _mm256_set1_pd(c));
+        }
+        let small =
+            _mm256_add_pd(x, _mm256_mul_pd(x, _mm256_mul_pd(x2, p)));
+        // exp branch: E = 2^k * Q(r), tanh = (E - 1) / (E + 1)
+        let y = _mm256_min_pd(
+            _mm256_mul_pd(_mm256_set1_pd(2.0), ax),
+            _mm256_set1_pd(40.0),
+        );
+        let t0 = _mm256_add_pd(
+            _mm256_mul_pd(y, _mm256_set1_pd(std::f64::consts::LOG2_E)),
+            _mm256_set1_pd(MAGIC),
+        );
+        let kd = _mm256_sub_pd(t0, _mm256_set1_pd(MAGIC));
+        let r = _mm256_sub_pd(
+            _mm256_sub_pd(y, _mm256_mul_pd(kd, _mm256_set1_pd(LN2_HI))),
+            _mm256_mul_pd(kd, _mm256_set1_pd(LN2_LO)),
+        );
+        let mut q = _mm256_set1_pd(EXP_C[13]);
+        for &c in EXP_C[..13].iter().rev() {
+            q = _mm256_add_pd(_mm256_mul_pd(q, r), _mm256_set1_pd(c));
+        }
+        // 2^k from the magic-biased mantissa: t0's low bits hold k
+        let ki = _mm256_castpd_si256(t0);
+        let scale = _mm256_castsi256_pd(_mm256_slli_epi64::<52>(
+            _mm256_add_epi64(ki, _mm256_set1_epi64x(1023)),
+        ));
+        let e = _mm256_mul_pd(q, scale);
+        let one = _mm256_set1_pd(1.0);
+        let t = _mm256_div_pd(_mm256_sub_pd(e, one),
+                              _mm256_add_pd(e, one));
+        let big = _mm256_or_pd(t, sgn);
+        let mask =
+            _mm256_cmp_pd::<_CMP_LT_OQ>(ax, _mm256_set1_pd(0.125));
+        _mm256_blendv_pd(big, small, mask)
+    }
+
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn tanh_block(z: &mut [f64]) {
+        let n4 = z.len() - z.len() % 4;
+        let zp = z.as_mut_ptr();
+        for o in (0..n4).step_by(4) {
+            let v = _mm256_loadu_pd(zp.add(o));
+            _mm256_storeu_pd(zp.add(o), tanh4(v));
+        }
+        for v in &mut z[n4..] {
+            *v = super::tanh_accurate(*v);
+        }
+    }
+
+    /// 8-lane vector body of [`super::tanh_fast_f32`] — identical
+    /// operation sequence (multiply + add, no FMA), so vector and
+    /// scalar f32 tanh agree bit-for-bit.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn tanh8_f32(x: __m256) -> __m256 {
+        let sign_mask = _mm256_set1_ps(-0.0);
+        let ax = _mm256_andnot_ps(sign_mask, x);
+        let sgn = _mm256_and_ps(sign_mask, x);
+        let x2 = _mm256_mul_ps(x, x);
+        let p = _mm256_add_ps(
+            _mm256_mul_ps(
+                _mm256_add_ps(
+                    _mm256_mul_ps(_mm256_set1_ps(TANH_CF[2]), x2),
+                    _mm256_set1_ps(TANH_CF[1]),
+                ),
+                x2,
+            ),
+            _mm256_set1_ps(TANH_CF[0]),
+        );
+        let small =
+            _mm256_add_ps(x, _mm256_mul_ps(x, _mm256_mul_ps(x2, p)));
+        let y = _mm256_min_ps(
+            _mm256_mul_ps(_mm256_set1_ps(2.0), ax),
+            _mm256_set1_ps(18.0),
+        );
+        let t0 = _mm256_add_ps(
+            _mm256_mul_ps(y, _mm256_set1_ps(std::f32::consts::LOG2_E)),
+            _mm256_set1_ps(MAGIC_F),
+        );
+        let kd = _mm256_sub_ps(t0, _mm256_set1_ps(MAGIC_F));
+        let r = _mm256_sub_ps(
+            _mm256_sub_ps(
+                y, _mm256_mul_ps(kd, _mm256_set1_ps(LN2_HI_F))),
+            _mm256_mul_ps(kd, _mm256_set1_ps(LN2_LO_F)),
+        );
+        let mut q = _mm256_set1_ps(EXP_CF[7]);
+        for &c in EXP_CF[..7].iter().rev() {
+            q = _mm256_add_ps(_mm256_mul_ps(q, r), _mm256_set1_ps(c));
+        }
+        let ki = _mm256_castps_si256(t0);
+        let scale = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(
+            _mm256_add_epi32(ki, _mm256_set1_epi32(127)),
+        ));
+        let e = _mm256_mul_ps(q, scale);
+        let one = _mm256_set1_ps(1.0);
+        let t = _mm256_div_ps(_mm256_sub_ps(e, one),
+                              _mm256_add_ps(e, one));
+        let big = _mm256_or_ps(t, sgn);
+        let mask =
+            _mm256_cmp_ps::<_CMP_LT_OQ>(ax, _mm256_set1_ps(0.125));
+        _mm256_blendv_ps(big, small, mask)
+    }
+
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn tanh_block_f32(z: &mut [f32]) {
+        let n8 = z.len() - z.len() % 8;
+        let zp = z.as_mut_ptr();
+        for o in (0..n8).step_by(8) {
+            let v = _mm256_loadu_ps(zp.add(o));
+            _mm256_storeu_ps(zp.add(o), tanh8_f32(v));
+        }
+        for v in &mut z[n8..] {
+            *v = super::tanh_fast_f32(*v);
+        }
+    }
+
+    /// AVX2 body of [`super::gemm_f32acc`]: 8-lane f32 FMA products,
+    /// f32 partial sums per 16-deep k-chunk, f64 chunk accumulation.
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA; slice lengths checked by the dispatcher.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn gemm_f32acc(
+        a: &[f32],
+        m: usize,
+        nin: usize,
+        wp: &[f32],
+        nout_pad: usize,
+        z: &mut [f64],
+    ) {
+        let ap = a.as_ptr();
+        let wpp = wp.as_ptr();
+        let zp = z.as_mut_ptr();
+        for p in 0..m {
+            let arow = ap.add(p * nin);
+            for blk in 0..nout_pad / 8 {
+                let panel = wpp.add(blk * nin * 8);
+                let mut lo = _mm256_setzero_pd();
+                let mut hi = _mm256_setzero_pd();
+                for c0 in (0..nin).step_by(KBLK_F32) {
+                    let c1 = (c0 + KBLK_F32).min(nin);
+                    let mut part = _mm256_setzero_ps();
+                    for i in c0..c1 {
+                        let av = _mm256_set1_ps(*arow.add(i));
+                        let wv = _mm256_loadu_ps(panel.add(i * 8));
+                        part = _mm256_fmadd_ps(av, wv, part);
+                    }
+                    lo = _mm256_add_pd(
+                        lo,
+                        _mm256_cvtps_pd(_mm256_castps256_ps128(part)),
+                    );
+                    hi = _mm256_add_pd(
+                        hi,
+                        _mm256_cvtps_pd(
+                            _mm256_extractf128_ps::<1>(part)),
+                    );
+                }
+                _mm256_storeu_pd(zp.add(p * nout_pad + blk * 8), lo);
+                _mm256_storeu_pd(zp.add(p * nout_pad + blk * 8 + 4),
+                                 hi);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn edge_values() -> Vec<f64> {
+        vec![
+            0.0, -0.0, 1e-300, -1e-300, 0.124999, 0.125, 0.1250001,
+            -0.125, 1.0, -1.0, 5.0, -5.0, 18.9, 19.1, -19.1, 40.0,
+            700.0, -700.0, 1e308, -1e308,
+        ]
+    }
+
+    #[test]
+    fn accurate_tanh_is_1e15_class_vs_libm() {
+        let mut rng = Rng::new(9);
+        let mut worst = 0.0f64;
+        let mut xs = edge_values();
+        for _ in 0..200_000 {
+            xs.push(rng.uniform_in(-25.0, 25.0));
+            xs.push(rng.uniform_in(-0.2, 0.2));
+        }
+        for x in xs {
+            let got = tanh_accurate(x);
+            let want = x.tanh();
+            let rel =
+                (got - want).abs() / want.abs().max(f64::MIN_POSITIVE);
+            assert!(
+                rel < 5e-15,
+                "tanh_accurate({x}) = {got}, libm {want} (rel {rel:e})"
+            );
+            worst = worst.max(rel);
+        }
+        assert!(worst < 5e-15);
+    }
+
+    #[test]
+    fn fast_f32_tanh_is_within_inference_budget() {
+        let mut rng = Rng::new(31);
+        for _ in 0..200_000 {
+            let x = rng.uniform_in(-12.0, 12.0) as f32;
+            let got = tanh_fast_f32(x) as f64;
+            let want = (x as f64).tanh();
+            let rel = (got - want).abs() / want.abs().max(1e-6);
+            assert!(
+                rel < 2e-6,
+                "tanh_fast_f32({x}) = {got}, want {want} (rel {rel:e})"
+            );
+        }
+    }
+
+    #[test]
+    fn vector_tanh_matches_scalar_transliteration_bitwise() {
+        if !simd_available() {
+            return; // no AVX2 on this machine: nothing to compare
+        }
+        let mut rng = Rng::new(77);
+        // odd length exercises the scalar remainder lane
+        let mut xs: Vec<f64> = edge_values();
+        for _ in 0..4093 {
+            xs.push(rng.uniform_in(-30.0, 30.0));
+        }
+        let mut v = xs.clone();
+        tanh_block(&mut v);
+        for (x, got) in xs.iter().zip(&v) {
+            let want = tanh_accurate(*x);
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "lane diverges from transliteration at x={x}"
+            );
+        }
+        // f32 variant: vector and scalar also agree bit-for-bit
+        let xf: Vec<f32> =
+            xs.iter().map(|&x| x as f32).collect();
+        let mut vf = xf.clone();
+        tanh_block_f32(&mut vf);
+        for (x, got) in xf.iter().zip(&vf) {
+            assert_eq!(got.to_bits(), tanh_fast_f32(*x).to_bits());
+        }
+    }
+
+    #[test]
+    fn scalar_fallback_tanh_block_is_libm() {
+        // the fallback must reproduce pre-SIMD trajectories exactly
+        if active() != Kernel::Scalar {
+            return;
+        }
+        let xs = [-3.0f64, -0.1, 0.0, 0.7, 11.0];
+        let mut v = xs;
+        tanh_block(&mut v);
+        for (x, got) in xs.iter().zip(&v) {
+            assert_eq!(got.to_bits(), x.tanh().to_bits());
+        }
+    }
+
+    #[test]
+    fn mixed_precision_gemm_stays_within_rel_err_bound() {
+        let mut rng = Rng::new(55);
+        for &(m, nin, nout) in
+            &[(1usize, 2usize, 30usize), (17, 30, 30), (64, 30, 1),
+              (9, 33, 7)]
+        {
+            let w: Vec<f64> = (0..nin * nout)
+                .map(|_| rng.uniform_in(-0.7, 0.7))
+                .collect();
+            let a64: Vec<f64> = (0..m * nin)
+                .map(|_| rng.uniform_in(-1.0, 1.0))
+                .collect();
+            let a32: Vec<f32> =
+                a64.iter().map(|&v| v as f32).collect();
+            let (wp, nout_pad) = pack_weights_f32(&w, nin, nout);
+            let mut z = vec![0.0f64; m * nout_pad];
+            gemm_f32acc(&a32, m, nin, &wp, nout_pad, &mut z);
+            for p in 0..m {
+                for j in 0..nout {
+                    let mut want = 0.0f64;
+                    for i in 0..nin {
+                        want += a64[p * nin + i] * w[i * nout + j];
+                    }
+                    let got = z[p * nout_pad + j];
+                    let err = (got - want).abs()
+                        / want.abs().max(nin as f64 * 0.5);
+                    assert!(
+                        err < 1e-5,
+                        "z[{p},{j}] = {got}, want {want} ({m}x{nin}\
+                         x{nout})"
+                    );
+                }
+                for j in nout..nout_pad {
+                    assert_eq!(z[p * nout_pad + j], 0.0,
+                               "padding lanes must stay zero");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_name_matches_active_kernel() {
+        match active() {
+            Kernel::Avx2 => assert_eq!(kernel_name(), "avx2_4x12"),
+            Kernel::Scalar => assert_eq!(kernel_name(), "scalar_4x8"),
+        }
+    }
+}

@@ -95,6 +95,7 @@ repro — FastVPINNs coordinator
               (xla backend: --artifact NAME [--artifacts DIR])
   repro infer --ckpt F.ckpt [--points F.csv | --grid N | --quad]
               [--out pred.csv|pred.vtk] [--batch N]
+              [--precision f64|f32]
   repro bench [--backend native] [--quick] [--iters N] [--warmup N]
               [--nt1d N] [--nq1d N] [--out BENCH_native_step.json]
   repro artifacts [--artifacts DIR]              (requires --features xla)
@@ -166,9 +167,11 @@ fn parse_layers(spec: &str) -> Result<Vec<usize>> {
 fn cmd_bench(args: &Args) -> Result<()> {
     use fastvpinns::experiments::common::{
         native_forward_step_case, native_infer_case,
-        native_inverse_space_step_case, native_step_case, StepBenchCase,
-        STD_LAYERS,
+        native_inverse_space_step_case, native_probe_loss,
+        native_step_case, StepBenchCase, STD_LAYERS,
     };
+    use fastvpinns::linalg::simd;
+    use fastvpinns::runtime::infer::Precision;
     use fastvpinns::util::json::Json;
 
     let backend = args.str_or("backend", "native");
@@ -213,6 +216,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
             ("dof", Json::num(case.dof as f64)),
             // effective worker count (clamped to ne), not machine cores
             ("threads", Json::num(case.threads as f64)),
+            // kernel the case actually ran on (the forced-scalar
+            // parity case records "scalar_4x8" here)
+            ("kernel", Json::str(case.kernel)),
             ("median_ms", Json::num(s.median)),
             ("p90_ms", Json::num(s.p90)),
             ("min_ms", Json::num(s.min)),
@@ -285,28 +291,103 @@ fn cmd_bench(args: &Args) -> Result<()> {
             tab.summary.median, k_ref * k_ref
         );
     }
+    // simd-vs-scalar parity guard (the hoisting guard's sibling): the
+    // same case re-timed on the forced scalar kernel, plus a
+    // short-training numeric probe on both kernels. The f64 GEMM/GEMV
+    // kernels are bit-identical and the vector tanh is 1e-15-class, so
+    // any probe-loss drift past 1e-6 relative means a broken kernel —
+    // and a SIMD median behind the scalar one means the dispatch is
+    // selecting a kernel that loses to its own fallback.
+    if simd::simd_available() {
+        let loss_simd = native_probe_loss(8, nt1d, nq1d, 5)?;
+        simd::set_force_scalar(true);
+        let scalar_res = (|| -> Result<(StepBenchCase, f64)> {
+            let c = native_step_case(k_ref, nt1d, nq1d, h_iters,
+                                     h_warmup)?;
+            let l = native_probe_loss(8, nt1d, nq1d, 5)?;
+            Ok((c, l))
+        })();
+        simd::set_force_scalar(false);
+        let (mut scalar_case, loss_scalar) = scalar_res?;
+        let mut simd_median = base.summary.median;
+        let mut sratio = simd_median / scalar_case.summary.median;
+        if sratio > 1.0 {
+            // same retry policy as the hoisting guard: min-of-medians
+            // over one re-measurement absorbs noisy-neighbor spikes; a
+            // genuinely slower SIMD kernel stays slower
+            let b2 =
+                native_step_case(k_ref, nt1d, nq1d, h_iters, h_warmup)?;
+            simd_median = simd_median.min(b2.summary.median);
+            simd::set_force_scalar(true);
+            let s2 = native_step_case(k_ref, nt1d, nq1d, h_iters,
+                                      h_warmup);
+            simd::set_force_scalar(false);
+            let s2 = s2?;
+            if s2.summary.median < scalar_case.summary.median {
+                scalar_case = s2;
+            }
+            sratio = simd_median / scalar_case.summary.median;
+        }
+        push_case(&scalar_case);
+        let drift =
+            (loss_simd - loss_scalar).abs() / (1.0 + loss_scalar.abs());
+        println!(
+            "  simd parity: {} / scalar median ratio {sratio:.3} at \
+             ne={}, probe-loss drift {drift:.2e}",
+            simd::kernel_name(), k_ref * k_ref
+        );
+        if drift > 1e-6 {
+            bail!(
+                "simd kernel diverges numerically from the scalar \
+                 ground truth: probe losses {loss_simd} vs \
+                 {loss_scalar} (rel drift {drift:.2e} > 1e-6)"
+            );
+        }
+        if sratio > 1.02 {
+            bail!(
+                "simd kernel ({}) is {:.1}% slower than the scalar \
+                 fallback it replaces at ne={} ({:.3} ms vs {:.3} ms): \
+                 the dispatch should not select a losing kernel",
+                simd::kernel_name(), (sratio - 1.0) * 100.0,
+                k_ref * k_ref, simd_median, scalar_case.summary.median
+            );
+        }
+    } else {
+        println!(
+            "  simd parity: skipped (kernel {} — no AVX2 or \
+             REPRO_FORCE_SCALAR set)",
+            simd::kernel_name()
+        );
+    }
     // inference throughput: repeated passes over a 4096-point query
     // cloud through the blocked prediction path, at serving batch
-    // sizes — the amortized-inference datapoint `repro infer` serves
-    for &batch in &[1usize, 256, 4096] {
-        let c = native_infer_case(batch, 4096, iters, warmup)?;
-        println!(
-            "  {:<14} {:<17} batch={:<6} ({:>7} points)   median \
-             {:>9.3} ms/pass  {:>12.0} points/s",
-            "infer", "mlp_predict", c.batch, c.n_points,
-            c.summary.median, c.points_per_sec
-        );
-        cases.push(Json::obj(vec![
-            ("loss", Json::str("infer")),
-            ("pde", Json::str("mlp_predict")),
-            ("batch", Json::num(c.batch as f64)),
-            ("n_points", Json::num(c.n_points as f64)),
-            ("median_ms", Json::num(c.summary.median)),
-            ("p90_ms", Json::num(c.summary.p90)),
-            ("min_ms", Json::num(c.summary.min)),
-            ("mean_ms", Json::num(c.summary.mean)),
-            ("points_per_sec", Json::num(c.points_per_sec)),
-        ]));
+    // sizes and both precisions — the amortized-inference datapoints
+    // `repro infer` serves (`--precision f32` is the mixed-precision
+    // path)
+    for &precision in &[Precision::F64, Precision::F32] {
+        for &batch in &[1usize, 256, 4096] {
+            let c =
+                native_infer_case(batch, 4096, iters, warmup, precision)?;
+            println!(
+                "  {:<14} {:<17} batch={:<6} ({:>7} points)   median \
+                 {:>9.3} ms/pass  {:>12.0} points/s  [{}]",
+                "infer", "mlp_predict", c.batch, c.n_points,
+                c.summary.median, c.points_per_sec, c.precision
+            );
+            cases.push(Json::obj(vec![
+                ("loss", Json::str("infer")),
+                ("pde", Json::str("mlp_predict")),
+                ("batch", Json::num(c.batch as f64)),
+                ("n_points", Json::num(c.n_points as f64)),
+                ("kernel", Json::str(c.kernel)),
+                ("precision", Json::str(c.precision)),
+                ("median_ms", Json::num(c.summary.median)),
+                ("p90_ms", Json::num(c.summary.p90)),
+                ("min_ms", Json::num(c.summary.min)),
+                ("mean_ms", Json::num(c.summary.mean)),
+                ("points_per_sec", Json::num(c.points_per_sec)),
+            ]));
+        }
     }
     let doc = Json::obj(vec![
         ("bench", Json::str("native_step")),
@@ -320,6 +401,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
         ("warmup", Json::num(warmup as f64)),
         ("threads", Json::num(threads as f64)),
         ("quick", Json::Bool(quick)),
+        // CPU feature probe + the kernel the run selected: makes perf
+        // records comparable across machines and CI legs
+        ("kernel", Json::str(simd::kernel_name())),
+        ("cpu_avx2", Json::Bool(simd::cpu_avx2())),
+        ("cpu_fma", Json::Bool(simd::cpu_fma())),
         ("cases", Json::Arr(cases)),
     ]);
     std::fs::write(&out_path, format!("{doc}\n"))?;
@@ -747,14 +833,18 @@ fn quad_points_for(
 /// streaming CSV (or writing VTK) output.
 fn cmd_infer(args: &Args) -> Result<()> {
     use fastvpinns::runtime::checkpoint::{hash_f32_bits, Checkpoint};
-    use fastvpinns::runtime::infer::InferenceSession;
+    use fastvpinns::runtime::infer::{InferenceSession, Precision};
     use fastvpinns::util::csv::CsvWriter;
 
     let path = args.req_str("ckpt")?;
     let ck = Checkpoint::read(&path)?;
     let mut sess = InferenceSession::from_checkpoint(&ck)?;
+    let precision: Precision =
+        args.str_or("precision", "f64").parse()?;
+    sess.set_precision(precision);
     println!(
-        "loaded {path}: problem '{}' ({}), loss {}, net {:?}{}, step {}",
+        "loaded {path}: problem '{}' ({}), loss {}, net {:?}{}, step \
+         {}, serving {precision}",
         if ck.problem.is_empty() {
             "<manual export>"
         } else {
@@ -763,6 +853,13 @@ fn cmd_infer(args: &Args) -> Result<()> {
         ck.problem_label, ck.loss_kind, ck.layers,
         if ck.two_head { " + eps head" } else { "" }, ck.step
     );
+    if precision == Precision::F32 {
+        println!(
+            "note: --precision f32 serves the mixed-precision path \
+             (rel err < 1e-5 vs f64); the u hash below will differ \
+             from the exporting trainer's"
+        );
+    }
 
     let pts: Vec<[f64; 2]> = if let Some(f) = args.flag("points") {
         read_points_csv(f)?

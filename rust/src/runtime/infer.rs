@@ -19,13 +19,170 @@
 //! query traffic performs no per-batch setup beyond the output
 //! vectors. `repro bench` tracks the resulting throughput (points/sec
 //! at batch sizes 1, 256 and 4096).
+//!
+//! Sessions serve at two precisions ([`Precision`]): the default f64
+//! path above, and an opt-in f32-compute / f64-accumulate path
+//! (`--precision f32` on the CLI) that packs the checkpoint's f64
+//! weights once into f32 panels and runs blocks through
+//! [`simd::gemm_f32acc`] + the fast f32 tanh. The checkpoint itself
+//! always stays f64; the f32 path trades bit identity for throughput
+//! under a tested relative-error budget of `1e-5` on the u head.
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
-use super::backend::native::{EvalScratch, Mlp};
+use super::backend::native::{softplus, EvalScratch, Mlp};
 use super::checkpoint::Checkpoint;
+use crate::linalg::simd;
+
+/// Serving precision of an [`InferenceSession`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full f64 forward — bit-identical to the exporting backend.
+    #[default]
+    F64,
+    /// f32-compute / f64-accumulate forward: f32 weight panels, FMA
+    /// products, f64 chunk accumulation, fast f32 tanh. Max relative
+    /// error vs the f64 path is budgeted (and tested) at `1e-5` on a
+    /// 4096-point cloud.
+    F32,
+}
+
+impl std::str::FromStr for Precision {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Precision> {
+        match s {
+            "f64" => Ok(Precision::F64),
+            "f32" => Ok(Precision::F32),
+            _ => Err(anyhow!(
+                "unknown precision {s:?} (expected \"f64\" or \"f32\")"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        })
+    }
+}
+
+/// Points per mixed-precision forward block (same order as the f64
+/// path's eval block: activations stay cache-resident).
+const F32_BLOCK: usize = 512;
+
+/// One packed weight stage of the mixed-precision forward.
+struct F32Stage {
+    nin: usize,
+    nout: usize,
+    nout_pad: usize,
+    /// [`simd::pack_weights_f32`] panels of 8 output columns.
+    wp: Vec<f32>,
+    /// Bias stays f64: added to the f64-accumulated pre-activation
+    /// before the cast back to f32.
+    bias: Vec<f64>,
+}
+
+/// The f32-compute / f64-accumulate forward evaluator: an [`Mlp`]'s
+/// weights packed once into f32 panels, plus reusable f32 activation
+/// and f64 pre-activation scratch. Built lazily on the first
+/// [`InferenceSession::set_precision`]`(F32)`.
+pub struct F32Evaluator {
+    stages: Vec<F32Stage>,
+    /// `(panels, nout_pad, bias)` of the eps head, when two-head.
+    eps: Option<(Vec<f32>, usize, f64)>,
+    a: Vec<f32>,
+    nxt: Vec<f32>,
+    z: Vec<f64>,
+}
+
+impl F32Evaluator {
+    /// Pack a network's weights for mixed-precision serving (one-time
+    /// cost; the source network stays f64 and untouched).
+    pub fn from_mlp(net: &Mlp) -> F32Evaluator {
+        let n_stages = net.layers.len() - 1;
+        let mut stages = Vec::with_capacity(n_stages);
+        let mut pad_max = 8;
+        for l in 0..n_stages {
+            let (nin, nout) = (net.layers[l], net.layers[l + 1]);
+            let (w, b) = net.stage_params(l);
+            let (wp, nout_pad) = simd::pack_weights_f32(w, nin, nout);
+            pad_max = pad_max.max(nout_pad);
+            stages.push(F32Stage {
+                nin,
+                nout,
+                nout_pad,
+                wp,
+                bias: b.to_vec(),
+            });
+        }
+        let eps = net.eps_params().map(|(we, be)| {
+            let nin = net.layers[n_stages - 1];
+            let (wp, nout_pad) = simd::pack_weights_f32(we, nin, 1);
+            (wp, nout_pad, be)
+        });
+        let wmax = net.layers.iter().copied().max().unwrap_or(2).max(2);
+        F32Evaluator {
+            stages,
+            eps,
+            a: vec![0.0; F32_BLOCK * wmax],
+            nxt: vec![0.0; F32_BLOCK * wmax],
+            z: vec![0.0; F32_BLOCK * pad_max],
+        }
+    }
+
+    /// Mixed-precision analogue of [`Mlp::eval_heads`]: `(u, eps)`
+    /// with `eps = Some(field)` for two-head networks. The eps head
+    /// applies the same f64 softplus as training, on the
+    /// f64-accumulated pre-activation.
+    pub fn eval_heads(&mut self, points: &[[f64; 2]])
+        -> (Vec<f32>, Option<Vec<f32>>) {
+        let last = self.stages.len() - 1;
+        let mut out = Vec::with_capacity(points.len());
+        let mut out_eps =
+            self.eps.as_ref().map(|_| Vec::with_capacity(points.len()));
+        for chunk in points.chunks(F32_BLOCK) {
+            let n = chunk.len();
+            for (p, pt) in chunk.iter().enumerate() {
+                self.a[2 * p] = pt[0] as f32;
+                self.a[2 * p + 1] = pt[1] as f32;
+            }
+            for st in &self.stages[..last] {
+                simd::gemm_f32acc(&self.a[..n * st.nin], n, st.nin,
+                                  &st.wp, st.nout_pad, &mut self.z);
+                for p in 0..n {
+                    for (j, &bj) in st.bias.iter().enumerate() {
+                        self.nxt[p * st.nout + j] =
+                            (self.z[p * st.nout_pad + j] + bj) as f32;
+                    }
+                }
+                simd::tanh_block_f32(&mut self.nxt[..n * st.nout]);
+                std::mem::swap(&mut self.a, &mut self.nxt);
+            }
+            let st = &self.stages[last];
+            simd::gemm_f32acc(&self.a[..n * st.nin], n, st.nin, &st.wp,
+                              st.nout_pad, &mut self.z);
+            let bu = st.bias[0];
+            out.extend(
+                (0..n).map(|p| (self.z[p * st.nout_pad] + bu) as f32));
+            if let (Some((wp, pad, be)), Some(oe)) =
+                (self.eps.as_ref(), out_eps.as_mut())
+            {
+                simd::gemm_f32acc(&self.a[..n * st.nin], n, st.nin, wp,
+                                  *pad, &mut self.z);
+                oe.extend((0..n).map(|p| {
+                    softplus(self.z[p * pad] + be) as f32
+                }));
+            }
+        }
+        (out, out_eps)
+    }
+}
 
 /// A loaded model ready to answer batched point queries. Build with
 /// [`InferenceSession::open`] (from a file) or
@@ -33,6 +190,9 @@ use super::checkpoint::Checkpoint;
 pub struct InferenceSession {
     net: Mlp,
     scratch: EvalScratch,
+    precision: Precision,
+    /// Packed mixed-precision evaluator, built on first use.
+    f32eval: Option<F32Evaluator>,
     /// Registry problem id from the artifact ("" for manual exports).
     pub problem: String,
     /// Problem instance label (e.g. `helmholtz_k6.283`).
@@ -57,6 +217,8 @@ impl InferenceSession {
         Ok(InferenceSession {
             net,
             scratch,
+            precision: Precision::F64,
+            f32eval: None,
             problem: ck.problem.clone(),
             problem_label: ck.problem_label.clone(),
             loss_kind: ck.loss_kind.clone(),
@@ -81,13 +243,39 @@ impl InferenceSession {
         &self.net
     }
 
+    /// The serving precision currently in effect.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Switch serving precision. The first switch to [`Precision::F32`]
+    /// packs the f64 weights into f32 panels (one-time cost, kept for
+    /// the session's lifetime); switching back to [`Precision::F64`]
+    /// restores the bit-identical path. The checkpoint parameters are
+    /// never modified.
+    pub fn set_precision(&mut self, p: Precision) {
+        if p == Precision::F32 && self.f32eval.is_none() {
+            self.f32eval = Some(F32Evaluator::from_mlp(&self.net));
+        }
+        self.precision = p;
+    }
+
     /// Evaluate the model over a query point cloud: `(u, eps)` with
     /// `eps = Some(field)` for two-head models. Batched through the
     /// blocked-GEMM forward path; reuses the session's scratch, so
     /// repeated calls allocate only the output vectors.
     pub fn eval(&mut self, points: &[[f64; 2]])
         -> (Vec<f32>, Option<Vec<f32>>) {
-        self.net.eval_heads_with(points, &mut self.scratch)
+        match self.precision {
+            Precision::F64 => {
+                self.net.eval_heads_with(points, &mut self.scratch)
+            }
+            Precision::F32 => self
+                .f32eval
+                .as_mut()
+                .expect("set_precision(F32) packs the evaluator")
+                .eval_heads(points),
+        }
     }
 
     /// [`InferenceSession::eval`], u head only.
@@ -151,5 +339,68 @@ mod tests {
         // repeated queries reuse the scratch and stay identical
         let (u2, _) = sess.eval(&pts);
         assert_eq!(u, u2);
+        // f32 serving: bounded drift on both heads, then switching
+        // back to f64 restores bit identity
+        sess.set_precision(Precision::F32);
+        assert_eq!(sess.precision(), Precision::F32);
+        let (u32v, eps32) = sess.eval(&pts);
+        let eps = eps.unwrap();
+        let eps32 = eps32.unwrap();
+        let scale_u = u
+            .iter()
+            .fold(0.0f64, |m, &v| m.max((v as f64).abs()))
+            .max(1e-12);
+        let scale_e = eps
+            .iter()
+            .fold(0.0f64, |m, &v| m.max((v as f64).abs()))
+            .max(1e-12);
+        for (a, b) in u.iter().zip(&u32v) {
+            let err = ((*a as f64) - (*b as f64)).abs() / scale_u;
+            assert!(err < 1e-5, "u drift {err:e} over budget");
+        }
+        for (a, b) in eps.iter().zip(&eps32) {
+            let err = ((*a as f64) - (*b as f64)).abs() / scale_e;
+            assert!(err < 1e-5, "eps drift {err:e} over budget");
+        }
+        sess.set_precision(Precision::F64);
+        let (u3, _) = sess.eval(&pts);
+        assert_eq!(u, u3, "f64 path must stay bit-identical");
+    }
+
+    #[test]
+    fn f32_path_stays_within_rel_err_budget_on_std_net() {
+        // The acceptance-criteria bound: max rel err < 1e-5 on a
+        // 4096-point cloud through the paper's standard [2,30,30,30,1]
+        // network (prototype-measured ~1.3e-6; see
+        // python/proto_simd_tanh.py).
+        let net = Mlp::glorot(&[2, 30, 30, 30, 1], 42).unwrap();
+        let mut ev = F32Evaluator::from_mlp(&net);
+        let pts: Vec<[f64; 2]> = (0..4096)
+            .map(|i| {
+                let s = i as f64 / 4095.0;
+                [s, (0.7 + 2.3 * s).fract()]
+            })
+            .collect();
+        let (u_ref, _) = net.eval_heads(&pts);
+        let (u_32, none) = ev.eval_heads(&pts);
+        assert!(none.is_none(), "single-head net grew an eps head");
+        let scale = u_ref
+            .iter()
+            .fold(0.0f64, |m, &v| m.max((v as f64).abs()))
+            .max(1e-12);
+        let mut worst = 0.0f64;
+        for (a, b) in u_ref.iter().zip(&u_32) {
+            worst = worst.max(((*a as f64) - (*b as f64)).abs() / scale);
+        }
+        assert!(worst < 1e-5, "max rel err {worst:e} over the budget");
+    }
+
+    #[test]
+    fn precision_parses_and_displays() {
+        assert_eq!("f64".parse::<Precision>().unwrap(), Precision::F64);
+        assert_eq!("f32".parse::<Precision>().unwrap(), Precision::F32);
+        assert!("f16".parse::<Precision>().is_err());
+        assert_eq!(Precision::F32.to_string(), "f32");
+        assert_eq!(Precision::default(), Precision::F64);
     }
 }
