@@ -567,9 +567,12 @@ impl Checkpoint {
         })
     }
 
-    /// Serialize and write the artifact to `path`.
+    /// Serialize and write the artifact to `path` atomically (see
+    /// [`write_atomic`]): a reader of `path` — including a `--resume`
+    /// after a crash — observes either the previous artifact or this
+    /// one, never a torn mix.
     pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
-        std::fs::write(path.as_ref(), self.to_bytes()).with_context(
+        write_atomic(path.as_ref(), &self.to_bytes()).with_context(
             || format!("write checkpoint {}", path.as_ref().display()),
         )
     }
@@ -583,6 +586,60 @@ impl Checkpoint {
             format!("load checkpoint {}", path.as_ref().display())
         })
     }
+}
+
+/// Write `bytes` to `path` atomically: the data goes to a unique
+/// sibling temp file (`<name>.tmp.<pid>` in the same directory, so the
+/// final rename cannot cross a filesystem boundary), is flushed to
+/// stable storage with `fsync`, and is then renamed over `path`. On
+/// Unix the parent directory is fsynced afterwards so the rename
+/// itself survives a power cut. A crash at any point leaves `path`
+/// either untouched or holding the complete new artifact — never a
+/// torn prefix. The temp file is removed on error.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
+
+    let file_name = path.file_name().with_context(|| {
+        format!("path {} has no file name", path.display())
+    })?;
+    let mut tmp_name = file_name.to_os_string();
+    tmp_name.push(format!(".tmp.{}", std::process::id()));
+    let tmp = path.with_file_name(tmp_name);
+
+    let staged = (|| -> Result<()> {
+        let mut f = std::fs::File::create(&tmp).with_context(|| {
+            format!("create temp file {}", tmp.display())
+        })?;
+        f.write_all(bytes)
+            .with_context(|| format!("write {}", tmp.display()))?;
+        // Data must be durable BEFORE the rename publishes it: a
+        // rename of an unsynced file can survive a crash while its
+        // contents do not, which is exactly the torn artifact the
+        // temp-file dance exists to rule out.
+        f.sync_all()
+            .with_context(|| format!("fsync {}", tmp.display()))?;
+        drop(f);
+        std::fs::rename(&tmp, path).with_context(|| {
+            format!("rename {} -> {}", tmp.display(), path.display())
+        })
+    })();
+    if staged.is_err() {
+        std::fs::remove_file(&tmp).ok();
+        return staged;
+    }
+
+    // Best-effort: persist the directory entry for the rename. Not
+    // all filesystems allow opening a directory for sync, so failures
+    // here are ignored rather than failing an already-visible write.
+    #[cfg(unix)]
+    if let Some(dir) =
+        path.parent().filter(|d| !d.as_os_str().is_empty())
+    {
+        if let Ok(d) = std::fs::File::open(dir) {
+            d.sync_all().ok();
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -661,6 +718,45 @@ mod tests {
         let back = Checkpoint::read(&p).unwrap();
         std::fs::remove_file(&p).ok();
         assert_eq!(back, ck);
+    }
+
+    #[test]
+    fn write_replaces_existing_file_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join(format!(
+            "fastvpinns_ckpt_atomic_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model.ckpt");
+        let ck = sample();
+        ck.write(&p).unwrap();
+        // overwrite with a different (longer) artifact: the rename
+        // must fully replace the old bytes, not append or tear
+        let mut ck2 = sample();
+        ck2.form.c =
+            Coeff::Table((0..57).map(|i| i as f64).collect());
+        ck2.write(&p).unwrap();
+        assert_eq!(Checkpoint::read(&p).unwrap(), ck2);
+        // no .tmp droppings next to the artifact
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name())
+            .filter(|n| n.to_string_lossy().contains(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_to_missing_directory_fails_without_droppings() {
+        let p = std::env::temp_dir()
+            .join(format!("no_such_dir_{}", std::process::id()))
+            .join("model.ckpt");
+        let err = sample().write(&p).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("write checkpoint"),
+            "{err:#}"
+        );
     }
 
     #[test]
