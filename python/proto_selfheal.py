@@ -1,0 +1,313 @@
+"""Exact-seed replay of the self-healing recovery protocol.
+
+The chaos tier injects `grad.nan@500` into real CLI train runs and
+asserts recovery. This script sizes those assertions offline, the
+same way the e2e accuracy bars were sized (proto_rust_seed_check.py):
+it replays the runs at the *exact* Rust init seeds (bit-ported RNG /
+Glorot / boundary sampler) with the coordinator's recovery protocol
+transliterated line by line —
+
+- snapshot (theta copy + step) every `snapshot_every = 50` clean
+  steps,
+- at step 500 the gradient is NaN-poisoned *before* the Adam update
+  (exactly like the failpoint: loss, m, v and theta all go NaN),
+- the sentinel sees the non-finite loss and rolls back: restore the
+  step-450 snapshot, **zero the Adam moments**, multiply the LR scale
+  by `lr_backoff = 0.5`, rewind the step counter and replay,
+- after `lr_restore_after = 500` consecutive clean steps since the
+  rollback the LR scale is annealed back to 1.0 (the backoff is
+  transient, not a permanent tax on the rest of the run),
+- Adam bias correction keeps using the *global* step index (the Rust
+  backend's `step` argument), so the post-reset transient is
+  reproduced faithfully.
+
+Only floating-point summation order differs from Rust (numpy dots vs
+blocked GEMMs) — trajectories are chaotic over 1e4 iters, so this
+validates the *basin*, not the bits. Measured families (rel-L2 at
+the end of the default budget, across exact Rust init seeds):
+
+- poisson_sin (constant lr 5e-3, 5000 iters): clean
+  {42: 4.1e-2, 43: 2.3e-2, 44: 3.3e-2}; healed (permanent backoff)
+  {42: 2.2e-2, 43: 5.1e-2, 44: 2.3e-2}; at 8000 iters
+  {42: 5.4e-2, 43: 2.9e-2, 44: 1.6e-2}. The constant rate leaves an
+  endgame wander floor of ~1.5e-2..5.4e-2 (clean AND healed draws
+  are interleaved — the fault is not what moves the number), plus a
+  chaotic saddle-escape time; poisson_sin can NOT robustly assert
+  1e-2, so its chaos scenario uses a 1e-1 convergence-sanity bar
+  (2x margin over the worst family draw, while a dead run sits at
+  rel-L2 ~ 1 or NaN).
+- helmholtz (ExpDecay 5e-3 x0.7/1500, 12000 iters; clean bar sized
+  in proto_varform.py at 6.4e-3 / 7.8e-3 for seeds 42/1): healed
+  with a *permanent* 0.5 backoff {42: 7.1e-3, 1: 1.02e-2} — seed 1
+  is OVER the 1e-2 bar (0.8 backoff is no better: 9.5e-3 / 1.06e-2);
+  healed with the backoff + anneal {42: 4.6e-3, 1: 6.9e-3,
+  7: 6.5e-3} — back inside the clean family. The anneal is what
+  makes "a healed run still meets the existing acceptance bar" a
+  robust claim, and helmholtz is where the chaos tier asserts it.
+
+Also checked: the lr-backoff bookkeeping (scale sequence 1.0, 0.5,
+0.25, ... per recovery; budget exhaustion on the (max+1)-th event;
+anneal restores the scale after exactly `lr_restore_after` clean
+steps) and that a rollback restores the snapshot parameters
+bit-for-bit.
+
+Run:  python3 python/proto_selfheal.py      (~4 min)
+"""
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "python/compile")
+from fem_py import assembly, mesh as pmesh  # noqa: E402
+
+import proto_two_head as proto  # noqa: E402
+import proto_varform as varform  # noqa: E402
+from proto_rust_seed_check import (  # noqa: E402
+    compute_boundary, eval_grid, rust_net, sample_boundary,
+)
+
+OMEGA = 2.0 * np.pi
+SNAPSHOT_EVERY = 50
+LR_BACKOFF = 0.5
+LR_RESTORE_AFTER = 500
+MAX_RECOVERIES = 3
+FAIL_AT = 500
+
+
+def u_exact(x, y):
+    return np.sin(OMEGA * x) * np.sin(OMEGA * y)
+
+
+def build_poisson():
+    """poisson_sin at the CLI defaults: n=4, nt1d=5, nq1d=10, nb=400."""
+    pts, cells = pmesh.unit_square(4)
+    dom = assembly.assemble(pts, cells, 5, 10)
+    x = dom.quad_xy[:, 0].reshape(dom.n_elem, dom.n_quad)
+    y = dom.quad_xy[:, 1].reshape(dom.n_elem, dom.n_quad)
+    # -lap u = f with u = sin(wx) sin(wy)  =>  f = 2 w^2 u
+    fmat = np.einsum("ejq,eq->ej", dom.v,
+                     2.0 * OMEGA * OMEGA * u_exact(x, y))
+    edges = compute_boundary(pts, cells)
+    bd = sample_boundary(pts, edges, 400)
+    bd_u = u_exact(bd[:, 0], bd[:, 1])
+    # forward problem: eps fixed at 1, no sensors (one dummy point at
+    # gamma = 0 keeps the Objective's mean well-defined)
+    sp = np.array([[0.5, 0.5]])
+    s_u = u_exact(sp[:, 0], sp[:, 1])
+    return proto.Objective(dom, fmat, bd, bd_u, sp, s_u, mode="const",
+                           eps_const=1.0, tau=10.0, gamma=0.0)
+
+
+def build_helmholtz():
+    """helmholtz at the registry defaults: k=2pi on unit_square(2),
+    nt1d=5, nq1d=10, nb=400 via the RustRng boundary-sampler port."""
+    k = 2.0 * np.pi
+    obj, u = varform.build_helmholtz(k, n=2, nt1d=5, nq1d=10, nb=400)
+    pts, cells = pmesh.unit_square(2)
+    edges = compute_boundary(pts, cells)
+    bd = sample_boundary(pts, edges, 400)
+    obj.bd_pts = bd
+    obj.bd_u = u(bd[:, 0], bd[:, 1])
+    return obj, u
+
+
+def rel_l2(net, exact):
+    """rel-L2 on the 100x100 grid the CLI --expect-rel-l2 gate uses."""
+    grid = eval_grid(100, 100, 0.0, 0.0, 1.0, 1.0)
+    u, _, _, _, _ = net.forward(grid)
+    ref = exact(grid[:, 0], grid[:, 1])
+    return np.sqrt(((u - ref) ** 2).sum() / (ref ** 2).sum())
+
+
+def train_selfheal(obj, net, iters, lr_fn, fail_at=None,
+                   lr_restore_after=LR_RESTORE_AFTER, log_every=2000):
+    """The coordinator's run() loop, transliterated.
+
+    `lr_fn(step)` is the base schedule (the recovery scale multiplies
+    it). Returns (recoveries, lr_scale, restored_at) where recoveries
+    is a list of (at_step, rollback_to, lr_scale_after) and
+    restored_at lists the steps where the anneal fired.
+    """
+    theta = net.flat()
+    m = np.zeros_like(theta)
+    v = np.zeros_like(theta)
+    b1, b2, ae = 0.9, 0.999, 1e-8
+    lr_scale = 1.0
+    snap = (theta.copy(), 0)  # run-start snapshot
+    recoveries = []
+    restored_at = []
+    last_rollback = None
+    step = 0
+    while step < iters:
+        step += 1
+        loss, g, _ge, _parts = obj.loss_and_grad(net)
+        if step == fail_at and not any(r[0] == fail_at
+                                       for r in recoveries):
+            # the grad.nan failpoint: poison before Adam; hit counters
+            # persist across the replay so it fires exactly once
+            g = np.full_like(g, np.nan)
+            loss = np.nan
+        # Adam with the global step index (the Rust backend signature)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        theta -= (lr_fn(step) * lr_scale) * (m / (1 - b1 ** step)) \
+            / (np.sqrt(v / (1 - b2 ** step)) + ae)
+        net.set_flat(theta)
+        # divergence sentinel + rollback
+        if not np.isfinite(loss):
+            assert len(recoveries) < MAX_RECOVERIES, \
+                "recovery budget exhausted"
+            theta = snap[0].copy()
+            m[:] = 0.0
+            v[:] = 0.0
+            lr_scale *= LR_BACKOFF
+            recoveries.append((step, snap[1], lr_scale))
+            print(f"    recovery[{len(recoveries)}/{MAX_RECOVERIES}]: "
+                  f"step {step} -> rolled back to {snap[1]}, "
+                  f"lr scale {lr_scale:.3e}")
+            last_rollback = snap[1]
+            step = snap[1]
+            net.set_flat(theta)
+            continue
+        # backoff anneal: sustained health restores the full rate
+        if last_rollback is not None and lr_restore_after > 0 \
+                and lr_scale < 1.0 \
+                and step - last_rollback >= lr_restore_after:
+            lr_scale = 1.0
+            last_rollback = None
+            restored_at.append(step)
+            print(f"    anneal: lr scale restored to 1.0 at step "
+                  f"{step}")
+        if step % SNAPSHOT_EVERY == 0:
+            snap = (theta.copy(), step)
+        if log_every and step % log_every == 0:
+            print(f"    it {step:5d} loss {loss:.4e}")
+    return recoveries, lr_scale, restored_at
+
+
+def check_backoff_bookkeeping():
+    """Scale sequence, budget exhaustion and anneal timing —
+    protocol-only (tiny net, synthetic divergence)."""
+    scale, events = 1.0, []
+    for _ in range(MAX_RECOVERIES):
+        scale *= LR_BACKOFF
+        events.append(scale)
+    assert events == [0.5, 0.25, 0.125]
+
+    # the (max+1)-th divergence must raise, not loop forever
+    class Sticky:
+        def loss_and_grad(self, net):
+            nan = np.full(net.flat().size, np.nan)
+            return np.nan, nan, 0.0, None
+
+    n = rust_net([2, 2, 1], 7, two_head=False)
+    failed = False
+    try:
+        train_selfheal(Sticky(), n, 20, lambda _t: 1e-3, log_every=0)
+    except AssertionError:
+        failed = True
+    assert failed, "sticky divergence did not exhaust the budget"
+
+    # one transient fault: rollback restores the snapshot bit-for-bit
+    # and the anneal fires after exactly lr_restore_after clean steps
+    class Transient:
+        def __init__(self):
+            self.calls = 0
+            self.seen = {}
+
+        def loss_and_grad(self, net):
+            self.calls += 1
+            self.seen[self.calls] = net.flat().copy()
+            if self.calls == 17:
+                nan = np.full(net.flat().size, np.nan)
+                return np.nan, nan, 0.0, None
+            return 1.0, np.full(net.flat().size, 1e-6), 0.0, None
+
+    n = rust_net([2, 2, 1], 7, two_head=False)
+    tr = Transient()
+    rec, scale, restored = train_selfheal(
+        tr, n, 80, lambda _t: 1e-3, lr_restore_after=5, log_every=0)
+    # fault at call 17 = step 17 -> the tiny run never reaches the
+    # step-50 snapshot cadence, so the rollback target is step 0
+    assert rec == [(17, 0, 0.5)], rec
+    assert restored == [5], restored
+    assert scale == 1.0
+    # call 18 is replay step 1: the net entering it must be the
+    # restored run-start snapshot, bit-for-bit what call 1 saw
+    assert np.array_equal(tr.seen[18], tr.seen[1]), \
+        "rollback did not restore the snapshot bit-for-bit"
+    print("backoff bookkeeping: scale halves per recovery, budget "
+          "trips on the 4th event, anneal restores after sustained "
+          "health")
+
+
+def run_poisson():
+    print("== poisson_sin @ exact Rust seed 42 (constant lr 5e-3) ==")
+    obj = build_poisson()
+
+    def lr(_t):
+        return 5e-3
+
+    print("  control (unfaulted):")
+    net = rust_net([2, 30, 30, 30, 1], 42, two_head=False)
+    rec, scale, _ = train_selfheal(obj, net, 5000, lr, fail_at=None)
+    r_clean = rel_l2(net, u_exact)
+    assert rec == [] and scale == 1.0
+    print(f"  control rel-L2 {r_clean:.3e}")
+
+    print("  faulted (grad.nan@500 -> rollback to 450):")
+    net = rust_net([2, 30, 30, 30, 1], 42, two_head=False)
+    rec, scale, restored = train_selfheal(obj, net, 5000, lr,
+                                          fail_at=FAIL_AT)
+    r_healed = rel_l2(net, u_exact)
+    assert len(rec) == 1 and rec[0][0] == FAIL_AT \
+        and rec[0][1] == FAIL_AT - SNAPSHOT_EVERY
+    assert restored == [FAIL_AT - SNAPSHOT_EVERY + LR_RESTORE_AFTER]
+    assert scale == 1.0, "anneal must have restored the scale"
+    print(f"  healed rel-L2 {r_healed:.3e} (control {r_clean:.3e})")
+    # constant-LR wander floor is 1.5e-2..5.4e-2 across the measured
+    # family (see module docstring) — the chaos-tier bar is the 1e-1
+    # convergence-sanity check, asserted here with the same margin
+    assert r_healed < 1e-1, \
+        f"healed poisson missed the sanity bar: {r_healed:.3e}"
+    assert r_clean < 1e-1
+    print("  PASS: healed poisson_sin converges under the 1e-1 "
+          "sanity bar")
+
+
+def run_helmholtz():
+    print("== helmholtz @ exact Rust seed 42 (ExpDecay, 12000 it) ==")
+    obj, u = build_helmholtz()
+
+    def lr(t):
+        return 5e-3 * 0.7 ** ((t - 1) // 1500)
+
+    print("  faulted (grad.nan@500 -> rollback to 450 + anneal):")
+    net = rust_net([2, 30, 30, 30, 1], 42, two_head=False)
+    rec, scale, restored = train_selfheal(obj, net, 12000, lr,
+                                          fail_at=FAIL_AT,
+                                          log_every=3000)
+    r_healed = rel_l2(net, u)
+    assert len(rec) == 1 and rec[0][0] == FAIL_AT \
+        and rec[0][1] == FAIL_AT - SNAPSHOT_EVERY
+    assert restored == [FAIL_AT - SNAPSHOT_EVERY + LR_RESTORE_AFTER]
+    assert scale == 1.0
+    print(f"  healed rel-L2 {r_healed:.3e} "
+          f"(clean-run family 6.4e-3 / 7.8e-3)")
+    assert r_healed < 1e-2, \
+        f"healed helmholtz missed the acceptance bar: {r_healed:.3e}"
+    print("  PASS: the healed helmholtz run still meets the existing "
+          "rel-L2 < 1e-2 acceptance bar")
+
+
+def main():
+    t0 = time.time()
+    check_backoff_bookkeeping()
+    run_poisson()
+    run_helmholtz()
+    print(f"all self-healing checks passed ({time.time() - t0:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,10 +16,39 @@
 //! [`Trainer::resume_from_step`] continues a warm-restarted run at the
 //! persisted step count, so the LR schedule and Adam bias correction
 //! pick up exactly where the interrupted run left off.
+//!
+//! ## Self-healing
+//!
+//! [`Trainer::run`] is crash-averse by default: a [`RecoveryPolicy`]
+//! keeps an in-memory snapshot of the backend state every
+//! `snapshot_every` clean steps, and a divergence sentinel checks every
+//! step's loss and gradient norm. When a step goes non-finite (or the
+//! grad norm explodes past `grad_norm_limit`), the loop rolls the
+//! backend back to the snapshot, resets the Adam moments (they were
+//! computed on the doomed trajectory), scales the learning rate down by
+//! `lr_backoff`, and replays — up to `max_recoveries` times per run,
+//! after which the divergence is surfaced as an error. The backoff is
+//! a *transient* response: after `lr_restore_after` consecutive clean
+//! steps the scale is annealed back to 1.0, so a one-off divergence
+//! does not leave the whole tail of the run training at a reduced
+//! rate (offline sizing in `python/proto_selfheal.py` shows the
+//! annealed recovery lands inside the clean-run accuracy family,
+//! while a permanent backoff erodes the acceptance-bar margin).
+//! Every rollback is recorded as a [`RecoveryEvent`] in
+//! [`TrainReport::recoveries`].
+//! A warn-only watchdog thread (`watchdog_ms > 0`) flags steps that
+//! exceed a wall-clock limit without ever killing the run. Backends
+//! that cannot export their state (no
+//! [`Backend::export_checkpoint`]) silently fall back to the legacy
+//! abort-on-divergence behavior.
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::coordinator::history::{HistoryRow, TrainHistory};
 use crate::coordinator::metrics::ErrorNorms;
@@ -27,6 +56,7 @@ use crate::coordinator::schedule::LrSchedule;
 use crate::runtime::backend::BackendOpts;
 pub use crate::runtime::backend::{Backend, DataSource, StepStats};
 use crate::runtime::checkpoint::Checkpoint;
+use crate::runtime::failpoint;
 use crate::util::stats::StepTimer;
 
 /// Training hyper-parameters (paper defaults where applicable).
@@ -92,6 +122,59 @@ pub struct CheckpointPolicy {
     pub cli: Vec<(String, String)>,
 }
 
+/// How [`Trainer::run`] reacts to divergence and stalls — the
+/// self-healing knobs (see the module docs for the protocol).
+#[derive(Debug, Clone, Copy)]
+pub struct RecoveryPolicy {
+    /// Snapshot the backend state in memory every this many clean
+    /// steps (0 disables self-healing: divergence aborts the run like
+    /// a plain training loop).
+    pub snapshot_every: usize,
+    /// Rollbacks allowed per `run()` before the divergence is
+    /// surfaced as an error.
+    pub max_recoveries: usize,
+    /// Learning-rate multiplier applied on every rollback
+    /// (compounding: two recoveries at 0.5 leave the LR at 0.25x).
+    pub lr_backoff: f64,
+    /// Consecutive clean steps after the most recent rollback before
+    /// the backoff is annealed away (scale restored to 1.0). 0 keeps
+    /// the reduced rate for the rest of the run.
+    pub lr_restore_after: usize,
+    /// Gradient-norm explosion threshold (0 disables the norm check;
+    /// a non-finite loss or grad norm always counts as divergence).
+    pub grad_norm_limit: f64,
+    /// Warn when a single step exceeds this wall clock, in
+    /// milliseconds (0 disables the watchdog thread).
+    pub watchdog_ms: u64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy {
+            snapshot_every: 50,
+            max_recoveries: 3,
+            lr_backoff: 0.5,
+            lr_restore_after: 500,
+            grad_norm_limit: 1e12,
+            watchdog_ms: 0,
+        }
+    }
+}
+
+/// One rollback performed by the self-healing loop, recorded in
+/// [`TrainReport::recoveries`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryEvent {
+    /// Step whose stats tripped the divergence sentinel.
+    pub at_step: usize,
+    /// Snapshot step the run was rolled back to.
+    pub rollback_to: usize,
+    /// What the sentinel saw (e.g. `"non-finite loss NaN"`).
+    pub reason: String,
+    /// Learning-rate scale in effect after this backoff.
+    pub lr_scale: f64,
+}
+
 /// Summary returned by `Trainer::run`.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
@@ -115,6 +198,12 @@ pub struct TrainReport {
     /// validation set is attached, total loss otherwise); `None`
     /// without a [`CheckpointPolicy`].
     pub best_metric: Option<f64>,
+    /// Every divergence rollback the self-healing loop performed, in
+    /// order (empty on a clean run).
+    pub recoveries: Vec<RecoveryEvent>,
+    /// Steps the watchdog flagged as stalled (warn-only; 0 with the
+    /// watchdog disabled).
+    pub stalls: usize,
 }
 
 /// Drives a boxed [`Backend`] through a training run; see the module
@@ -129,6 +218,9 @@ pub struct Trainer<'a> {
     /// Validation set for best-model tracking: points + reference.
     validation: Option<(Vec<[f64; 2]>, Vec<f64>)>,
     best_metric: f64,
+    recovery: RecoveryPolicy,
+    /// Compounded LR backoff from recoveries (1.0 until one fires).
+    lr_scale: f64,
 }
 
 impl<'a> Trainer<'a> {
@@ -150,6 +242,8 @@ impl<'a> Trainer<'a> {
             ckpt: None,
             validation: None,
             best_metric: f64::INFINITY,
+            recovery: RecoveryPolicy::default(),
+            lr_scale: 1.0,
         }
     }
 
@@ -157,6 +251,20 @@ impl<'a> Trainer<'a> {
     /// [`CheckpointPolicy`]).
     pub fn set_checkpoint_policy(&mut self, policy: CheckpointPolicy) {
         self.ckpt = Some(policy);
+    }
+
+    /// Override the self-healing policy for the next [`Trainer::run`]
+    /// (see [`RecoveryPolicy`]; healing is on by default).
+    pub fn set_recovery_policy(&mut self, policy: RecoveryPolicy) {
+        self.recovery = policy;
+    }
+
+    /// Current learning-rate backoff scale (1.0 until a recovery
+    /// fires, then multiplied by [`RecoveryPolicy::lr_backoff`] per
+    /// rollback and annealed back to 1.0 after
+    /// [`RecoveryPolicy::lr_restore_after`] clean steps).
+    pub fn lr_scale(&self) -> f64 {
+        self.lr_scale
     }
 
     /// Attach a validation set: with one, best-model tracking ranks
@@ -220,7 +328,9 @@ impl<'a> Trainer<'a> {
         if improved {
             self.best_metric = metric;
         }
-        let policy = self.ckpt.as_ref().expect("save without policy");
+        let policy = self.ckpt.as_ref().ok_or_else(|| {
+            anyhow!("save_checkpoint called without a checkpoint policy")
+        })?;
         let mut ck = self.backend.export_checkpoint()?;
         ck.step = self.step;
         if self.best_metric.is_finite() {
@@ -228,7 +338,7 @@ impl<'a> Trainer<'a> {
         }
         ck.problem = policy.problem.clone();
         ck.cli = policy.cli.clone();
-        ck.write(&policy.path)?;
+        ck.write_generation(&policy.path)?;
         if improved {
             let mut best = policy.path.clone().into_os_string();
             best.push(".best");
@@ -254,65 +364,181 @@ impl<'a> Trainer<'a> {
             self.backend.name(), self.backend.loss_kind()))
     }
 
-    /// One optimizer step; returns (loss, var_loss, bd_loss, extra).
-    pub fn step_once(&mut self) -> Result<(f64, f64, f64, f64)> {
+    /// One optimizer step under the current LR schedule and recovery
+    /// backoff scale.
+    pub fn step_once(&mut self) -> Result<StepStats> {
         self.step += 1;
-        let lr = self.cfg.lr.at(self.step - 1);
-        let s = self.backend.step(self.step, lr)?;
-        Ok((s.loss, s.var_loss, s.bd_loss, s.extra))
+        // chaos site: hold the step long enough to trip the watchdog
+        if let Some(v) = failpoint::fire("step.stall") {
+            let ms = if v.is_finite() && v >= 0.0 { v } else { 2000.0 };
+            std::thread::sleep(std::time::Duration::from_millis(
+                ms as u64));
+        }
+        let lr = self.cfg.lr.at(self.step - 1) * self.lr_scale;
+        self.backend.step(self.step, lr)
     }
 
-    /// Train for `cfg.iters` steps (or until eps convergence).
+    /// Train for `cfg.iters` steps (or until eps convergence), healing
+    /// divergence along the way per the [`RecoveryPolicy`] (module
+    /// docs describe the rollback protocol).
     pub fn run(&mut self) -> Result<TrainReport> {
         let t0 = std::time::Instant::now();
         let mut timer = StepTimer::new();
-        let mut last = (f64::NAN, f64::NAN, f64::NAN, 0.0);
+        let mut last = StepStats {
+            loss: f64::NAN,
+            var_loss: f64::NAN,
+            bd_loss: f64::NAN,
+            extra: 0.0,
+            grad_norm: 0.0,
+        };
         let mut converged_early = false;
         let mut saved_at = None;
         let inverse = self.backend.loss_kind() == "inverse_const";
-        for i in 0..self.cfg.iters {
+        let start = self.step;
+        let target = start + self.cfg.iters;
+        let mut recoveries: Vec<RecoveryEvent> = Vec::new();
+        // Step the latest rollback landed on; drives the backoff
+        // anneal (lr_restore_after clean steps -> scale back to 1.0).
+        let mut last_rollback: Option<usize> = None;
+        // In-memory rollback point. Healing needs a backend that can
+        // snapshot itself; ones that can't (export_checkpoint errors)
+        // keep the legacy abort-on-divergence behavior.
+        let mut snapshot = if self.recovery.snapshot_every > 0 {
+            self.checkpoint().ok()
+        } else {
+            None
+        };
+        let heal = snapshot.is_some();
+        let watchdog = match self.recovery.watchdog_ms {
+            0 => None,
+            ms => Some(Watchdog::spawn(ms)),
+        };
+        while self.step < target {
             timer.start();
-            last = self.step_once()?;
-            timer.stop();
-            if !last.0.is_finite() {
-                bail!("loss diverged to {} at step {}", last.0, self.step);
+            if let Some(w) = &watchdog {
+                w.begin(self.step as u64 + 1);
             }
+            last = self.step_once()?;
+            if let Some(w) = &watchdog {
+                w.end();
+            }
+            timer.stop();
+
+            // ---- divergence sentinel
+            let limit = self.recovery.grad_norm_limit;
+            let trouble = if !last.loss.is_finite() {
+                Some(format!("non-finite loss {}", last.loss))
+            } else if heal && !last.grad_norm.is_finite() {
+                Some(format!("non-finite grad norm {}", last.grad_norm))
+            } else if heal && limit > 0.0 && last.grad_norm > limit {
+                Some(format!("grad norm {:.3e} above limit {:.3e}",
+                             last.grad_norm, limit))
+            } else {
+                None
+            };
+            if let Some(reason) = trouble {
+                if !heal {
+                    bail!("loss diverged to {} at step {}",
+                          last.loss, self.step);
+                }
+                let snap = snapshot.as_ref().ok_or_else(|| {
+                    anyhow!("healing enabled without a snapshot")
+                })?;
+                ensure!(
+                    recoveries.len() < self.recovery.max_recoveries,
+                    "training diverged ({reason}) at step {} and the \
+                     recovery budget ({}) is exhausted",
+                    self.step,
+                    self.recovery.max_recoveries
+                );
+                // Roll back: restore parameters from the snapshot but
+                // RESET the Adam moments — they were accumulated on
+                // the doomed trajectory, and replaying with them warm
+                // invites the same blow-up.
+                let mut restore = snap.clone();
+                restore.adam_m.fill(0.0);
+                restore.adam_v.fill(0.0);
+                self.backend.restore_checkpoint(&restore)?;
+                self.lr_scale *= self.recovery.lr_backoff;
+                eprintln!(
+                    "recovery[{}/{}]: {} at step {} -> rolled back to \
+                     step {}, Adam moments reset, lr scale {:.3e}",
+                    recoveries.len() + 1,
+                    self.recovery.max_recoveries,
+                    reason,
+                    self.step,
+                    snap.step,
+                    self.lr_scale
+                );
+                recoveries.push(RecoveryEvent {
+                    at_step: self.step,
+                    rollback_to: snap.step,
+                    reason,
+                    lr_scale: self.lr_scale,
+                });
+                self.step = snap.step;
+                last_rollback = Some(snap.step);
+                continue;
+            }
+            // The backoff is transient: enough clean steps since the
+            // rollback and the divergence is judged a one-off — the
+            // tail of the run should train at the designed rate.
+            if let Some(rb) = last_rollback {
+                let after = self.recovery.lr_restore_after;
+                if after > 0 && self.lr_scale < 1.0
+                    && self.step - rb >= after
+                {
+                    self.lr_scale = 1.0;
+                    last_rollback = None;
+                    eprintln!(
+                        "recovery: {after} clean steps since the \
+                         rollback — lr scale restored to 1.0"
+                    );
+                }
+            }
+
+            let i = self.step - start - 1;
             let log = self.cfg.log_every.max(1);
-            if i % log == 0 || i + 1 == self.cfg.iters {
+            if i % log == 0 || self.step == target {
                 self.history.push(HistoryRow {
                     step: self.step,
-                    loss: last.0,
-                    var_loss: last.1,
-                    bd_loss: last.2,
-                    extra: last.3,
+                    loss: last.loss,
+                    var_loss: last.var_loss,
+                    bd_loss: last.bd_loss,
+                    extra: last.extra,
                     step_ms: timer.summary().median,
                 });
             }
             let every = self.ckpt.as_ref().map_or(0, |p| p.every);
             if every > 0 && self.step % every == 0 {
-                self.save_checkpoint(last.0)?;
+                self.save_checkpoint(last.loss)?;
                 saved_at = Some(self.step);
             }
-            if let Some((target, tol)) = self.cfg.eps_converge {
-                if inverse && (last.3 - target).abs() < tol {
+            if heal && self.step % self.recovery.snapshot_every == 0 {
+                snapshot = Some(self.checkpoint()?);
+            }
+            if let Some((tgt, tol)) = self.cfg.eps_converge {
+                if inverse && (last.extra - tgt).abs() < tol {
                     converged_early = true;
                     break;
                 }
             }
         }
+        let stalls = watchdog.as_ref().map_or(0, |w| w.stalls());
+        drop(watchdog); // joins the monitor thread
         // final save, unless the last periodic save already covered
         // this exact step
         if self.ckpt.is_some() && saved_at != Some(self.step) {
-            self.save_checkpoint(last.0)?;
+            self.save_checkpoint(last.loss)?;
         }
         Ok(TrainReport {
             steps: self.step,
-            final_loss: last.0,
-            final_var_loss: last.1,
-            final_bd_loss: last.2,
+            final_loss: last.loss,
+            final_var_loss: last.var_loss,
+            final_bd_loss: last.bd_loss,
             median_step_ms: timer.summary().median,
             total_seconds: t0.elapsed().as_secs_f64(),
-            eps_final: if inverse { Some(last.3) } else { None },
+            eps_final: if inverse { Some(last.extra) } else { None },
             converged_early,
             best_metric: if self.ckpt.is_some()
                 && self.best_metric.is_finite()
@@ -321,6 +547,8 @@ impl<'a> Trainer<'a> {
             } else {
                 None
             },
+            recoveries,
+            stalls,
         })
     }
 
@@ -364,7 +592,85 @@ impl<'a> Trainer<'a> {
     }
 }
 
+/// Warn-only stall monitor: a background thread watching the step the
+/// coordinator is currently executing and shouting (once per step)
+/// when it exceeds the configured wall-clock limit. It never kills
+/// anything — a stalled step may be a slow allocator, a swapping
+/// machine, or the `step.stall` failpoint — it just makes the stall
+/// visible and countable in [`TrainReport::stalls`].
+struct Watchdog {
+    shared: Arc<WatchdogShared>,
+    t0: std::time::Instant,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+#[derive(Default)]
+struct WatchdogShared {
+    /// Step currently executing (0 = coordinator is between steps).
+    seq: AtomicU64,
+    /// Milliseconds since watchdog start when that step began.
+    began_ms: AtomicU64,
+    /// Steps that exceeded the limit.
+    stalls: AtomicU64,
+    stop: AtomicBool,
+}
+
+impl Watchdog {
+    fn spawn(limit_ms: u64) -> Watchdog {
+        let shared = Arc::new(WatchdogShared::default());
+        let t0 = std::time::Instant::now();
+        let s = Arc::clone(&shared);
+        let handle = std::thread::spawn(move || {
+            let poll = std::time::Duration::from_millis(
+                (limit_ms / 4).clamp(5, 250));
+            let mut warned = 0u64;
+            while !s.stop.load(Ordering::Relaxed) {
+                std::thread::sleep(poll);
+                let seq = s.seq.load(Ordering::Relaxed);
+                if seq == 0 || seq == warned {
+                    continue;
+                }
+                let began = s.began_ms.load(Ordering::Relaxed);
+                let now = t0.elapsed().as_millis() as u64;
+                if now.saturating_sub(began) > limit_ms {
+                    warned = seq;
+                    s.stalls.fetch_add(1, Ordering::Relaxed);
+                    eprintln!(
+                        "watchdog: step {} has been running {} ms \
+                         (limit {} ms)",
+                        seq, now - began, limit_ms);
+                }
+            }
+        });
+        Watchdog { shared, t0, handle: Some(handle) }
+    }
+
+    fn begin(&self, step: u64) {
+        self.shared.began_ms.store(
+            self.t0.elapsed().as_millis() as u64, Ordering::Relaxed);
+        self.shared.seq.store(step, Ordering::Relaxed);
+    }
+
+    fn end(&self) {
+        self.shared.seq.store(0, Ordering::Relaxed);
+    }
+
+    fn stalls(&self) -> usize {
+        self.shared.stalls.load(Ordering::Relaxed) as usize
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::fem::assembly;
@@ -507,5 +813,198 @@ mod tests {
         assert_eq!(bk.layers, ck.layers);
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(&best).ok();
+        for i in 0..crate::runtime::checkpoint::GENERATIONS {
+            std::fs::remove_file(
+                crate::runtime::checkpoint::generation_path(&path, i),
+            )
+            .ok();
+        }
+    }
+
+    /// Delegates to a real native backend but poisons the reported
+    /// stats from a chosen step until the coordinator restores a
+    /// snapshot — a deterministic divergence that doesn't touch the
+    /// process-global failpoint table (another test owns that).
+    struct Flaky {
+        inner: NativeBackend,
+        /// Coordinator step to start poisoning at (`None` = done).
+        fail_at: Option<usize>,
+        /// Re-arm `fail_at` on restore instead of healing — models a
+        /// divergence that rollback cannot fix (budget-exhaustion
+        /// path).
+        sticky: bool,
+        corrupted: bool,
+    }
+
+    impl Backend for Flaky {
+        fn name(&self) -> &'static str {
+            "flaky"
+        }
+        fn loss_kind(&self) -> &str {
+            self.inner.loss_kind()
+        }
+        fn step(&mut self, step: usize, lr: f64)
+            -> Result<StepStats> {
+            let mut s = self.inner.step(step, lr)?;
+            if self.fail_at == Some(step) {
+                self.corrupted = true;
+                if !self.sticky {
+                    self.fail_at = None;
+                }
+            }
+            if self.corrupted {
+                s.loss = f64::NAN;
+                s.grad_norm = f64::NAN;
+            }
+            Ok(s)
+        }
+        fn predict(&self, points: &[[f64; 2]])
+            -> Result<Vec<Vec<f32>>> {
+            self.inner.predict(points)
+        }
+        fn export_checkpoint(&self) -> Result<Checkpoint> {
+            self.inner.export_checkpoint()
+        }
+        fn restore_checkpoint(&mut self, ck: &Checkpoint)
+            -> Result<()> {
+            self.corrupted = false;
+            self.inner.restore_checkpoint(ck)
+        }
+    }
+
+    fn flaky_backend(fail_at: usize, sticky: bool) -> Flaky {
+        let mesh = generators::unit_square(1);
+        let dom = assembly::assemble(&mesh, 2, 4, QuadKind::GaussLegendre);
+        let problem = PoissonSin::new(std::f64::consts::PI);
+        let src = DataSource {
+            mesh: &mesh,
+            domain: Some(&dom),
+            problem: &problem,
+            sensor_values: None,
+        };
+        let ncfg = NativeConfig {
+            layers: vec![2, 8, 1],
+            loss: NativeLoss::Forward,
+            nb: 16,
+            ns: 0,
+        };
+        let inner = NativeBackend::new(
+            &ncfg, &src, &BackendOpts::default()).unwrap();
+        Flaky { inner, fail_at: Some(fail_at), sticky, corrupted: false }
+    }
+
+    #[test]
+    fn divergence_rolls_back_and_run_completes() {
+        let cfg = TrainConfig { iters: 30, ..TrainConfig::default() };
+        let mut t = Trainer::new(Box::new(flaky_backend(17, false)), &cfg);
+        t.set_recovery_policy(RecoveryPolicy {
+            snapshot_every: 10,
+            ..RecoveryPolicy::default()
+        });
+        let report = t.run().unwrap();
+        assert_eq!(report.steps, 30, "run replays through the fault");
+        assert!(report.final_loss.is_finite());
+        assert_eq!(report.recoveries.len(), 1);
+        let ev = &report.recoveries[0];
+        assert_eq!(ev.at_step, 17);
+        assert_eq!(ev.rollback_to, 10, "last clean snapshot");
+        assert!(ev.reason.contains("non-finite loss"));
+        assert!((ev.lr_scale - 0.5).abs() < 1e-15, "one backoff");
+        assert!((t.lr_scale() - 0.5).abs() < 1e-15);
+        // the rolled-back span is replayed, so steps 11..17 appear
+        // twice in the history — an honest trace of what happened
+        let n17 = t.history.rows.iter()
+            .filter(|r| r.step == 17).count();
+        assert_eq!(n17, 2);
+    }
+
+    #[test]
+    fn lr_backoff_anneals_back_after_sustained_health() {
+        let cfg = TrainConfig { iters: 30, ..TrainConfig::default() };
+        let mut t = Trainer::new(Box::new(flaky_backend(17, false)), &cfg);
+        t.set_recovery_policy(RecoveryPolicy {
+            snapshot_every: 10,
+            lr_restore_after: 5,
+            ..RecoveryPolicy::default()
+        });
+        let report = t.run().unwrap();
+        assert_eq!(report.steps, 30);
+        assert_eq!(report.recoveries.len(), 1);
+        // the event records the backed-off scale that was in effect
+        assert!((report.recoveries[0].lr_scale - 0.5).abs() < 1e-15);
+        // rollback lands on step 10 and the replay is clean, so the
+        // 5th clean step (15) anneals the scale back to 1.0 and it
+        // stays there through the end of the run
+        assert!((t.lr_scale() - 1.0).abs() < 1e-15,
+                "backoff not annealed: {}", t.lr_scale());
+    }
+
+    #[test]
+    fn unfixable_divergence_exhausts_the_recovery_budget() {
+        let cfg = TrainConfig { iters: 30, ..TrainConfig::default() };
+        let mut t = Trainer::new(Box::new(flaky_backend(17, true)), &cfg);
+        t.set_recovery_policy(RecoveryPolicy {
+            snapshot_every: 10,
+            max_recoveries: 2,
+            ..RecoveryPolicy::default()
+        });
+        let err = t.run().unwrap_err().to_string();
+        assert!(err.contains("recovery budget (2) is exhausted"),
+                "got: {err}");
+    }
+
+    #[test]
+    fn healing_disabled_keeps_the_legacy_abort() {
+        let cfg = TrainConfig { iters: 30, ..TrainConfig::default() };
+        let mut t = Trainer::new(Box::new(flaky_backend(17, false)), &cfg);
+        t.set_recovery_policy(RecoveryPolicy {
+            snapshot_every: 0,
+            ..RecoveryPolicy::default()
+        });
+        let err = t.run().unwrap_err().to_string();
+        assert!(err.contains("loss diverged"), "got: {err}");
+    }
+
+    #[test]
+    fn watchdog_counts_a_stalled_step() {
+        struct Slow {
+            inner: Flaky,
+        }
+        impl Backend for Slow {
+            fn name(&self) -> &'static str {
+                "slow"
+            }
+            fn loss_kind(&self) -> &str {
+                self.inner.loss_kind()
+            }
+            fn step(&mut self, step: usize, lr: f64)
+                -> Result<StepStats> {
+                if step == 2 {
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(120));
+                }
+                self.inner.step(step, lr)
+            }
+            fn predict(&self, points: &[[f64; 2]])
+                -> Result<Vec<Vec<f32>>> {
+                self.inner.predict(points)
+            }
+            fn export_checkpoint(&self) -> Result<Checkpoint> {
+                self.inner.export_checkpoint()
+            }
+            fn restore_checkpoint(&mut self, ck: &Checkpoint)
+                -> Result<()> {
+                self.inner.restore_checkpoint(ck)
+            }
+        }
+        let cfg = TrainConfig { iters: 4, ..TrainConfig::default() };
+        let slow = Slow { inner: flaky_backend(usize::MAX, false) };
+        let mut t = Trainer::new(Box::new(slow), &cfg);
+        t.set_recovery_policy(RecoveryPolicy {
+            watchdog_ms: 40,
+            ..RecoveryPolicy::default()
+        });
+        let report = t.run().unwrap();
+        assert_eq!(report.stalls, 1, "exactly the slow step flagged");
     }
 }

@@ -128,7 +128,8 @@ pub mod util;
 pub mod prelude {
     pub use crate::coordinator::metrics::ErrorNorms;
     pub use crate::coordinator::trainer::{
-        CheckpointPolicy, DataSource, TrainConfig, TrainReport, Trainer,
+        CheckpointPolicy, DataSource, RecoveryEvent, RecoveryPolicy,
+        TrainConfig, TrainReport, Trainer,
     };
     pub use crate::fem::assembly::{self, AssembledDomain};
     pub use crate::fem::quadrature::QuadKind;

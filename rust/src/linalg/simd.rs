@@ -17,8 +17,14 @@
 //!    `is_x86_feature_detected!` probe (AVX2 + FMA), the
 //!    `REPRO_FORCE_SCALAR` environment variable (any value other than
 //!    `0`/empty forces the scalar fallback — the CI leg that keeps the
-//!    fallback green), and a process-wide override
-//!    ([`set_force_scalar`]) used by the `repro bench` parity guard.
+//!    fallback green), a process-wide override ([`set_force_scalar`])
+//!    used by the `repro bench` parity guard, and the one-way
+//!    [`degrade_to_scalar`] latch: a suspected-faulty SIMD kernel
+//!    (chaos tier: the `kernel.avx2.fault` failpoint) drops dispatch
+//!    to the scalar ground truth for the rest of the process and
+//!    training continues — because the f64 kernels are bit-identical
+//!    across the two paths, the post-degrade trajectory matches a
+//!    scalar run resumed from the same state bit-for-bit.
 //! 3. **The vector `tanh` is documented-error, not libm.** The
 //!    training epilogue's [`tanh_block`] evaluates tanh as a blend of
 //!    an odd Taylor branch (|x| < 1/8) and `(E-1)/(E+1)` with
@@ -66,6 +72,7 @@ struct Detect {
 
 static DETECT: OnceLock<Detect> = OnceLock::new();
 static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+static DEGRADED: AtomicBool = AtomicBool::new(false);
 
 fn detect() -> Detect {
     *DETECT.get_or_init(|| {
@@ -108,9 +115,34 @@ pub fn set_force_scalar(on: bool) {
     FORCE_SCALAR.store(on, Ordering::Relaxed);
 }
 
+/// Permanently degrade dispatch to the scalar ground-truth kernels
+/// for the rest of the process — graceful kernel degradation: when a
+/// SIMD code path is suspected faulty (in the chaos tier, via the
+/// `kernel.avx2.fault` failpoint), the run switches to the portable
+/// kernels and keeps training instead of crashing or silently
+/// producing wrong numbers. Logs once, on the first call. There is
+/// deliberately no un-degrade: a kernel that faulted once is not
+/// trusted again within the process.
+pub fn degrade_to_scalar(reason: &str) {
+    if !DEGRADED.swap(true, Ordering::SeqCst) {
+        eprintln!(
+            "kernel degradation: dispatch falling back to scalar \
+             kernels ({reason})"
+        );
+    }
+}
+
+/// Whether [`degrade_to_scalar`] has been tripped.
+pub fn degraded() -> bool {
+    DEGRADED.load(Ordering::Relaxed)
+}
+
 /// The kernel the next `gemm`/`gemv`/epilogue call will run on.
 pub fn active() -> Kernel {
-    if simd_available() && !FORCE_SCALAR.load(Ordering::Relaxed) {
+    if simd_available()
+        && !FORCE_SCALAR.load(Ordering::Relaxed)
+        && !DEGRADED.load(Ordering::Relaxed)
+    {
         Kernel::Avx2
     } else {
         Kernel::Scalar

@@ -18,6 +18,10 @@
 //!   dump-tensors                   write assembly dumps for pytest
 //!                                  cross-validation (`make crosscheck`)
 
+// Every code path here is CLI-reachable: a panic is a crash report to
+// the user's terminal, so failures must travel as errors instead.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use anyhow::{bail, Context as _, Result};
 
 use fastvpinns::coordinator::metrics::eval_grid;
@@ -44,6 +48,12 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // chaos-tier fault injection (no-op unless REPRO_FAILPOINTS is
+    // set; `repro train --failpoints` arms more below)
+    if let Err(e) = fastvpinns::runtime::failpoint::arm_from_env() {
+        eprintln!("argument error: {e:#}");
+        std::process::exit(2);
+    }
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -92,6 +102,10 @@ repro — FastVPINNs coordinator
               [--expect-rel-l2 F] [--history F.csv]
               [--checkpoint F.ckpt [--checkpoint-every N]]
               [--resume F.ckpt]
+              [--snapshot-every N] [--max-recoveries N]
+              [--lr-backoff F] [--lr-restore-after N]
+              [--grad-limit F] [--watchdog-ms N]
+              [--failpoints SPEC]   (chaos testing; also REPRO_FAILPOINTS)
               (xla backend: --artifact NAME [--artifacts DIR])
   repro infer --ckpt F.ckpt [--points F.csv | --grid N | --quad]
               [--out pred.csv|pred.vtk] [--batch N]
@@ -150,6 +164,18 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Evaluate a problem's exact solution over a point set, failing as an
+/// error (not a panic) when it is undefined anywhere on the set.
+fn exact_on_grid(problem: &dyn Problem, grid: &[[f64; 2]])
+    -> Result<Vec<f64>> {
+    grid.iter()
+        .map(|p| problem.exact(p[0], p[1]))
+        .collect::<Option<Vec<f64>>>()
+        .ok_or_else(|| anyhow::anyhow!(
+            "problem '{}' has no exact solution on the evaluation grid",
+            problem.name()))
 }
 
 /// Parse `--layers 2,30,30,30,1`.
@@ -441,7 +467,9 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn persistable_flags(args: &Args) -> Vec<(String, String)> {
     const CONTROL: &[&str] = &[
         "backend", "resume", "checkpoint", "checkpoint-every", "history",
-        "expect-rel-l2", "iters", "log-every",
+        "expect-rel-l2", "iters", "log-every", "failpoints",
+        "snapshot-every", "max-recoveries", "lr-backoff",
+        "lr-restore-after", "grad-limit", "watchdog-ms",
     ];
     args.flag_pairs()
         .into_iter()
@@ -467,11 +495,31 @@ fn persistable_flags(args: &Args) -> Vec<(String, String)> {
 /// problem and its mesh shape, ...) cannot be overridden and is
 /// rejected loudly.
 fn cmd_train_native(args: &Args) -> Result<()> {
-    use fastvpinns::coordinator::trainer::CheckpointPolicy;
+    use fastvpinns::coordinator::trainer::{
+        CheckpointPolicy, RecoveryPolicy,
+    };
     use fastvpinns::runtime::checkpoint::{hash_f32_bits, Checkpoint};
+    use fastvpinns::runtime::failpoint;
 
+    if let Some(spec) = args.flag("failpoints") {
+        failpoint::arm_from_spec(spec).context("parse --failpoints")?;
+    }
+    // --resume goes through the generation ring: a run killed mid-save
+    // leaves a torn primary, and the previous generation(s) at
+    // <path>.g0/.g1 are the crash-safety net
     let resume: Option<Checkpoint> = match args.flag("resume") {
-        Some(p) => Some(Checkpoint::read(p)?),
+        Some(p) => {
+            let primary = std::path::Path::new(p);
+            let (ck, loaded_from) = Checkpoint::read_salvage(primary)?;
+            if loaded_from != primary {
+                eprintln!(
+                    "warning: {p} was unreadable; salvaged {} \
+                     (step {})",
+                    loaded_from.display(), ck.step
+                );
+            }
+            Some(ck)
+        }
         None => None,
     };
     // effective args: the checkpoint's persisted invocation underneath
@@ -556,6 +604,25 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         }
     };
     let mut trainer = Trainer::new(Box::new(native), &cfg);
+    {
+        // self-healing knobs (defaults in RecoveryPolicy):
+        // --snapshot-every 0 turns healing off entirely
+        let d = RecoveryPolicy::default();
+        trainer.set_recovery_policy(RecoveryPolicy {
+            snapshot_every: eff.usize_or("snapshot-every",
+                                         d.snapshot_every)?,
+            max_recoveries: eff.usize_or("max-recoveries",
+                                         d.max_recoveries)?,
+            lr_backoff: eff.f64_or("lr-backoff", d.lr_backoff)?,
+            lr_restore_after: eff.usize_or("lr-restore-after",
+                                           d.lr_restore_after)?,
+            grad_norm_limit: eff.f64_or("grad-limit",
+                                        d.grad_norm_limit)?,
+            watchdog_ms: eff.usize_or("watchdog-ms",
+                                      d.watchdog_ms as usize)?
+                as u64,
+        });
+    }
     if let Some(ck) = &resume {
         trainer.resume_from_step(ck.step);
         if let Some(best) = ck.best_metric {
@@ -590,10 +657,7 @@ fn cmd_train_native(args: &Args) -> Result<()> {
             cli: persistable_flags(&eff),
         });
         if exact_known {
-            let exact: Vec<f64> = grid
-                .iter()
-                .map(|p| problem.exact(p[0], p[1]).unwrap())
-                .collect();
+            let exact = exact_on_grid(&*problem, &grid)?;
             trainer.set_validation(grid.clone(), exact);
         }
     }
@@ -605,6 +669,19 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         report.final_loss, report.final_var_loss, report.final_bd_loss,
         report.median_step_ms, report.total_seconds
     );
+    if !report.recoveries.is_empty() {
+        println!("recoveries: {} (final lr scale {:.3e})",
+                 report.recoveries.len(), trainer.lr_scale());
+        for ev in &report.recoveries {
+            println!(
+                "  step {} -> rolled back to {} ({}), lr scale {:.3e}",
+                ev.at_step, ev.rollback_to, ev.reason, ev.lr_scale
+            );
+        }
+    }
+    if report.stalls > 0 {
+        println!("watchdog: {} stalled step(s) flagged", report.stalls);
+    }
     if let Some(eps) = report.eps_final {
         println!("trainable eps -> {eps:.5}");
     }
@@ -618,10 +695,7 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         let heads = trainer.predict_heads(&grid)?;
         anyhow::ensure!(heads.len() >= 2, "two-head network expected");
         if exact_known {
-            let exact: Vec<f64> = grid
-                .iter()
-                .map(|p| problem.exact(p[0], p[1]).unwrap())
-                .collect();
+            let exact = exact_on_grid(&*problem, &grid)?;
             let err = ErrorNorms::compute_f32(&heads[0], &exact);
             println!("errors: MAE {:.3e}, rel-L2 {:.3e}, Linf {:.3e}",
                      err.mae, err.rel_l2, err.linf);
@@ -637,10 +711,7 @@ fn cmd_train_native(args: &Args) -> Result<()> {
                      err.mae, err.rel_l2, err.linf);
         }
     } else if exact_known {
-        let exact: Vec<f64> = grid
-            .iter()
-            .map(|p| problem.exact(p[0], p[1]).unwrap())
-            .collect();
+        let exact = exact_on_grid(&*problem, &grid)?;
         let err = trainer.evaluate(&grid, &exact)?;
         println!("errors: MAE {:.3e}, rel-L2 {:.3e}, Linf {:.3e}",
                  err.mae, err.rel_l2, err.linf);
@@ -745,10 +816,7 @@ fn cmd_train_xla(args: &Args) -> Result<()> {
         );
         // error vs exact on the paper's 100x100 grid
         let grid = eval_grid(100, 100, 0.0, 0.0, 1.0, 1.0);
-        let exact: Vec<f64> = grid
-            .iter()
-            .map(|p| problem.exact(p[0], p[1]).unwrap())
-            .collect();
+        let exact = exact_on_grid(&problem, &grid)?;
         if let Ok(err) = trainer.evaluate(&grid, &exact) {
             println!("errors: MAE {:.3e}, rel-L2 {:.3e}, Linf {:.3e}",
                      err.mae, err.rel_l2, err.linf);
@@ -759,34 +827,6 @@ fn cmd_train_xla(args: &Args) -> Result<()> {
         }
         Ok(())
     }
-}
-
-/// Parse a query point cloud from a CSV of `x,y` rows (an optional
-/// non-numeric header row is skipped).
-fn read_points_csv(path: &str) -> Result<Vec<[f64; 2]>> {
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("read points file {path}"))?;
-    let mut out = Vec::new();
-    for (ln, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        let mut it = line.split(',');
-        let xs = it.next().unwrap_or("").trim();
-        let ys = it
-            .next()
-            .ok_or_else(|| anyhow::anyhow!(
-                "{path}:{}: expected 'x,y', got '{line}'", ln + 1))?
-            .trim();
-        match (xs.parse::<f64>(), ys.parse::<f64>()) {
-            (Ok(x), Ok(y)) => out.push([x, y]),
-            _ if ln == 0 => continue, // header row
-            _ => bail!("{path}:{}: cannot parse '{line}' as 'x,y'",
-                       ln + 1),
-        }
-    }
-    Ok(out)
 }
 
 /// Rebuild the training quadrature points of a CLI-written checkpoint
@@ -833,7 +873,9 @@ fn quad_points_for(
 /// streaming CSV (or writing VTK) output.
 fn cmd_infer(args: &Args) -> Result<()> {
     use fastvpinns::runtime::checkpoint::{hash_f32_bits, Checkpoint};
-    use fastvpinns::runtime::infer::{InferenceSession, Precision};
+    use fastvpinns::runtime::infer::{
+        read_points_csv, InferenceSession, Precision,
+    };
     use fastvpinns::util::csv::CsvWriter;
 
     let path = args.req_str("ckpt")?;

@@ -82,6 +82,12 @@ pub struct StepStats {
     /// Loss-dependent extra: eps (inverse_const), sensor loss
     /// (inverse_space), else 0.
     pub extra: f64,
+    /// L2 norm of the full flat gradient this step was taken with —
+    /// the coordinator's divergence sentinel (non-finite or exploding
+    /// norms trigger rollback). Backends that cannot read the gradient
+    /// back (device-resident state) report `0.0`, which the sentinel
+    /// ignores.
+    pub grad_norm: f64,
 }
 
 /// The train-step contract.
@@ -127,6 +133,22 @@ pub trait Backend {
         -> Result<crate::runtime::checkpoint::Checkpoint> {
         anyhow::bail!(
             "backend '{}' does not support checkpointing", self.name())
+    }
+
+    /// Restore parameters, trainable eps and optimizer state from a
+    /// checkpoint previously produced by
+    /// [`Backend::export_checkpoint`] on an identically-configured
+    /// backend — the in-memory rollback primitive behind the
+    /// coordinator's divergence recovery (the checkpoint never needs
+    /// to touch disk). Implementations must verify the artifact
+    /// describes this backend and error on any mismatch. Backends
+    /// without persistence support return an error (the default).
+    fn restore_checkpoint(
+        &mut self,
+        _ck: &crate::runtime::checkpoint::Checkpoint,
+    ) -> Result<()> {
+        anyhow::bail!(
+            "backend '{}' does not support state restore", self.name())
     }
 }
 

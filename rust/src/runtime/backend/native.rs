@@ -1310,7 +1310,12 @@ impl NativeBackend {
         } else {
             sensor_loss
         };
-        Ok(StepStats { loss, var_loss, bd_loss, extra })
+        // L2 norm over the fully-assembled flat gradient (network +
+        // eps slot): the coordinator's divergence sentinel — one pass
+        // over ~n_params values, negligible next to the contraction
+        let grad_norm =
+            self.grad.iter().map(|g| g * g).sum::<f64>().sqrt();
+        Ok(StepStats { loss, var_loss, bd_loss, extra, grad_norm })
     }
 
     /// How the diffusion coefficient enters the contraction: `Some(s)`
@@ -1544,7 +1549,24 @@ impl Backend for NativeBackend {
 
     fn step(&mut self, step: usize, lr: f64) -> Result<StepStats> {
         ensure!(step >= 1, "step is 1-based");
+        // chaos tier: a simulated AVX2 kernel fault degrades dispatch
+        // to the scalar ground-truth kernels for the rest of the
+        // process — training continues, bit-identical from here on to
+        // a scalar run resumed from the same state
+        if crate::runtime::failpoint::fired("kernel.avx2.fault") {
+            crate::linalg::simd::degrade_to_scalar(
+                "injected AVX2 fault (failpoint kernel.avx2.fault)",
+            );
+        }
         let mut stats = self.compute_loss_grad()?;
+        // chaos tier: poison the gradient *before* the Adam update so
+        // the NaN propagates into m/v/theta exactly like a real
+        // divergence — the coordinator's rollback must repair all of it
+        if crate::runtime::failpoint::fired("grad.nan") {
+            self.grad.fill(f64::NAN);
+            stats.loss = f64::NAN;
+            stats.grad_norm = f64::NAN;
+        }
         // Adam
         const B1: f64 = 0.9;
         const B2: f64 = 0.999;
@@ -1621,6 +1643,12 @@ impl Backend for NativeBackend {
         } else {
             None
         }
+    }
+
+    fn restore_checkpoint(&mut self, ck: &Checkpoint) -> Result<()> {
+        // the same verify-then-restore path `--resume` uses; from a
+        // snapshot of this very backend every check passes trivially
+        self.load_checkpoint(ck)
     }
 }
 

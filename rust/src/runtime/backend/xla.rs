@@ -168,7 +168,9 @@ impl Backend for XlaBackend<'_> {
             _ if rest.len() > 3 => scalar(&rest[3])?,
             _ => 0.0,
         };
-        Ok(StepStats { loss, var_loss, bd_loss, extra })
+        // gradient stays device-resident on the AOT path; 0.0 tells
+        // the coordinator's sentinel to judge by the loss alone
+        Ok(StepStats { loss, var_loss, bd_loss, extra, grad_norm: 0.0 })
     }
 
     fn predict(&self, points: &[[f64; 2]]) -> Result<Vec<Vec<f32>>> {

@@ -64,6 +64,7 @@ use std::path::Path;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::runtime::backend::form::{Coeff, VariationalForm};
+use crate::runtime::failpoint;
 use crate::util::json::Json;
 
 /// The artifact's leading magic bytes.
@@ -571,14 +572,72 @@ impl Checkpoint {
     /// [`write_atomic`]): a reader of `path` — including a `--resume`
     /// after a crash — observes either the previous artifact or this
     /// one, never a torn mix.
+    ///
+    /// Failpoints (chaos tier): `checkpoint.write.truncate` writes a
+    /// torn half-artifact non-atomically and *reports success* (silent
+    /// corruption); `checkpoint.write.kill` writes the same torn
+    /// prefix and then kills the process — the crash-mid-save the
+    /// generation ring must survive.
     pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
-        write_atomic(path.as_ref(), &self.to_bytes()).with_context(
-            || format!("write checkpoint {}", path.as_ref().display()),
+        let path = path.as_ref();
+        let bytes = self.to_bytes();
+        if failpoint::fired("checkpoint.write.truncate") {
+            std::fs::write(path, &bytes[..bytes.len() / 2])
+                .with_context(|| format!(
+                    "failpoint-torn write of {}", path.display()))?;
+            return Ok(());
+        }
+        if failpoint::fired("checkpoint.write.kill") {
+            std::fs::write(path, &bytes[..bytes.len() / 2]).ok();
+            eprintln!(
+                "failpoint checkpoint.write.kill: dying mid-write of {}",
+                path.display()
+            );
+            std::process::exit(137);
+        }
+        write_atomic(path, &bytes).with_context(
+            || format!("write checkpoint {}", path.display()),
         )
     }
 
+    /// Rotate the generation ring at `path` and publish this artifact
+    /// as the new primary: `<path>.g0` becomes `<path>.g1`, the
+    /// current `<path>` becomes `<path>.g0`, then the new artifact is
+    /// written atomically to `<path>`. A crash at *any* interruption
+    /// point leaves at least one checksum-valid generation on disk for
+    /// [`Checkpoint::read_salvage`] to find: the renames move complete
+    /// artifacts without rewriting their bytes, and the final publish
+    /// is [`Checkpoint::write`]'s temp+fsync+rename.
+    pub fn write_generation(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let g0 = generation_path(path, 0);
+        let g1 = generation_path(path, 1);
+        if g0.exists() {
+            std::fs::rename(&g0, &g1).with_context(|| format!(
+                "rotate checkpoint generation {} -> {}",
+                g0.display(), g1.display()
+            ))?;
+        }
+        if path.exists() {
+            std::fs::rename(path, &g0).with_context(|| format!(
+                "rotate checkpoint generation {} -> {}",
+                path.display(), g0.display()
+            ))?;
+        }
+        self.write(path)
+    }
+
     /// Read and parse an artifact from `path`.
+    ///
+    /// Failpoint (chaos tier): `io.read.err` returns an injected I/O
+    /// error instead of touching the file.
     pub fn read(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        if failpoint::fired("io.read.err") {
+            bail!(
+                "injected I/O error reading {} (failpoint io.read.err)",
+                path.as_ref().display()
+            );
+        }
         let bytes = std::fs::read(path.as_ref()).with_context(|| {
             format!("read checkpoint {}", path.as_ref().display())
         })?;
@@ -586,6 +645,54 @@ impl Checkpoint {
             format!("load checkpoint {}", path.as_ref().display())
         })
     }
+
+    /// Salvage-on-load: try the primary artifact, then the generation
+    /// ring (`<path>.g0`, `<path>.g1` — newest first), and return the
+    /// first checkpoint that loads and checksum-verifies, together
+    /// with the path it came from (callers warn when that is not the
+    /// primary). Errs only when **no** generation is loadable, listing
+    /// every attempt. This is what makes `--resume` survive a torn or
+    /// half-written primary after a crash.
+    pub fn read_salvage(
+        path: impl AsRef<Path>,
+    ) -> Result<(Checkpoint, std::path::PathBuf)> {
+        let path = path.as_ref();
+        let candidates = [
+            path.to_path_buf(),
+            generation_path(path, 0),
+            generation_path(path, 1),
+        ];
+        let mut attempts = Vec::new();
+        for cand in candidates {
+            if !cand.exists() {
+                attempts.push(format!("{}: not found", cand.display()));
+                continue;
+            }
+            match Checkpoint::read(&cand) {
+                Ok(ck) => return Ok((ck, cand)),
+                Err(e) => {
+                    attempts.push(format!("{}: {e:#}", cand.display()));
+                }
+            }
+        }
+        bail!(
+            "no loadable checkpoint generation for {} — every candidate \
+             failed (newest first):\n  {}",
+            path.display(),
+            attempts.join("\n  ")
+        )
+    }
+}
+
+/// Generations kept in the ring beside the primary artifact (`.g0` =
+/// the previous primary, `.g1` = the one before it).
+pub const GENERATIONS: usize = 2;
+
+/// Path of ring generation `i`: `<path>.g<i>`.
+pub fn generation_path(path: &Path, i: usize) -> std::path::PathBuf {
+    let mut name = path.as_os_str().to_os_string();
+    name.push(format!(".g{i}"));
+    std::path::PathBuf::from(name)
 }
 
 /// Write `bytes` to `path` atomically: the data goes to a unique
@@ -777,6 +884,120 @@ mod tests {
                 "accepted a {keep}-byte truncation"
             );
         }
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_rejected() {
+        // The trailing FNV-1a covers all preceding bytes and each
+        // byte-absorption step h -> (h ^ b) * prime is a bijection in
+        // h, so ANY body flip changes the final hash — and a flip in
+        // the stored checksum itself mismatches the recomputed one.
+        // That makes this property exhaustively checkable, not just
+        // sampleable: every bit of the artifact, flipped one at a
+        // time, must fail to load.
+        let bytes = sample().to_bytes();
+        for bit in 0..bytes.len() * 8 {
+            let mut b = bytes.clone();
+            b[bit / 8] ^= 1 << (bit % 8);
+            assert!(
+                Checkpoint::from_bytes(&b).is_err(),
+                "accepted a flip of bit {} (byte {} of {})",
+                bit,
+                bit / 8,
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn random_double_bit_flips_are_rejected() {
+        // Two independent flips via the home-grown proptest driver:
+        // FNV-1a is not cryptographic, but colliding flips inside a
+        // ~1 KB artifact are vanishingly unlikely — and a collision
+        // found here would be a real finding about the format.
+        use crate::util::proptest::check;
+        let bytes = sample().to_bytes();
+        let n_bits = bytes.len() * 8;
+        check(
+            0xC0FF_EE00,
+            300,
+            |r| (r.below(n_bits), r.below(n_bits)),
+            |&(b1, b2)| {
+                if b1 == b2 {
+                    return true; // same bit twice = identity
+                }
+                let mut b = bytes.clone();
+                b[b1 / 8] ^= 1 << (b1 % 8);
+                b[b2 / 8] ^= 1 << (b2 % 8);
+                Checkpoint::from_bytes(&b).is_err()
+            },
+        );
+    }
+
+    #[test]
+    fn generation_ring_rotates_and_salvages() {
+        let dir = std::env::temp_dir().join(format!(
+            "fastvpinns_ckpt_ring_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model.ckpt");
+
+        let mut gens = Vec::new();
+        for step in [100usize, 200, 300] {
+            let mut ck = sample();
+            ck.step = step;
+            ck.write_generation(&p).unwrap();
+            gens.push(ck);
+        }
+        // primary = newest, g0 = previous, g1 = oldest
+        assert_eq!(Checkpoint::read(&p).unwrap().step, 300);
+        assert_eq!(
+            Checkpoint::read(generation_path(&p, 0)).unwrap().step,
+            200
+        );
+        assert_eq!(
+            Checkpoint::read(generation_path(&p, 1)).unwrap().step,
+            100
+        );
+
+        // pristine primary: salvage returns it, from the primary path
+        let (ck, from) = Checkpoint::read_salvage(&p).unwrap();
+        assert_eq!((ck.step, from.as_path()), (300, p.as_path()));
+
+        // torn primary (crash mid non-atomic write): walk back to g0
+        let full = gens[2].to_bytes();
+        std::fs::write(&p, &full[..full.len() / 2]).unwrap();
+        let (ck, from) = Checkpoint::read_salvage(&p).unwrap();
+        assert_eq!(ck.step, 200);
+        assert_eq!(from, generation_path(&p, 0));
+
+        // torn primary AND g0: walk back to g1
+        std::fs::write(generation_path(&p, 0), b"garbage").unwrap();
+        let (ck, from) = Checkpoint::read_salvage(&p).unwrap();
+        assert_eq!(ck.step, 100);
+        assert_eq!(from, generation_path(&p, 1));
+
+        // everything torn: a single error listing every attempt
+        std::fs::write(generation_path(&p, 1), b"").unwrap();
+        let err = Checkpoint::read_salvage(&p).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("every candidate failed"), "{msg}");
+        assert!(msg.contains(".g0") && msg.contains(".g1"), "{msg}");
+
+        // a missing primary (killed between rotation and publish)
+        // still salvages from the ring
+        for step in [400usize, 500] {
+            let mut ck = sample();
+            ck.step = step;
+            ck.write_generation(&p).unwrap();
+        }
+        std::fs::remove_file(&p).unwrap();
+        let (ck, from) = Checkpoint::read_salvage(&p).unwrap();
+        assert_eq!(ck.step, 400, "g0 holds the previous primary");
+        assert_eq!(from, generation_path(&p, 0));
+
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

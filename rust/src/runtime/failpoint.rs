@@ -1,0 +1,256 @@
+//! Deterministic fault injection: named failure sites compiled into
+//! the runtime, armed at process start, and hit-counted — the honest
+//! way to test the crash-safe checkpoint ring and the self-healing
+//! training loop, because the faults fire inside the real code paths
+//! (mid-write, mid-step, mid-read) instead of in a mock.
+//!
+//! ## Arming
+//!
+//! A spec is a comma-separated list of `site[@N][=V]` terms:
+//!
+//! - `site` — fire on **every** hit of the site,
+//! - `site@N` — fire exactly on the `N`-th hit (1-based), once,
+//! - `site=V` — attach a numeric payload the site interprets (e.g. a
+//!   stall duration in milliseconds).
+//!
+//! Arm via the `REPRO_FAILPOINTS` environment variable (read once by
+//! [`arm_from_env`], which the CLI calls at startup) or the
+//! `--failpoints` train flag. Unknown site names are rejected at
+//! arming time, so a typo cannot silently disarm a chaos test.
+//!
+//! ## Site catalog
+//!
+//! | site | fires where | effect |
+//! |------|-------------|--------|
+//! | `checkpoint.write.truncate` | [`Checkpoint::write`] | writes a torn half-artifact to the final path and *reports success* — silent corruption the salvage path must discover at load |
+//! | `checkpoint.write.kill`     | [`Checkpoint::write`] | writes a torn half-artifact to the final path, then kills the process (exit 137) — a crash mid-save |
+//! | `io.read.err`               | [`Checkpoint::read`]  | returns an injected I/O error |
+//! | `grad.nan`                  | native backend step   | poisons the gradient with NaN before the Adam update (use `@N` for "diverge at step N") |
+//! | `step.stall`                | [`Trainer::step_once`] | sleeps `=V` milliseconds (default 2000) inside the step, tripping the watchdog |
+//! | `kernel.avx2.fault`         | native backend step   | simulates an AVX2 kernel fault: dispatch degrades to the scalar ground-truth kernels for the rest of the process |
+//!
+//! [`Checkpoint::write`]: crate::runtime::checkpoint::Checkpoint::write
+//! [`Checkpoint::read`]: crate::runtime::checkpoint::Checkpoint::read
+//! [`Trainer::step_once`]: crate::coordinator::trainer::Trainer::step_once
+//!
+//! ## Cost when disarmed
+//!
+//! [`fire`] first checks one process-wide relaxed [`AtomicBool`]; with
+//! nothing armed (the default) every site is a single atomic load and
+//! a branch — nothing is locked, parsed or allocated on the hot path.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{bail, Context, Result};
+
+/// Every failpoint site compiled into this build (see the module-level
+/// catalog). [`arm_from_spec`] validates names against this list.
+pub const SITES: &[&str] = &[
+    "checkpoint.write.truncate",
+    "checkpoint.write.kill",
+    "io.read.err",
+    "grad.nan",
+    "step.stall",
+    "kernel.avx2.fault",
+];
+
+/// One armed site.
+#[derive(Debug, Clone, Copy)]
+struct Arm {
+    /// `Some(n)`: fire only on the n-th hit (1-based); `None`: always.
+    on_hit: Option<u64>,
+    /// Optional `=V` payload.
+    value: Option<f64>,
+    /// Times the site was evaluated.
+    hits: u64,
+    /// Times the site actually fired.
+    fired: u64,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+fn table() -> &'static Mutex<HashMap<&'static str, Arm>> {
+    static TABLE: OnceLock<Mutex<HashMap<&'static str, Arm>>> =
+        OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn canonical(site: &str) -> Option<&'static str> {
+    SITES.iter().find(|&&s| s == site).copied()
+}
+
+/// Arm failpoints from a `site[@N][=V],...` spec (see module docs).
+/// Terms accumulate onto whatever is already armed; re-arming a site
+/// replaces its term and resets its counters. Unknown sites and
+/// malformed terms are errors.
+pub fn arm_from_spec(spec: &str) -> Result<()> {
+    let mut parsed: Vec<(&'static str, Arm)> = Vec::new();
+    for term in spec.split(',') {
+        let term = term.trim();
+        if term.is_empty() {
+            continue;
+        }
+        let (head, value) = match term.split_once('=') {
+            Some((h, v)) => (
+                h,
+                Some(v.trim().parse::<f64>().with_context(|| {
+                    format!("failpoint term '{term}': bad value '{v}'")
+                })?),
+            ),
+            None => (term, None),
+        };
+        let (name, on_hit) = match head.split_once('@') {
+            Some((n, h)) => (
+                n.trim(),
+                Some(h.trim().parse::<u64>().with_context(|| {
+                    format!("failpoint term '{term}': bad hit index '{h}'")
+                })?),
+            ),
+            None => (head.trim(), None),
+        };
+        if on_hit == Some(0) {
+            bail!("failpoint term '{term}': hit indices are 1-based");
+        }
+        let site = canonical(name).with_context(|| {
+            format!(
+                "unknown failpoint site '{name}' (known: {})",
+                SITES.join(", ")
+            )
+        })?;
+        parsed.push((site, Arm { on_hit, value, hits: 0, fired: 0 }));
+    }
+    if parsed.is_empty() {
+        return Ok(());
+    }
+    let mut t = table().lock().unwrap_or_else(|e| e.into_inner());
+    for (site, arm) in parsed {
+        t.insert(site, arm);
+    }
+    ARMED.store(true, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Arm from the `REPRO_FAILPOINTS` environment variable when set —
+/// called once at CLI startup so the chaos tier can inject faults into
+/// any subcommand without a dedicated flag.
+pub fn arm_from_env() -> Result<()> {
+    match std::env::var("REPRO_FAILPOINTS") {
+        Ok(spec) if !spec.is_empty() => arm_from_spec(&spec)
+            .context("parse REPRO_FAILPOINTS"),
+        _ => Ok(()),
+    }
+}
+
+/// Disarm everything and reset all counters (test isolation).
+pub fn disarm_all() {
+    ARMED.store(false, Ordering::SeqCst);
+    table().lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+/// Whether any site is armed (one relaxed load — the disarmed fast
+/// path of every site check).
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Evaluate a site: count the hit and return `Some(payload)` when the
+/// site fires now, `None` otherwise. The payload is the `=V` value,
+/// or NaN when the term carried none — each site supplies its own
+/// default for the NaN case. With nothing armed this is a single
+/// atomic load.
+pub fn fire(site: &str) -> Option<f64> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut t = table().lock().unwrap_or_else(|e| e.into_inner());
+    let arm = t.get_mut(site)?;
+    arm.hits += 1;
+    let firing = match arm.on_hit {
+        Some(n) => arm.hits == n,
+        None => true,
+    };
+    if !firing {
+        return None;
+    }
+    arm.fired += 1;
+    Some(arm.value.unwrap_or(f64::NAN))
+}
+
+/// [`fire`] without the payload — for sites whose effect needs no
+/// parameter.
+pub fn fired(site: &str) -> bool {
+    fire(site).is_some()
+}
+
+/// How many times a site has been evaluated since arming (0 when the
+/// site is not armed) — chaos tests assert on this to prove a fault
+/// was actually reached.
+pub fn hits(site: &str) -> u64 {
+    let t = table().lock().unwrap_or_else(|e| e.into_inner());
+    t.get(site).map_or(0, |a| a.hits)
+}
+
+/// How many times a site has actually fired since arming.
+pub fn fired_count(site: &str) -> u64 {
+    let t = table().lock().unwrap_or_else(|e| e.into_inner());
+    t.get(site).map_or(0, |a| a.fired)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One sequential test owning the process-global table end to end:
+    // the suite runs tests in parallel and a second failpoint test
+    // would race this one through the shared ARMED flag.
+    #[test]
+    fn spec_parsing_hit_counting_and_disarm() {
+        disarm_all();
+        assert!(!armed());
+        // disarmed: every site is silent and costs one atomic load
+        assert_eq!(fire("grad.nan"), None);
+        assert_eq!(hits("grad.nan"), 0);
+
+        // unknown sites and malformed terms are rejected up front
+        assert!(arm_from_spec("grad.none@3").is_err());
+        assert!(arm_from_spec("grad.nan@x").is_err());
+        assert!(arm_from_spec("grad.nan@0").is_err());
+        assert!(arm_from_spec("step.stall=abc").is_err());
+        assert!(!armed(), "failed arming must not half-arm");
+
+        // an empty spec is a no-op, not an error
+        arm_from_spec("").unwrap();
+        assert!(!armed());
+
+        arm_from_spec("grad.nan@3, step.stall=250").unwrap();
+        assert!(armed());
+
+        // @3: fires exactly on the third hit, once; no =V payload
+        // means the NaN sentinel (the site picks its own default)
+        assert_eq!(fire("grad.nan"), None);
+        assert_eq!(fire("grad.nan"), None);
+        assert!(fire("grad.nan").is_some_and(|v| v.is_nan()));
+        assert_eq!(fire("grad.nan"), None);
+        assert_eq!(hits("grad.nan"), 4);
+        assert_eq!(fired_count("grad.nan"), 1);
+
+        // =V: fires every hit, carrying the payload
+        assert_eq!(fire("step.stall"), Some(250.0));
+        assert_eq!(fire("step.stall"), Some(250.0));
+        assert_eq!(fired_count("step.stall"), 2);
+
+        // a site in the catalog but not in the spec stays silent
+        assert!(!fired("io.read.err"));
+
+        // re-arming a site resets its counters
+        arm_from_spec("grad.nan@1").unwrap();
+        assert!(fire("grad.nan").is_some_and(|v| v.is_nan()));
+        assert_eq!(fired_count("grad.nan"), 1);
+
+        disarm_all();
+        assert!(!armed());
+        assert_eq!(fire("step.stall"), None);
+    }
+}

@@ -27,10 +27,18 @@
 //! [`simd::gemm_f32acc`] + the fast f32 tanh. The checkpoint itself
 //! always stays f64; the f32 path trades bit identity for throughput
 //! under a tested relative-error budget of `1e-5` on the u head.
+//!
+//! [`read_points_csv`] parses the `--points` query-cloud format with
+//! line-numbered errors — a malformed row rejects the file instead of
+//! silently truncating the cloud.
+
+// Serving paths are CLI-reachable: failures must travel as errors,
+// never as panics in the user's terminal.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use super::backend::native::{softplus, EvalScratch, Mlp};
 use super::checkpoint::Checkpoint;
@@ -270,11 +278,18 @@ impl InferenceSession {
             Precision::F64 => {
                 self.net.eval_heads_with(points, &mut self.scratch)
             }
-            Precision::F32 => self
-                .f32eval
-                .as_mut()
-                .expect("set_precision(F32) packs the evaluator")
-                .eval_heads(points),
+            Precision::F32 => {
+                // set_precision(F32) packs the evaluator up front, but
+                // pack here too rather than trust every future caller
+                if self.f32eval.is_none() {
+                    self.f32eval =
+                        Some(F32Evaluator::from_mlp(&self.net));
+                }
+                match self.f32eval.as_mut() {
+                    Some(ev) => ev.eval_heads(points),
+                    None => unreachable!(),
+                }
+            }
         }
     }
 
@@ -284,7 +299,77 @@ impl InferenceSession {
     }
 }
 
+/// Parse a query point cloud from a CSV of `x,y` rows (the CLI's
+/// `--points` format).
+///
+/// The first non-blank row may be a header — it is skipped only when
+/// *every* field on it is non-numeric. Blank lines and surrounding
+/// whitespace are fine. Anything else — a truncated row, a field that
+/// does not parse, a non-finite coordinate — rejects the whole file
+/// with a line-numbered error naming the offending content, instead of
+/// silently truncating the cloud.
+pub fn read_points_csv(path: &str) -> Result<Vec<[f64; 2]>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read points file {path}"))?;
+    let mut out = Vec::new();
+    let mut first_row = true;
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let header_candidate = first_row;
+        first_row = false;
+        let fields: Vec<&str> =
+            line.split(',').map(str::trim).collect();
+        if fields.len() != 2 {
+            if header_candidate
+                && fields.iter().all(|f| f.parse::<f64>().is_err())
+            {
+                continue; // header row (e.g. a stray "x" or "x,y,u")
+            }
+            bail!(
+                "{path}:{}: expected 2 comma-separated fields 'x,y', \
+                 got {} in '{line}'",
+                ln + 1, fields.len()
+            );
+        }
+        match (fields[0].parse::<f64>(), fields[1].parse::<f64>()) {
+            (Ok(x), Ok(y)) => {
+                ensure!(
+                    x.is_finite() && y.is_finite(),
+                    "{path}:{}: non-finite coordinate in '{line}'",
+                    ln + 1
+                );
+                out.push([x, y]);
+            }
+            _ if header_candidate
+                && fields.iter().all(|f| f.parse::<f64>().is_err()) =>
+            {
+                // header row ("x,y"); a later non-numeric row is data
+                // gone bad and falls through to the errors below
+            }
+            (Err(_), _) => bail!(
+                "{path}:{}: cannot parse x field '{}' as a number \
+                 (row '{line}')",
+                ln + 1, fields[0]
+            ),
+            (_, Err(_)) => bail!(
+                "{path}:{}: cannot parse y field '{}' as a number \
+                 (row '{line}')",
+                ln + 1, fields[1]
+            ),
+        }
+    }
+    ensure!(
+        !out.is_empty(),
+        "{path}: no data rows (expected lines of 'x,y')"
+    );
+    Ok(out)
+}
+
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::coordinator::trainer::{DataSource, TrainConfig, Trainer};
@@ -402,5 +487,67 @@ mod tests {
         assert!("f16".parse::<Precision>().is_err());
         assert_eq!(Precision::F32.to_string(), "f32");
         assert_eq!(Precision::default(), Precision::F64);
+    }
+
+    /// Write `content` to a unique temp CSV and parse it.
+    fn parse_csv(tag: &str, content: &str) -> Result<Vec<[f64; 2]>> {
+        let path = std::env::temp_dir().join(format!(
+            "fastvpinns_points_{tag}_{}.csv",
+            std::process::id()
+        ));
+        std::fs::write(&path, content).unwrap();
+        let r = read_points_csv(&path.to_string_lossy());
+        std::fs::remove_file(&path).ok();
+        r
+    }
+
+    #[test]
+    fn points_csv_parses_with_and_without_header() {
+        let pts = parse_csv("hdr", "x,y\n0.5, 0.25\n1,2\n").unwrap();
+        assert_eq!(pts, vec![[0.5, 0.25], [1.0, 2.0]]);
+        let pts = parse_csv("nohdr", "0.5,0.25\n\n 1 , 2 \n").unwrap();
+        assert_eq!(pts, vec![[0.5, 0.25], [1.0, 2.0]]);
+        // blank lines before the header are fine
+        let pts = parse_csv("blank_hdr", "\n\nx,y\n3,4\n").unwrap();
+        assert_eq!(pts, vec![[3.0, 4.0]]);
+    }
+
+    #[test]
+    fn points_csv_rejects_truncated_row_with_line_number() {
+        let err = parse_csv("trunc", "0.1,0.2\n0.3\n0.5,0.6\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(":2:"), "line number missing: {err}");
+        assert!(err.contains("expected 2 comma-separated fields"),
+                "got: {err}");
+    }
+
+    #[test]
+    fn points_csv_rejects_garbage_fields_with_line_number() {
+        let err = parse_csv("garb_x", "x,y\n0.1,0.2\nbanana,0.4\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(":3:"), "line number missing: {err}");
+        assert!(err.contains("x field 'banana'"), "got: {err}");
+        let err = parse_csv("garb_y", "0.1,0.2\n0.3,0.4.5\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(":2:"), "line number missing: {err}");
+        assert!(err.contains("y field '0.4.5'"), "got: {err}");
+        // a half-numeric first row is data gone bad, not a header
+        let err = parse_csv("half_hdr", "x,1.0\n0.3,0.4\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(":1:"), "got: {err}");
+    }
+
+    #[test]
+    fn points_csv_rejects_non_finite_and_empty() {
+        let err = parse_csv("nan", "0.1,0.2\nnan,0.4\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("non-finite"), "got: {err}");
+        let err = parse_csv("empty", "x,y\n").unwrap_err().to_string();
+        assert!(err.contains("no data rows"), "got: {err}");
     }
 }

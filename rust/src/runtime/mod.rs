@@ -12,11 +12,18 @@
 //! trained backend exports (and resumes from), and [`infer`] is the
 //! batched inference engine that loads such an artifact and answers
 //! point-cloud queries through the blocked-GEMM forward path.
+//!
+//! The layer also owns the runtime's failure model: [`failpoint`] is
+//! the deterministic fault-injection registry that the chaos test
+//! tier arms to drive the crash-safe checkpoint generation ring
+//! ([`checkpoint`]) and the coordinator's divergence-recovery loop
+//! through real torn writes, injected NaNs and kernel faults.
 
 pub mod backend;
 pub mod checkpoint;
 #[cfg(feature = "xla")]
 pub mod engine;
+pub mod failpoint;
 pub mod infer;
 pub mod manifest;
 pub mod tensor;

@@ -1,0 +1,302 @@
+//! Chaos tier: drives the crash-safe, self-healing runtime through the
+//! real `repro` CLI with failpoints armed — the faults fire inside the
+//! production code paths (mid-save, mid-step, mid-kernel), not in a
+//! mock. Everything here is `#[ignore]`d: the scenarios spawn release
+//! binaries and train for real step budgets, so the CI `chaos` job
+//! runs them in release via `--include-ignored` while the debug-mode
+//! default suite skips them.
+//!
+//! Scenarios (the PR's acceptance criteria):
+//! - `grad.nan@500` mid-run, twice: on `poisson_sin` the divergence
+//!   sentinel rolls back to the last in-memory snapshot, backs off the
+//!   LR, and the run converges (family-sized 1e-1 bar — see the test
+//!   doc for why constant-LR poisson wanders); on `helmholtz` the
+//!   healed run must still meet the repo's existing rel-L2 < 1e-2
+//!   acceptance bar, backed by the anneal that restores the LR scale
+//!   after sustained health.
+//! - `checkpoint.write.kill@k` at every save point: the generation
+//!   ring keeps a loadable artifact through a crash at any completed
+//!   save; a crash before the *first* save ever completes fails the
+//!   later `--resume` with a clear salvage error, never a panic.
+//! - `kernel.avx2.fault` mid-run: dispatch degrades to the scalar
+//!   kernels and the continuation is bit-identical to a forced-scalar
+//!   run resumed from the same ring artifact.
+//! - `step.stall` + `--watchdog-ms`: a stalled step is flagged
+//!   (warn-only) and counted in the report.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("fastvpinns_chaos_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Run the repro binary with pinned threading (deterministic f64
+/// reduction order — the bit-identity scenario depends on it).
+fn repro(args: &[&str], envs: &[(&str, &str)]) -> Output {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_repro"));
+    cmd.args(args).env("FASTVPINNS_THREADS", "2");
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    cmd.output().expect("spawn repro")
+}
+
+fn stdout_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn stderr_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+/// Extract the 16-hex-digit quad-point u hash a checkpointing train
+/// run prints ("... quad-point u hash <hash> over N points").
+fn u_hash(stdout: &str) -> String {
+    stdout
+        .lines()
+        .filter_map(|l| l.split("u hash ").nth(1))
+        .filter_map(|rest| rest.split_whitespace().next())
+        .last()
+        .unwrap_or_else(|| panic!("no 'u hash' line in:\n{stdout}"))
+        .to_string()
+}
+
+/// (a1) Injected NaN gradient at step 500 on `poisson_sin`: the run
+/// must recover via rollback + LR backoff and converge. The bar here
+/// is 1e-1, not 1e-2: constant-LR poisson_sin has a chaotic
+/// saddle-escape time and an endgame wander floor measured at
+/// 1.5e-2..5.4e-2 across exact-Rust-seed replicas (clean *and*
+/// healed families — python/proto_selfheal.py), so 1e-1 is the
+/// converged-sanity check with 2x margin over the worst family draw
+/// while still cleanly separating recovery (~3e-2) from a dead run
+/// (rel-L2 ~1.0 or NaN).
+#[test]
+#[ignore = "release-mode chaos tier (CI chaos job)"]
+fn grad_nan_recovers_on_poisson_and_converges() {
+    let out = repro(
+        &[
+            "train",
+            "--problem", "poisson_sin",
+            "--failpoints", "grad.nan@500",
+            "--expect-rel-l2", "1e-1",
+        ],
+        &[],
+    );
+    let (so, se) = (stdout_of(&out), stderr_of(&out));
+    assert!(
+        out.status.success(),
+        "run failed\nstdout:\n{so}\nstderr:\n{se}"
+    );
+    assert!(
+        se.contains("recovery[1/"),
+        "no recovery line on stderr:\n{se}"
+    );
+    assert!(
+        so.contains("recoveries: 1"),
+        "report missing the recovery record:\n{so}"
+    );
+    assert!(
+        so.contains("rolled back to"),
+        "recovery summary missing:\n{so}"
+    );
+}
+
+/// (a2) The same fault on `helmholtz` — the problem whose rel-L2 <
+/// 1e-2 bar CI already enforces on clean runs — must recover AND
+/// still meet that existing bar. This is what makes the backoff
+/// anneal load-bearing: exact-seed replays (python/proto_selfheal.py)
+/// put the healed+anneal family at 4.6e-3..6.9e-3 (seeds 42/1/7),
+/// while a *permanent* 0.5 backoff drifts to 1.02e-2 on seed 1 —
+/// over the bar.
+#[test]
+#[ignore = "release-mode chaos tier (CI chaos job)"]
+fn grad_nan_recovery_still_meets_the_helmholtz_bar() {
+    let out = repro(
+        &[
+            "train",
+            "--problem", "helmholtz",
+            "--failpoints", "grad.nan@500",
+            "--expect-rel-l2", "1e-2",
+        ],
+        &[],
+    );
+    let (so, se) = (stdout_of(&out), stderr_of(&out));
+    assert!(
+        out.status.success(),
+        "healed run missed the existing accuracy bar\n\
+         stdout:\n{so}\nstderr:\n{se}"
+    );
+    assert!(
+        se.contains("recovery[1/"),
+        "no recovery line on stderr:\n{se}"
+    );
+    assert!(
+        se.contains("lr scale restored to 1.0"),
+        "backoff anneal did not fire:\n{se}"
+    );
+    assert!(
+        so.contains("recoveries: 1"),
+        "report missing the recovery record:\n{so}"
+    );
+}
+
+/// (b) Crash (exit 137) injected at the k-th checkpoint write, for
+/// every save point of the run: any completed save must stay
+/// salvageable through the generation ring; a crash during the very
+/// first save (nothing durable yet) must fail the resume with the
+/// clear salvage error listing every candidate — never a panic.
+#[test]
+#[ignore = "release-mode chaos tier (CI chaos job)"]
+fn checkpoint_kill_never_loses_a_completed_save() {
+    // write call order in this run: primary@100 (hit 1), best@100
+    // (hit 2 — first save always improves on +inf), primary@200,
+    // best@200 or primary@300, ... — hits 1..=4 all exist.
+    for k in 1..=4u32 {
+        let dir = tmp_dir(&format!("kill{k}"));
+        let ckpt = dir.join("out.ckpt");
+        let ckpt_s = ckpt.to_str().unwrap();
+        let fp = format!("checkpoint.write.kill@{k}");
+        let out = repro(
+            &[
+                "train",
+                "--problem", "poisson_sin",
+                "--iters", "300",
+                "--layers", "2,16,1",
+                "--nb", "64",
+                "--checkpoint", ckpt_s,
+                "--checkpoint-every", "100",
+                "--failpoints", &fp,
+            ],
+            &[],
+        );
+        assert_eq!(
+            out.status.code(),
+            Some(137),
+            "kill@{k} did not kill the run\nstderr:\n{}",
+            stderr_of(&out)
+        );
+        let resume = repro(
+            &["train", "--resume", ckpt_s, "--iters", "20"],
+            &[],
+        );
+        let (so, se) = (stdout_of(&resume), stderr_of(&resume));
+        if k == 1 {
+            // the very first write was torn and nothing else exists:
+            // the failure must be the salvage error, not a panic
+            assert!(
+                !resume.status.success(),
+                "resume from a never-completed save succeeded?\n{so}"
+            );
+            assert!(
+                se.contains("no loadable checkpoint generation"),
+                "expected the salvage error, got:\n{se}"
+            );
+            assert!(
+                !se.contains("panicked"),
+                "corrupt ring caused a panic:\n{se}"
+            );
+        } else {
+            assert!(
+                resume.status.success(),
+                "kill@{k}: ring lost the completed save\n\
+                 stdout:\n{so}\nstderr:\n{se}"
+            );
+            assert!(
+                so.contains("resumed from step"),
+                "resume did not restore a step count:\n{so}"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// (c) AVX2 kernel fault injected right after the step-200 save:
+/// dispatch degrades to the scalar kernels mid-run and training
+/// continues. The degraded continuation must be bit-identical to a
+/// forced-scalar run resumed from the same step-200 ring artifact —
+/// compared via the quad-point u hash both runs print.
+#[test]
+#[ignore = "release-mode chaos tier (CI chaos job)"]
+fn avx2_fault_degrades_bit_identical_to_scalar_continuation() {
+    let dir = tmp_dir("degrade");
+    let ckpt = dir.join("out.ckpt");
+    let ckpt_s = ckpt.to_str().unwrap();
+    // run A: fault at step 201 -> steps 201..400 run on the scalar
+    // kernels; the step-200 state lands at out.ckpt.g0 after the
+    // final save rotates the ring
+    let a = repro(
+        &[
+            "train",
+            "--problem", "poisson_sin",
+            "--iters", "400",
+            "--checkpoint", ckpt_s,
+            "--checkpoint-every", "200",
+            "--failpoints", "kernel.avx2.fault@201",
+        ],
+        &[],
+    );
+    let (so_a, se_a) = (stdout_of(&a), stderr_of(&a));
+    assert!(a.status.success(), "run A failed:\n{so_a}\n{se_a}");
+    assert!(
+        se_a.contains("kernel degradation"),
+        "no degradation notice on stderr:\n{se_a}"
+    );
+    let g0 = format!("{ckpt_s}.g0");
+    assert!(
+        Path::new(&g0).is_file(),
+        "step-200 generation missing after the ring rotated"
+    );
+    // run B: resume the step-200 artifact under forced-scalar dispatch
+    // and train the same 200 remaining steps
+    let b = repro(
+        &["train", "--resume", &g0, "--iters", "200"],
+        &[("REPRO_FORCE_SCALAR", "1")],
+    );
+    let (so_b, se_b) = (stdout_of(&b), stderr_of(&b));
+    assert!(b.status.success(), "run B failed:\n{so_b}\n{se_b}");
+    assert!(
+        so_b.contains("resumed from step 200"),
+        "run B did not resume at step 200:\n{so_b}"
+    );
+    assert_eq!(
+        u_hash(&so_a),
+        u_hash(&so_b),
+        "post-degradation trajectory is not bit-identical to the \
+         scalar continuation\nrun A:\n{so_a}\nrun B:\n{so_b}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// (d) A stalled step trips the watchdog: warn-only (the run
+/// completes) and counted in the report summary.
+#[test]
+#[ignore = "release-mode chaos tier (CI chaos job)"]
+fn step_stall_trips_the_watchdog_without_killing_the_run() {
+    let out = repro(
+        &[
+            "train",
+            "--problem", "poisson_sin",
+            "--iters", "10",
+            "--layers", "2,8,1",
+            "--nb", "32",
+            "--watchdog-ms", "100",
+            "--failpoints", "step.stall@3=400",
+        ],
+        &[],
+    );
+    let (so, se) = (stdout_of(&out), stderr_of(&out));
+    assert!(out.status.success(), "stall killed the run:\n{so}\n{se}");
+    assert!(
+        se.contains("watchdog: step 3"),
+        "watchdog did not flag the stalled step:\n{se}"
+    );
+    assert!(
+        so.contains("watchdog: 1 stalled step(s) flagged"),
+        "stall count missing from the summary:\n{so}"
+    );
+}

@@ -64,7 +64,7 @@ fn poisson_training_loss_decreases() {
     let cfg = TrainConfig { iters: 500, ..TrainConfig::default() };
     let mut t = trainer(&engine, "fv_poisson_ne4_nt5_nq20", None, &src,
                         &cfg);
-    let (l0, ..) = t.step_once().unwrap();
+    let l0 = t.step_once().unwrap().loss;
     let report = t.run().unwrap();
     assert!(report.final_loss < 0.5 * l0,
             "loss {l0} -> {} did not halve", report.final_loss);
@@ -117,7 +117,7 @@ fn pinn_baseline_trains() {
                            sensor_values: None };
     let cfg = TrainConfig { iters: 100, ..TrainConfig::default() };
     let mut t = trainer(&engine, "pinn_poisson_nc400", None, &src, &cfg);
-    let (l0, ..) = t.step_once().unwrap();
+    let l0 = t.step_once().unwrap().loss;
     let report = t.run().unwrap();
     assert!(report.final_loss < l0);
 }
@@ -137,8 +137,8 @@ fn hp_loop_baseline_matches_fastvpinn_loss_at_same_params() {
                          &cfg);
     let mut hp = trainer(&engine, "hp_poisson_ne16_nt5_nq5", None, &src,
                          &cfg);
-    let (lf, ..) = fv.step_once().unwrap();
-    let (lh, ..) = hp.step_once().unwrap();
+    let lf = fv.step_once().unwrap().loss;
+    let lh = hp.step_once().unwrap().loss;
     let rel = (lf - lh).abs() / lf.abs().max(1e-12);
     assert!(rel < 1e-3, "fv {lf} vs hp {lh} (rel {rel})");
 }

@@ -61,7 +61,7 @@ fn poisson_sin_smoke_loss_drops_10x_in_500_iters() {
         ..TrainConfig::default()
     };
     let mut t = poisson_trainer(&mesh, &dom, &problem, &cfg);
-    let (l0, ..) = t.step_once().unwrap();
+    let l0 = t.step_once().unwrap().loss;
     let report = t.run().unwrap();
     assert!(
         report.final_loss < 0.1 * l0,
@@ -307,7 +307,7 @@ fn helmholtz_smoke_loss_drops_10x_in_500_iters() {
         NativeBackend::new(&ncfg, &src, &BackendOpts::from(&cfg)).unwrap();
     let mut t = Trainer::new(Box::new(backend), &cfg);
     assert_eq!(t.loss_kind(), "helmholtz");
-    let (l0, ..) = t.step_once().unwrap();
+    let l0 = t.step_once().unwrap().loss;
     let report = t.run().unwrap();
     assert!(
         report.final_loss < 0.1 * l0,
@@ -339,7 +339,7 @@ fn cd_var_smoke_loss_drops_10x_in_500_iters() {
         NativeBackend::new(&ncfg, &src, &BackendOpts::from(&cfg)).unwrap();
     let mut t = Trainer::new(Box::new(backend), &cfg);
     assert_eq!(t.loss_kind(), "cd");
-    let (l0, ..) = t.step_once().unwrap();
+    let l0 = t.step_once().unwrap().loss;
     let report = t.run().unwrap();
     assert!(
         report.final_loss < 0.1 * l0,
