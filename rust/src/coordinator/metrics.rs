@@ -1,5 +1,7 @@
 //! Error norms between predictions and references (exact or FEM).
 
+use anyhow::{bail, Result};
+
 /// Standard error norms over a point set.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ErrorNorms {
@@ -9,7 +11,8 @@ pub struct ErrorNorms {
     pub rmse: f64,
     /// Max absolute error.
     pub linf: f64,
-    /// ||pred - ref||_2 / ||ref||_2
+    /// ||pred - ref||_2 / ||ref||_2 — see [`ErrorNorms::compute`] for
+    /// the identically-zero-reference degradation.
     pub rel_l2: f64,
     /// Point count.
     pub n: usize,
@@ -17,12 +20,29 @@ pub struct ErrorNorms {
 
 impl ErrorNorms {
     /// All norms of `pred - reference` over a point set.
-    pub fn compute(pred: &[f64], reference: &[f64]) -> ErrorNorms {
-        assert_eq!(pred.len(), reference.len());
+    ///
+    /// Errors (instead of panicking — this is CLI-reachable through
+    /// `--expect-rel-l2` and the serve stats path) when the slices
+    /// disagree in length.
+    ///
+    /// Degenerate reference: when `reference` is identically zero,
+    /// `||ref||_2 = 0` and the relative norm is undefined, so `rel_l2`
+    /// degrades to the **absolute** L2 norm `||pred - ref||_2`
+    /// (unnormalized, not divided by n). Callers comparing against a
+    /// rel-L2 bar should make sure their reference is nonzero.
+    pub fn compute(pred: &[f64], reference: &[f64]) -> Result<ErrorNorms> {
+        if pred.len() != reference.len() {
+            bail!(
+                "error-norm length mismatch: {} predictions vs {} \
+                 reference values",
+                pred.len(),
+                reference.len()
+            );
+        }
         let n = pred.len();
         if n == 0 {
-            return ErrorNorms { mae: 0.0, rmse: 0.0, linf: 0.0,
-                                rel_l2: 0.0, n: 0 };
+            return Ok(ErrorNorms { mae: 0.0, rmse: 0.0, linf: 0.0,
+                                   rel_l2: 0.0, n: 0 });
         }
         let mut abs_sum = 0.0;
         let mut sq_sum = 0.0;
@@ -35,21 +55,24 @@ impl ErrorNorms {
             linf = linf.max(d.abs());
             ref_sq += r * r;
         }
-        ErrorNorms {
+        Ok(ErrorNorms {
             mae: abs_sum / n as f64,
             rmse: (sq_sum / n as f64).sqrt(),
             linf,
+            // zero reference: fall back to the absolute L2 norm (the
+            // relative norm would be 0/0) — documented on `compute`
             rel_l2: if ref_sq > 0.0 {
                 (sq_sum / ref_sq).sqrt()
             } else {
                 sq_sum.sqrt()
             },
             n,
-        }
+        })
     }
 
     /// [`ErrorNorms::compute`] for f32 predictions (runtime outputs).
-    pub fn compute_f32(pred: &[f32], reference: &[f64]) -> ErrorNorms {
+    pub fn compute_f32(pred: &[f32], reference: &[f64])
+        -> Result<ErrorNorms> {
         let p: Vec<f64> = pred.iter().map(|&v| v as f64).collect();
         Self::compute(&p, reference)
     }
@@ -78,7 +101,7 @@ mod tests {
     #[test]
     fn zero_error() {
         let v = vec![1.0, 2.0, 3.0];
-        let e = ErrorNorms::compute(&v, &v);
+        let e = ErrorNorms::compute(&v, &v).unwrap();
         assert_eq!(e.mae, 0.0);
         assert_eq!(e.rel_l2, 0.0);
         assert_eq!(e.linf, 0.0);
@@ -86,20 +109,43 @@ mod tests {
 
     #[test]
     fn known_values() {
-        let e = ErrorNorms::compute(&[1.0, 3.0], &[0.0, 0.0]);
+        let e = ErrorNorms::compute(&[1.0, 3.0], &[0.0, 0.0]).unwrap();
         assert_eq!(e.mae, 2.0);
         assert!((e.rmse - (5.0f64).sqrt()).abs() < 1e-12);
         assert_eq!(e.linf, 3.0);
+    }
+
+    /// Regression: a length mismatch used to `assert_eq!`-panic (and
+    /// was CLI-reachable through `--expect-rel-l2`); it is now a
+    /// recoverable error naming both lengths.
+    #[test]
+    fn length_mismatch_is_an_error_not_a_panic() {
+        let err = ErrorNorms::compute(&[1.0, 2.0], &[1.0])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("2 predictions"), "{err}");
+        assert!(err.contains("1 reference"), "{err}");
+        assert!(ErrorNorms::compute_f32(&[1.0f32], &[]).is_err());
+    }
+
+    /// Documented degradation: with an identically-zero reference the
+    /// relative norm is undefined, so `rel_l2` falls back to the
+    /// *absolute* L2 norm ||pred||_2 (unnormalized).
+    #[test]
+    fn rel_l2_degrades_to_absolute_l2_on_zero_reference() {
+        let e = ErrorNorms::compute(&[3.0, 4.0], &[0.0, 0.0]).unwrap();
+        assert_eq!(e.rel_l2, 5.0); // sqrt(3^2 + 4^2), not /sqrt(n)
+        assert_eq!(e.rmse, (12.5f64).sqrt());
     }
 
     #[test]
     fn rel_l2_scale_invariance() {
         let p = vec![1.1, 2.2, 3.3];
         let r = vec![1.0, 2.0, 3.0];
-        let e1 = ErrorNorms::compute(&p, &r);
+        let e1 = ErrorNorms::compute(&p, &r).unwrap();
         let p10: Vec<f64> = p.iter().map(|v| v * 10.0).collect();
         let r10: Vec<f64> = r.iter().map(|v| v * 10.0).collect();
-        let e2 = ErrorNorms::compute(&p10, &r10);
+        let e2 = ErrorNorms::compute(&p10, &r10).unwrap();
         assert!((e1.rel_l2 - e2.rel_l2).abs() < 1e-12);
     }
 

@@ -319,7 +319,7 @@ impl<'a> Trainer<'a> {
                     !heads.is_empty(),
                     "backend returned no heads for validation"
                 );
-                ErrorNorms::compute_f32(&heads.swap_remove(0), reference)
+                ErrorNorms::compute_f32(&heads.swap_remove(0), reference)?
                     .rel_l2
             }
             None => last_loss,
@@ -588,7 +588,7 @@ impl<'a> Trainer<'a> {
     pub fn evaluate(&self, points: &[[f64; 2]], reference: &[f64])
         -> Result<ErrorNorms> {
         let pred = self.predict(points)?;
-        Ok(ErrorNorms::compute_f32(&pred, reference))
+        ErrorNorms::compute_f32(&pred, reference)
     }
 }
 

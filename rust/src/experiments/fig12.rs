@@ -72,7 +72,7 @@ pub fn run(args: &Args) -> Result<()> {
 
     // ---- compare at mesh nodes
     let pred = trainer.predict(&mesh.points)?;
-    let errors = ErrorNorms::compute_f32(&pred, fem.nodal());
+    let errors = ErrorNorms::compute_f32(&pred, fem.nodal())?;
     println!("vs FEM: MAE {:.3e}, rel-L2 {:.3e}, Linf {:.3e}",
              errors.mae, errors.rel_l2, errors.linf);
 

@@ -67,7 +67,7 @@ pub fn run(args: &Args) -> Result<()> {
         .map(|p| problem.exact(p[0], p[1]).unwrap())
         .collect();
     let pred = trainer.predict(&grid)?;
-    let errors = ErrorNorms::compute_f32(&pred, &exact);
+    let errors = ErrorNorms::compute_f32(&pred, &exact)?;
     println!("solution MAE {:.3e} (paper: 6.6e-2)", errors.mae);
 
     let mut w = CsvWriter::create(

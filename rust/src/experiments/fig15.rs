@@ -79,8 +79,8 @@ pub fn run(args: &Args) -> Result<()> {
         .iter()
         .map(|p| InverseSpaceCd::eps_actual(p[0], p[1]))
         .collect();
-    let u_err = ErrorNorms::compute(&u_pred, fem.nodal());
-    let eps_err = ErrorNorms::compute(&eps_pred, &eps_exact);
+    let u_err = ErrorNorms::compute(&u_pred, fem.nodal())?;
+    let eps_err = ErrorNorms::compute(&eps_pred, &eps_exact)?;
     println!("u:   MAE {:.3e}, rel-L2 {:.3e} (paper: O(1e-2))",
              u_err.mae, u_err.rel_l2);
     println!("eps: MAE {:.3e}, rel-L2 {:.3e} (paper: O(1e-2))",

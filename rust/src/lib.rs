@@ -50,7 +50,11 @@
 //! train --resume` continues the loss trajectory exactly, and
 //! [`runtime::infer::InferenceSession`] (CLI: `repro infer`) serves
 //! batched point-cloud queries from the artifact alone — the paper's
-//! amortized-inference payoff (`repro bench` tracks points/sec).
+//! amortized-inference payoff (`repro bench` tracks points/sec). On
+//! top of that sits [`serve`] (CLI: `repro serve`): a long-running
+//! multi-model inference server that micro-batches concurrent TCP
+//! queries onto the same blocked eval path, with LRU model caching,
+//! `/metrics`-style stats and graceful SIGTERM drain.
 //!
 //! ## Quick tour (native backend — runs with zero setup)
 //!
@@ -122,6 +126,7 @@ pub mod linalg;
 pub mod mesh;
 pub mod problems;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Convenience re-exports for examples and downstream users.
@@ -146,6 +151,9 @@ pub mod prelude {
         Checkpoint, DomainFingerprint, TrainHyper,
     };
     pub use crate::runtime::infer::InferenceSession;
+    pub use crate::serve::{
+        ServeClient, ServeConfig, Server, ServerHandle,
+    };
     #[cfg(feature = "xla")]
     pub use crate::runtime::backend::xla::XlaBackend;
     #[cfg(feature = "xla")]

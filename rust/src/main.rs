@@ -8,6 +8,14 @@
 //!   infer --ckpt out.ckpt ...      load a checkpoint and serve batched
 //!                                  predictions over a query point cloud
 //!                                  (CSV/VTK output)
+//!   serve --registry DIR ...       long-running multi-model inference
+//!                                  server: length-prefixed JSON over
+//!                                  TCP, micro-batched onto the blocked
+//!                                  eval path, LRU model cache, graceful
+//!                                  SIGTERM drain
+//!   serve-probe --addr H:P ...     one-shot client against a running
+//!                                  serve instance (ping/stats/models/
+//!                                  eval/shutdown)
 //!   bench [--quick] ...            time the native train-step hot path
 //!                                  + inference throughput and write
 //!                                  BENCH_native_step.json
@@ -65,6 +73,8 @@ fn dispatch(args: &Args) -> Result<()> {
         "artifacts" => cmd_artifacts(args),
         "train" => cmd_train(args),
         "infer" => cmd_infer(args),
+        "serve" => cmd_serve(args),
+        "serve-probe" => cmd_serve_probe(args),
         "bench" => cmd_bench(args),
         "experiment" => {
             if args.positional.is_empty() {
@@ -110,8 +120,16 @@ repro — FastVPINNs coordinator
   repro infer --ckpt F.ckpt [--points F.csv | --grid N | --quad]
               [--out pred.csv|pred.vtk] [--batch N]
               [--precision f64|f32]
+  repro serve --registry DIR [--addr HOST:PORT] [--cache N]
+              [--workers N] [--max-batch N] [--max-wait-ms N]
+              [--queue-depth N] [--drain-timeout-s N]
+  repro serve-probe --addr HOST:PORT
+              [--op ping|stats|models|eval|shutdown]
+              [--model NAME] [--grid N] [--points F.csv]
+              [--precision f64|f32] [--clients N] [--repeat N]
   repro bench [--backend native] [--quick] [--iters N] [--warmup N]
               [--nt1d N] [--nq1d N] [--out BENCH_native_step.json]
+              [--no-serve]
   repro artifacts [--artifacts DIR]              (requires --features xla)
   repro experiment <{experiments}|all>
               [--backend native|xla] [--iters N] [--paper-scale]
@@ -415,6 +433,68 @@ fn cmd_bench(args: &Args) -> Result<()> {
             ]));
         }
     }
+    // serve throughput: a fresh in-process server per case (so the
+    // latency percentiles and batch-fill are per-case, not
+    // cumulative), hammered over real TCP at two client
+    // concurrencies and both precisions — the `repro serve`
+    // datapoints: aggregate points/sec, server-side p50/p99, and how
+    // full the coalesced micro-batches ran
+    if !args.has("no-serve") {
+        use fastvpinns::serve::bench::{
+            prepare_bench_registry, serve_bench_case,
+        };
+        let reg = std::env::temp_dir().join(format!(
+            "fastvpinns_serve_bench_{}",
+            std::process::id()
+        ));
+        prepare_bench_registry(&reg, STD_LAYERS)?;
+        let reqs_per_client = if quick { 8 } else { 24 };
+        // run the sweep through a named closure so the temp registry
+        // is removed on success and failure alike
+        let mut sweep = || -> Result<()> {
+            for &precision in &[Precision::F64, Precision::F32] {
+                for &clients in &[1usize, 4] {
+                    let c = serve_bench_case(
+                        &reg, clients, 4096, reqs_per_client, precision,
+                    )?;
+                    println!(
+                        "  {:<14} {:<17} clients={:<4} ({:>7} points) \
+                         p50 {:>9.3} ms  p99 {:>9.3} ms {:>12.0} \
+                         points/s  fill {:.2} [{}]",
+                        "serve", "tcp_eval", c.clients,
+                        c.points_per_req, c.p50_ms, c.p99_ms,
+                        c.points_per_sec, c.batch_fill, c.precision
+                    );
+                    cases.push(Json::obj(vec![
+                        ("loss", Json::str("serve")),
+                        ("pde", Json::str("tcp_eval")),
+                        ("clients", Json::num(c.clients as f64)),
+                        (
+                            "points_per_req",
+                            Json::num(c.points_per_req as f64),
+                        ),
+                        ("requests", Json::num(c.requests as f64)),
+                        (
+                            "precision",
+                            Json::str(c.precision.to_string()),
+                        ),
+                        ("p50_ms", Json::num(c.p50_ms)),
+                        ("p99_ms", Json::num(c.p99_ms)),
+                        (
+                            "points_per_sec",
+                            Json::num(c.points_per_sec),
+                        ),
+                        ("batch_fill", Json::num(c.batch_fill)),
+                        ("max_batch", Json::num(c.max_batch as f64)),
+                    ]));
+                }
+            }
+            Ok(())
+        };
+        let serve_res = sweep();
+        let _ = std::fs::remove_dir_all(&reg);
+        serve_res?;
+    }
     let doc = Json::obj(vec![
         ("bench", Json::str("native_step")),
         ("backend", Json::str("native")),
@@ -437,6 +517,132 @@ fn cmd_bench(args: &Args) -> Result<()> {
     std::fs::write(&out_path, format!("{doc}\n"))?;
     println!("bench record -> {out_path}");
     Ok(())
+}
+
+/// `repro serve`: run the micro-batching inference server until
+/// SIGTERM/SIGINT or a client `shutdown` op, then drain gracefully.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use fastvpinns::serve::{BatchPolicy, ServeConfig, Server};
+    use std::time::Duration;
+
+    let registry = args.req_str("registry")?;
+    let mut config =
+        ServeConfig::new(args.str_or("addr", "127.0.0.1:7077"), registry);
+    config.cache_capacity = args.usize_or("cache", 4)?.max(1);
+    config.workers_per_model = args.usize_or("workers", 2)?.max(1);
+    config.policy = BatchPolicy {
+        max_batch: args.usize_or("max-batch", 8)?.max(1),
+        max_wait: Duration::from_millis(
+            args.usize_or("max-wait-ms", 2)? as u64,
+        ),
+        queue_depth: args.usize_or("queue-depth", 64)?.max(1),
+    };
+    config.drain_timeout = Duration::from_secs(
+        args.usize_or("drain-timeout-s", 10)? as u64,
+    );
+    Server::new(config)?.run()
+}
+
+/// `repro serve-probe`: a one-shot client for scripting against a
+/// running serve instance — CI smoke tests and shell pipelines.
+fn cmd_serve_probe(args: &Args) -> Result<()> {
+    use fastvpinns::runtime::infer::{read_points_csv, Precision};
+    use fastvpinns::serve::ServeClient;
+
+    let addr = args.req_str("addr")?;
+    let op = args.str_or("op", "ping");
+    match op.as_str() {
+        "ping" => {
+            ServeClient::connect(&*addr)?.ping()?;
+            println!("pong");
+            Ok(())
+        }
+        "stats" => {
+            let stats = ServeClient::connect(&*addr)?.stats()?;
+            println!("{stats}");
+            Ok(())
+        }
+        "models" => {
+            let models = ServeClient::connect(&*addr)?.models()?;
+            for m in models {
+                println!("{m}");
+            }
+            Ok(())
+        }
+        "shutdown" => {
+            ServeClient::connect(&*addr)?.shutdown_server()?;
+            println!("server draining");
+            Ok(())
+        }
+        "eval" => {
+            let model = args.req_str("model")?;
+            let precision: Precision =
+                args.str_or("precision", "f64").parse()?;
+            let pts: Vec<[f64; 2]> =
+                if let Some(f) = args.flag("points") {
+                    read_points_csv(f)?
+                } else {
+                    let n = args.usize_or("grid", 32)?.max(2);
+                    eval_grid(n, n, 0.0, 0.0, 1.0, 1.0)
+                };
+            anyhow::ensure!(!pts.is_empty(), "empty query point cloud");
+            let clients = args.usize_or("clients", 1)?.max(1);
+            let repeat = args.usize_or("repeat", 1)?.max(1);
+            let t0 = std::time::Instant::now();
+            let joins: Vec<_> = (0..clients)
+                .map(|_| {
+                    let addr = addr.clone();
+                    let model = model.clone();
+                    let pts = pts.clone();
+                    std::thread::spawn(move || -> Result<(f32, f32)> {
+                        let mut c = ServeClient::connect(&*addr)?;
+                        let mut first = 0.0f32;
+                        let mut last = 0.0f32;
+                        for _ in 0..repeat {
+                            let (u, _) = c.eval(
+                                &model,
+                                &pts,
+                                Some(precision),
+                            )?;
+                            first = *u.first().unwrap_or(&f32::NAN);
+                            last = *u.last().unwrap_or(&f32::NAN);
+                        }
+                        Ok((first, last))
+                    })
+                })
+                .collect();
+            let mut outputs = Vec::new();
+            for j in joins {
+                outputs.push(j.join().map_err(|_| {
+                    anyhow::anyhow!("probe client panicked")
+                })??);
+            }
+            let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+            let total_pts = clients * repeat * pts.len();
+            // every client asked the same query: answers must agree
+            for w in outputs.windows(2) {
+                anyhow::ensure!(
+                    w[0] == w[1],
+                    "clients disagree: {:?} vs {:?}",
+                    w[0],
+                    w[1]
+                );
+            }
+            println!(
+                "eval ok: {} points x {repeat} x {clients} clients in \
+                 {elapsed:.3}s ({:.0} points/s), u[0]={} u[-1]={}",
+                pts.len(),
+                total_pts as f64 / elapsed,
+                outputs[0].0,
+                outputs[0].1,
+            );
+            Ok(())
+        }
+        other => bail!(
+            "unknown --op '{other}' \
+             (expected ping|stats|models|eval|shutdown)"
+        ),
+    }
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -696,7 +902,7 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         anyhow::ensure!(heads.len() >= 2, "two-head network expected");
         if exact_known {
             let exact = exact_on_grid(&*problem, &grid)?;
-            let err = ErrorNorms::compute_f32(&heads[0], &exact);
+            let err = ErrorNorms::compute_f32(&heads[0], &exact)?;
             println!("errors: MAE {:.3e}, rel-L2 {:.3e}, Linf {:.3e}",
                      err.mae, err.rel_l2, err.linf);
             rel_l2_measured = Some(err.rel_l2);
@@ -706,7 +912,7 @@ fn cmd_train_native(args: &Args) -> Result<()> {
                 heads[1].iter().map(|&v| v as f64).collect();
             let eps_exact: Vec<f64> =
                 grid.iter().map(|p| eps_star(p[0], p[1])).collect();
-            let err = ErrorNorms::compute(&eps_pred, &eps_exact);
+            let err = ErrorNorms::compute(&eps_pred, &eps_exact)?;
             println!("eps field: MAE {:.3e}, rel-L2 {:.3e}, Linf {:.3e}",
                      err.mae, err.rel_l2, err.linf);
         }

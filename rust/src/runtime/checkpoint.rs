@@ -59,7 +59,7 @@
 //! best-effort migration. Any layout change (new section, reordered
 //! fields, different hash) bumps the byte.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -682,6 +682,47 @@ impl Checkpoint {
             attempts.join("\n  ")
         )
     }
+
+    /// Content fingerprint of the artifact: FNV-1a over the exact
+    /// serialized bytes. Two checkpoints fingerprint equal iff their
+    /// artifacts are byte-identical (`to_bytes` is deterministic), so
+    /// the serve layer can key its session cache on this and share one
+    /// worker pool between registry names that point at the same
+    /// model.
+    pub fn artifact_fingerprint(&self) -> u64 {
+        fnv1a_64(&self.to_bytes())
+    }
+}
+
+/// Scan a registry directory for serveable checkpoint artifacts:
+/// every `<name>.ckpt` primary, as `(name, path)` pairs sorted by
+/// name. Ring generations (`.g0`/`.g1`), best-metric snapshots
+/// (`.ckpt.best`) and atomic-write temp files (`.tmp.<pid>`) are
+/// siblings of a primary, not models of their own, and are skipped —
+/// the ring is still honored at *load* time via
+/// [`Checkpoint::read_salvage`] on the primary path.
+pub fn scan_registry(dir: &Path) -> Result<Vec<(String, PathBuf)>> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("scan registry {}", dir.display()))?;
+    let mut models = Vec::new();
+    for entry in entries {
+        let path = entry
+            .with_context(|| format!("scan registry {}", dir.display()))?
+            .path();
+        if !path.is_file() {
+            continue;
+        }
+        if path.extension().and_then(|e| e.to_str()) != Some("ckpt") {
+            continue;
+        }
+        let stem = match path.file_stem().and_then(|s| s.to_str()) {
+            Some(s) if !s.is_empty() => s.to_string(),
+            _ => continue,
+        };
+        models.push((stem, path));
+    }
+    models.sort();
+    Ok(models)
 }
 
 /// Generations kept in the ring beside the primary artifact (`.g0` =
@@ -1063,5 +1104,43 @@ mod tests {
         let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
         assert_eq!(back.hyper.seed, ck.hyper.seed);
         assert_eq!(back.best_metric, None);
+    }
+
+    #[test]
+    fn fingerprint_tracks_artifact_bytes() {
+        let ck = sample();
+        let reparsed = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(ck.artifact_fingerprint(),
+                   reparsed.artifact_fingerprint());
+        let mut other = sample();
+        other.theta[0] += 1.0;
+        assert_ne!(ck.artifact_fingerprint(),
+                   other.artifact_fingerprint());
+    }
+
+    #[test]
+    fn registry_scan_lists_primaries_only() {
+        let dir = std::env::temp_dir().join(format!(
+            "fastvpinns_registry_scan_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        for name in [
+            "beta.ckpt",
+            "alpha.ckpt",
+            "alpha.ckpt.g0",
+            "alpha.ckpt.g1",
+            "alpha.ckpt.best",
+            "alpha.ckpt.tmp.123",
+            "notes.txt",
+        ] {
+            std::fs::write(dir.join(name), b"x").unwrap();
+        }
+        let models = scan_registry(&dir).unwrap();
+        let names: Vec<&str> =
+            models.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["alpha", "beta"]);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

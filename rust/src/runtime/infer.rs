@@ -297,7 +297,46 @@ impl InferenceSession {
     pub fn eval_u(&mut self, points: &[[f64; 2]]) -> Vec<f32> {
         self.eval(points).0
     }
+
+    /// Clone the model into an independent session with its own
+    /// scratch (and, when this session serves f32, its own packed f32
+    /// evaluator). `eval` takes `&mut self`, so a serve worker pool
+    /// needs one session per worker — `fork` gives each worker a
+    /// private copy without re-reading or re-parsing the artifact.
+    /// Both forks answer f64 queries bit-identically: they share the
+    /// exact parameter bits and the eval path is deterministic.
+    pub fn fork(&self) -> InferenceSession {
+        let net = self.net.clone();
+        let scratch = EvalScratch::new(&net);
+        let mut sess = InferenceSession {
+            net,
+            scratch,
+            precision: Precision::F64,
+            f32eval: None,
+            problem: self.problem.clone(),
+            problem_label: self.problem_label.clone(),
+            loss_kind: self.loss_kind.clone(),
+            step: self.step,
+            bbox: self.bbox,
+        };
+        sess.set_precision(self.precision);
+        sess
+    }
 }
+
+// Send audit: serve worker pools move one forked session into each
+// worker thread, so `InferenceSession` must be `Send`. It is — the
+// only non-trivially-owned state is the aligned GEMM scratch
+// (`AlignedBuf`), which declares `Send` itself — and this assertion
+// turns any future regression (e.g. an Rc or raw-pointer cache slipped
+// into the eval path) into a compile error right here instead of a
+// type error at the far-away spawn site.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<InferenceSession>();
+    assert_send::<F32Evaluator>();
+    assert_send::<Precision>();
+};
 
 /// Parse a query point cloud from a CSV of `x,y` rows (the CLI's
 /// `--points` format).
@@ -421,6 +460,12 @@ mod tests {
         assert_eq!(u, heads[0], "u head must be bit-identical");
         assert_eq!(eps.as_deref(), Some(&heads[1][..]),
                    "eps head must be bit-identical");
+        // a forked session (the serve worker-pool path) shares the
+        // exact parameter bits: same answers, bit for bit
+        let mut forked = sess.fork();
+        let (uf, epsf) = forked.eval(&pts);
+        assert_eq!(u, uf, "forked session u head drifted");
+        assert_eq!(eps, epsf, "forked session eps head drifted");
         // repeated queries reuse the scratch and stay identical
         let (u2, _) = sess.eval(&pts);
         assert_eq!(u, u2);

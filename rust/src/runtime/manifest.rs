@@ -159,10 +159,14 @@ impl Manifest {
     }
 
     /// Number of parameter arrays (p0..p{n-1}) in the signature.
+    ///
+    /// Only names matching the exact `p<digits>` convention count — a
+    /// plain `starts_with('p')` would misclassify future non-param
+    /// inputs like `points` or `pred_xy` as parameter arrays.
     pub fn n_param_arrays(&self) -> usize {
         self.inputs
             .iter()
-            .take_while(|s| s.name.starts_with('p'))
+            .take_while(|s| is_param_array_name(&s.name))
             .count()
     }
 
@@ -188,6 +192,16 @@ impl Manifest {
             .map(|i| self.inputs[i].shape.clone())
             .collect()
     }
+}
+
+/// True for the `p<digits>` parameter-array naming convention
+/// (`p0`, `p1`, ..., `p12`) and nothing else.
+fn is_param_array_name(name: &str) -> bool {
+    let rest = match name.strip_prefix('p') {
+        Some(r) => r,
+        None => return false,
+    };
+    !rest.is_empty() && rest.bytes().all(|b| b.is_ascii_digit())
 }
 
 #[cfg(test)]
@@ -246,6 +260,39 @@ mod tests {
         let m = Manifest::parse(SAMPLE).unwrap();
         assert_eq!(m.inputs[m.input_index("gx").unwrap()].numel(), 144);
         assert_eq!(m.inputs[m.input_index("tau").unwrap()].numel(), 1);
+    }
+
+    /// Regression: an adversarial leading input named `points` (or
+    /// `pred_xy`) merely *starts with* 'p' — the old
+    /// `starts_with('p')` check counted it as a parameter array and
+    /// shifted every downstream buffer index by one.
+    #[test]
+    fn adversarial_p_prefixed_input_is_not_a_param_array() {
+        let adversarial = SAMPLE
+            .replace(
+                r#"{"name": "m0", "shape": [2, 4], "dtype": "f32"}"#,
+                r#"{"name": "points", "shape": [2, 4], "dtype": "f32"}"#,
+            )
+            .replace(
+                r#"{"name": "m1", "shape": [4], "dtype": "f32"}"#,
+                r#"{"name": "pred_xy", "shape": [4], "dtype": "f32"}"#,
+            );
+        let m = Manifest::parse(&adversarial).unwrap();
+        // p0, p1 count; the run stops at "points"/"pred_xy"
+        assert_eq!(m.n_param_arrays(), 2);
+        assert_eq!(m.param_shapes(),
+                   vec![vec![2, 4], vec![4]]);
+    }
+
+    #[test]
+    fn param_name_convention_is_exact() {
+        assert!(is_param_array_name("p0"));
+        assert!(is_param_array_name("p17"));
+        assert!(!is_param_array_name("p"));
+        assert!(!is_param_array_name("points"));
+        assert!(!is_param_array_name("pred_xy"));
+        assert!(!is_param_array_name("p1x"));
+        assert!(!is_param_array_name("q0"));
     }
 
     #[test]

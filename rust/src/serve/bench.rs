@@ -1,0 +1,242 @@
+//! Serve throughput benchmarking: an in-process server hammered by
+//! concurrent clients over real TCP, reported as `loss: "serve"` rows
+//! in the `repro bench` record.
+//!
+//! Also home to [`synthetic_checkpoint`], the shared fixture builder
+//! for serve tests and benches: a Glorot-initialized network wrapped
+//! in a well-formed checkpoint artifact, no training run required.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::backend::native::Mlp;
+use crate::runtime::backend::{Coeff, VariationalForm};
+use crate::runtime::checkpoint::{
+    Checkpoint, DomainFingerprint, TrainHyper,
+};
+use crate::runtime::infer::Precision;
+
+use super::client::ServeClient;
+use super::server::{ServeConfig, Server};
+
+/// A well-formed checkpoint around an untrained Glorot-initialized
+/// network — enough for [`InferenceSession`] to load and serve it.
+/// The serve path only cares about parameter bits, not training
+/// history, so benches and tests can skip the training run entirely.
+///
+/// [`InferenceSession`]: crate::runtime::infer::InferenceSession
+pub fn synthetic_checkpoint(
+    layers: &[usize],
+    two_head: bool,
+    seed: u64,
+) -> Result<Checkpoint> {
+    let net = if two_head {
+        Mlp::glorot_two_head(layers, seed)?
+    } else {
+        Mlp::glorot(layers, seed)?
+    };
+    let n = net.theta.len();
+    Ok(Checkpoint {
+        problem: "synthetic".into(),
+        problem_label: format!("synthetic_seed{seed}"),
+        loss_mode: "forward".into(),
+        loss_kind: "poisson".into(),
+        cli: Vec::new(),
+        layers: layers.to_vec(),
+        two_head,
+        step: 0,
+        best_metric: None,
+        theta: net.theta,
+        eps: 0.0,
+        adam_m: vec![0.0; n],
+        adam_v: vec![0.0; n],
+        form: VariationalForm {
+            eps: Coeff::Const(1.0),
+            bx: Coeff::Const(0.0),
+            by: Coeff::Const(0.0),
+            c: Coeff::Const(0.0),
+        },
+        fingerprint: DomainFingerprint {
+            ne: 1,
+            nt: 1,
+            nq: 1,
+            n_points: 4,
+            n_cells: 1,
+            bbox: [0.0, 0.0, 1.0, 1.0],
+            quad_hash: 0,
+        },
+        hyper: TrainHyper {
+            tau: 10.0,
+            gamma: 10.0,
+            seed,
+            eps_init: 1.0,
+            nb: 0,
+            ns: 0,
+        },
+    })
+}
+
+/// The model name the bench registry serves.
+pub const BENCH_MODEL: &str = "bench";
+
+/// Write the bench registry: one synthetic model with the standard
+/// bench network shape, into `dir`.
+pub fn prepare_bench_registry(
+    dir: &Path,
+    layers: &[usize],
+) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| {
+        format!("create bench registry {}", dir.display())
+    })?;
+    let ck = synthetic_checkpoint(layers, false, 42)?;
+    ck.write(dir.join(format!("{BENCH_MODEL}.ckpt")))
+}
+
+/// One measured serve-throughput datapoint.
+pub struct ServeBenchCase {
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Precision every request asked for.
+    pub precision: Precision,
+    /// Points per eval request.
+    pub points_per_req: usize,
+    /// Total timed requests (all clients).
+    pub requests: usize,
+    /// Aggregate throughput over the timed window.
+    pub points_per_sec: f64,
+    /// Server-side median request latency.
+    pub p50_ms: f64,
+    /// Server-side p99 request latency.
+    pub p99_ms: f64,
+    /// Mean coalesced batch size over `max_batch`.
+    pub batch_fill: f64,
+    /// The coalescing cap the server ran with.
+    pub max_batch: usize,
+}
+
+/// Spin up a fresh in-process server over `registry`, drive it with
+/// `clients` concurrent TCP connections issuing `reqs_per_client`
+/// eval requests each, and report aggregate throughput plus the
+/// server's own latency percentiles and batch-fill ratio.
+pub fn serve_bench_case(
+    registry: &Path,
+    clients: usize,
+    points_per_req: usize,
+    reqs_per_client: usize,
+    precision: Precision,
+) -> Result<ServeBenchCase> {
+    let clients = clients.max(1);
+    let mut config = ServeConfig::new("127.0.0.1:0", registry);
+    config.workers_per_model = clients.clamp(1, 4);
+    let handle = Server::spawn(config.clone())?;
+    let addr = handle.addr();
+
+    // Warm up: load the model and touch both eval paths once so the
+    // timed window measures serving, not artifact parsing or the
+    // one-time f32 weight packing.
+    let mut warm = ServeClient::connect(addr)?;
+    warm.eval(BENCH_MODEL, &query(0, 0, 16), Some(precision))?;
+    let warm_stats = handle.stats();
+    let warmup_requests = warm_stats.requests();
+
+    let t0 = Instant::now();
+    let joins: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || -> Result<()> {
+                let mut client = ServeClient::connect(addr)?;
+                for r in 0..reqs_per_client {
+                    let q = query(c, r, points_per_req);
+                    let (u, _) = client.eval(
+                        BENCH_MODEL,
+                        &q,
+                        Some(precision),
+                    )?;
+                    if u.len() != points_per_req {
+                        return Err(anyhow!(
+                            "short reply: {} of {points_per_req}",
+                            u.len()
+                        ));
+                    }
+                }
+                Ok(())
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join()
+            .map_err(|_| anyhow!("bench client panicked"))??;
+    }
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let stats = handle.stats();
+    let lat = stats.latency_summary();
+    let fill = stats.batch_fill(config.policy.max_batch);
+    let timed_requests =
+        stats.requests().saturating_sub(warmup_requests) as usize;
+    handle.shutdown()?;
+
+    let total_points = (timed_requests * points_per_req) as f64;
+    Ok(ServeBenchCase {
+        clients,
+        precision,
+        points_per_req,
+        requests: timed_requests,
+        points_per_sec: total_points / elapsed,
+        p50_ms: lat.median,
+        p99_ms: lat.p99,
+        batch_fill: fill,
+        max_batch: config.policy.max_batch,
+    })
+}
+
+/// Deterministic per-(client, request) query cloud in the unit square.
+fn query(client: usize, req: usize, n: usize) -> Vec<[f64; 2]> {
+    let salt = 0.17 * client as f64 + 0.031 * req as f64;
+    (0..n)
+        .map(|i| {
+            let t = (i as f64 + 0.5) / n as f64;
+            [(t + salt).fract(), (t * 1.618 + salt).fract()]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::runtime::checkpoint::expected_n_params;
+    use crate::runtime::infer::InferenceSession;
+
+    #[test]
+    fn synthetic_checkpoint_loads_and_roundtrips() {
+        let ck = synthetic_checkpoint(&[2, 5, 1], false, 3).unwrap();
+        assert_eq!(
+            ck.theta.len(),
+            expected_n_params(&[2, 5, 1], false)
+        );
+        let mut sess = InferenceSession::from_checkpoint(&ck).unwrap();
+        let (u, eps) = sess.eval(&[[0.5, 0.5]]);
+        assert_eq!(u.len(), 1);
+        assert!(eps.is_none());
+        // two-head variant exposes the eps head
+        let ck2 = synthetic_checkpoint(&[2, 5, 1], true, 3).unwrap();
+        let mut sess2 =
+            InferenceSession::from_checkpoint(&ck2).unwrap();
+        let (_, eps2) = sess2.eval(&[[0.5, 0.5]]);
+        assert_eq!(eps2.unwrap().len(), 1);
+    }
+
+    #[test]
+    fn queries_are_deterministic_and_in_the_unit_square() {
+        let a = query(2, 7, 32);
+        let b = query(2, 7, 32);
+        assert_eq!(a, b);
+        assert!(a
+            .iter()
+            .all(|p| (0.0..1.0).contains(&p[0])
+                && (0.0..1.0).contains(&p[1])));
+        assert_ne!(query(0, 0, 8), query(1, 0, 8));
+    }
+}

@@ -1,0 +1,141 @@
+//! A small blocking client for the serve protocol — used by the
+//! `repro serve-probe` CLI, the e2e tests and the serve bench. Any
+//! language can speak the protocol (4-byte LE length + JSON); this is
+//! merely the in-repo reference implementation.
+
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::infer::Precision;
+use crate::util::json::Json;
+
+use super::protocol::{
+    decode_f32s, read_frame, write_frame,
+};
+
+/// One connection to a running serve instance.
+pub struct ServeClient {
+    stream: TcpStream,
+}
+
+impl ServeClient {
+    /// Connect to a server.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<ServeClient> {
+        let mut last: Option<std::io::Error> = None;
+        for a in addr
+            .to_socket_addrs()
+            .context("resolve serve address")?
+        {
+            match TcpStream::connect_timeout(
+                &a,
+                Duration::from_secs(5),
+            ) {
+                Ok(stream) => {
+                    let _ = stream.set_nodelay(true);
+                    return Ok(ServeClient { stream });
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        match last {
+            Some(e) => {
+                Err(e).context("connect to serve instance")
+            }
+            None => bail!("serve address resolved to nothing"),
+        }
+    }
+
+    /// Send one request object, wait for its reply.
+    pub fn request(&mut self, msg: &Json) -> Result<Json> {
+        write_frame(&mut self.stream, msg)?;
+        match read_frame(&mut self.stream)? {
+            Some(reply) => Ok(reply),
+            None => bail!("server closed the connection mid-request"),
+        }
+    }
+
+    /// Send a request and insist on `ok: true`, surfacing the server's
+    /// error message otherwise.
+    fn request_ok(&mut self, msg: &Json) -> Result<Json> {
+        let reply = self.request(msg)?;
+        let ok = reply
+            .req("ok")
+            .and_then(Json::as_bool)
+            .unwrap_or(false);
+        if !ok {
+            let why = reply
+                .get("error")
+                .and_then(|e| e.as_str().ok())
+                .unwrap_or("server reported failure without a message");
+            bail!("serve error: {why}");
+        }
+        Ok(reply)
+    }
+
+    /// Evaluate `model` over `points`; `precision: None` uses the
+    /// server default (f64).
+    pub fn eval(
+        &mut self,
+        model: &str,
+        points: &[[f64; 2]],
+        precision: Option<Precision>,
+    ) -> Result<(Vec<f32>, Option<Vec<f32>>)> {
+        let mut flat = Vec::with_capacity(points.len() * 2);
+        for p in points {
+            flat.push(Json::num(p[0]));
+            flat.push(Json::num(p[1]));
+        }
+        let mut fields = vec![
+            ("op", Json::str("eval")),
+            ("model", Json::str(model)),
+            ("points", Json::Arr(flat)),
+        ];
+        if let Some(p) = precision {
+            fields.push(("precision", Json::str(p.to_string())));
+        }
+        let reply = self.request_ok(&Json::obj(fields))?;
+        let u = decode_f32s(reply.req("u")?)
+            .context("decode u outputs")?;
+        let eps = match reply.get("eps") {
+            Some(e) => {
+                Some(decode_f32s(e).context("decode eps outputs")?)
+            }
+            None => None,
+        };
+        Ok((u, eps))
+    }
+
+    /// Fetch the metrics snapshot.
+    pub fn stats(&mut self) -> Result<Json> {
+        self.request_ok(&Json::obj(vec![("op", Json::str("stats"))]))
+    }
+
+    /// List servable model names.
+    pub fn models(&mut self) -> Result<Vec<String>> {
+        let reply = self
+            .request_ok(&Json::obj(vec![("op", Json::str("models"))]))?;
+        reply
+            .req("models")?
+            .as_arr()?
+            .iter()
+            .map(|m| Ok(m.as_str()?.to_string()))
+            .collect()
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        self.request_ok(&Json::obj(vec![("op", Json::str("ping"))]))?;
+        Ok(())
+    }
+
+    /// Ask the server to drain and exit.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        self.request_ok(&Json::obj(vec![(
+            "op",
+            Json::str("shutdown"),
+        )]))?;
+        Ok(())
+    }
+}

@@ -1,0 +1,65 @@
+//! `repro serve` — a long-running, micro-batching inference server on
+//! top of [`InferenceSession`](crate::runtime::infer::InferenceSession):
+//! the amortized-inference payoff of the paper as a *system*. Training
+//! a FastVPINN is the expensive part; once trained, answering a point
+//! query is a few small GEMMs — this module keeps trained models
+//! resident and turns concurrent query traffic into the large batches
+//! the blocked-GEMM eval path is fastest at.
+//!
+//! ## Data flow
+//!
+//! ```text
+//! client ──TCP frame──▶ connection thread ──EvalJob──▶ per-model queue
+//!                                                        │ (bounded)
+//!                             worker pool (one forked session each)
+//!                               │  coalesce ≤ max_batch jobs, wait
+//!                               │  ≤ max_wait for stragglers
+//!                               ▼
+//!                        one blocked-GEMM eval over the
+//!                        concatenated point cloud, split back
+//!                        per request ──reply──▶ connection thread
+//! ```
+//!
+//! - **Protocol** ([`protocol`]): length-prefixed JSON frames over TCP
+//!   — a 4-byte little-endian length, then one UTF-8 JSON object. No
+//!   heavy dependencies, `nc`/any language can speak it.
+//! - **Registry** ([`registry`]): a directory of `<name>.ckpt`
+//!   artifacts. Models load lazily on first query (salvage-aware:
+//!   a torn primary falls back to its generation ring) and live in an
+//!   LRU cache keyed by *artifact fingerprint*, so two names pointing
+//!   at byte-identical artifacts share one worker pool. A load failure
+//!   (e.g. the `io.read.err` failpoint) is an error reply to that one
+//!   client — never a server crash, and nothing broken is cached.
+//! - **Micro-batching** ([`pool`]): each model runs a pool of worker
+//!   threads, each owning a private forked session (`eval` needs `&mut
+//!   self`). Workers drain the model's bounded queue into micro-batches
+//!   under a max-batch/max-wait policy. At f64 the coalesced results
+//!   are bit-identical to a lone single-threaded session: per-point
+//!   outputs are independent of batch composition on the blocked eval
+//!   path, and every fork shares the exact parameter bits.
+//! - **Stats** ([`stats`]): a `/metrics`-style reply — requests/sec,
+//!   p50/p90/p99 latency via [`Summary`](crate::util::stats::Summary)
+//!   (non-finite samples counted-and-dropped, never a panic),
+//!   batch-fill ratio, per-model hit counts.
+//! - **Drain** ([`server`]): SIGTERM (or a `shutdown` op) stops the
+//!   accept loop, lets in-flight requests finish, joins the worker
+//!   pools and prints a final stats line — `kill -TERM` is a clean
+//!   exit, tested by the CI `serve-smoke` job.
+
+// The serve loop must never take the whole server down on one bad
+// request, sample or artifact: panics are forbidden on this path.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+pub mod bench;
+pub mod client;
+pub mod pool;
+pub mod protocol;
+pub mod registry;
+pub mod server;
+pub mod stats;
+
+pub use client::ServeClient;
+pub use pool::{BatchPolicy, ModelPool};
+pub use registry::{ModelCache, Registry};
+pub use server::{ServeConfig, Server, ServerHandle};
+pub use stats::ServeStats;

@@ -1,0 +1,340 @@
+//! Per-model worker pool with micro-batch coalescing.
+//!
+//! [`InferenceSession::eval`] needs `&mut self` (it reuses scratch
+//! buffers), so a pool is N workers each owning a private
+//! [`fork`](InferenceSession::fork) of one loaded session — identical
+//! parameter bits, private scratch. Connection threads submit jobs
+//! into one bounded queue per model; a free worker drains it into a
+//! micro-batch under the [`BatchPolicy`] (take up to `max_batch` jobs,
+//! waiting at most `max_wait` for stragglers after the first), runs
+//! *one* concatenated blocked-GEMM eval per precision present, and
+//! splits the outputs back at request boundaries.
+//!
+//! Coalescing is bit-transparent at f64: the blocked eval path computes
+//! each point independently of its batch neighbours, so a request's
+//! outputs do not depend on which jobs it shared a batch with.
+
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender,
+};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::infer::{InferenceSession, Precision};
+
+use super::stats::ServeStats;
+
+/// Micro-batch coalescing knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Most requests coalesced into one eval call.
+    pub max_batch: usize,
+    /// How long a worker waits for stragglers after the first job of a
+    /// batch arrives.
+    pub max_wait: Duration,
+    /// Bound on queued-but-unclaimed jobs per model; submitters block
+    /// (backpressure) when the queue is full.
+    pub queue_depth: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 64,
+        }
+    }
+}
+
+/// Model outputs for one request: primary head, plus the eps head for
+/// two-head networks.
+pub type EvalOutput = (Vec<f32>, Option<Vec<f32>>);
+
+/// One queued point-cloud query.
+struct EvalJob {
+    points: Vec<[f64; 2]>,
+    precision: Precision,
+    reply: SyncSender<EvalOutput>,
+}
+
+/// A pool of worker threads serving one loaded model.
+///
+/// Dropping the pool closes the queue and joins every worker.
+pub struct ModelPool {
+    tx: Option<SyncSender<EvalJob>>,
+    workers: Vec<JoinHandle<()>>,
+    policy: BatchPolicy,
+    two_head: bool,
+}
+
+impl ModelPool {
+    /// Spawn `n_workers` threads, each with a private fork of
+    /// `session`. Fails only if the OS refuses to spawn any thread.
+    pub fn start(
+        session: &InferenceSession,
+        n_workers: usize,
+        policy: BatchPolicy,
+        stats: Arc<ServeStats>,
+    ) -> Result<ModelPool> {
+        let n_workers = n_workers.max(1);
+        let (tx, rx) =
+            sync_channel::<EvalJob>(policy.queue_depth.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(n_workers);
+        for i in 0..n_workers {
+            let mut sess = session.fork();
+            let rx = Arc::clone(&rx);
+            let stats = Arc::clone(&stats);
+            let handle = std::thread::Builder::new()
+                .name(format!("serve-worker-{i}"))
+                .spawn(move || {
+                    worker_loop(&mut sess, &rx, policy, &stats)
+                })
+                .context("spawning serve worker thread")?;
+            workers.push(handle);
+        }
+        Ok(ModelPool {
+            tx: Some(tx),
+            workers,
+            policy,
+            two_head: session.two_head(),
+        })
+    }
+
+    /// Whether the served model has an eps head.
+    pub fn two_head(&self) -> bool {
+        self.two_head
+    }
+
+    /// The coalescing policy this pool runs under.
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Enqueue a query and block until its micro-batch is evaluated.
+    pub fn submit(
+        &self,
+        points: Vec<[f64; 2]>,
+        precision: Precision,
+    ) -> Result<EvalOutput> {
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("model pool is shut down"))?;
+        let (reply_tx, reply_rx) = sync_channel::<EvalOutput>(1);
+        tx.send(EvalJob { points, precision, reply: reply_tx })
+            .map_err(|_| anyhow!("model pool workers are gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("model pool dropped the request"))
+    }
+
+    /// Close the queue (subsequent [`submit`](ModelPool::submit) calls
+    /// error); workers exit once the backlog drains.
+    pub fn close(&mut self) {
+        self.tx = None;
+    }
+}
+
+impl Drop for ModelPool {
+    fn drop(&mut self) {
+        // Closing the channel wakes every worker out of recv().
+        self.tx = None;
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Claim one micro-batch from the shared queue. Holds the queue lock
+/// only while *collecting* jobs — evaluation happens outside, so other
+/// workers can start coalescing the next batch immediately.
+fn next_batch(
+    rx: &Mutex<Receiver<EvalJob>>,
+    policy: BatchPolicy,
+) -> Option<Vec<EvalJob>> {
+    let queue = match rx.lock() {
+        Ok(q) => q,
+        // Workers do not panic while holding this lock; if one somehow
+        // did, the receiver underneath is still perfectly usable.
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    let first = queue.recv().ok()?; // closed queue: pool is draining
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let left = deadline.saturating_duration_since(Instant::now());
+        match queue.recv_timeout(left) {
+            Ok(job) => batch.push(job),
+            Err(RecvTimeoutError::Timeout)
+            | Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+fn worker_loop(
+    sess: &mut InferenceSession,
+    rx: &Mutex<Receiver<EvalJob>>,
+    policy: BatchPolicy,
+    stats: &ServeStats,
+) {
+    while let Some(batch) = next_batch(rx, policy) {
+        stats.record_batch(batch.len());
+        eval_batch(sess, &batch);
+    }
+}
+
+/// Run one coalesced batch: group jobs by precision (at most two
+/// groups), concatenate each group's points into a single eval call,
+/// then split the outputs back at request boundaries and reply.
+fn eval_batch(sess: &mut InferenceSession, batch: &[EvalJob]) {
+    for want in [Precision::F64, Precision::F32] {
+        let group: Vec<&EvalJob> =
+            batch.iter().filter(|j| j.precision == want).collect();
+        if group.is_empty() {
+            continue;
+        }
+        let total: usize = group.iter().map(|j| j.points.len()).sum();
+        let mut points = Vec::with_capacity(total);
+        for job in &group {
+            points.extend_from_slice(&job.points);
+        }
+        sess.set_precision(want);
+        let (u, eps) = sess.eval(&points);
+        let mut off = 0usize;
+        for job in &group {
+            let n = job.points.len();
+            let u_part = u[off..off + n].to_vec();
+            let eps_part =
+                eps.as_ref().map(|e| e[off..off + n].to_vec());
+            off += n;
+            // The submitter may have given up (connection dropped);
+            // a dead reply channel is not the worker's problem.
+            let _ = job.reply.send((u_part, eps_part));
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::serve::bench::synthetic_checkpoint;
+
+    fn tiny_session(two_head: bool) -> InferenceSession {
+        let ck =
+            synthetic_checkpoint(&[2, 8, 1], two_head, 7).unwrap();
+        InferenceSession::from_checkpoint(&ck).unwrap()
+    }
+
+    fn grid(n: usize, salt: f64) -> Vec<[f64; 2]> {
+        (0..n)
+            .map(|i| {
+                let t = i as f64 / n as f64;
+                [t, (t + salt).fract()]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn coalesced_results_match_a_lone_session_bitwise() {
+        let mut lone = tiny_session(false);
+        let pool = ModelPool::start(
+            &lone,
+            3,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(20),
+                queue_depth: 16,
+            },
+            Arc::new(ServeStats::new()),
+        )
+        .unwrap();
+        for i in 0..12 {
+            let q = grid(5 + i % 3, i as f64 * 0.13);
+            let (u, eps) =
+                pool.submit(q.clone(), Precision::F64).unwrap();
+            let (lu, leps) = lone.eval(&q);
+            assert_eq!(u, lu);
+            assert_eq!(eps, leps);
+        }
+    }
+
+    #[test]
+    fn two_head_outputs_split_correctly_across_a_batch() {
+        let mut lone = tiny_session(true);
+        let pool = ModelPool::start(
+            &lone,
+            2,
+            BatchPolicy::default(),
+            Arc::new(ServeStats::new()),
+        )
+        .unwrap();
+        assert!(pool.two_head());
+        for i in 0..6 {
+            let q = grid(4 + i, 0.31 * i as f64);
+            let (u, eps) =
+                pool.submit(q.clone(), Precision::F64).unwrap();
+            let (lu, leps) = lone.eval(&q);
+            assert_eq!(u, lu);
+            assert_eq!(eps.unwrap(), leps.unwrap());
+        }
+    }
+
+    #[test]
+    fn concurrent_mixed_precision_submissions_all_answer() {
+        let lone = tiny_session(false);
+        let stats = Arc::new(ServeStats::new());
+        let pool = Arc::new(
+            ModelPool::start(
+                &lone,
+                2,
+                BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(10),
+                    queue_depth: 16,
+                },
+                Arc::clone(&stats),
+            )
+            .unwrap(),
+        );
+        let mut joins = Vec::new();
+        for i in 0..8u32 {
+            let pool = Arc::clone(&pool);
+            let prec = if i % 2 == 0 {
+                Precision::F64
+            } else {
+                Precision::F32
+            };
+            joins.push(std::thread::spawn(move || {
+                let q = grid(6, 0.05 * f64::from(i));
+                pool.submit(q, prec).unwrap().0.len()
+            }));
+        }
+        for j in joins {
+            assert_eq!(j.join().unwrap(), 6);
+        }
+        // the pool recorded its coalesced batches
+        let fill = stats.batch_fill(8);
+        assert!(fill > 0.0 && fill <= 1.0, "fill {fill}");
+    }
+
+    #[test]
+    fn submit_after_close_is_an_error_not_a_hang() {
+        let lone = tiny_session(false);
+        let mut pool = ModelPool::start(
+            &lone,
+            1,
+            BatchPolicy::default(),
+            Arc::new(ServeStats::new()),
+        )
+        .unwrap();
+        pool.close();
+        assert!(pool.submit(grid(3, 0.0), Precision::F64).is_err());
+    }
+}

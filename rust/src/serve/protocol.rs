@@ -1,0 +1,373 @@
+//! The wire protocol: length-prefixed JSON frames and the typed
+//! request/response vocabulary.
+//!
+//! A frame is a 4-byte little-endian `u32` payload length followed by
+//! exactly that many bytes of UTF-8 JSON. Requests are objects with an
+//! `"op"` key; responses always carry `"ok": true|false` (with an
+//! `"error"` message when false). Query points travel as a flat
+//! interleaved array `[x0, y0, x1, y1, ...]`; outputs come back as
+//! arrays of numbers. `f32` outputs are serialized through their exact
+//! `f64` value and Rust's shortest-roundtrip formatting, so the bits a
+//! client decodes equal the bits the session computed.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::infer::Precision;
+use crate::util::json::Json;
+
+/// Hard per-frame size limit (bytes of JSON payload). Large enough for
+/// ~1M-point queries, small enough that a garbage length prefix cannot
+/// OOM the server.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Serialize `msg` and write it as one frame.
+pub fn write_frame(w: &mut impl Write, msg: &Json) -> Result<()> {
+    let body = msg.to_string();
+    if body.len() > MAX_FRAME {
+        bail!(
+            "frame of {} bytes exceeds the {MAX_FRAME}-byte limit",
+            body.len()
+        );
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())
+        .context("write frame header")?;
+    w.write_all(body.as_bytes()).context("write frame body")?;
+    w.flush().context("flush frame")?;
+    Ok(())
+}
+
+/// Read one frame from a blocking stream. `Ok(None)` on a clean EOF
+/// (the peer closed between frames); an EOF mid-frame is an error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Json>> {
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e).context("read frame header"),
+        }
+    }
+    finish_frame(r, first[0], || false)
+}
+
+/// Read one frame from a stream with a read timeout set, polling
+/// `stop` between timeouts while waiting for the frame to *start*.
+/// Returns `Ok(None)` on clean EOF or when `stop()` turns true before
+/// a frame begins; once the first byte has arrived the frame is read
+/// to completion regardless of `stop` (drain semantics: an in-flight
+/// request finishes).
+pub fn read_frame_polled(
+    r: &mut impl Read,
+    stop: impl Fn() -> bool,
+) -> Result<Option<Json>> {
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if is_timeout(&e) => {
+                if stop() {
+                    return Ok(None);
+                }
+            }
+            Err(e) => return Err(e).context("read frame header"),
+        }
+    }
+    finish_frame(r, first[0], stop)
+}
+
+/// Read the rest of a frame whose first header byte is `b0`.
+fn finish_frame(
+    r: &mut impl Read,
+    b0: u8,
+    stop: impl Fn() -> bool,
+) -> Result<Option<Json>> {
+    let mut hdr = [0u8; 3];
+    read_exact_retry(r, &mut hdr, &stop).context("read frame header")?;
+    let len =
+        u32::from_le_bytes([b0, hdr[0], hdr[1], hdr[2]]) as usize;
+    if len > MAX_FRAME {
+        bail!("frame of {len} bytes exceeds the {MAX_FRAME}-byte limit");
+    }
+    let mut body = vec![0u8; len];
+    read_exact_retry(r, &mut body, &stop).context("read frame body")?;
+    let text =
+        std::str::from_utf8(&body).context("frame is not UTF-8")?;
+    Ok(Some(Json::parse(text).context("frame is not valid JSON")?))
+}
+
+/// `read_exact` that rides through read timeouts and interrupts (the
+/// server polls its shutdown flag via short read timeouts, which must
+/// not tear a frame that is mid-flight on a slow link). A mid-frame
+/// EOF is an error. Gives up after ~30s of timeout retries so a peer
+/// that stalls mid-frame cannot pin the connection thread forever.
+fn read_exact_retry(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    _stop: &impl Fn() -> bool,
+) -> Result<()> {
+    let mut got = 0;
+    let mut stalls = 0u32;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => bail!("connection closed mid-frame"),
+            Ok(n) => {
+                got += n;
+                stalls = 0;
+            }
+            Err(e) if is_timeout(&e) => {
+                stalls += 1;
+                if stalls > 300 {
+                    bail!("peer stalled mid-frame");
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::TimedOut
+            | std::io::ErrorKind::Interrupted
+    )
+}
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Evaluate `model` over a point cloud.
+    Eval {
+        /// Registry model name (file stem of the artifact).
+        model: String,
+        /// Query points.
+        points: Vec<[f64; 2]>,
+        /// Per-request precision override (server default when None).
+        precision: Option<Precision>,
+    },
+    /// Metrics snapshot.
+    Stats,
+    /// List registry models and their load state.
+    Models,
+    /// Liveness probe.
+    Ping,
+    /// Ask the server to drain and exit (same path as SIGTERM).
+    Shutdown,
+}
+
+/// Parse a request object. Every malformation is a recoverable error
+/// (the server answers `{"ok": false, ...}` and keeps the connection).
+pub fn parse_request(j: &Json) -> Result<Request> {
+    let op = j.req("op")?.as_str()?;
+    match op {
+        "eval" => {
+            let model = j.req("model")?.as_str()?.to_string();
+            let flat = j.req("points")?.as_arr()?;
+            if flat.is_empty() {
+                bail!("points is empty");
+            }
+            if flat.len() % 2 != 0 {
+                bail!(
+                    "points must be a flat [x0,y0,x1,y1,...] array \
+                     (got odd length {})",
+                    flat.len()
+                );
+            }
+            let mut points = Vec::with_capacity(flat.len() / 2);
+            for pair in flat.chunks_exact(2) {
+                let x = pair[0].as_f64()?;
+                let y = pair[1].as_f64()?;
+                if !x.is_finite() || !y.is_finite() {
+                    bail!("non-finite query point ({x}, {y})");
+                }
+                points.push([x, y]);
+            }
+            let precision = match j.get("precision") {
+                Some(p) => Some(p.as_str()?.parse()?),
+                None => None,
+            };
+            Ok(Request::Eval { model, points, precision })
+        }
+        "stats" => Ok(Request::Stats),
+        "models" => Ok(Request::Models),
+        "ping" => Ok(Request::Ping),
+        "shutdown" => Ok(Request::Shutdown),
+        other => bail!(
+            "unknown op {other:?} \
+             (expected eval|stats|models|ping|shutdown)"
+        ),
+    }
+}
+
+/// A number that is guaranteed to serialize as valid JSON: non-finite
+/// values (which the writer would emit as the invalid tokens `NaN` /
+/// `inf`) become `null`. Clients decode `null` back to NaN.
+pub fn finite_num(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// Encode f32 outputs: each value through its exact f64 widening, so
+/// shortest-roundtrip f64 text reproduces the f32 bits on decode.
+fn f32_array(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|&x| finite_num(x as f64)).collect())
+}
+
+/// Successful eval response.
+pub fn eval_response(
+    model: &str,
+    precision: Precision,
+    u: &[f32],
+    eps: Option<&[f32]>,
+) -> Json {
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("model", Json::str(model)),
+        ("precision", Json::str(precision.to_string())),
+        ("n", Json::num(u.len() as f64)),
+        ("u", f32_array(u)),
+    ];
+    if let Some(e) = eps {
+        fields.push(("eps", f32_array(e)));
+    }
+    Json::obj(fields)
+}
+
+/// Error response (`ok: false`).
+pub fn error_response(msg: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg)),
+    ])
+}
+
+/// Decode an output array written by [`eval_response`] back to f32
+/// (`null` → NaN, the encoding of a non-finite output).
+pub fn decode_f32s(j: &Json) -> Result<Vec<f32>> {
+    j.as_arr()?
+        .iter()
+        .map(|v| match v {
+            Json::Null => Ok(f32::NAN),
+            other => other.as_f64().map(|x| x as f32),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let msg = Json::obj(vec![
+            ("op", Json::str("eval")),
+            ("model", Json::str("m")),
+            ("points", Json::Arr(vec![Json::num(0.5), Json::num(0.25)])),
+        ]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+        assert_eq!(len as usize, buf.len() - 4, "length prefix");
+        let back = read_frame(&mut &buf[..]).unwrap().unwrap();
+        assert_eq!(back, msg);
+        // two frames back to back
+        let mut twice = buf.clone();
+        twice.extend_from_slice(&buf);
+        let mut r = &twice[..];
+        assert!(read_frame(&mut r).unwrap().is_some());
+        assert!(read_frame(&mut r).unwrap().is_some());
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn oversized_and_torn_frames_are_errors() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        buf.extend_from_slice(b"xxxx");
+        let err = read_frame(&mut &buf[..]).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
+        // header promises more bytes than arrive
+        let mut torn = Vec::new();
+        torn.extend_from_slice(&8u32.to_le_bytes());
+        torn.extend_from_slice(b"tru");
+        assert!(read_frame(&mut &torn[..]).is_err());
+    }
+
+    #[test]
+    fn requests_parse_and_reject() {
+        let j = Json::parse(
+            r#"{"op":"eval","model":"poisson",
+                "points":[0.1,0.2,0.3,0.4],"precision":"f32"}"#,
+        )
+        .unwrap();
+        match parse_request(&j).unwrap() {
+            Request::Eval { model, points, precision } => {
+                assert_eq!(model, "poisson");
+                assert_eq!(points, vec![[0.1, 0.2], [0.3, 0.4]]);
+                assert_eq!(precision, Some(Precision::F32));
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        for (txt, needle) in [
+            (r#"{"op":"warp"}"#, "unknown op"),
+            (r#"{"op":"eval","model":"m","points":[1.0]}"#, "odd"),
+            (r#"{"op":"eval","model":"m","points":[]}"#, "empty"),
+            (r#"{"points":[1,2]}"#, "op"),
+        ] {
+            let j = Json::parse(txt).unwrap();
+            let err = parse_request(&j).unwrap_err().to_string();
+            assert!(err.contains(needle), "{txt} -> {err}");
+        }
+        assert_eq!(parse_request(&Json::parse(r#"{"op":"stats"}"#)
+            .unwrap()).unwrap(), Request::Stats);
+    }
+
+    #[test]
+    fn f32_outputs_roundtrip_bitwise() {
+        // shortest-f64 text of the exact widening reproduces the bits
+        let vals: Vec<f32> = vec![
+            0.1,
+            -1.5e-7,
+            std::f32::consts::PI,
+            f32::MIN_POSITIVE,
+            1.0e30,
+            -0.0,
+        ];
+        let resp = eval_response("m", Precision::F64, &vals, None);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &resp).unwrap();
+        let back = read_frame(&mut &buf[..]).unwrap().unwrap();
+        let dec = decode_f32s(back.req("u").unwrap()).unwrap();
+        for (a, b) in vals.iter().zip(&dec) {
+            // -0.0 flattens to 0 through the writer's integer form;
+            // IEEE equality (not bits) is the contract at zero
+            if *a == 0.0 {
+                assert!(*a == *b);
+            } else {
+                assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+            }
+        }
+        // non-finite encodes as null, decodes as NaN
+        let resp =
+            eval_response("m", Precision::F64, &[f32::NAN], None);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &resp).unwrap();
+        let back = read_frame(&mut &buf[..]).unwrap().unwrap();
+        let dec = decode_f32s(back.req("u").unwrap()).unwrap();
+        assert!(dec[0].is_nan());
+    }
+}

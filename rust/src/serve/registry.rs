@@ -1,0 +1,346 @@
+//! Model registry: a directory of checkpoint artifacts, plus the LRU
+//! cache of live worker pools the server serves from.
+//!
+//! A registry is just `<dir>/<name>.ckpt` files — the same artifacts
+//! `repro train --checkpoint` writes, generation rings
+//! (`.g0`/`.g1`/`.best` siblings) and all. Models load lazily on first
+//! query through [`Checkpoint::read_salvage`], so a torn primary falls
+//! back to its generation ring exactly like `--resume` does.
+//!
+//! The cache is keyed by **artifact fingerprint** (FNV-1a over the
+//! serialized checkpoint bytes), not by name: two registry entries
+//! that are byte-identical share one worker pool. Capacity eviction
+//! drops the coldest pool — dropping joins its workers, so an evicted
+//! model costs nothing until it is queried again.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::checkpoint::{scan_registry, Checkpoint};
+use crate::runtime::infer::InferenceSession;
+
+use super::pool::{BatchPolicy, ModelPool};
+use super::stats::ServeStats;
+
+/// A directory of servable checkpoint artifacts.
+pub struct Registry {
+    dir: PathBuf,
+}
+
+impl Registry {
+    /// Open a registry directory (must exist).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Registry> {
+        let dir = dir.into();
+        if !dir.is_dir() {
+            bail!("model registry {} is not a directory", dir.display());
+        }
+        Ok(Registry { dir })
+    }
+
+    /// The registry directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Servable model names (primary `<name>.ckpt` files, sorted).
+    pub fn models(&self) -> Result<Vec<String>> {
+        Ok(scan_registry(&self.dir)?
+            .into_iter()
+            .map(|(name, _)| name)
+            .collect())
+    }
+
+    /// Path of a named model's primary artifact. Model names are plain
+    /// file stems — anything that looks like path traversal is
+    /// rejected before touching the filesystem.
+    pub fn path_of(&self, name: &str) -> Result<PathBuf> {
+        if name.is_empty()
+            || name == "."
+            || name == ".."
+            || name.contains(['/', '\\'])
+        {
+            bail!("invalid model name {name:?}");
+        }
+        Ok(self.dir.join(format!("{name}.ckpt")))
+    }
+}
+
+/// One live cache entry: a worker pool plus the fingerprint of the
+/// artifact it was built from.
+struct CacheEntry {
+    fingerprint: u64,
+    pool: Arc<ModelPool>,
+}
+
+struct CacheInner {
+    /// LRU order: front is coldest, back is hottest.
+    pools: Vec<CacheEntry>,
+    /// `name -> fingerprint` aliases (several names may share a pool).
+    names: Vec<(String, u64)>,
+}
+
+/// LRU cache of loaded [`ModelPool`]s, keyed by artifact fingerprint.
+pub struct ModelCache {
+    capacity: usize,
+    workers_per_model: usize,
+    policy: BatchPolicy,
+    stats: Arc<ServeStats>,
+    inner: Mutex<CacheInner>,
+}
+
+impl ModelCache {
+    /// A cache holding at most `capacity` live pools, each running
+    /// `workers_per_model` workers under `policy`.
+    pub fn new(
+        capacity: usize,
+        workers_per_model: usize,
+        policy: BatchPolicy,
+        stats: Arc<ServeStats>,
+    ) -> ModelCache {
+        ModelCache {
+            capacity: capacity.max(1),
+            workers_per_model,
+            policy,
+            stats,
+            inner: Mutex::new(CacheInner {
+                pools: Vec::new(),
+                names: Vec::new(),
+            }),
+        }
+    }
+
+    /// Number of live pools.
+    pub fn len(&self) -> usize {
+        lock(&self.inner).pools.len()
+    }
+
+    /// Whether no pool is loaded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The pool serving `name`, loading the artifact on a miss.
+    ///
+    /// The cache lock is held across the load (checkpoint read +
+    /// session build + worker spawn, milliseconds for real models) —
+    /// that serializes *loads*, which keeps a thundering herd on one
+    /// cold model from building the same pool N times. Queries against
+    /// already-cached models queue behind a load only for the lock's
+    /// duration, and evaluation itself never runs under this lock.
+    ///
+    /// A failed load (torn artifact past salvage, `io.read.err`
+    /// failpoint, fingerprint mismatch, ...) caches **nothing**: the
+    /// error goes to the one requesting client and any stale alias for
+    /// the name is dropped, so the next request retries from disk.
+    pub fn get(
+        &self,
+        registry: &Registry,
+        name: &str,
+    ) -> Result<Arc<ModelPool>> {
+        let path = registry.path_of(name)?;
+        let mut inner = lock(&self.inner);
+        if let Some(fp) = alias_of(&inner.names, name) {
+            if let Some(pool) = touch(&mut inner.pools, fp) {
+                return Ok(pool);
+            }
+            // alias survived its pool's eviction: fall through and
+            // reload from disk
+        }
+        match self.load(&mut inner, &path, name) {
+            Ok(pool) => Ok(pool),
+            Err(e) => {
+                inner.names.retain(|(n, _)| n != name);
+                Err(e)
+            }
+        }
+    }
+
+    fn load(
+        &self,
+        inner: &mut CacheInner,
+        path: &Path,
+        name: &str,
+    ) -> Result<Arc<ModelPool>> {
+        let (ck, loaded_from) = Checkpoint::read_salvage(path)
+            .with_context(|| format!("loading model {name:?}"))?;
+        if loaded_from != path {
+            eprintln!(
+                "serve: model {name:?} salvaged from {}",
+                loaded_from.display()
+            );
+        }
+        let fp = ck.artifact_fingerprint();
+        inner.names.retain(|(n, _)| n != name);
+        inner.names.push((name.to_string(), fp));
+        if let Some(pool) = touch(&mut inner.pools, fp) {
+            // byte-identical artifact already serving under another
+            // name — share its pool
+            return Ok(pool);
+        }
+        let session = InferenceSession::from_checkpoint(&ck)
+            .with_context(|| format!("model {name:?} does not load"))?;
+        let pool = Arc::new(ModelPool::start(
+            &session,
+            self.workers_per_model,
+            self.policy,
+            Arc::clone(&self.stats),
+        )?);
+        inner.pools.push(CacheEntry {
+            fingerprint: fp,
+            pool: Arc::clone(&pool),
+        });
+        while inner.pools.len() > self.capacity {
+            let evicted = inner.pools.remove(0);
+            inner
+                .names
+                .retain(|(_, f)| *f != evicted.fingerprint);
+            // dropping the entry joins the pool's workers once the
+            // last in-flight Arc clone goes away
+        }
+        Ok(pool)
+    }
+
+    /// Drop the pool serving `name` (and every alias of the same
+    /// artifact). Returns whether anything was evicted.
+    pub fn evict(&self, name: &str) -> bool {
+        let mut inner = lock(&self.inner);
+        let Some(fp) = alias_of(&inner.names, name) else {
+            return false;
+        };
+        inner.names.retain(|(_, f)| *f != fp);
+        let before = inner.pools.len();
+        inner.pools.retain(|e| e.fingerprint != fp);
+        before != inner.pools.len()
+    }
+
+    /// Drop every pool, joining all worker threads (drain path).
+    pub fn clear(&self) {
+        let mut inner = lock(&self.inner);
+        inner.names.clear();
+        inner.pools.clear();
+    }
+}
+
+fn alias_of(names: &[(String, u64)], name: &str) -> Option<u64> {
+    names.iter().find(|(n, _)| n == name).map(|(_, fp)| *fp)
+}
+
+/// Find a pool by fingerprint and move it to the hot end.
+fn touch(
+    pools: &mut Vec<CacheEntry>,
+    fp: u64,
+) -> Option<Arc<ModelPool>> {
+    let i = pools.iter().position(|e| e.fingerprint == fp)?;
+    let entry = pools.remove(i);
+    let pool = Arc::clone(&entry.pool);
+    pools.push(entry);
+    Some(pool)
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::runtime::infer::Precision;
+    use crate::serve::bench::synthetic_checkpoint;
+
+    fn tmp_registry(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "fastvpinns_registry_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn write_model(dir: &Path, name: &str, seed: u64) {
+        let ck = synthetic_checkpoint(&[2, 6, 1], false, seed).unwrap();
+        ck.write(dir.join(format!("{name}.ckpt"))).unwrap();
+    }
+
+    fn cache(capacity: usize) -> ModelCache {
+        ModelCache::new(
+            capacity,
+            1,
+            BatchPolicy::default(),
+            Arc::new(ServeStats::new()),
+        )
+    }
+
+    #[test]
+    fn traversal_names_are_rejected() {
+        let dir = tmp_registry("traversal");
+        let reg = Registry::open(&dir).unwrap();
+        for bad in ["", ".", "..", "a/b", "a\\b", "../escape"] {
+            assert!(reg.path_of(bad).is_err(), "{bad:?}");
+        }
+        assert!(reg.path_of("model-1.v2").is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_evicts_coldest_and_reloads_on_demand() {
+        let dir = tmp_registry("lru");
+        for (name, seed) in [("a", 1), ("b", 2), ("c", 3)] {
+            write_model(&dir, name, seed);
+        }
+        let reg = Registry::open(&dir).unwrap();
+        assert_eq!(reg.models().unwrap(), ["a", "b", "c"]);
+        let cache = cache(2);
+        cache.get(&reg, "a").unwrap();
+        cache.get(&reg, "b").unwrap();
+        cache.get(&reg, "a").unwrap(); // refresh a: b is now coldest
+        cache.get(&reg, "c").unwrap(); // evicts b
+        assert_eq!(cache.len(), 2);
+        // b reloads transparently; the pool still answers
+        let pool = cache.get(&reg, "b").unwrap();
+        let out = pool
+            .submit(vec![[0.3, 0.4]], Precision::F64)
+            .unwrap();
+        assert_eq!(out.0.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn identical_artifacts_share_one_pool() {
+        let dir = tmp_registry("dedup");
+        write_model(&dir, "x", 9);
+        std::fs::copy(
+            dir.join("x.ckpt"),
+            dir.join("x_copy.ckpt"),
+        )
+        .unwrap();
+        let reg = Registry::open(&dir).unwrap();
+        let cache = cache(4);
+        let p1 = cache.get(&reg, "x").unwrap();
+        let p2 = cache.get(&reg, "x_copy").unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!(cache.len(), 1);
+        // evicting either name drops the shared pool
+        assert!(cache.evict("x"));
+        assert!(cache.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_or_torn_models_error_without_caching() {
+        let dir = tmp_registry("missing");
+        let reg = Registry::open(&dir).unwrap();
+        let cache = cache(2);
+        assert!(cache.get(&reg, "ghost").is_err());
+        assert!(cache.is_empty());
+        // a torn artifact with no salvage generation also fails clean
+        std::fs::write(dir.join("torn.ckpt"), b"FVPCHKPT garbage")
+            .unwrap();
+        assert!(cache.get(&reg, "torn").is_err());
+        assert!(cache.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,453 @@
+//! The serve loop: TCP accept, per-connection request handling, and
+//! graceful drain.
+//!
+//! One thread per connection reads frames and submits eval jobs into
+//! the model cache's worker pools; the accept loop itself only hands
+//! off sockets. Shutdown (SIGTERM, SIGINT or a `shutdown` op) flips a
+//! flag: the accept loop stops, idle connections close at their next
+//! poll tick, in-flight frames finish and are answered, worker pools
+//! join, and a final stats line is printed. Nothing on this path is
+//! allowed to panic — a bad request, a torn artifact or a poisoned
+//! latency sample is always an error *reply*, never a dead server.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::infer::Precision;
+use crate::util::json::Json;
+
+use super::pool::BatchPolicy;
+use super::protocol::{
+    error_response, eval_response, parse_request, read_frame_polled,
+    write_frame, Request,
+};
+use super::registry::{ModelCache, Registry};
+use super::stats::ServeStats;
+
+/// How often idle loops poll the shutdown flag.
+const POLL: Duration = Duration::from_millis(25);
+
+/// Set by the SIGTERM/SIGINT handler; checked by every poll loop.
+static SIGNALLED: AtomicBool = AtomicBool::new(false);
+
+/// Server configuration (CLI flags map 1:1 onto these fields).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listen address, e.g. `127.0.0.1:7077` (port 0 picks a free one).
+    pub addr: String,
+    /// Model registry directory (`<name>.ckpt` artifacts).
+    pub registry: PathBuf,
+    /// Max models resident at once (LRU beyond this).
+    pub cache_capacity: usize,
+    /// Worker threads (= private forked sessions) per model.
+    pub workers_per_model: usize,
+    /// Micro-batch coalescing policy.
+    pub policy: BatchPolicy,
+    /// How long drain waits for in-flight connections before exiting
+    /// anyway.
+    pub drain_timeout: Duration,
+}
+
+impl ServeConfig {
+    /// A config with default pooling/batching knobs.
+    pub fn new(
+        addr: impl Into<String>,
+        registry: impl Into<PathBuf>,
+    ) -> ServeConfig {
+        ServeConfig {
+            addr: addr.into(),
+            registry: registry.into(),
+            cache_capacity: 4,
+            workers_per_model: 2,
+            policy: BatchPolicy::default(),
+            drain_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// State shared by the accept loop and every connection thread.
+struct Shared {
+    registry: Registry,
+    cache: ModelCache,
+    stats: Arc<ServeStats>,
+    policy: BatchPolicy,
+    stop: AtomicBool,
+    active: AtomicUsize,
+}
+
+impl Shared {
+    fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+            || SIGNALLED.load(Ordering::SeqCst)
+    }
+}
+
+/// The serve runtime. Build with [`Server::new`], then either
+/// [`run`](Server::run) on the current thread (the CLI path) or
+/// [`spawn`](Server::spawn) for an in-process server (tests, bench).
+pub struct Server {
+    config: ServeConfig,
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    /// Open the registry and build the serve runtime.
+    pub fn new(config: ServeConfig) -> Result<Server> {
+        let registry = Registry::open(config.registry.clone())?;
+        let stats = Arc::new(ServeStats::new());
+        let cache = ModelCache::new(
+            config.cache_capacity,
+            config.workers_per_model,
+            config.policy,
+            Arc::clone(&stats),
+        );
+        Ok(Server {
+            shared: Arc::new(Shared {
+                registry,
+                cache,
+                stats,
+                policy: config.policy,
+                stop: AtomicBool::new(false),
+                active: AtomicUsize::new(0),
+            }),
+            config,
+        })
+    }
+
+    /// Serve on the current thread until shutdown; installs the
+    /// SIGTERM/SIGINT handler. This is what `repro serve` runs.
+    pub fn run(self) -> Result<()> {
+        install_signal_handler();
+        let listener = self.bind()?;
+        let addr = listener
+            .local_addr()
+            .context("resolve listen address")?;
+        let models = self.shared.registry.models().unwrap_or_default();
+        println!(
+            "serve: listening on {addr} ({} models in {}, cache {} \
+             x {} workers, batch {} within {:?})",
+            models.len(),
+            self.config.registry.display(),
+            self.config.cache_capacity,
+            self.config.workers_per_model,
+            self.config.policy.max_batch,
+            self.config.policy.max_wait,
+        );
+        serve_on(&self.shared, listener, self.config.drain_timeout);
+        println!(
+            "serve: drained. final stats: {}",
+            self.shared.stats.snapshot(self.shared.policy.max_batch)
+        );
+        Ok(())
+    }
+
+    /// Serve on a background thread; returns once the listener is
+    /// bound, so `handle.addr()` is immediately connectable. Used by
+    /// the e2e tests and the serve bench. Does **not** install signal
+    /// handlers — in-process servers stop via [`ServerHandle::stop`].
+    pub fn spawn(config: ServeConfig) -> Result<ServerHandle> {
+        let server = Server::new(config)?;
+        let listener = server.bind()?;
+        let addr = listener
+            .local_addr()
+            .context("resolve listen address")?;
+        let shared = Arc::clone(&server.shared);
+        let drain = server.config.drain_timeout;
+        let join = std::thread::Builder::new()
+            .name("serve-accept".into())
+            .spawn(move || serve_on(&server.shared, listener, drain))
+            .context("spawn serve accept thread")?;
+        Ok(ServerHandle { addr, shared, join: Some(join) })
+    }
+
+    fn bind(&self) -> Result<TcpListener> {
+        let listener = TcpListener::bind(&self.config.addr)
+            .with_context(|| {
+                format!("bind serve listener on {}", self.config.addr)
+            })?;
+        listener
+            .set_nonblocking(true)
+            .context("set listener nonblocking")?;
+        Ok(listener)
+    }
+}
+
+/// Handle to an in-process [`Server::spawn`] instance.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound listen address (with the real port when 0 was asked).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The server's metrics (shared with the serve loop).
+    pub fn stats(&self) -> Arc<ServeStats> {
+        Arc::clone(&self.shared.stats)
+    }
+
+    /// Ask the server to drain (idempotent, non-blocking).
+    pub fn stop(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Stop and wait for the drain to complete.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop();
+        match self.join.take() {
+            Some(j) => j
+                .join()
+                .map_err(|_| anyhow!("serve accept thread panicked")),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// The accept loop: non-blocking accept polled against the stop flag,
+/// one detached thread per connection, then drain.
+fn serve_on(
+    shared: &Arc<Shared>,
+    listener: TcpListener,
+    drain_timeout: Duration,
+) {
+    while !shared.stopping() {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let conn = Arc::clone(shared);
+                shared.active.fetch_add(1, Ordering::SeqCst);
+                let spawned = std::thread::Builder::new()
+                    .name("serve-conn".into())
+                    .spawn(move || {
+                        handle_conn(&conn, stream);
+                        conn.active.fetch_sub(1, Ordering::SeqCst);
+                    });
+                if spawned.is_err() {
+                    // the thread never existed; give back its slot so
+                    // drain does not wait on a ghost connection
+                    shared.active.fetch_sub(1, Ordering::SeqCst);
+                    eprintln!("serve: connection thread spawn failed");
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                std::thread::sleep(POLL);
+            }
+            Err(e) => {
+                eprintln!("serve: accept error: {e}");
+                std::thread::sleep(POLL);
+            }
+        }
+    }
+    // Drain: connection threads see the stop flag at their next poll
+    // tick; in-flight frames finish and are answered first.
+    let deadline = Instant::now() + drain_timeout;
+    while shared.active.load(Ordering::SeqCst) > 0
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(POLL);
+    }
+    let leftover = shared.active.load(Ordering::SeqCst);
+    if leftover > 0 {
+        eprintln!(
+            "serve: drain timeout with {leftover} connection(s) still \
+             open"
+        );
+    }
+    // Joining the worker pools happens here, not in some signal
+    // context: dropping each pool closes its queue and joins threads.
+    shared.cache.clear();
+}
+
+/// One connection: frames in, replies out, until EOF / stop / error.
+fn handle_conn(shared: &Arc<Shared>, mut stream: TcpStream) {
+    // Short read timeouts make the stop flag responsive between
+    // frames; write timeouts keep a dead peer from pinning the thread.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_nodelay(true);
+    loop {
+        let msg = match read_frame_polled(&mut stream, || {
+            shared.stopping()
+        }) {
+            Ok(Some(msg)) => msg,
+            Ok(None) => return, // clean EOF or drain
+            Err(e) => {
+                // a torn frame is not answerable on a framed stream;
+                // drop the connection (the error is still counted)
+                shared.stats.record_error();
+                eprintln!("serve: dropping connection: {e:#}");
+                return;
+            }
+        };
+        let (reply, shutdown) = handle_request(shared, &msg);
+        if write_frame(&mut stream, &reply).is_err() {
+            // peer went away mid-reply; nothing left to do here
+            return;
+        }
+        if shutdown {
+            shared.stop.store(true, Ordering::SeqCst);
+            return;
+        }
+    }
+}
+
+/// Answer one request. Returns the reply and whether the server should
+/// begin draining afterwards. Never panics: every failure mode is an
+/// `ok: false` reply.
+fn handle_request(shared: &Arc<Shared>, msg: &Json) -> (Json, bool) {
+    let req = match parse_request(msg) {
+        Ok(r) => r,
+        Err(e) => {
+            shared.stats.record_error();
+            return (error_response(&format!("{e:#}")), false);
+        }
+    };
+    match req {
+        Request::Eval { model, points, precision } => {
+            let t0 = Instant::now();
+            let n = points.len();
+            let precision = precision.unwrap_or(Precision::F64);
+            let result = shared
+                .cache
+                .get(&shared.registry, &model)
+                .and_then(|pool| pool.submit(points, precision));
+            match result {
+                Ok((u, eps)) => {
+                    shared.stats.record_eval(
+                        &model,
+                        n as u64,
+                        t0.elapsed().as_secs_f64() * 1e3,
+                    );
+                    (
+                        eval_response(
+                            &model,
+                            precision,
+                            &u,
+                            eps.as_deref(),
+                        ),
+                        false,
+                    )
+                }
+                Err(e) => {
+                    // a failed load leaves nothing cached (the cache
+                    // dropped any stale alias); make double sure a
+                    // half-dead pool cannot linger either
+                    shared.cache.evict(&model);
+                    shared.stats.record_error();
+                    (error_response(&format!("{e:#}")), false)
+                }
+            }
+        }
+        Request::Stats => {
+            (shared.stats.snapshot(shared.policy.max_batch), false)
+        }
+        Request::Models => match shared.registry.models() {
+            Ok(models) => (
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    (
+                        "models",
+                        Json::Arr(
+                            models
+                                .iter()
+                                .map(|m| Json::str(m.clone()))
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "loaded",
+                        Json::num(shared.cache.len() as f64),
+                    ),
+                ]),
+                false,
+            ),
+            Err(e) => {
+                shared.stats.record_error();
+                (error_response(&format!("{e:#}")), false)
+            }
+        },
+        Request::Ping => (
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", Json::str("pong")),
+            ]),
+            false,
+        ),
+        Request::Shutdown => (
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("draining", Json::Bool(true)),
+            ]),
+            true,
+        ),
+    }
+}
+
+/// Route SIGTERM/SIGINT to the shutdown flag so `kill -TERM` drains
+/// instead of killing mid-request. Uses the raw libc `signal(2)`
+/// symbol directly (the crate has no libc dependency); the handler
+/// only stores to an atomic, which is async-signal-safe.
+#[cfg(unix)]
+fn install_signal_handler() {
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNALLED.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    let handler = on_signal as extern "C" fn(i32) as usize;
+    unsafe {
+        signal(SIGTERM, handler);
+        signal(SIGINT, handler);
+    }
+}
+
+/// Non-unix builds rely on in-process [`ServerHandle::stop`] / the
+/// `shutdown` op only.
+#[cfg(not(unix))]
+fn install_signal_handler() {}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let c = ServeConfig::new("127.0.0.1:0", "/tmp/registry");
+        assert!(c.cache_capacity >= 1);
+        assert!(c.workers_per_model >= 1);
+        assert!(c.policy.max_batch >= 1);
+    }
+
+    #[test]
+    fn opening_a_missing_registry_fails_before_binding() {
+        let c = ServeConfig::new(
+            "127.0.0.1:0",
+            "/nonexistent/fastvpinns/registry",
+        );
+        assert!(Server::new(c).is_err());
+    }
+}

@@ -1,0 +1,227 @@
+//! Server-side metrics, aggregated panic-free.
+//!
+//! Counters are atomics; latency samples live in a fixed-capacity ring
+//! (steady-state traffic overwrites the oldest sample instead of
+//! growing without bound). The snapshot computes percentiles through
+//! [`Summary`], whose non-finite handling (count-and-drop, sort by
+//! `total_cmp`) is exactly what makes this path safe: one poisoned
+//! timer sample must never take the metrics endpoint — or the server —
+//! down.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+use super::protocol::finite_num;
+
+/// Latency samples kept for percentile estimation.
+const LATENCY_RING: usize = 4096;
+
+/// Shared serve-side metrics. One instance per server, updated by
+/// connection threads and workers, snapshotted by the `stats` op.
+pub struct ServeStats {
+    start: Instant,
+    requests: AtomicU64,
+    errors: AtomicU64,
+    points: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    latencies_ms: Mutex<LatencyRing>,
+    model_hits: Mutex<Vec<(String, u64)>>,
+}
+
+struct LatencyRing {
+    samples: Vec<f64>,
+    next: usize,
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeStats {
+    /// Fresh metrics (uptime starts now).
+    pub fn new() -> ServeStats {
+        ServeStats {
+            start: Instant::now(),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            points: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            latencies_ms: Mutex::new(LatencyRing {
+                samples: Vec::with_capacity(LATENCY_RING),
+                next: 0,
+            }),
+            model_hits: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Record one answered eval request.
+    pub fn record_eval(&self, model: &str, n_points: u64, ms: f64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.points.fetch_add(n_points, Ordering::Relaxed);
+        let mut ring = lock(&self.latencies_ms);
+        if ring.samples.len() < LATENCY_RING {
+            ring.samples.push(ms);
+        } else {
+            let i = ring.next;
+            ring.samples[i] = ms;
+        }
+        ring.next = (ring.next + 1) % LATENCY_RING;
+        drop(ring);
+        let mut hits = lock(&self.model_hits);
+        match hits.iter_mut().find(|(n, _)| n == model) {
+            Some((_, c)) => *c += 1,
+            None => hits.push((model.to_string(), 1)),
+        }
+    }
+
+    /// Record one failed request (parse error, unknown model, ...).
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one coalesced micro-batch of `n_requests` requests.
+    pub fn record_batch(&self, n_requests: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests
+            .fetch_add(n_requests as u64, Ordering::Relaxed);
+    }
+
+    /// Answered request count so far.
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Mean coalesced batch size over `max_batch` — 1.0 means every
+    /// batch was full, 1/max_batch means no coalescing happened.
+    pub fn batch_fill(&self, max_batch: usize) -> f64 {
+        let batches = self.batches.load(Ordering::Relaxed);
+        if batches == 0 || max_batch == 0 {
+            return 0.0;
+        }
+        let coalesced = self.batched_requests.load(Ordering::Relaxed);
+        coalesced as f64 / (batches * max_batch as u64) as f64
+    }
+
+    /// Order statistics over the retained latency samples.
+    pub fn latency_summary(&self) -> Summary {
+        Summary::from(&lock(&self.latencies_ms).samples)
+    }
+
+    /// The `/metrics`-style stats reply.
+    pub fn snapshot(&self, max_batch: usize) -> Json {
+        let uptime = self.start.elapsed().as_secs_f64();
+        let req = self.requests.load(Ordering::Relaxed);
+        let rps = if uptime > 0.0 { req as f64 / uptime } else { 0.0 };
+        let lat = self.latency_summary();
+        let hits = lock(&self.model_hits)
+            .iter()
+            .map(|(n, c)| (n.clone(), Json::num(*c as f64)))
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("uptime_s", finite_num(uptime)),
+            ("requests", Json::num(req as f64)),
+            (
+                "errors",
+                Json::num(self.errors.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "points",
+                Json::num(self.points.load(Ordering::Relaxed) as f64),
+            ),
+            ("requests_per_sec", finite_num(rps)),
+            (
+                "latency_ms",
+                Json::obj(vec![
+                    ("n", Json::num(lat.n as f64)),
+                    ("p50", finite_num(lat.median)),
+                    ("p90", finite_num(lat.p90)),
+                    ("p99", finite_num(lat.p99)),
+                    ("max", finite_num(lat.max)),
+                    ("mean", finite_num(lat.mean)),
+                    ("dropped", Json::num(lat.dropped as f64)),
+                ]),
+            ),
+            (
+                "batch",
+                Json::obj(vec![
+                    (
+                        "batches",
+                        Json::num(
+                            self.batches.load(Ordering::Relaxed) as f64,
+                        ),
+                    ),
+                    ("max_batch", Json::num(max_batch as f64)),
+                    ("fill", finite_num(self.batch_fill(max_batch))),
+                ]),
+            ),
+            ("models", Json::Obj(hits)),
+        ])
+    }
+}
+
+/// Lock a mutex, riding through poisoning: a worker that panicked
+/// while holding a stats lock must not cascade into every later
+/// metrics call (the data is monotone counters and samples — safe to
+/// read regardless).
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_counts_and_stays_finite() {
+        let s = ServeStats::new();
+        s.record_eval("a", 100, 1.5);
+        s.record_eval("a", 50, 2.5);
+        s.record_eval("b", 10, f64::NAN); // poisoned sample
+        s.record_error();
+        s.record_batch(3);
+        s.record_batch(1);
+        let j = s.snapshot(8);
+        assert_eq!(j.req("requests").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.req("errors").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.req("points").unwrap().as_usize().unwrap(), 160);
+        let lat = j.req("latency_ms").unwrap();
+        assert_eq!(lat.req("n").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(lat.req("dropped").unwrap().as_usize().unwrap(), 1);
+        assert!(lat.req("p50").unwrap().as_f64().unwrap().is_finite());
+        assert!(lat.req("p99").unwrap().as_f64().unwrap().is_finite());
+        let batch = j.req("batch").unwrap();
+        // (3 + 1) requests over 2 batches of cap 8 -> fill 0.25
+        assert!((batch.req("fill").unwrap().as_f64().unwrap() - 0.25)
+            .abs()
+            < 1e-12);
+        let hits = j.req("models").unwrap();
+        assert_eq!(hits.req("a").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(hits.req("b").unwrap().as_usize().unwrap(), 1);
+        // and the whole reply serializes to parseable JSON even with
+        // the NaN sample recorded
+        let text = j.to_string();
+        assert!(Json::parse(&text).is_ok(), "{text}");
+    }
+
+    #[test]
+    fn latency_ring_overwrites_oldest() {
+        let s = ServeStats::new();
+        for i in 0..(LATENCY_RING + 10) {
+            s.record_eval("m", 1, i as f64);
+        }
+        let sum = s.latency_summary();
+        assert_eq!(sum.n, LATENCY_RING);
+        // the 10 oldest samples (0..9) were overwritten
+        assert!(sum.min >= 10.0, "min {}", sum.min);
+    }
+}

@@ -49,9 +49,14 @@ impl StepTimer {
 }
 
 /// Order statistics over a sample set.
+///
+/// Non-finite samples (NaN, ±inf — e.g. a poisoned timer under a
+/// `step.stall` failpoint or clock weirdness) are *excluded* from every
+/// statistic and counted in [`Summary::dropped`], so one bad sample can
+/// neither panic the aggregation nor smear the percentiles.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
-    /// Sample count.
+    /// Finite sample count (the statistics cover exactly these).
     pub n: usize,
     /// Smallest sample.
     pub min: f64,
@@ -59,28 +64,49 @@ pub struct Summary {
     pub median: f64,
     /// 90th percentile.
     pub p90: f64,
+    /// 99th percentile (tail latency for the serve metrics).
+    pub p99: f64,
     /// Largest sample.
     pub max: f64,
     /// Arithmetic mean.
     pub mean: f64,
+    /// Non-finite samples excluded from the statistics.
+    pub dropped: usize,
 }
 
 impl Summary {
-    /// Summarize a sample set (all zeros when empty).
+    const EMPTY: Summary = Summary {
+        n: 0,
+        min: 0.0,
+        median: 0.0,
+        p90: 0.0,
+        p99: 0.0,
+        max: 0.0,
+        mean: 0.0,
+        dropped: 0,
+    };
+
+    /// Summarize a sample set (all zeros when empty). Non-finite
+    /// samples are dropped, not propagated: sorting uses
+    /// `f64::total_cmp` and the count of excluded samples is reported
+    /// in `dropped`.
     pub fn from(samples: &[f64]) -> Summary {
-        if samples.is_empty() {
-            return Summary { n: 0, min: 0.0, median: 0.0, p90: 0.0,
-                             max: 0.0, mean: 0.0 };
+        let mut s: Vec<f64> =
+            samples.iter().copied().filter(|v| v.is_finite()).collect();
+        let dropped = samples.len() - s.len();
+        if s.is_empty() {
+            return Summary { dropped, ..Summary::EMPTY };
         }
-        let mut s = samples.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
         Summary {
             n: s.len(),
             min: s[0],
             median: percentile_sorted(&s, 50.0),
             p90: percentile_sorted(&s, 90.0),
+            p99: percentile_sorted(&s, 99.0),
             max: s[s.len() - 1],
             mean: s.iter().sum::<f64>() / s.len() as f64,
+            dropped,
         }
     }
 }
@@ -100,10 +126,12 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
-/// Median of an unsorted slice.
+/// Median of an unsorted slice. Non-finite samples are excluded (see
+/// [`Summary`]); an all-non-finite or empty input yields 0.
 pub fn median(samples: &[f64]) -> f64 {
-    let mut s = samples.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut s: Vec<f64> =
+        samples.iter().copied().filter(|v| v.is_finite()).collect();
+    s.sort_by(f64::total_cmp);
     percentile_sorted(&s, 50.0)
 }
 
@@ -161,5 +189,135 @@ mod tests {
         let mut t = StepTimer::new();
         t.stop();
         assert_eq!(t.count(), 0);
+    }
+
+    /// Regression: a single NaN sample used to panic the
+    /// `partial_cmp(..).unwrap()` sort in `Summary::from` and
+    /// `median`. Now NaN/±inf are counted-and-excluded.
+    #[test]
+    fn non_finite_samples_are_dropped_not_fatal() {
+        let s = Summary::from(&[
+            2.0,
+            f64::NAN,
+            1.0,
+            f64::INFINITY,
+            3.0,
+            f64::NEG_INFINITY,
+        ]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.dropped, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.max, 3.0);
+        assert!(s.mean.is_finite() && s.p90.is_finite());
+        assert_eq!(median(&[f64::NAN, 5.0, 1.0]), 3.0);
+    }
+
+    #[test]
+    fn all_non_finite_yields_empty_summary() {
+        let s = Summary::from(&[f64::NAN, f64::INFINITY]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.dropped, 2);
+        assert_eq!(s.median, 0.0);
+        assert_eq!(median(&[f64::NAN]), 0.0);
+    }
+
+    #[test]
+    fn p99_orders_with_the_other_percentiles() {
+        let s: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let sm = Summary::from(&s);
+        assert!(sm.median <= sm.p90 && sm.p90 <= sm.p99);
+        assert!((sm.p99 - 990.01).abs() < 1e-9);
+    }
+
+    /// Property: for any sorted finite input, the interpolated
+    /// percentile stays within [min, max] and is monotone in p.
+    #[test]
+    fn prop_percentile_bounds_and_monotonicity() {
+        use crate::util::proptest::check_result;
+        check_result(
+            41,
+            300,
+            |r| {
+                let n = 1 + r.below(40);
+                let mut v: Vec<f64> =
+                    (0..n).map(|_| r.uniform_in(-1e3, 1e3)).collect();
+                v.sort_by(f64::total_cmp);
+                let p0 = r.uniform_in(0.0, 100.0);
+                let p1 = r.uniform_in(0.0, 100.0);
+                (v, p0.min(p1), p0.max(p1))
+            },
+            |(v, plo, phi)| {
+                let lo = percentile_sorted(v, *plo);
+                let hi = percentile_sorted(v, *phi);
+                if lo < v[0] - 1e-9 || hi > v[v.len() - 1] + 1e-9 {
+                    return Err(format!("out of bounds: {lo} {hi}"));
+                }
+                if lo > hi + 1e-9 {
+                    return Err(format!("not monotone: {lo} > {hi}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: Summary invariants hold under random contamination
+    /// with non-finite samples — dropped counts exactly the non-finite
+    /// ones, the order statistics chain min <= median <= p90 <= p99 <=
+    /// max holds, and a single-sample set collapses every percentile
+    /// onto that sample.
+    #[test]
+    fn prop_summary_invariants() {
+        use crate::util::proptest::check_result;
+        check_result(
+            43,
+            300,
+            |r| {
+                let n = r.below(30);
+                let mut v: Vec<f64> =
+                    (0..n).map(|_| r.uniform_in(-10.0, 1e4)).collect();
+                let bad = r.below(4);
+                for _ in 0..bad {
+                    let x = match r.below(3) {
+                        0 => f64::NAN,
+                        1 => f64::INFINITY,
+                        _ => f64::NEG_INFINITY,
+                    };
+                    v.insert(r.below(v.len() + 1), x);
+                }
+                (v, bad)
+            },
+            |(v, bad)| {
+                let s = Summary::from(v);
+                if s.dropped != *bad {
+                    return Err(format!(
+                        "dropped {} != injected {bad}",
+                        s.dropped
+                    ));
+                }
+                if s.n + s.dropped != v.len() {
+                    return Err("n + dropped != len".into());
+                }
+                if s.n == 0 {
+                    return Ok(());
+                }
+                let eps = 1e-9;
+                if !(s.min <= s.median + eps
+                    && s.median <= s.p90 + eps
+                    && s.p90 <= s.p99 + eps
+                    && s.p99 <= s.max + eps)
+                {
+                    return Err(format!("order chain broken: {s:?}"));
+                }
+                if s.n == 1
+                    && !(s.min == s.max
+                        && s.median == s.min
+                        && s.p99 == s.min)
+                {
+                    return Err(format!("single-sample collapse: {s:?}"));
+                }
+                Ok(())
+            },
+        );
     }
 }

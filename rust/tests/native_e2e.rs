@@ -105,7 +105,7 @@ fn trained_network_cross_validates_against_fem() {
     .unwrap();
 
     let pred = t.predict(&fem_mesh.points).unwrap();
-    let nn_vs_fem = ErrorNorms::compute_f32(&pred, fem.nodal());
+    let nn_vs_fem = ErrorNorms::compute_f32(&pred, fem.nodal()).unwrap();
     assert!(
         nn_vs_fem.rel_l2 < 0.08,
         "NN vs FEM rel-L2 {} (MAE {})", nn_vs_fem.rel_l2, nn_vs_fem.mae
@@ -117,8 +117,8 @@ fn trained_network_cross_validates_against_fem() {
         .iter()
         .map(|p| problem.exact(p[0], p[1]).unwrap())
         .collect();
-    let nn_err = ErrorNorms::compute_f32(&pred, &exact);
-    let fem_err = ErrorNorms::compute(fem.nodal(), &exact);
+    let nn_err = ErrorNorms::compute_f32(&pred, &exact).unwrap();
+    let fem_err = ErrorNorms::compute(fem.nodal(), &exact).unwrap();
     assert!(nn_err.rel_l2 < 0.05, "NN rel-L2 vs exact {}", nn_err.rel_l2);
     assert!(fem_err.rel_l2 < 0.05, "FEM rel-L2 vs exact {}",
             fem_err.rel_l2);
@@ -392,7 +392,7 @@ fn helmholtz_converges_and_cross_validates_against_fem() {
     let fem_mesh = generators::unit_square(16);
     let fem = fem_solver::solve_problem(&fem_mesh, &problem, 3).unwrap();
     let pred = t.predict(&fem_mesh.points).unwrap();
-    let nn_vs_fem = ErrorNorms::compute_f32(&pred, fem.nodal());
+    let nn_vs_fem = ErrorNorms::compute_f32(&pred, fem.nodal()).unwrap();
     assert!(nn_vs_fem.rel_l2 < 0.05,
             "helmholtz NN vs FEM rel-L2 {}", nn_vs_fem.rel_l2);
 }
@@ -439,7 +439,7 @@ fn cd_var_converges_and_cross_validates_against_fem() {
     let fem_mesh = generators::unit_square(16);
     let fem = fem_solver::solve_problem(&fem_mesh, &problem, 3).unwrap();
     let pred = t.predict(&fem_mesh.points).unwrap();
-    let nn_vs_fem = ErrorNorms::compute_f32(&pred, fem.nodal());
+    let nn_vs_fem = ErrorNorms::compute_f32(&pred, fem.nodal()).unwrap();
     assert!(nn_vs_fem.rel_l2 < 0.05,
             "cd_var NN vs FEM rel-L2 {}", nn_vs_fem.rel_l2);
 }

@@ -1,0 +1,250 @@
+//! End-to-end serve tests: an in-process server exercised over real
+//! TCP sockets, proving the tentpole claims — concurrent micro-batched
+//! clients get answers bit-identical to a lone single-threaded
+//! [`InferenceSession`], a checkpoint-load fault is an error reply
+//! plus an eviction (never a dead server), and shutdown drains
+//! gracefully. The SIGTERM scenario spawns the real `repro serve`
+//! binary (release-tier, `#[ignore]`d like the chaos suite).
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use fastvpinns::runtime::failpoint;
+use fastvpinns::runtime::infer::{InferenceSession, Precision};
+use fastvpinns::serve::bench::synthetic_checkpoint;
+use fastvpinns::serve::{
+    BatchPolicy, ServeClient, ServeConfig, Server,
+};
+
+fn tmp_registry(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "fastvpinns_serve_e2e_{tag}_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write_model(
+    dir: &Path,
+    name: &str,
+    layers: &[usize],
+    two_head: bool,
+    seed: u64,
+) {
+    let ck = synthetic_checkpoint(layers, two_head, seed).unwrap();
+    ck.write(dir.join(format!("{name}.ckpt"))).unwrap();
+}
+
+/// Deterministic query cloud for one (client, request) pair.
+fn query(client: usize, req: usize, n: usize) -> Vec<[f64; 2]> {
+    let salt = 0.23 * client as f64 + 0.041 * req as f64;
+    (0..n)
+        .map(|i| {
+            let t = (i as f64 + 0.5) / n as f64;
+            [(t + salt).fract(), (t * 1.618 + salt).fract()]
+        })
+        .collect()
+}
+
+/// The whole in-process serve lifecycle in one sequential test: the
+/// failpoint table is process-global state, so the scenarios must not
+/// interleave with each other.
+#[test]
+fn serve_e2e_lifecycle() {
+    let dir = tmp_registry("lifecycle");
+    write_model(&dir, "fwd", &[2, 10, 10, 1], false, 11);
+    write_model(&dir, "twohead", &[2, 8, 1], true, 12);
+    write_model(&dir, "lazy", &[2, 6, 1], false, 13);
+
+    let mut config = ServeConfig::new("127.0.0.1:0", &dir);
+    config.workers_per_model = 3;
+    config.policy = BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_millis(5),
+        queue_depth: 32,
+    };
+    let handle = Server::spawn(config).unwrap();
+    let addr = handle.addr();
+
+    // --- liveness + registry listing -------------------------------
+    let mut probe = ServeClient::connect(addr).unwrap();
+    probe.ping().unwrap();
+    assert_eq!(probe.models().unwrap(), ["fwd", "lazy", "twohead"]);
+
+    // --- concurrent clients vs lone sessions, bit for bit ----------
+    let mut lone_fwd = InferenceSession::open(dir.join("fwd.ckpt"))
+        .unwrap();
+    let mut lone_two =
+        InferenceSession::open(dir.join("twohead.ckpt")).unwrap();
+    const CLIENTS: usize = 6;
+    const REQS: usize = 8;
+    // expected outputs computed single-threaded, before any traffic
+    let mut want = Vec::new();
+    for c in 0..CLIENTS {
+        let mut per_client = Vec::new();
+        for r in 0..REQS {
+            let q = query(c, r, 16 + (c + r) % 5);
+            let out = if r % 2 == 0 {
+                lone_fwd.eval(&q)
+            } else {
+                lone_two.eval(&q)
+            };
+            per_client.push((q, out));
+        }
+        want.push(per_client);
+    }
+    let joins: Vec<_> = want
+        .iter()
+        .cloned()
+        .enumerate()
+        .map(|(c, per_client)| {
+            std::thread::spawn(move || {
+                let mut client =
+                    ServeClient::connect(addr).unwrap();
+                for (r, (q, (want_u, want_eps))) in
+                    per_client.into_iter().enumerate()
+                {
+                    let model =
+                        if r % 2 == 0 { "fwd" } else { "twohead" };
+                    let (u, eps) =
+                        client.eval(model, &q, None).unwrap();
+                    assert_eq!(u, want_u, "client {c} req {r}");
+                    assert_eq!(eps, want_eps, "client {c} req {r}");
+                }
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    // --- the f32 path is the lone session's f32 path, bit for bit --
+    lone_fwd.set_precision(Precision::F32);
+    let q = query(0, 99, 32);
+    let want_f32 = lone_fwd.eval(&q);
+    let got_f32 = probe
+        .eval("fwd", &q, Some(Precision::F32))
+        .unwrap();
+    assert_eq!(got_f32.0, want_f32.0);
+    assert!(got_f32.1.is_none());
+
+    // --- stats: counted, finite, with batch + latency fields -------
+    let stats = probe.stats().unwrap();
+    let requests =
+        stats.req("requests").unwrap().as_usize().unwrap();
+    assert!(
+        requests >= CLIENTS * REQS,
+        "only {requests} requests recorded"
+    );
+    let lat = stats.req("latency_ms").unwrap();
+    for field in ["p50", "p90", "p99", "max", "mean"] {
+        let v = lat.req(field).unwrap().as_f64().unwrap();
+        assert!(v.is_finite() && v >= 0.0, "{field} = {v}");
+    }
+    assert_eq!(lat.req("dropped").unwrap().as_usize().unwrap(), 0);
+    let batch = stats.req("batch").unwrap();
+    let fill = batch.req("fill").unwrap().as_f64().unwrap();
+    assert!(fill > 0.0 && fill <= 1.0, "fill {fill}");
+    assert_eq!(
+        batch.req("max_batch").unwrap().as_usize().unwrap(),
+        4
+    );
+    let hits = stats.req("models").unwrap();
+    assert!(hits.req("fwd").unwrap().as_usize().unwrap() > 0);
+    assert!(hits.req("twohead").unwrap().as_usize().unwrap() > 0);
+
+    // --- a bad request is an error reply, not a dead connection ----
+    let err = probe
+        .eval("no_such_model", &q, None)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no_such_model"), "{err}");
+    probe.ping().unwrap(); // same connection still serves
+
+    // --- io.read.err mid-load: error reply + eviction, then heal ---
+    // "lazy" has never been queried, so the next eval must read the
+    // artifact; the armed failpoint makes that read fail exactly once.
+    failpoint::arm_from_spec("io.read.err@1").unwrap();
+    let err = probe
+        .eval("lazy", &q, None)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("lazy"), "{err}");
+    assert_eq!(failpoint::fired_count("io.read.err"), 1);
+    // the server survived, nothing broken was cached, and the very
+    // next request loads the model cleanly
+    let healed = probe.eval("lazy", &q, None).unwrap();
+    assert_eq!(healed.0.len(), q.len());
+    failpoint::disarm_all();
+
+    // --- graceful shutdown via the protocol ------------------------
+    let before = handle.stats();
+    probe.shutdown_server().unwrap();
+    handle.shutdown().unwrap();
+    assert!(before.requests() > 0);
+    // the listener is gone: fresh connections are refused
+    assert!(ServeClient::connect(addr).is_err());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// SIGTERM against the real `repro serve` binary: the process must
+/// drain and exit 0, printing its final stats — the CI `serve-smoke`
+/// scenario in miniature. Release tier (`--include-ignored`).
+#[cfg(unix)]
+#[test]
+#[ignore = "spawns the release binary (CI serve-smoke job)"]
+fn sigterm_drains_the_serve_binary() {
+    use std::io::{BufRead, BufReader, Read};
+    use std::process::{Command, Stdio};
+
+    let dir = tmp_registry("sigterm");
+    write_model(&dir, "m", &[2, 8, 1], false, 5);
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args([
+            "serve",
+            "--registry",
+            dir.to_str().unwrap(),
+            "--addr",
+            "127.0.0.1:0",
+        ])
+        .env("FASTVPINNS_THREADS", "2")
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn repro serve");
+    let mut stdout =
+        BufReader::new(child.stdout.take().expect("child stdout"));
+    let mut line = String::new();
+    stdout.read_line(&mut line).unwrap();
+    assert!(line.contains("listening on"), "{line}");
+    let addr = line
+        .split("listening on ")
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .unwrap_or_else(|| panic!("no address in {line:?}"))
+        .to_string();
+
+    // real traffic through the spawned server
+    let mut client = ServeClient::connect(&*addr).unwrap();
+    client.ping().unwrap();
+    let (u, _) = client.eval("m", &query(0, 0, 64), None).unwrap();
+    assert_eq!(u.len(), 64);
+
+    // SIGTERM mid-flight: the server must drain, not die
+    let status = Command::new("kill")
+        .args(["-TERM", &child.id().to_string()])
+        .status()
+        .expect("send SIGTERM");
+    assert!(status.success());
+    let exit = child.wait().expect("wait for drain");
+    assert!(exit.success(), "serve exited {exit:?}");
+    let mut rest = String::new();
+    stdout.read_to_string(&mut rest).unwrap();
+    assert!(rest.contains("drained"), "missing drain line:\n{rest}");
+    assert!(rest.contains("requests"), "missing final stats:\n{rest}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
