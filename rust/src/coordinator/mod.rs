@@ -1,9 +1,15 @@
 //! The L3 training coordinator: drives a runtime backend (native pure
 //! Rust, or AOT/PJRT with `--features xla`) through an optimizer run,
 //! applies LR schedules, tracks timing (median per epoch — the paper's
-//! protocol), computes error norms and logs history.
+//! protocol), computes error norms and logs history. The in-process
+//! coordinator plane lives here too: [`pool`] holds the persistent
+//! fork-join worker pool and [`shard`] the tick state machine plus the
+//! cost-aware, worker-count-independent shard plan the native backend
+//! steps through.
 
 pub mod history;
 pub mod metrics;
+pub mod pool;
 pub mod schedule;
+pub mod shard;
 pub mod trainer;

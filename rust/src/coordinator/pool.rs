@@ -1,0 +1,260 @@
+//! A persistent fork-join worker pool: threads are spawned once per
+//! backend, parked on a condvar between ticks, and woken for each
+//! phase — replacing the per-step `std::thread::scope` spawns the
+//! training loop used to pay (a thread spawn + join per worker per
+//! step, ~10–50 µs each, pure overhead at small step times).
+//!
+//! The pool runs *borrowed* jobs: [`WorkerPool::run`] takes
+//! `&(dyn Fn(usize) + Sync)`, publishes the pointer to the workers,
+//! and blocks until every worker has finished, which is what makes the
+//! lifetime erasure sound (the closure provably outlives every use).
+//! A panicking job is caught on the worker, counted, and surfaced as
+//! an `Err` from `run` — the pool itself stays usable, which the
+//! recovery path (rollback + replay) depends on.
+
+use anyhow::{bail, Context, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+
+/// Type-erased pointer to the borrowed job closure. Send because the
+/// pointee is `Sync` (shared-call only) and `run` guarantees it stays
+/// alive while any worker can reach it.
+struct JobPtr(*const (dyn Fn(usize) + Sync + 'static));
+
+// SAFETY: the pointer is only dereferenced by workers between the
+// epoch publish and the final `remaining` decrement, and `run` blocks
+// the owning thread for exactly that window, keeping the borrowed
+// closure alive. The closure itself is `Sync`, so concurrent `&self`
+// calls from many workers are fine.
+unsafe impl Send for JobPtr {}
+
+struct PoolState {
+    job: Option<JobPtr>,
+    /// Bumped per `run` call; workers use it to detect fresh work.
+    epoch: u64,
+    /// Workers that have not yet finished the current job.
+    remaining: usize,
+    /// Jobs that panicked during the current run.
+    panics: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Caller -> workers: a new job (or shutdown) was published.
+    work: Condvar,
+    /// Workers -> caller: `remaining` reached zero.
+    done: Condvar,
+}
+
+/// Lock, riding mutex poisoning: a worker panic is already surfaced
+/// through the `panics` counter, and the state machine's fields stay
+/// consistent under it (every mutation is a single store).
+fn ride<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Persistent fork-join pool over `n` named worker threads. Created
+/// once (per [`crate::runtime::backend::native::NativeBackend`]);
+/// dropped pools signal shutdown and join their threads.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers.max(1)` parked worker threads.
+    pub fn new(workers: usize) -> Result<WorkerPool> {
+        let n = workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                job: None,
+                epoch: 0,
+                remaining: 0,
+                panics: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(n);
+        for wid in 0..n {
+            let sh = Arc::clone(&shared);
+            let h = std::thread::Builder::new()
+                .name(format!("fvp-worker-{wid}"))
+                .spawn(move || worker_loop(wid, &sh))
+                .with_context(|| format!("spawn pool worker {wid}"))?;
+            handles.push(h);
+        }
+        Ok(WorkerPool { shared, handles })
+    }
+
+    /// Worker thread count.
+    pub fn n_workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `f(worker_id)` once on every worker and block until all of
+    /// them return. Intended for one logical caller (the training
+    /// loop); errors if any worker's job panicked.
+    pub fn run(&self, f: &(dyn Fn(usize) + Sync)) -> Result<()> {
+        let ptr = f as *const (dyn Fn(usize) + Sync);
+        // SAFETY: only the lifetime bound is erased — layout and
+        // vtable are untouched. Soundness argument at `JobPtr`: this
+        // function does not return until `remaining == 0`, i.e. until
+        // no worker can still call through the pointer.
+        let ptr: *const (dyn Fn(usize) + Sync + 'static) =
+            unsafe { std::mem::transmute(ptr) };
+        let mut st = ride(&self.shared.state);
+        st.job = Some(JobPtr(ptr));
+        st.epoch = st.epoch.wrapping_add(1);
+        st.remaining = self.handles.len();
+        st.panics = 0;
+        self.shared.work.notify_all();
+        while st.remaining > 0 {
+            st = wait(&self.shared.done, st);
+        }
+        st.job = None;
+        let panics = st.panics;
+        drop(st);
+        if panics > 0 {
+            bail!("{panics} pool worker(s) panicked during a tick");
+        }
+        Ok(())
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = ride(&self.shared.state);
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            // a worker that somehow unwound is already accounted for;
+            // nothing useful to do with the join result at drop time
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(wid: usize, sh: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = ride(&sh.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    if let Some(j) = &st.job {
+                        seen = st.epoch;
+                        break j.0;
+                    }
+                }
+                st = wait(&sh.work, st);
+            }
+        };
+        // SAFETY: `run` blocks until this worker (and every other)
+        // decrements `remaining` below, so the borrowed closure behind
+        // `job` is still alive here.
+        let result =
+            catch_unwind(AssertUnwindSafe(|| unsafe { (*job)(wid) }));
+        let mut st = ride(&sh.state);
+        if result.is_err() {
+            st.panics += 1;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            sh.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn every_worker_runs_each_job_exactly_once() {
+        let pool = WorkerPool::new(4).unwrap();
+        let count = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(&|_w| {
+                count.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn workers_see_distinct_ids_and_borrowed_data() {
+        let pool = WorkerPool::new(3).unwrap();
+        let data = [3usize, 5, 7]; // borrowed stack data
+        let hits: Vec<AtomicUsize> =
+            (0..3).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(&|w| {
+            hits[w].fetch_add(data[w], Ordering::Relaxed);
+        })
+        .unwrap();
+        let got: Vec<usize> =
+            hits.iter().map(|h| h.load(Ordering::Relaxed)).collect();
+        assert_eq!(got, vec![3, 5, 7]);
+    }
+
+    #[test]
+    fn a_panicking_job_errors_and_the_pool_survives() {
+        let pool = WorkerPool::new(2).unwrap();
+        let err = pool
+            .run(&|w| {
+                if w == 0 {
+                    panic!("injected test panic");
+                }
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err}");
+        // the pool keeps working after a failed tick
+        let count = AtomicUsize::new(0);
+        pool.run(&|_w| {
+            count.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(count.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn cursor_claim_pattern_covers_every_shard_once() {
+        // the exact shape the backend's Step/Reduce phases use
+        let pool = WorkerPool::new(4).unwrap();
+        let hits: Vec<AtomicUsize> =
+            (0..33).map(|_| AtomicUsize::new(0)).collect();
+        let cursor = AtomicUsize::new(0);
+        pool.run(&|_w| loop {
+            let s = cursor.fetch_add(1, Ordering::Relaxed);
+            if s >= hits.len() {
+                break;
+            }
+            hits[s].fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "shard {i}");
+        }
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one() {
+        let pool = WorkerPool::new(0).unwrap();
+        assert_eq!(pool.n_workers(), 1);
+        pool.run(&|w| assert_eq!(w, 0)).unwrap();
+    }
+}

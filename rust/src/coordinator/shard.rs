@@ -1,0 +1,301 @@
+//! The tick-based coordinator state machine and the explicit,
+//! cost-aware shard plan for the native training step.
+//!
+//! Modeled on Psyche's Coordinator loop: every optimizer step is one
+//! *tick* through four phases — `AssignShards → Step → Reduce → Sync`.
+//! [`Tick`] enforces the phase order; [`ShardPlan`] decides *what* each
+//! phase operates on.
+//!
+//! The determinism keystone: the plan is derived **only** from the
+//! element count, the quadrature order and the block size — never from
+//! the worker count. Workers claim shards off a cursor, but results
+//! are keyed by shard, and the [`n_pairs`]/[`pair`] tree reduce merges
+//! the per-shard partials along a binary tree whose shape depends only
+//! on the shard count. Floating-point addition is not associative, so
+//! "same summation tree" is exactly the property that makes per-step
+//! losses bit-identical for *any* `--workers` value.
+
+use anyhow::{ensure, Result};
+
+/// Upper bound on shards per plan. Small enough that the per-shard
+/// gradient accumulators stay cache-friendly (64 × n_params doubles),
+/// large enough to feed every realistic worker count with several
+/// shards of work for load balancing.
+pub const MAX_SHARDS: usize = 64;
+
+/// One phase of a coordinator tick, in execution order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Reset the per-shard accumulators the workers will claim.
+    AssignShards,
+    /// Workers pull shards off a shared cursor and compute partials.
+    Step,
+    /// Pairwise tree reduce of the per-shard partials into shard 0.
+    Reduce,
+    /// Fold the root into the flat gradient; penalties + step stats.
+    Sync,
+}
+
+impl Phase {
+    /// The phase that must follow `self` (`Sync` wraps to
+    /// `AssignShards`, starting the next tick).
+    pub fn next(self) -> Phase {
+        match self {
+            Phase::AssignShards => Phase::Step,
+            Phase::Step => Phase::Reduce,
+            Phase::Reduce => Phase::Sync,
+            Phase::Sync => Phase::AssignShards,
+        }
+    }
+}
+
+impl Default for Phase {
+    fn default() -> Phase {
+        Phase::AssignShards
+    }
+}
+
+/// Phase-order guard for the coordinator loop: each phase must be
+/// entered via [`Tick::begin`] in the fixed order, and a completed
+/// `Sync` increments the tick counter. A skipped or repeated phase is
+/// a coordinator bug and errors instead of silently corrupting the
+/// reduction.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Tick {
+    phase: Phase,
+    ticks: u64,
+}
+
+impl Tick {
+    /// Enter phase `p`. Errors unless `p` is the expected next phase.
+    pub fn begin(&mut self, p: Phase) -> Result<()> {
+        ensure!(
+            p == self.phase,
+            "coordinator tick out of order: expected {:?}, got {:?}",
+            self.phase,
+            p
+        );
+        self.phase = p.next();
+        if p == Phase::Sync {
+            self.ticks += 1;
+        }
+        Ok(())
+    }
+
+    /// The phase the next [`Tick::begin`] must name.
+    pub fn expected(&self) -> Phase {
+        self.phase
+    }
+
+    /// Completed ticks (== optimizer steps driven through the plan).
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+}
+
+/// One contiguous run of elements, aligned to the global block grid
+/// (`lo % block_elems == 0`), with its quadrature-point cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    /// First element (inclusive).
+    pub lo: usize,
+    /// Last element (exclusive).
+    pub hi: usize,
+    /// Cost weight: quadrature points in the shard.
+    pub weight: usize,
+}
+
+/// A step-invariant partition of the element range into up to
+/// [`MAX_SHARDS`] contiguous, block-aligned shards, weight-balanced by
+/// quadrature-point count (the ragged tail block is genuinely
+/// lighter). Built once at backend construction; a function of
+/// `(ne, nq, block_elems)` and nothing else.
+#[derive(Debug, Clone, Default)]
+pub struct ShardPlan {
+    shards: Vec<Shard>,
+}
+
+impl ShardPlan {
+    /// Partition `ne` elements (each carrying `nq` quadrature points,
+    /// tiled into blocks of `block_elems`) into weight-balanced
+    /// shards. Greedy over blocks: each shard takes whole blocks until
+    /// it reaches `ceil(remaining_weight / remaining_shards)`, while
+    /// always leaving at least one block per remaining shard.
+    pub fn build(ne: usize, nq: usize, block_elems: usize) -> ShardPlan {
+        let be = block_elems.max(1);
+        let nq = nq.max(1);
+        let n_blocks = ne.div_ceil(be);
+        let n_shards = n_blocks.min(MAX_SHARDS);
+        let block_w = |b: usize| -> usize {
+            let lo = b * be;
+            let hi = ((b + 1) * be).min(ne);
+            (hi - lo) * nq
+        };
+        let mut remaining: usize = ne * nq;
+        let mut shards = Vec::with_capacity(n_shards);
+        let mut b = 0;
+        for s in 0..n_shards {
+            let left = n_shards - s;
+            let target = remaining.div_ceil(left);
+            let max_b = n_blocks - (left - 1);
+            let lo_blk = b;
+            let mut w = 0;
+            while b < max_b && w < target {
+                w += block_w(b);
+                b += 1;
+            }
+            remaining -= w;
+            shards.push(Shard {
+                lo: lo_blk * be,
+                hi: (b * be).min(ne),
+                weight: w,
+            });
+        }
+        ShardPlan { shards }
+    }
+
+    /// Number of shards in the plan (0 only for an empty domain).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard `s` by plan order.
+    pub fn shard(&self, s: usize) -> Shard {
+        self.shards[s]
+    }
+
+    /// All shards, in plan (= element) order.
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+}
+
+/// Number of merge pairs at tree level `stride` for `n` shards. The
+/// levels run `stride = 1, 2, 4, ...` while `stride < n`; within a
+/// level, pair `k` merges shard `2*stride*k + stride` into shard
+/// `2*stride*k`. Pairs within a level touch disjoint shards, so
+/// workers may process them in any order without changing a bit; the
+/// tree shape depends only on `n`.
+pub fn n_pairs(n: usize, stride: usize) -> usize {
+    if n > stride {
+        (n - 1 - stride) / (2 * stride) + 1
+    } else {
+        0
+    }
+}
+
+/// The (destination, source) shard indices of pair `k` at level
+/// `stride` — see [`n_pairs`] for the tree layout.
+pub fn pair(stride: usize, k: usize) -> (usize, usize) {
+    (2 * stride * k, 2 * stride * k + stride)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tick_enforces_the_phase_order() {
+        let mut t = Tick::default();
+        assert_eq!(t.expected(), Phase::AssignShards);
+        assert!(t.begin(Phase::Step).is_err());
+        t.begin(Phase::AssignShards).unwrap();
+        assert!(t.begin(Phase::Sync).is_err());
+        t.begin(Phase::Step).unwrap();
+        t.begin(Phase::Reduce).unwrap();
+        assert_eq!(t.ticks(), 0);
+        t.begin(Phase::Sync).unwrap();
+        assert_eq!(t.ticks(), 1);
+        // the next tick starts over
+        assert_eq!(t.expected(), Phase::AssignShards);
+        t.begin(Phase::AssignShards).unwrap();
+    }
+
+    fn check_plan(ne: usize, nq: usize, be: usize) {
+        let plan = ShardPlan::build(ne, nq, be);
+        let n_blocks = ne.div_ceil(be.max(1));
+        assert_eq!(plan.n_shards(), n_blocks.min(MAX_SHARDS),
+                   "ne={ne} nq={nq} be={be}");
+        // contiguous cover of [0, ne), block-aligned starts, weights
+        // that sum to the total quadrature cost
+        let mut next = 0;
+        let mut total_w = 0;
+        for sh in plan.shards() {
+            assert_eq!(sh.lo, next, "gap/overlap at {}", sh.lo);
+            assert!(sh.hi > sh.lo, "empty shard");
+            assert_eq!(sh.lo % be.max(1), 0, "unaligned shard start");
+            assert_eq!(sh.weight, (sh.hi - sh.lo) * nq.max(1));
+            next = sh.hi;
+            total_w += sh.weight;
+        }
+        assert_eq!(next, ne);
+        assert_eq!(total_w, ne * nq.max(1));
+        // balanced: a shard stops taking blocks the moment it reaches
+        // its running target, so no shard exceeds the ideal mean by a
+        // full block's weight (at most one block minus one point of
+        // overshoot; the min side is unbounded by design — the tail
+        // shard takes whatever is left). Verified over ~16k shapes in
+        // python/proto_shard_plan.py.
+        if plan.n_shards() > 0 {
+            let ideal = (ne * nq.max(1)).div_ceil(plan.n_shards());
+            let max = plan.shards().iter().map(|s| s.weight).max();
+            assert!(
+                max.unwrap() <= ideal + be.max(1) * nq.max(1) - 1,
+                "unbalanced plan ne={ne} nq={nq} be={be}: {plan:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn plans_cover_balance_and_align_across_shapes() {
+        for ne in [1, 2, 3, 5, 9, 64, 65, 100, 4096, 100_000] {
+            for be in [1, 2, 7, 28, 256] {
+                for nq in [1, 9, 100] {
+                    check_plan(ne, nq, be);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_tail_block_is_lighter() {
+        // ne=9, be=2: blocks of 2,2,2,2,1 elements — the plan sees the
+        // true quadrature cost, so the last shard carries the light
+        // tail
+        let plan = ShardPlan::build(9, 4, 2);
+        assert_eq!(plan.n_shards(), 5);
+        let w: Vec<usize> =
+            plan.shards().iter().map(|s| s.weight).collect();
+        assert_eq!(w, vec![8, 8, 8, 8, 4]);
+    }
+
+    #[test]
+    fn empty_domain_yields_an_empty_plan() {
+        assert_eq!(ShardPlan::build(0, 9, 4).n_shards(), 0);
+    }
+
+    #[test]
+    fn tree_reduce_covers_every_shard_exactly_once() {
+        for n in 1..=70usize {
+            let mut parts: Vec<u64> = (0..n as u64).map(|i| i + 1).collect();
+            let want: u64 = parts.iter().sum();
+            let mut stride = 1;
+            while stride < n {
+                let mut seen = vec![false; n];
+                for k in 0..n_pairs(n, stride) {
+                    let (a, b) = pair(stride, k);
+                    assert!(a < b && b < n, "bad pair ({a},{b}) n={n}");
+                    // disjoint within the level: any worker
+                    // interleaving is safe
+                    assert!(!seen[a] && !seen[b], "overlap at n={n}");
+                    seen[a] = true;
+                    seen[b] = true;
+                    parts[a] += parts[b];
+                    parts[b] = 0;
+                }
+                stride *= 2;
+            }
+            assert_eq!(parts[0], want, "tree reduce lost shards at n={n}");
+        }
+    }
+}

@@ -78,6 +78,10 @@ pub struct TrainConfig {
     pub eps_init: f64,
     /// Early stop when |eps - target| < tol (inverse_const).
     pub eps_converge: Option<(f64, f64)>,
+    /// Worker threads for the native backend's persistent pool
+    /// (`--workers`; `None` = env alias, then machine parallelism).
+    /// Wall-clock only — never changes a result bit.
+    pub workers: Option<usize>,
 }
 
 impl Default for TrainConfig {
@@ -91,6 +95,7 @@ impl Default for TrainConfig {
             log_every: 1,
             eps_init: 2.0,
             eps_converge: None,
+            workers: None,
         }
     }
 }
@@ -102,6 +107,7 @@ impl From<&TrainConfig> for BackendOpts {
             gamma: c.gamma,
             seed: c.seed,
             eps_init: c.eps_init,
+            workers: c.workers,
         }
     }
 }

@@ -249,8 +249,9 @@ pub struct StepBenchCase {
     pub n_quad: usize,
     /// Trainable parameter count.
     pub dof: usize,
-    /// Effective worker threads (parallelism clamped to `ne`).
-    pub threads: usize,
+    /// Effective persistent-pool workers the case ran with (requested
+    /// count clamped to `ne`) — the thread-scaling sweep varies this.
+    pub workers: usize,
     /// GEMM/epilogue kernel the case ran on
     /// ([`crate::linalg::simd::kernel_name`] at measurement time).
     pub kernel: &'static str,
@@ -269,6 +270,25 @@ pub fn native_step_case(
     warmup: usize,
 ) -> Result<StepBenchCase> {
     native_forward_step_case("poisson_sin", k, nt1d, nq1d, iters, warmup)
+}
+
+/// [`native_step_case`] pinned to an explicit persistent-pool worker
+/// count — the thread-scaling sweep rows of `repro bench` (workers
+/// 1/2/max at the largest grid). Losses are bit-identical across
+/// worker counts by construction; only wall-clock moves.
+pub fn native_step_case_workers(
+    k: usize,
+    nt1d: usize,
+    nq1d: usize,
+    iters: usize,
+    warmup: usize,
+    workers: usize,
+) -> Result<StepBenchCase> {
+    let problem =
+        crate::problems::PoissonSin::new(2.0 * std::f64::consts::PI);
+    let cfg = NativeConfig::forward_std();
+    native_step_case_cfg(k, nt1d, nq1d, iters, warmup, &cfg, &problem,
+                         "poisson", "poisson_sin", Some(workers))
 }
 
 /// Time the native forward step for one of the registered PDE cases on
@@ -318,7 +338,7 @@ pub fn native_forward_step_case(
     };
     let cfg = NativeConfig::forward_std();
     native_step_case_cfg(k, nt1d, nq1d, iters, warmup, &cfg,
-                         problem.as_ref(), loss, pde)
+                         problem.as_ref(), loss, pde, None)
 }
 
 /// Time the native two-head InverseSpace train step on a `k x k` grid
@@ -335,7 +355,7 @@ pub fn native_inverse_space_step_case(
     let cfg = NativeConfig::inverse_space_std(100);
     let problem = crate::problems::InverseSpaceSin;
     native_step_case_cfg(k, nt1d, nq1d, iters, warmup, &cfg, &problem,
-                         "inverse_space", "inverse_space_sin")
+                         "inverse_space", "inverse_space_sin", None)
 }
 
 /// One measured case of the inference-throughput sweep: repeated full
@@ -431,6 +451,20 @@ pub fn native_probe_loss(
     nq1d: usize,
     steps: usize,
 ) -> Result<f64> {
+    native_probe_loss_workers(k, nt1d, nq1d, steps, None)
+}
+
+/// [`native_probe_loss`] pinned to an explicit worker count — the
+/// bench harness's worker-count determinism guard compares the
+/// returned losses bit-for-bit across counts (the shard plan and the
+/// fixed-order tree reduce make them identical by construction).
+pub fn native_probe_loss_workers(
+    k: usize,
+    nt1d: usize,
+    nq1d: usize,
+    steps: usize,
+    workers: Option<usize>,
+) -> Result<f64> {
     let mesh = generators::unit_square(k.max(1));
     let dom = assembly::assemble(&mesh, nt1d, nq1d,
                                  QuadKind::GaussLegendre);
@@ -443,7 +477,8 @@ pub fn native_probe_loss(
         sensor_values: None,
     };
     let cfg = NativeConfig::forward_std();
-    let mut b = NativeBackend::new(&cfg, &src, &BackendOpts::default())?;
+    let opts = BackendOpts { workers, ..BackendOpts::default() };
+    let mut b = NativeBackend::new(&cfg, &src, &opts)?;
     let mut loss = f64::NAN;
     for i in 0..steps.max(1) {
         loss = b.step(i + 1, 1e-3)?.loss;
@@ -462,6 +497,7 @@ fn native_step_case_cfg(
     problem: &dyn Problem,
     loss: &'static str,
     pde: &'static str,
+    workers: Option<usize>,
 ) -> Result<StepBenchCase> {
     let ne = k * k;
     let mesh = generators::unit_square(k.max(1));
@@ -473,9 +509,10 @@ fn native_step_case_cfg(
         problem,
         sensor_values: None,
     };
-    let mut b = NativeBackend::new(cfg, &src, &BackendOpts::default())?;
+    let opts = BackendOpts { workers, ..BackendOpts::default() };
+    let mut b = NativeBackend::new(cfg, &src, &opts)?;
     let dof = b.n_opt_params();
-    let threads = b.n_threads();
+    let workers = b.n_threads();
     let samples = backend_step_samples_ms(&mut b, iters, warmup)?;
     Ok(StepBenchCase {
         loss,
@@ -483,7 +520,7 @@ fn native_step_case_cfg(
         ne,
         n_quad: ne * dom.nq,
         dof,
-        threads,
+        workers,
         kernel: crate::linalg::simd::kernel_name(),
         summary: crate::util::stats::Summary::from(&samples),
     })

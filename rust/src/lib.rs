@@ -25,8 +25,11 @@
 //!   coefficients), `InverseConst` (trainable scalar eps + sensors),
 //!   `InverseSpace` (the two-head eps *field* from the network's
 //!   softplus'd second head, entering the contraction per quadrature
-//!   point). Per-thread workspaces are allocated once and reused, so
-//!   the step hot path is allocation-free. Trains offline with no
+//!   point). Element shards run on a persistent worker pool
+//!   ([`coordinator::pool`]) with per-worker workspaces allocated
+//!   once, so the step hot path spawns no threads and allocates
+//!   nothing — and the fixed-order shard reduce keeps results
+//!   bit-identical at any worker count. Trains offline with no
 //!   Python, no artifacts and no XLA in the build graph (`repro
 //!   bench` tracks its step time, tagged per PDE).
 //! - **XLA backend** (`--features xla`) — executes AOT train steps

@@ -109,6 +109,7 @@ repro — FastVPINNs coordinator
               [--omega-pi K] [--k-pi K] [--n N] [--nt1d N] [--nq1d N]
               [--layers 2,30,30,30,1] [--iters N] [--lr F] [--tau F]
               [--seed N] [--ns N] [--nb N] [--log-every N]
+              [--workers N]   (pool size; FASTVPINNS_THREADS is an alias)
               [--expect-rel-l2 F] [--history F.csv]
               [--checkpoint F.ckpt [--checkpoint-every N]]
               [--resume F.ckpt]
@@ -212,7 +213,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
     use fastvpinns::experiments::common::{
         native_forward_step_case, native_infer_case,
         native_inverse_space_step_case, native_probe_loss,
-        native_step_case, StepBenchCase, STD_LAYERS,
+        native_probe_loss_workers, native_step_case,
+        native_step_case_workers, StepBenchCase, STD_LAYERS,
     };
     use fastvpinns::linalg::simd;
     use fastvpinns::runtime::infer::Precision;
@@ -258,8 +260,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
             ("ne", Json::num(case.ne as f64)),
             ("n_quad", Json::num(case.n_quad as f64)),
             ("dof", Json::num(case.dof as f64)),
-            // effective worker count (clamped to ne), not machine cores
-            ("threads", Json::num(case.threads as f64)),
+            // effective persistent-pool workers (clamped to ne), not
+            // machine cores — the thread-scaling sweep varies this
+            ("workers", Json::num(case.workers as f64)),
             // kernel the case actually ran on (the forced-scalar
             // parity case records "scalar_4x8" here)
             ("kernel", Json::str(case.kernel)),
@@ -272,6 +275,60 @@ fn cmd_bench(args: &Args) -> Result<()> {
     for &k in ks {
         push_case(&native_step_case(k, nt1d, nq1d, iters, warmup)?);
     }
+    // persistent-pool thread scaling: the sweep's largest grid
+    // re-timed with the pool pinned to 1, 2 and all workers — the
+    // tracked scaling rows. The shard plan and the fixed-order tree
+    // reduce are worker-count-independent, so these rows differ only
+    // in wall-clock; the probe below checks the losses stay
+    // bit-identical.
+    let k_max = ks.iter().copied().max().unwrap_or(4);
+    let mut sweep_counts = vec![1usize, 2, threads];
+    sweep_counts.sort_unstable();
+    sweep_counts.dedup();
+    let mut scaling: Vec<(usize, f64)> = Vec::new();
+    for &w in &sweep_counts {
+        let c = native_step_case_workers(k_max, nt1d, nq1d, iters,
+                                         warmup, w)?;
+        scaling.push((c.workers, c.summary.median));
+        push_case(&c);
+    }
+    for pair in scaling.windows(2) {
+        let ((w0, m0), (w1, m1)) = (pair[0], pair[1]);
+        println!(
+            "  worker scaling: {w0} -> {w1} workers, median {m0:.3} -> \
+             {m1:.3} ms/step ({:.2}x) at ne={}",
+            m0 / m1.max(1e-9), k_max * k_max
+        );
+        if w1 > w0 && m1 > m0 * 1.15 {
+            // soft gate: shared runners are too noisy for a hard
+            // monotonicity bail, but a real scaling regression shows
+            // up in the uploaded JSON rows either way
+            println!(
+                "  WARNING: adding workers ({w0} -> {w1}) slowed the \
+                 step down by {:.1}% at ne={}",
+                (m1 / m0 - 1.0) * 100.0, k_max * k_max
+            );
+        }
+    }
+    // worker-count determinism guard: a short training run repeated at
+    // each sweep count must land on bit-identical losses (shard plan +
+    // reduction order never depend on the worker count)
+    let probe_ref = native_probe_loss_workers(8, nt1d, nq1d, 5, Some(1))?;
+    for &w in &sweep_counts[1..] {
+        let probe =
+            native_probe_loss_workers(8, nt1d, nq1d, 5, Some(w))?;
+        if probe.to_bits() != probe_ref.to_bits() {
+            bail!(
+                "persistent pool broke worker-count determinism: \
+                 probe loss {probe} with {w} workers vs {probe_ref} \
+                 with 1 worker (must be bit-identical)"
+            );
+        }
+    }
+    println!(
+        "  worker determinism: probe losses bit-identical across \
+         workers {sweep_counts:?}"
+    );
     // the generalized-form PDE cases on a subset of grids: Helmholtz
     // (reaction term) and the rotating variable-convection field
     for &k in pde_ks {
@@ -675,7 +732,7 @@ fn persistable_flags(args: &Args) -> Vec<(String, String)> {
         "backend", "resume", "checkpoint", "checkpoint-every", "history",
         "expect-rel-l2", "iters", "log-every", "failpoints",
         "snapshot-every", "max-recoveries", "lr-backoff",
-        "lr-restore-after", "grad-limit", "watchdog-ms",
+        "lr-restore-after", "grad-limit", "watchdog-ms", "workers",
     ];
     args.flag_pairs()
         .into_iter()
@@ -772,12 +829,27 @@ fn cmd_train_native(args: &Args) -> Result<()> {
             |_| anyhow::anyhow!("--lr expects a number, got {v}"))?),
         None => setup.lr,
     };
+    // --workers: persistent-pool size. Takes precedence over the
+    // FASTVPINNS_THREADS env alias (checked by the backend when this
+    // is None); zero and garbage are rejected here with the same
+    // wording the backend uses for the env variable.
+    let workers = match eff.flag("workers") {
+        Some(v) => {
+            let n: usize = v.parse().map_err(|_| anyhow::anyhow!(
+                "--workers must be a positive integer, got '{v}'"))?;
+            anyhow::ensure!(
+                n > 0, "--workers must be a positive integer, got 0");
+            Some(n)
+        }
+        None => None,
+    };
     let cfg = TrainConfig {
         iters,
         lr,
         tau: eff.f64_or("tau", 10.0)?,
         seed: eff.usize_or("seed", 42)? as u64,
         log_every: eff.usize_or("log-every", 100)?,
+        workers,
         ..TrainConfig::default()
     };
     // on resume the network shape is the artifact's, not --layers
@@ -798,7 +870,16 @@ fn cmd_train_native(args: &Args) -> Result<()> {
     let src = DataSource { mesh: &mesh, domain: Some(&dom),
                            problem: &*problem, sensor_values: None };
     let native = match &resume {
-        Some(ck) => NativeBackend::from_checkpoint(ck, &src)?,
+        Some(ck) => {
+            // the worker count is run-control, not trained state:
+            // from_checkpoint resolves the env/machine default, and an
+            // explicit --workers re-sizes the pool afterwards
+            let mut b = NativeBackend::from_checkpoint(ck, &src)?;
+            if let Some(w) = cfg.workers {
+                b.set_workers(w)?;
+            }
+            b
+        }
         None => {
             let ncfg = NativeConfig {
                 layers,

@@ -62,11 +62,23 @@ pub struct BackendOpts {
     pub seed: u64,
     /// Initial guess for the trainable eps (inverse_const; paper: 2.0).
     pub eps_init: f64,
+    /// Worker threads for the persistent pool (`--workers`). `None`
+    /// defers to the `FASTVPINNS_THREADS` env alias, then the
+    /// machine's available parallelism; always clamped to the element
+    /// count. Never changes results — the shard plan and reduction
+    /// order are worker-count-independent — only wall-clock.
+    pub workers: Option<usize>,
 }
 
 impl Default for BackendOpts {
     fn default() -> Self {
-        BackendOpts { tau: 10.0, gamma: 10.0, seed: 42, eps_init: 2.0 }
+        BackendOpts {
+            tau: 10.0,
+            gamma: 10.0,
+            seed: 42,
+            eps_init: 2.0,
+            workers: None,
+        }
     }
 }
 

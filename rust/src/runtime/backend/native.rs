@@ -30,23 +30,45 @@
 //!    forward pass wrote;
 //! 4. an Adam update (beta1 0.9, beta2 0.999, eps 1e-8).
 //!
-//! The element loop is parallelized over contiguous element chunks with
-//! scoped threads — the same pattern as `fem::assembly` — and every
-//! thread owns a preallocated [`Workspace`] + gradient accumulator that
-//! is reused across steps, so the hot path performs no allocation.
-//! Thread partials are reduced in chunk order, so a run is
-//! deterministic for a fixed thread count.
+//! The element loop runs on the coordinator plane: a persistent
+//! [`WorkerPool`] (spawned once per backend, parked between steps)
+//! drives each step as one tick of the `AssignShards → Step → Reduce →
+//! Sync` state machine in [`crate::coordinator::shard`]. Elements are
+//! partitioned into a step-invariant, cost-aware [`ShardPlan`] (block-
+//! aligned, weighted by quadrature-point count); workers claim shards
+//! off a cursor but accumulate into *per-shard* partials, which a
+//! fixed-order pairwise tree reduce then folds together. Because the
+//! shard plan and the reduction tree depend only on the domain — never
+//! on the worker count — per-step losses are bit-identical for any
+//! `--workers` value. Every worker owns a preallocated [`Workspace`]
+//! reused across steps, so the hot path performs no allocation.
 
 use anyhow::{anyhow, bail, ensure, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, PoisonError};
 
 use super::form::VariationalForm;
 use super::{Backend, BackendOpts, DataSource, StepStats};
+use crate::coordinator::pool::WorkerPool;
+use crate::coordinator::shard::{self, Phase, ShardPlan, Tick};
 use crate::linalg::gemm::{gemm, gemv, GemmBufs};
 use crate::linalg::simd;
 use crate::runtime::checkpoint::{
     hash_f64_bits, Checkpoint, DomainFingerprint, TrainHyper,
 };
 use crate::util::rng::Rng;
+
+/// Lock a per-worker/per-shard cell, riding mutex poisoning: a worker
+/// panic already surfaced as an error from the pool tick, and every
+/// accumulator is reset at the next `AssignShards` before reuse.
+fn ride<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `ride` for exclusively-owned cells (no locking, same poison ride).
+fn ride_mut<T>(m: &mut Mutex<T>) -> &mut T {
+    m.get_mut().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Target number of quadrature points batched per forward/backward
 /// block. Rounded to whole elements; sized so a block's activations and
@@ -800,7 +822,9 @@ impl Workspace {
     }
 }
 
-/// Per-thread gradient + loss accumulator, reused across steps.
+/// Per-shard gradient + loss accumulator, reused across steps. Keyed
+/// by shard (not by worker), so which worker computes a shard never
+/// influences any bit of the reduction.
 struct Partial {
     grad: Vec<f64>,
     var_sq: f64,
@@ -808,17 +832,24 @@ struct Partial {
 }
 
 impl Partial {
+    fn new(n_net: usize) -> Partial {
+        Partial { grad: vec![0.0; n_net], var_sq: 0.0, geps: 0.0 }
+    }
+
     fn reset(&mut self) {
         self.grad.fill(0.0);
         self.var_sq = 0.0;
         self.geps = 0.0;
     }
-}
 
-/// One worker thread's preallocated state.
-struct ThreadSlot {
-    ws: Workspace,
-    partial: Partial,
+    /// Fold `other` into `self` — one edge of the reduction tree.
+    fn merge(&mut self, other: &Partial) {
+        for (g, og) in self.grad.iter_mut().zip(&other.grad) {
+            *g += og;
+        }
+        self.var_sq += other.var_sq;
+        self.geps += other.geps;
+    }
 }
 
 /// Chunked penalty pass shared by the Dirichlet and sensor terms:
@@ -914,8 +945,17 @@ pub struct NativeBackend {
     block_elems: usize,
     /// Reused flat gradient over the optimized parameters.
     grad: Vec<f64>,
-    /// Per-thread workspaces + partial accumulators, reused each step.
-    slots: Vec<ThreadSlot>,
+    /// Persistent worker threads, parked between ticks.
+    pool: WorkerPool,
+    /// Per-worker workspaces, reused each step (Mutex only to share
+    /// `&self` with the pool — uncontended, one lock per tick).
+    worker_ws: Vec<Mutex<Workspace>>,
+    /// Per-shard partial accumulators, reused each step.
+    shard_partials: Vec<Mutex<Partial>>,
+    /// Step-invariant cost-aware element partition.
+    plan: ShardPlan,
+    /// Phase-order guard for the coordinator loop.
+    tick: Tick,
 }
 
 impl NativeBackend {
@@ -994,24 +1034,34 @@ impl NativeBackend {
             (Vec::new(), Vec::new())
         };
 
-        // FASTVPINNS_THREADS pins the worker count: thread chunking
-        // decides the floating-point reduction order, so a pinned
-        // count makes a fixed-seed run bit-reproducible across
-        // machines (the CI acceptance gate relies on this). An
-        // unparsable value errors rather than silently unpinning.
-        let n_threads = match std::env::var("FASTVPINNS_THREADS") {
-            Ok(v) => v
-                .parse::<usize>()
-                .ok()
-                .filter(|&n| n > 0)
-                .ok_or_else(|| anyhow!(
-                    "FASTVPINNS_THREADS must be a positive integer, \
-                     got '{v}'"))?,
-            Err(_) => std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1),
-        }
-        .min(dom.ne.max(1));
+        // Worker-count precedence: `--workers` (BackendOpts::workers)
+        // wins, the FASTVPINNS_THREADS env var is a documented alias,
+        // and the machine's available parallelism is the default —
+        // always clamped to the element count. The shard plan and the
+        // reduction tree are worker-count-independent, so this choice
+        // affects wall-clock only: per-step losses are bit-identical
+        // for any value. Zero or an unparsable env value errors rather
+        // than silently falling back.
+        let configured = match opts.workers {
+            Some(n) => {
+                ensure!(n > 0,
+                        "--workers must be a positive integer, got 0");
+                n
+            }
+            None => match std::env::var("FASTVPINNS_THREADS") {
+                Ok(v) => v
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|&n| n > 0)
+                    .ok_or_else(|| anyhow!(
+                        "FASTVPINNS_THREADS must be a positive \
+                         integer, got '{v}'"))?,
+                Err(_) => std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1),
+            },
+        };
+        let n_threads = configured.min(dom.ne.max(1));
 
         let (blo, bhi) = src.mesh.bbox();
         let fingerprint = DomainFingerprint {
@@ -1053,28 +1103,54 @@ impl NativeBackend {
             n_threads,
             block_elems: (TARGET_BLOCK_PTS / dom.nq.max(1)).max(1),
             grad: vec![0.0; n_opt],
-            slots: Vec::new(),
+            pool: WorkerPool::new(n_threads)?,
+            worker_ws: Vec::new(),
+            shard_partials: Vec::new(),
+            plan: ShardPlan::default(),
+            tick: Tick::default(),
         };
         backend.rebuild_workspaces();
         Ok(backend)
     }
 
-    /// (Re)allocate the per-thread workspaces for the current block
-    /// size — called once at construction; the step loop reuses them.
+    /// (Re)allocate the per-worker workspaces, the shard plan and the
+    /// per-shard accumulators for the current block size — called at
+    /// construction (and from the block-size test hook); the step loop
+    /// reuses them.
     fn rebuild_workspaces(&mut self) {
         let bp = self.block_elems * self.nq;
         let jrows = self.block_elems * self.nt;
         let n_net = self.net.n_params();
-        self.slots = (0..self.n_threads)
-            .map(|_| ThreadSlot {
-                ws: Workspace::new(&self.net, bp, jrows),
-                partial: Partial {
-                    grad: vec![0.0; n_net],
-                    var_sq: 0.0,
-                    geps: 0.0,
-                },
-            })
+        self.worker_ws = (0..self.n_threads)
+            .map(|_| Mutex::new(Workspace::new(&self.net, bp, jrows)))
             .collect();
+        self.plan =
+            ShardPlan::build(self.ne, self.nq, self.block_elems);
+        self.shard_partials = (0..self.plan.n_shards())
+            .map(|_| Mutex::new(Partial::new(n_net)))
+            .collect();
+    }
+
+    /// Re-size the persistent worker pool (e.g. `--workers` on a
+    /// resumed run, where the backend is built from the artifact
+    /// before the flag applies). The shard plan is untouched: the
+    /// worker count never changes the reduction order, only how many
+    /// threads claim shards.
+    pub fn set_workers(&mut self, workers: usize) -> Result<()> {
+        ensure!(workers > 0,
+                "--workers must be a positive integer, got 0");
+        let n = workers.min(self.ne.max(1));
+        if n == self.n_threads {
+            return Ok(());
+        }
+        self.n_threads = n;
+        self.pool = WorkerPool::new(n)?;
+        let bp = self.block_elems * self.nq;
+        let jrows = self.block_elems * self.nt;
+        self.worker_ws = (0..n)
+            .map(|_| Mutex::new(Workspace::new(&self.net, bp, jrows)))
+            .collect();
+        Ok(())
     }
 
     /// Test hook: force a block size to exercise ragged block edges.
@@ -1089,8 +1165,9 @@ impl NativeBackend {
         self.m.len()
     }
 
-    /// Effective worker-thread count (available parallelism clamped to
-    /// the element count) — what a timing record should report.
+    /// Effective worker-thread count (the configured `--workers` /
+    /// env / machine parallelism, clamped to the element count) — what
+    /// a timing record should report.
     pub fn n_threads(&self) -> usize {
         self.n_threads
     }
@@ -1230,6 +1307,9 @@ impl NativeBackend {
             gamma: ck.hyper.gamma,
             seed: ck.hyper.seed,
             eps_init: ck.hyper.eps_init,
+            // the worker count is run-ephemeral, not trained state:
+            // resolve from env/machine here, [`set_workers`] after
+            workers: None,
         };
         let mut backend = NativeBackend::new(&cfg, src, &opts)?;
         backend.load_checkpoint(ck)?;
@@ -1245,45 +1325,92 @@ impl NativeBackend {
     }
 
     /// The tensorized step objective: fills `self.grad` and returns the
-    /// loss components. No allocation on this path.
+    /// loss components. One coordinator tick — the four phases run in
+    /// order on the persistent pool; no allocation on this path.
     fn compute_loss_grad(&mut self) -> Result<StepStats> {
         let n_net = self.net.n_params();
-        // ---- parallel variational part over contiguous element chunks
-        let mut slots = std::mem::take(&mut self.slots);
-        for slot in &mut slots {
-            slot.partial.reset();
-        }
-        {
-            let this: &NativeBackend = self;
-            let per = this.ne.div_ceil(this.n_threads);
-            std::thread::scope(|s| {
-                for (t, slot) in slots.iter_mut().enumerate() {
-                    let lo = t * per;
-                    let hi = ((t + 1) * per).min(this.ne);
-                    if lo >= hi {
-                        break;
-                    }
-                    s.spawn(move || this.element_chunk(lo, hi, slot));
-                }
-            });
+        let n_shards = self.plan.n_shards();
+
+        // ---- AssignShards: reset the per-shard accumulators. The
+        // plan itself is step-invariant (a function of ne/nq/
+        // block_elems fixed at construction), so assignment is zeroing
+        // the partials the workers are about to claim.
+        self.tick.begin(Phase::AssignShards)?;
+        for p in &mut self.shard_partials {
+            ride_mut(p).reset();
         }
 
-        // reduce in chunk order (deterministic for a fixed thread count)
+        // ---- Step: workers pull shards off a shared cursor. Results
+        // are keyed by *shard*, not by worker, so scheduling noise
+        // (which worker got which shard, in what order) cannot change
+        // a single bit downstream. Idle workers (n_shards < workers)
+        // see an exhausted cursor and park again immediately.
+        self.tick.begin(Phase::Step)?;
+        {
+            let this: &NativeBackend = self;
+            let cursor = AtomicUsize::new(0);
+            this.pool.run(&|wid| {
+                let mut ws = ride(&this.worker_ws[wid]);
+                loop {
+                    let s = cursor.fetch_add(1, Ordering::Relaxed);
+                    if s >= n_shards {
+                        break;
+                    }
+                    let sh = this.plan.shard(s);
+                    let mut part = ride(&this.shard_partials[s]);
+                    this.element_range(sh.lo, sh.hi, &mut ws,
+                                       &mut part);
+                }
+            })?;
+        }
+
+        // ---- Reduce: pairwise tree over the fixed shard order. The
+        // pairing depends only on the shard count and pairs within a
+        // level are disjoint, so any worker interleaving produces the
+        // same sums — per-step losses are bit-identical for any
+        // --workers value.
+        self.tick.begin(Phase::Reduce)?;
+        {
+            let this: &NativeBackend = self;
+            let mut stride = 1;
+            while stride < n_shards {
+                let np = shard::n_pairs(n_shards, stride);
+                let cursor = AtomicUsize::new(0);
+                this.pool.run(&|_wid| loop {
+                    let k = cursor.fetch_add(1, Ordering::Relaxed);
+                    if k >= np {
+                        break;
+                    }
+                    let (a, b) = shard::pair(stride, k);
+                    // a < b and no two pairs of a level share a shard:
+                    // the lock order is fixed and contention-free
+                    let mut pa = ride(&this.shard_partials[a]);
+                    let pb = ride(&this.shard_partials[b]);
+                    pa.merge(&pb);
+                })?;
+                stride *= 2;
+            }
+        }
+
+        // ---- Sync: fold the root shard into the flat gradient, then
+        // the penalty passes (single-threaded on worker 0's workspace
+        // — a worker-count-independent tail) and the step stats.
+        self.tick.begin(Phase::Sync)?;
         self.grad.fill(0.0);
         let mut var_sq = 0.0;
         let mut geps = 0.0;
-        for slot in &slots {
-            for (g, pg) in self.grad.iter_mut().zip(&slot.partial.grad) {
-                *g += pg;
-            }
-            var_sq += slot.partial.var_sq;
-            geps += slot.partial.geps;
+        if let Some(cell) = self.shard_partials.first_mut() {
+            let root = ride_mut(cell);
+            self.grad[..n_net].copy_from_slice(&root.grad);
+            var_sq = root.var_sq;
+            geps = root.geps;
         }
         let var_loss = var_sq / (self.ne * self.nt) as f64;
 
         // ---- Dirichlet penalty, blocked through the batched kernels
         let nb = self.bd_u.len();
-        let bd_sq = penalty_pass(&self.net, &mut slots[0].ws,
+        let ws0 = ride_mut(&mut self.worker_ws[0]);
+        let bd_sq = penalty_pass(&self.net, ws0,
                                  &mut self.grad[..n_net], &self.bd_flat,
                                  &self.bd_u, self.tau);
         let bd_loss = bd_sq / nb as f64;
@@ -1292,7 +1419,7 @@ impl NativeBackend {
         let mut sensor_loss = 0.0;
         let ns = self.sensor_u.len();
         if ns > 0 {
-            let s_sq = penalty_pass(&self.net, &mut slots[0].ws,
+            let s_sq = penalty_pass(&self.net, ws0,
                                     &mut self.grad[..n_net],
                                     &self.sensor_flat, &self.sensor_u,
                                     self.gamma);
@@ -1302,7 +1429,6 @@ impl NativeBackend {
         if self.trainable_eps() {
             self.grad[n_net] = geps;
         }
-        self.slots = slots;
 
         let loss = var_loss + self.tau * bd_loss + self.gamma * sensor_loss;
         let extra = if self.trainable_eps() {
@@ -1330,15 +1456,23 @@ impl NativeBackend {
         }
     }
 
-    /// The per-chunk worker (runs on scoped threads): batched forward
-    /// over element blocks, the generalized blocked residual
-    /// contraction, the backward seeds, then one batched reverse pass
-    /// per block.
-    fn element_chunk(&self, lo: usize, hi: usize, slot: &mut ThreadSlot) {
+    /// One shard's step body (runs on the persistent pool): batched
+    /// forward over the shard's element blocks, the generalized
+    /// blocked residual contraction, the backward seeds, then one
+    /// batched reverse pass per block. `lo` is block-grid aligned by
+    /// the shard plan, so the tiling — and therefore every
+    /// floating-point operation — is identical to a single-worker
+    /// sweep over the same elements.
+    fn element_range(
+        &self,
+        lo: usize,
+        hi: usize,
+        ws: &mut Workspace,
+        partial: &mut Partial,
+    ) {
         let nq = self.nq;
         let space = self.cfg.loss == NativeLoss::InverseSpace;
         let be = self.block_elems;
-        let ThreadSlot { ws, partial } = slot;
         for blk in (lo..hi).step_by(be) {
             let bhi = (blk + be).min(hi);
             let npts = (bhi - blk) * nq;
@@ -1514,26 +1648,23 @@ impl NativeBackend {
     /// and collect `r[e,j]` for every element — the regression surface
     /// the closed-form bit-for-bit property test compares against.
     #[cfg(test)]
-    fn residuals_for_test(&mut self) -> Vec<f64> {
-        let mut out = vec![0.0; self.ne * self.nt];
-        let mut slots = std::mem::take(&mut self.slots);
-        {
-            let slot = &mut slots[0];
-            slot.partial.reset();
-            let (nt, nq, be) = (self.nt, self.nq, self.block_elems);
-            let space = self.cfg.loss == NativeLoss::InverseSpace;
-            for blk in (0..self.ne).step_by(be) {
-                let bhi = (blk + be).min(self.ne);
-                let npts = (bhi - blk) * nq;
-                let pts = &self.quad_xy[2 * blk * nq..2 * bhi * nq];
-                self.net.forward_block(&mut slot.ws, pts, npts, space);
-                self.block_residual(&mut slot.ws, blk, bhi,
-                                    &mut slot.partial);
-                out[blk * nt..bhi * nt]
-                    .copy_from_slice(&slot.ws.resid[..(bhi - blk) * nt]);
-            }
+    fn residuals_for_test(&self) -> Vec<f64> {
+        let (nt, nq, be) = (self.nt, self.nq, self.block_elems);
+        let space = self.cfg.loss == NativeLoss::InverseSpace;
+        let mut out = vec![0.0; self.ne * nt];
+        // a scratch workspace keeps the borrow checker away from the
+        // shared per-worker cells; test-only, so the allocation is fine
+        let mut ws = Workspace::new(&self.net, be * nq, be * nt);
+        let mut partial = Partial::new(self.net.n_params());
+        for blk in (0..self.ne).step_by(be) {
+            let bhi = (blk + be).min(self.ne);
+            let npts = (bhi - blk) * nq;
+            let pts = &self.quad_xy[2 * blk * nq..2 * bhi * nq];
+            self.net.forward_block(&mut ws, pts, npts, space);
+            self.block_residual(&mut ws, blk, bhi, &mut partial);
+            out[blk * nt..bhi * nt]
+                .copy_from_slice(&ws.resid[..(bhi - blk) * nt]);
         }
-        self.slots = slots;
         out
     }
 }
@@ -2176,33 +2307,191 @@ mod tests {
     }
 
     #[test]
-    fn thread_slots_are_reused_across_steps() {
-        // the hot path must not reallocate: every per-thread workspace
-        // and partial-gradient buffer keeps its address across steps
+    fn workspaces_and_partials_are_reused_across_steps() {
+        // the hot path must not reallocate: every per-worker workspace
+        // and per-shard accumulator keeps its address across steps
         let p = TestProblem::constant(1.0, (1.0, 0.0), 0.0);
         let mut b = build_backend(1, &[2, 4, 1], NativeLoss::InverseSpace,
                                   8, 4, &p);
-        let ptrs: Vec<(*const f64, *const f64, *const f64)> = b
-            .slots
-            .iter()
-            .map(|s| (s.ws.u.as_ptr(), s.ws.epsv.as_ptr(),
-                      s.partial.grad.as_ptr()))
+        let ws_ptrs: Vec<(*const f64, *const f64)> = b
+            .worker_ws
+            .iter_mut()
+            .map(|m| {
+                let ws = ride_mut(m);
+                (ws.u.as_ptr(), ws.epsv.as_ptr())
+            })
             .collect();
-        let caps: Vec<usize> =
-            b.slots.iter().map(|s| s.ws.gez.capacity()).collect();
+        let part_ptrs: Vec<*const f64> = b
+            .shard_partials
+            .iter_mut()
+            .map(|m| ride_mut(m).grad.as_ptr())
+            .collect();
+        let caps: Vec<usize> = b
+            .worker_ws
+            .iter_mut()
+            .map(|m| ride_mut(m).gez.capacity())
+            .collect();
+        assert!(!part_ptrs.is_empty(), "plan produced no shards");
         for i in 1..=5 {
             b.step(i, 1e-3).unwrap();
         }
-        for (slot, (pu, pe, pg)) in b.slots.iter().zip(&ptrs) {
-            assert_eq!(slot.ws.u.as_ptr(), *pu, "workspace reallocated");
-            assert_eq!(slot.ws.epsv.as_ptr(), *pe,
+        for (m, (pu, pe)) in b.worker_ws.iter_mut().zip(&ws_ptrs) {
+            let ws = ride_mut(m);
+            assert_eq!(ws.u.as_ptr(), *pu, "workspace reallocated");
+            assert_eq!(ws.epsv.as_ptr(), *pe,
                        "eps buffers reallocated");
-            assert_eq!(slot.partial.grad.as_ptr(), *pg,
-                       "partial grad reallocated");
         }
-        for (slot, c) in b.slots.iter().zip(&caps) {
-            assert_eq!(slot.ws.gez.capacity(), *c);
+        for (m, pg) in b.shard_partials.iter_mut().zip(&part_ptrs) {
+            assert_eq!(ride_mut(m).grad.as_ptr(), *pg,
+                       "shard partial reallocated");
         }
+        for (m, c) in b.worker_ws.iter_mut().zip(&caps) {
+            assert_eq!(ride_mut(m).gez.capacity(), *c);
+        }
+    }
+
+    #[test]
+    fn losses_and_grads_bitwise_invariant_across_worker_counts() {
+        // the tentpole guarantee: the step-invariant shard plan + the
+        // fixed-order tree reduce make every per-step loss and the
+        // final gradient bit-identical for ANY worker count, including
+        // more workers than shards and single-element blocks
+        use crate::util::proptest::check_result;
+        let avail = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        check_result(
+            29,
+            6,
+            |r| {
+                (
+                    1 + (r.uniform() * 3.0) as usize, // mesh n in 1..=3
+                    r.uniform_in(0.0, 0.2),           // jitter amplitude
+                    1 + (r.uniform() * 1000.0) as u64, // net seed
+                    r.uniform() < 0.5, // force block_elems = 1
+                )
+            },
+            |&(n, amp, seed, tiny_blocks)| {
+                let mesh = generators::skewed_square(n, amp);
+                let dom = assembly::assemble(&mesh, 2, 3,
+                                             QuadKind::GaussLegendre);
+                let p = TestProblem::constant(0.9, (0.4, -0.3), -1.1);
+                let src = DataSource {
+                    mesh: &mesh,
+                    domain: Some(&dom),
+                    problem: &p,
+                    sensor_values: None,
+                };
+                let cfg = NativeConfig {
+                    layers: vec![2, 4, 1],
+                    loss: NativeLoss::Forward,
+                    nb: 8,
+                    ns: 0,
+                };
+                let run = |workers: usize| {
+                    let opts = BackendOpts {
+                        seed,
+                        workers: Some(workers),
+                        ..BackendOpts::default()
+                    };
+                    let mut b = NativeBackend::new(&cfg, &src, &opts)
+                        .map_err(|e| e.to_string())?;
+                    if tiny_blocks {
+                        b.set_block_elems(1);
+                    }
+                    let mut losses = Vec::new();
+                    for i in 1..=3 {
+                        let s = b
+                            .step(i, 1e-3)
+                            .map_err(|e| e.to_string())?;
+                        losses.push(s.loss.to_bits());
+                    }
+                    let (_, g) = b
+                        .loss_and_grad()
+                        .map_err(|e| e.to_string())?;
+                    let gbits: Vec<u64> =
+                        g.iter().map(|v| v.to_bits()).collect();
+                    Ok::<_, String>((losses, gbits))
+                };
+                let base = run(1)?;
+                for w in [2usize, 3, avail] {
+                    if run(w)? != base {
+                        return Err(format!(
+                            "workers={w} diverged from workers=1 \
+                             (n={n}, tiny_blocks={tiny_blocks})"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn more_workers_than_shards_is_harmless() {
+        // ne = 1 clamps the pool to one worker; ne = 4 fits one
+        // default-sized block, so the lone shard is claimed by one of
+        // several workers while the rest park — both must step cleanly
+        // and identically to a lone worker
+        let p = TestProblem::constant(1.0, (0.2, -0.1), 0.0);
+        let run = |mesh_n: usize, workers: usize| {
+            let mesh = generators::unit_square(mesh_n);
+            let dom = assembly::assemble(&mesh, 2, 3,
+                                         QuadKind::GaussLegendre);
+            let src = DataSource {
+                mesh: &mesh,
+                domain: Some(&dom),
+                problem: &p,
+                sensor_values: None,
+            };
+            let cfg = NativeConfig {
+                layers: vec![2, 4, 1],
+                loss: NativeLoss::Forward,
+                nb: 8,
+                ns: 0,
+            };
+            let opts = BackendOpts {
+                workers: Some(workers),
+                ..BackendOpts::default()
+            };
+            let mut b = NativeBackend::new(&cfg, &src, &opts).unwrap();
+            let mut out = 0u64;
+            for i in 1..=4 {
+                out = b.step(i, 1e-3).unwrap().loss.to_bits();
+            }
+            out
+        };
+        assert_eq!(run(1, 1), run(1, 8));
+        assert_eq!(run(2, 1), run(2, 8));
+    }
+
+    #[test]
+    fn workers_zero_is_rejected_with_a_clear_error() {
+        let p = TestProblem::constant(1.0, (0.0, 0.0), 0.0);
+        let mesh = generators::unit_square(1);
+        let dom =
+            assembly::assemble(&mesh, 2, 3, QuadKind::GaussLegendre);
+        let src = DataSource {
+            mesh: &mesh,
+            domain: Some(&dom),
+            problem: &p,
+            sensor_values: None,
+        };
+        let cfg = NativeConfig {
+            layers: vec![2, 4, 1],
+            loss: NativeLoss::Forward,
+            nb: 8,
+            ns: 0,
+        };
+        let opts =
+            BackendOpts { workers: Some(0), ..BackendOpts::default() };
+        let err = NativeBackend::new(&cfg, &src, &opts).unwrap_err();
+        assert!(err.to_string().contains("positive"), "{err}");
+        let mut b = NativeBackend::new(&cfg, &src,
+                                       &BackendOpts::default())
+            .unwrap();
+        let err = b.set_workers(0).unwrap_err();
+        assert!(err.to_string().contains("positive"), "{err}");
     }
 
     #[test]
@@ -2370,7 +2659,7 @@ mod tests {
                     ns: 0,
                 };
                 let opts = BackendOpts { seed, ..BackendOpts::default() };
-                let mut b = NativeBackend::new(&cfg, &src, &opts).unwrap();
+                let b = NativeBackend::new(&cfg, &src, &opts).unwrap();
                 let got = b.residuals_for_test();
 
                 let (nt, nq, be) = (b.nt, b.nq, b.block_elems);

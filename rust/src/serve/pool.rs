@@ -69,6 +69,7 @@ pub struct ModelPool {
     workers: Vec<JoinHandle<()>>,
     policy: BatchPolicy,
     two_head: bool,
+    stats: Arc<ServeStats>,
 }
 
 impl ModelPool {
@@ -102,6 +103,7 @@ impl ModelPool {
             workers,
             policy,
             two_head: session.two_head(),
+            stats,
         })
     }
 
@@ -126,8 +128,17 @@ impl ModelPool {
             .as_ref()
             .ok_or_else(|| anyhow!("model pool is shut down"))?;
         let (reply_tx, reply_rx) = sync_channel::<EvalOutput>(1);
-        tx.send(EvalJob { points, precision, reply: reply_tx })
-            .map_err(|_| anyhow!("model pool workers are gone"))?;
+        // count the job as queued before the (blocking, backpressured)
+        // send so the gauge covers the time spent waiting for a slot;
+        // a failed send rolls the increment back
+        self.stats.record_enqueue();
+        if tx
+            .send(EvalJob { points, precision, reply: reply_tx })
+            .is_err()
+        {
+            self.stats.record_dequeue(1);
+            return Err(anyhow!("model pool workers are gone"));
+        }
         reply_rx
             .recv()
             .map_err(|_| anyhow!("model pool dropped the request"))
@@ -184,6 +195,7 @@ fn worker_loop(
     stats: &ServeStats,
 ) {
     while let Some(batch) = next_batch(rx, policy) {
+        stats.record_dequeue(batch.len());
         stats.record_batch(batch.len());
         eval_batch(sess, &batch);
     }
@@ -322,6 +334,14 @@ mod tests {
         // the pool recorded its coalesced batches
         let fill = stats.batch_fill(8);
         assert!(fill > 0.0 && fill <= 1.0, "fill {fill}");
+        // every submit passed through the queue gauge: the high-water
+        // mark saw at least one job, and everything drained back out
+        let hwm = stats.queue_hwm();
+        assert!((1..=8).contains(&hwm), "queue hwm {hwm}");
+        let j = stats.snapshot(8);
+        let batch = j.req("batch").unwrap();
+        assert_eq!(
+            batch.req("queued").unwrap().as_usize().unwrap(), 0);
     }
 
     #[test]

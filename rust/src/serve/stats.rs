@@ -29,6 +29,12 @@ pub struct ServeStats {
     points: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
+    /// Jobs sitting in model-pool queues right now (submitted but not
+    /// yet claimed by a worker), across every live pool.
+    queued: AtomicU64,
+    /// High-water mark of `queued` over the server's lifetime — how
+    /// deep the backpressure queues actually got under load.
+    queue_hwm: AtomicU64,
     latencies_ms: Mutex<LatencyRing>,
     model_hits: Mutex<Vec<(String, u64)>>,
 }
@@ -54,6 +60,8 @@ impl ServeStats {
             points: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
+            queued: AtomicU64::new(0),
+            queue_hwm: AtomicU64::new(0),
             latencies_ms: Mutex::new(LatencyRing {
                 samples: Vec::with_capacity(LATENCY_RING),
                 next: 0,
@@ -92,6 +100,25 @@ impl ServeStats {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests
             .fetch_add(n_requests as u64, Ordering::Relaxed);
+    }
+
+    /// Record one job entering a model-pool queue, pushing the
+    /// high-water mark up when this is the deepest the queues have
+    /// been.
+    pub fn record_enqueue(&self) {
+        let depth = self.queued.fetch_add(1, Ordering::Relaxed) + 1;
+        self.queue_hwm.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// Record `n` jobs leaving the queues (claimed into a micro-batch,
+    /// or a failed submit rolling its increment back).
+    pub fn record_dequeue(&self, n: usize) {
+        self.queued.fetch_sub(n as u64, Ordering::Relaxed);
+    }
+
+    /// Deepest the pool queues have been since the server started.
+    pub fn queue_hwm(&self) -> u64 {
+        self.queue_hwm.load(Ordering::Relaxed)
     }
 
     /// Answered request count so far.
@@ -161,6 +188,16 @@ impl ServeStats {
                     ),
                     ("max_batch", Json::num(max_batch as f64)),
                     ("fill", finite_num(self.batch_fill(max_batch))),
+                    (
+                        "queued",
+                        Json::num(
+                            self.queued.load(Ordering::Relaxed) as f64,
+                        ),
+                    ),
+                    (
+                        "queue_hwm",
+                        Json::num(self.queue_hwm() as f64),
+                    ),
                 ]),
             ),
             ("models", Json::Obj(hits)),
@@ -211,6 +248,25 @@ mod tests {
         // the NaN sample recorded
         let text = j.to_string();
         assert!(Json::parse(&text).is_ok(), "{text}");
+    }
+
+    #[test]
+    fn queue_high_water_mark_tracks_the_peak_not_the_present() {
+        let s = ServeStats::new();
+        assert_eq!(s.queue_hwm(), 0);
+        s.record_enqueue();
+        s.record_enqueue();
+        s.record_enqueue();
+        s.record_dequeue(2); // a worker drained a 2-job batch
+        s.record_enqueue();
+        // depth went 1,2,3 -> 1 -> 2: the mark stays at the peak
+        assert_eq!(s.queue_hwm(), 3);
+        let j = s.snapshot(8);
+        let batch = j.req("batch").unwrap();
+        assert_eq!(
+            batch.req("queued").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(
+            batch.req("queue_hwm").unwrap().as_usize().unwrap(), 3);
     }
 
     #[test]

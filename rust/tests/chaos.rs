@@ -23,6 +23,10 @@
 //!   run resumed from the same ring artifact.
 //! - `step.stall` + `--watchdog-ms`: a stalled step is flagged
 //!   (warn-only) and counted in the report.
+//! - divergence rollback with the persistent worker pool: the replay
+//!   after a NaN-contaminated step on a reused pool is bit-identical
+//!   to a fresh backend restored from the same snapshot (no stale
+//!   per-worker state survives a recovery).
 
 use std::path::{Path, PathBuf};
 use std::process::{Command, Output};
@@ -35,8 +39,9 @@ fn tmp_dir(tag: &str) -> PathBuf {
     dir
 }
 
-/// Run the repro binary with pinned threading (deterministic f64
-/// reduction order — the bit-identity scenario depends on it).
+/// Run the repro binary with pinned threading. The f64 reduction
+/// order is worker-count-independent (fixed-order shard tree reduce),
+/// so the pin is purely about not oversubscribing shared CI runners.
 fn repro(args: &[&str], envs: &[(&str, &str)]) -> Output {
     let mut cmd = Command::new(env!("CARGO_BIN_EXE_repro"));
     cmd.args(args).env("FASTVPINNS_THREADS", "2");
@@ -270,6 +275,92 @@ fn avx2_fault_degrades_bit_identical_to_scalar_continuation() {
          scalar continuation\nrun A:\n{so_a}\nrun B:\n{so_b}"
     );
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// (e) Divergence rollback with the *persistent* worker pool: after a
+/// backend diverges mid-step and rolls back to a snapshot, the pool
+/// (same threads, same per-worker workspaces, same shard partials) is
+/// reused for the replay. The replayed trajectory must be bit-identical
+/// to a fresh backend — fresh pool, fresh workspaces, never saw the
+/// NaN step — restored from the same snapshot: no stale per-worker
+/// state may leak across a recovery. Runs in-process (the rollback
+/// primitive is `restore_checkpoint`, no disk involved).
+#[test]
+#[ignore = "release-mode chaos tier (CI chaos job)"]
+fn rollback_with_persistent_pool_matches_a_fresh_spawn() {
+    use fastvpinns::coordinator::trainer::DataSource;
+    use fastvpinns::fem::assembly;
+    use fastvpinns::fem::quadrature::QuadKind;
+    use fastvpinns::mesh::generators;
+    use fastvpinns::problems::PoissonSin;
+    use fastvpinns::runtime::backend::native::{
+        NativeBackend, NativeConfig, NativeLoss,
+    };
+    use fastvpinns::runtime::backend::{Backend, BackendOpts};
+
+    let mesh = generators::unit_square(8);
+    let dom =
+        assembly::assemble(&mesh, 5, 5, QuadKind::GaussLegendre);
+    let problem = PoissonSin::new(2.0 * std::f64::consts::PI);
+    let src = DataSource {
+        mesh: &mesh,
+        domain: Some(&dom),
+        problem: &problem,
+        sensor_values: None,
+    };
+    let ncfg = NativeConfig {
+        layers: vec![2, 16, 16, 1],
+        loss: NativeLoss::Forward,
+        nb: 64,
+        ns: 0,
+    };
+    let opts = BackendOpts {
+        workers: Some(3),
+        ..BackendOpts::default()
+    };
+
+    // backend X: train, snapshot, diverge, roll back, replay — all on
+    // one pool whose threads survive the whole episode
+    let mut x = NativeBackend::new(&ncfg, &src, &opts).unwrap();
+    for i in 1..=30usize {
+        x.step(i, 1e-3).unwrap();
+    }
+    let snap = x.export_checkpoint().unwrap();
+    // poison the parameters and run one contaminating step: every
+    // worker workspace and shard partial fills with NaN garbage
+    let n = x.n_opt_params();
+    x.set_params_flat(&vec![f64::NAN; n]).unwrap();
+    let poisoned = x.step(31, 1e-3).unwrap();
+    assert!(
+        !poisoned.loss.is_finite(),
+        "the poison step unexpectedly produced a finite loss"
+    );
+    x.restore_checkpoint(&snap).unwrap();
+
+    // backend Y: a fresh spawn — new pool, pristine workspaces —
+    // restored from the same snapshot
+    let mut y = NativeBackend::new(&ncfg, &src, &opts).unwrap();
+    y.restore_checkpoint(&snap).unwrap();
+
+    // the replayed trajectories must agree bit for bit, step by step
+    for i in 31..=45usize {
+        let lx = x.step(i, 1e-3).unwrap().loss;
+        let ly = y.step(i, 1e-3).unwrap().loss;
+        assert_eq!(
+            lx.to_bits(),
+            ly.to_bits(),
+            "step {i}: reused-pool loss {lx} != fresh-spawn loss {ly}"
+        );
+    }
+    let px = x.params_flat();
+    let py = y.params_flat();
+    for (i, (a, b)) in px.iter().zip(&py).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "param {i} diverged after the replay: {a} vs {b}"
+        );
+    }
 }
 
 /// (d) A stalled step trips the watchdog: warn-only (the run

@@ -151,6 +151,11 @@ fn serve_e2e_lifecycle() {
         batch.req("max_batch").unwrap().as_usize().unwrap(),
         4
     );
+    // the traffic above went through the pool queues: the high-water
+    // mark saw at least one job, and the backlog fully drained
+    let hwm = batch.req("queue_hwm").unwrap().as_usize().unwrap();
+    assert!(hwm >= 1, "queue_hwm {hwm}");
+    assert_eq!(batch.req("queued").unwrap().as_usize().unwrap(), 0);
     let hits = stats.req("models").unwrap();
     assert!(hits.req("fwd").unwrap().as_usize().unwrap() > 0);
     assert!(hits.req("twohead").unwrap().as_usize().unwrap() > 0);
