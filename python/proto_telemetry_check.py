@@ -1,0 +1,226 @@
+"""Reference second implementation of the version-1 telemetry JSONL
+schema (rust/src/telemetry/mod.rs), used as a strict producer-
+conformance validator: CI runs it against the stream a real
+`train --metrics-out` run wrote. Unlike `repro report` (a tolerant
+reader that must ignore unknown tags), this checker rejects anything
+the documented producer does not emit — any divergence between this
+file and the Rust writer means the *documentation* drifted, which is
+exactly what it exists to catch (no Rust toolchain in this container).
+
+Run: python proto_telemetry_check.py STREAM.jsonl [MORE.jsonl ...]
+     python proto_telemetry_check.py            (built-in self-test)
+"""
+
+import json
+import math
+import sys
+
+SCHEMA_VERSION = 1
+
+# tag -> {field: type-spec}; every line also carries "v", "ev" and
+# (except flush) "t_ms". Type specs: "int", "num" (finite float),
+# "num?" (finite float or null), "str", "bool".
+TAGS = {
+    "step": {
+        "step": "int", "wall_ms": "num",
+        "assign_ms": "num?", "step_ms": "num?",
+        "reduce_ms": "num?", "sync_ms": "num?",
+        "loss": "num?", "grad_norm": "num?", "lr": "num",
+    },
+    "recovery": {
+        "at_step": "int", "rollback_to": "int",
+        "reason": "str", "lr_scale": "num",
+    },
+    "checkpoint": {
+        "step": "int", "path": "str", "bytes": "int", "write_ms": "num",
+    },
+    "kernel": {"kernel": "str", "degraded": "bool", "reason": "str"},
+    "queue": {"queued": "int", "hwm": "int"},
+    "batch": {"len": "int", "max": "int"},
+    "flush": {"dropped": "int"},
+}
+PHASES = ("assign_ms", "step_ms", "reduce_ms", "sync_ms")
+
+
+def _is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool) \
+        and math.isfinite(v)
+
+
+def _check_type(field, v, spec):
+    if spec == "num?" and v is None:
+        return
+    if spec in ("num", "num?"):
+        assert _is_num(v), f"{field}: finite number expected, got {v!r}"
+    elif spec == "int":
+        assert _is_num(v) and float(v).is_integer() and v >= 0, \
+            f"{field}: non-negative integer expected, got {v!r}"
+    elif spec == "str":
+        assert isinstance(v, str) and v, \
+            f"{field}: non-empty string expected, got {v!r}"
+    elif spec == "bool":
+        assert isinstance(v, bool), f"{field}: bool expected, got {v!r}"
+
+
+def check_stream(lines):
+    """Validate one stream (iterable of raw lines). Returns a
+    tag -> count dict; raises AssertionError with a line-numbered
+    message on the first violation."""
+    counts = {}
+    last_t = -1.0
+    next_step = None  # expected id of the next step event
+    saw_flush_at = None
+    n = 0
+    for n, raw in enumerate(lines, start=1):
+        raw = raw.strip()
+        if not raw:
+            continue
+        try:
+            ev = json.loads(raw)
+        except ValueError as e:
+            raise AssertionError(f"line {n}: unparseable JSON ({e})")
+        try:
+            assert isinstance(ev, dict), "line is not an object"
+            assert ev.get("v") == SCHEMA_VERSION, \
+                f"unknown schema version {ev.get('v')!r}"
+            tag = ev.get("ev")
+            assert tag in TAGS, f"unknown event tag {tag!r}"
+            assert saw_flush_at is None, \
+                f"event after the flush line (line {saw_flush_at})"
+            fields = TAGS[tag]
+            want = {"v", "ev"} | set(fields)
+            if tag != "flush":
+                want.add("t_ms")
+                t = ev.get("t_ms")
+                assert _is_num(t) and t >= 0.0, f"bad t_ms {t!r}"
+                assert t >= last_t, \
+                    f"t_ms went backwards ({t} < {last_t})"
+                last_t = t
+            assert set(ev) == want, \
+                f"field set mismatch: got {sorted(ev)}, " \
+                f"want {sorted(want)}"
+            for field, spec in fields.items():
+                _check_type(field, ev[field], spec)
+            if tag == "step":
+                nulls = [ev[p] is None for p in PHASES]
+                assert all(nulls) or not any(nulls), \
+                    "phase fields must be all-null or all-present"
+                if not any(nulls):
+                    s = sum(ev[p] for p in PHASES)
+                    w = ev["wall_ms"]
+                    assert s <= w * (1.0 + 1e-9) + 1e-6, \
+                        f"phase sum {s} ms exceeds step wall {w} ms"
+                if next_step is not None:
+                    assert ev["step"] == next_step, \
+                        f"step id {ev['step']} is not contiguous " \
+                        f"(expected {next_step})"
+                next_step = ev["step"] + 1
+            elif tag == "recovery":
+                assert ev["rollback_to"] < ev["at_step"], \
+                    "rollback_to must precede at_step"
+                # training resumes from the rollback point
+                next_step = ev["rollback_to"] + 1
+            elif tag == "batch":
+                assert 1 <= ev["len"] <= ev["max"], \
+                    f"batch len {ev['len']} outside [1, {ev['max']}]"
+            elif tag == "flush":
+                saw_flush_at = n
+            counts[tag] = counts.get(tag, 0) + 1
+        except AssertionError as e:
+            raise AssertionError(f"line {n}: {e}")
+    assert n > 0 and counts, "empty stream"
+    if saw_flush_at is None:
+        print("  warning: no flush line — the producer did not shut "
+              "down cleanly (killed run?)", file=sys.stderr)
+    return counts
+
+
+def _self_test():
+    good = [
+        '{"v":1,"ev":"kernel","t_ms":0.01,"kernel":"avx2",'
+        '"degraded":false,"reason":"arm"}',
+        '{"v":1,"ev":"step","t_ms":1.5,"step":1,"wall_ms":2.0,'
+        '"assign_ms":0.1,"step_ms":1.2,"reduce_ms":0.3,"sync_ms":0.2,'
+        '"loss":0.5,"grad_norm":1.25,"lr":0.01}',
+        '{"v":1,"ev":"step","t_ms":3.0,"step":2,"wall_ms":2.0,'
+        '"assign_ms":null,"step_ms":null,"reduce_ms":null,'
+        '"sync_ms":null,"loss":null,"grad_norm":null,"lr":0.01}',
+        '{"v":1,"ev":"recovery","t_ms":3.5,"at_step":2,'
+        '"rollback_to":1,"reason":"nan_grad","lr_scale":0.5}',
+        '{"v":1,"ev":"step","t_ms":4.0,"step":2,"wall_ms":1.0,'
+        '"assign_ms":0.1,"step_ms":0.5,"reduce_ms":0.2,"sync_ms":0.1,'
+        '"loss":0.4,"grad_norm":1.0,"lr":0.005}',
+        '{"v":1,"ev":"checkpoint","t_ms":5.0,"step":2,'
+        '"path":"ring/a.ckpt","bytes":4096,"write_ms":0.8}',
+        '{"v":1,"ev":"queue","t_ms":6.0,"queued":3,"hwm":7}',
+        '{"v":1,"ev":"batch","t_ms":6.1,"len":3,"max":8}',
+        '{"v":1,"ev":"flush","dropped":0}',
+    ]
+    counts = check_stream(good)
+    assert counts == {"kernel": 1, "step": 3, "recovery": 1,
+                      "checkpoint": 1, "queue": 1, "batch": 1,
+                      "flush": 1}, counts
+
+    bad_cases = [
+        # wrong schema version
+        ['{"v":2,"ev":"flush","dropped":0}'],
+        # unknown tag
+        ['{"v":1,"ev":"mystery","t_ms":1.0}'],
+        # missing required field (no lr)
+        ['{"v":1,"ev":"step","t_ms":1.0,"step":1,"wall_ms":1.0,'
+         '"assign_ms":null,"step_ms":null,"reduce_ms":null,'
+         '"sync_ms":null,"loss":0.5,"grad_norm":1.0}'],
+        # unexpected extra field
+        ['{"v":1,"ev":"flush","dropped":0,"extra":1}'],
+        # NaN-as-string instead of null
+        ['{"v":1,"ev":"step","t_ms":1.0,"step":1,"wall_ms":1.0,'
+         '"assign_ms":null,"step_ms":null,"reduce_ms":null,'
+         '"sync_ms":null,"loss":"NaN","grad_norm":null,"lr":0.01}'],
+        # mixed null / non-null phase fields
+        ['{"v":1,"ev":"step","t_ms":1.0,"step":1,"wall_ms":1.0,'
+         '"assign_ms":0.1,"step_ms":null,"reduce_ms":null,'
+         '"sync_ms":null,"loss":0.5,"grad_norm":1.0,"lr":0.01}'],
+        # phase sum exceeds the step wall
+        ['{"v":1,"ev":"step","t_ms":1.0,"step":1,"wall_ms":1.0,'
+         '"assign_ms":0.5,"step_ms":0.5,"reduce_ms":0.5,'
+         '"sync_ms":0.5,"loss":0.5,"grad_norm":1.0,"lr":0.01}'],
+        # non-contiguous step ids without a recovery in between
+        [good[1], good[1].replace('"step":1', '"step":3')
+                         .replace('"t_ms":1.5', '"t_ms":2.5')],
+        # t_ms goes backwards
+        [good[1], good[2].replace('"t_ms":3.0', '"t_ms":1.0')],
+        # an event after the flush line
+        ['{"v":1,"ev":"flush","dropped":0}', good[0]],
+        # torn (truncated) line
+        [good[1][: len(good[1]) // 2]],
+    ]
+    for i, case in enumerate(bad_cases):
+        try:
+            check_stream(case)
+        except AssertionError:
+            pass
+        else:
+            raise SystemExit(f"self-test: bad case {i} not caught")
+    print("proto_telemetry_check OK: self-test passed "
+          f"({len(good)}-line stream accepted, "
+          f"{len(bad_cases)} malformed streams rejected)")
+
+
+def main(argv):
+    if not argv:
+        _self_test()
+        return
+    for path in argv:
+        try:
+            with open(path) as fh:
+                counts = check_stream(fh)
+        except AssertionError as e:
+            raise SystemExit(f"proto_telemetry_check FAIL: {path}: {e}")
+        total = sum(counts.values())
+        detail = ", ".join(f"{k} x{v}" for k, v in sorted(counts.items()))
+        print(f"proto_telemetry_check OK: {path}: {total} events "
+              f"({detail})")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -420,6 +420,12 @@ impl<'a> Trainer<'a> {
             ms => Some(Watchdog::spawn(ms)),
         };
         while self.step < target {
+            // telemetry wall clock: a separate Instant captured only
+            // when armed (StepTimer keeps its samples private), so the
+            // disarmed loop pays one relaxed load per step and nothing
+            // else
+            let t_ev = crate::telemetry::armed()
+                .then(std::time::Instant::now);
             timer.start();
             if let Some(w) = &watchdog {
                 w.begin(self.step as u64 + 1);
@@ -429,6 +435,22 @@ impl<'a> Trainer<'a> {
                 w.end();
             }
             timer.stop();
+            if let Some(t0) = t_ev {
+                // emitted before the divergence sentinel so a poisoned
+                // step appears in the stream (loss: null) immediately
+                // ahead of its recovery event
+                crate::telemetry::emit(
+                    crate::telemetry::Event::StepStats {
+                        step: self.step as u64,
+                        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+                        phases_ms: crate::telemetry::take_phase_ms(),
+                        loss: last.loss,
+                        grad_norm: last.grad_norm,
+                        lr: self.cfg.lr.at(self.step - 1)
+                            * self.lr_scale,
+                    },
+                );
+            }
 
             // ---- divergence sentinel
             let limit = self.recovery.grad_norm_limit;
@@ -475,6 +497,14 @@ impl<'a> Trainer<'a> {
                     self.step,
                     snap.step,
                     self.lr_scale
+                );
+                crate::telemetry::emit(
+                    crate::telemetry::Event::Recovery {
+                        at_step: self.step as u64,
+                        rollback_to: snap.step as u64,
+                        reason: reason.clone(),
+                        lr_scale: self.lr_scale,
+                    },
                 );
                 recoveries.push(RecoveryEvent {
                     at_step: self.step,

@@ -341,6 +341,75 @@ pub fn native_forward_step_case(
                          problem.as_ref(), loss, pde, None)
 }
 
+/// [`native_step_case`] with the trainer's telemetry emission replayed
+/// on every timed step: when the recorder is armed each sample covers
+/// the backend's per-phase clock plus one
+/// [`StepStats`](crate::telemetry::Event::StepStats) emit — exactly
+/// the per-step work `--metrics-out` adds to a training run. Disarmed,
+/// the extra work collapses to one relaxed atomic load per step. The
+/// bench harness times both and gates their ratio (the zero-overhead
+/// guard).
+pub fn native_step_case_telemetry(
+    k: usize,
+    nt1d: usize,
+    nq1d: usize,
+    iters: usize,
+    warmup: usize,
+    pde: &'static str,
+) -> Result<StepBenchCase> {
+    let ne = k * k;
+    let mesh = generators::unit_square(k.max(1));
+    let dom = assembly::assemble(&mesh, nt1d, nq1d,
+                                 QuadKind::GaussLegendre);
+    let problem =
+        crate::problems::PoissonSin::new(2.0 * std::f64::consts::PI);
+    let src = DataSource {
+        mesh: &mesh,
+        domain: Some(&dom),
+        problem: &problem,
+        sensor_values: None,
+    };
+    let cfg = NativeConfig::forward_std();
+    let mut b = NativeBackend::new(&cfg, &src, &BackendOpts::default())?;
+    let dof = b.n_opt_params();
+    let workers = b.n_threads();
+    for i in 0..warmup {
+        b.step(i + 1, 1e-3)?;
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let step = warmup + i + 1;
+        let t0 = std::time::Instant::now();
+        // mirror of the trainer's hot path: armedness checked once,
+        // the emit (and the phase-slot take) happen inside the timed
+        // window so the sample prices the full recording cost
+        let t_ev =
+            crate::telemetry::armed().then(std::time::Instant::now);
+        let stats = b.step(step, 1e-3)?;
+        if let Some(te) = t_ev {
+            crate::telemetry::emit(crate::telemetry::Event::StepStats {
+                step: step as u64,
+                wall_ms: te.elapsed().as_secs_f64() * 1e3,
+                phases_ms: crate::telemetry::take_phase_ms(),
+                loss: stats.loss,
+                grad_norm: stats.grad_norm,
+                lr: 1e-3,
+            });
+        }
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(StepBenchCase {
+        loss: "telemetry",
+        pde,
+        ne,
+        n_quad: ne * dom.nq,
+        dof,
+        workers,
+        kernel: crate::linalg::simd::kernel_name(),
+        summary: crate::util::stats::Summary::from(&samples),
+    })
+}
+
 /// Time the native two-head InverseSpace train step on a `k x k` grid
 /// (manufactured eps-field problem, `ns` = 100 sensors): the tracked
 /// `inverse_space` case of `repro bench` — the eps head's extra cost on

@@ -130,6 +130,7 @@ pub mod mesh;
 pub mod problems;
 pub mod runtime;
 pub mod serve;
+pub mod telemetry;
 pub mod util;
 
 /// Convenience re-exports for examples and downstream users.

@@ -129,6 +129,13 @@ pub fn degrade_to_scalar(reason: &str) {
             "kernel degradation: dispatch falling back to scalar \
              kernels ({reason})"
         );
+        crate::telemetry::emit(
+            crate::telemetry::Event::KernelDispatch {
+                kernel: kernel_name(),
+                degraded: true,
+                reason: reason.to_string(),
+            },
+        );
     }
 }
 

@@ -62,7 +62,12 @@ fn main() {
         eprintln!("argument error: {e:#}");
         std::process::exit(2);
     }
-    if let Err(e) = dispatch(&args) {
+    let res = dispatch(&args);
+    // flush + fsync the telemetry stream on every exit path (clean
+    // finish, error, serve drain) — a no-op unless --metrics-out armed
+    // it
+    fastvpinns::telemetry::shutdown();
+    if let Err(e) = res {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
@@ -87,6 +92,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         "fem-solve" => cmd_fem_solve(args),
+        "report" => cmd_report(args),
         "mesh" => cmd_mesh(args),
         "dump-tensors" => cmd_dump_tensors(args),
         "" | "help" | "--help" => {
@@ -117,6 +123,7 @@ repro — FastVPINNs coordinator
               [--lr-backoff F] [--lr-restore-after N]
               [--grad-limit F] [--watchdog-ms N]
               [--failpoints SPEC]   (chaos testing; also REPRO_FAILPOINTS)
+              [--metrics-out F.jsonl]   (structured telemetry stream)
               (xla backend: --artifact NAME [--artifacts DIR])
   repro infer --ckpt F.ckpt [--points F.csv | --grid N | --quad]
               [--out pred.csv|pred.vtk] [--batch N]
@@ -124,6 +131,7 @@ repro — FastVPINNs coordinator
   repro serve --registry DIR [--addr HOST:PORT] [--cache N]
               [--workers N] [--max-batch N] [--max-wait-ms N]
               [--queue-depth N] [--drain-timeout-s N]
+              [--metrics-out F.jsonl]
   repro serve-probe --addr HOST:PORT
               [--op ping|stats|models|eval|shutdown]
               [--model NAME] [--grid N] [--points F.csv]
@@ -134,6 +142,7 @@ repro — FastVPINNs coordinator
   repro artifacts [--artifacts DIR]              (requires --features xla)
   repro experiment <{experiments}|all>
               [--backend native|xla] [--iters N] [--paper-scale]
+  repro report F.jsonl [MORE.jsonl ...]   summarize a telemetry stream
   repro fem-solve --mesh <square|disk|gear> [--n N] [--omega-pi K]
   repro mesh --kind <square|skewed|disk|gear|annulus> [--n N] [--out F.msh]
   repro dump-tensors [--out DIR]
@@ -214,7 +223,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
         native_forward_step_case, native_infer_case,
         native_inverse_space_step_case, native_probe_loss,
         native_probe_loss_workers, native_step_case,
-        native_step_case_workers, StepBenchCase, STD_LAYERS,
+        native_step_case_telemetry, native_step_case_workers,
+        StepBenchCase, STD_LAYERS,
     };
     use fastvpinns::linalg::simd;
     use fastvpinns::runtime::infer::Precision;
@@ -460,6 +470,61 @@ fn cmd_bench(args: &Args) -> Result<()> {
             simd::kernel_name()
         );
     }
+    // telemetry overhead guard: the sweep's largest grid re-timed with
+    // the recorder disarmed and armed (writing to a throwaway stream).
+    // The armed run pays the per-phase clock + one StepStats emit per
+    // step; the zero-overhead contract caps that at 2% of the median
+    // step. Same min-of-medians one-retry policy as the hoisting and
+    // simd guards.
+    {
+        let metrics_tmp = std::env::temp_dir().join(format!(
+            "fastvpinns_bench_metrics_{}.jsonl",
+            std::process::id()
+        ));
+        let run_pair = |tmp: &std::path::Path|
+            -> Result<(StepBenchCase, StepBenchCase)> {
+            let off = native_step_case_telemetry(
+                k_max, nt1d, nq1d, iters, warmup, "telemetry_off",
+            )?;
+            fastvpinns::telemetry::arm(tmp)
+                .context("arm bench telemetry stream")?;
+            let on_res = native_step_case_telemetry(
+                k_max, nt1d, nq1d, iters, warmup, "telemetry_on",
+            );
+            fastvpinns::telemetry::shutdown();
+            let _ = std::fs::remove_file(tmp);
+            Ok((off, on_res?))
+        };
+        let (mut off, mut on) = run_pair(&metrics_tmp)?;
+        let mut tratio = on.summary.median / off.summary.median;
+        if tratio > 1.02 {
+            let (off2, on2) = run_pair(&metrics_tmp)?;
+            if off2.summary.median < off.summary.median {
+                off = off2;
+            }
+            if on2.summary.median < on.summary.median {
+                on = on2;
+            }
+            tratio = on.summary.median / off.summary.median;
+        }
+        push_case(&off);
+        push_case(&on);
+        println!(
+            "  telemetry overhead: armed / disarmed median ratio \
+             {tratio:.3} at ne={}",
+            k_max * k_max
+        );
+        if tratio > 1.02 {
+            bail!(
+                "telemetry recorder adds {:.1}% to the median step at \
+                 ne={} ({:.3} ms armed vs {:.3} ms disarmed): the \
+                 armed hot path must stay within the 2% zero-overhead \
+                 budget",
+                (tratio - 1.0) * 100.0, k_max * k_max,
+                on.summary.median, off.summary.median
+            );
+        }
+    }
     // inference throughput: repeated passes over a 4096-point query
     // cloud through the blocked prediction path, at serving batch
     // sizes and both precisions — the amortized-inference datapoints
@@ -597,6 +662,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     config.drain_timeout = Duration::from_secs(
         args.usize_or("drain-timeout-s", 10)? as u64,
     );
+    if let Some(path) = args.flag("metrics-out") {
+        fastvpinns::telemetry::arm(path)
+            .context("open --metrics-out")?;
+    }
     Server::new(config)?.run()
 }
 
@@ -702,6 +771,226 @@ fn cmd_serve_probe(args: &Args) -> Result<()> {
     }
 }
 
+/// `repro report`: summarize one or more `--metrics-out` telemetry
+/// streams — event counts, per-phase step breakdown, recovery
+/// timeline, and step-time percentiles. Multiple files are combined
+/// through [`Summary::merge`], so a sharded CI run's streams can be
+/// reported as one. Every line is schema-validated on the way through;
+/// a torn *final* line (a run killed mid-write) is skipped with a
+/// warning, a malformed interior line is an error.
+fn cmd_report(args: &Args) -> Result<()> {
+    use fastvpinns::telemetry::SCHEMA_VERSION;
+    use fastvpinns::util::json::Json;
+    use fastvpinns::util::stats::Summary;
+
+    if args.positional.is_empty() {
+        bail!("usage: repro report FILE.jsonl [MORE.jsonl ...]");
+    }
+
+    const PHASES: [&str; 4] =
+        ["assign_ms", "step_ms", "reduce_ms", "sync_ms"];
+    let mut merged = Summary::from(&[]);
+    let mut counts: Vec<(String, usize)> = Vec::new();
+    let mut phase_tot = [0.0f64; 4];
+    let mut phase_steps = 0usize;
+    let mut wall_tot = 0.0f64;
+    let mut recoveries: Vec<String> = Vec::new();
+    let mut checkpoints = 0usize;
+    let mut ckpt_bytes = 0u64;
+    let mut ckpt_ms: Vec<f64> = Vec::new();
+    let mut kernel_lines: Vec<String> = Vec::new();
+    let mut queue_hwm = 0usize;
+    let mut batch_len = 0u64;
+    let mut batch_cap = 0u64;
+    let mut dropped = 0usize;
+
+    for path in &args.positional {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {path}"))?;
+        let lines: Vec<&str> =
+            text.lines().filter(|l| !l.trim().is_empty()).collect();
+        let mut walls: Vec<f64> = Vec::new();
+        let mut handle = |ev: &Json| -> Result<()> {
+            let v = ev.req("v")?.as_usize()?;
+            anyhow::ensure!(
+                v as u32 == SCHEMA_VERSION,
+                "schema version {v} (this build reads v{SCHEMA_VERSION})"
+            );
+            let tag = ev.req("ev")?.as_str()?;
+            if tag != "flush" {
+                // every event except the shutdown marker is stamped
+                ev.req("t_ms")?.as_f64()?;
+            }
+            match counts.iter_mut().find(|(t, _)| t == tag) {
+                Some((_, c)) => *c += 1,
+                None => counts.push((tag.to_string(), 1)),
+            }
+            match tag {
+                "step" => {
+                    let wall = ev.req("wall_ms")?.as_f64()?;
+                    walls.push(wall);
+                    wall_tot += wall;
+                    // the four phase fields are all-numbers or all-null
+                    // (null: the backend has no phase clock, or the
+                    // step never reached the hot path)
+                    let mut ph = [0.0f64; 4];
+                    let mut have = true;
+                    for (i, k) in PHASES.iter().enumerate() {
+                        match ev.req(k)?.as_f64() {
+                            Ok(x) => ph[i] = x,
+                            Err(_) => {
+                                have = false;
+                                break;
+                            }
+                        }
+                    }
+                    if have {
+                        for (t, p) in phase_tot.iter_mut().zip(ph) {
+                            *t += p;
+                        }
+                        phase_steps += 1;
+                    }
+                }
+                "recovery" => recoveries.push(format!(
+                    "t={:.1} ms: step {} rolled back to {} ({}), lr \
+                     scale {:.3e}",
+                    ev.req("t_ms")?.as_f64()?,
+                    ev.req("at_step")?.as_usize()?,
+                    ev.req("rollback_to")?.as_usize()?,
+                    ev.req("reason")?.as_str()?,
+                    ev.req("lr_scale")?.as_f64()?,
+                )),
+                "checkpoint" => {
+                    checkpoints += 1;
+                    ckpt_bytes += ev.req("bytes")?.as_usize()? as u64;
+                    ckpt_ms.push(ev.req("write_ms")?.as_f64()?);
+                }
+                "kernel" => kernel_lines.push(format!(
+                    "{} degraded={} ({})",
+                    ev.req("kernel")?.as_str()?,
+                    ev.req("degraded")?.as_bool()?,
+                    ev.req("reason")?.as_str()?,
+                )),
+                "queue" => {
+                    queue_hwm =
+                        queue_hwm.max(ev.req("hwm")?.as_usize()?);
+                    ev.req("queued")?.as_usize()?;
+                }
+                "batch" => {
+                    batch_len += ev.req("len")?.as_usize()? as u64;
+                    batch_cap += ev.req("max")?.as_usize()? as u64;
+                }
+                "flush" => {
+                    dropped += ev.req("dropped")?.as_usize()?;
+                }
+                // same-version unknown tags are counted but otherwise
+                // ignored (the schema rule: new tags don't bump v, so
+                // a reader must tolerate them)
+                _ => {}
+            }
+            Ok(())
+        };
+        let n_lines = lines.len();
+        for (i, line) in lines.iter().enumerate() {
+            let parsed = Json::parse(line);
+            let ev = match parsed {
+                Ok(j) => j,
+                Err(e) if i + 1 == n_lines => {
+                    // a run killed mid-write may leave a torn final
+                    // line; everything before it is intact and still
+                    // worth reporting
+                    eprintln!(
+                        "warning: {path}: skipping torn final line \
+                         ({e})"
+                    );
+                    continue;
+                }
+                Err(e) => {
+                    return Err(e.context(format!(
+                        "{path}:{}: malformed event line",
+                        i + 1
+                    )))
+                }
+            };
+            handle(&ev)
+                .with_context(|| format!("{path}:{}", i + 1))?;
+        }
+        drop(handle);
+        let s = Summary::from(&walls);
+        println!(
+            "{path}: {n_lines} event(s), {} step(s)",
+            s.n + s.dropped
+        );
+        merged = merged.merge(&s);
+    }
+
+    println!(
+        "telemetry report ({} file(s), schema v{SCHEMA_VERSION})",
+        args.positional.len()
+    );
+    for (tag, c) in &counts {
+        println!("  {tag:<11} {c:>8} event(s)");
+    }
+    if merged.n > 0 {
+        println!(
+            "step wall time: n {}  median {:.3} ms  p90 {:.3} ms  p99 \
+             {:.3} ms  max {:.3} ms  mean {:.3} ms",
+            merged.n, merged.median, merged.p90, merged.p99,
+            merged.max, merged.mean
+        );
+    }
+    if phase_steps > 0 {
+        let accounted: f64 = phase_tot.iter().sum();
+        println!(
+            "phase breakdown over {phase_steps} step(s) with timings \
+             ({:.1}% of step wall accounted):",
+            if wall_tot > 0.0 {
+                accounted / wall_tot * 100.0
+            } else {
+                0.0
+            }
+        );
+        for (name, ms) in ["assign", "step", "reduce", "sync"]
+            .iter()
+            .zip(phase_tot)
+        {
+            println!(
+                "  {name:<7} {ms:>10.1} ms  ({:>5.1}%)",
+                if accounted > 0.0 { ms / accounted * 100.0 } else { 0.0 }
+            );
+        }
+    }
+    if !recoveries.is_empty() {
+        println!("recovery timeline ({}):", recoveries.len());
+        for r in &recoveries {
+            println!("  {r}");
+        }
+    }
+    if checkpoints > 0 {
+        println!(
+            "checkpoints: {checkpoints} write(s), {ckpt_bytes} bytes, \
+             median {:.3} ms",
+            Summary::from(&ckpt_ms).median
+        );
+    }
+    for k in &kernel_lines {
+        println!("kernel: {k}");
+    }
+    if batch_cap > 0 {
+        println!(
+            "serve: queue hwm {queue_hwm}, mean batch fill {:.2}",
+            batch_len as f64 / batch_cap as f64
+        );
+    }
+    if dropped > 0 {
+        println!(
+            "WARNING: {dropped} event(s) dropped at the recorder \
+             (channel full)"
+        );
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let backend = args.str_or("backend", "native");
     check_backend_name(&backend)?;
@@ -733,6 +1022,7 @@ fn persistable_flags(args: &Args) -> Vec<(String, String)> {
         "expect-rel-l2", "iters", "log-every", "failpoints",
         "snapshot-every", "max-recoveries", "lr-backoff",
         "lr-restore-after", "grad-limit", "watchdog-ms", "workers",
+        "metrics-out",
     ];
     args.flag_pairs()
         .into_iter()
@@ -766,6 +1056,10 @@ fn cmd_train_native(args: &Args) -> Result<()> {
 
     if let Some(spec) = args.flag("failpoints") {
         failpoint::arm_from_spec(spec).context("parse --failpoints")?;
+    }
+    if let Some(path) = args.flag("metrics-out") {
+        fastvpinns::telemetry::arm(path)
+            .context("open --metrics-out")?;
     }
     // --resume goes through the generation ring: a run killed mid-save
     // leaves a torn primary, and the previous generation(s) at

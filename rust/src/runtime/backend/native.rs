@@ -1330,6 +1330,10 @@ impl NativeBackend {
     fn compute_loss_grad(&mut self) -> Result<StepStats> {
         let n_net = self.net.n_params();
         let n_shards = self.plan.n_shards();
+        // per-phase telemetry: inert (no clock reads) unless a metrics
+        // stream is armed; the trainer collects the published times
+        // when it emits the step event
+        let mut pclock = crate::telemetry::PhaseClock::start();
 
         // ---- AssignShards: reset the per-shard accumulators. The
         // plan itself is step-invariant (a function of ne/nq/
@@ -1339,6 +1343,7 @@ impl NativeBackend {
         for p in &mut self.shard_partials {
             ride_mut(p).reset();
         }
+        pclock.mark(0);
 
         // ---- Step: workers pull shards off a shared cursor. Results
         // are keyed by *shard*, not by worker, so scheduling noise
@@ -1363,6 +1368,7 @@ impl NativeBackend {
                 }
             })?;
         }
+        pclock.mark(1);
 
         // ---- Reduce: pairwise tree over the fixed shard order. The
         // pairing depends only on the shard count and pairs within a
@@ -1391,6 +1397,7 @@ impl NativeBackend {
                 stride *= 2;
             }
         }
+        pclock.mark(2);
 
         // ---- Sync: fold the root shard into the flat gradient, then
         // the penalty passes (single-threaded on worker 0's workspace
@@ -1441,6 +1448,8 @@ impl NativeBackend {
         // over ~n_params values, negligible next to the contraction
         let grad_norm =
             self.grad.iter().map(|g| g * g).sum::<f64>().sqrt();
+        pclock.mark(3);
+        pclock.finish();
         Ok(StepStats { loss, var_loss, bd_loss, extra, grad_norm })
     }
 

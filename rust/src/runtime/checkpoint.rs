@@ -595,9 +595,22 @@ impl Checkpoint {
             );
             std::process::exit(137);
         }
+        let t0 = crate::telemetry::armed()
+            .then(std::time::Instant::now);
         write_atomic(path, &bytes).with_context(
             || format!("write checkpoint {}", path.display()),
-        )
+        )?;
+        if let Some(t0) = t0 {
+            crate::telemetry::emit(
+                crate::telemetry::Event::CheckpointWrite {
+                    step: self.step as u64,
+                    path: path.display().to_string(),
+                    bytes: bytes.len() as u64,
+                    write_ms: t0.elapsed().as_secs_f64() * 1e3,
+                },
+            );
+        }
+        Ok(())
     }
 
     /// Rotate the generation ring at `path` and publish this artifact

@@ -197,6 +197,23 @@ fn worker_loop(
     while let Some(batch) = next_batch(rx, policy) {
         stats.record_dequeue(batch.len());
         stats.record_batch(batch.len());
+        if crate::telemetry::armed() {
+            // queue pressure + batch fill, sampled at the moment a
+            // worker claims a coalesced batch (the natural clock of
+            // the serve plane)
+            crate::telemetry::emit(
+                crate::telemetry::Event::QueueSample {
+                    queued: stats.queued(),
+                    hwm: stats.queue_hwm(),
+                },
+            );
+            crate::telemetry::emit(
+                crate::telemetry::Event::BatchFlush {
+                    len: batch.len() as u64,
+                    max: policy.max_batch as u64,
+                },
+            );
+        }
         eval_batch(sess, &batch);
     }
 }

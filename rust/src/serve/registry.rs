@@ -152,7 +152,32 @@ impl ModelCache {
             Ok(pool) => Ok(pool),
             Err(e) => {
                 inner.names.retain(|(n, _)| n != name);
-                Err(e)
+                // Rescan-on-miss: artifacts dropped into the registry
+                // after startup must be servable without a restart.
+                // One fresh directory scan decides between a retry
+                // (the file landed since the failed read) and an
+                // unknown-model error enriched with what the registry
+                // *does* serve right now. `path_of` already rejected
+                // traversal names above, so no request-controlled
+                // path reaches the scan.
+                let fresh =
+                    scan_registry(registry.dir()).unwrap_or_default();
+                if fresh.iter().any(|(n, _)| n == name) {
+                    return match self.load(&mut inner, &path, name) {
+                        Ok(pool) => Ok(pool),
+                        Err(e2) => {
+                            inner.names.retain(|(n, _)| n != name);
+                            Err(e2)
+                        }
+                    };
+                }
+                let known: Vec<String> =
+                    fresh.into_iter().map(|(n, _)| n).collect();
+                Err(e.context(format!(
+                    "unknown model {name:?} after registry rescan \
+                     (servable: [{}])",
+                    known.join(", ")
+                )))
             }
         }
     }
@@ -325,6 +350,57 @@ mod tests {
         assert_eq!(cache.len(), 1);
         // evicting either name drops the shared pool
         assert!(cache.evict("x"));
+        assert!(cache.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Rescan-on-miss: an artifact dropped into the registry *after*
+    /// the cache/server exist becomes servable on the next query —
+    /// and a prior failed lookup of the same name must not have
+    /// negatively cached anything.
+    #[test]
+    fn artifact_written_post_spawn_becomes_servable() {
+        let dir = tmp_registry("post_spawn");
+        write_model(&dir, "present", 5);
+        let reg = Registry::open(&dir).unwrap();
+        let cache = cache(2);
+        // the model does not exist yet: the error mentions the rescan
+        // and lists what the registry serves right now
+        let err = cache.get(&reg, "late").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("registry rescan"), "{msg}");
+        assert!(msg.contains("present"), "{msg}");
+        assert!(cache.is_empty());
+        // drop the artifact in post-spawn; the very next get serves it
+        write_model(&dir, "late", 11);
+        let pool = cache.get(&reg, "late").unwrap();
+        let out =
+            pool.submit(vec![[0.2, 0.7]], Precision::F64).unwrap();
+        assert_eq!(out.0.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Traversal-safety regression on the rescan path: names rejected
+    /// by `path_of` must error *before* any filesystem access — the
+    /// rescan retry must not open a request-controlled path.
+    #[test]
+    fn rescan_path_never_reaches_traversal_names() {
+        let dir = tmp_registry("rescan_traversal");
+        let reg = Registry::open(&dir).unwrap();
+        let cache = cache(2);
+        for bad in ["", ".", "..", "a/b", "a\\b", "../escape"] {
+            let err = cache.get(&reg, bad).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("invalid model name"),
+                "{bad:?} must fail name validation, not the \
+                 load/rescan path: {msg}"
+            );
+            assert!(
+                !msg.contains("registry rescan"),
+                "{bad:?} reached the rescan path: {msg}"
+            );
+        }
         assert!(cache.is_empty());
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -116,6 +116,13 @@ impl ServeStats {
         self.queued.fetch_sub(n as u64, Ordering::Relaxed);
     }
 
+    /// Jobs sitting in pool queues right now (submitted, not yet
+    /// claimed into a micro-batch) — the telemetry `queue` events
+    /// sample this gauge.
+    pub fn queued(&self) -> u64 {
+        self.queued.load(Ordering::Relaxed)
+    }
+
     /// Deepest the pool queues have been since the server started.
     pub fn queue_hwm(&self) -> u64 {
         self.queue_hwm.load(Ordering::Relaxed)

@@ -1,0 +1,546 @@
+//! The observability plane: a lock-light structured event stream for
+//! training and serving, written as newline-delimited JSON.
+//!
+//! ## Design
+//!
+//! Instrumentation sites all over the stack (the coordinator's step
+//! loop, the native backend's tick phases, the checkpoint writer, the
+//! SIMD dispatch latch, the serve micro-batcher) call [`emit`] with an
+//! [`Event`]. When nothing is armed — the default — every one of those
+//! calls is **one relaxed atomic load and a branch**, the same
+//! discipline as [`crate::runtime::failpoint`]: no lock, no clock
+//! read, no allocation rides the hot path of a run that did not ask
+//! for metrics.
+//!
+//! Armed (CLI: `--metrics-out FILE`), [`emit`] stamps a monotonic
+//! timestamp and hands the event to a **bounded channel** feeding one
+//! dedicated writer thread. The producer side never blocks: a full
+//! channel drops the event and counts it (the final `flush` line
+//! reports the total), because a slow disk must never stall a training
+//! step. The writer serializes each event to a single JSON line and
+//! writes it with one `write_all` call — **line-atomic**: a line is
+//! one small write(2) to a regular file, so a crash (even the
+//! `checkpoint.write.kill` failpoint's `exit(137)`) can kill the
+//! stream between lines but not tear one in half. On clean
+//! [`shutdown`] the writer appends a `flush` event and fsyncs.
+//!
+//! ## Zero-perturbation guarantee
+//!
+//! Telemetry is observation-only. It reads losses, gradients and
+//! clocks; it never touches parameters, RNG state, iteration order or
+//! the reduction tree. Per-step losses and the final u-hash of a run
+//! with `--metrics-out` are **bit-identical** to the same run without
+//! it — `rust/tests/telemetry_e2e.rs` proves this, and the `repro
+//! bench` telemetry-overhead guard keeps the armed wall-clock cost
+//! within 2% of the disarmed step.
+//!
+//! ## Schema (version 1)
+//!
+//! Every line is one JSON object with `"v"` ([`SCHEMA_VERSION`]),
+//! `"ev"` (the event type) and `"t_ms"` (monotonic milliseconds since
+//! arming). Adding fields is backward-compatible; removing or
+//! renaming one, or changing a type, bumps `SCHEMA_VERSION`. The
+//! catalog (authoritative; `python/proto_telemetry_check.py` is the
+//! second, independent implementation):
+//!
+//! | `ev` | fields | emitted by |
+//! |------|--------|------------|
+//! | `step` | `step`, `wall_ms`, `assign_ms`/`step_ms`/`reduce_ms`/`sync_ms` (number or null), `loss` (number or null), `grad_norm` (number or null), `lr` | the trainer, once per optimizer step |
+//! | `recovery` | `at_step`, `rollback_to`, `reason`, `lr_scale` | the trainer's rollback path |
+//! | `checkpoint` | `step`, `path`, `bytes`, `write_ms` | [`Checkpoint::write`](crate::runtime::checkpoint::Checkpoint::write) |
+//! | `kernel` | `kernel`, `degraded`, `reason` | arming (the selected kernel) and the dispatch degrade latch |
+//! | `queue` | `queued`, `hwm` | a serve worker claiming a micro-batch |
+//! | `batch` | `len`, `max` | a serve worker claiming a micro-batch |
+//! | `flush` | `dropped` | [`shutdown`] — always the last line of a cleanly closed stream |
+//!
+//! Phase times are null when the step's backend published none (the
+//! XLA executor, or a step raced past arming); `loss`/`grad_norm` are
+//! null when non-finite (a poisoned step under `grad.nan` appears in
+//! the stream with `loss: null`, immediately before its `recovery`
+//! event — JSON has no NaN, and the chaos tier asserts exactly this
+//! interleaving).
+
+use std::fs::File;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// Version stamped into every emitted line as `"v"`. Bumped when a
+/// field is removed, renamed or retyped (additions are compatible).
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Bounded channel capacity between emitters and the writer thread.
+/// Full means the disk cannot keep up; events are dropped and counted
+/// rather than ever blocking a training step.
+const CHANNEL_DEPTH: usize = 4096;
+
+/// One structured telemetry event (serialized as a single JSON line —
+/// see the module-level schema table).
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// One optimizer step: wall time, the four coordinator tick phases
+    /// (when the backend published them), and the scalars the step
+    /// produced.
+    StepStats {
+        /// 1-based optimizer step id.
+        step: u64,
+        /// Whole-step wall time (ms) as the trainer saw it.
+        wall_ms: f64,
+        /// Per-phase wall times `[assign, step, reduce, sync]` (ms)
+        /// from the native backend's tick; `None` when unavailable.
+        phases_ms: Option<[f64; 4]>,
+        /// Step loss (serialized null when non-finite).
+        loss: f64,
+        /// Gradient L2 norm (serialized null when non-finite).
+        grad_norm: f64,
+        /// Effective learning rate (schedule x recovery backoff).
+        lr: f64,
+    },
+    /// The trainer rolled back to a snapshot (divergence healing).
+    Recovery {
+        /// Step the divergence was detected at.
+        at_step: u64,
+        /// Snapshot step the trainer rolled back to.
+        rollback_to: u64,
+        /// Human-readable divergence reason.
+        reason: String,
+        /// Learning-rate backoff scale after this rollback.
+        lr_scale: f64,
+    },
+    /// A checkpoint artifact was written successfully.
+    CheckpointWrite {
+        /// Step count stored in the artifact.
+        step: u64,
+        /// Destination path.
+        path: String,
+        /// Serialized artifact size in bytes.
+        bytes: u64,
+        /// Wall time of the atomic write (ms).
+        write_ms: f64,
+    },
+    /// Kernel dispatch state: emitted once at arming with the selected
+    /// kernel, and again if the degrade latch trips.
+    KernelDispatch {
+        /// Active kernel name (`avx2_4x12` / `scalar_4x8`).
+        kernel: &'static str,
+        /// Whether dispatch has degraded to the scalar fallback.
+        degraded: bool,
+        /// Why this event fired ("arm", or the degrade reason).
+        reason: String,
+    },
+    /// Serve-plane queue pressure, sampled when a worker claims a
+    /// micro-batch.
+    QueueSample {
+        /// Jobs waiting in pool queues right now.
+        queued: u64,
+        /// Queue-depth high-water mark so far.
+        hwm: u64,
+    },
+    /// One coalesced serve micro-batch was claimed for evaluation.
+    BatchFlush {
+        /// Requests coalesced into the batch.
+        len: u64,
+        /// The policy's `max_batch` (fill ratio = len/max).
+        max: u64,
+    },
+}
+
+/// A finite number, or JSON null — `Json::Num(NaN)` would serialize as
+/// the invalid token `NaN`, and a poisoned step's loss must still
+/// produce a parseable line.
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::num(v)
+    } else {
+        Json::Null
+    }
+}
+
+impl Event {
+    /// The `"ev"` tag this event serializes under.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Event::StepStats { .. } => "step",
+            Event::Recovery { .. } => "recovery",
+            Event::CheckpointWrite { .. } => "checkpoint",
+            Event::KernelDispatch { .. } => "kernel",
+            Event::QueueSample { .. } => "queue",
+            Event::BatchFlush { .. } => "batch",
+        }
+    }
+
+    /// Serialize to one JSON line (no trailing newline).
+    fn to_json(&self, t_ms: f64) -> Json {
+        let mut fields = vec![
+            ("v", Json::num(SCHEMA_VERSION as f64)),
+            ("ev", Json::str(self.tag())),
+            ("t_ms", Json::num(t_ms)),
+        ];
+        match self {
+            Event::StepStats {
+                step, wall_ms, phases_ms, loss, grad_norm, lr,
+            } => {
+                fields.push(("step", Json::num(*step as f64)));
+                fields.push(("wall_ms", Json::num(*wall_ms)));
+                let p = |i: usize| match phases_ms {
+                    Some(ms) => Json::num(ms[i]),
+                    None => Json::Null,
+                };
+                fields.push(("assign_ms", p(0)));
+                fields.push(("step_ms", p(1)));
+                fields.push(("reduce_ms", p(2)));
+                fields.push(("sync_ms", p(3)));
+                fields.push(("loss", num_or_null(*loss)));
+                fields.push(("grad_norm", num_or_null(*grad_norm)));
+                fields.push(("lr", Json::num(*lr)));
+            }
+            Event::Recovery { at_step, rollback_to, reason, lr_scale } => {
+                fields.push(("at_step", Json::num(*at_step as f64)));
+                fields.push((
+                    "rollback_to",
+                    Json::num(*rollback_to as f64),
+                ));
+                fields.push(("reason", Json::str(reason.clone())));
+                fields.push(("lr_scale", Json::num(*lr_scale)));
+            }
+            Event::CheckpointWrite { step, path, bytes, write_ms } => {
+                fields.push(("step", Json::num(*step as f64)));
+                fields.push(("path", Json::str(path.clone())));
+                fields.push(("bytes", Json::num(*bytes as f64)));
+                fields.push(("write_ms", Json::num(*write_ms)));
+            }
+            Event::KernelDispatch { kernel, degraded, reason } => {
+                fields.push(("kernel", Json::str(*kernel)));
+                fields.push(("degraded", Json::Bool(*degraded)));
+                fields.push(("reason", Json::str(reason.clone())));
+            }
+            Event::QueueSample { queued, hwm } => {
+                fields.push(("queued", Json::num(*queued as f64)));
+                fields.push(("hwm", Json::num(*hwm as f64)));
+            }
+            Event::BatchFlush { len, max } => {
+                fields.push(("len", Json::num(*len as f64)));
+                fields.push(("max", Json::num(*max as f64)));
+            }
+        }
+        Json::obj(fields)
+    }
+}
+
+enum Msg {
+    Event(Event, f64),
+    /// Clean shutdown: write the flush line (with the final dropped
+    /// count), fsync, exit.
+    Flush(u64),
+}
+
+struct Sink {
+    tx: SyncSender<Msg>,
+    t0: Instant,
+    writer: Option<std::thread::JoinHandle<()>>,
+}
+
+/// The disarmed fast path: one relaxed load, same as
+/// `failpoint::ARMED`.
+static ARMED: AtomicBool = AtomicBool::new(false);
+/// Events dropped because the writer channel was full.
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+fn sink() -> &'static Mutex<Option<Sink>> {
+    static SINK: OnceLock<Mutex<Option<Sink>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(None))
+}
+
+fn lock_sink() -> std::sync::MutexGuard<'static, Option<Sink>> {
+    sink().lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Whether a metrics stream is armed (one relaxed load — the disarmed
+/// fast path of every instrumentation site).
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Arm the telemetry stream: create/truncate `path`, start the writer
+/// thread, and start the monotonic `t_ms` clock. Emits an initial
+/// [`Event::KernelDispatch`] recording the selected kernel. Errors if
+/// already armed (one stream per process) or the file cannot be
+/// created.
+pub fn arm(path: impl AsRef<std::path::Path>) -> Result<()> {
+    let path = path.as_ref();
+    let mut guard = lock_sink();
+    ensure!(
+        guard.is_none(),
+        "telemetry is already armed (one --metrics-out per process)"
+    );
+    let file = File::create(path).with_context(|| {
+        format!("create metrics file {}", path.display())
+    })?;
+    let (tx, rx) = sync_channel::<Msg>(CHANNEL_DEPTH);
+    let writer = std::thread::Builder::new()
+        .name("telemetry-writer".into())
+        .spawn(move || writer_loop(file, rx))
+        .context("spawn telemetry writer thread")?;
+    *guard = Some(Sink { tx, t0: Instant::now(), writer: Some(writer) });
+    DROPPED.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+    drop(guard);
+    emit(Event::KernelDispatch {
+        kernel: crate::linalg::simd::kernel_name(),
+        degraded: crate::linalg::simd::degraded(),
+        reason: "arm".to_string(),
+    });
+    Ok(())
+}
+
+/// Record an event. Disarmed: one relaxed atomic load. Armed: stamp
+/// the monotonic timestamp and `try_send` to the writer — never
+/// blocks; a full channel drops the event and counts it in the final
+/// `flush` line.
+pub fn emit(ev: Event) {
+    if !ARMED.load(Ordering::Relaxed) {
+        return;
+    }
+    let guard = lock_sink();
+    if let Some(s) = guard.as_ref() {
+        let t_ms = s.t0.elapsed().as_secs_f64() * 1e3;
+        match s.tx.try_send(Msg::Event(ev, t_ms)) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_))
+            | Err(TrySendError::Disconnected(_)) => {
+                DROPPED.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Disarm and close the stream: the writer drains the channel, appends
+/// the `flush` line with the dropped-event count, fsyncs and exits.
+/// Idempotent — a no-op when nothing is armed, so the CLI calls it
+/// unconditionally on the way out.
+pub fn shutdown() {
+    ARMED.store(false, Ordering::SeqCst);
+    let s = lock_sink().take();
+    if let Some(Sink { tx, writer, .. }) = s {
+        let _ = tx.send(Msg::Flush(DROPPED.load(Ordering::SeqCst)));
+        drop(tx);
+        if let Some(h) = writer {
+            let _ = h.join();
+        }
+    }
+}
+
+fn writer_loop(mut file: File, rx: Receiver<Msg>) {
+    let mut line = String::with_capacity(256);
+    while let Ok(msg) = rx.recv() {
+        line.clear();
+        let done = match msg {
+            Msg::Event(ev, t_ms) => {
+                line.push_str(&ev.to_json(t_ms).to_string());
+                false
+            }
+            Msg::Flush(dropped) => {
+                line.push_str(
+                    &Json::obj(vec![
+                        ("v", Json::num(SCHEMA_VERSION as f64)),
+                        ("ev", Json::str("flush")),
+                        ("dropped", Json::num(dropped as f64)),
+                    ])
+                    .to_string(),
+                );
+                true
+            }
+        };
+        line.push('\n');
+        // one write_all per complete line — the line-atomicity
+        // contract: a crash lands between lines, never inside one
+        if file.write_all(line.as_bytes()).is_err() {
+            break; // disk gone; drain silently, nothing else to do
+        }
+        if done {
+            break;
+        }
+    }
+    let _ = file.sync_all();
+}
+
+// ---------------------------------------------------------------- phases
+
+/// Handoff slot for the native backend's per-tick phase times: the
+/// backend finishes a [`PhaseClock`] inside `compute_loss_grad`, the
+/// trainer collects it via [`take_phase_ms`] when emitting the step's
+/// [`Event::StepStats`]. A Mutex<Option<...>> (not part of the Event
+/// channel) so the `Backend` trait does not change.
+fn phase_slot() -> &'static Mutex<Option<[f64; 4]>> {
+    static SLOT: OnceLock<Mutex<Option<[f64; 4]>>> = OnceLock::new();
+    SLOT.get_or_init(|| Mutex::new(None))
+}
+
+/// Monotonic per-phase timer for one coordinator tick. Disarmed, it is
+/// inert: [`PhaseClock::start`] takes the one relaxed load, and every
+/// other method is a branch on a plain `Option` — no clock reads.
+#[derive(Debug)]
+pub struct PhaseClock {
+    t: Option<Instant>,
+    ms: [f64; 4],
+}
+
+impl PhaseClock {
+    /// Start timing a tick (inert when telemetry is disarmed).
+    pub fn start() -> PhaseClock {
+        let t = if armed() { Some(Instant::now()) } else { None };
+        PhaseClock { t, ms: [0.0; 4] }
+    }
+
+    /// Close phase `idx` (0=AssignShards, 1=Step, 2=Reduce, 3=Sync):
+    /// records the time since the previous mark (or start) and begins
+    /// the next phase.
+    pub fn mark(&mut self, idx: usize) {
+        if let Some(t0) = self.t {
+            let now = Instant::now();
+            if let Some(slot) = self.ms.get_mut(idx) {
+                *slot = now.duration_since(t0).as_secs_f64() * 1e3;
+            }
+            self.t = Some(now);
+        }
+    }
+
+    /// Publish the four phase times to the trainer's pickup slot.
+    pub fn finish(self) {
+        if self.t.is_some() {
+            *phase_slot()
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner) =
+                Some(self.ms);
+        }
+    }
+}
+
+/// Collect (and clear) the phase times the backend published for the
+/// step that just ran. `None` when the backend has no tick
+/// instrumentation (XLA) or telemetry was disarmed during the step.
+pub fn take_phase_ms() -> Option<[f64; 4]> {
+    if !armed() {
+        return None;
+    }
+    phase_slot()
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+        .take()
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    // One sequential test owning the process-global sink end to end
+    // (the suite runs tests in parallel, and a second arming test
+    // would race this one through ARMED) — the failpoint module's
+    // test discipline.
+    #[test]
+    fn arm_emit_shutdown_roundtrip_and_disarmed_noop() {
+        // disarmed: emit is a no-op, the clock stays inert
+        assert!(!armed());
+        emit(Event::QueueSample { queued: 1, hwm: 1 });
+        let mut pc = PhaseClock::start();
+        pc.mark(0);
+        pc.finish();
+        assert_eq!(take_phase_ms(), None);
+
+        let path = std::env::temp_dir().join(format!(
+            "fastvpinns_telemetry_unit_{}.jsonl",
+            std::process::id()
+        ));
+        arm(&path).unwrap();
+        assert!(armed());
+        // double-arm is rejected, and the failed arm does not disarm
+        assert!(arm(&path).is_err());
+        assert!(armed());
+
+        emit(Event::StepStats {
+            step: 1,
+            wall_ms: 1.5,
+            phases_ms: Some([0.1, 1.0, 0.2, 0.2]),
+            loss: 0.5,
+            grad_norm: f64::NAN, // must serialize as null, not NaN
+            lr: 1e-3,
+        });
+        emit(Event::Recovery {
+            at_step: 500,
+            rollback_to: 450,
+            reason: "non-finite loss NaN".into(),
+            lr_scale: 0.5,
+        });
+        emit(Event::CheckpointWrite {
+            step: 100,
+            path: "out.ckpt".into(),
+            bytes: 1234,
+            write_ms: 0.7,
+        });
+        emit(Event::BatchFlush { len: 3, max: 8 });
+
+        // armed phase clock publishes to the pickup slot
+        let mut pc = PhaseClock::start();
+        pc.mark(0);
+        pc.mark(1);
+        pc.mark(2);
+        pc.mark(3);
+        pc.finish();
+        let phases = take_phase_ms().unwrap();
+        assert!(phases.iter().all(|p| p.is_finite() && *p >= 0.0));
+        assert_eq!(take_phase_ms(), None, "take clears the slot");
+
+        shutdown();
+        assert!(!armed());
+        shutdown(); // idempotent
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with('\n'), "stream ends with a newline");
+        let parsed: Vec<Json> = text
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        // arm's kernel line + 4 events + flush
+        assert_eq!(parsed.len(), 6);
+        let tags: Vec<&str> = parsed
+            .iter()
+            .map(|j| j.req("ev").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(
+            tags,
+            ["kernel", "step", "recovery", "checkpoint", "batch",
+             "flush"]
+        );
+        for j in &parsed {
+            assert_eq!(
+                j.req("v").unwrap().as_usize().unwrap(),
+                SCHEMA_VERSION as usize
+            );
+        }
+        // the NaN grad norm landed as null (valid JSON), the finite
+        // loss as a number
+        let step = &parsed[1];
+        assert!(matches!(step.req("grad_norm").unwrap(), Json::Null));
+        assert_eq!(step.req("loss").unwrap().as_f64().unwrap(), 0.5);
+        assert!(step.req("t_ms").unwrap().as_f64().unwrap() >= 0.0);
+        // timestamps are monotone non-decreasing
+        let times: Vec<f64> = parsed[..5]
+            .iter()
+            .map(|j| j.req("t_ms").unwrap().as_f64().unwrap())
+            .collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "{times:?}");
+        // clean shutdown reports zero dropped events
+        assert_eq!(
+            parsed[5].req("dropped").unwrap().as_usize().unwrap(),
+            0
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -109,6 +109,47 @@ impl Summary {
             dropped,
         }
     }
+
+    /// Merge two summaries into an estimate of the summary of the
+    /// concatenated sample sets — how `repro report` combines the
+    /// step-time statistics of several metrics files without the raw
+    /// samples.
+    ///
+    /// Exactness contract (property-tested below):
+    /// - `n`, `min`, `max`, `dropped`: **exact** (counts add, extrema
+    ///   compose).
+    /// - `mean`: the count-weighted mean — exact up to float roundoff.
+    /// - percentiles: the count-weighted average of the inputs'
+    ///   percentiles, which always lies **between** the two input
+    ///   values. For the *median* the concatenation's true median
+    ///   also lies in that bracket, so the merge error is bounded by
+    ///   `|a.median - b.median|`. The tail percentiles (p90/p99) have
+    ///   no such bracket — a concatenation's tail can exceed both
+    ///   inputs' — and are estimates only.
+    ///
+    /// An empty side contributes only its `dropped` count.
+    pub fn merge(&self, other: &Summary) -> Summary {
+        let dropped = self.dropped + other.dropped;
+        if self.n == 0 {
+            return Summary { dropped, ..*other };
+        }
+        if other.n == 0 {
+            return Summary { dropped, ..*self };
+        }
+        let n = self.n + other.n;
+        let wa = self.n as f64 / n as f64;
+        let wb = other.n as f64 / n as f64;
+        Summary {
+            n,
+            min: self.min.min(other.min),
+            median: wa * self.median + wb * other.median,
+            p90: wa * self.p90 + wb * other.p90,
+            p99: wa * self.p99 + wb * other.p99,
+            max: self.max.max(other.max),
+            mean: wa * self.mean + wb * other.mean,
+            dropped,
+        }
+    }
 }
 
 /// Linear-interpolated percentile of a sorted slice, p in [0, 100].
@@ -315,6 +356,121 @@ mod tests {
                         && s.p99 == s.min)
                 {
                     return Err(format!("single-sample collapse: {s:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn merge_empty_sides_carry_dropped() {
+        let a = Summary::from(&[f64::NAN, f64::NAN]);
+        let b = Summary::from(&[1.0, 2.0, 3.0, f64::INFINITY]);
+        let m = a.merge(&b);
+        assert_eq!(m.n, 3);
+        assert_eq!(m.dropped, 3);
+        assert_eq!(m.min, 1.0);
+        assert_eq!(m.max, 3.0);
+        // symmetric
+        let m2 = b.merge(&a);
+        assert_eq!(m2.n, 3);
+        assert_eq!(m2.dropped, 3);
+        // both empty
+        let e = a.merge(&Summary::from(&[]));
+        assert_eq!(e.n, 0);
+        assert_eq!(e.dropped, 2);
+    }
+
+    /// Property: merging two summaries matches the summary of the
+    /// concatenated sample sets per the documented contract — exactly
+    /// for `n`/`min`/`max`/`dropped`, to fp roundoff for `mean`, with
+    /// the median inside the inputs' median bracket of the true value,
+    /// and the tail percentiles inside the inputs' own bracket.
+    /// Non-finite samples injected on either side land in `dropped`.
+    #[test]
+    fn prop_merge_matches_concatenation_contract() {
+        use crate::util::proptest::check_result;
+        check_result(
+            47,
+            300,
+            |r| {
+                let gen_side = |r: &mut crate::util::rng::Rng| {
+                    let n = r.below(40);
+                    let mut v: Vec<f64> =
+                        (0..n).map(|_| r.uniform_in(-5.0, 1e3)).collect();
+                    for _ in 0..r.below(3) {
+                        let x = match r.below(3) {
+                            0 => f64::NAN,
+                            1 => f64::INFINITY,
+                            _ => f64::NEG_INFINITY,
+                        };
+                        v.insert(r.below(v.len() + 1), x);
+                    }
+                    v
+                };
+                let a = gen_side(&mut *r);
+                let b = gen_side(&mut *r);
+                (a, b)
+            },
+            |(av, bv)| {
+                let a = Summary::from(av);
+                let b = Summary::from(bv);
+                let m = a.merge(&b);
+                let concat: Vec<f64> =
+                    av.iter().chain(bv.iter()).copied().collect();
+                let c = Summary::from(&concat);
+                // exact fields
+                if m.n != c.n {
+                    return Err(format!("n {} != {}", m.n, c.n));
+                }
+                if m.dropped != c.dropped {
+                    return Err(format!(
+                        "dropped {} != {}",
+                        m.dropped, c.dropped
+                    ));
+                }
+                if m.n == 0 {
+                    return Ok(());
+                }
+                if m.min != c.min || m.max != c.max {
+                    return Err(format!(
+                        "extrema ({}, {}) != ({}, {})",
+                        m.min, m.max, c.min, c.max
+                    ));
+                }
+                // mean: weighted mean is exact up to roundoff
+                let scale = 1.0 + c.mean.abs();
+                if (m.mean - c.mean).abs() > 1e-9 * scale {
+                    return Err(format!(
+                        "mean {} vs {}",
+                        m.mean, c.mean
+                    ));
+                }
+                let slack = 1e-9 * (1.0 + c.max.abs());
+                if a.n > 0 && b.n > 0 {
+                    // median: the concatenation's median lies between
+                    // the input medians, so the merge error is bounded
+                    // by their spread
+                    let spread = (a.median - b.median).abs();
+                    if (m.median - c.median).abs() > spread + slack {
+                        return Err(format!(
+                            "median err {} > spread {spread}",
+                            (m.median - c.median).abs()
+                        ));
+                    }
+                    // tails: no concat bracket (documented), but the
+                    // weighted average must stay between the inputs
+                    for (mv, av_, bv_) in
+                        [(m.p90, a.p90, b.p90), (m.p99, a.p99, b.p99)]
+                    {
+                        let lo = av_.min(bv_);
+                        let hi = av_.max(bv_);
+                        if mv < lo - slack || mv > hi + slack {
+                            return Err(format!(
+                                "tail {mv} outside [{lo}, {hi}]"
+                            ));
+                        }
+                    }
                 }
                 Ok(())
             },

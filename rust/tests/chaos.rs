@@ -363,6 +363,161 @@ fn rollback_with_persistent_pool_matches_a_fresh_spawn() {
     }
 }
 
+/// (f) The telemetry stream under a mid-run divergence: the recovery
+/// event must land *between* the poisoned step's StepStats (loss:
+/// null — emitted before the sentinel fires) and the first replayed
+/// step, whose id restarts at rollback_to + 1. The interleaving is
+/// read back from the stream itself, cross-checked against the
+/// recovery event's own fields.
+#[test]
+#[ignore = "release-mode chaos tier (CI chaos job)"]
+fn grad_nan_event_stream_interleaves_recovery_in_rollback_order() {
+    use fastvpinns::util::json::Json;
+
+    let dir = tmp_dir("telemetry_nan");
+    let metrics = dir.join("train.jsonl");
+    let metrics_s = metrics.to_str().unwrap();
+    let out = repro(
+        &[
+            "train",
+            "--problem", "poisson_sin",
+            "--iters", "600",
+            "--failpoints", "grad.nan@500",
+            "--metrics-out", metrics_s,
+        ],
+        &[],
+    );
+    let (so, se) = (stdout_of(&out), stderr_of(&out));
+    assert!(out.status.success(), "run failed:\n{so}\n{se}");
+
+    let text = std::fs::read_to_string(&metrics).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    let events: Vec<Json> = text
+        .lines()
+        .map(|l| Json::parse(l).expect("valid event line"))
+        .collect();
+    assert_eq!(
+        events.last().unwrap().req("ev").unwrap().as_str().unwrap(),
+        "flush",
+        "clean exit must append the flush line"
+    );
+    let tag_at = |i: usize| {
+        events[i].req("ev").unwrap().as_str().unwrap()
+    };
+    let recoveries: Vec<usize> = (0..events.len())
+        .filter(|&i| tag_at(i) == "recovery")
+        .collect();
+    assert_eq!(recoveries.len(), 1, "expected exactly one recovery");
+    let ri = recoveries[0];
+    let rec = &events[ri];
+    let at_step = rec.req("at_step").unwrap().as_usize().unwrap();
+    let rollback_to =
+        rec.req("rollback_to").unwrap().as_usize().unwrap();
+    assert_eq!(at_step, 500, "fault was injected at step 500");
+    assert!(
+        rollback_to < at_step,
+        "rollback_to {rollback_to} >= at_step {at_step}"
+    );
+    // the event immediately upstream: the poisoned step's own stats,
+    // with loss nulled (NaN serializes as null by contract)
+    let before = (0..ri)
+        .rev()
+        .find(|&i| tag_at(i) == "step")
+        .expect("a step event precedes the recovery");
+    let poisoned = &events[before];
+    assert_eq!(
+        poisoned.req("step").unwrap().as_usize().unwrap(),
+        at_step,
+        "recovery must directly follow the poisoned step's stats"
+    );
+    assert!(
+        matches!(poisoned.req("loss").unwrap(), Json::Null),
+        "poisoned step's loss must be null, got {poisoned}"
+    );
+    // and downstream: the replay resumes at rollback_to + 1
+    let after = (ri + 1..events.len())
+        .find(|&i| tag_at(i) == "step")
+        .expect("a step event follows the recovery");
+    assert_eq!(
+        events[after].req("step").unwrap().as_usize().unwrap(),
+        rollback_to + 1,
+        "first replayed step id must be rollback_to + 1"
+    );
+    // the run finished its budget after healing
+    let last_step = (0..events.len())
+        .rev()
+        .find(|&i| tag_at(i) == "step")
+        .unwrap();
+    assert_eq!(
+        events[last_step].req("step").unwrap().as_usize().unwrap(),
+        600
+    );
+}
+
+/// (g) Crash (exit 137) injected mid-checkpoint with the recorder
+/// armed: the metrics file must contain no torn line — every line
+/// parses, the file ends at a line boundary — and no `flush` line
+/// (that is the clean-shutdown marker; its absence is how a reader
+/// tells a killed run from a finished one). The saves completed at
+/// step 100 must have left their checkpoint events in the stream (the
+/// kill fires at step 200, so the writer had 100 steps to drain them).
+#[test]
+#[ignore = "release-mode chaos tier (CI chaos job)"]
+fn checkpoint_kill_leaves_untorn_metrics_stream() {
+    use fastvpinns::util::json::Json;
+
+    let dir = tmp_dir("telemetry_kill");
+    let ckpt = dir.join("out.ckpt");
+    let metrics = dir.join("train.jsonl");
+    let out = repro(
+        &[
+            "train",
+            "--problem", "poisson_sin",
+            "--iters", "300",
+            "--layers", "2,16,1",
+            "--nb", "64",
+            "--checkpoint", ckpt.to_str().unwrap(),
+            "--checkpoint-every", "100",
+            "--failpoints", "checkpoint.write.kill@3",
+            "--metrics-out", metrics.to_str().unwrap(),
+        ],
+        &[],
+    );
+    assert_eq!(
+        out.status.code(),
+        Some(137),
+        "kill@3 did not kill the run\nstderr:\n{}",
+        stderr_of(&out)
+    );
+    let text = std::fs::read_to_string(&metrics).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    assert!(
+        text.ends_with('\n'),
+        "metrics file ends mid-line after the kill"
+    );
+    let events: Vec<Json> = text
+        .lines()
+        .map(|l| {
+            Json::parse(l).unwrap_or_else(|e| {
+                panic!("torn/malformed line after kill: {l:?} ({e})")
+            })
+        })
+        .collect();
+    assert!(!events.is_empty(), "stream is empty");
+    let tags: Vec<&str> = events
+        .iter()
+        .map(|e| e.req("ev").unwrap().as_str().unwrap())
+        .collect();
+    assert!(
+        !tags.contains(&"flush"),
+        "killed run must not carry the clean-shutdown flush line"
+    );
+    assert!(
+        tags.contains(&"checkpoint"),
+        "the completed first save left no checkpoint event: {tags:?}"
+    );
+}
+
 /// (d) A stalled step trips the watchdog: warn-only (the run
 /// completes) and counted in the report summary.
 #[test]

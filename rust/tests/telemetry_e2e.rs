@@ -1,0 +1,260 @@
+//! Golden-trace end-to-end tests of the observability plane.
+//!
+//! The heart of the tier: the zero-perturbation invariant. A training
+//! run with `--metrics-out` armed must produce *bit-identical*
+//! per-step losses and final predictions to the same run without it —
+//! telemetry observes the trajectory, it never participates in it.
+//! The stream itself is validated line by line against the v1 schema:
+//! contiguous step ids, finite phase times that sum to no more than
+//! the step wall time, a `flush` line last.
+//!
+//! Telemetry is a process-global (one stream per process), so exactly
+//! one in-process test arms it — the same single-owner discipline as
+//! the failpoint tests. The CLI tests spawn `repro` subprocesses and
+//! can run concurrently.
+
+use fastvpinns::coordinator::metrics::eval_grid;
+use fastvpinns::coordinator::schedule::LrSchedule;
+use fastvpinns::coordinator::trainer::{DataSource, TrainConfig, Trainer};
+use fastvpinns::fem::assembly;
+use fastvpinns::fem::quadrature::QuadKind;
+use fastvpinns::mesh::generators;
+use fastvpinns::problems::PoissonSin;
+use fastvpinns::runtime::backend::native::{
+    NativeBackend, NativeConfig, NativeLoss,
+};
+use fastvpinns::runtime::backend::BackendOpts;
+use fastvpinns::runtime::checkpoint::hash_f32_bits;
+use fastvpinns::telemetry::SCHEMA_VERSION;
+use fastvpinns::util::json::Json;
+
+const ITERS: usize = 300;
+
+/// One standard small poisson_sin training run: per-step losses
+/// (log_every = 1) and the u-hash over a fixed grid.
+fn train_once() -> (Vec<f64>, u64) {
+    let problem = PoissonSin::new(std::f64::consts::PI);
+    let mesh = generators::unit_square(2);
+    let dom = assembly::assemble(&mesh, 3, 8, QuadKind::GaussLegendre);
+    let src = DataSource {
+        mesh: &mesh,
+        domain: Some(&dom),
+        problem: &problem,
+        sensor_values: None,
+    };
+    let cfg = TrainConfig {
+        iters: ITERS,
+        lr: LrSchedule::Constant(1e-2),
+        log_every: 1,
+        seed: 11,
+        ..TrainConfig::default()
+    };
+    let ncfg = NativeConfig {
+        layers: vec![2, 16, 16, 1],
+        loss: NativeLoss::Forward,
+        nb: 80,
+        ns: 0,
+    };
+    let backend =
+        NativeBackend::new(&ncfg, &src, &BackendOpts::from(&cfg)).unwrap();
+    let mut t = Trainer::new(Box::new(backend), &cfg);
+    t.run().unwrap();
+    let losses: Vec<f64> = t.history.rows.iter().map(|r| r.loss).collect();
+    let grid = eval_grid(20, 20, 0.0, 0.0, 1.0, 1.0);
+    let u = t.predict(&grid).unwrap();
+    (losses, hash_f32_bits(&u))
+}
+
+fn tag(ev: &Json) -> &str {
+    ev.req("ev").unwrap().as_str().unwrap()
+}
+
+#[test]
+fn golden_trace_bit_identical_and_stream_schema_valid() {
+    // disarmed reference trajectory
+    let (ref_losses, ref_hash) = train_once();
+    assert_eq!(ref_losses.len(), ITERS);
+
+    // identical run with the recorder armed
+    let path = std::env::temp_dir().join(format!(
+        "fastvpinns_telemetry_e2e_{}.jsonl",
+        std::process::id()
+    ));
+    fastvpinns::telemetry::arm(&path).unwrap();
+    let (armed_losses, armed_hash) = train_once();
+    fastvpinns::telemetry::shutdown();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    // ---- zero-perturbation invariant: bit-identical trajectory
+    assert_eq!(armed_losses.len(), ITERS);
+    for (i, (a, b)) in ref_losses.iter().zip(&armed_losses).enumerate()
+    {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "step {}: loss diverged under telemetry ({a} vs {b})",
+            i + 1
+        );
+    }
+    assert_eq!(
+        ref_hash, armed_hash,
+        "final u-hash diverged under telemetry"
+    );
+
+    // ---- stream validation
+    assert!(text.ends_with('\n'), "stream must end with a newline");
+    let events: Vec<Json> = text
+        .lines()
+        .map(|l| {
+            Json::parse(l)
+                .unwrap_or_else(|e| panic!("unparseable line {l:?}: {e}"))
+        })
+        .collect();
+    // arm stamps the kernel line first; clean shutdown appends flush
+    assert_eq!(tag(events.first().unwrap()), "kernel");
+    assert_eq!(tag(events.last().unwrap()), "flush");
+    assert_eq!(
+        events
+            .last()
+            .unwrap()
+            .req("dropped")
+            .unwrap()
+            .as_usize()
+            .unwrap(),
+        0,
+        "no events may be dropped at this rate"
+    );
+    // every line carries the schema version; timestamps are monotone
+    // (the writer preserves emit order)
+    let mut last_t = -1.0f64;
+    for ev in &events {
+        assert_eq!(
+            ev.req("v").unwrap().as_usize().unwrap() as u32,
+            SCHEMA_VERSION
+        );
+        if tag(ev) != "flush" {
+            let t = ev.req("t_ms").unwrap().as_f64().unwrap();
+            assert!(t.is_finite() && t >= 0.0, "bad t_ms {t}");
+            assert!(t >= last_t, "t_ms went backwards: {t} < {last_t}");
+            last_t = t;
+        }
+    }
+    // a healthy forward run has exactly the arm line, the steps and
+    // the flush — no recoveries, no checkpoints
+    assert!(events
+        .iter()
+        .all(|e| !matches!(tag(e), "recovery" | "checkpoint")));
+
+    // ---- per-step events: contiguous ids, coherent phases, and the
+    // stream's losses are the history's, bit for bit (floats are
+    // serialized shortest-roundtrip)
+    let steps: Vec<&Json> =
+        events.iter().filter(|e| tag(e) == "step").collect();
+    assert_eq!(steps.len(), ITERS);
+    for (i, ev) in steps.iter().enumerate() {
+        assert_eq!(
+            ev.req("step").unwrap().as_usize().unwrap(),
+            i + 1,
+            "step ids must be contiguous on a clean run"
+        );
+        let wall = ev.req("wall_ms").unwrap().as_f64().unwrap();
+        assert!(wall.is_finite() && wall >= 0.0, "wall_ms {wall}");
+        let mut phase_sum = 0.0;
+        for k in ["assign_ms", "step_ms", "reduce_ms", "sync_ms"] {
+            let v = ev
+                .req(k)
+                .unwrap()
+                .as_f64()
+                .unwrap_or_else(|_| {
+                    panic!(
+                        "step {}: {k} null — the native backend must \
+                         publish phase times when armed",
+                        i + 1
+                    )
+                });
+            assert!(v.is_finite() && v >= 0.0, "{k} = {v}");
+            phase_sum += v;
+        }
+        assert!(
+            phase_sum <= wall * (1.0 + 1e-9) + 1e-6,
+            "step {}: phase sum {phase_sum} ms exceeds step wall \
+             {wall} ms",
+            i + 1
+        );
+        let loss = ev.req("loss").unwrap().as_f64().unwrap();
+        assert_eq!(
+            loss.to_bits(),
+            armed_losses[i].to_bits(),
+            "step {}: stream loss {loss} is not the trajectory loss",
+            i + 1
+        );
+        let lr = ev.req("lr").unwrap().as_f64().unwrap();
+        assert!((lr - 1e-2).abs() < 1e-15, "lr {lr}");
+        let g = ev.req("grad_norm").unwrap().as_f64().unwrap();
+        assert!(g.is_finite() && g >= 0.0, "grad_norm {g}");
+    }
+}
+
+#[test]
+fn cli_metrics_out_stream_parses_and_report_reads_it() {
+    let dir = std::env::temp_dir().join(format!(
+        "fastvpinns_telemetry_cli_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let metrics = dir.join("train.jsonl");
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args([
+            "train",
+            "--problem",
+            "poisson_sin",
+            "--n",
+            "2",
+            "--nt1d",
+            "3",
+            "--nq1d",
+            "6",
+            "--layers",
+            "2,8,1",
+            "--iters",
+            "40",
+            "--metrics-out",
+        ])
+        .arg(&metrics)
+        .env("FASTVPINNS_THREADS", "2")
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "train --metrics-out failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let text = std::fs::read_to_string(&metrics).unwrap();
+    assert!(text.ends_with('\n'));
+    let events: Vec<Json> =
+        text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    let n_steps = events.iter().filter(|e| tag(e) == "step").count();
+    assert_eq!(n_steps, 40, "one step event per iteration");
+    assert_eq!(tag(events.last().unwrap()), "flush");
+
+    // and the report subcommand digests the stream
+    let rep = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .arg("report")
+        .arg(&metrics)
+        .output()
+        .unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    assert!(
+        rep.status.success(),
+        "repro report failed:\n{}",
+        String::from_utf8_lossy(&rep.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&rep.stdout);
+    assert!(
+        stdout.contains("step wall time"),
+        "report missing step summary:\n{stdout}"
+    );
+    assert!(stdout.contains("phase breakdown"), "{stdout}");
+}
